@@ -1,0 +1,113 @@
+//! Privacy-preserving federated RPCA over real TCP sockets (§2.2).
+//!
+//! ```sh
+//! cargo run --release --example federated_privacy
+//! ```
+//!
+//! Five parties hold column blocks of a shared data matrix; parties 1
+//! and 3 declare their blocks private. The server and every client run
+//! on separate threads connected by localhost TCP (the same code path as
+//! `dcf-pca serve` / `dcf-pca worker` across machines). The run
+//! demonstrates the paper's privacy claim mechanically:
+//!
+//! - every byte on each wire is metered: client i uploads exactly
+//!   `rounds × (m·r floats + header)` — far less than its data block,
+//!   and *independent of n_i* (nothing data-sized ever leaves);
+//! - the recovered (L_i, S_i) come back only for public parties.
+
+use dcf_pca::algorithms::factor::FactorHyper;
+use dcf_pca::coordinator::client::{run_client, ClientConfig, FaultPlan};
+use dcf_pca::coordinator::kernel::NativeKernel;
+use dcf_pca::coordinator::protocol::update_wire_size;
+use dcf_pca::coordinator::server::{run_server, ServerConfig};
+use dcf_pca::coordinator::transport::tcp::{TcpAcceptor, TcpChannel};
+use dcf_pca::coordinator::transport::Channel;
+use dcf_pca::coordinator::PrivacySpec;
+use dcf_pca::rpca::partition::ColumnPartition;
+use dcf_pca::rpca::problem::ProblemSpec;
+
+const E: usize = 5;
+const ROUNDS: usize = 25;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ProblemSpec::paper_default(150);
+    let problem = spec.generate(7);
+    let partition = ColumnPartition::even(spec.n, E);
+    let private = PrivacySpec::with_private([1usize, 3]);
+
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0")?;
+    let addr = acceptor.local_addr()?;
+    println!("server on {addr}; parties 1 and 3 are private");
+
+    // spawn the five parties as real TCP clients
+    let mut party_handles = Vec::new();
+    for id in 0..E {
+        let addr = addr.clone();
+        let (a, b) = partition.range(id);
+        let m_block = problem.observed.cols_range(a, b);
+        let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
+        let hyper = FactorHyper::default_for(spec.m, spec.n, spec.rank);
+        let n_frac = (b - a) as f64 / spec.n as f64;
+        party_handles.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut ch = TcpChannel::connect(&addr)?;
+            let cfg = ClientConfig {
+                id,
+                m_block,
+                hyper,
+                n_frac,
+                polish_sweeps: 3,
+                truth: Some(truth),
+                faults: FaultPlan::default(),
+                compression: dcf_pca::coordinator::Compression::None,
+                dp_sigma: 0.0,
+            };
+            run_client(&mut ch, cfg, &NativeKernel)?;
+            Ok(ch.bytes_sent())
+        }));
+    }
+
+    // server side: accept in connection order = id order (threads spawn
+    // sequentially and connect() blocks until accepted)
+    let mut channels: Vec<Box<dyn Channel>> = acceptor
+        .accept_n(E)?
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Channel>)
+        .collect();
+    let mut server_cfg = ServerConfig::new(spec.m, spec.rank, ROUNDS, 2);
+    server_cfg.privacy = private.clone();
+    server_cfg.err_denominator = Some(problem.l0.frob_norm_sq() + problem.s0.frob_norm_sq());
+    let outcome = run_server(&mut channels, &server_cfg)?;
+
+    let revealed: Vec<usize> = outcome.revealed.iter().map(|(i, _, _)| *i).collect();
+    println!("\nrevealed blocks: {revealed:?} (withheld: {:?})", outcome.withheld);
+    assert_eq!(revealed, vec![0, 2, 4]);
+    assert_eq!(outcome.withheld, vec![1, 3]);
+
+    // per-party upload audit
+    println!("\nparty   upload (B)   its data block (B)   ratio");
+    for (id, h) in party_handles.into_iter().enumerate() {
+        let uploaded = h.join().expect("party thread")?;
+        let block_bytes = (spec.m * partition.size(id) * 8) as u64;
+        println!(
+            "{id:>5}   {uploaded:>10}   {block_bytes:>18}   {:.1}%",
+            100.0 * uploaded as f64 / block_bytes as f64
+        );
+        // upload = hello + per-round update + final reveal/withhold —
+        // the updates dominate and are m×r, independent of the block size
+        let update_bytes = (ROUNDS * update_wire_size(spec.m, spec.rank)) as u64;
+        assert!(uploaded >= update_bytes, "missing updates?");
+        if private.is_private(id) {
+            // private parties never upload anything block-sized
+            assert!(
+                uploaded < update_bytes + 64,
+                "party {id} uploaded more than consensus updates + headers"
+            );
+        }
+    }
+
+    if let Some(err) = outcome.rounds.last().and_then(|r| r.err) {
+        println!("\ntracked err at last round (all blocks, telemetry): {err:.3e}");
+    }
+    println!("done: private data never left parties 1 and 3.");
+    Ok(())
+}

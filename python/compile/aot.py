@@ -1,0 +1,63 @@
+"""AOT lowering: JAX/Pallas `client_update` → HLO text artifacts.
+
+Interchange format is HLO **text**, not serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos whose instruction ids
+exceed INT_MAX; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md and DESIGN.md §Substitutions).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Writes one `<variant>.hlo.txt` per entry in shapes.VARIANTS plus
+`manifest.json` (consumed by rust/src/runtime/artifacts.rs).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant) -> str:
+    fn, example = model.build_for_variant(variant, shapes.BAKED)
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    parser.add_argument(
+        "--only", default=None, help="lower just the variant with this name (debugging)"
+    )
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"version": 1, "dtype": "f32", "baked": shapes.BAKED, "variants": []}
+    for variant in shapes.VARIANTS:
+        name = shapes.variant_name(variant)
+        if args.only and name != args.only:
+            continue
+        text = lower_variant(variant)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest["variants"].append({"file": fname, **variant})
+        print(f"  lowered {name}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(manifest['variants'])} artifact(s) + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

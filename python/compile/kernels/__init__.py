@@ -1,0 +1,18 @@
+"""L1 — Pallas kernels for the DCF-PCA client local update.
+
+Three fused kernels cover the inner loop's hot spots (all interpret=True
+for CPU-PJRT executability; see DESIGN.md section Hardware-Adaptation for
+the TPU tiling rationale):
+
+- gram_rhs:         G = U^T U, R = U^T (M-S)   (one pass over m)
+- residual_shrink:  S = shrink_lam(M - U V^T)  (residual never hits HBM)
+- u_grad:           (U V^T + S - M)V + rho' U  (residual rematerialized)
+
+`ref` holds the pure-jnp oracles the kernels are tested against.
+"""
+
+from .gram_rhs import gram_rhs
+from .residual_shrink import residual_shrink
+from .u_grad import u_grad
+
+__all__ = ["gram_rhs", "residual_shrink", "u_grad"]

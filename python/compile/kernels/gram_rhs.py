@@ -1,0 +1,66 @@
+"""Pallas kernel: fused Gram + RHS for the ridge solve (paper Eq. 15).
+
+Computes G = UᵀU (r×r) and R = Uᵀ(M−S) (r×n_i) in ONE pass over the
+m dimension: grid over m-tiles, both products accumulated in the output
+refs (which live in VMEM for the whole grid — the classic TPU reduction
+tiling). On real hardware this reads U and (M−S) from HBM exactly once;
+the two MXU contractions share the U tile already resident in VMEM.
+
+VMEM budget per grid step (f32): bm·r (U tile) + bm·n_i (MS tile)
++ r·r + r·n_i (accumulators) — with bm ≤ 64, n_i ≤ 512, r ≤ 64 this is
+well under the ~16 MiB/core VMEM of a TPUv4 (see DESIGN.md §Perf).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowering stays structurally identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_rhs_kernel(u_ref, ms_ref, g_ref, r_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    u_blk = u_ref[...]  # (bm, r)
+    ms_blk = ms_ref[...]  # (bm, n_i)
+    # MXU contractions over the m-tile; accumulate in f32
+    g_ref[...] += jax.lax.dot_general(
+        u_blk, u_blk, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    r_ref[...] += jax.lax.dot_general(
+        u_blk, ms_blk, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def gram_rhs(u, ms, *, block_m):
+    """G = UᵀU, R = Uᵀ·ms. `u` is (m, r), `ms` is (m, n_i)."""
+    m, r = u.shape
+    _, n_i = ms.shape
+    assert m % block_m == 0, f"m={m} must be divisible by block_m={block_m}"
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _gram_rhs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, r), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, n_i), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, n_i), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((r, r), jnp.float32),
+            jax.ShapeDtypeStruct((r, n_i), jnp.float32),
+        ),
+        interpret=True,
+    )(u, ms)

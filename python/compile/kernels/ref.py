@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the Pallas kernels and the full client update.
+
+This is the CORE correctness reference on the python side: every Pallas
+kernel is asserted allclose against these functions in
+python/tests/test_kernels.py, and the full `client_update` in model.py is
+asserted against `client_update_ref`. The rust NativeKernel implements
+the same math in f64 (rust/src/algorithms/factor.rs); the three
+implementations are pinned together by the parity tests.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_rhs_ref(u, ms):
+    """G = UᵀU (r×r), R = Uᵀ·(M−S) (r×n_i). `ms` is the matrix M−S."""
+    g = u.T @ u
+    r = u.T @ ms
+    return g, r
+
+
+def residual_shrink_ref(u, v, m, lam):
+    """S = shrink_λ(M − U Vᵀ) — paper Eq. 16."""
+    resid = m - u @ v.T
+    return jnp.sign(resid) * jnp.maximum(jnp.abs(resid) - lam, 0.0)
+
+
+def u_grad_ref(u, v, s, m, rho_nfrac):
+    """∇_U L_i = (U Vᵀ + S − M) V + ρ·(n_i/n)·U — paper Lemma 2."""
+    resid = u @ v.T + s - m
+    return resid @ v + rho_nfrac * u
+
+
+def ridge_solve_ref(g, rhs, rho):
+    """V = ((G + ρI)^{-1} RHS)ᵀ — paper Eq. 15 (RHS is r×n_i)."""
+    r = g.shape[0]
+    vt = jnp.linalg.solve(g + rho * jnp.eye(r, dtype=g.dtype), rhs)
+    return vt.T
+
+
+def inner_sweep_ref(u, v, s, m, rho, lam):
+    """One exact alternation of the inner problem (Eqs. 15 + 16)."""
+    g, rhs = gram_rhs_ref(u, m - s)
+    v = ridge_solve_ref(g, rhs, rho)
+    s = residual_shrink_ref(u, v, m, lam)
+    return v, s
+
+
+def client_update_ref(u, s, m, eta, n_frac, *, k_local, inner_sweeps, rho, lam):
+    """K local iterations: J inner sweeps then one U gradient step each.
+
+    Returns (U', V', S', ‖∇_U‖_F at the last step). Mirrors
+    NativeKernel::local_epoch in rust/src/coordinator/kernel.rs. No V
+    input: the first exact sweep recomputes it (see model.client_update).
+    """
+    grad_norm = jnp.zeros((), dtype=u.dtype)
+    v = jnp.zeros((m.shape[1], u.shape[1]), dtype=u.dtype)
+    for _ in range(k_local):
+        for _ in range(inner_sweeps):
+            v, s = inner_sweep_ref(u, v, s, m, rho, lam)
+        grad = u_grad_ref(u, v, s, m, rho * n_frac)
+        grad_norm = jnp.sqrt(jnp.sum(grad * grad))
+        u = u - eta * grad
+    return u, v, s, grad_norm

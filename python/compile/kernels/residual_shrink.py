@@ -1,0 +1,50 @@
+"""Pallas kernel: fused residual + soft threshold (paper Eq. 16).
+
+S = shrink_λ(M − U Vᵀ), tiled over m: each grid step computes one
+bm×n_i residual tile on the MXU (U tile × Vᵀ, V resident in VMEM across
+the whole grid) and applies the shrinkage on the VPU — the m×n_i
+residual is never materialized in HBM, which is the point of the fusion:
+the paper's inner loop is bandwidth-bound and this kernel reads M once
+and writes S once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_shrink_kernel(lam_ref, u_ref, v_ref, m_ref, s_ref):
+    u_blk = u_ref[...]  # (bm, r)
+    v_all = v_ref[...]  # (n_i, r) — broadcast over the grid
+    m_blk = m_ref[...]  # (bm, n_i)
+    lam = lam_ref[0]
+    uv = jax.lax.dot_general(
+        u_blk, v_all, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bm, n_i)
+    resid = m_blk - uv
+    s_ref[...] = jnp.sign(resid) * jnp.maximum(jnp.abs(resid) - lam, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def residual_shrink(u, v, m, lam, *, block_m):
+    """S = shrink_λ(M − U Vᵀ). u:(m,r), v:(n_i,r), m:(m,n_i), lam scalar."""
+    mm, r = u.shape
+    n_i, _ = v.shape
+    assert mm % block_m == 0
+    lam_arr = jnp.asarray(lam, dtype=jnp.float32).reshape((1,))
+    grid = (mm // block_m,)
+    return pl.pallas_call(
+        _residual_shrink_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_m, r), lambda i: (i, 0)),
+            pl.BlockSpec((n_i, r), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, n_i), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n_i), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, n_i), jnp.float32),
+        interpret=True,
+    )(lam_arr, u, v, m)

@@ -1,0 +1,56 @@
+"""Pallas kernel: fused U-gradient (paper Eq. 8 / Lemma 2).
+
+∇_U L_i = (U Vᵀ + S − M)·V + ρ·(n_i/n)·U, tiled over m. Each grid step
+*re-materializes* its bm×n_i residual tile on the MXU and immediately
+contracts it with V — two chained MXU ops per tile, no HBM round-trip
+for the residual (rematerialize > spill: the residual is m×n_i while
+U-tile and V are tiny).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _u_grad_kernel(rho_ref, u_ref, v_ref, s_ref, m_ref, g_ref):
+    u_blk = u_ref[...]  # (bm, r)
+    v_all = v_ref[...]  # (n_i, r)
+    s_blk = s_ref[...]  # (bm, n_i)
+    m_blk = m_ref[...]  # (bm, n_i)
+    rho_nfrac = rho_ref[0]
+    uv = jax.lax.dot_general(
+        u_blk, v_all, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    resid = uv + s_blk - m_blk  # (bm, n_i)
+    g_ref[...] = (
+        jax.lax.dot_general(
+            resid, v_all, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + rho_nfrac * u_blk
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def u_grad(u, v, s, m, rho_nfrac, *, block_m):
+    """∇_U L_i. u:(m,r), v:(n_i,r), s,m:(m,n_i), rho_nfrac scalar."""
+    mm, r = u.shape
+    n_i, _ = v.shape
+    assert mm % block_m == 0
+    rho_arr = jnp.asarray(rho_nfrac, dtype=jnp.float32).reshape((1,))
+    grid = (mm // block_m,)
+    return pl.pallas_call(
+        _u_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_m, r), lambda i: (i, 0)),
+            pl.BlockSpec((n_i, r), lambda i: (0, 0)),
+            pl.BlockSpec((block_m, n_i), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, n_i), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, r), jnp.float32),
+        interpret=True,
+    )(rho_arr, u, v, s, m)

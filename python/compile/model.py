@@ -1,0 +1,119 @@
+"""L2 — the DCF-PCA client local update as a JAX computation.
+
+`client_update` is Algorithm 1's per-client epoch: K local iterations of
+{J inner sweeps (Eqs. 15+16 via the Pallas kernels), one gradient step on
+U (Eq. 8)}. It is lowered ONCE per shape variant by `aot.py` to HLO text
+and executed from rust through PJRT; python never runs at serving time.
+
+The r×r ridge solve stays in jnp (jnp.linalg.solve): it is O(r³ + r²n_i)
+against the kernels' O(m·n_i·r), and XLA fuses it into the surrounding
+graph. Everything m-sized goes through the L1 Pallas kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram_rhs, residual_shrink, u_grad
+
+
+def cholesky_solve_unrolled(a, b):
+    """Solve A·X = B for SPD A (r×r) with B (r×n) — statically unrolled.
+
+    `jnp.linalg.solve` lowers to a LAPACK typed-FFI custom call that the
+    crate's xla_extension 0.5.1 cannot execute, so the r×r solve is
+    spelled out as scalar HLO ops (r is a small static constant — ≤ a few
+    dozen in every variant). No pivoting needed: A = G + ρI is SPD.
+    """
+    r = a.shape[0]
+    # Cholesky factor as a grid of scalar expressions
+    l = [[None] * r for _ in range(r)]
+    for j in range(r):
+        d = a[j, j] - sum((l[j][k] * l[j][k] for k in range(j)), start=jnp.float32(0.0))
+        ljj = jnp.sqrt(d)
+        l[j][j] = ljj
+        for i in range(j + 1, r):
+            s = a[i, j] - sum((l[i][k] * l[j][k] for k in range(j)), start=jnp.float32(0.0))
+            l[i][j] = s / ljj
+    # forward substitution L·Y = B (row vectors of length n)
+    y = [None] * r
+    for i in range(r):
+        acc = b[i, :]
+        for k in range(i):
+            acc = acc - l[i][k] * y[k]
+        y[i] = acc / l[i][i]
+    # backward substitution Lᵀ·X = Y
+    x = [None] * r
+    for i in reversed(range(r)):
+        acc = y[i]
+        for k in range(i + 1, r):
+            acc = acc - l[k][i] * x[k]
+        x[i] = acc / l[i][i]
+    return jnp.stack(x, axis=0)  # (r, n)
+
+
+def inner_sweep(u, v, s, m, *, rho, lam, block_m):
+    """One exact alternation of the inner problem (Eqs. 15 + 16)."""
+    del v  # the V update is exact given S; the old V is not needed
+    g, rhs = gram_rhs(u, m - s, block_m=block_m)
+    r = g.shape[0]
+    vt = cholesky_solve_unrolled(g + rho * jnp.eye(r, dtype=g.dtype), rhs)
+    v = vt.T
+    s = residual_shrink(u, v, m, lam, block_m=block_m)
+    return v, s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_local", "inner_sweeps", "rho", "lam", "block_m")
+)
+def client_update(u, s, m, eta, n_frac, *, k_local, inner_sweeps, rho, lam, block_m):
+    """K local iterations; returns (U', V', S', ‖∇_U‖_F at the last step).
+
+    Shapes: u (m,p) f32, s/m (m,n_i) f32, eta/n_frac f32 scalars. There is
+    deliberately NO V input: with J ≥ 1 the first exact sweep (Eq. 15)
+    recomputes V from (U, S), so a V argument would be dead — and JAX's
+    lowering DCEs dead parameters out of the HLO signature, which would
+    desynchronize the rust caller. Only S carries client state across
+    rounds (matching the native kernel, whose first sweep also discards V).
+
+    K and J are unrolled (they are 1–10 in every experiment and unrolling
+    lets XLA fuse across iterations; `lax.scan` would block the
+    gram_rhs/solve fusion at each boundary for no memory win — the carry
+    is the whole state either way).
+    """
+    assert inner_sweeps >= 1, "J = 0 would make V genuinely stateful"
+    grad_norm = jnp.zeros((), dtype=jnp.float32)
+    n_i = m.shape[1]
+    v = jnp.zeros((n_i, u.shape[1]), dtype=jnp.float32)
+    for _ in range(k_local):
+        for _ in range(inner_sweeps):
+            v, s = inner_sweep(u, v, s, m, rho=rho, lam=lam, block_m=block_m)
+        grad = u_grad(u, v, s, m, rho * n_frac, block_m=block_m)
+        grad_norm = jnp.sqrt(jnp.sum(grad * grad))
+        u = u - eta * grad
+    return u, v, s, grad_norm
+
+
+def build_for_variant(variant, baked):
+    """Bind a variant's static parameters; returns (fn, example_args)."""
+    from . import shapes
+
+    m, n_i, r = variant["m"], variant["n_i"], variant["r"]
+    bm = shapes.block_m(m)
+    fn = functools.partial(
+        client_update,
+        k_local=variant["k_local"],
+        inner_sweeps=variant["inner_sweeps"],
+        rho=baked["rho"],
+        lam=shapes.lam_for(r),
+        block_m=bm,
+    )
+    example = (
+        jax.ShapeDtypeStruct((m, r), jnp.float32),  # u
+        jax.ShapeDtypeStruct((m, n_i), jnp.float32),  # s
+        jax.ShapeDtypeStruct((m, n_i), jnp.float32),  # m block
+        jax.ShapeDtypeStruct((), jnp.float32),  # eta
+        jax.ShapeDtypeStruct((), jnp.float32),  # n_frac
+    )
+    return fn, example

@@ -1,0 +1,48 @@
+"""Artifact shape variants and baked hyperparameters.
+
+Single source of truth shared by `aot.py` (what to lower) and the rust
+runtime (`rust/src/runtime/executor.rs` BakedHyper must match BAKED).
+
+Each variant fixes (m, n_i, r, K, J) at lowering time; the rust
+coordinator zero-pads client blocks up to the variant's n_i (padding
+safety is tested on both sides). Block sizes for the Pallas m-tiling are
+chosen per variant as the largest divisor of m ≤ 64.
+"""
+
+# keep in sync with rust/src/runtime/executor.rs::BakedHyper::default()
+BAKED = {
+    "rho": 1e-2,
+    # lambda = lambda_scale * sqrt(r)
+    "lambda_scale": 1.0,
+}
+
+# (m, n_i, r, k_local, inner_sweeps)
+VARIANTS = [
+    # parity-test scale
+    dict(m=40, n_i=40, r=2, k_local=1, inner_sweeps=3),
+    dict(m=40, n_i=40, r=2, k_local=2, inner_sweeps=3),
+    # e2e example: n=60, E=5 → blocks of 12 columns
+    dict(m=60, n_i=12, r=3, k_local=2, inner_sweeps=3),
+    # a mid-size block with uneven-width headroom (pads 17..32)
+    dict(m=64, n_i=32, r=4, k_local=2, inner_sweeps=3),
+    # wider aspect, K=5 (fig4-style ablation through the artifact path)
+    dict(m=60, n_i=30, r=3, k_local=5, inner_sweeps=3),
+]
+
+
+def lam_for(r: int) -> float:
+    """λ = lambda_scale·√r (matches FactorHyper::default_for in rust)."""
+    return BAKED["lambda_scale"] * max(float(r) ** 0.5, 1.0)
+
+
+def block_m(m: int, cap: int = 64) -> int:
+    """Largest divisor of m that is ≤ cap — the Pallas m-tile height."""
+    best = 1
+    for d in range(1, min(m, cap) + 1):
+        if m % d == 0:
+            best = d
+    return best
+
+
+def variant_name(v: dict) -> str:
+    return "client_m{m}_n{n_i}_r{r}_k{k_local}_j{inner_sweeps}".format(**v)

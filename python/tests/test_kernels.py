@@ -1,0 +1,122 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the λ/ρ scalars); interpret=True keeps the
+kernels executable on CPU. Tolerances are f32-scale.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import shapes
+from compile.kernels import gram_rhs, residual_shrink, u_grad
+from compile.kernels.ref import (
+    gram_rhs_ref,
+    residual_shrink_ref,
+    ridge_solve_ref,
+    u_grad_ref,
+)
+
+# shared hypothesis config: interpret-mode pallas is slow → keep cases small
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def divisors_block(m):
+    return shapes.block_m(m, cap=32)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    m=st.integers(4, 48),
+    n_i=st.integers(1, 24),
+    r=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_rhs_matches_ref(m, n_i, r, seed):
+    bm = divisors_block(m)
+    u = rand(seed, (m, r))
+    ms = rand(seed + 1, (m, n_i))
+    g, rhs = gram_rhs(u, ms, block_m=bm)
+    g_ref, rhs_ref = gram_rhs_ref(u, ms)
+    np.testing.assert_allclose(g, g_ref, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(rhs, rhs_ref, rtol=2e-5, atol=1e-5)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    m=st.integers(4, 48),
+    n_i=st.integers(1, 24),
+    r=st.integers(1, 6),
+    lam=st.floats(0.0, 5.0),
+    seed=st.integers(0, 2**16),
+)
+def test_residual_shrink_matches_ref(m, n_i, r, lam, seed):
+    bm = divisors_block(m)
+    u = rand(seed, (m, r))
+    v = rand(seed + 1, (n_i, r))
+    mat = 3.0 * rand(seed + 2, (m, n_i))
+    s = residual_shrink(u, v, mat, lam, block_m=bm)
+    s_ref = residual_shrink_ref(u, v, mat, jnp.float32(lam))
+    np.testing.assert_allclose(s, s_ref, rtol=2e-5, atol=1e-5)
+
+
+@hypothesis.settings(**COMMON)
+@hypothesis.given(
+    m=st.integers(4, 48),
+    n_i=st.integers(1, 24),
+    r=st.integers(1, 6),
+    rho_nfrac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_u_grad_matches_ref(m, n_i, r, rho_nfrac, seed):
+    bm = divisors_block(m)
+    u = rand(seed, (m, r))
+    v = rand(seed + 1, (n_i, r))
+    s = rand(seed + 2, (m, n_i))
+    mat = rand(seed + 3, (m, n_i))
+    g = u_grad(u, v, s, mat, rho_nfrac, block_m=bm)
+    g_ref = u_grad_ref(u, v, s, mat, jnp.float32(rho_nfrac))
+    np.testing.assert_allclose(g, g_ref, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("bm", [1, 2, 4, 8, 16])
+def test_tiling_invariance(bm):
+    """Different m-tile heights must give identical results."""
+    m, n_i, r = 16, 10, 3
+    u = rand(0, (m, r))
+    v = rand(1, (n_i, r))
+    mat = rand(2, (m, n_i))
+    base = residual_shrink(u, v, mat, 0.5, block_m=16)
+    tiled = residual_shrink(u, v, mat, 0.5, block_m=bm)
+    np.testing.assert_allclose(tiled, base, rtol=1e-6, atol=1e-6)
+    g16, r16 = gram_rhs(u, mat, block_m=16)
+    gb, rb = gram_rhs(u, mat, block_m=bm)
+    np.testing.assert_allclose(gb, g16, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rb, r16, rtol=1e-5, atol=1e-5)
+
+
+def test_shrink_properties():
+    """Shrinkage kills sub-threshold entries and biases the rest by λ."""
+    m, n_i, r = 8, 8, 2
+    u = jnp.zeros((m, r), dtype=jnp.float32)
+    v = jnp.zeros((n_i, r), dtype=jnp.float32)
+    mat = jnp.array(np.linspace(-3, 3, m * n_i).reshape(m, n_i), dtype=jnp.float32)
+    s = residual_shrink(u, v, mat, 1.0, block_m=8)
+    expected = np.sign(mat) * np.maximum(np.abs(mat) - 1.0, 0.0)
+    np.testing.assert_allclose(s, expected, atol=1e-6)
+
+
+def test_ridge_solve_ref_satisfies_normal_equations():
+    g = jnp.array([[2.0, 0.3], [0.3, 1.5]], dtype=jnp.float32)
+    rhs = rand(5, (2, 7))
+    rho = 0.1
+    v = ridge_solve_ref(g, rhs, rho)
+    lhs = (g + rho * jnp.eye(2)) @ v.T
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)

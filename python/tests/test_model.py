@@ -1,0 +1,155 @@
+"""L2 correctness: the full client_update vs the pure-jnp reference, plus
+the semantic properties the coordinator relies on (K-composition,
+padding safety, descent)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import shapes
+from compile.kernels.ref import client_update_ref
+from compile.model import client_update
+
+RHO = shapes.BAKED["rho"]
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def make_problem(seed, m, n_i, r):
+    """Small synthetic block: low rank + sparse spikes."""
+    u0 = rand(seed, (m, r))
+    v0 = rand(seed + 1, (n_i, r))
+    l0 = u0 @ v0.T
+    key = jax.random.PRNGKey(seed + 2)
+    mask = jax.random.bernoulli(key, 0.05, (m, n_i)).astype(jnp.float32)
+    spikes = mask * jnp.float32(np.sqrt(m * n_i))
+    return l0 + spikes
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    m=st.sampled_from([8, 16, 24]),
+    n_i=st.sampled_from([6, 12]),
+    r=st.integers(1, 3),
+    k_local=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+def test_client_update_matches_ref(m, n_i, r, k_local, seed):
+    lam = shapes.lam_for(r)
+    bm = shapes.block_m(m, cap=16)
+    mat = make_problem(seed, m, n_i, r)
+    u = rand(seed + 10, (m, r))
+    v = jnp.zeros((n_i, r), dtype=jnp.float32)
+    s = jnp.zeros((m, n_i), dtype=jnp.float32)
+    eta = jnp.float32(1e-3)
+    n_frac = jnp.float32(0.5)
+    got = client_update(
+        u, s, mat, eta, n_frac,
+        k_local=k_local, inner_sweeps=3, rho=RHO, lam=lam, block_m=bm,
+    )
+    want = client_update_ref(
+        u, s, mat, eta, n_frac,
+        k_local=k_local, inner_sweeps=3, rho=RHO, lam=lam,
+    )
+    for g, w, name in zip(got, want, ["u", "v", "s", "grad_norm"]):
+        np.testing.assert_allclose(g, w, rtol=5e-4, atol=5e-4, err_msg=name)
+
+
+def test_k_steps_compose():
+    """One K=2 epoch equals two chained K=1 epochs."""
+    m, n_i, r = 16, 8, 2
+    lam = shapes.lam_for(r)
+    mat = make_problem(3, m, n_i, r)
+    u = rand(4, (m, r))
+    v = jnp.zeros((n_i, r), dtype=jnp.float32)
+    s = jnp.zeros((m, n_i), dtype=jnp.float32)
+    kw = dict(inner_sweeps=3, rho=RHO, lam=lam, block_m=8)
+    eta, n_frac = jnp.float32(1e-3), jnp.float32(1.0)
+
+    u2, v2, s2, _ = client_update(u, s, mat, eta, n_frac, k_local=2, **kw)
+    ua, va, sa, _ = client_update(u, s, mat, eta, n_frac, k_local=1, **kw)
+    ub, vb, sb, _ = client_update(ua, sa, mat, eta, n_frac, k_local=1, **kw)
+    np.testing.assert_allclose(u2, ub, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v2, vb, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s2, sb, rtol=1e-5, atol=1e-5)
+
+
+def test_padding_safety():
+    """Zero-padding M's columns must not change U' or the real V/S parts.
+
+    This is the property the rust executor's shape-variant dispatch
+    relies on (runtime/executor.rs pads client blocks to the artifact's
+    n_i).
+    """
+    m, n_real, n_pad, r = 16, 6, 10, 2
+    lam = shapes.lam_for(r)
+    mat = make_problem(5, m, n_real, r)
+    mat_padded = jnp.pad(mat, ((0, 0), (0, n_pad - n_real)))
+    u = rand(6, (m, r))
+    kw = dict(k_local=2, inner_sweeps=3, rho=RHO, lam=lam, block_m=8)
+    eta, n_frac = jnp.float32(1e-3), jnp.float32(0.25)
+
+    u_a, v_a, s_a, gn_a = client_update(
+        u, jnp.zeros((m, n_real), jnp.float32), mat, eta, n_frac, **kw,
+    )
+    u_b, v_b, s_b, gn_b = client_update(
+        u, jnp.zeros((m, n_pad), jnp.float32), mat_padded, eta, n_frac, **kw,
+    )
+    np.testing.assert_allclose(u_b, u_a, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v_b[:n_real], v_a, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s_b[:, :n_real], s_a, rtol=1e-5, atol=1e-5)
+    # padded region stays exactly zero
+    assert np.all(np.asarray(v_b[n_real:]) == 0.0)
+    assert np.all(np.asarray(s_b[:, n_real:]) == 0.0)
+    np.testing.assert_allclose(gn_b, gn_a, rtol=1e-4, atol=1e-5)
+
+
+def test_epoch_descends_inner_objective():
+    """A local epoch with a small η must not increase the local objective."""
+    m, n_i, r = 24, 12, 2
+    lam = shapes.lam_for(r)
+    mat = make_problem(7, m, n_i, r)
+    u = rand(8, (m, r))
+    v = jnp.zeros((n_i, r), dtype=jnp.float32)
+    s = jnp.zeros((m, n_i), dtype=jnp.float32)
+
+    def objective(u, v, s):
+        fit = u @ v.T + s - mat
+        return (
+            0.5 * jnp.sum(fit * fit)
+            + 0.5 * RHO * jnp.sum(v * v)
+            + lam * jnp.sum(jnp.abs(s))
+            + 0.5 * RHO * jnp.sum(u * u)
+        )
+
+    kw = dict(k_local=1, inner_sweeps=5, rho=RHO, lam=lam, block_m=8)
+    u1, v1, s1, _ = client_update(u, s, mat, jnp.float32(1e-4), jnp.float32(1.0), **kw)
+    # compare objectives at the *solved* (v,s) for each u
+    obj0 = objective(u, v1, s1)  # upper bounds g(u) at the solved point
+    u2, v2, s2, _ = client_update(u1, s1, mat, jnp.float32(1e-4), jnp.float32(1.0), **kw)
+    obj1 = objective(u1, v2, s2)
+    assert float(obj1) <= float(obj0) * (1 + 1e-5)
+
+
+def test_grad_norm_is_positive_and_finite():
+    m, n_i, r = 16, 8, 2
+    mat = make_problem(9, m, n_i, r)
+    u = rand(10, (m, r))
+    out = client_update(
+        u,
+        jnp.zeros((m, n_i), jnp.float32),
+        mat,
+        jnp.float32(1e-3),
+        jnp.float32(1.0),
+        k_local=1,
+        inner_sweeps=3,
+        rho=RHO,
+        lam=shapes.lam_for(r),
+        block_m=8,
+    )
+    gn = float(out[3])
+    assert np.isfinite(gn) and gn > 0

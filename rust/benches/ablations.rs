@@ -1,0 +1,67 @@
+//! Bench: ablations on design choices (schedules, aggregation, wire
+//! compression, partial participation, DP noise) + numerical checks of
+//! Theorems 1 and 2.
+
+use dcf_pca::experiments::{ablations, theory, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("ablations bench (mode: {effort:?})");
+    let rows = ablations::run(effort);
+
+    // every schedule variant must recover
+    for r in rows.iter().filter(|r| r.study == "schedule") {
+        assert!(r.final_err < 1e-2, "{}: err {}", r.setting, r.final_err);
+    }
+    // compression: int8 cuts bytes ≥4× vs f64 and still recovers
+    let none = rows.iter().find(|r| r.study == "compression" && r.setting == "None").unwrap();
+    let int8 = rows.iter().find(|r| r.study == "compression" && r.setting == "Int8").unwrap();
+    assert!(int8.bytes_per_round * 3.9 < none.bytes_per_round, "int8 should cut ≥ ~4x");
+    assert!(int8.final_err < 1e-1, "int8 err {}", int8.final_err);
+    // participation: sampled runs still recover (given proportionally
+    // more rounds)
+    for r in rows.iter().filter(|r| r.study == "participation") {
+        assert!(r.final_err < 5e-2, "{}: err {}", r.setting, r.final_err);
+    }
+    // DP noise: zero-noise at least as good as the noisiest setting
+    let dp0 = rows.iter().find(|r| r.study == "dp-noise" && r.setting.ends_with("0e0")).map(|r| r.final_err)
+        .unwrap_or_else(|| rows.iter().find(|r| r.study == "dp-noise").unwrap().final_err);
+    let dp_max = rows.iter().filter(|r| r.study == "dp-noise").map(|r| r.final_err).fold(0.0f64, f64::max);
+    assert!(dp0 <= dp_max + 1e-12);
+
+    let t1 = theory::run_theorem1(effort);
+    for row in &t1 {
+        // Theorem 1 bounds the RUNNING AVERAGE of ‖∇‖², with a K²η²
+        // drift term — for small K the trajectory visibly decays; for
+        // larger K the theorem only forbids growth. Check exactly that.
+        if row.k_local <= 2 {
+            assert!(
+                row.mean_grad_sq_second_half < row.mean_grad_sq_first_half,
+                "K={}: gradient norm should decay ({} !< {})",
+                row.k_local,
+                row.mean_grad_sq_second_half,
+                row.mean_grad_sq_first_half
+            );
+        }
+        assert!(
+            row.mean_grad_sq_second_half < 2.0 * row.mean_grad_sq_first_half,
+            "K={}: gradient norm must not diverge",
+            row.k_local
+        );
+        assert!(row.final_err < 1e-2, "K={} recovers", row.k_local);
+    }
+    let t2 = theory::run_theorem2(effort);
+    let good = t2.iter().find(|r| r.satisfies).unwrap();
+    let bad = t2.iter().find(|r| !r.satisfies).unwrap();
+    // compliant hyperparameters recover L (and overall err)
+    assert!(good.final_err < 1e-2, "compliant run recovers: {}", good.final_err);
+    assert!(good.l_only_err < 5e-2, "compliant run recovers L: {}", good.l_only_err);
+    // violating ρ² > λ²mn: the over-regularized factorization cannot
+    // represent L₀ — the L-component error stays ~O(1)
+    assert!(
+        bad.l_only_err > 0.5,
+        "violating run must fail on L: {}",
+        bad.l_only_err
+    );
+    println!("ablations OK");
+}

@@ -1,0 +1,32 @@
+//! Bench: §3.4 — measured communication per round vs Eq. 28 (2·E·m·r)
+//! and per-client compute vs E (Eq. 26).
+
+use dcf_pca::experiments::{comm, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("comm/compute scaling bench (mode: {effort:?})");
+    let rows = comm::run(effort);
+    for r in &rows {
+        // Eq. 28: payload is exactly 2·E·m·r floats; framing stays <5%
+        assert!(
+            r.overhead_frac < 0.05,
+            "E={}: framing overhead {:.2}%",
+            r.clients,
+            100.0 * r.overhead_frac
+        );
+    }
+    // per-client critical path falls as E grows (the paper's scalability
+    // claim); allow slack for tiny-block constant costs
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(
+        last.client_secs < first.client_secs,
+        "per-client time should fall with E: E={} {}s vs E={} {}s",
+        first.clients,
+        first.client_secs,
+        last.clients,
+        last.client_secs
+    );
+    println!("comm OK");
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Fig. 1 — convergence + cost comparison of
+//! DCF-PCA / CF-PCA / APGM / ALM across problem scales.
+//!
+//! `DCF_PCA_BENCH_MODE=full cargo bench --bench fig1_convergence` uses
+//! the paper's n ∈ {500, 1000, 3000}; the default quick mode shrinks
+//! scales (shape preserved). CSV series land in results/.
+
+use dcf_pca::experiments::{fig1, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("fig1 convergence bench (mode: {effort:?})");
+    let rows = fig1::run(effort);
+    // sanity assertions on the *shape* of the paper's claims
+    for n in fig1::scales(effort) {
+        let at = |alg: &str| rows.iter().find(|r| r.n == n && r.algorithm == alg).unwrap();
+        let dcf = at("DCF-PCA");
+        let cf = at("CF-PCA");
+        let alm = at("ALM");
+        assert!(dcf.final_err < 1e-2, "DCF-PCA recovers at n={n}");
+        assert!(cf.final_err < 1e-2, "CF-PCA recovers at n={n}");
+        assert!(alm.final_err < 1e-3, "ALM recovers at n={n}");
+        // the paper's headline: distributed per-client cost < centralized
+        assert!(
+            dcf.critical_path_secs < cf.wall_secs,
+            "n={n}: DCF per-client {} !< CF total {}",
+            dcf.critical_path_secs,
+            cf.wall_secs
+        );
+    }
+    println!("fig1 OK");
+}

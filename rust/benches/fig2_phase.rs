@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Fig. 2 — the (sparsity × rank) recovery phase
+//! diagram at m = n = 500 (quick mode: 200).
+
+use dcf_pca::experiments::{fig2, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("fig2 phase-diagram bench (mode: {effort:?})");
+    let cells = fig2::run(effort);
+    // shape checks: the easy corner recovers, the hard corner does not
+    let easy = cells
+        .iter()
+        .find(|c| c.sparsity <= 0.051 && c.rank_frac <= 0.051)
+        .expect("easy cell present");
+    assert!(easy.recovered, "easy corner must recover (err {})", easy.err);
+    let hard = cells
+        .iter()
+        .filter(|c| c.sparsity >= 0.24 && c.rank_frac >= 0.19)
+        .collect::<Vec<_>>();
+    if !hard.is_empty() {
+        assert!(
+            hard.iter().all(|c| !c.recovered),
+            "hard corner should fail (paper limit r≈0.15n, s≈0.2)"
+        );
+    }
+    println!("fig2 OK");
+}

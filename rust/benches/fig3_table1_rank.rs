@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Fig. 3 (σ spectrum with p = 2r) and Table 1
+//! (relative σ errors across scales; paper: .0286/.0326/.0398/.1127).
+
+use dcf_pca::experiments::{fig3_table1, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("fig3/table1 upper-bound-rank bench (mode: {effort:?})");
+    let rows = fig3_table1::run(effort);
+    for row in &rows {
+        // same order of magnitude as the paper's column
+        assert!(
+            row.sv_error < 0.25,
+            "n={}: σ error {} out of band (paper ~{:?})",
+            row.n,
+            row.sv_error,
+            row.paper_value
+        );
+        // Fig. 3's claim: σ_{r+1}/σ_r is small (extra rank is silent)
+        assert!(row.tail_ratio < 0.25, "n={}: tail ratio {}", row.n, row.tail_ratio);
+    }
+    println!("fig3/table1 OK");
+}

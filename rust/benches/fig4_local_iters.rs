@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig. 4 — local-iteration ablation
+//! K ∈ {1,2,5,10} at fixed η = 0.01, E = 10.
+
+use dcf_pca::experiments::{fig4, Effort};
+
+fn main() {
+    let effort = Effort::from_env();
+    println!("fig4 local-iterations bench (mode: {effort:?})");
+    let series = fig4::run(effort);
+    let k1 = series.iter().find(|s| s.k_local == 1).unwrap();
+    let k10 = series.iter().find(|s| s.k_local == 10).unwrap();
+    // paper: K=10 converges in far fewer rounds than K=1
+    match (k10.rounds_to_recover, k1.rounds_to_recover) {
+        (Some(fast), Some(slow)) => {
+            assert!(fast < slow, "K=10 ({fast}) should beat K=1 ({slow})")
+        }
+        (Some(_), None) => {} // K=1 never reached threshold: even stronger
+        other => panic!("K=10 should recover: {other:?}"),
+    }
+    // paper: larger K drifts more between synchronizations
+    assert!(
+        k10.mean_dispersion > k1.mean_dispersion,
+        "dispersion should grow with K ({} vs {})",
+        k10.mean_dispersion,
+        k1.mean_dispersion
+    );
+    println!("fig4 OK");
+}

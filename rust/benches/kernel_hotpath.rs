@@ -1,0 +1,117 @@
+//! Bench: hot-path kernels across the stack (§Perf of EXPERIMENTS.md).
+//!
+//! - L3-native: blocked gemm (the dominant flops), inner sweep, local
+//!   epoch, exact/randomized SVD (baseline cost), transport framing.
+//! - RT: one PJRT client_update execution (artifact path), if artifacts
+//!   are built.
+
+use dcf_pca::algorithms::factor::{inner_solve, ClientState, FactorHyper};
+use dcf_pca::bench_util::{fmt_secs, Bencher, Table};
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use dcf_pca::linalg::{matmul, matmul_nt, rsvd, svd_jacobi, Mat, RsvdParams};
+use dcf_pca::rng::Pcg64;
+use dcf_pca::rpca::problem::ProblemSpec;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+    let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(240) };
+    let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s"]);
+
+    // gemm at the fig1 working shapes
+    for &(m, k, n) in &[(500usize, 500usize, 25usize), (500, 25, 500), (1000, 1000, 50)] {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let bm = Mat::gaussian(k, n, &mut rng);
+        let stats = b.run(|| matmul(&a, &bm));
+        let gflops = 2.0 * (m * k * n) as f64 / stats.mean / 1e9;
+        t.row(&[
+            "gemm".into(),
+            format!("{m}x{k}x{n}"),
+            fmt_secs(stats.mean),
+            format!("{gflops:.2}"),
+        ]);
+    }
+
+    // U·Vᵀ (the residual product of every inner sweep)
+    {
+        let u = Mat::gaussian(500, 25, &mut rng);
+        let v = Mat::gaussian(500, 25, &mut rng);
+        let stats = b.run(|| matmul_nt(&u, &v));
+        let gflops = 2.0 * (500 * 25 * 500) as f64 / stats.mean / 1e9;
+        t.row(&["gemm_nt (U·Vᵀ)".into(), "500x25x500".into(), fmt_secs(stats.mean), format!("{gflops:.2}")]);
+    }
+
+    // one inner solve + one full local epoch at the paper's client shape
+    {
+        let spec = ProblemSpec { m: 500, n: 50, rank: 25, sparsity: 0.05 };
+        let p = spec.generate(7);
+        let hyper = FactorHyper::default_for(500, 50, 25);
+        let u = Mat::gaussian(500, 25, &mut rng);
+        let mut state = ClientState::zeros(500, 50, 25);
+        let stats = b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper));
+        t.row(&["inner_solve (J=3)".into(), "m=500 n_i=50 r=25".into(), fmt_secs(stats.mean), "—".into()]);
+        let mut state2 = ClientState::zeros(500, 50, 25);
+        let stats = b.run(|| {
+            NativeKernel
+                .local_epoch(&u, &p.observed, &mut state2, &hyper, 0.1, 1e-3, 2)
+                .unwrap()
+        });
+        t.row(&["local_epoch (K=2)".into(), "m=500 n_i=50 r=25".into(), fmt_secs(stats.mean), "—".into()]);
+    }
+
+    // SVD costs (what the baselines pay per iteration)
+    {
+        let a = Mat::gaussian(200, 200, &mut rng);
+        let stats = b.run(|| svd_jacobi(&a));
+        t.row(&["svd_jacobi".into(), "200x200".into(), fmt_secs(stats.mean), "—".into()]);
+        let big = Mat::gaussian(1000, 1000, &mut rng);
+        let stats = b.run(|| rsvd(&big, RsvdParams::new(60)));
+        t.row(&["rsvd k=60".into(), "1000x1000".into(), fmt_secs(stats.mean), "—".into()]);
+    }
+
+    // transport framing round-trip
+    {
+        let u = Mat::gaussian(500, 25, &mut rng);
+        let stats = b.run(|| {
+            let msg = dcf_pca::coordinator::protocol::ToClient::Round {
+                round: 0,
+                k_local: 2,
+                eta: 0.1,
+                u: u.clone(),
+            };
+            let bytes = msg.encode();
+            dcf_pca::coordinator::protocol::ToClient::decode(&bytes).unwrap()
+        });
+        let mbps = (500.0 * 25.0 * 8.0) / stats.mean / 1e6;
+        t.row(&["protocol enc+dec".into(), "U 500x25".into(), fmt_secs(stats.mean), format!("{mbps:.0} MB/s")]);
+    }
+
+    // PJRT artifact execution (if built)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let kernel = dcf_pca::runtime::PjrtKernel::load("artifacts").unwrap();
+        let spec = ProblemSpec { m: 64, n: 32, rank: 4, sparsity: 0.05 };
+        let p = spec.generate(9);
+        let hyper = FactorHyper::default_for(64, 32, 4);
+        let u = Mat::gaussian(64, 4, &mut rng);
+        let mut state = ClientState::zeros(64, 32, 4);
+        // warm compile
+        kernel.local_epoch(&u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2).unwrap();
+        let stats = b.run(|| {
+            kernel
+                .local_epoch(&u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2)
+                .unwrap()
+        });
+        t.row(&["pjrt client_update".into(), "m=64 n_i=32 r=4 K=2".into(), fmt_secs(stats.mean), "—".into()]);
+        let mut state3 = ClientState::zeros(64, 32, 4);
+        let stats = b.run(|| {
+            NativeKernel
+                .local_epoch(&u, &p.observed, &mut state3, &hyper, 0.5, 1e-3, 2)
+                .unwrap()
+        });
+        t.row(&["native client_update".into(), "m=64 n_i=32 r=4 K=2".into(), fmt_secs(stats.mean), "—".into()]);
+    } else {
+        println!("(artifacts not built — skipping PJRT row; run `make artifacts`)");
+    }
+
+    println!("\nkernel hot-path timings:");
+    t.print();
+}

@@ -1,0 +1,167 @@
+//! ALM baseline — inexact augmented Lagrange multiplier method for the
+//! convex RPCA program (paper Eq. 2), following Lin/Goldfarb-Ma
+//! [paper ref 10]:
+//!
+//!   min ‖L‖_* + λ‖S‖₁  s.t.  L + S = M
+//!
+//! with the augmented Lagrangian
+//!   ‖L‖_* + λ‖S‖₁ + ⟨Y, M−L−S⟩ + μ/2‖M−L−S‖²_F.
+//! Per iteration: one SVT for L, one shrink for S, a dual ascent on Y, and
+//! geometric growth of μ. Typically converges to exact recovery in a few
+//! tens of iterations — the strongest centralized baseline in Fig. 1.
+
+use std::time::Instant;
+
+use crate::linalg::{rsvd_svt, shrink, svt, Mat};
+use crate::rpca::problem::RpcaProblem;
+
+use super::apgm::spectral_norm;
+use super::traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};
+
+const SVD_EXACT_LIMIT: usize = 160;
+
+/// Inexact-ALM RPCA solver.
+#[derive(Clone, Debug)]
+pub struct Alm {
+    /// ℓ1 weight; default 1/√max(m,n)
+    pub lambda: Option<f64>,
+    /// penalty growth factor ρ_μ
+    pub mu_growth: f64,
+    pub stop: StopCriteria,
+    pub svt_rank_hint: usize,
+}
+
+impl Alm {
+    pub fn new() -> Self {
+        Alm {
+            lambda: None,
+            mu_growth: 1.6,
+            stop: StopCriteria { max_iters: 120, tol: 1e-7 },
+            svt_rank_hint: 16,
+        }
+    }
+
+    pub fn with_stop(mut self, stop: StopCriteria) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+impl Default for Alm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RpcaSolver for Alm {
+    fn name(&self) -> &'static str {
+        "ALM"
+    }
+
+    fn solve(&self, observed: &Mat, truth: Option<&RpcaProblem>) -> SolveResult {
+        let (m, n) = observed.shape();
+        let start = Instant::now();
+        let lambda = self.lambda.unwrap_or(1.0 / (m.max(n) as f64).sqrt());
+        let norm2 = spectral_norm(observed, 30);
+        let norm_inf = observed.max_abs();
+        // dual init Y = M / J(M), J(M) = max(‖M‖₂, ‖M‖_∞/λ)  (Lin et al.)
+        let j_m = norm2.max(norm_inf / lambda).max(1e-300);
+        let mut y = observed.scale(1.0 / j_m);
+        let mut mu = 1.25 / norm2.max(1e-300);
+
+        let mut l = Mat::zeros(m, n);
+        let mut s = Mat::zeros(m, n);
+        let mut rank_hint = self.svt_rank_hint;
+        let m_norm = observed.frob_norm().max(1e-300);
+
+        let mut history = Vec::new();
+        let mut converged = false;
+        let mut iters = 0;
+
+        for k in 0..self.stop.max_iters {
+            // L = SVT_{1/μ}(M − S + Y/μ)
+            let target_l = &(observed - &s) + &y.scale(1.0 / mu);
+            let min_dim = m.min(n);
+            let (l_new, rank) = if min_dim <= SVD_EXACT_LIMIT {
+                svt(&target_l, 1.0 / mu)
+            } else {
+                let mut hint = rank_hint.min(min_dim);
+                loop {
+                    let (out, r) = rsvd_svt(&target_l, 1.0 / mu, hint, 0xA1 + k as u64);
+                    if r < hint || hint == min_dim {
+                        rank_hint = (r + 5).max(hint / 2).min(min_dim);
+                        break (out, r);
+                    }
+                    hint = (hint * 2).min(min_dim);
+                }
+            };
+            l = l_new;
+            // S = shrink_{λ/μ}(M − L + Y/μ)
+            let target_s = &(observed - &l) + &y.scale(1.0 / mu);
+            s = shrink(&target_s, lambda / mu);
+            // dual ascent
+            let infeas = &(observed - &l) - &s;
+            y.axpy(mu, &infeas);
+            mu *= self.mu_growth;
+            iters = k + 1;
+
+            let crit = infeas.frob_norm() / m_norm;
+            let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
+            history.push(IterRecord {
+                iter: k,
+                err,
+                objective: rank as f64,
+                grad_norm: crit,
+                elapsed: start.elapsed().as_secs_f64(),
+            });
+            if crit < self.stop.tol {
+                converged = true;
+                break;
+            }
+        }
+
+        let final_error = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
+        SolveResult {
+            l,
+            s,
+            history,
+            iterations: iters,
+            converged,
+            wall: start.elapsed(),
+            final_error,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpca::problem::ProblemSpec;
+
+    #[test]
+    fn recovers_small_instance_exactly() {
+        let p = ProblemSpec::square(60, 3, 0.05).generate(48);
+        let solver = Alm::new();
+        let res = solver.solve(&p.observed, Some(&p));
+        let err = res.final_error.unwrap();
+        assert!(err < 1e-6, "relative error {err}");
+        assert!(res.converged, "ALM should hit its feasibility criterion");
+    }
+
+    #[test]
+    fn handles_higher_corruption() {
+        let p = ProblemSpec::square(80, 4, 0.2).generate(49);
+        let res = Alm::new().solve(&p.observed, Some(&p));
+        let err = res.final_error.unwrap();
+        assert!(err < 1e-4, "relative error at s=0.2: {err}");
+    }
+
+    #[test]
+    fn feasibility_residual_decreases() {
+        let p = ProblemSpec::square(40, 2, 0.05).generate(50);
+        let res = Alm::new().with_stop(StopCriteria { max_iters: 30, tol: 0.0 }).solve(&p.observed, Some(&p));
+        let first = res.history.first().unwrap().grad_norm;
+        let last = res.history.last().unwrap().grad_norm;
+        assert!(last < first * 1e-3, "first {first} last {last}");
+    }
+}

@@ -1,0 +1,210 @@
+//! APGM baseline — accelerated proximal gradient for the relaxed RPCA
+//! objective (paper Eq. 3), following Lin et al. 2009 [paper ref 9]:
+//!
+//!   min_{L,S} μ‖L‖_* + μλ‖S‖₁ + 1/2‖L + S − M‖²_F
+//!
+//! with Nesterov acceleration and continuation on μ. Each iteration costs
+//! one SVT (the prox of the nuclear norm) — the SVD the paper points to as
+//! the reason convex methods cannot be distributed. SVTs use the exact
+//! Jacobi SVD below `SVD_EXACT_LIMIT`, randomized truncated SVD (with an
+//! adaptively grown sketch rank) above it.
+
+use std::time::Instant;
+
+use crate::linalg::{rsvd_svt, shrink, svt, Mat};
+use crate::rpca::problem::RpcaProblem;
+
+use super::traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};
+
+/// Below this min(m,n), use the exact Jacobi SVD for SVT steps.
+const SVD_EXACT_LIMIT: usize = 160;
+
+/// Accelerated-proximal-gradient RPCA solver.
+#[derive(Clone, Debug)]
+pub struct Apgm {
+    /// ℓ1 weight relative to the nuclear norm; default 1/√max(m,n)
+    pub lambda: Option<f64>,
+    /// continuation decay μ_{k+1} = max(κ·μ_k, μ̄)
+    pub mu_decay: f64,
+    /// floor ratio μ̄ = μ₀ · mu_floor
+    pub mu_floor: f64,
+    pub stop: StopCriteria,
+    /// initial sketch rank for randomized SVTs
+    pub svt_rank_hint: usize,
+}
+
+impl Apgm {
+    pub fn new() -> Self {
+        Apgm {
+            lambda: None,
+            mu_decay: 0.9,
+            mu_floor: 1e-9,
+            stop: StopCriteria { max_iters: 200, tol: 1e-7 },
+            svt_rank_hint: 16,
+        }
+    }
+
+    pub fn with_stop(mut self, stop: StopCriteria) -> Self {
+        self.stop = stop;
+        self
+    }
+}
+
+impl Default for Apgm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Top singular value via power iteration on AᵀA (cheap, used for μ₀).
+pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
+    let (_, n) = a.shape();
+    let mut rng = crate::rng::Pcg64::new(0x5150);
+    let mut x = Mat::gaussian(n, 1, &mut rng);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let y = crate::linalg::matmul(a, &x); // m×1
+        let z = crate::linalg::matmul_tn(a, &y); // n×1
+        let norm = z.frob_norm();
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        sigma = (norm / x.frob_norm().max(1e-300)).sqrt();
+        x = z.scale(1.0 / norm);
+    }
+    sigma
+}
+
+/// SVT dispatcher: exact for small problems, randomized above the limit.
+/// Returns (thresholded, retained rank, next rank hint).
+fn svt_step(a: &Mat, tau: f64, rank_hint: usize, seed: u64) -> (Mat, usize, usize) {
+    let min_dim = a.rows().min(a.cols());
+    if min_dim <= SVD_EXACT_LIMIT {
+        let (out, rank) = svt(a, tau);
+        (out, rank, rank_hint)
+    } else {
+        let mut hint = rank_hint.min(min_dim);
+        loop {
+            let (out, rank) = rsvd_svt(a, tau, hint, seed);
+            // if the sketch saturated, the true post-SVT rank may exceed it:
+            // grow and retry (standard predict-rank trick from the IALM code)
+            if rank < hint || hint == min_dim {
+                let next = if rank + 5 >= hint { (hint * 2).min(min_dim) } else { hint };
+                return (out, rank, next.max(rank + 5).min(min_dim));
+            }
+            hint = (hint * 2).min(min_dim);
+        }
+    }
+}
+
+impl RpcaSolver for Apgm {
+    fn name(&self) -> &'static str {
+        "APGM"
+    }
+
+    fn solve(&self, observed: &Mat, truth: Option<&RpcaProblem>) -> SolveResult {
+        let (m, n) = observed.shape();
+        let start = Instant::now();
+        let lambda = self.lambda.unwrap_or(1.0 / (m.max(n) as f64).sqrt());
+        let norm2 = spectral_norm(observed, 30);
+        let mut mu = 0.99 * norm2;
+        let mu_bar = self.mu_floor * norm2.max(1e-300);
+
+        let mut l = Mat::zeros(m, n);
+        let mut s = Mat::zeros(m, n);
+        let mut l_prev = Mat::zeros(m, n);
+        let mut s_prev = Mat::zeros(m, n);
+        let mut t_k: f64 = 1.0;
+        let mut t_prev: f64 = 1.0;
+        let mut rank_hint = self.svt_rank_hint;
+
+        let mut history = Vec::new();
+        let mut converged = false;
+        let mut iters = 0;
+        let m_norm = observed.frob_norm().max(1e-300);
+
+        for k in 0..self.stop.max_iters {
+            // extrapolation points
+            let beta = (t_prev - 1.0) / t_k;
+            let yl = &l + &(&l - &l_prev).scale(beta);
+            let ys = &s + &(&s - &s_prev).scale(beta);
+            // gradient of the smooth part 1/2‖Y_L + Y_S − M‖² at (Y_L, Y_S)
+            let resid = &(&yl + &ys) - observed;
+            let gl = &yl - &resid.scale(0.5);
+            let gs = &ys - &resid.scale(0.5);
+            l_prev = l;
+            s_prev = s;
+            // prox steps
+            let (l_new, rank, next_hint) = svt_step(&gl, mu / 2.0, rank_hint, 0xA6 + k as u64);
+            rank_hint = next_hint;
+            l = l_new;
+            s = shrink(&gs, lambda * mu / 2.0);
+
+            let t_next = (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt()) / 2.0;
+            t_prev = t_k;
+            t_k = t_next;
+            mu = (self.mu_decay * mu).max(mu_bar);
+            iters = k + 1;
+
+            // stopping: relative change of the iterate pair
+            let delta = ((&l - &l_prev).frob_norm_sq() + (&s - &s_prev).frob_norm_sq()).sqrt()
+                / m_norm;
+            let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
+            history.push(IterRecord {
+                iter: k,
+                err,
+                objective: rank as f64, // rank estimate doubles as telemetry
+                grad_norm: delta,
+                elapsed: start.elapsed().as_secs_f64(),
+            });
+            if delta < self.stop.tol {
+                converged = true;
+                break;
+            }
+        }
+
+        let final_error = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
+        SolveResult {
+            l,
+            s,
+            history,
+            iterations: iters,
+            converged,
+            wall: start.elapsed(),
+            final_error,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpca::problem::ProblemSpec;
+
+    #[test]
+    fn spectral_norm_matches_svd() {
+        let mut rng = crate::rng::Pcg64::new(71);
+        let a = Mat::gaussian(20, 15, &mut rng);
+        let exact = crate::linalg::singular_values(&a)[0];
+        let est = spectral_norm(&a, 60);
+        assert!((est - exact).abs() / exact < 1e-6, "{est} vs {exact}");
+    }
+
+    #[test]
+    fn recovers_small_instance() {
+        let p = ProblemSpec::square(60, 3, 0.05).generate(46);
+        let solver = Apgm::new().with_stop(StopCriteria { max_iters: 300, tol: 1e-8 });
+        let res = solver.solve(&p.observed, Some(&p));
+        let err = res.final_error.unwrap();
+        assert!(err < 1e-3, "relative error {err}");
+    }
+
+    #[test]
+    fn error_decreases() {
+        let p = ProblemSpec::square(50, 2, 0.05).generate(47);
+        let solver = Apgm::new().with_stop(StopCriteria { max_iters: 120, tol: 0.0 });
+        let res = solver.solve(&p.observed, Some(&p));
+        let curve = res.error_curve();
+        assert!(curve.last().unwrap().1 < 0.05 * curve.first().unwrap().1);
+    }
+}

@@ -1,0 +1,17 @@
+//! RPCA solver implementations: the consensus-factorization machinery
+//! shared by CF-PCA/DCF-PCA, the two SVD-based convex baselines from the
+//! paper's Fig. 1 (APGM, ALM), and the common solver interface.
+
+pub mod alm;
+pub mod apgm;
+pub mod cf_pca;
+pub mod factor;
+pub mod schedule;
+pub mod traits;
+
+pub use alm::Alm;
+pub use apgm::Apgm;
+pub use cf_pca::CfPca;
+pub use factor::{ClientState, FactorHyper};
+pub use schedule::Schedule;
+pub use traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};

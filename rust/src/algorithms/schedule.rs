@@ -1,0 +1,74 @@
+//! Learning-rate schedules for the U gradient steps (paper §2.2 / §4.2).
+//!
+//! The paper uses a decaying rate η = O(η₀/t) for the main experiments and
+//! η = c/√(KT) for the Theorem 1 guarantee; we additionally provide an
+//! adaptive curvature-normalized rate (η₀ / L̂ with L̂ from
+//! [`crate::algorithms::factor::lipschitz_estimate`]) that makes runs
+//! robust across problem scales without hand-tuning.
+
+/// Step-size policy for U updates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// fixed η
+    Const { eta: f64 },
+    /// η₀ / (1 + t/t₀) — the paper's decaying schedule
+    InvT { eta0: f64, t0: f64 },
+    /// c / √(K·T) — Theorem 1's rate (fixed over the whole run)
+    InvSqrtKT { c: f64, k_local: usize, rounds: usize },
+    /// η₀ / L̂(t) where L̂ is the current curvature estimate (σ_max(VᵀV)+ρ);
+    /// scale-free variant used by the defaults
+    Adaptive { eta0: f64 },
+}
+
+impl Schedule {
+    /// Step size at outer iteration `t` (0-based). `lipschitz` is the
+    /// current curvature estimate (used only by `Adaptive`).
+    pub fn eta(&self, t: usize, lipschitz: f64) -> f64 {
+        match *self {
+            Schedule::Const { eta } => eta,
+            Schedule::InvT { eta0, t0 } => eta0 / (1.0 + t as f64 / t0),
+            Schedule::InvSqrtKT { c, k_local, rounds } => {
+                c / ((k_local * rounds.max(1)) as f64).sqrt()
+            }
+            Schedule::Adaptive { eta0 } => eta0 / lipschitz.max(1e-12),
+        }
+    }
+
+    /// The paper's Fig. 1 setting: decaying from η₀.
+    pub fn paper_decay(eta0: f64) -> Schedule {
+        Schedule::InvT { eta0, t0: 10.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_constant() {
+        let s = Schedule::Const { eta: 0.3 };
+        assert_eq!(s.eta(0, 1.0), 0.3);
+        assert_eq!(s.eta(99, 123.0), 0.3);
+    }
+
+    #[test]
+    fn inv_t_decays() {
+        let s = Schedule::InvT { eta0: 1.0, t0: 10.0 };
+        assert!(s.eta(0, 1.0) > s.eta(10, 1.0));
+        assert!((s.eta(10, 1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inv_sqrt_kt_matches_formula() {
+        let s = Schedule::InvSqrtKT { c: 2.0, k_local: 4, rounds: 25 };
+        assert!((s.eta(7, 1.0) - 0.2).abs() < 1e-12); // 2/√100
+    }
+
+    #[test]
+    fn adaptive_divides_by_curvature() {
+        let s = Schedule::Adaptive { eta0: 0.5 };
+        assert!((s.eta(0, 10.0) - 0.05).abs() < 1e-12);
+        // guards against zero curvature
+        assert!(s.eta(0, 0.0).is_finite());
+    }
+}

@@ -1,0 +1,99 @@
+//! Common interface for all RPCA solvers (Fig. 1 compares four of them).
+
+use std::time::Duration;
+
+use crate::linalg::Mat;
+use crate::rpca::problem::RpcaProblem;
+
+/// One point of a convergence curve.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    /// outer iteration (communication round for DCF-PCA)
+    pub iter: usize,
+    /// relative recovery error (Eq. 30) against ground truth, if available
+    pub err: Option<f64>,
+    /// solver objective value (algorithm-specific; NaN if not tracked)
+    pub objective: f64,
+    /// ‖∇_U g‖_F for factorization methods (Theorem 1's quantity), else NaN
+    pub grad_norm: f64,
+    /// wall-clock seconds since solve start
+    pub elapsed: f64,
+}
+
+/// Final output of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// recovered low-rank component
+    pub l: Mat,
+    /// recovered sparse component
+    pub s: Mat,
+    /// per-iteration telemetry (the data behind Fig. 1 / Fig. 4 curves)
+    pub history: Vec<IterRecord>,
+    /// iterations actually executed
+    pub iterations: usize,
+    /// true if the stopping criterion (not the iteration cap) fired
+    pub converged: bool,
+    /// total wall time
+    pub wall: Duration,
+    /// final Eq. 30 error if ground truth was supplied
+    pub final_error: Option<f64>,
+}
+
+impl SolveResult {
+    /// Error series for plotting (iter, err).
+    pub fn error_curve(&self) -> Vec<(usize, f64)> {
+        self.history
+            .iter()
+            .filter_map(|r| r.err.map(|e| (r.iter, e)))
+            .collect()
+    }
+}
+
+/// Stopping criteria shared by all solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct StopCriteria {
+    /// iteration cap
+    pub max_iters: usize,
+    /// stop when the relative change of (L, S) between iterations falls
+    /// below this (or the algorithm's native residual criterion)
+    pub tol: f64,
+}
+
+impl Default for StopCriteria {
+    fn default() -> Self {
+        StopCriteria { max_iters: 100, tol: 1e-7 }
+    }
+}
+
+/// An RPCA solver: recovers (L, S) from an observed matrix. When the
+/// problem's ground truth is supplied, per-iteration Eq. 30 errors are
+/// recorded in the history.
+pub trait RpcaSolver {
+    fn name(&self) -> &'static str;
+
+    /// Solve for (L, S). `truth` enables per-iteration error tracking.
+    fn solve(&self, observed: &Mat, truth: Option<&RpcaProblem>) -> SolveResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_curve_filters_missing() {
+        let r = SolveResult {
+            l: Mat::zeros(1, 1),
+            s: Mat::zeros(1, 1),
+            history: vec![
+                IterRecord { iter: 0, err: Some(1.0), objective: 0.0, grad_norm: 0.0, elapsed: 0.0 },
+                IterRecord { iter: 1, err: None, objective: 0.0, grad_norm: 0.0, elapsed: 0.1 },
+                IterRecord { iter: 2, err: Some(0.5), objective: 0.0, grad_norm: 0.0, elapsed: 0.2 },
+            ],
+            iterations: 3,
+            converged: false,
+            wall: Duration::from_secs(1),
+            final_error: Some(0.5),
+        };
+        assert_eq!(r.error_curve(), vec![(0, 1.0), (2, 0.5)]);
+    }
+}

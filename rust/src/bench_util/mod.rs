@@ -1,0 +1,174 @@
+//! Benchmark harness (criterion is not in the offline vendor tree).
+//!
+//! Provides warmup + sampled timing with mean/σ/percentiles, and aligned
+//! table printing used by every `cargo bench` target to emit the rows of
+//! the paper's tables/figures.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over n samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_secs(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            samples: n,
+            mean,
+            stddev: var.sqrt(),
+            min: xs[0],
+            p50: pct(0.5),
+            p95: pct(0.95),
+            max: xs[n - 1],
+        }
+    }
+}
+
+/// Benchmark runner: warmup runs then timed samples.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    /// cap on total sampling time; sampling stops early past this
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, samples: 5, max_total: Duration::from_secs(120) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 0, samples: 3, max_total: Duration::from_secs(60) }
+    }
+
+    /// Time `f`, returning stats over the sampled runs. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let start = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if start.elapsed() > self.max_total && !times.is_empty() {
+                break;
+            }
+        }
+        Stats::from_secs(times)
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box re-export for older idioms).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Table {
+            widths: columns.iter().map(|c| c.len()).collect(),
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.header, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Human-friendly duration formatting for bench rows.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_values() {
+        let s = Stats::from_secs(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.samples, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn bencher_runs_and_times() {
+        let b = Bencher { warmup: 1, samples: 3, max_total: Duration::from_secs(10) };
+        let mut count = 0;
+        let stats = b.run(|| {
+            count += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 samples
+        assert!(stats.mean >= 0.001);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+    }
+}

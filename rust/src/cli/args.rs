@@ -1,0 +1,150 @@
+//! Minimal argument parser (no clap in the offline vendor tree).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with declared options for usage/error messages.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared option for help text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl ParsedArgs {
+    /// Parse `args` (excluding argv[0]) against the declared specs.
+    pub fn parse(args: &[String], specs: &[OptSpec]) -> Result<ParsedArgs> {
+        let mut out = ParsedArgs::default();
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = match find(name) {
+                    Some(s) => s,
+                    None => bail!("unknown option --{name}"),
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    if out.options.insert(name.to_string(), val).is_some() {
+                        bail!("--{name} given twice");
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("--{name} must be an integer")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow::anyhow!("--{name} must be a number")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|_| anyhow::anyhow!("--{name} must be an integer")))
+            .transpose()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Render a usage block from specs.
+pub fn usage(command: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: dcf-pca {command} [options]\n\noptions:\n");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        out.push_str(&format!("  {arg:<24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", takes_value: true, help: "size" },
+            OptSpec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let p = ParsedArgs::parse(&s(&["solve", "--n", "500", "--verbose", "extra"]), &specs()).unwrap();
+        assert_eq!(p.positionals, vec!["solve", "extra"]);
+        assert_eq!(p.get("n"), Some("500"));
+        assert!(p.flag("verbose"));
+        let p2 = ParsedArgs::parse(&s(&["--n=42"]), &specs()).unwrap();
+        assert_eq!(p2.get_usize("n").unwrap(), Some(42));
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(ParsedArgs::parse(&s(&["--bogus"]), &specs()).is_err());
+        assert!(ParsedArgs::parse(&s(&["--n"]), &specs()).is_err());
+        assert!(ParsedArgs::parse(&s(&["--verbose=1"]), &specs()).is_err());
+        assert!(ParsedArgs::parse(&s(&["--n", "1", "--n", "2"]), &specs()).is_err());
+        assert!(ParsedArgs::parse(&s(&["--n", "abc"]), &specs())
+            .unwrap()
+            .get_usize("n")
+            .is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("solve", &specs());
+        assert!(u.contains("--n <v>"));
+        assert!(u.contains("--verbose"));
+    }
+}

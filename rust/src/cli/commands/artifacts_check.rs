@@ -1,0 +1,83 @@
+//! `dcf-pca artifacts-check` — validate the AOT artifacts: load every
+//! manifest variant, compile it on the PJRT CPU client, execute it on a
+//! synthetic block, and compare against the native kernel.
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::factor::{ClientState, FactorHyper};
+use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::rpca::problem::ProblemSpec;
+use crate::runtime::{Manifest, PjrtKernel};
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "dir", takes_value: true, help: "artifacts directory (default: artifacts)" },
+    OptSpec { name: "tol", takes_value: true, help: "relative parity tolerance (default 2e-3)" },
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("artifacts-check", SPECS));
+        return Ok(());
+    }
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let tol = args.get_f64("tol")?.unwrap_or(2e-3);
+
+    let manifest = Manifest::load(dir).context("run `make artifacts` first")?;
+    let kernel = PjrtKernel::load(dir)?;
+    println!("checking {} variant(s) in {dir} against the native kernel…", manifest.variants.len());
+
+    let mut failures = 0;
+    for v in &manifest.variants {
+        let rel = check_variant(&kernel, v.m, v.n_i, v.r, v.k_local, v.inner_sweeps)?;
+        let ok = rel < tol;
+        println!(
+            "  {} m={} n_i={} r={} K={} J={}: max rel dev {:.2e} {}",
+            v.file, v.m, v.n_i, v.r, v.k_local, v.inner_sweeps,
+            rel,
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} variant(s) failed parity");
+    println!("all variants match (tol {tol:.1e})");
+    Ok(())
+}
+
+/// Run one variant both ways; returns the max relative deviation over
+/// (U, V, S).
+pub fn check_variant(
+    kernel: &PjrtKernel,
+    m: usize,
+    n_i: usize,
+    r: usize,
+    k_local: usize,
+    inner_sweeps: usize,
+) -> Result<f64> {
+    let spec = ProblemSpec { m, n: n_i, rank: r.min(m.min(n_i)), sparsity: 0.05 };
+    let problem = spec.generate(0xC0FFEE);
+    let mut hyper = FactorHyper::default_for(m, n_i, r);
+    hyper.inner_sweeps = inner_sweeps;
+    let mut rng = Pcg64::new(0xAB);
+    let u = Mat::gaussian(m, r, &mut rng);
+    let eta = 1e-3;
+
+    let mut st_native = ClientState::zeros(m, n_i, r);
+    let native = NativeKernel
+        .local_epoch(&u, &problem.observed, &mut st_native, &hyper, 0.5, eta, k_local)?;
+
+    let mut st_pjrt = ClientState::zeros(m, n_i, r);
+    let pjrt = kernel.local_epoch(&u, &problem.observed, &mut st_pjrt, &hyper, 0.5, eta, k_local)?;
+
+    let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1e-12);
+    let du = rel(&pjrt.u, &native.u);
+    let dv = rel(&st_pjrt.v, &st_native.v);
+    let ds = rel(&st_pjrt.s, &st_native.s);
+    Ok(du.max(dv).max(ds))
+}

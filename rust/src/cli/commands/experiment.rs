@@ -1,0 +1,69 @@
+//! `dcf-pca experiment <id>` — regenerate a paper table/figure.
+
+use anyhow::{bail, Result};
+
+use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::experiments::{ablations, comm, fig1, fig2, fig3_table1, fig4, theory, Effort};
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "quick", takes_value: false, help: "reduced scales (minutes instead of tens of minutes)" },
+    OptSpec { name: "full", takes_value: false, help: "the paper's scales (n up to 3000/5000)" },
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") || args.positionals.is_empty() {
+        print!("{}", usage("experiment <fig1|fig2|fig3|table1|fig4|comm|ablations|theory|all>", SPECS));
+        return Ok(());
+    }
+    let effort = if args.flag("full") {
+        Effort::Full
+    } else if args.flag("quick") {
+        Effort::Quick
+    } else {
+        Effort::from_env()
+    };
+
+    for id in &args.positionals {
+        match id.as_str() {
+            "fig1" => {
+                fig1::run(effort);
+            }
+            "fig2" => {
+                fig2::run(effort);
+            }
+            "fig3" | "table1" => {
+                fig3_table1::run(effort);
+            }
+            "fig4" => {
+                fig4::run(effort);
+            }
+            "comm" => {
+                comm::run(effort);
+            }
+            "ablations" => {
+                ablations::run(effort);
+            }
+            "theory" => {
+                theory::run_theorem1(effort);
+                theory::run_theorem2(effort);
+            }
+            "all" => {
+                fig1::run(effort);
+                fig2::run(effort);
+                fig3_table1::run(effort);
+                fig4::run(effort);
+                comm::run(effort);
+                ablations::run(effort);
+                theory::run_theorem1(effort);
+                theory::run_theorem2(effort);
+            }
+            other => bail!(
+                "unknown experiment '{other}' (fig1 fig2 fig3 table1 fig4 comm ablations theory all)"
+            ),
+        }
+    }
+    println!("\nCSV series written to {}", crate::experiments::results_dir().display());
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! `dcf-pca generate` — emit a synthetic RPCA instance (observed matrix
+//! and optionally the ground-truth components) as CSV files.
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::linalg::Mat;
+use crate::rpca::problem::ProblemSpec;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "n", takes_value: true, help: "columns (default 500)" },
+    OptSpec { name: "m", takes_value: true, help: "rows (default n)" },
+    OptSpec { name: "rank", takes_value: true, help: "true rank (default 0.05n)" },
+    OptSpec { name: "sparsity", takes_value: true, help: "corruption fraction (default 0.05)" },
+    OptSpec { name: "seed", takes_value: true, help: "seed (default 42)" },
+    OptSpec { name: "out", takes_value: true, help: "output CSV for M (required)" },
+    OptSpec { name: "truth", takes_value: false, help: "also write <out>.l0.csv / <out>.s0.csv" },
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("generate", SPECS));
+        return Ok(());
+    }
+    let n = args.get_usize("n")?.unwrap_or(500);
+    let m = args.get_usize("m")?.unwrap_or(n);
+    let rank = args
+        .get_usize("rank")?
+        .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
+    let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
+    let seed = args.get_u64("seed")?.unwrap_or(42);
+    let out = args.get("out").context("--out is required")?;
+
+    let spec = ProblemSpec { m, n, rank, sparsity };
+    spec.validate().map_err(anyhow::Error::msg)?;
+    let problem = spec.generate(seed);
+
+    write_matrix_csv(out, &problem.observed)?;
+    println!("wrote {} ({m}x{n}, rank {rank}, sparsity {sparsity}, seed {seed})", out);
+    if args.flag("truth") {
+        let l0_path = format!("{out}.l0.csv");
+        let s0_path = format!("{out}.s0.csv");
+        write_matrix_csv(&l0_path, &problem.l0)?;
+        write_matrix_csv(&s0_path, &problem.s0)?;
+        println!("wrote {l0_path} and {s0_path}");
+    }
+    Ok(())
+}
+
+/// Plain numeric CSV (no header): one row per matrix row.
+pub fn write_matrix_csv(path: &str, m: &Mat) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut text = String::with_capacity(m.rows() * m.cols() * 12);
+    for i in 0..m.rows() {
+        for (j, v) in m.row(i).iter().enumerate() {
+            if j > 0 {
+                text.push(',');
+            }
+            let _ = write!(text, "{v:.10e}");
+        }
+        text.push('\n');
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))
+}
+
+/// Read a matrix back from a numeric CSV (used by examples/tests).
+pub fn read_matrix_csv(path: &str) -> Result<Mat> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>> = line
+            .split(',')
+            .map(|c| {
+                c.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("{path}:{}: bad number '{c}'", lineno + 1))
+            })
+            .collect();
+        rows.push(row?);
+    }
+    anyhow::ensure!(!rows.is_empty(), "{path}: empty matrix");
+    let cols = rows[0].len();
+    anyhow::ensure!(
+        rows.iter().all(|r| r.len() == cols),
+        "{path}: ragged rows"
+    );
+    let data: Vec<f64> = rows.into_iter().flatten().collect();
+    Ok(Mat::from_vec(data.len() / cols, cols, data))
+}

@@ -1,0 +1,7 @@
+//! Subcommand implementations.
+
+pub mod artifacts_check;
+pub mod distributed;
+pub mod experiment;
+pub mod generate;
+pub mod solve;

@@ -1,0 +1,152 @@
+//! `dcf-pca solve` — run one RPCA solve with any of the four algorithms.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{Alm, Apgm, CfPca, RpcaSolver, StopCriteria};
+use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::driver::{run_dcf_pca, KernelSpec};
+use crate::rpca::problem::ProblemSpec;
+use crate::util::csv::CsvWriter;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "config", takes_value: true, help: "TOML run configuration file" },
+    OptSpec { name: "algorithm", takes_value: true, help: "dcf-pca | cf-pca | apgm | alm" },
+    OptSpec { name: "n", takes_value: true, help: "problem size (square m=n)" },
+    OptSpec { name: "m", takes_value: true, help: "rows (defaults to n)" },
+    OptSpec { name: "rank", takes_value: true, help: "true rank r (default 0.05n)" },
+    OptSpec { name: "p", takes_value: true, help: "factor width (default = rank)" },
+    OptSpec { name: "sparsity", takes_value: true, help: "corruption fraction s (default 0.05)" },
+    OptSpec { name: "seed", takes_value: true, help: "problem seed (default 42)" },
+    OptSpec { name: "clients", takes_value: true, help: "DCF-PCA: number of clients E" },
+    OptSpec { name: "rounds", takes_value: true, help: "DCF-PCA: communication rounds T" },
+    OptSpec { name: "k-local", takes_value: true, help: "DCF-PCA: local iterations K" },
+    OptSpec { name: "iters", takes_value: true, help: "centralized solvers: iteration cap" },
+    OptSpec { name: "pjrt", takes_value: false, help: "execute client updates via the AOT artifact" },
+    OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory (default: artifacts)" },
+    OptSpec { name: "csv", takes_value: true, help: "write the error curve to this CSV" },
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("solve", SPECS));
+        return Ok(());
+    }
+
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default_run(),
+    };
+
+    // CLI overrides
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(n) = args.get_usize("n")? {
+        let m = args.get_usize("m")?.unwrap_or(n);
+        let rank = args
+            .get_usize("rank")?
+            .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
+        let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
+        cfg.problem = ProblemSpec { m, n, rank, sparsity };
+        cfg.problem.validate().map_err(anyhow::Error::msg)?;
+        cfg.dcf = crate::coordinator::driver::DcfPcaConfig::default_for(&cfg.problem);
+    }
+    if let Some(seed) = args.get_u64("seed")? {
+        cfg.problem_seed = seed;
+    }
+    if let Some(p) = args.get_usize("p")? {
+        cfg.dcf.hyper.rank = p;
+        cfg.dcf.hyper.lambda = (cfg.problem.rank as f64).sqrt().max(1.0);
+    }
+    if let Some(e) = args.get_usize("clients")? {
+        cfg.dcf.clients = e;
+    }
+    if let Some(t) = args.get_usize("rounds")? {
+        cfg.dcf.rounds = t;
+    }
+    if let Some(k) = args.get_usize("k-local")? {
+        cfg.dcf.k_local = k;
+    }
+    if let Some(i) = args.get_usize("iters")? {
+        cfg.max_iters = i;
+    }
+    if args.flag("pjrt") {
+        cfg.use_pjrt = true;
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(c) = args.get("csv") {
+        cfg.output_csv = Some(c.to_string());
+    }
+
+    execute(&cfg)
+}
+
+/// Run a validated config (shared with tests).
+pub fn execute(cfg: &RunConfig) -> Result<()> {
+    let problem = cfg.problem.generate(cfg.problem_seed);
+    crate::log_info!(
+        "solve",
+        "{} on m={} n={} r={} s={} (seed {})",
+        cfg.algorithm.name(),
+        cfg.problem.m,
+        cfg.problem.n,
+        cfg.problem.rank,
+        cfg.problem.sparsity,
+        cfg.problem_seed
+    );
+
+    let (curve, final_err, iters, wall) = match cfg.algorithm {
+        Algorithm::DcfPca => {
+            let mut dcf = cfg.dcf.clone();
+            if cfg.use_pjrt {
+                let kernel = crate::runtime::PjrtKernel::load(&cfg.artifacts_dir)
+                    .context("loading PJRT artifacts (run `make artifacts`)")?;
+                dcf.kernel = KernelSpec::Custom(Arc::new(kernel));
+            }
+            let res = run_dcf_pca(&problem, &dcf)?;
+            (res.error_curve(), res.final_error, res.rounds.len(), res.wall)
+        }
+        Algorithm::CfPca => {
+            let solver = CfPca::new(cfg.problem.m, cfg.problem.n, cfg.dcf.hyper.rank)
+                .with_stop(StopCriteria { max_iters: cfg.max_iters, tol: cfg.tol });
+            let res = solver.solve(&problem.observed, Some(&problem));
+            (res.error_curve(), res.final_error, res.iterations, res.wall)
+        }
+        Algorithm::Apgm => {
+            let solver =
+                Apgm::new().with_stop(StopCriteria { max_iters: cfg.max_iters, tol: cfg.tol });
+            let res = solver.solve(&problem.observed, Some(&problem));
+            (res.error_curve(), res.final_error, res.iterations, res.wall)
+        }
+        Algorithm::Alm => {
+            let solver =
+                Alm::new().with_stop(StopCriteria { max_iters: cfg.max_iters, tol: cfg.tol });
+            let res = solver.solve(&problem.observed, Some(&problem));
+            (res.error_curve(), res.final_error, res.iterations, res.wall)
+        }
+    };
+
+    println!(
+        "{}: final err {:.4e} after {} iterations in {}",
+        cfg.algorithm.name(),
+        final_err.unwrap_or(f64::NAN),
+        iters,
+        crate::bench_util::fmt_secs(wall.as_secs_f64())
+    );
+    if let Some(path) = &cfg.output_csv {
+        let mut csv = CsvWriter::new(&["iter", "err"]);
+        for (t, e) in &curve {
+            csv.row(&[t, e]);
+        }
+        csv.write_file(path).with_context(|| format!("writing {path}"))?;
+        println!("error curve written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Command-line interface: the launcher for solver runs, distributed
+//! (TCP) deployments, and the paper-experiment drivers.
+//!
+//! ```text
+//! dcf-pca solve       [--config f.toml | --n 500 --algorithm dcf-pca ...]
+//! dcf-pca generate    --n 500 [--rank 25 --sparsity 0.05 --seed 42] --out m.csv
+//! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [...]
+//! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [...]
+//! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm> [--quick]
+//! dcf-pca artifacts-check [--dir artifacts]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+use anyhow::Result;
+
+pub use args::{usage, OptSpec, ParsedArgs};
+
+/// Top-level dispatch. `argv` excludes the program name.
+pub fn run(argv: &[String]) -> Result<()> {
+    let command = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match command {
+        "solve" => commands::solve::run(rest),
+        "generate" => commands::generate::run(rest),
+        "serve" => commands::distributed::run_serve(rest),
+        "worker" => commands::distributed::run_worker(rest),
+        "experiment" => commands::experiment::run(rest),
+        "artifacts-check" => commands::artifacts_check::run(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", top_usage());
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{}", top_usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "\
+dcf-pca — Distributed Robust PCA via consensus factorization
+
+commands:
+  solve            run one RPCA solve (dcf-pca | cf-pca | apgm | alm)
+  generate         emit a synthetic RPCA instance as CSV
+  serve            run the DCF-PCA server over TCP
+  worker           run one DCF-PCA client over TCP
+  experiment       regenerate a paper table/figure (fig1 fig2 fig3 table1 fig4 comm)
+  artifacts-check  validate AOT artifacts against the native kernels
+  help             this message
+
+run `dcf-pca <command> --help` for per-command options.
+"
+    .to_string()
+}

@@ -1,0 +1,345 @@
+//! Typed run configuration loaded from TOML files (see `configs/*.toml`
+//! for examples). One [`RunConfig`] fully describes a solver run: the
+//! problem instance, the algorithm, and (for DCF-PCA) the federation
+//! parameters.
+
+pub mod toml;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+
+use crate::algorithms::schedule::Schedule;
+use crate::coordinator::driver::{DcfPcaConfig, KernelSpec, PartitionSpec};
+use crate::coordinator::privacy::PrivacySpec;
+use crate::coordinator::server::FaultPolicy;
+use crate::coordinator::Aggregation;
+use crate::rpca::problem::ProblemSpec;
+
+use self::toml::TomlDoc;
+
+/// Which algorithm a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    DcfPca,
+    CfPca,
+    Apgm,
+    Alm,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dcf-pca" | "dcfpca" | "dcf" => Algorithm::DcfPca,
+            "cf-pca" | "cfpca" | "cf" => Algorithm::CfPca,
+            "apgm" | "apg" => Algorithm::Apgm,
+            "alm" | "ialm" => Algorithm::Alm,
+            other => bail!("unknown algorithm '{other}' (dcf-pca|cf-pca|apgm|alm)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::DcfPca => "DCF-PCA",
+            Algorithm::CfPca => "CF-PCA",
+            Algorithm::Apgm => "APGM",
+            Algorithm::Alm => "ALM",
+        }
+    }
+}
+
+/// A complete, validated run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    pub algorithm: Algorithm,
+    pub problem: ProblemSpec,
+    pub problem_seed: u64,
+    pub dcf: DcfPcaConfig,
+    /// iteration cap for the centralized solvers
+    pub max_iters: usize,
+    pub tol: f64,
+    /// use the PJRT artifact backend for client updates
+    pub use_pjrt: bool,
+    /// artifacts directory (for use_pjrt)
+    pub artifacts_dir: String,
+    /// output CSV path for the error curve (optional)
+    pub output_csv: Option<String>,
+}
+
+impl RunConfig {
+    /// Built-in defaults at the paper's n=500 scale.
+    pub fn default_run() -> RunConfig {
+        let problem = ProblemSpec::paper_default(500);
+        RunConfig {
+            name: "default".into(),
+            algorithm: Algorithm::DcfPca,
+            problem,
+            problem_seed: 42,
+            dcf: DcfPcaConfig::default_for(&problem),
+            max_iters: 100,
+            tol: 1e-7,
+            use_pjrt: false,
+            artifacts_dir: "artifacts".into(),
+            output_csv: None,
+        }
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text)?;
+        validate_known_keys(&doc)?;
+        let mut cfg = RunConfig::default_run();
+
+        if let Some(v) = doc.get("", "name") {
+            cfg.name = v.as_str().context("name must be a string")?.to_string();
+        }
+        if let Some(v) = doc.get("", "algorithm") {
+            cfg.algorithm = Algorithm::parse(v.as_str().context("algorithm must be a string")?)?;
+        }
+
+        // [problem]
+        let mut spec = cfg.problem;
+        if let Some(v) = doc.get("problem", "m") {
+            spec.m = v.as_usize().context("problem.m")?;
+        }
+        if let Some(v) = doc.get("problem", "n") {
+            spec.n = v.as_usize().context("problem.n")?;
+            if doc.get("problem", "m").is_none() {
+                spec.m = spec.n; // square by default
+            }
+            // paper default shapes track n unless overridden
+            if doc.get("problem", "rank").is_none() {
+                spec.rank = ((spec.n as f64) * 0.05).round().max(1.0) as usize;
+            }
+        }
+        if let Some(v) = doc.get("problem", "rank") {
+            spec.rank = v.as_usize().context("problem.rank")?;
+        }
+        if let Some(v) = doc.get("problem", "sparsity") {
+            spec.sparsity = v.as_float().context("problem.sparsity")?;
+        }
+        if let Some(v) = doc.get("problem", "seed") {
+            cfg.problem_seed = v.as_int().context("problem.seed")? as u64;
+        }
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg.problem = spec;
+        cfg.dcf = DcfPcaConfig::default_for(&spec);
+
+        // [solver]
+        if let Some(v) = doc.get("solver", "max_iters") {
+            cfg.max_iters = v.as_usize().context("solver.max_iters")?;
+        }
+        if let Some(v) = doc.get("solver", "tol") {
+            cfg.tol = v.as_float().context("solver.tol")?;
+        }
+        if let Some(v) = doc.get("solver", "rank") {
+            cfg.dcf.hyper.rank = v.as_usize().context("solver.rank")?;
+        }
+        if let Some(v) = doc.get("solver", "rho") {
+            cfg.dcf.hyper.rho = v.as_float().context("solver.rho")?;
+        }
+        if let Some(v) = doc.get("solver", "lambda") {
+            cfg.dcf.hyper.lambda = v.as_float().context("solver.lambda")?;
+        }
+        if let Some(v) = doc.get("solver", "inner_sweeps") {
+            cfg.dcf.hyper.inner_sweeps = v.as_usize().context("solver.inner_sweeps")?;
+        }
+        if let Some(v) = doc.get("solver", "polish_sweeps") {
+            cfg.dcf.polish_sweeps = v.as_usize().context("solver.polish_sweeps")?;
+        }
+
+        // [dcf]
+        if let Some(v) = doc.get("dcf", "clients") {
+            cfg.dcf.clients = v.as_usize().context("dcf.clients")?;
+        }
+        if let Some(v) = doc.get("dcf", "rounds") {
+            cfg.dcf.rounds = v.as_usize().context("dcf.rounds")?;
+        }
+        if let Some(v) = doc.get("dcf", "k_local") {
+            cfg.dcf.k_local = v.as_usize().context("dcf.k_local")?;
+        }
+        if let Some(v) = doc.get("dcf", "seed") {
+            cfg.dcf.seed = v.as_int().context("dcf.seed")? as u64;
+        }
+        cfg.dcf.schedule = parse_schedule(&doc, cfg.dcf.k_local, cfg.dcf.rounds)?;
+        if let Some(v) = doc.get("dcf", "aggregation") {
+            cfg.dcf.aggregation = match v.as_str().context("dcf.aggregation")? {
+                "uniform" => Aggregation::Uniform,
+                "weighted" => Aggregation::WeightedByCols,
+                other => bail!("unknown aggregation '{other}'"),
+            };
+        }
+        if let Some(v) = doc.get("dcf", "fault_policy") {
+            cfg.dcf.fault_policy = match v.as_str().context("dcf.fault_policy")? {
+                "strict" => FaultPolicy::Strict,
+                "skip" | "skip_missing" => FaultPolicy::SkipMissing,
+                other => bail!("unknown fault_policy '{other}'"),
+            };
+        }
+        if let Some(v) = doc.get("dcf", "partition_sizes") {
+            let sizes: Option<Vec<usize>> =
+                v.as_array().context("dcf.partition_sizes")?.iter().map(|x| x.as_usize()).collect();
+            cfg.dcf.partition = PartitionSpec::Sizes(sizes.context("partition_sizes must be ints")?);
+        }
+        if let Some(v) = doc.get("dcf", "private_clients") {
+            let ids: Option<BTreeSet<usize>> =
+                v.as_array().context("dcf.private_clients")?.iter().map(|x| x.as_usize()).collect();
+            cfg.dcf.privacy = PrivacySpec::with_private(ids.context("private_clients must be ints")?);
+        }
+        if let Some(v) = doc.get("dcf", "err_stop") {
+            cfg.dcf.err_stop = Some(v.as_float().context("dcf.err_stop")?);
+        }
+        if let Some(v) = doc.get("dcf", "compression") {
+            cfg.dcf.compression =
+                crate::coordinator::Compression::parse(v.as_str().context("dcf.compression")?)?;
+        }
+        if let Some(v) = doc.get("dcf", "participation") {
+            cfg.dcf.participation = v.as_float().context("dcf.participation")?;
+        }
+        if let Some(v) = doc.get("dcf", "dp_sigma") {
+            cfg.dcf.dp_sigma = v.as_float().context("dcf.dp_sigma")?;
+        }
+
+        // [runtime]
+        if let Some(v) = doc.get("runtime", "use_pjrt") {
+            cfg.use_pjrt = v.as_bool().context("runtime.use_pjrt")?;
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir") {
+            cfg.artifacts_dir = v.as_str().context("runtime.artifacts_dir")?.to_string();
+        }
+
+        // [output]
+        if let Some(v) = doc.get("output", "csv") {
+            cfg.output_csv = Some(v.as_str().context("output.csv")?.to_string());
+        }
+
+        cfg.dcf.kernel = KernelSpec::Native; // PJRT kernel attached by the launcher
+        Ok(cfg)
+    }
+}
+
+fn parse_schedule(doc: &TomlDoc, k_local: usize, rounds: usize) -> Result<Schedule> {
+    let kind = doc
+        .get("dcf", "schedule")
+        .map(|v| v.as_str().context("dcf.schedule must be a string"))
+        .transpose()?
+        .unwrap_or("adaptive");
+    let eta0 = doc
+        .get("dcf", "eta0")
+        .map(|v| v.as_float().context("dcf.eta0"))
+        .transpose()?
+        .unwrap_or(match kind {
+            "adaptive" => 0.9,
+            _ => 0.05,
+        });
+    Ok(match kind {
+        "adaptive" => Schedule::Adaptive { eta0 },
+        "const" => Schedule::Const { eta: eta0 },
+        "inv_t" | "decay" => Schedule::InvT { eta0, t0: 10.0 },
+        "inv_sqrt_kt" => Schedule::InvSqrtKT { c: eta0, k_local, rounds },
+        other => bail!("unknown schedule '{other}'"),
+    })
+}
+
+/// Reject typo'd keys instead of silently ignoring them.
+fn validate_known_keys(doc: &TomlDoc) -> Result<()> {
+    const KNOWN: &[(&str, &[&str])] = &[
+        ("", &["name", "algorithm"]),
+        ("problem", &["m", "n", "rank", "sparsity", "seed"]),
+        ("solver", &["max_iters", "tol", "rank", "rho", "lambda", "inner_sweeps", "polish_sweeps"]),
+        (
+            "dcf",
+            &[
+                "clients", "rounds", "k_local", "seed", "schedule", "eta0", "aggregation",
+                "fault_policy", "partition_sizes", "private_clients", "err_stop",
+                "compression", "participation", "dp_sigma",
+            ],
+        ),
+        ("runtime", &["use_pjrt", "artifacts_dir"]),
+        ("output", &["csv"]),
+    ];
+    for section in doc.sections() {
+        let allowed = KNOWN
+            .iter()
+            .find(|(s, _)| *s == section)
+            .map(|(_, ks)| *ks)
+            .with_context(|| format!("unknown config section [{section}]"))?;
+        for key in doc.keys(section) {
+            if !allowed.contains(&key) {
+                bail!("unknown config key '{key}' in section [{section}]");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document_parses() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+name = "fig4-k10"
+algorithm = "dcf-pca"
+[problem]
+n = 500
+sparsity = 0.05
+seed = 7
+[dcf]
+clients = 10
+rounds = 50
+k_local = 10
+schedule = "const"
+eta0 = 0.01
+private_clients = [0, 3]
+[output]
+csv = "out/fig4.csv"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig4-k10");
+        assert_eq!(cfg.problem.n, 500);
+        assert_eq!(cfg.problem.rank, 25); // 0.05n default
+        assert_eq!(cfg.dcf.k_local, 10);
+        assert_eq!(cfg.dcf.schedule, Schedule::Const { eta: 0.01 });
+        assert!(cfg.dcf.privacy.is_private(0));
+        assert!(cfg.dcf.privacy.is_public(1));
+        assert_eq!(cfg.output_csv.as_deref(), Some("out/fig4.csv"));
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunConfig::from_toml_str("[problem]\nn = 100\nbogus = 1").is_err());
+        assert!(RunConfig::from_toml_str("[bogus_section]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn algorithm_aliases() {
+        assert_eq!(Algorithm::parse("DCF-PCA").unwrap(), Algorithm::DcfPca);
+        assert_eq!(Algorithm::parse("ialm").unwrap(), Algorithm::Alm);
+        assert!(Algorithm::parse("what").is_err());
+    }
+
+    #[test]
+    fn invalid_problem_rejected() {
+        assert!(RunConfig::from_toml_str("[problem]\nn = 10\nrank = 99").is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = RunConfig::default_run();
+        assert_eq!(cfg.problem.n, 500);
+        assert_eq!(cfg.dcf.clients, 10);
+        assert!(cfg.dcf.hyper.satisfies_theorem2(cfg.problem.m, cfg.problem.n));
+    }
+}

@@ -1,0 +1,256 @@
+//! TOML-subset parser (the offline tree has no `toml` crate).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous flat arrays;
+//! `#` comments. Unsupported (rejected, not silently ignored): multi-line
+//! strings, inline tables, datetimes, array-of-tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().filter(|i| *i >= 0).map(|i| i as usize)
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section.key → value`. Root-level keys use the
+/// empty section name "".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    bail!("line {}: bad section name '{name}'", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for '{key}'", lineno + 1))?;
+            let id = (section.clone(), key.to_string());
+            if doc.entries.contains_key(&id) {
+                bail!("line {}: duplicate key '{key}' in [{section}]", lineno + 1);
+            }
+            doc.entries.insert(id, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// All keys of a section (for unknown-key validation).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("escaped quotes not supported in this TOML subset");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>> =
+            inner.split(',').map(|s| parse_value(s.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    // numbers: int if it parses as i64 and has no float syntax
+    let clean = text.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{text}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# run configuration
+name = "fig1"          # inline comment
+[problem]
+n = 500
+rank = 25
+sparsity = 0.05
+[dcf]
+clients = 10
+k_local = 2
+eta0 = 0.05
+adaptive = true
+sizes = [5, 30, 5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("fig1"));
+        assert_eq!(doc.get("problem", "n").unwrap().as_usize(), Some(500));
+        assert_eq!(doc.get("problem", "sparsity").unwrap().as_float(), Some(0.05));
+        assert_eq!(doc.get("dcf", "adaptive").unwrap().as_bool(), Some(true));
+        let sizes = doc.get("dcf", "sizes").unwrap().as_array().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[1].as_usize(), Some(30));
+        assert_eq!(doc.sections(), vec!["", "dcf", "problem"]);
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1e-3\nd = 1_000").unwrap();
+        assert_eq!(doc.get("", "a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("", "b").unwrap(), &TomlValue::Float(3.0));
+        assert_eq!(doc.get("", "c").unwrap(), &TomlValue::Float(1e-3));
+        assert_eq!(doc.get("", "d").unwrap(), &TomlValue::Int(1000));
+        // int coerces to float on demand
+        assert_eq!(doc.get("", "a").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_in_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"path = "out#1.csv""##).unwrap();
+        assert_eq!(doc.get("", "path").unwrap().as_str(), Some("out#1.csv"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("x = [1, 2").is_err());
+        assert!(TomlDoc::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        // same key in different sections is fine
+        assert!(TomlDoc::parse("[x]\na = 1\n[y]\na = 2").is_ok());
+    }
+
+    #[test]
+    fn keys_listing() {
+        let doc = TomlDoc::parse("[s]\nb = 1\na = 2").unwrap();
+        let mut keys = doc.keys("s");
+        keys.sort_unstable();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+}

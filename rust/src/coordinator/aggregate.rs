@@ -1,0 +1,102 @@
+//! Server-side aggregation of client consensus factors (paper Eq. 9).
+
+use crate::linalg::Mat;
+
+/// How the server combines the returned `U_i` into `U^(t+1)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Aggregation {
+    /// plain FedAvg mean (Eq. 9) — the paper's scheme
+    Uniform,
+    /// weighted by client column counts n_i (ablation; FedAvg's usual
+    /// data-size weighting, natural when partitions are uneven)
+    WeightedByCols,
+}
+
+/// Aggregate updates. `weights[i]` is client i's column count n_i (used
+/// only by `WeightedByCols`). All matrices must share one shape.
+pub fn aggregate(kind: Aggregation, us: &[Mat], weights: &[usize]) -> Mat {
+    assert!(!us.is_empty(), "aggregate: no updates");
+    assert_eq!(us.len(), weights.len());
+    let shape = us[0].shape();
+    let mut acc = Mat::zeros(shape.0, shape.1);
+    match kind {
+        Aggregation::Uniform => {
+            let w = 1.0 / us.len() as f64;
+            for u in us {
+                assert_eq!(u.shape(), shape, "aggregate: shape mismatch");
+                acc.axpy(w, u);
+            }
+        }
+        Aggregation::WeightedByCols => {
+            let total: usize = weights.iter().sum();
+            assert!(total > 0);
+            for (u, &w) in us.iter().zip(weights) {
+                assert_eq!(u.shape(), shape, "aggregate: shape mismatch");
+                acc.axpy(w as f64 / total as f64, u);
+            }
+        }
+    }
+    acc
+}
+
+/// Consensus dispersion: max_i ‖U_i − Ū‖_F / ‖Ū‖_F. Telemetry for how far
+/// clients drifted apart during K local steps (grows with K — the
+/// mechanism behind Fig. 4's error-floor observation).
+pub fn consensus_dispersion(us: &[Mat], mean: &Mat) -> f64 {
+    let denom = mean.frob_norm().max(1e-300);
+    us.iter()
+        .map(|u| (u - mean).frob_norm() / denom)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn uniform_is_mean() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![3.0, 6.0]);
+        let m = aggregate(Aggregation::Uniform, &[a, b], &[10, 90]);
+        assert_eq!(m.as_slice(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_uses_cols() {
+        let a = Mat::from_vec(1, 1, vec![0.0]);
+        let b = Mat::from_vec(1, 1, vec![10.0]);
+        let m = aggregate(Aggregation::WeightedByCols, &[a, b], &[9, 1]);
+        assert!((m.as_slice()[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregation_is_permutation_invariant() {
+        let mut rng = Pcg64::new(5);
+        let us: Vec<Mat> = (0..4).map(|_| Mat::gaussian(3, 2, &mut rng)).collect();
+        let w = vec![1, 2, 3, 4];
+        let m1 = aggregate(Aggregation::Uniform, &us, &w);
+        let rev: Vec<Mat> = us.iter().rev().cloned().collect();
+        let wrev: Vec<usize> = w.iter().rev().copied().collect();
+        let m2 = aggregate(Aggregation::Uniform, &rev, &wrev);
+        assert!((&m1 - &m2).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn dispersion_zero_for_identical() {
+        let mut rng = Pcg64::new(6);
+        let u = Mat::gaussian(4, 2, &mut rng);
+        let us = vec![u.clone(), u.clone(), u.clone()];
+        assert!(consensus_dispersion(&us, &u) < 1e-15);
+    }
+
+    #[test]
+    fn dispersion_detects_drift() {
+        let mut rng = Pcg64::new(7);
+        let u = Mat::gaussian(4, 2, &mut rng);
+        let mut u2 = u.clone();
+        u2.axpy(0.1, &Mat::gaussian(4, 2, &mut rng));
+        let mean = aggregate(Aggregation::Uniform, &[u.clone(), u2.clone()], &[1, 1]);
+        assert!(consensus_dispersion(&[u, u2], &mean) > 1e-3);
+    }
+}

@@ -1,0 +1,282 @@
+//! Client worker: owns one column block `M_i` and its private state
+//! `(V_i, S_i)`, services the round protocol until shutdown.
+//!
+//! Runs on its own thread (in-proc transport) or its own process (TCP
+//! transport — see `examples/federated_privacy.rs`). The worker never
+//! sends anything derived from `M_i` except the m×r consensus updates and
+//! — if and only if the server grants `reveal` — the final blocks.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
+use crate::linalg::{matmul_nt, Mat};
+
+use super::compress::Compression;
+use super::kernel::LocalUpdateKernel;
+use super::protocol::{ToClient, ToServer};
+use super::transport::Channel;
+
+/// Failure-injection hooks for tests (client "crashes" silently).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// stop responding at the start of this round (None = healthy)
+    pub crash_at_round: Option<u32>,
+}
+
+/// Per-client configuration handed to the worker at spawn.
+pub struct ClientConfig {
+    pub id: usize,
+    /// this client's column block
+    pub m_block: Mat,
+    pub hyper: FactorHyper,
+    /// n_i / n
+    pub n_frac: f64,
+    /// debias polish sweeps applied before revealing final blocks
+    pub polish_sweeps: usize,
+    /// ground-truth blocks (L₀ᵢ, S₀ᵢ) for telemetry-only error reporting
+    pub truth: Option<(Mat, Mat)>,
+    pub faults: FaultPlan,
+    /// wire codec for uploaded consensus factors (must match the server)
+    pub compression: Compression,
+    /// σ of gaussian noise added to U_i before upload (differential-
+    /// privacy-style perturbation; 0.0 = off). Noise is seeded per
+    /// (client, round) so runs stay reproducible.
+    pub dp_sigma: f64,
+}
+
+/// Run the worker loop until `Shutdown` (or a planned crash). Returns the
+/// number of rounds served.
+pub fn run_client(
+    ch: &mut dyn Channel,
+    cfg: ClientConfig,
+    kernel: &dyn LocalUpdateKernel,
+) -> Result<usize> {
+    let (m, n_i) = cfg.m_block.shape();
+    let mut state = ClientState::zeros(m, n_i, cfg.hyper.rank);
+    ch.send(&ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }.encode())
+        .context("send hello")?;
+
+    let mut rounds_served = 0usize;
+    loop {
+        let msg = ToClient::decode(&super::transport::recv(ch)?)?;
+        match msg {
+            ToClient::Round { round, k_local, eta, u } => {
+                if let Some(crash) = cfg.faults.crash_at_round {
+                    if round >= crash {
+                        // simulate a crash: stop participating entirely
+                        return Ok(rounds_served);
+                    }
+                }
+                if u.rows() != m || u.cols() != cfg.hyper.rank {
+                    bail!(
+                        "client {}: U shape {:?} does not match (m={m}, rank={})",
+                        cfg.id,
+                        u.shape(),
+                        cfg.hyper.rank
+                    );
+                }
+                // per-thread CPU time: honest per-client cost even when E
+                // simulated clients share one core (see util::cputime)
+                let t0 = crate::util::cputime::thread_cpu_seconds();
+                let mut out = kernel.local_epoch(
+                    &u,
+                    &cfg.m_block,
+                    &mut state,
+                    &cfg.hyper,
+                    cfg.n_frac,
+                    eta,
+                    k_local as usize,
+                )?;
+                let local_secs = crate::util::cputime::thread_cpu_seconds() - t0;
+                if cfg.dp_sigma > 0.0 {
+                    let seed = (cfg.id as u64) << 32 | round as u64;
+                    let mut g = crate::rng::GaussianSource::new(
+                        crate::rng::Pcg64::new(0xD9).fork(seed),
+                    );
+                    for x in out.u.as_mut_slice() {
+                        *x += cfg.dp_sigma * g.next_gaussian();
+                    }
+                }
+                // telemetry: partial error numerator against ground truth
+                let err_num = match &cfg.truth {
+                    Some((l0, s0)) => {
+                        let l_i = matmul_nt(&out.u, &state.v);
+                        (&l_i - l0).frob_norm_sq() + (&state.s - s0).frob_norm_sq()
+                    }
+                    None => f64::NAN,
+                };
+                ch.send(
+                    &ToServer::Update {
+                        client: cfg.id as u32,
+                        round,
+                        u: out.u,
+                        grad_norm: out.grad_norm,
+                        lipschitz: out.lipschitz,
+                        err_num,
+                        local_secs,
+                    }
+                    .encode_with(cfg.compression),
+                )
+                .context("send update")?;
+                rounds_served += 1;
+            }
+            ToClient::Finish { reveal, final_u } => {
+                // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional
+                // debias polish of the local (V_i, S_i) with U fixed)
+                for _ in 0..cfg.polish_sweeps {
+                    polish_sweep(&final_u, &cfg.m_block, &mut state, &cfg.hyper);
+                }
+                let reply = if reveal {
+                    let l_i = matmul_nt(&final_u, &state.v);
+                    ToServer::Reveal { client: cfg.id as u32, l: l_i, s: state.s.clone() }
+                } else {
+                    ToServer::Withhold { client: cfg.id as u32 }
+                };
+                ch.send(&reply.encode()).context("send final")?;
+            }
+            ToClient::Shutdown => return Ok(rounds_served),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::NativeKernel;
+    use crate::coordinator::transport::inproc::pair;
+    use crate::rng::Pcg64;
+    use crate::rpca::problem::ProblemSpec;
+    use std::time::Duration;
+
+    fn spawn_client(
+        cfg: ClientConfig,
+    ) -> (crate::coordinator::transport::inproc::InProcChannel, std::thread::JoinHandle<Result<usize>>) {
+        let (server_side, mut client_side) = pair();
+        let handle =
+            std::thread::spawn(move || run_client(&mut client_side, cfg, &NativeKernel));
+        (server_side, handle)
+    }
+
+    #[test]
+    fn serves_rounds_and_reveals() {
+        let p = ProblemSpec::square(20, 2, 0.05).generate(1);
+        let cfg = ClientConfig {
+            id: 0,
+            m_block: p.observed.clone(),
+            hyper: FactorHyper::default_for(20, 20, 2),
+            n_frac: 1.0,
+            polish_sweeps: 2,
+            truth: Some((p.l0.clone(), p.s0.clone())),
+            faults: FaultPlan::default(),
+            compression: Compression::None,
+            dp_sigma: 0.0,
+        };
+        let (mut server, handle) = spawn_client(cfg);
+        // hello
+        let hello = ToServer::decode(&server.recv_timeout(Duration::from_secs(5)).unwrap()).unwrap();
+        assert_eq!(hello, ToServer::Hello { client: 0, cols: 20 });
+        // one round
+        let mut rng = Pcg64::new(2);
+        let u = Mat::gaussian(20, 2, &mut rng);
+        server
+            .send(&ToClient::Round { round: 0, k_local: 2, eta: 1e-3, u: u.clone() }.encode())
+            .unwrap();
+        let up = ToServer::decode(&server.recv_timeout(Duration::from_secs(10)).unwrap()).unwrap();
+        let u_next = match up {
+            ToServer::Update { client: 0, round: 0, u, err_num, .. } => {
+                assert!(err_num.is_finite());
+                u
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        // finish + reveal
+        server
+            .send(&ToClient::Finish { reveal: true, final_u: u_next }.encode())
+            .unwrap();
+        let fin = ToServer::decode(&server.recv_timeout(Duration::from_secs(10)).unwrap()).unwrap();
+        match fin {
+            ToServer::Reveal { client: 0, l, s } => {
+                assert_eq!(l.shape(), (20, 20));
+                assert_eq!(s.shape(), (20, 20));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        server.send(&ToClient::Shutdown.encode()).unwrap();
+        assert_eq!(handle.join().unwrap().unwrap(), 1);
+    }
+
+    #[test]
+    fn private_client_withholds() {
+        let p = ProblemSpec::square(15, 2, 0.05).generate(2);
+        let cfg = ClientConfig {
+            id: 5,
+            m_block: p.observed.clone(),
+            hyper: FactorHyper::default_for(15, 15, 2),
+            n_frac: 1.0,
+            polish_sweeps: 0,
+            truth: None,
+            faults: FaultPlan::default(),
+            compression: Compression::None,
+            dp_sigma: 0.0,
+        };
+        let (mut server, handle) = spawn_client(cfg);
+        let _ = server.recv_timeout(Duration::from_secs(5)).unwrap(); // hello
+        let mut rng = Pcg64::new(3);
+        let u = Mat::gaussian(15, 2, &mut rng);
+        server.send(&ToClient::Finish { reveal: false, final_u: u }.encode()).unwrap();
+        let fin = ToServer::decode(&server.recv_timeout(Duration::from_secs(10)).unwrap()).unwrap();
+        assert_eq!(fin, ToServer::Withhold { client: 5 });
+        server.send(&ToClient::Shutdown.encode()).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn crash_plan_stops_responses() {
+        let p = ProblemSpec::square(15, 2, 0.05).generate(3);
+        let cfg = ClientConfig {
+            id: 1,
+            m_block: p.observed.clone(),
+            hyper: FactorHyper::default_for(15, 15, 2),
+            n_frac: 1.0,
+            polish_sweeps: 0,
+            truth: None,
+            faults: FaultPlan { crash_at_round: Some(1) },
+            compression: Compression::None,
+            dp_sigma: 0.0,
+        };
+        let (mut server, handle) = spawn_client(cfg);
+        let _ = server.recv_timeout(Duration::from_secs(5)).unwrap(); // hello
+        let mut rng = Pcg64::new(4);
+        let u = Mat::gaussian(15, 2, &mut rng);
+        // round 0 OK
+        server.send(&ToClient::Round { round: 0, k_local: 1, eta: 1e-3, u: u.clone() }.encode()).unwrap();
+        let _ = server.recv_timeout(Duration::from_secs(10)).unwrap();
+        // round 1: client crashes — no reply
+        server.send(&ToClient::Round { round: 1, k_local: 1, eta: 1e-3, u }.encode()).unwrap();
+        assert!(server.recv_timeout(Duration::from_millis(100)).is_err());
+        assert_eq!(handle.join().unwrap().unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_u_shape() {
+        let p = ProblemSpec::square(15, 2, 0.05).generate(4);
+        let cfg = ClientConfig {
+            id: 0,
+            m_block: p.observed.clone(),
+            hyper: FactorHyper::default_for(15, 15, 2),
+            n_frac: 1.0,
+            polish_sweeps: 0,
+            truth: None,
+            faults: FaultPlan::default(),
+            compression: Compression::None,
+            dp_sigma: 0.0,
+        };
+        let (mut server, handle) = spawn_client(cfg);
+        let _ = server.recv_timeout(Duration::from_secs(5)).unwrap();
+        let mut rng = Pcg64::new(5);
+        let bad_u = Mat::gaussian(7, 2, &mut rng); // wrong row count
+        server.send(&ToClient::Round { round: 0, k_local: 1, eta: 1e-3, u: bad_u }.encode()).unwrap();
+        let res = handle.join().unwrap();
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Update compression — an extension on the paper's "limited
+//! communication" axis (§2.1): the consensus factor is the only payload,
+//! so shrinking its wire format multiplies directly into Eq. 28.
+//!
+//! Codecs:
+//! - `None`  — f64 LE (the paper's accounting unit), 8 B/entry.
+//! - `F32`   — f32 LE, 4 B/entry. Loss ≪ the f32 PJRT path's own
+//!   rounding; effectively free 2×.
+//! - `Int8`  — per-column affine quantization (scale = max|x|/127),
+//!   1 B/entry + 8 B/column. ~8×; adds bounded noise ≤ scale/2 per
+//!   entry, which FedAvg averaging further attenuates — the ablation
+//!   bench quantifies the error-floor cost.
+//!
+//! Both directions (broadcast and update) use the same codec; it is part
+//! of the run configuration, not negotiated.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+
+use super::transport::framing::{put_f64, put_u32, put_u64, Reader};
+
+/// Wire codec for consensus-factor matrices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Compression {
+    #[default]
+    None,
+    F32,
+    Int8,
+}
+
+const TAG_NONE: u8 = 0;
+const TAG_F32: u8 = 1;
+const TAG_INT8: u8 = 2;
+
+impl Compression {
+    pub fn parse(s: &str) -> Result<Compression> {
+        Ok(match s {
+            "none" | "f64" => Compression::None,
+            "f32" => Compression::F32,
+            "int8" | "q8" => Compression::Int8,
+            other => bail!("unknown compression '{other}' (none|f32|int8)"),
+        })
+    }
+
+    /// Payload bytes for an r×c matrix under this codec (excl. header).
+    pub fn payload_bytes(&self, rows: usize, cols: usize) -> usize {
+        match self {
+            Compression::None => 8 * rows * cols,
+            Compression::F32 => 4 * rows * cols,
+            Compression::Int8 => rows * cols + 8 * cols,
+        }
+    }
+}
+
+/// Encode a matrix under `codec` (self-describing: tag + dims first).
+pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
+    buf.push(match codec {
+        Compression::None => TAG_NONE,
+        Compression::F32 => TAG_F32,
+        Compression::Int8 => TAG_INT8,
+    });
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    put_u64(buf, (m.rows() * m.cols()) as u64);
+    match codec {
+        Compression::None => {
+            for &x in m.as_slice() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Compression::F32 => {
+            for &x in m.as_slice() {
+                buf.extend_from_slice(&(x as f32).to_le_bytes());
+            }
+        }
+        Compression::Int8 => {
+            // per-column scales
+            let (rows, cols) = m.shape();
+            let mut scales = vec![0.0f64; cols];
+            for i in 0..rows {
+                for (j, s) in scales.iter_mut().enumerate() {
+                    *s = s.max(m[(i, j)].abs());
+                }
+            }
+            for s in &scales {
+                put_f64(buf, *s / 127.0);
+            }
+            for i in 0..rows {
+                for j in 0..cols {
+                    let scale = scales[j] / 127.0;
+                    let q = if scale > 0.0 {
+                        (m[(i, j)] / scale).round().clamp(-127.0, 127.0) as i8
+                    } else {
+                        0
+                    };
+                    buf.push(q as u8);
+                }
+            }
+        }
+    }
+}
+
+/// Decode a matrix written by [`put_mat_compressed`].
+pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
+    let tag = r.u8()?;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let len = r.u64()? as usize;
+    if len != rows * cols {
+        bail!("compressed matrix frame corrupt: {rows}x{cols} but payload {len}");
+    }
+    if len > (1usize << 27) {
+        bail!("compressed matrix frame too large: {len}");
+    }
+    let mut m = Mat::zeros(rows, cols);
+    match tag {
+        TAG_NONE => {
+            for i in 0..len {
+                let v = r.f64()?;
+                m.as_mut_slice()[i] = v;
+            }
+        }
+        TAG_F32 => {
+            for i in 0..len {
+                let b = [r.u8()?, r.u8()?, r.u8()?, r.u8()?];
+                m.as_mut_slice()[i] = f32::from_le_bytes(b) as f64;
+            }
+        }
+        TAG_INT8 => {
+            let mut scales = Vec::with_capacity(cols);
+            for _ in 0..cols {
+                scales.push(r.f64()?);
+            }
+            for i in 0..rows {
+                for j in 0..cols {
+                    let q = r.u8()? as i8;
+                    m[(i, j)] = q as f64 * scales[j];
+                }
+            }
+        }
+        t => bail!("unknown compression tag {t}"),
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn roundtrip(m: &Mat, codec: Compression) -> Mat {
+        let mut buf = Vec::new();
+        put_mat_compressed(&mut buf, m, codec);
+        let mut r = Reader::new(&buf);
+        let out = read_mat_compressed(&mut r).unwrap();
+        r.expect_end().unwrap();
+        out
+    }
+
+    #[test]
+    fn none_is_exact() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::gaussian(9, 4, &mut rng);
+        assert_eq!(roundtrip(&m, Compression::None), m);
+    }
+
+    #[test]
+    fn f32_within_single_precision() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::gaussian(9, 4, &mut rng);
+        let out = roundtrip(&m, Compression::F32);
+        let rel = (&out - &m).frob_norm() / m.frob_norm();
+        assert!(rel < 1e-7, "rel {rel}");
+    }
+
+    #[test]
+    fn int8_bounded_per_entry() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::gaussian(20, 5, &mut rng);
+        let out = roundtrip(&m, Compression::Int8);
+        for j in 0..5 {
+            let col_max = (0..20).map(|i| m[(i, j)].abs()).fold(0.0f64, f64::max);
+            let step = col_max / 127.0;
+            for i in 0..20 {
+                assert!(
+                    (out[(i, j)] - m[(i, j)]).abs() <= step / 2.0 + 1e-12,
+                    "entry ({i},{j}) err {} > step/2 {}",
+                    (out[(i, j)] - m[(i, j)]).abs(),
+                    step / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_handles_zero_columns() {
+        let m = Mat::zeros(6, 3);
+        assert_eq!(roundtrip(&m, Compression::Int8), m);
+    }
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Compression::None.payload_bytes(10, 4), 320);
+        assert_eq!(Compression::F32.payload_bytes(10, 4), 160);
+        assert_eq!(Compression::Int8.payload_bytes(10, 4), 72);
+        // encoded size = 17-byte header + payload
+        let mut rng = Pcg64::new(4);
+        let m = Mat::gaussian(10, 4, &mut rng);
+        for codec in [Compression::None, Compression::F32, Compression::Int8] {
+            let mut buf = Vec::new();
+            put_mat_compressed(&mut buf, &m, codec);
+            assert_eq!(buf.len(), 17 + codec.payload_bytes(10, 4), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut rng = Pcg64::new(5);
+        let m = Mat::gaussian(4, 4, &mut rng);
+        for codec in [Compression::None, Compression::F32, Compression::Int8] {
+            let mut buf = Vec::new();
+            put_mat_compressed(&mut buf, &m, codec);
+            buf.truncate(buf.len() - 2);
+            let mut r = Reader::new(&buf);
+            assert!(read_mat_compressed(&mut r).is_err(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Compression::parse("int8").unwrap(), Compression::Int8);
+        assert_eq!(Compression::parse("f32").unwrap(), Compression::F32);
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert!(Compression::parse("gzip").is_err());
+    }
+}

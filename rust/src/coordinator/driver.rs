@@ -1,0 +1,577 @@
+//! High-level DCF-PCA driver: partition the data, spawn client workers,
+//! run the server, assemble the result. This is the public entry point
+//! the examples, benches, and CLI use.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::factor::FactorHyper;
+use crate::algorithms::schedule::Schedule;
+use crate::algorithms::traits::{IterRecord, SolveResult};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::rpca::partition::ColumnPartition;
+use crate::rpca::problem::{ProblemSpec, RpcaProblem};
+
+use super::aggregate::Aggregation;
+use super::client::{run_client, ClientConfig, FaultPlan};
+use super::compress::Compression;
+use super::kernel::{LocalUpdateKernel, NativeKernel};
+use super::metrics::{CommStats, RoundRecord};
+use super::privacy::PrivacySpec;
+use super::server::{run_server, FaultPolicy, ServerConfig, ServerOutcome};
+use super::transport::inproc::pair;
+use super::transport::Channel;
+
+/// How clients' column blocks are formed.
+#[derive(Clone, Debug)]
+pub enum PartitionSpec {
+    Even,
+    Sizes(Vec<usize>),
+    /// random uneven blocks (seeded)
+    RandomUneven { seed: u64 },
+}
+
+/// Which compute backend clients use.
+#[derive(Clone)]
+pub enum KernelSpec {
+    /// pure-rust reference kernels
+    Native,
+    /// a shared, already-constructed kernel (e.g. the PJRT artifact
+    /// executor from `runtime::executor`)
+    Custom(Arc<dyn LocalUpdateKernel + Sync>),
+}
+
+impl std::fmt::Debug for KernelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelSpec::Native => write!(f, "Native"),
+            KernelSpec::Custom(k) => write!(f, "Custom({})", k.name()),
+        }
+    }
+}
+
+/// Full configuration of a DCF-PCA run.
+#[derive(Clone, Debug)]
+pub struct DcfPcaConfig {
+    /// number of clients E
+    pub clients: usize,
+    /// communication rounds T
+    pub rounds: usize,
+    /// local iterations K per round
+    pub k_local: usize,
+    pub hyper: FactorHyper,
+    pub schedule: Schedule,
+    pub aggregation: Aggregation,
+    pub partition: PartitionSpec,
+    pub privacy: PrivacySpec,
+    pub kernel: KernelSpec,
+    /// debias polish sweeps before reveal
+    pub polish_sweeps: usize,
+    /// seed for U⁰ (and the uneven partition if used)
+    pub seed: u64,
+    pub fault_policy: FaultPolicy,
+    /// per-client crash plans (failure injection in tests)
+    pub faults: Vec<FaultPlan>,
+    pub round_timeout: Duration,
+    /// stop early when tracked err drops below this
+    pub err_stop: Option<f64>,
+    /// wire codec for the per-round consensus factors (both directions)
+    pub compression: Compression,
+    /// fraction of clients sampled each round (FedAvg partial
+    /// participation; 1.0 = Algorithm 1's full participation)
+    pub participation: f64,
+    /// σ of gaussian noise each client adds to its upload (0.0 = off)
+    pub dp_sigma: f64,
+}
+
+impl DcfPcaConfig {
+    /// Paper-flavoured defaults for a given problem spec: E=10, K=2,
+    /// adaptive step, uniform FedAvg, everyone public, native kernels.
+    pub fn default_for(spec: &ProblemSpec) -> Self {
+        DcfPcaConfig {
+            clients: 10.min(spec.n),
+            rounds: 50,
+            k_local: 2,
+            hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
+            schedule: Schedule::Adaptive { eta0: 0.9 },
+            aggregation: Aggregation::Uniform,
+            partition: PartitionSpec::Even,
+            privacy: PrivacySpec::all_public(),
+            kernel: KernelSpec::Native,
+            polish_sweeps: 3,
+            seed: 0xDCF,
+            fault_policy: FaultPolicy::Strict,
+            faults: Vec::new(),
+            round_timeout: Duration::from_secs(600),
+            err_stop: None,
+            compression: Compression::None,
+            participation: 1.0,
+            dp_sigma: 0.0,
+        }
+    }
+
+    pub fn with_clients(mut self, e: usize) -> Self {
+        self.clients = e;
+        self
+    }
+
+    pub fn with_rounds(mut self, t: usize) -> Self {
+        self.rounds = t;
+        self
+    }
+
+    pub fn with_k_local(mut self, k: usize) -> Self {
+        self.k_local = k;
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_privacy(mut self, p: PrivacySpec) -> Self {
+        self.privacy = p;
+        self
+    }
+
+    pub fn validate(&self, m: usize, n: usize) -> Result<()> {
+        if self.clients == 0 || self.clients > n {
+            bail!("clients must be in 1..=n, got {} for n={n}", self.clients);
+        }
+        if self.rounds == 0 || self.k_local == 0 {
+            bail!("rounds and k_local must be positive");
+        }
+        if self.hyper.rank == 0 || self.hyper.rank > m.min(n) {
+            bail!("rank {} out of range", self.hyper.rank);
+        }
+        if !self.faults.is_empty() && self.faults.len() != self.clients {
+            bail!("faults must be empty or one per client");
+        }
+        if !(0.0 < self.participation && self.participation <= 1.0) {
+            bail!("participation must be in (0, 1], got {}", self.participation);
+        }
+        if self.dp_sigma < 0.0 {
+            bail!("dp_sigma must be ≥ 0");
+        }
+        if !self.hyper.satisfies_theorem2(m, n) {
+            crate::log_warn!(
+                "driver",
+                "hyperparameters violate Theorem 2 (ρ² > λ²mn): exact recovery impossible"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Result of a DCF-PCA run.
+#[derive(Clone, Debug)]
+pub struct DcfPcaResult {
+    /// final consensus factor U^(T)
+    pub u: Mat,
+    /// assembled L over *public* columns (private blocks left as zeros)
+    pub l: Mat,
+    /// assembled S over public columns (private blocks zeros)
+    pub s: Mat,
+    /// which clients revealed
+    pub revealed_clients: Vec<usize>,
+    pub withheld_clients: Vec<usize>,
+    /// Eq. 30 error over the public blocks, if ground truth was provided
+    pub final_error: Option<f64>,
+    pub rounds: Vec<RoundRecord>,
+    pub comm: CommStats,
+    pub partition: ColumnPartition,
+    pub wall: Duration,
+}
+
+impl DcfPcaResult {
+    /// Error-vs-round curve (Fig. 1 / Fig. 4 series).
+    pub fn error_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.err.map(|e| (r.round, e)))
+            .collect()
+    }
+
+    /// Convert to the common `SolveResult` shape for solver comparisons.
+    pub fn to_solve_result(&self) -> SolveResult {
+        SolveResult {
+            l: self.l.clone(),
+            s: self.s.clone(),
+            history: self
+                .rounds
+                .iter()
+                .map(|r| IterRecord {
+                    iter: r.round,
+                    err: r.err,
+                    objective: f64::NAN,
+                    grad_norm: r.mean_grad_norm,
+                    elapsed: r.round_secs,
+                })
+                .collect(),
+            iterations: self.rounds.len(),
+            converged: false,
+            wall: self.wall,
+            final_error: self.final_error,
+        }
+    }
+}
+
+/// Run DCF-PCA on a generated problem (ground truth enables per-round
+/// error telemetry). Clients run on threads over the in-proc transport.
+pub fn run_dcf_pca(problem: &RpcaProblem, cfg: &DcfPcaConfig) -> Result<DcfPcaResult> {
+    run_dcf_pca_on(
+        &problem.observed,
+        Some(problem),
+        cfg,
+    )
+}
+
+/// Run DCF-PCA on a raw observed matrix (no ground truth, no error
+/// telemetry) — the "production" entry point.
+pub fn run_dcf_pca_raw(observed: &Mat, cfg: &DcfPcaConfig) -> Result<DcfPcaResult> {
+    run_dcf_pca_on(observed, None, cfg)
+}
+
+fn make_partition(n: usize, cfg: &DcfPcaConfig) -> Result<ColumnPartition> {
+    Ok(match &cfg.partition {
+        PartitionSpec::Even => ColumnPartition::even(n, cfg.clients),
+        PartitionSpec::Sizes(sizes) => {
+            if sizes.iter().sum::<usize>() != n || sizes.len() != cfg.clients {
+                bail!("partition sizes must sum to n={n} over {} clients", cfg.clients);
+            }
+            ColumnPartition::from_sizes(sizes)
+        }
+        PartitionSpec::RandomUneven { seed } => {
+            let mut rng = Pcg64::new(*seed);
+            ColumnPartition::random_uneven(n, cfg.clients, &mut rng)
+        }
+    })
+}
+
+fn run_dcf_pca_on(
+    observed: &Mat,
+    truth: Option<&RpcaProblem>,
+    cfg: &DcfPcaConfig,
+) -> Result<DcfPcaResult> {
+    let (m, n) = observed.shape();
+    cfg.validate(m, n)?;
+    let start = Instant::now();
+    let partition = make_partition(n, cfg)?;
+    let blocks = partition.split(observed);
+    let truth_blocks: Option<(Vec<Mat>, Vec<Mat>)> =
+        truth.map(|p| (partition.split(&p.l0), partition.split(&p.s0)));
+
+    // spawn clients
+    let mut server_channels: Vec<Box<dyn Channel>> = Vec::with_capacity(cfg.clients);
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for (i, block) in blocks.into_iter().enumerate() {
+        let (server_side, mut client_side) = pair();
+        server_channels.push(Box::new(server_side));
+        let client_cfg = ClientConfig {
+            id: i,
+            n_frac: block.cols() as f64 / n as f64,
+            m_block: block,
+            hyper: cfg.hyper,
+            polish_sweeps: cfg.polish_sweeps,
+            truth: truth_blocks
+                .as_ref()
+                .map(|(l0s, s0s)| (l0s[i].clone(), s0s[i].clone())),
+            faults: cfg.faults.get(i).copied().unwrap_or_default(),
+            compression: cfg.compression,
+            dp_sigma: cfg.dp_sigma,
+        };
+        let kernel = cfg.kernel.clone();
+        handles.push(std::thread::spawn(move || {
+            let k: &dyn LocalUpdateKernel = match &kernel {
+                KernelSpec::Native => &NativeKernel,
+                KernelSpec::Custom(k) => k.as_ref(),
+            };
+            run_client(&mut client_side, client_cfg, k)
+        }));
+    }
+
+    // server
+    let err_denominator = truth.map(|p| p.l0.frob_norm_sq() + p.s0.frob_norm_sq());
+    let server_cfg = ServerConfig {
+        rounds: cfg.rounds,
+        k_local: cfg.k_local,
+        rank: cfg.hyper.rank,
+        m,
+        schedule: cfg.schedule,
+        aggregation: cfg.aggregation,
+        privacy: cfg.privacy.clone(),
+        seed: cfg.seed,
+        round_timeout: cfg.round_timeout,
+        fault_policy: cfg.fault_policy,
+        err_denominator,
+        err_stop: cfg.err_stop,
+        compression: cfg.compression,
+        participation: cfg.participation,
+    };
+    let outcome: ServerOutcome = run_server(&mut server_channels, &server_cfg)?;
+
+    for h in handles {
+        match h.join() {
+            Ok(res) => {
+                res?;
+            }
+            Err(_) => bail!("client thread panicked"),
+        }
+    }
+
+    // assemble public blocks
+    let mut l = Mat::zeros(m, n);
+    let mut s = Mat::zeros(m, n);
+    let mut revealed_clients = Vec::new();
+    for (i, l_i, s_i) in &outcome.revealed {
+        let (a, _) = partition.range(*i);
+        l.set_cols_range(a, l_i);
+        s.set_cols_range(a, s_i);
+        revealed_clients.push(*i);
+    }
+
+    // error over public columns only
+    let final_error = truth.map(|p| {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for &i in &revealed_clients {
+            let (a, b) = partition.range(i);
+            let l0_i = p.l0.cols_range(a, b);
+            let s0_i = p.s0.cols_range(a, b);
+            num += (&l.cols_range(a, b) - &l0_i).frob_norm_sq()
+                + (&s.cols_range(a, b) - &s0_i).frob_norm_sq();
+            den += l0_i.frob_norm_sq() + s0_i.frob_norm_sq();
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            f64::NAN
+        }
+    });
+
+    Ok(DcfPcaResult {
+        u: outcome.u,
+        l,
+        s,
+        revealed_clients,
+        withheld_clients: outcome.withheld,
+        final_error,
+        rounds: outcome.rounds,
+        comm: outcome.comm,
+        partition,
+        wall: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_distributed_small() {
+        let spec = ProblemSpec::square(60, 3, 0.05);
+        let p = spec.generate(7);
+        let cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(40);
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        let err = res.final_error.unwrap();
+        assert!(err < 1e-3, "distributed relative error {err}");
+        assert_eq!(res.revealed_clients.len(), 5);
+        assert!(res.withheld_clients.is_empty());
+    }
+
+    #[test]
+    fn per_round_error_decreases() {
+        let spec = ProblemSpec::square(50, 3, 0.05);
+        let p = spec.generate(8);
+        let cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(30);
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        let curve = res.error_curve();
+        assert_eq!(curve.len(), 30);
+        assert!(curve.last().unwrap().1 < 0.5 * curve.first().unwrap().1);
+    }
+
+    #[test]
+    fn comm_bytes_match_eq28() {
+        // Eq. 28: per-round payload = 2·E·m·r floats (+ fixed headers)
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(9);
+        let e = 4;
+        let cfg = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(10);
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        use crate::coordinator::protocol::{round_wire_size, update_wire_size};
+        let per_round_expected =
+            (e * round_wire_size(40, 2) + e * update_wire_size(40, 2)) as u64;
+        for r in &res.rounds {
+            assert_eq!(r.bytes_down + r.bytes_up, per_round_expected, "round {}", r.round);
+        }
+        // matrix payload dominates: 2Emr f64s
+        let payload = (2 * e * 40 * 2 * 8) as u64;
+        assert!(per_round_expected >= payload);
+        assert!(per_round_expected < payload + (e as u64) * 200, "headers stay small");
+    }
+
+    #[test]
+    fn privacy_blocks_withheld() {
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(10);
+        let cfg = DcfPcaConfig::default_for(&spec)
+            .with_clients(4)
+            .with_rounds(15)
+            .with_privacy(PrivacySpec::with_private([1, 2]));
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        assert_eq!(res.revealed_clients, vec![0, 3]);
+        assert_eq!(res.withheld_clients, vec![1, 2]);
+        // withheld columns must remain zero in the assembled output
+        let (a, b) = res.partition.range(1);
+        for j in a..b {
+            for i in 0..40 {
+                assert_eq!(res.l[(i, j)], 0.0);
+            }
+        }
+        // error over public blocks still small
+        assert!(res.final_error.unwrap() < 5e-3);
+    }
+
+    #[test]
+    fn uneven_partition_works() {
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(11);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(3).with_rounds(25);
+        cfg.partition = PartitionSpec::Sizes(vec![5, 30, 5]);
+        cfg.aggregation = Aggregation::WeightedByCols;
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        assert!(res.final_error.unwrap() < 5e-3);
+    }
+
+    #[test]
+    fn skip_missing_tolerates_crash() {
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(12);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(20);
+        cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.round_timeout = Duration::from_secs(5);
+        cfg.faults = vec![
+            FaultPlan::default(),
+            FaultPlan { crash_at_round: Some(5) },
+            FaultPlan::default(),
+            FaultPlan::default(),
+        ];
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        // crashed client never reveals; the others still recover
+        assert!(res.withheld_clients.contains(&1));
+        assert_eq!(res.revealed_clients.len(), 3);
+        assert!(res.final_error.unwrap() < 1e-2);
+        // participation drops after the crash
+        assert!(res.rounds.iter().any(|r| r.participants == 3));
+    }
+
+    #[test]
+    fn strict_policy_fails_on_crash() {
+        let spec = ProblemSpec::square(30, 2, 0.05);
+        let p = spec.generate(13);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(2).with_rounds(10);
+        cfg.fault_policy = FaultPolicy::Strict;
+        cfg.round_timeout = Duration::from_millis(300);
+        cfg.faults = vec![FaultPlan { crash_at_round: Some(2) }, FaultPlan::default()];
+        assert!(run_dcf_pca(&p, &cfg).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = ProblemSpec::square(30, 2, 0.05);
+        let p = spec.generate(14);
+        let cfg = DcfPcaConfig::default_for(&spec).with_clients(3).with_rounds(8);
+        let a = run_dcf_pca(&p, &cfg).unwrap();
+        let b = run_dcf_pca(&p, &cfg).unwrap();
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.l, b.l);
+    }
+
+    #[test]
+    fn compressed_runs_recover_and_save_bytes() {
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(21);
+        let mut base = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(20);
+        let plain = run_dcf_pca(&p, &base).unwrap();
+        base.compression = crate::coordinator::Compression::Int8;
+        let q8 = run_dcf_pca(&p, &base).unwrap();
+        // compare round-loop traffic only (comm totals also include the
+        // one-shot lossless Reveal payloads at the end)
+        let round_bytes = |r: &DcfPcaResult| {
+            r.rounds.iter().map(|x| (x.bytes_down + x.bytes_up) as f64).sum::<f64>()
+                / r.rounds.len() as f64
+        };
+        assert!(round_bytes(&q8) * 3.9 < round_bytes(&plain));
+        assert!(q8.final_error.unwrap() < 5e-2, "int8 err {:?}", q8.final_error);
+        base.compression = crate::coordinator::Compression::F32;
+        let f32run = run_dcf_pca(&p, &base).unwrap();
+        // f32 is effectively lossless relative to the f64 run
+        let (a, b) = (f32run.final_error.unwrap(), plain.final_error.unwrap());
+        assert!((a - b).abs() / b.max(1e-12) < 0.5, "f32 {a} vs f64 {b}");
+    }
+
+    #[test]
+    fn partial_participation_still_recovers() {
+        let spec = ProblemSpec::square(50, 3, 0.05);
+        let p = spec.generate(22);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(60);
+        cfg.participation = 0.4; // 2 of 5 clients per round
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        assert!(res.final_error.unwrap() < 1e-2, "err {:?}", res.final_error);
+        // rounds really did involve only 2 participants
+        assert!(res.rounds.iter().all(|r| r.participants == 2));
+        // and per-round bytes shrink accordingly
+        let full_cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(10);
+        let full = run_dcf_pca(&p, &full_cfg).unwrap();
+        let round_bytes = |r: &DcfPcaResult| {
+            r.rounds.iter().map(|x| (x.bytes_down + x.bytes_up) as f64).sum::<f64>()
+                / r.rounds.len() as f64
+        };
+        assert!(round_bytes(&res) < 0.5 * round_bytes(&full));
+    }
+
+    #[test]
+    fn dp_noise_degrades_gracefully() {
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(23);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(25);
+        cfg.dp_sigma = 1e-3;
+        let noisy = run_dcf_pca(&p, &cfg).unwrap();
+        assert!(noisy.final_error.unwrap() < 5e-2, "err {:?}", noisy.final_error);
+        // determinism holds even with noise (seeded per client+round)
+        let noisy2 = run_dcf_pca(&p, &cfg).unwrap();
+        assert_eq!(noisy.u, noisy2.u);
+    }
+
+    #[test]
+    fn invalid_participation_rejected() {
+        let spec = ProblemSpec::square(30, 2, 0.05);
+        let p = spec.generate(24);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(3).with_rounds(5);
+        cfg.participation = 0.0;
+        assert!(run_dcf_pca(&p, &cfg).is_err());
+        cfg.participation = 1.5;
+        assert!(run_dcf_pca(&p, &cfg).is_err());
+    }
+
+    #[test]
+    fn err_stop_halts_early() {
+        let spec = ProblemSpec::square(50, 3, 0.05);
+        let p = spec.generate(15);
+        let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(200);
+        // pre-polish round telemetry carries the soft-threshold bias floor
+        // (≈ s·mn·λ²/den ≈ 1.2e-3 at this scale) — stop just above it
+        cfg.err_stop = Some(3e-3);
+        let res = run_dcf_pca(&p, &cfg).unwrap();
+        assert!(res.rounds.len() < 200, "stopped at {}", res.rounds.len());
+    }
+}

@@ -1,0 +1,149 @@
+//! Client-side compute backend abstraction.
+//!
+//! A `LocalUpdateKernel` executes one *local epoch* (Algorithm 1's inner
+//! `for k = 0..K` loop): K repetitions of {inner solve for (V_i, S_i),
+//! gradient step on U}. Two implementations exist:
+//!
+//! - [`NativeKernel`] (here) — pure-rust f64, the reference semantics.
+//! - `runtime::executor::PjrtKernel` — executes the AOT-compiled
+//!   JAX/Pallas artifact through the PJRT C API (f32), zero python at
+//!   runtime. Parity between the two is tested in
+//!   `rust/tests/runtime_parity.rs`.
+
+use anyhow::Result;
+
+use crate::algorithms::factor::{
+    inner_solve, lipschitz_estimate, u_gradient, ClientState, FactorHyper,
+};
+use crate::linalg::Mat;
+
+/// Outcome of one local epoch.
+#[derive(Clone, Debug)]
+pub struct EpochOutput {
+    /// locally advanced consensus factor U_i (after K gradient steps)
+    pub u: Mat,
+    /// ‖∇_U L_i‖_F at the last local step (Theorem 1 telemetry)
+    pub grad_norm: f64,
+    /// curvature estimate σ_max(V_iᵀV_i)+ρ after the epoch (adaptive η)
+    pub lipschitz: f64,
+}
+
+/// One client-side local epoch: K × {solve Eq. 7, step Eq. 8}.
+pub trait LocalUpdateKernel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Advance `(u, state)` by `k_local` local iterations with fixed step
+    /// `eta`. `n_frac` = n_i/n. Mutates `state` (V_i, S_i persist across
+    /// rounds per Algorithm 1) and returns the updated U_i.
+    fn local_epoch(
+        &self,
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        eta: f64,
+        k_local: usize,
+    ) -> Result<EpochOutput>;
+}
+
+/// Pure-rust reference backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeKernel;
+
+impl LocalUpdateKernel for NativeKernel {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn local_epoch(
+        &self,
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        eta: f64,
+        k_local: usize,
+    ) -> Result<EpochOutput> {
+        let mut u_i = u.clone();
+        let mut grad_norm = 0.0;
+        for _ in 0..k_local {
+            inner_solve(&u_i, m_block, state, hyper);
+            let grad = u_gradient(&u_i, m_block, state, hyper, n_frac);
+            grad_norm = grad.frob_norm();
+            u_i.axpy(-eta, &grad);
+        }
+        let lipschitz = lipschitz_estimate(state, hyper);
+        Ok(EpochOutput { u: u_i, grad_norm, lipschitz })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::rpca::problem::ProblemSpec;
+
+    #[test]
+    fn epoch_advances_u() {
+        let p = ProblemSpec::square(30, 2, 0.05).generate(1);
+        let hyper = FactorHyper::default_for(30, 30, 2);
+        let mut rng = Pcg64::new(2);
+        let u = Mat::gaussian(30, 2, &mut rng);
+        let mut state = ClientState::zeros(30, 30, 2);
+        let out = NativeKernel
+            .local_epoch(&u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 2)
+            .unwrap();
+        assert_ne!(out.u, u);
+        assert!(out.grad_norm > 0.0);
+        assert!(out.lipschitz > hyper.rho);
+    }
+
+    #[test]
+    fn k1_equals_single_local_iteration() {
+        let p = ProblemSpec::square(25, 2, 0.05).generate(3);
+        let hyper = FactorHyper::default_for(25, 25, 2);
+        let mut rng = Pcg64::new(4);
+        let u = Mat::gaussian(25, 2, &mut rng);
+
+        let mut state_a = ClientState::zeros(25, 25, 2);
+        let out = NativeKernel
+            .local_epoch(&u, &p.observed, &mut state_a, &hyper, 1.0, 1e-3, 1)
+            .unwrap();
+
+        let mut state_b = ClientState::zeros(25, 25, 2);
+        let mut u_b = u.clone();
+        let gn = crate::algorithms::factor::local_iteration(
+            &mut u_b, &p.observed, &mut state_b, &hyper, 1.0, 1e-3,
+        );
+        assert_eq!(out.u, u_b);
+        assert_eq!(state_a.v, state_b.v);
+        assert_eq!(state_a.s, state_b.s);
+        assert!((out.grad_norm - gn).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_steps_compose() {
+        // K=3 epoch == three K=1 epochs chained
+        let p = ProblemSpec::square(20, 2, 0.05).generate(5);
+        let hyper = FactorHyper::default_for(20, 20, 2);
+        let mut rng = Pcg64::new(6);
+        let u0 = Mat::gaussian(20, 2, &mut rng);
+
+        let mut state_a = ClientState::zeros(20, 20, 2);
+        let out_a = NativeKernel
+            .local_epoch(&u0, &p.observed, &mut state_a, &hyper, 1.0, 5e-4, 3)
+            .unwrap();
+
+        let mut state_b = ClientState::zeros(20, 20, 2);
+        let mut u_b = u0;
+        for _ in 0..3 {
+            let out = NativeKernel
+                .local_epoch(&u_b, &p.observed, &mut state_b, &hyper, 1.0, 5e-4, 1)
+                .unwrap();
+            u_b = out.u;
+        }
+        assert_eq!(out_a.u, u_b);
+    }
+}

@@ -1,0 +1,64 @@
+//! Round-level telemetry collected by the server: the data series behind
+//! Fig. 1 / Fig. 4 (err vs round) and the §3.4 communication accounting.
+
+/// One communication round's record.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Eq. 30 error assembled from client telemetry (None without truth)
+    pub err: Option<f64>,
+    /// mean over clients of ‖∇_U L_i‖_F at the last local step
+    pub mean_grad_norm: f64,
+    /// consensus dispersion max_i ‖U_i − Ū‖/‖Ū‖ before averaging
+    pub dispersion: f64,
+    /// step size used this round
+    pub eta: f64,
+    /// wall-clock seconds for the whole round (broadcast → aggregate)
+    pub round_secs: f64,
+    /// max over clients of local compute seconds (the critical path a
+    /// real deployment would see; clients run sequentially here)
+    pub max_client_secs: f64,
+    /// sum over clients of local compute seconds (single-device total)
+    pub sum_client_secs: f64,
+    /// bytes server → clients this round
+    pub bytes_down: u64,
+    /// bytes clients → server this round
+    pub bytes_up: u64,
+    /// clients that contributed an update this round
+    pub participants: usize,
+}
+
+/// Whole-run communication statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub total_down: u64,
+    pub total_up: u64,
+    pub rounds: usize,
+}
+
+impl CommStats {
+    pub fn total(&self) -> u64 {
+        self.total_down + self.total_up
+    }
+
+    pub fn per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.total() as f64 / self.rounds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_stats_totals() {
+        let c = CommStats { total_down: 100, total_up: 50, rounds: 5 };
+        assert_eq!(c.total(), 150);
+        assert!((c.per_round() - 30.0).abs() < 1e-12);
+        assert_eq!(CommStats::default().per_round(), 0.0);
+    }
+}

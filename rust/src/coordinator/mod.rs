@@ -1,0 +1,29 @@
+//! L3 — the paper's system contribution: the DCF-PCA federated
+//! coordinator (Algorithm 1).
+//!
+//! - [`server`]: outer loop — broadcast U, gather U_i, FedAvg (Eq. 9)
+//! - [`client`]: worker owning (M_i, V_i, S_i), runs K local iterations
+//! - [`kernel`]: compute backend (native rust or the PJRT artifact)
+//! - [`transport`]: byte-counted channels (in-proc mpsc, TCP)
+//! - [`protocol`]: wire messages — structurally unable to leak M_i
+//! - [`aggregate`], [`privacy`], [`metrics`]: Eq. 9 variants, §2.2
+//!   privacy sets, round telemetry
+//! - [`driver`]: the one-call entry point gluing all of it together
+
+pub mod aggregate;
+pub mod client;
+pub mod compress;
+pub mod driver;
+pub mod kernel;
+pub mod metrics;
+pub mod privacy;
+pub mod protocol;
+pub mod server;
+pub mod transport;
+
+pub use aggregate::Aggregation;
+pub use compress::Compression;
+pub use driver::{run_dcf_pca, run_dcf_pca_raw, DcfPcaConfig, DcfPcaResult, KernelSpec, PartitionSpec};
+pub use kernel::{LocalUpdateKernel, NativeKernel};
+pub use privacy::PrivacySpec;
+pub use server::{FaultPolicy, ServerConfig};

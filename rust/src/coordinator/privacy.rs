@@ -1,0 +1,63 @@
+//! Privacy sets (paper §2.2): DCF-PCA learns the consensus factor U from
+//! everyone but reveals recovered blocks `(L_i, S_i)` only for clients in
+//! `I_public`; for `i ∈ I_private`, nothing derived from `M_i` beyond the
+//! m×r consensus updates ever leaves the client.
+
+use std::collections::BTreeSet;
+
+/// Which clients may reveal their recovered blocks.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrivacySpec {
+    private: BTreeSet<usize>,
+}
+
+impl PrivacySpec {
+    /// Everyone public (the default — matches the paper's main runs).
+    pub fn all_public() -> Self {
+        PrivacySpec::default()
+    }
+
+    pub fn with_private(clients: impl IntoIterator<Item = usize>) -> Self {
+        PrivacySpec { private: clients.into_iter().collect() }
+    }
+
+    pub fn is_private(&self, client: usize) -> bool {
+        self.private.contains(&client)
+    }
+
+    pub fn is_public(&self, client: usize) -> bool {
+        !self.is_private(client)
+    }
+
+    pub fn private_clients(&self) -> impl Iterator<Item = usize> + '_ {
+        self.private.iter().copied()
+    }
+
+    pub fn num_private(&self) -> usize {
+        self.private.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_all_public() {
+        let p = PrivacySpec::all_public();
+        for i in 0..10 {
+            assert!(p.is_public(i));
+        }
+        assert_eq!(p.num_private(), 0);
+    }
+
+    #[test]
+    fn private_set_respected() {
+        let p = PrivacySpec::with_private([1, 3]);
+        assert!(p.is_private(1));
+        assert!(p.is_private(3));
+        assert!(p.is_public(0));
+        assert!(p.is_public(2));
+        assert_eq!(p.private_clients().collect::<Vec<_>>(), vec![1, 3]);
+    }
+}

@@ -1,0 +1,276 @@
+//! Server⇄client message protocol (Algorithm 1's communication pattern).
+//!
+//! By construction the protocol can only carry what Algorithm 1 shares:
+//! the consensus factor `U` downstream and the updated `U_i` upstream —
+//! there is *no message variant* that could carry `M_i`, `V_i` or `S_i`
+//! except the explicit opt-in `Reveal` reply for public clients at the
+//! very end. Privacy (§2.2) is therefore structural, and the byte
+//! counters verify Eq. 28 exactly.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+
+use super::compress::{put_mat_compressed, read_mat_compressed, Compression};
+use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
+
+/// Downstream: server → client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToClient {
+    /// Round t: here is U^(t); run K local iterations with step η.
+    Round { round: u32, k_local: u32, eta: f64, u: Mat },
+    /// Training done: reply `Reveal` if you are a public client,
+    /// `Withhold` otherwise. `final_u` is U^(T) for computing L_i.
+    Finish { reveal: bool, final_u: Mat },
+    /// Orderly shutdown (no reply expected).
+    Shutdown,
+}
+
+/// Upstream: client → server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToServer {
+    /// Hello: client id + number of columns held (for weighted
+    /// aggregation and n_i/n bookkeeping).
+    Hello { client: u32, cols: u64 },
+    /// End-of-round update: the locally advanced U_i plus telemetry
+    /// scalars (gradient norm, curvature estimate, err contribution).
+    Update {
+        client: u32,
+        round: u32,
+        u: Mat,
+        grad_norm: f64,
+        lipschitz: f64,
+        /// telemetry-only: ‖L_i−L₀ᵢ‖² + ‖S_i−S₀ᵢ‖² if ground truth was
+        /// provisioned for evaluation, else NaN
+        err_num: f64,
+        /// wall seconds spent in local compute this round
+        local_secs: f64,
+    },
+    /// Public client's final blocks (L_i, S_i).
+    Reveal { client: u32, l: Mat, s: Mat },
+    /// Private client's refusal (paper §2.2: M_i stays secret).
+    Withhold { client: u32 },
+}
+
+const TAG_ROUND: u8 = 1;
+const TAG_FINISH: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+const TAG_HELLO: u8 = 16;
+const TAG_UPDATE: u8 = 17;
+const TAG_REVEAL: u8 = 18;
+const TAG_WITHHOLD: u8 = 19;
+
+impl ToClient {
+    /// Encode with the default (lossless) codec.
+    pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(Compression::None)
+    }
+
+    /// Encode; `codec` applies to the consensus factor in `Round` (the
+    /// per-round payload — Eq. 28). `Finish.final_u` stays lossless: it
+    /// is sent once and defines the revealed L_i.
+    pub fn encode_with(&self, codec: Compression) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            ToClient::Round { round, k_local, eta, u } => {
+                buf.push(TAG_ROUND);
+                put_u32(&mut buf, *round);
+                put_u32(&mut buf, *k_local);
+                put_f64(&mut buf, *eta);
+                put_mat_compressed(&mut buf, u, codec);
+            }
+            ToClient::Finish { reveal, final_u } => {
+                buf.push(TAG_FINISH);
+                buf.push(u8::from(*reveal));
+                put_mat(&mut buf, final_u);
+            }
+            ToClient::Shutdown => buf.push(TAG_SHUTDOWN),
+        }
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ToClient> {
+        let mut r = Reader::new(bytes);
+        let msg = match r.u8()? {
+            TAG_ROUND => ToClient::Round {
+                round: r.u32()?,
+                k_local: r.u32()?,
+                eta: r.f64()?,
+                u: read_mat_compressed(&mut r)?,
+            },
+            TAG_FINISH => ToClient::Finish { reveal: r.u8()? != 0, final_u: r.mat()? },
+            TAG_SHUTDOWN => ToClient::Shutdown,
+            t => bail!("unknown ToClient tag {t}"),
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+impl ToServer {
+    /// Encode with the default (lossless) codec.
+    pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(Compression::None)
+    }
+
+    /// Encode; `codec` applies to the consensus factor in `Update`.
+    /// `Reveal` blocks stay lossless (they ARE the output).
+    pub fn encode_with(&self, codec: Compression) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            ToServer::Hello { client, cols } => {
+                buf.push(TAG_HELLO);
+                put_u32(&mut buf, *client);
+                put_u64(&mut buf, *cols);
+            }
+            ToServer::Update { client, round, u, grad_norm, lipschitz, err_num, local_secs } => {
+                buf.push(TAG_UPDATE);
+                put_u32(&mut buf, *client);
+                put_u32(&mut buf, *round);
+                put_f64(&mut buf, *grad_norm);
+                put_f64(&mut buf, *lipschitz);
+                put_f64(&mut buf, *err_num);
+                put_f64(&mut buf, *local_secs);
+                put_mat_compressed(&mut buf, u, codec);
+            }
+            ToServer::Reveal { client, l, s } => {
+                buf.push(TAG_REVEAL);
+                put_u32(&mut buf, *client);
+                put_mat(&mut buf, l);
+                put_mat(&mut buf, s);
+            }
+            ToServer::Withhold { client } => {
+                buf.push(TAG_WITHHOLD);
+                put_u32(&mut buf, *client);
+            }
+        }
+        buf
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ToServer> {
+        let mut r = Reader::new(bytes);
+        let msg = match r.u8()? {
+            TAG_HELLO => ToServer::Hello { client: r.u32()?, cols: r.u64()? },
+            TAG_UPDATE => ToServer::Update {
+                client: r.u32()?,
+                round: r.u32()?,
+                grad_norm: r.f64()?,
+                lipschitz: r.f64()?,
+                err_num: r.f64()?,
+                local_secs: r.f64()?,
+                u: read_mat_compressed(&mut r)?,
+            },
+            TAG_REVEAL => ToServer::Reveal { client: r.u32()?, l: r.mat()?, s: r.mat()? },
+            TAG_WITHHOLD => ToServer::Withhold { client: r.u32()? },
+            t => bail!("unknown ToServer tag {t}"),
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+/// Bytes of a compressed-matrix field (tag + dims header + payload).
+fn compressed_mat_size(m: usize, r: usize, codec: Compression) -> usize {
+    17 + codec.payload_bytes(m, r)
+}
+
+/// Wire size of a round broadcast for an m×r consensus factor — the
+/// "Emr floats downstream" half of Eq. 28 plus the fixed header.
+pub fn round_wire_size(m: usize, r: usize) -> usize {
+    round_wire_size_with(m, r, Compression::None)
+}
+
+pub fn round_wire_size_with(m: usize, r: usize, codec: Compression) -> usize {
+    1 + 4 + 4 + 8 + compressed_mat_size(m, r, codec)
+}
+
+/// Wire size of a client update — the upstream half of Eq. 28.
+pub fn update_wire_size(m: usize, r: usize) -> usize {
+    update_wire_size_with(m, r, Compression::None)
+}
+
+pub fn update_wire_size_with(m: usize, r: usize, codec: Compression) -> usize {
+    1 + 4 + 4 + 8 * 4 + compressed_mat_size(m, r, codec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn to_client_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let u = Mat::gaussian(6, 3, &mut rng);
+        for msg in [
+            ToClient::Round { round: 7, k_local: 2, eta: 0.05, u: u.clone() },
+            ToClient::Finish { reveal: true, final_u: u.clone() },
+            ToClient::Finish { reveal: false, final_u: u },
+            ToClient::Shutdown,
+        ] {
+            let bytes = msg.encode();
+            assert_eq!(ToClient::decode(&bytes).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn to_server_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let u = Mat::gaussian(6, 3, &mut rng);
+        let l = Mat::gaussian(6, 4, &mut rng);
+        let s = Mat::gaussian(6, 4, &mut rng);
+        for msg in [
+            ToServer::Hello { client: 3, cols: 44 },
+            ToServer::Update {
+                client: 1,
+                round: 9,
+                u,
+                grad_norm: 1.5,
+                lipschitz: 10.0,
+                err_num: 0.25,
+                local_secs: 0.01,
+            },
+            ToServer::Reveal { client: 0, l, s },
+            ToServer::Withhold { client: 2 },
+        ] {
+            let bytes = msg.encode();
+            assert_eq!(ToServer::decode(&bytes).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn wire_sizes_match_encoding() {
+        let mut rng = Pcg64::new(3);
+        let u = Mat::gaussian(50, 5, &mut rng);
+        let round = ToClient::Round { round: 0, k_local: 2, eta: 0.1, u: u.clone() };
+        assert_eq!(round.encode().len(), round_wire_size(50, 5));
+        let update = ToServer::Update {
+            client: 0,
+            round: 0,
+            u,
+            grad_norm: 0.0,
+            lipschitz: 1.0,
+            err_num: f64::NAN,
+            local_secs: 0.0,
+        };
+        assert_eq!(update.encode().len(), update_wire_size(50, 5));
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tag() {
+        assert!(ToClient::decode(&[99]).is_err());
+        assert!(ToServer::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn no_message_can_carry_m_block() {
+        // structural privacy: enumerate the upstream variants — only
+        // Reveal carries matrices, and it is sent exclusively when the
+        // server granted reveal=true (see client.rs); Update carries just
+        // the m×r consensus factor.
+        let bytes = ToServer::Hello { client: 0, cols: 10 }.encode();
+        assert!(bytes.len() < 32, "Hello is scalar-only");
+        let bytes = ToServer::Withhold { client: 0 }.encode();
+        assert!(bytes.len() < 16, "Withhold is scalar-only");
+    }
+}

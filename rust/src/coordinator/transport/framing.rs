@@ -1,0 +1,166 @@
+//! Wire encoding: little-endian primitives and matrix codecs.
+//!
+//! Every matrix crossing the wire is exactly `16 + 8·rows·cols` bytes
+//! (u32 rows, u32 cols, u64 payload length guard, f64 data), which makes
+//! the paper's Eq. 28 communication accounting (`2·E·m·r` floats per
+//! round) directly verifiable from the transport byte counters.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Cursor over a received frame.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("frame underrun: need {n} bytes, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn mat(&mut self) -> Result<Mat> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let len = self.u64()? as usize;
+        if len != rows * cols {
+            bail!("matrix frame corrupt: {rows}x{cols} but payload {len}");
+        }
+        // sanity cap: 1 GiB of f64s
+        if len > (1usize << 27) {
+            bail!("matrix frame too large: {len} elements");
+        }
+        let bytes = self.take(len * 8)?;
+        let mut data = Vec::with_capacity(len);
+        for chunk in bytes.chunks_exact(8) {
+            data.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("frame has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Append a matrix to a frame.
+pub fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    put_u64(buf, (m.rows() * m.cols()) as u64);
+    buf.reserve(m.as_slice().len() * 8);
+    for &x in m.as_slice() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Size in bytes that `put_mat` produces for an r×c matrix.
+pub fn mat_wire_size(rows: usize, cols: usize) -> usize {
+    16 + 8 * rows * cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::gaussian(7, 5, &mut rng);
+        let mut buf = Vec::new();
+        put_mat(&mut buf, &m);
+        assert_eq!(buf.len(), mat_wire_size(7, 5));
+        let mut r = Reader::new(&buf);
+        let back = r.mat().unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEADBEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f64(&mut buf, -0.125);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let mut buf = Vec::new();
+        put_mat(&mut buf, &Mat::zeros(2, 2));
+        // truncate mid-payload
+        buf.truncate(buf.len() - 3);
+        let mut r = Reader::new(&buf);
+        assert!(r.mat().is_err());
+
+        // inconsistent header
+        let mut buf2 = Vec::new();
+        put_u32(&mut buf2, 2);
+        put_u32(&mut buf2, 2);
+        put_u64(&mut buf2, 5); // wrong: 2*2 != 5
+        buf2.extend_from_slice(&[0u8; 40]);
+        let mut r2 = Reader::new(&buf2);
+        assert!(r2.mat().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, 9);
+        let mut r = Reader::new(&buf);
+        let _ = r.u32().unwrap();
+        assert!(r.expect_end().is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! TCP transport: length-prefix framed messages over `std::net`.
+//!
+//! Frame format: u32 LE payload length, then the payload. A thread per
+//! connection (blocking I/O) — the round protocol is a strict
+//! broadcast/gather barrier, so async buys nothing here (see DESIGN.md
+//! §Substitutions on tokio).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::Channel;
+
+/// Hard cap on a single frame (guards against corrupt length headers).
+const MAX_FRAME: u32 = 1 << 30;
+
+/// One endpoint of a TCP duplex channel.
+pub struct TcpChannel {
+    stream: TcpStream,
+    sent: u64,
+    received: u64,
+}
+
+impl TcpChannel {
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        Ok(TcpChannel { stream, sent: 0, received: 0 })
+    }
+
+    /// Connect to a listening server.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::from_stream(stream)
+    }
+}
+
+/// Server-side acceptor: bind, then accept exactly `n` client channels
+/// (in connection order — client 0 is the first to connect; the protocol
+/// assigns ids in the handshake, not by arrival order).
+pub struct TcpAcceptor {
+    listener: TcpListener,
+}
+
+impl TcpAcceptor {
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(TcpAcceptor { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr()?.to_string())
+    }
+
+    pub fn accept_n(&self, n: usize) -> Result<Vec<TcpChannel>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (stream, _) = self.listener.accept().context("accept")?;
+            out.push(TcpChannel::from_stream(stream)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Channel for TcpChannel {
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        if msg.len() as u64 > MAX_FRAME as u64 {
+            bail!("frame too large: {}", msg.len());
+        }
+        self.stream
+            .write_all(&(msg.len() as u32).to_le_bytes())
+            .context("write frame header")?;
+        self.stream.write_all(msg).context("write frame payload")?;
+        self.stream.flush()?;
+        self.sent += msg.len() as u64;
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .context("set_read_timeout")?;
+        let mut header = [0u8; 4];
+        self.stream
+            .read_exact(&mut header)
+            .context("read frame header")?;
+        let len = u32::from_le_bytes(header);
+        if len > MAX_FRAME {
+            bail!("corrupt frame header: length {len}");
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream
+            .read_exact(&mut payload)
+            .context("read frame payload")?;
+        self.received += len as u64;
+        Ok(payload)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn localhost_roundtrip() {
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut client = TcpChannel::connect(&addr).unwrap();
+            client.send(b"hello from client").unwrap();
+            let reply = client.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply, b"ack");
+            client.bytes_sent()
+        });
+        let mut server_side = acceptor.accept_n(1).unwrap().pop().unwrap();
+        let got = server_side.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, b"hello from client");
+        server_side.send(b"ack").unwrap();
+        let client_sent = h.join().unwrap();
+        assert_eq!(server_side.bytes_received(), client_sent);
+        assert_eq!(server_side.bytes_sent(), 3);
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = TcpChannel::connect(&addr).unwrap();
+                    c.send(&[i as u8]).unwrap();
+                    c.recv_timeout(Duration::from_secs(5)).unwrap()
+                })
+            })
+            .collect();
+        let mut chans = acceptor.accept_n(3).unwrap();
+        let mut seen = Vec::new();
+        for ch in &mut chans {
+            let m = ch.recv_timeout(Duration::from_secs(5)).unwrap();
+            seen.push(m[0]);
+            ch.send(&[m[0] + 100]).unwrap();
+        }
+        let mut replies: Vec<u8> = handles.into_iter().map(|h| h.join().unwrap()[0]).collect();
+        replies.sort_unstable();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(replies, vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn large_frame() {
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let payload = vec![0xAB; 1 << 20]; // 1 MiB
+        let p2 = payload.clone();
+        let h = std::thread::spawn(move || {
+            let mut c = TcpChannel::connect(&addr).unwrap();
+            c.send(&p2).unwrap();
+        });
+        let mut s = acceptor.accept_n(1).unwrap().pop().unwrap();
+        let got = s.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(got, payload);
+        h.join().unwrap();
+    }
+}

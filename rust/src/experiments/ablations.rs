@@ -1,0 +1,146 @@
+//! Ablation studies on the design choices DESIGN.md calls out — beyond
+//! the paper's own Fig. 4 ablation:
+//!
+//! 1. **Schedules** (§2.2 / Theorem 1 remark): adaptive vs the paper's
+//!    decaying η₀/t vs constant vs the Theorem-1 rate c/√(KT).
+//! 2. **Aggregation** (Eq. 9): uniform FedAvg vs n_i-weighted, under an
+//!    uneven partition.
+//! 3. **Update compression** (extension, §2.1 limited communication):
+//!    f64 vs f32 vs int8 wire codecs — bytes/round vs final error.
+//! 4. **Partial participation** (extension): fraction of clients
+//!    sampled per round vs rounds-to-recover.
+//! 5. **DP noise** (extension, §2.2 privacy): upload noise σ vs error.
+
+use crate::algorithms::Schedule;
+use crate::bench_util::Table;
+use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig, PartitionSpec};
+use crate::coordinator::{Aggregation, Compression};
+use crate::rpca::problem::{ProblemSpec, RpcaProblem};
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+fn scale(effort: Effort) -> usize {
+    match effort {
+        Effort::Quick => 150,
+        Effort::Full => 500,
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub study: &'static str,
+    pub setting: String,
+    pub final_err: f64,
+    pub rounds_to_1e2: Option<usize>,
+    pub bytes_per_round: f64,
+}
+
+fn run_one(
+    problem: &RpcaProblem,
+    cfg: &DcfPcaConfig,
+    study: &'static str,
+    setting: String,
+) -> AblationRow {
+    let res = run_dcf_pca(problem, cfg).expect("ablation run");
+    let rounds_to_1e2 = res
+        .error_curve()
+        .iter()
+        .find(|(_, e)| *e < 1e-2)
+        .map(|(t, _)| *t + 1);
+    AblationRow {
+        study,
+        setting,
+        final_err: res.final_error.unwrap(),
+        rounds_to_1e2,
+        bytes_per_round: res.comm.per_round(),
+    }
+}
+
+pub fn run(effort: Effort) -> Vec<AblationRow> {
+    let n = scale(effort);
+    let spec = ProblemSpec::paper_default(n);
+    let problem = spec.generate(42);
+    let rounds = 40;
+    let base = DcfPcaConfig::default_for(&spec)
+        .with_clients(10)
+        .with_rounds(rounds)
+        .with_k_local(2)
+        .with_seed(3);
+    let mut rows = Vec::new();
+
+    // 1. schedules
+    for (name, sched) in [
+        ("adaptive eta0=0.9", Schedule::Adaptive { eta0: 0.9 }),
+        ("paper decay eta0=0.05", Schedule::paper_decay(0.05)),
+        ("const eta=0.01", Schedule::Const { eta: 0.01 }),
+        (
+            "theorem1 c/sqrt(KT)",
+            Schedule::InvSqrtKT { c: 0.5, k_local: 2, rounds },
+        ),
+    ] {
+        let cfg = base.clone().with_schedule(sched);
+        rows.push(run_one(&problem, &cfg, "schedule", name.into()));
+    }
+
+    // 2. aggregation under an uneven partition
+    for (name, agg) in [("uniform", Aggregation::Uniform), ("weighted", Aggregation::WeightedByCols)] {
+        let mut cfg = base.clone();
+        cfg.partition = PartitionSpec::RandomUneven { seed: 17 };
+        cfg.aggregation = agg;
+        rows.push(run_one(&problem, &cfg, "aggregation", format!("{name} (uneven)")));
+    }
+
+    // 3. compression
+    for codec in [Compression::None, Compression::F32, Compression::Int8] {
+        let mut cfg = base.clone();
+        cfg.compression = codec;
+        rows.push(run_one(&problem, &cfg, "compression", format!("{codec:?}")));
+    }
+
+    // 4. participation
+    for q in [1.0, 0.5, 0.3] {
+        let mut cfg = base.clone();
+        cfg.participation = q;
+        // more rounds when fewer clients act per round
+        cfg.rounds = (rounds as f64 / q).ceil() as usize;
+        rows.push(run_one(&problem, &cfg, "participation", format!("q={q}")));
+    }
+
+    // 5. DP noise
+    for sigma in [0.0, 1e-4, 1e-3, 1e-2] {
+        let mut cfg = base.clone();
+        cfg.dp_sigma = sigma;
+        rows.push(run_one(&problem, &cfg, "dp-noise", format!("sigma={sigma:.0e}")));
+    }
+
+    let mut csv = CsvWriter::new(&["study", "setting", "final_err", "rounds_to_1e2", "bytes_per_round"]);
+    for r in &rows {
+        csv.row(&[
+            &r.study,
+            &r.setting,
+            &r.final_err,
+            &r.rounds_to_1e2.map(|x| x as f64).unwrap_or(f64::NAN),
+            &r.bytes_per_round,
+        ]);
+    }
+    let _ = csv.write_file(results_dir().join("ablations.csv"));
+
+    print_table(n, &rows);
+    rows
+}
+
+fn print_table(n: usize, rows: &[AblationRow]) {
+    println!("\nAblations at n={n} (E=10, K=2, T=40 base)");
+    let mut t = Table::new(&["study", "setting", "final err", "rounds→1e-2", "B/round"]);
+    for r in rows {
+        t.row(&[
+            r.study.to_string(),
+            r.setting.clone(),
+            format!("{:.2e}", r.final_err),
+            r.rounds_to_1e2.map(|x| x.to_string()).unwrap_or_else(|| "—".into()),
+            format!("{:.0}", r.bytes_per_round),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,122 @@
+//! §3.4 — computation & communication complexity: measure the per-round
+//! bytes on the wire against Eq. 28 (`T_comm = 2·E·m·r` floats) and the
+//! per-client compute time against Eq. 26
+//! (`T_local = O(K·m·r·max(r, (n/E)·log(1/ε)))`) as E grows.
+
+use crate::bench_util::Table;
+use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use crate::coordinator::protocol::{round_wire_size, update_wire_size};
+use crate::rpca::problem::ProblemSpec;
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+#[derive(Clone, Debug)]
+pub struct CommRow {
+    pub clients: usize,
+    /// measured mean bytes per round (down + up)
+    pub bytes_per_round: f64,
+    /// Eq. 28 payload prediction: 2·E·m·r·8 bytes
+    pub eq28_payload: u64,
+    /// framing overhead fraction
+    pub overhead_frac: f64,
+    /// mean per-round *max* client compute seconds (the distributed
+    /// critical path — should fall ~1/E)
+    pub client_secs: f64,
+    /// mean per-round summed client seconds (single-device total)
+    pub total_secs: f64,
+    pub final_err: f64,
+}
+
+pub fn client_counts(effort: Effort) -> Vec<usize> {
+    match effort {
+        Effort::Quick => vec![1, 2, 5, 10],
+        Effort::Full => vec![1, 2, 5, 10, 20, 50],
+    }
+}
+
+pub fn run(effort: Effort) -> Vec<CommRow> {
+    let n = match effort {
+        Effort::Quick => 300,
+        Effort::Full => 1000,
+    };
+    let spec = ProblemSpec::paper_default(n);
+    let problem = spec.generate(42);
+    let rounds = 12;
+
+    let mut rows = Vec::new();
+    for &e in &client_counts(effort) {
+        let cfg = DcfPcaConfig::default_for(&spec)
+            .with_clients(e)
+            .with_rounds(rounds)
+            .with_k_local(2)
+            .with_seed(5);
+        let res = run_dcf_pca(&problem, &cfg).expect("comm run");
+        let mean_bytes = res
+            .rounds
+            .iter()
+            .map(|r| (r.bytes_down + r.bytes_up) as f64)
+            .sum::<f64>()
+            / res.rounds.len() as f64;
+        let eq28_payload = (2 * e * spec.m * spec.rank * 8) as u64;
+        let framed =
+            (e * round_wire_size(spec.m, spec.rank) + e * update_wire_size(spec.m, spec.rank)) as f64;
+        assert!((mean_bytes - framed).abs() < 1.0, "measured bytes must equal framed size");
+        let client_secs = res.rounds.iter().map(|r| r.max_client_secs).sum::<f64>()
+            / res.rounds.len() as f64;
+        let total_secs = res.rounds.iter().map(|r| r.sum_client_secs).sum::<f64>()
+            / res.rounds.len() as f64;
+        rows.push(CommRow {
+            clients: e,
+            bytes_per_round: mean_bytes,
+            eq28_payload,
+            overhead_frac: (mean_bytes - eq28_payload as f64) / mean_bytes,
+            client_secs,
+            total_secs,
+            final_err: res.final_error.unwrap_or(f64::NAN),
+        });
+    }
+
+    let mut csv = CsvWriter::new(&[
+        "clients", "bytes_per_round", "eq28_payload", "client_secs", "total_secs", "final_err",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            &r.clients,
+            &r.bytes_per_round,
+            &r.eq28_payload,
+            &r.client_secs,
+            &r.total_secs,
+            &r.final_err,
+        ]);
+    }
+    let _ = csv.write_file(results_dir().join("comm_scaling.csv"));
+
+    print_table(n, &rows);
+    rows
+}
+
+fn print_table(n: usize, rows: &[CommRow]) {
+    println!("\n§3.4 — communication & per-client compute vs E at n={n} (Eq. 28: bytes/round = 2·E·m·r floats)");
+    let mut t = Table::new(&[
+        "E",
+        "bytes/round",
+        "Eq.28 payload",
+        "overhead",
+        "max client s/round",
+        "Σ client s/round",
+        "final err",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.clients.to_string(),
+            format!("{:.0}", r.bytes_per_round),
+            r.eq28_payload.to_string(),
+            format!("{:.2}%", 100.0 * r.overhead_frac),
+            crate::bench_util::fmt_secs(r.client_secs),
+            crate::bench_util::fmt_secs(r.total_secs),
+            format!("{:.2e}", r.final_err),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,162 @@
+//! Figure 1 — convergence comparison of DCF-PCA / CF-PCA / APGM / ALM on
+//! synthetic RPCA instances of increasing scale (m = n ∈ {500, 1000,
+//! 3000}; r = 0.05n, s = 0.05).
+//!
+//! Reported per algorithm and scale: the err-vs-iteration curve (CSV),
+//! final error, iterations, total wall time, and — the paper's point —
+//! the *per-client* compute time for DCF-PCA vs the centralized solvers'
+//! single-thread time.
+
+use crate::algorithms::{Alm, Apgm, CfPca, RpcaSolver, Schedule, StopCriteria};
+use crate::bench_util::Table;
+use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use crate::rpca::problem::ProblemSpec;
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+/// One algorithm's outcome at one scale.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub n: usize,
+    pub algorithm: &'static str,
+    pub final_err: f64,
+    pub iterations: usize,
+    pub wall_secs: f64,
+    /// per-client compute seconds (DCF-PCA) or total solve time (others)
+    pub critical_path_secs: f64,
+    pub curve: Vec<(usize, f64)>,
+}
+
+/// Scales for each effort level.
+pub fn scales(effort: Effort) -> Vec<usize> {
+    match effort {
+        Effort::Quick => vec![200, 400],
+        Effort::Full => vec![500, 1000, 3000],
+    }
+}
+
+/// Run the full comparison; prints the table and writes
+/// `results/fig1_n{n}.csv` with the per-iteration curves.
+pub fn run(effort: Effort) -> Vec<Fig1Row> {
+    let mut rows = Vec::new();
+    let seed = 42;
+    for &n in &scales(effort) {
+        let spec = ProblemSpec::paper_default(n);
+        let problem = spec.generate(seed);
+        let iters = match effort {
+            Effort::Quick => 40,
+            Effort::Full => 50,
+        };
+
+        // DCF-PCA (E=10, K=2 — the paper's Fig. 1 configuration)
+        {
+            let cfg = DcfPcaConfig::default_for(&spec)
+                .with_clients(10)
+                .with_rounds(iters)
+                .with_k_local(2)
+                .with_seed(seed);
+            let res = run_dcf_pca(&problem, &cfg).expect("dcf-pca run");
+            let per_client: f64 = res.rounds.iter().map(|r| r.max_client_secs).sum();
+            rows.push(Fig1Row {
+                n,
+                algorithm: "DCF-PCA",
+                final_err: res.final_error.unwrap(),
+                iterations: res.rounds.len(),
+                wall_secs: res.wall.as_secs_f64(),
+                critical_path_secs: per_client,
+                curve: res.error_curve(),
+            });
+        }
+
+        // CF-PCA (centralized, larger adaptive step per the paper)
+        {
+            let solver = CfPca::new(spec.m, spec.n, spec.rank)
+                .with_stop(StopCriteria { max_iters: iters, tol: 1e-9 })
+                .with_seed(seed);
+            let res = solver.solve(&problem.observed, Some(&problem));
+            rows.push(Fig1Row {
+                n,
+                algorithm: "CF-PCA",
+                final_err: res.final_error.unwrap(),
+                iterations: res.iterations,
+                wall_secs: res.wall.as_secs_f64(),
+                critical_path_secs: res.wall.as_secs_f64(),
+                curve: res.error_curve(),
+            });
+        }
+
+        // APGM
+        {
+            let solver = Apgm::new().with_stop(StopCriteria {
+                max_iters: 3 * iters, // APG needs more, cheaper iterations
+                tol: 1e-8,
+            });
+            let res = solver.solve(&problem.observed, Some(&problem));
+            rows.push(Fig1Row {
+                n,
+                algorithm: "APGM",
+                final_err: res.final_error.unwrap(),
+                iterations: res.iterations,
+                wall_secs: res.wall.as_secs_f64(),
+                critical_path_secs: res.wall.as_secs_f64(),
+                curve: res.error_curve(),
+            });
+        }
+
+        // ALM
+        {
+            let solver = Alm::new().with_stop(StopCriteria { max_iters: iters, tol: 1e-8 });
+            let res = solver.solve(&problem.observed, Some(&problem));
+            rows.push(Fig1Row {
+                n,
+                algorithm: "ALM",
+                final_err: res.final_error.unwrap(),
+                iterations: res.iterations,
+                wall_secs: res.wall.as_secs_f64(),
+                critical_path_secs: res.wall.as_secs_f64(),
+                curve: res.error_curve(),
+            });
+        }
+
+        // per-scale CSV with all curves
+        let mut csv = CsvWriter::new(&["algorithm", "iter", "err"]);
+        for row in rows.iter().filter(|r| r.n == n) {
+            for (it, err) in &row.curve {
+                csv.row(&[&row.algorithm, it, err]);
+            }
+        }
+        let path = results_dir().join(format!("fig1_n{n}.csv"));
+        let _ = csv.write_file(&path);
+    }
+
+    print_table(&rows);
+    rows
+}
+
+/// DCF-PCA alone with a plain-paper configuration (decaying η, K=2) — the
+/// exact Fig. 1 settings, used by tests that check the paper semantics.
+pub fn dcf_paper_config(spec: &ProblemSpec, rounds: usize, seed: u64) -> DcfPcaConfig {
+    DcfPcaConfig::default_for(spec)
+        .with_clients(10)
+        .with_rounds(rounds)
+        .with_k_local(2)
+        .with_schedule(Schedule::paper_decay(0.05))
+        .with_seed(seed)
+}
+
+fn print_table(rows: &[Fig1Row]) {
+    let mut t = Table::new(&["n", "algorithm", "final err", "iters", "wall", "critical path"]);
+    for r in rows {
+        t.row(&[
+            r.n.to_string(),
+            r.algorithm.to_string(),
+            format!("{:.3e}", r.final_err),
+            r.iterations.to_string(),
+            crate::bench_util::fmt_secs(r.wall_secs),
+            crate::bench_util::fmt_secs(r.critical_path_secs),
+        ]);
+    }
+    println!("\nFig. 1 — convergence & cost comparison (paper: all methods recover; DCF-PCA's per-client cost ≪ centralized)");
+    t.print();
+}

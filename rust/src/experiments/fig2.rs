@@ -1,0 +1,95 @@
+//! Figure 2 — recovery phase diagram: relative error of DCF-PCA over a
+//! grid of sparsity s ∈ [0.05, 0.30] and rank ratio r/n ∈ [0.05, 0.20]
+//! at m = n = 500 (paper: ≤50 iterations, K = 2, η₀ = 0.05; "a
+//! distinctive limit occurs at r ≈ 0.15n and s ≈ 0.2").
+
+use crate::bench_util::Table;
+use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use crate::rpca::problem::ProblemSpec;
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+#[derive(Clone, Debug)]
+pub struct Fig2Cell {
+    pub sparsity: f64,
+    pub rank_frac: f64,
+    pub err: f64,
+    pub recovered: bool,
+}
+
+/// Recovery threshold on Eq. 30 (the phase boundary is sharp; anything
+/// recovered sits orders of magnitude below this).
+pub const RECOVERY_THRESHOLD: f64 = 1e-2;
+
+pub fn grid(effort: Effort) -> (usize, Vec<f64>, Vec<f64>) {
+    match effort {
+        Effort::Quick => (
+            200,
+            vec![0.05, 0.15, 0.25],
+            vec![0.05, 0.10, 0.15, 0.20],
+        ),
+        Effort::Full => (
+            500,
+            vec![0.05, 0.10, 0.15, 0.20, 0.25, 0.30],
+            vec![0.05, 0.075, 0.10, 0.125, 0.15, 0.175, 0.20],
+        ),
+    }
+}
+
+pub fn run(effort: Effort) -> Vec<Fig2Cell> {
+    let (n, sparsities, rank_fracs) = grid(effort);
+    let mut cells = Vec::new();
+    for &s in &sparsities {
+        for &rf in &rank_fracs {
+            let rank = ((n as f64) * rf).round().max(1.0) as usize;
+            let spec = ProblemSpec::square(n, rank, s);
+            let problem = spec.generate(42);
+            let cfg = DcfPcaConfig::default_for(&spec)
+                .with_clients(10)
+                .with_rounds(50)
+                .with_k_local(2)
+                .with_seed(7);
+            let err = match run_dcf_pca(&problem, &cfg) {
+                Ok(res) => res.final_error.unwrap_or(f64::NAN),
+                Err(_) => f64::NAN,
+            };
+            cells.push(Fig2Cell {
+                sparsity: s,
+                rank_frac: rf,
+                err,
+                recovered: err.is_finite() && err < RECOVERY_THRESHOLD,
+            });
+        }
+    }
+
+    // CSV
+    let mut csv = CsvWriter::new(&["sparsity", "rank_frac", "err", "recovered"]);
+    for c in &cells {
+        csv.row(&[&c.sparsity, &c.rank_frac, &c.err, &(c.recovered as u8)]);
+    }
+    let _ = csv.write_file(results_dir().join("fig2_phase.csv"));
+
+    print_grid(n, &sparsities, &rank_fracs, &cells);
+    cells
+}
+
+fn print_grid(n: usize, sparsities: &[f64], rank_fracs: &[f64], cells: &[Fig2Cell]) {
+    println!("\nFig. 2 — recovery phase diagram at n={n} (err, ✓ = recovered; paper limit: r≈0.15n, s≈0.2)");
+    let mut header = vec!["s \\ r/n".to_string()];
+    header.extend(rank_fracs.iter().map(|rf| format!("{rf:.3}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+    for &s in sparsities {
+        let mut row = vec![format!("{s:.2}")];
+        for &rf in rank_fracs {
+            let c = cells
+                .iter()
+                .find(|c| (c.sparsity - s).abs() < 1e-12 && (c.rank_frac - rf).abs() < 1e-12)
+                .unwrap();
+            row.push(format!("{:.1e}{}", c.err, if c.recovered { "✓" } else { " " }));
+        }
+        t.row(&row);
+    }
+    t.print();
+}

@@ -1,0 +1,85 @@
+//! Figure 4 — ablation on the number of local iterations K: same fixed
+//! learning rate η = 0.01, E = 10 clients, K ∈ {1, 2, 5, 10}.
+//!
+//! Paper: "converges remarkably faster as K increases, but also suffers
+//! from a slightly larger error floor"; "it only takes 8 iterations for
+//! DCF-PCA with K=10 to converge; while K=1 converges much slower."
+
+use crate::algorithms::Schedule;
+use crate::bench_util::Table;
+use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use crate::rpca::problem::ProblemSpec;
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+#[derive(Clone, Debug)]
+pub struct Fig4Series {
+    pub k_local: usize,
+    pub curve: Vec<(usize, f64)>,
+    /// rounds to reach the recovery threshold (None = never)
+    pub rounds_to_recover: Option<usize>,
+    /// error floor: min error over the run
+    pub floor: f64,
+    /// mean consensus dispersion (drift across clients before averaging)
+    pub mean_dispersion: f64,
+}
+
+pub const K_VALUES: [usize; 4] = [1, 2, 5, 10];
+pub const RECOVERY_THRESHOLD: f64 = 1e-2;
+
+pub fn run(effort: Effort) -> Vec<Fig4Series> {
+    let n = match effort {
+        Effort::Quick => 200,
+        Effort::Full => 500,
+    };
+    let rounds = 60;
+    let spec = ProblemSpec::paper_default(n);
+    let problem = spec.generate(42);
+
+    let mut out = Vec::new();
+    for &k in &K_VALUES {
+        let cfg = DcfPcaConfig::default_for(&spec)
+            .with_clients(10)
+            .with_rounds(rounds)
+            .with_k_local(k)
+            // paper: same fixed η = 0.01 across K values
+            .with_schedule(Schedule::Const { eta: 0.01 })
+            .with_seed(9);
+        let res = run_dcf_pca(&problem, &cfg).expect("fig4 run");
+        let curve = res.error_curve();
+        let rounds_to_recover = curve
+            .iter()
+            .find(|(_, e)| *e < RECOVERY_THRESHOLD)
+            .map(|(t, _)| *t + 1);
+        let floor = curve.iter().map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
+        let mean_dispersion =
+            res.rounds.iter().map(|r| r.dispersion).sum::<f64>() / res.rounds.len() as f64;
+        out.push(Fig4Series { k_local: k, curve, rounds_to_recover, floor, mean_dispersion });
+    }
+
+    let mut csv = CsvWriter::new(&["k_local", "round", "err"]);
+    for s in &out {
+        for (t, e) in &s.curve {
+            csv.row(&[&s.k_local, t, e]);
+        }
+    }
+    let _ = csv.write_file(results_dir().join("fig4_local_iters.csv"));
+
+    print_table(n, &out);
+    out
+}
+
+fn print_table(n: usize, series: &[Fig4Series]) {
+    println!("\nFig. 4 — local iterations ablation at n={n}, η=0.01 (paper: larger K ⇒ fewer rounds, higher floor)");
+    let mut t = Table::new(&["K", "rounds to err<1e-2", "error floor", "mean dispersion"]);
+    for s in series {
+        t.row(&[
+            s.k_local.to_string(),
+            s.rounds_to_recover.map(|r| r.to_string()).unwrap_or_else(|| "—".into()),
+            format!("{:.3e}", s.floor),
+            format!("{:.3e}", s.mean_dispersion),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,44 @@
+//! Paper-experiment drivers: one function per table/figure of the
+//! evaluation section (§4). Each prints the series/rows the paper reports
+//! and writes CSVs under `results/` for plotting. Invoked from both
+//! `dcf-pca experiment <id>` and the `cargo bench` targets.
+//!
+//! `Effort::Quick` shrinks scales so a laptop-class single core finishes
+//! in minutes (shape preserved); `Effort::Full` uses the paper's sizes.
+
+pub mod ablations;
+pub mod comm;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3_table1;
+pub mod fig4;
+pub mod theory;
+
+/// Experiment scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    /// reduced scales, minutes on one core
+    Quick,
+    /// the paper's scales (n up to 3000/5000) — tens of minutes
+    Full,
+}
+
+impl Effort {
+    /// Read from the environment (`DCF_PCA_BENCH_MODE=full|quick`),
+    /// defaulting to quick.
+    pub fn from_env() -> Effort {
+        match std::env::var("DCF_PCA_BENCH_MODE").as_deref() {
+            Ok("full") => Effort::Full,
+            _ => Effort::Quick,
+        }
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("DCF_PCA_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
+    );
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

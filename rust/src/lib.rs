@@ -1,0 +1,33 @@
+//! # DCF-PCA — Distributed Robust Principal Component Analysis
+//!
+//! Reproduction of *"Distributed Robust Principal Component Analysis"*
+//! (Wenda Chu, CS.DC 2022): the DCF-PCA consensus-factorization algorithm,
+//! its centralized counterpart CF-PCA, the APGM/ALM convex-relaxation
+//! baselines, and every substrate they need, in a three-layer
+//! rust + JAX + Pallas architecture:
+//!
+//! - **L3 (this crate)** — the federated coordinator: server round loop,
+//!   client workers, transport with byte accounting, FedAvg aggregation,
+//!   privacy sets, schedules ([`coordinator`]).
+//! - **L2/L1 (python, build-time only)** — the client local update as a JAX
+//!   function calling Pallas kernels, AOT-lowered to HLO text artifacts.
+//! - **Runtime** — [`runtime`] loads `artifacts/*.hlo.txt` via the PJRT C
+//!   API (`xla` crate) and executes them from the rust hot path; a
+//!   bit-compatible pure-rust `Native` backend is the default and the
+//!   parity reference.
+
+pub mod algorithms;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod rng;
+pub mod rpca;
+pub mod runtime;
+pub mod telemetry;
+pub mod testing;
+pub mod util;
+
+pub use linalg::Mat;

@@ -1,0 +1,272 @@
+//! Blocked dense matrix multiplication kernels.
+//!
+//! Single-threaded (the testbed exposes one vCPU) but cache-blocked and
+//! written so the inner loop auto-vectorizes: the k-panel of B is walked
+//! row-wise (unit stride) and accumulated into a register-blocked C tile.
+//! This is the rust-native analogue of the L1 Pallas kernels' MXU tiling —
+//! same loop order (m-tile outer, k inner, n unit-stride innermost).
+
+use super::matrix::Mat;
+
+/// Cache-block sizes tuned on the single-core testbed (see EXPERIMENTS.md
+/// §Perf): MC×KC panel of A ~ 128 KiB (L2-resident), KC×N rows of B stream.
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_acc(&mut c, a, b, 1.0, 0.0);
+    c
+}
+
+/// C = Aᵀ · B without materializing Aᵀ.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dim mismatch");
+    let (k_dim, m) = a.shape();
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    // Aᵀ(i,k) = A(k,i): accumulate outer products of A rows into C rows,
+    // k unrolled 4× (4 FMAs per C element load/store — same store-bound
+    // argument as matmul_acc).
+    let cd = c.as_mut_slice();
+    let ad = a.as_slice();
+    let bd = b.as_slice();
+    let mut k = 0;
+    while k + 4 <= k_dim {
+        let a0 = &ad[k * m..(k + 1) * m];
+        let a1 = &ad[(k + 1) * m..(k + 2) * m];
+        let a2 = &ad[(k + 2) * m..(k + 3) * m];
+        let a3 = &ad[(k + 3) * m..(k + 4) * m];
+        let b0 = &bd[k * n..(k + 1) * n];
+        let b1 = &bd[(k + 1) * n..(k + 2) * n];
+        let b2 = &bd[(k + 2) * n..(k + 3) * n];
+        let b3 = &bd[(k + 3) * n..(k + 4) * n];
+        for i in 0..m {
+            let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+            }
+        }
+        k += 4;
+    }
+    while k < k_dim {
+        let ar = a.row(k);
+        let br = b.row(k);
+        for i in 0..m {
+            let aik = ar[i];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(br) {
+                *cv += aik * bv;
+            }
+        }
+        k += 1;
+    }
+    c
+}
+
+/// C = A · Bᵀ.
+///
+/// The inner dimension here is the factor rank r (tiny) in every hot
+/// call (U·Vᵀ), so dot-product forms stall on short serial reductions.
+/// The blocked transpose is O(n·r) against the O(m·n·r) product — going
+/// through [`matmul`]'s store-amortized kernel wins measurably
+/// (see EXPERIMENTS.md §Perf iteration log).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dim mismatch");
+    matmul(a, &b.transpose())
+}
+
+/// C = beta*C + alpha * A·B — the blocked core.
+pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
+    let (m, k_dim) = a.shape();
+    let (kb_dim, n) = b.shape();
+    assert_eq!(k_dim, kb_dim, "matmul: inner dim mismatch");
+    assert_eq!(c.shape(), (m, n), "matmul: output shape mismatch");
+
+    if beta != 1.0 {
+        for x in c.as_mut_slice() {
+            *x *= beta;
+        }
+    }
+
+    let bd = b.as_slice();
+    // i-block over rows of A (MC), k-block over the shared dim (KC);
+    // innermost loop runs unit-stride over rows of B and a row of C.
+    // k is unrolled 4× so each pass performs 4 FMAs per C element
+    // load/store — without the unroll the kernel is L1-store-bound at
+    // ~25% of FMA peak (measured; see EXPERIMENTS.md §Perf).
+    for ib in (0..m).step_by(MC) {
+        let iend = (ib + MC).min(m);
+        for kb in (0..k_dim).step_by(KC) {
+            let kend = (kb + KC).min(k_dim);
+            for i in ib..iend {
+                let arow = a.row(i);
+                let crow = &mut c.as_mut_slice()[i * n..(i + 1) * n];
+                let mut k = kb;
+                while k + 4 <= kend {
+                    let a0 = alpha * arow[k];
+                    let a1 = alpha * arow[k + 1];
+                    let a2 = alpha * arow[k + 2];
+                    let a3 = alpha * arow[k + 3];
+                    let b0 = &bd[k * n..(k + 1) * n];
+                    let b1 = &bd[(k + 1) * n..(k + 2) * n];
+                    let b2 = &bd[(k + 2) * n..(k + 3) * n];
+                    let b3 = &bd[(k + 3) * n..(k + 4) * n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    k += 4;
+                }
+                while k < kend {
+                    let aik = alpha * arow[k];
+                    let brow = &bd[k * n..(k + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Gram matrix G = AᵀA (r×r for A m×r), exploiting symmetry.
+pub fn gram(a: &Mat) -> Mat {
+    let (m, r) = a.shape();
+    let mut g = Mat::zeros(r, r);
+    for i in 0..m {
+        let row = a.row(i);
+        for p in 0..r {
+            let ap = row[p];
+            if ap == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(p);
+            for q in p..r {
+                grow[q] += ap * row[q];
+            }
+        }
+    }
+    // mirror the upper triangle
+    for p in 0..r {
+        for q in (p + 1)..r {
+            g[(q, p)] = g[(p, q)];
+        }
+    }
+    g
+}
+
+/// y = A·x for a vector x (len = A.cols).
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows())
+        .map(|i| a.row(i).iter().zip(x).map(|(av, xv)| av * xv).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!(a.shape(), b.shape());
+        let denom = b.frob_norm().max(1.0);
+        let diff = (a - b).frob_norm();
+        assert!(diff / denom < tol, "relative diff {}", diff / denom);
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Pcg64::new(10);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (70, 300, 40), (65, 257, 1)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-12);
+        }
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(11);
+        let a = Mat::gaussian(40, 13, &mut rng);
+        let b = Mat::gaussian(40, 21, &mut rng);
+        assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-12);
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(12);
+        let a = Mat::gaussian(19, 31, &mut rng);
+        let b = Mat::gaussian(23, 31, &mut rng);
+        assert_close(&matmul_nt(&a, &b), &matmul(&a, &b.transpose()), 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_tn() {
+        let mut rng = Pcg64::new(13);
+        let a = Mat::gaussian(50, 8, &mut rng);
+        assert_close(&gram(&a), &matmul_tn(&a, &a), 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Pcg64::new(14);
+        let a = Mat::gaussian(30, 6, &mut rng);
+        let g = gram(&a);
+        for p in 0..6 {
+            assert!(g[(p, p)] >= 0.0);
+            for q in 0..6 {
+                assert!((g[(p, q)] - g[(q, p)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn acc_alpha_beta() {
+        let mut rng = Pcg64::new(15);
+        let a = Mat::gaussian(6, 7, &mut rng);
+        let b = Mat::gaussian(7, 5, &mut rng);
+        let mut c = Mat::gaussian(6, 5, &mut rng);
+        let c0 = c.clone();
+        matmul_acc(&mut c, &a, &b, 2.0, 0.5);
+        let expect = &c0.scale(0.5) + &naive(&a, &b).scale(2.0);
+        assert_close(&c, &expect, 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(16);
+        let a = Mat::gaussian(9, 4, &mut rng);
+        let x = Mat::gaussian(4, 1, &mut rng);
+        let y = matvec(&a, x.as_slice());
+        let y2 = matmul(&a, &x);
+        for i in 0..9 {
+            assert!((y[i] - y2[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(17);
+        let a = Mat::gaussian(12, 12, &mut rng);
+        assert_close(&matmul(&a, &Mat::eye(12)), &a, 1e-14);
+        assert_close(&matmul(&Mat::eye(12), &a), &a, 1e-14);
+    }
+}

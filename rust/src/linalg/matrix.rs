@@ -1,0 +1,349 @@
+//! Dense row-major f64 matrix — the workhorse type for every algorithm.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Sub, SubAssign};
+
+use crate::rng::{GaussianSource, Pcg64};
+
+/// Dense row-major matrix of f64.
+///
+/// Row-major so that a column block `M[:, a..b]` of the RPCA data matrix is
+/// *not* contiguous; partitioning helpers live in [`crate::rpca::partition`].
+/// All hot paths go through [`crate::linalg::gemm`], not operator overloads.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Entries i.i.d. N(0,1) — the paper's generator for U₀, V₀ (§4.1).
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let mut g = GaussianSource::new(rng.fork(0xA0A0));
+        let mut data = vec![0.0; rows * cols];
+        g.fill(&mut data);
+        // advance the caller's stream so subsequent draws differ
+        rng.next_u64();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Column slice `self[:, a..b]` as a new (contiguous) matrix.
+    pub fn cols_range(&self, a: usize, b: usize) -> Mat {
+        assert!(a <= b && b <= self.cols);
+        let w = b - a;
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.data[i * w..(i + 1) * w]
+                .copy_from_slice(&self.data[i * self.cols + a..i * self.cols + b]);
+        }
+        out
+    }
+
+    /// Write `block` into `self[:, a..a+block.cols]`.
+    pub fn set_cols_range(&mut self, a: usize, block: &Mat) {
+        assert_eq!(self.rows, block.rows);
+        assert!(a + block.cols <= self.cols);
+        let w = block.cols;
+        for i in 0..self.rows {
+            self.data[i * self.cols + a..i * self.cols + a + w]
+                .copy_from_slice(&block.data[i * w..(i + 1) * w]);
+        }
+    }
+
+    /// Horizontal concatenation `[A₁ A₂ … A_E]` (all same row count).
+    pub fn hcat(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        assert!(blocks.iter().all(|b| b.rows == rows), "hcat: row mismatch");
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut at = 0;
+        for b in blocks {
+            out.set_cols_range(at, b);
+            at += b.cols;
+        }
+        out
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.frob_norm_sq().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// self += s * other (axpy).
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Number of entries with |x| > tol.
+    pub fn count_above(&self, tol: f64) -> usize {
+        self.data.iter().filter(|x| x.abs() > tol).count()
+    }
+
+    /// f32 round-trip buffer for the PJRT (artifact) boundary.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        assert_eq!(self.shape(), rhs.shape());
+        let mut out = self.clone();
+        out.axpy(1.0, rhs);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        assert_eq!(self.shape(), rhs.shape());
+        let mut out = self.clone();
+        out.axpy(-1.0, rhs);
+        out
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, rhs: &Mat) {
+        self.axpy(1.0, rhs);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, rhs: &Mat) {
+        self.axpy(-1.0, rhs);
+    }
+}
+
+impl Mul<f64> for &Mat {
+    type Output = Mat;
+    fn mul(self, s: f64) -> Mat {
+        self.scale(s)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_index() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.shape(), (3, 4));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::gaussian(17, 33, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn cols_range_and_hcat_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::gaussian(5, 12, &mut rng);
+        let a = m.cols_range(0, 4);
+        let b = m.cols_range(4, 9);
+        let c = m.cols_range(9, 12);
+        let back = Mat::hcat(&[&a, &b, &c]);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn set_cols_range_writes_block() {
+        let mut m = Mat::zeros(3, 6);
+        let b = Mat::from_fn(3, 2, |i, j| (i + j) as f64 + 1.0);
+        m.set_cols_range(2, &b);
+        assert_eq!(m[(0, 2)], 1.0);
+        assert_eq!(m[(2, 3)], 4.0);
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m[(2, 5)], 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        let s = &a + &b;
+        assert_eq!(s.as_slice(), &[5.0, 5.0, 5.0, 5.0]);
+        let d = &a - &b;
+        assert_eq!(d.as_slice(), &[-3.0, -1.0, 1.0, 3.0]);
+        let sc = &a * 2.0;
+        assert_eq!(sc.as_slice(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::gaussian(4, 4, &mut rng);
+        let f = m.to_f32();
+        let back = Mat::from_f32(4, 4, &f);
+        for (x, y) in m.as_slice().iter().zip(back.as_slice()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear-algebra substrate built from scratch (no external BLAS /
+//! LAPACK in the offline environment): matrices, blocked GEMM, QR, exact
+//! Jacobi SVD, randomized truncated SVD, Cholesky solves, and the
+//! elementwise operators (shrinkage, Huber) the RPCA solvers are made of.
+
+pub mod gemm;
+pub mod matrix;
+pub mod ops;
+pub mod qr;
+pub mod rsvd;
+pub mod solve;
+pub mod svd;
+
+pub use gemm::{gram, matmul, matmul_acc, matmul_nt, matmul_tn, matvec};
+pub use matrix::Mat;
+pub use ops::{huber, l1_norm, residual_shrink_into, shrink, shrink_inplace, shrink_scalar};
+pub use qr::{orthonormalize, qr_thin};
+pub use rsvd::{rsvd, rsvd_svt, RsvdParams};
+pub use solve::{cholesky, cholesky_solve, ridge_solve_v, solve_spd};
+pub use svd::{reconstruct, singular_values, svd_jacobi, svt, svt_from, Svd};

@@ -1,0 +1,150 @@
+//! Elementwise operators used across the RPCA algorithms: soft
+//! thresholding (shrinkage — the prox of λ‖·‖₁, paper Eq. 16), the Huber
+//! loss (paper Appendix A.2), and norm helpers.
+
+use super::matrix::Mat;
+
+/// Scalar soft threshold: sign(x)·max(|x|−λ, 0).
+#[inline]
+pub fn shrink_scalar(x: f64, lambda: f64) -> f64 {
+    if x > lambda {
+        x - lambda
+    } else if x < -lambda {
+        x + lambda
+    } else {
+        0.0
+    }
+}
+
+/// Elementwise soft threshold of a matrix (new allocation).
+pub fn shrink(a: &Mat, lambda: f64) -> Mat {
+    a.map(|x| shrink_scalar(x, lambda))
+}
+
+/// In-place soft threshold.
+pub fn shrink_inplace(a: &mut Mat, lambda: f64) {
+    for x in a.as_mut_slice() {
+        *x = shrink_scalar(*x, lambda);
+    }
+}
+
+/// Fused S-update of the inner problem (Eq. 16): S = shrink_λ(M − U·Vᵀ)
+/// computed per-row without materializing the full residual separately.
+/// `uv` must already hold U·Vᵀ; this overwrites `s`.
+pub fn residual_shrink_into(s: &mut Mat, m: &Mat, uv: &Mat, lambda: f64) {
+    assert_eq!(s.shape(), m.shape());
+    assert_eq!(s.shape(), uv.shape());
+    let sd = s.as_mut_slice();
+    let md = m.as_slice();
+    let ud = uv.as_slice();
+    for i in 0..sd.len() {
+        sd[i] = shrink_scalar(md[i] - ud[i], lambda);
+    }
+}
+
+/// Scalar Huber loss H_λ (paper Eq. 32).
+#[inline]
+pub fn huber_scalar(x: f64, lambda: f64) -> f64 {
+    if x < -lambda {
+        -lambda * x - lambda * lambda / 2.0
+    } else if x > lambda {
+        lambda * x - lambda * lambda / 2.0
+    } else {
+        0.5 * x * x
+    }
+}
+
+/// Huber loss of a matrix: Σᵢⱼ H_λ(Xᵢⱼ).
+pub fn huber(a: &Mat, lambda: f64) -> f64 {
+    a.as_slice().iter().map(|&x| huber_scalar(x, lambda)).sum()
+}
+
+/// Derivative of the Huber loss (clip to [−λ, λ]).
+#[inline]
+pub fn huber_grad_scalar(x: f64, lambda: f64) -> f64 {
+    x.clamp(-lambda, lambda)
+}
+
+/// ℓ1 norm of a matrix as a vector.
+pub fn l1_norm(a: &Mat) -> f64 {
+    a.as_slice().iter().map(|x| x.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn shrink_cases() {
+        assert_eq!(shrink_scalar(3.0, 1.0), 2.0);
+        assert_eq!(shrink_scalar(-3.0, 1.0), -2.0);
+        assert_eq!(shrink_scalar(0.5, 1.0), 0.0);
+        assert_eq!(shrink_scalar(-0.5, 1.0), 0.0);
+        assert_eq!(shrink_scalar(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn shrink_is_prox_of_l1() {
+        // prox property: y = shrink(x, λ) minimizes 1/2(y−x)² + λ|y|
+        let mut rng = Pcg64::new(61);
+        for _ in 0..100 {
+            let x = 4.0 * (rng.next_f64() - 0.5);
+            let lam = rng.next_f64();
+            let y = shrink_scalar(x, lam);
+            let obj = |t: f64| 0.5 * (t - x) * (t - x) + lam * t.abs();
+            let f0 = obj(y);
+            for d in [-0.01, 0.01, -0.1, 0.1] {
+                assert!(obj(y + d) >= f0 - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_shrink_matches_composed() {
+        let mut rng = Pcg64::new(62);
+        let m = Mat::gaussian(7, 9, &mut rng);
+        let uv = Mat::gaussian(7, 9, &mut rng);
+        let mut s = Mat::zeros(7, 9);
+        residual_shrink_into(&mut s, &m, &uv, 0.3);
+        let expect = shrink(&(&m - &uv), 0.3);
+        assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn huber_matches_piecewise() {
+        let lam = 1.5;
+        assert!((huber_scalar(0.5, lam) - 0.125).abs() < 1e-15);
+        assert!((huber_scalar(2.0, lam) - (1.5 * 2.0 - 1.125)).abs() < 1e-12);
+        assert!((huber_scalar(-2.0, lam) - (1.5 * 2.0 - 1.125)).abs() < 1e-12);
+        // continuity at the knots
+        let eps = 1e-9;
+        assert!((huber_scalar(lam - eps, lam) - huber_scalar(lam + eps, lam)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn huber_equals_partial_min_identity() {
+        // min_s 1/2(x−s)² + λ|s| = H_λ(x) — the identity behind Eq. 17.
+        let mut rng = Pcg64::new(63);
+        for _ in 0..200 {
+            let x = 6.0 * (rng.next_f64() - 0.5);
+            let lam = 0.2 + rng.next_f64();
+            let s = shrink_scalar(x, lam);
+            let val = 0.5 * (x - s) * (x - s) + lam * s.abs();
+            assert!((val - huber_scalar(x, lam)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn huber_grad_is_clip() {
+        assert_eq!(huber_grad_scalar(5.0, 1.0), 1.0);
+        assert_eq!(huber_grad_scalar(-5.0, 1.0), -1.0);
+        assert_eq!(huber_grad_scalar(0.3, 1.0), 0.3);
+    }
+
+    #[test]
+    fn l1_norm_basic() {
+        let a = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(l1_norm(&a), 10.0);
+    }
+}

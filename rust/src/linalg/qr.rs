@@ -1,0 +1,148 @@
+//! Householder QR factorization.
+//!
+//! Used by the randomized SVD range finder (re-orthonormalization of the
+//! sketch) and as a building block in tests. Produces the thin Q (m×k) and
+//! upper-triangular R (k×k) for an m×n input with k = min(m, n).
+
+
+use super::matrix::Mat;
+
+/// Thin QR: A (m×n) = Q (m×k) · R (k×n), k = min(m,n), QᵀQ = I.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r = a.clone();
+    // store householder vectors
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for j in 0..k {
+        // build householder vector for column j, rows j..m
+        let mut norm_sq = 0.0;
+        for i in j..m {
+            let x = r[(i, j)];
+            norm_sq += x * x;
+        }
+        let norm = norm_sq.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm > 0.0 {
+            let a0 = r[(j, j)];
+            let alpha = if a0 >= 0.0 { -norm } else { norm };
+            v[0] = a0 - alpha;
+            for i in (j + 1)..m {
+                v[i - j] = r[(i, j)];
+            }
+            let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm_sq > 0.0 {
+                // apply H = I − 2 v vᵀ / (vᵀv) to R[j.., j..]
+                for c in j..n {
+                    let mut dot = 0.0;
+                    for i in j..m {
+                        dot += v[i - j] * r[(i, c)];
+                    }
+                    let scale = 2.0 * dot / vnorm_sq;
+                    for i in j..m {
+                        r[(i, c)] -= scale * v[i - j];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // zero strictly-lower part of R, keep top k rows
+    let mut r_out = Mat::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    // accumulate Q = H_0 H_1 … H_{k-1} · [I_k; 0]
+    let mut q = Mat::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q[(i, c)];
+            }
+            let scale = 2.0 * dot / vnorm_sq;
+            for i in j..m {
+                q[(i, c)] -= scale * v[i - j];
+            }
+        }
+    }
+    (q, r_out)
+}
+
+/// Orthonormalize the columns of A in place (returns thin Q).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        let diff = (a - b).frob_norm() / b.frob_norm().max(1.0);
+        assert!(diff < tol, "rel diff {diff}");
+    }
+
+    #[test]
+    fn reconstructs_tall() {
+        let mut rng = Pcg64::new(31);
+        let a = Mat::gaussian(20, 7, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.shape(), (20, 7));
+        assert_eq!(r.shape(), (7, 7));
+        assert_close(&matmul(&q, &r), &a, 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_wide() {
+        let mut rng = Pcg64::new(32);
+        let a = Mat::gaussian(5, 11, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.shape(), (5, 5));
+        assert_eq!(r.shape(), (5, 11));
+        assert_close(&matmul(&q, &r), &a, 1e-12);
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::new(33);
+        let a = Mat::gaussian(30, 10, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = matmul_tn(&q, &q);
+        assert_close(&qtq, &Mat::eye(10), 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::new(34);
+        let a = Mat::gaussian(15, 8, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // duplicate columns → QR still reconstructs
+        let mut rng = Pcg64::new(35);
+        let base = Mat::gaussian(12, 3, &mut rng);
+        let a = Mat::hcat(&[&base, &base]);
+        let (q, r) = qr_thin(&a);
+        assert_close(&matmul(&q, &r), &a, 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! Randomized truncated SVD (Halko–Martinsson–Tropp).
+//!
+//! The APGM/ALM baselines need one SVT per iteration. A full Jacobi SVD is
+//! O(mn²); at the paper's n = 1000–3000 scales this dominates everything, so
+//! the baselines use a rank-(k+p) randomized sketch with q power iterations:
+//!   Ω gaussian n×(k+p);  Y = (AAᵀ)^q A Ω;  Q = orth(Y);  B = QᵀA (small);
+//!   SVD(B) exactly;  U = Q·U_B.
+//! Error ~ σ_{k+1} with high probability; power iterations sharpen the
+//! spectrum gap (we default q=1, oversampling p=8).
+
+use super::gemm::{matmul, matmul_tn};
+use super::matrix::Mat;
+use super::qr::orthonormalize;
+use super::svd::{svd_jacobi, Svd};
+use crate::rng::Pcg64;
+
+/// Parameters for the randomized SVD.
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdParams {
+    /// target rank k
+    pub rank: usize,
+    /// oversampling columns added to the sketch
+    pub oversample: usize,
+    /// power iterations (0 = plain sketch)
+    pub power_iters: usize,
+    /// seed for the gaussian test matrix
+    pub seed: u64,
+}
+
+impl RsvdParams {
+    pub fn new(rank: usize) -> Self {
+        RsvdParams { rank, oversample: 8, power_iters: 1, seed: 0x5EED }
+    }
+}
+
+/// Randomized truncated SVD of A, returning ≤ rank singular triplets.
+pub fn rsvd(a: &Mat, params: RsvdParams) -> Svd {
+    let (m, n) = a.shape();
+    let k = params.rank.min(m.min(n));
+    let sketch = (k + params.oversample).min(m.min(n));
+    let mut rng = Pcg64::new(params.seed);
+    let omega = Mat::gaussian(n, sketch, &mut rng);
+    // Y = A Ω (m × sketch)
+    let mut y = matmul(a, &omega);
+    // power iterations with re-orthonormalization for stability
+    for _ in 0..params.power_iters {
+        let q = orthonormalize(&y);
+        let z = matmul_tn(a, &q); // n × sketch
+        let qz = orthonormalize(&z);
+        y = matmul(a, &qz);
+    }
+    let q = orthonormalize(&y); // m × sketch
+    // B = Qᵀ A (sketch × n) — small, exact SVD
+    let b = matmul_tn(&q, a);
+    let svd_b = svd_jacobi(&b);
+    // U = Q U_B, truncate to k
+    let kk = k.min(svd_b.s.len());
+    let mut ub = Mat::zeros(q.cols(), kk);
+    for j in 0..kk {
+        for i in 0..q.cols() {
+            ub[(i, j)] = svd_b.u[(i, j)];
+        }
+    }
+    let u = matmul(&q, &ub);
+    let mut v = Mat::zeros(n, kk);
+    for j in 0..kk {
+        for i in 0..n {
+            v[(i, j)] = svd_b.v[(i, j)];
+        }
+    }
+    Svd { u, s: svd_b.s[..kk].to_vec(), v }
+}
+
+/// SVT via randomized SVD: keeps values above `tau` among the top `rank`.
+/// Returns (thresholded matrix, retained rank).
+///
+/// Correct as long as the true post-threshold rank ≤ `rank`; callers grow
+/// `rank` adaptively when the retained rank saturates (see
+/// [`crate::algorithms::apgm`]).
+pub fn rsvd_svt(a: &Mat, tau: f64, rank: usize, seed: u64) -> (Mat, usize) {
+    let params = RsvdParams { rank, seed, ..RsvdParams::new(rank) };
+    let svd = rsvd(a, params);
+    super::svd::svt_from(&svd, tau, a.shape())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_nt;
+    use crate::linalg::svd::singular_values;
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Pcg64::new(51);
+        let u = Mat::gaussian(60, 5, &mut rng);
+        let v = Mat::gaussian(40, 5, &mut rng);
+        let a = matmul_nt(&u, &v);
+        let svd = rsvd(&a, RsvdParams::new(5));
+        let approx = crate::linalg::svd::reconstruct(&svd, 5);
+        let rel = (&approx - &a).frob_norm() / a.frob_norm();
+        assert!(rel < 1e-8, "rel {rel}");
+    }
+
+    #[test]
+    fn top_values_match_jacobi() {
+        let mut rng = Pcg64::new(52);
+        // low-rank + small noise
+        let u = Mat::gaussian(50, 4, &mut rng);
+        let v = Mat::gaussian(30, 4, &mut rng);
+        let mut a = matmul_nt(&u, &v);
+        let noise = Mat::gaussian(50, 30, &mut rng);
+        a.axpy(0.01, &noise);
+        let exact = singular_values(&a);
+        let approx = rsvd(&a, RsvdParams::new(4));
+        for i in 0..4 {
+            let rel = (approx.s[i] - exact[i]).abs() / exact[i];
+            assert!(rel < 1e-2, "σ{i}: {} vs {}", approx.s[i], exact[i]);
+        }
+    }
+
+    #[test]
+    fn svt_matches_exact_svt_on_low_rank() {
+        let mut rng = Pcg64::new(53);
+        let u = Mat::gaussian(40, 3, &mut rng);
+        let v = Mat::gaussian(40, 3, &mut rng);
+        let a = matmul_nt(&u, &v);
+        let tau = 1.0;
+        let (exact, r1) = crate::linalg::svd::svt(&a, tau);
+        let (approx, r2) = rsvd_svt(&a, tau, 8, 99);
+        assert_eq!(r1, r2);
+        let rel = (&exact - &approx).frob_norm() / exact.frob_norm().max(1.0);
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+
+    #[test]
+    fn orthonormal_u() {
+        let mut rng = Pcg64::new(54);
+        let a = Mat::gaussian(30, 20, &mut rng);
+        let svd = rsvd(&a, RsvdParams::new(6));
+        let utu = matmul_tn(&svd.u, &svd.u);
+        let rel = (&utu - &Mat::eye(svd.u.cols())).frob_norm();
+        assert!(rel < 1e-8, "UᵀU dev {rel}");
+    }
+}

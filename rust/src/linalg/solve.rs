@@ -1,0 +1,167 @@
+//! Small dense solves: Cholesky factorization and SPD linear systems.
+//!
+//! Used for the ridge system `(UᵀU + ρI) Vᵀ = Uᵀ(M−S)` (paper Eq. 15) — the
+//! r×r solve at the heart of the inner problem. r ≤ a few hundred, so an
+//! unblocked Cholesky is plenty.
+
+use super::matrix::Mat;
+
+/// Cholesky factor L (lower-triangular) of an SPD matrix A = L·Lᵀ.
+/// Returns `None` if A is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky: square required");
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / dj;
+        }
+    }
+    Some(l)
+}
+
+/// Solve A·X = B for SPD A via Cholesky; B and X are n×k.
+pub fn solve_spd(a: &Mat, b: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    Some(cholesky_solve(&l, b))
+}
+
+/// Given the Cholesky factor L of A, solve A·X = B (forward + back subst).
+pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut x = b.clone();
+    // forward: L·Y = B
+    for i in 0..n {
+        for c in 0..k {
+            let mut s = x[(i, c)];
+            for j in 0..i {
+                s -= l[(i, j)] * x[(j, c)];
+            }
+            x[(i, c)] = s / l[(i, i)];
+        }
+    }
+    // backward: Lᵀ·X = Y
+    for i in (0..n).rev() {
+        for c in 0..k {
+            let mut s = x[(i, c)];
+            for j in (i + 1)..n {
+                s -= l[(j, i)] * x[(j, c)];
+            }
+            x[(i, c)] = s / l[(i, i)];
+        }
+    }
+    x
+}
+
+/// Ridge solve for the RPCA inner problem (Eq. 15):
+/// returns Vᵀ' as V (n_i×r): V = (M−S)ᵀ U (UᵀU + ρI)^{-1}.
+///
+/// `g` must already be UᵀU; `rhs` must be Uᵀ(M−S) (r×n_i). Output is n_i×r.
+pub fn ridge_solve_v(g: &Mat, rhs: &Mat, rho: f64) -> Mat {
+    let r = g.rows();
+    let mut greg = g.clone();
+    for i in 0..r {
+        greg[(i, i)] += rho;
+    }
+    // (G+ρI) Vᵀ = RHS  →  Vᵀ is r×n_i; return V = (Vᵀ)ᵀ
+    let vt = solve_spd(&greg, rhs).expect("G+ρI must be SPD for ρ>0");
+    vt.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram, matmul, matmul_tn};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::new(21);
+        let b = Mat::gaussian(12, 6, &mut rng);
+        let mut a = gram(&b); // SPD-ish (6x6, rank 6 w.h.p.)
+        for i in 0..6 {
+            a[(i, i)] += 0.5;
+        }
+        let l = cholesky(&a).expect("SPD");
+        let llt = matmul(&l, &l.transpose());
+        assert!((&llt - &a).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigs 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        let mut rng = Pcg64::new(22);
+        let b = Mat::gaussian(20, 5, &mut rng);
+        let mut a = gram(&b);
+        for i in 0..5 {
+            a[(i, i)] += 1.0;
+        }
+        let rhs = Mat::gaussian(5, 3, &mut rng);
+        let x = solve_spd(&a, &rhs).unwrap();
+        let back = matmul(&a, &x);
+        assert!((&back - &rhs).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_solve_satisfies_normal_equations() {
+        // V should satisfy (UᵀU + ρI) Vᵀ = Uᵀ(M−S)
+        let mut rng = Pcg64::new(23);
+        let u = Mat::gaussian(30, 4, &mut rng);
+        let resid = Mat::gaussian(30, 10, &mut rng); // plays (M−S)
+        let g = gram(&u);
+        let rhs = matmul_tn(&u, &resid);
+        let rho = 0.1;
+        let v = ridge_solve_v(&g, &rhs, rho);
+        assert_eq!(v.shape(), (10, 4));
+        let mut greg = g.clone();
+        for i in 0..4 {
+            greg[(i, i)] += rho;
+        }
+        let lhs = matmul(&greg, &v.transpose());
+        assert!((&lhs - &rhs).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_solve_is_inner_minimizer() {
+        // f(V) = 1/2||U Vᵀ − R||² + ρ/2||V||² should increase under
+        // perturbation of the ridge solution.
+        let mut rng = Pcg64::new(24);
+        let u = Mat::gaussian(25, 3, &mut rng);
+        let rmat = Mat::gaussian(25, 7, &mut rng);
+        let rho = 0.05;
+        let g = gram(&u);
+        let rhs = matmul_tn(&u, &rmat);
+        let v = ridge_solve_v(&g, &rhs, rho);
+        let f = |vv: &Mat| {
+            let fit = &matmul(&u, &vv.transpose()) - &rmat;
+            0.5 * fit.frob_norm_sq() + 0.5 * rho * vv.frob_norm_sq()
+        };
+        let f0 = f(&v);
+        for tag in 0..5 {
+            let mut rng2 = Pcg64::new(100 + tag);
+            let pert = Mat::gaussian(7, 3, &mut rng2);
+            let vp = &v + &pert.scale(0.01);
+            assert!(f(&vp) > f0, "perturbation should increase objective");
+        }
+    }
+}

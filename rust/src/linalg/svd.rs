@@ -1,0 +1,290 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! Exact (to working precision) and simple; O(m n² · sweeps). Used for
+//! the σ-spectrum metrics (paper Fig. 3 / Table 1) and for the SVT steps of
+//! the APGM/ALM baselines at small n. For n ≥ ~500 the baselines switch to
+//! [`super::rsvd`] (randomized truncated SVD).
+
+use super::gemm::matmul;
+use super::matrix::Mat;
+
+/// Result of a (thin) SVD: A = U · diag(s) · Vᵀ with s descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat, // n×k (columns are right singular vectors)
+}
+
+/// One-sided Jacobi SVD of A (m×n, any shape). Returns the thin SVD with
+/// k = min(m,n) singular triplets, singular values descending.
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // work on the transpose and swap U/V
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Now m >= n. Orthogonalize the columns of W by Jacobi rotations.
+    // Storage is row-major, so we operate on the TRANSPOSED factors:
+    // row j of `wt` is column j of W (contiguous — the rotation sweep is
+    // pure unit-stride; working on columns directly was 2.5x slower, see
+    // EXPERIMENTS.md §Perf).
+    let mut wt = a.transpose(); // n x m, row j = column j of W
+    let mut vt = Mat::eye(n); //   n x n, row j = column j of V
+    let eps = 1e-13;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // [app apq; apq aqq] of WᵀW from contiguous rows p, q,
+                // two accumulators per sum so the reductions pipeline
+                let (rp, rq) = {
+                    let (head, tail) = wt.as_mut_slice().split_at_mut(q * m);
+                    (&mut head[p * m..(p + 1) * m], &mut tail[..m])
+                };
+                let (mut app0, mut app1) = (0.0f64, 0.0f64);
+                let (mut aqq0, mut aqq1) = (0.0f64, 0.0f64);
+                let (mut apq0, mut apq1) = (0.0f64, 0.0f64);
+                let mut i = 0;
+                while i + 2 <= m {
+                    let (wp0, wq0) = (rp[i], rq[i]);
+                    let (wp1, wq1) = (rp[i + 1], rq[i + 1]);
+                    app0 += wp0 * wp0;
+                    app1 += wp1 * wp1;
+                    aqq0 += wq0 * wq0;
+                    aqq1 += wq1 * wq1;
+                    apq0 += wp0 * wq0;
+                    apq1 += wp1 * wq1;
+                    i += 2;
+                }
+                if i < m {
+                    let (wp, wq) = (rp[i], rq[i]);
+                    app0 += wp * wp;
+                    aqq0 += wq * wq;
+                    apq0 += wp * wq;
+                }
+                let app = app0 + app1;
+                let aqq = aqq0 + aqq1;
+                let apq = apq0 + apq1;
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing apq
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = rp[i];
+                    let wq = rq[i];
+                    rp[i] = c * wp - s * wq;
+                    rq[i] = s * wp + c * wq;
+                }
+                let (vp_row, vq_row) = {
+                    let (head, tail) = vt.as_mut_slice().split_at_mut(q * n);
+                    (&mut head[p * n..(p + 1) * n], &mut tail[..n])
+                };
+                for i in 0..n {
+                    let vp = vp_row[i];
+                    let vq = vq_row[i];
+                    vp_row[i] = c * vp - s * vq;
+                    vq_row[i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    // singular values = row norms of wt; U columns = normalized rows
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| wt.row(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    let mut u = Mat::zeros(m, n);
+    for j in 0..n {
+        let sj = s[j];
+        if sj > 1e-300 {
+            let row = wt.row(j);
+            for i in 0..m {
+                u[(i, j)] = row[i] / sj;
+            }
+        }
+    }
+    // expose V in column-major-of-columns convention (n x n, columns are
+    // right singular vectors) to keep the public contract unchanged
+    let v = vt.transpose();
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let s_sorted: Vec<f64> = order.iter().map(|&i| s[i]).collect();
+    let mut u_sorted = Mat::zeros(m, n);
+    let mut v_sorted = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..m {
+            u_sorted[(i, newj)] = u[(i, oldj)];
+        }
+        for i in 0..n {
+            v_sorted[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    s = s_sorted;
+    Svd { u: u_sorted, s, v: v_sorted }
+}
+
+/// Singular values only (descending).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    svd_jacobi(a).s
+}
+
+/// Reconstruct A from an SVD truncated to rank k.
+pub fn reconstruct(svd: &Svd, k: usize) -> Mat {
+    let k = k.min(svd.s.len());
+    let (m, _) = svd.u.shape();
+    let n = svd.v.rows();
+    let mut us = Mat::zeros(m, k);
+    for j in 0..k {
+        for i in 0..m {
+            us[(i, j)] = svd.u[(i, j)] * svd.s[j];
+        }
+    }
+    let mut vt = Mat::zeros(k, n);
+    for j in 0..k {
+        for i in 0..n {
+            vt[(j, i)] = svd.v[(i, j)];
+        }
+    }
+    matmul(&us, &vt)
+}
+
+/// Singular value thresholding: SVT_τ(A) = U·shrink_τ(Σ)·Vᵀ.
+/// The proximal operator of the nuclear norm — the core step of the
+/// APGM and ALM baselines.
+pub fn svt(a: &Mat, tau: f64) -> (Mat, usize) {
+    let svd = svd_jacobi(a);
+    svt_from(&svd, tau, a.shape())
+}
+
+/// SVT given a precomputed (possibly truncated) SVD.
+pub fn svt_from(svd: &Svd, tau: f64, shape: (usize, usize)) -> (Mat, usize) {
+    let (m, n) = shape;
+    let kept: Vec<usize> = (0..svd.s.len()).filter(|&i| svd.s[i] > tau).collect();
+    let rank = kept.len();
+    if rank == 0 {
+        return (Mat::zeros(m, n), 0);
+    }
+    let mut us = Mat::zeros(m, rank);
+    let mut vt = Mat::zeros(rank, n);
+    for (c, &j) in kept.iter().enumerate() {
+        let sv = svd.s[j] - tau;
+        for i in 0..m {
+            us[(i, c)] = svd.u[(i, j)] * sv;
+        }
+        for i in 0..n {
+            vt[(c, i)] = svd.v[(i, j)];
+        }
+    }
+    (matmul(&us, &vt), rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_tn;
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        let diff = (a - b).frob_norm() / b.frob_norm().max(1.0);
+        assert!(diff < tol, "rel diff {diff}");
+    }
+
+    #[test]
+    fn reconstructs_square() {
+        let mut rng = Pcg64::new(41);
+        let a = Mat::gaussian(10, 10, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert_close(&reconstruct(&svd, 10), &a, 1e-10);
+    }
+
+    #[test]
+    fn reconstructs_tall_and_wide() {
+        let mut rng = Pcg64::new(42);
+        let tall = Mat::gaussian(20, 6, &mut rng);
+        assert_close(&reconstruct(&svd_jacobi(&tall), 6), &tall, 1e-10);
+        let wide = Mat::gaussian(6, 20, &mut rng);
+        assert_close(&reconstruct(&svd_jacobi(&wide), 6), &wide, 1e-10);
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let mut rng = Pcg64::new(43);
+        let a = Mat::gaussian(15, 8, &mut rng);
+        let svd = svd_jacobi(&a);
+        assert_close(&matmul_tn(&svd.u, &svd.u), &Mat::eye(8), 1e-10);
+        assert_close(&matmul_tn(&svd.v, &svd.v), &Mat::eye(8), 1e-10);
+    }
+
+    #[test]
+    fn values_descending_nonnegative() {
+        let mut rng = Pcg64::new(44);
+        let a = Mat::gaussian(12, 9, &mut rng);
+        let s = singular_values(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn known_singular_values_diagonal() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (4 - i) as f64 } else { 0.0 });
+        let s = singular_values(&a);
+        for (got, want) in s.iter().zip(&[4.0, 3.0, 2.0, 1.0]) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn detects_low_rank() {
+        let mut rng = Pcg64::new(45);
+        let u = Mat::gaussian(20, 3, &mut rng);
+        let v = Mat::gaussian(15, 3, &mut rng);
+        let a = crate::linalg::gemm::matmul_nt(&u, &v);
+        let s = singular_values(&a);
+        assert!(s[2] > 1e-6);
+        assert!(s[3] < 1e-9 * s[0], "σ₄ should vanish for rank-3: {:?}", &s[..5]);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ||A||²_F = Σ σᵢ²
+        let mut rng = Pcg64::new(46);
+        let a = Mat::gaussian(9, 13, &mut rng);
+        let s = singular_values(&a);
+        let sum_sq: f64 = s.iter().map(|x| x * x).sum();
+        assert!((sum_sq - a.frob_norm_sq()).abs() / a.frob_norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn svt_shrinks_rank_and_values() {
+        let mut rng = Pcg64::new(47);
+        let a = Mat::gaussian(10, 10, &mut rng);
+        let s_before = singular_values(&a);
+        let tau = s_before[4]; // keep ~4 values
+        let (out, rank) = svt(&a, tau);
+        assert!(rank <= 4);
+        let s_after = singular_values(&out);
+        for (i, &sv) in s_after.iter().enumerate().take(rank) {
+            assert!((sv - (s_before[i] - tau)).abs() < 1e-8, "σ{i}");
+        }
+    }
+
+    #[test]
+    fn svt_of_zero_tau_is_identity() {
+        let mut rng = Pcg64::new(48);
+        let a = Mat::gaussian(8, 5, &mut rng);
+        let (out, _) = svt(&a, 0.0);
+        assert_close(&out, &a, 1e-10);
+    }
+}

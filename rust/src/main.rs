@@ -1,0 +1,9 @@
+//! dcf-pca — launcher binary. See `dcf-pca help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(err) = dcf_pca::cli::run(&argv) {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}

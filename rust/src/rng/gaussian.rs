@@ -1,0 +1,76 @@
+//! Standard-normal sampling via the Box–Muller transform (polar variant).
+
+use super::pcg::Pcg64;
+
+/// Wraps a [`Pcg64`] and yields N(0,1) samples. Caches the second
+/// Box–Muller output so cost is amortized to one transform per two draws.
+#[derive(Clone, Debug)]
+pub struct GaussianSource {
+    rng: Pcg64,
+    spare: Option<f64>,
+}
+
+impl GaussianSource {
+    pub fn new(rng: Pcg64) -> Self {
+        GaussianSource { rng, spare: None }
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// One N(0,1) sample (Marsaglia polar method).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.rng.next_f64() - 1.0;
+            let v = 2.0 * self.rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let scale = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * scale);
+                return u * scale;
+            }
+        }
+    }
+
+    /// Fill a buffer with N(0,1) samples.
+    pub fn fill(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.next_gaussian();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_standard_normal() {
+        let mut g = GaussianSource::new(Pcg64::new(5));
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // kurtosis ≈ 3 for a gaussian
+        let kurt = xs.iter().map(|x| x.powi(4)).sum::<f64>() / n as f64 / (var * var);
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn tail_mass_is_sane() {
+        let mut g = GaussianSource::new(Pcg64::new(6));
+        let n = 100_000;
+        let beyond2: usize = (0..n)
+            .filter(|_| g.next_gaussian().abs() > 2.0)
+            .count();
+        let frac = beyond2 as f64 / n as f64;
+        // P(|Z| > 2) ≈ 0.0455
+        assert!((frac - 0.0455).abs() < 0.005, "frac {frac}");
+    }
+}

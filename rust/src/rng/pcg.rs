@@ -1,0 +1,134 @@
+//! PCG64 (XSL-RR 128/64) and the SplitMix64 seeder.
+
+/// One step of SplitMix64; used to expand a single u64 seed into the
+/// 128-bit PCG state and into per-component sub-seeds.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG64 XSL-RR: 128-bit LCG state, 64-bit xorshift-rotate output.
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation".
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion of a single u64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let s1 = splitmix64(&mut sm);
+        let i0 = splitmix64(&mut sm);
+        let i1 = splitmix64(&mut sm);
+        let state = ((s0 as u128) << 64) | s1 as u128;
+        // stream selector must be odd
+        let inc = ((((i0 as u128) << 64) | i1 as u128) << 1) | 1;
+        let mut rng = Pcg64 { state, inc };
+        // burn a step so state depends on inc
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent generator for a sub-component (client i,
+    /// matrix j, ...). Deterministic in (self's seed path, tag).
+    pub fn fork(&self, tag: u64) -> Pcg64 {
+        let mut sm = (self.state as u64) ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let a = splitmix64(&mut sm);
+        Pcg64::new(a ^ tag.rotate_left(17))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire's method
+    /// simplified with rejection).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below: bound must be positive");
+        // rejection sampling over the top chunk
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference vector: seed=0 produces these first outputs
+        // (cross-checked against the canonical Java SplittableRandom impl).
+        let mut s = 0u64;
+        assert_eq!(splitmix64(&mut s), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(&mut s), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let base = Pcg64::new(3);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+        // and forks are reproducible
+        let mut a2 = base.fork(0);
+        let va2: Vec<u64> = (0..8).map(|_| a2.next_u64()).collect();
+        assert_eq!(va, va2);
+    }
+
+    #[test]
+    fn mean_is_roughly_half() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+}

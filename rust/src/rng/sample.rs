@@ -1,0 +1,109 @@
+//! Sampling utilities: distinct index selection (for sparse supports) and
+//! Fisher–Yates shuffles.
+
+use super::pcg::Pcg64;
+
+/// Sample `k` distinct indices from `[0, n)`.
+///
+/// Uses Floyd's algorithm when k is small relative to n (no O(n) buffer),
+/// and a partial Fisher–Yates otherwise.
+pub fn sample_distinct_indices(rng: &mut Pcg64, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} distinct from {n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k * 4 <= n {
+        // Floyd's: guarantees distinctness with expected O(k) draws.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = rng.next_below((j + 1) as u64) as usize;
+            if chosen.insert(t) {
+                out.push(t);
+            } else {
+                chosen.insert(j);
+                out.push(j);
+            }
+        }
+        out
+    } else {
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: first k entries become the sample
+        for i in 0..k {
+            let j = i + rng.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<T>(rng: &mut Pcg64, xs: &mut [T]) {
+    let n = xs.len();
+    for i in (1..n).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        xs.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_and_in_range_small_k() {
+        let mut r = Pcg64::new(1);
+        let idx = sample_distinct_indices(&mut r, 1000, 50);
+        assert_eq!(idx.len(), 50);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 50);
+        assert!(idx.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn distinct_and_in_range_large_k() {
+        let mut r = Pcg64::new(2);
+        let idx = sample_distinct_indices(&mut r, 100, 90);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 90);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn full_sample_is_permutation() {
+        let mut r = Pcg64::new(3);
+        let mut idx = sample_distinct_indices(&mut r, 32, 32);
+        idx.sort_unstable();
+        assert_eq!(idx, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(4);
+        let mut xs: Vec<u32> = (0..64).collect();
+        shuffle(&mut r, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+        assert_ne!(xs, (0..64).collect::<Vec<_>>(), "shuffle changed order");
+    }
+
+    #[test]
+    fn sampling_is_roughly_uniform() {
+        // each index should appear ~ k/n of the time
+        let mut counts = vec![0usize; 20];
+        let mut r = Pcg64::new(5);
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in sample_distinct_indices(&mut r, 20, 4) {
+                counts[i] += 1;
+            }
+        }
+        let expected = trials as f64 * 4.0 / 20.0;
+        for (i, &c) in counts.iter().enumerate() {
+            let rel = (c as f64 - expected).abs() / expected;
+            assert!(rel < 0.1, "index {i} count {c} vs expected {expected}");
+        }
+    }
+}

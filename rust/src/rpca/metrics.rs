@@ -1,0 +1,173 @@
+//! Evaluation metrics from the paper.
+//!
+//! - relative recovery error (Eq. 30):
+//!   `err = (‖L−L₀‖²_F + ‖S−S₀‖²_F) / (‖L₀‖²_F + ‖S₀‖²_F)`
+//! - relative singular-value error (Table 1):
+//!   `max_i |σ_i(L) − σ_i(L₀)| / σ_r(L₀)`
+
+use crate::linalg::{singular_values, Mat};
+
+use super::problem::RpcaProblem;
+
+/// Paper Eq. 30 — the headline recovery metric.
+pub fn relative_error(l: &Mat, s: &Mat, l0: &Mat, s0: &Mat) -> f64 {
+    let num = (l - l0).frob_norm_sq() + (s - s0).frob_norm_sq();
+    let den = l0.frob_norm_sq() + s0.frob_norm_sq();
+    num / den
+}
+
+/// Eq. 30 against a problem's ground truth.
+pub fn problem_error(problem: &RpcaProblem, l: &Mat, s: &Mat) -> f64 {
+    relative_error(l, s, &problem.l0, &problem.s0)
+}
+
+/// Relative error of L alone: ‖L−L₀‖²_F / ‖L₀‖²_F (used in ablations).
+pub fn l_only_error(l: &Mat, l0: &Mat) -> f64 {
+    (l - l0).frob_norm_sq() / l0.frob_norm_sq()
+}
+
+/// Above this min(m,n), spectra are computed with the randomized SVD
+/// (top rank+oversample values) instead of the exact Jacobi SVD, which is
+/// O(mn²·sweeps) and impractical at the paper's n=1000–5000 scales.
+const SV_EXACT_LIMIT: usize = 256;
+
+/// Top-k singular values, exact below [`SV_EXACT_LIMIT`], randomized above.
+pub fn top_singular_values(a: &Mat, k: usize) -> Vec<f64> {
+    let min_dim = a.rows().min(a.cols());
+    if min_dim <= SV_EXACT_LIMIT {
+        let mut s = singular_values(a);
+        s.truncate(k);
+        s
+    } else {
+        let params = crate::linalg::RsvdParams {
+            oversample: 10,
+            power_iters: 2,
+            ..crate::linalg::RsvdParams::new(k)
+        };
+        crate::linalg::rsvd(a, params).s
+    }
+}
+
+/// Table 1 metric: `max_i |σ_i(L) − σ_i(L₀)| / σ_r(L₀)` over the top
+/// `r = rank(L₀)` values, where trailing σ of the (possibly higher-p)
+/// recovered matrix beyond r must also stay small — they are included in
+/// the max with target 0 (matching the paper's definition over all i).
+pub fn singular_value_error(l: &Mat, l0: &Mat, rank: usize) -> SvError {
+    // compare a few values beyond r so silent extra rank is caught
+    let k = (rank + 5).min(l.rows().min(l.cols()));
+    let s_rec = top_singular_values(l, k);
+    let s_true = top_singular_values(l0, k);
+    let sigma_r = s_true[rank - 1];
+    let k = s_rec.len().min(s_true.len());
+    let mut max_dev = 0.0f64;
+    for i in 0..k {
+        max_dev = max_dev.max((s_rec[i] - s_true[i]).abs());
+    }
+    let ratio_tail = if s_rec.len() > rank && s_rec[rank - 1] > 0.0 {
+        s_rec[rank] / s_rec[rank - 1]
+    } else {
+        0.0
+    };
+    SvError {
+        relative: max_dev / sigma_r,
+        sigma_r,
+        tail_ratio: ratio_tail,
+        recovered: s_rec,
+        truth: s_true,
+    }
+}
+
+/// Result bundle for the σ-spectrum comparison (Fig. 3 / Table 1).
+#[derive(Clone, Debug)]
+pub struct SvError {
+    /// `max_i |σ_i(L) − σ_i(L₀)| / σ_r(L₀)` — the Table 1 number
+    pub relative: f64,
+    /// σ_r(L₀) (normalizer)
+    pub sigma_r: f64,
+    /// σ_{r+1}(L)/σ_r(L) — Fig. 3's "is the extra rank silent?" check
+    pub tail_ratio: f64,
+    /// full recovered spectrum (descending)
+    pub recovered: Vec<f64>,
+    /// full ground-truth spectrum (descending)
+    pub truth: Vec<f64>,
+}
+
+/// Support recovery: fraction of true-support entries whose sign matches
+/// in the recovered S (diagnostic, not in the paper's tables).
+pub fn support_sign_accuracy(s: &Mat, s0: &Mat) -> f64 {
+    let mut total = 0usize;
+    let mut hit = 0usize;
+    for (x, y) in s.as_slice().iter().zip(s0.as_slice()) {
+        if *y != 0.0 {
+            total += 1;
+            if x.signum() == y.signum() && x.abs() > 1e-9 {
+                hit += 1;
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::rpca::problem::ProblemSpec;
+
+    #[test]
+    fn perfect_recovery_is_zero() {
+        let p = ProblemSpec::square(30, 3, 0.05).generate(1);
+        assert_eq!(problem_error(&p, &p.l0, &p.s0), 0.0);
+    }
+
+    #[test]
+    fn zero_guess_is_one() {
+        let p = ProblemSpec::square(30, 3, 0.05).generate(2);
+        let z1 = Mat::zeros(30, 30);
+        let z2 = Mat::zeros(30, 30);
+        let err = problem_error(&p, &z1, &z2);
+        assert!((err - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_scales_quadratically() {
+        let p = ProblemSpec::square(25, 2, 0.05).generate(3);
+        let mut rng = Pcg64::new(9);
+        let noise = Mat::gaussian(25, 25, &mut rng);
+        let l_eps = &p.l0 + &noise.scale(0.01);
+        let l_2eps = &p.l0 + &noise.scale(0.02);
+        let e1 = problem_error(&p, &l_eps, &p.s0);
+        let e2 = problem_error(&p, &l_2eps, &p.s0);
+        assert!((e2 / e1 - 4.0).abs() < 1e-6, "ratio {}", e2 / e1);
+    }
+
+    #[test]
+    fn sv_error_zero_for_exact() {
+        let p = ProblemSpec::square(20, 2, 0.05).generate(4);
+        let sv = singular_value_error(&p.l0, &p.l0, 2);
+        assert!(sv.relative < 1e-10);
+        assert!(sv.tail_ratio < 1e-9);
+    }
+
+    #[test]
+    fn sv_error_detects_perturbation() {
+        let p = ProblemSpec::square(20, 2, 0.05).generate(5);
+        let mut rng = Pcg64::new(6);
+        let noise = Mat::gaussian(20, 20, &mut rng);
+        let l = &p.l0 + &noise.scale(0.5);
+        let sv = singular_value_error(&l, &p.l0, 2);
+        assert!(sv.relative > 1e-3);
+    }
+
+    #[test]
+    fn support_accuracy_bounds() {
+        let p = ProblemSpec::square(20, 2, 0.1).generate(7);
+        assert_eq!(support_sign_accuracy(&p.s0, &p.s0), 1.0);
+        let z = Mat::zeros(20, 20);
+        assert_eq!(support_sign_accuracy(&z, &p.s0), 0.0);
+    }
+}

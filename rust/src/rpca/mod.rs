@@ -1,0 +1,10 @@
+//! RPCA problem domain: synthetic instance generation (paper §4.1), the
+//! paper's evaluation metrics, and column partitioning across clients.
+
+pub mod metrics;
+pub mod partition;
+pub mod problem;
+
+pub use metrics::{problem_error, relative_error, singular_value_error, SvError};
+pub use partition::ColumnPartition;
+pub use problem::{ProblemSpec, RpcaProblem};

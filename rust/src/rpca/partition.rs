@@ -1,0 +1,157 @@
+//! Column partitioning of the data matrix across E clients (paper Eq. 6):
+//! `M = [M₁ M₂ … M_E]`, `M_i ∈ R^{m×n_i}`, `n = Σ n_i`.
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// A partition of `n` columns into `E` contiguous blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnPartition {
+    /// block boundaries: offsets[i]..offsets[i+1] is client i's slice
+    offsets: Vec<usize>,
+}
+
+impl ColumnPartition {
+    /// Even split: block sizes differ by at most 1.
+    pub fn even(n: usize, clients: usize) -> Self {
+        assert!(clients > 0 && clients <= n, "need 1..=n clients, got {clients} for n={n}");
+        let base = n / clients;
+        let extra = n % clients;
+        let mut offsets = Vec::with_capacity(clients + 1);
+        let mut at = 0;
+        offsets.push(0);
+        for i in 0..clients {
+            at += base + usize::from(i < extra);
+            offsets.push(at);
+        }
+        ColumnPartition { offsets }
+    }
+
+    /// Explicit block sizes (must sum to n; callers validate n separately).
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty() && sizes.iter().all(|&s| s > 0), "all blocks non-empty");
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        offsets.push(0);
+        let mut at = 0;
+        for &s in sizes {
+            at += s;
+            offsets.push(at);
+        }
+        ColumnPartition { offsets }
+    }
+
+    /// Random uneven split: each boundary jittered, all blocks non-empty.
+    /// Models heterogeneous client data volumes.
+    pub fn random_uneven(n: usize, clients: usize, rng: &mut Pcg64) -> Self {
+        assert!(clients > 0 && clients <= n);
+        if clients == 1 {
+            return ColumnPartition::from_sizes(&[n]);
+        }
+        // sample E-1 distinct cut points in 1..n
+        let mut cuts = crate::rng::sample_distinct_indices(rng, n - 1, clients - 1)
+            .into_iter()
+            .map(|c| c + 1)
+            .collect::<Vec<_>>();
+        cuts.sort_unstable();
+        let mut offsets = Vec::with_capacity(clients + 1);
+        offsets.push(0);
+        offsets.extend(cuts);
+        offsets.push(n);
+        ColumnPartition { offsets }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn total_cols(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Column range of client i.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        (self.offsets[i], self.offsets[i + 1])
+    }
+
+    pub fn size(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        (0..self.num_clients()).map(|i| self.size(i)).collect()
+    }
+
+    /// Split M into per-client column blocks.
+    pub fn split(&self, m: &Mat) -> Vec<Mat> {
+        assert_eq!(m.cols(), self.total_cols(), "partition does not cover M");
+        (0..self.num_clients())
+            .map(|i| {
+                let (a, b) = self.range(i);
+                m.cols_range(a, b)
+            })
+            .collect()
+    }
+
+    /// Reassemble per-client blocks into the full matrix.
+    pub fn assemble(&self, blocks: &[Mat]) -> Mat {
+        assert_eq!(blocks.len(), self.num_clients());
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(b.cols(), self.size(i), "block {i} width mismatch");
+        }
+        let refs: Vec<&Mat> = blocks.iter().collect();
+        Mat::hcat(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_partition_sizes() {
+        let p = ColumnPartition::even(10, 3);
+        assert_eq!(p.sizes(), vec![4, 3, 3]);
+        assert_eq!(p.total_cols(), 10);
+        let p2 = ColumnPartition::even(9, 3);
+        assert_eq!(p2.sizes(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::gaussian(6, 17, &mut rng);
+        for e in [1, 2, 5, 17] {
+            let p = ColumnPartition::even(17, e);
+            let blocks = p.split(&m);
+            assert_eq!(blocks.len(), e);
+            let back = p.assemble(&blocks);
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn from_sizes_ranges() {
+        let p = ColumnPartition::from_sizes(&[2, 5, 3]);
+        assert_eq!(p.range(0), (0, 2));
+        assert_eq!(p.range(1), (2, 7));
+        assert_eq!(p.range(2), (7, 10));
+    }
+
+    #[test]
+    fn random_uneven_covers_everything() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..20 {
+            let p = ColumnPartition::random_uneven(50, 7, &mut rng);
+            assert_eq!(p.num_clients(), 7);
+            assert_eq!(p.total_cols(), 50);
+            assert!(p.sizes().iter().all(|&s| s > 0));
+            assert_eq!(p.sizes().iter().sum::<usize>(), 50);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_clients_panics() {
+        ColumnPartition::even(3, 5);
+    }
+}

@@ -1,0 +1,175 @@
+//! Synthetic RPCA problem generation — paper §4.1.
+//!
+//! `L₀ = U₀ V₀ᵀ` with `U₀ ∈ R^{m×r}, V₀ ∈ R^{n×r}` i.i.d. N(0,1);
+//! `S₀` has `⌊s·m·n⌋` nonzero entries drawn from `{−√(mn), +√(mn)}`
+//! (the paper samples from `{−√mn, 0, √mn}`; the 0 outcomes are exactly
+//! the non-support entries, so sampling the support then signing is the
+//! same distribution conditioned on the support size).
+
+use crate::linalg::{matmul_nt, Mat};
+use crate::rng::{sample_distinct_indices, Pcg64};
+
+/// Parameters of a synthetic RPCA instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProblemSpec {
+    /// rows (data dimension)
+    pub m: usize,
+    /// columns (dataset size; distributed across clients)
+    pub n: usize,
+    /// true rank of L₀
+    pub rank: usize,
+    /// fraction of corrupted entries (0 < s < 1)
+    pub sparsity: f64,
+}
+
+impl ProblemSpec {
+    /// Square instance `m = n` with the paper's defaults shape
+    /// (`r = rank`, `s = sparsity`).
+    pub fn square(n: usize, rank: usize, sparsity: f64) -> Self {
+        ProblemSpec { m: n, n, rank, sparsity }
+    }
+
+    /// The paper's canonical setting r = 0.05·n, s = 0.05 (§4.2).
+    pub fn paper_default(n: usize) -> Self {
+        ProblemSpec::square(n, ((n as f64) * 0.05).round().max(1.0) as usize, 0.05)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.m == 0 || self.n == 0 {
+            return Err("m, n must be positive".into());
+        }
+        if self.rank == 0 || self.rank > self.m.min(self.n) {
+            return Err(format!(
+                "rank {} out of range 1..=min(m,n)={}",
+                self.rank,
+                self.m.min(self.n)
+            ));
+        }
+        if !(0.0..1.0).contains(&self.sparsity) {
+            return Err(format!("sparsity {} must be in [0,1)", self.sparsity));
+        }
+        Ok(())
+    }
+
+    /// Generate an instance with ground truth.
+    pub fn generate(&self, seed: u64) -> RpcaProblem {
+        self.validate().expect("invalid ProblemSpec");
+        let rng = Pcg64::new(seed);
+        let u0 = Mat::gaussian(self.m, self.rank, &mut rng.fork(1));
+        let v0 = Mat::gaussian(self.n, self.rank, &mut rng.fork(2));
+        let l0 = matmul_nt(&u0, &v0);
+
+        let total = self.m * self.n;
+        let nnz = ((self.sparsity * total as f64).floor() as usize).min(total);
+        let spike = ((self.m * self.n) as f64).sqrt();
+        let mut s_rng = rng.fork(3);
+        let support = sample_distinct_indices(&mut s_rng, total, nnz);
+        let mut s0 = Mat::zeros(self.m, self.n);
+        {
+            let sd = s0.as_mut_slice();
+            for &idx in &support {
+                let sign = if s_rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                sd[idx] = sign * spike;
+            }
+        }
+        let observed = &l0 + &s0;
+        RpcaProblem { spec: *self, observed, l0, s0, seed }
+    }
+}
+
+/// A generated instance: observation `M = L₀ + S₀` plus the ground truth.
+#[derive(Clone, Debug)]
+pub struct RpcaProblem {
+    pub spec: ProblemSpec,
+    /// the observed (corrupted) data matrix M
+    pub observed: Mat,
+    /// ground-truth low-rank component
+    pub l0: Mat,
+    /// ground-truth sparse component
+    pub s0: Mat,
+    /// generator seed (for provenance in experiment logs)
+    pub seed: u64,
+}
+
+impl RpcaProblem {
+    /// Magnitude of the sparse spikes (√(mn)).
+    pub fn spike_scale(&self) -> f64 {
+        ((self.spec.m * self.spec.n) as f64).sqrt()
+    }
+
+    /// Number of corrupted entries in S₀.
+    pub fn corruption_count(&self) -> usize {
+        self.s0.count_above(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::singular_values;
+
+    #[test]
+    fn decomposition_is_consistent() {
+        let p = ProblemSpec::square(50, 3, 0.1).generate(7);
+        let recomposed = &p.l0 + &p.s0;
+        assert_eq!(recomposed, p.observed);
+    }
+
+    #[test]
+    fn l0_has_exact_rank() {
+        let p = ProblemSpec::square(40, 4, 0.05).generate(8);
+        let s = singular_values(&p.l0);
+        assert!(s[3] > 1e-6);
+        assert!(s[4] < 1e-9 * s[0]);
+    }
+
+    #[test]
+    fn s0_support_size_and_magnitude() {
+        let spec = ProblemSpec::square(30, 2, 0.1);
+        let p = spec.generate(9);
+        let expect_nnz = (0.1f64 * 900.0).floor() as usize;
+        assert_eq!(p.corruption_count(), expect_nnz);
+        let spike = p.spike_scale();
+        for &x in p.s0.as_slice() {
+            assert!(x == 0.0 || (x.abs() - spike).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn both_signs_appear() {
+        let p = ProblemSpec::square(40, 2, 0.2).generate(10);
+        let pos = p.s0.as_slice().iter().filter(|&&x| x > 0.0).count();
+        let neg = p.s0.as_slice().iter().filter(|&&x| x < 0.0).count();
+        assert!(pos > 0 && neg > 0, "pos {pos} neg {neg}");
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let spec = ProblemSpec::square(20, 2, 0.05);
+        let a = spec.generate(123);
+        let b = spec.generate(123);
+        assert_eq!(a.observed, b.observed);
+        let c = spec.generate(124);
+        assert_ne!(a.observed, c.observed);
+    }
+
+    #[test]
+    fn rectangular_supported() {
+        let p = ProblemSpec { m: 20, n: 50, rank: 3, sparsity: 0.05 }.generate(1);
+        assert_eq!(p.observed.shape(), (20, 50));
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(ProblemSpec { m: 0, n: 10, rank: 1, sparsity: 0.1 }.validate().is_err());
+        assert!(ProblemSpec { m: 10, n: 10, rank: 11, sparsity: 0.1 }.validate().is_err());
+        assert!(ProblemSpec { m: 10, n: 10, rank: 2, sparsity: 1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn paper_default_shapes() {
+        let s = ProblemSpec::paper_default(500);
+        assert_eq!((s.m, s.n, s.rank), (500, 500, 25));
+        assert!((s.sparsity - 0.05).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact manifest: which AOT-compiled shape variants exist and how to
+//! pick one for a client's block.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json`:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "dtype": "f32",
+//!   "variants": [
+//!     {"file": "client_m64_n32_r4_k2_j3.hlo.txt",
+//!      "m": 64, "n_i": 32, "r": 4, "k_local": 2, "inner_sweeps": 3}
+//!   ]
+//! }
+//! ```
+//!
+//! A variant is usable for a client block of width `w ≤ n_i` (the block is
+//! zero-padded to `n_i`; padding safety is property-tested — zero columns
+//! produce exactly zero V rows / S columns and contribute nothing to ∇_U).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One compiled shape variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub file: String,
+    pub m: usize,
+    pub n_i: usize,
+    pub r: usize,
+    pub k_local: usize,
+    pub inner_sweeps: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json")?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let dtype = j.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+        if dtype != "f32" {
+            bail!("manifest dtype '{dtype}' unsupported");
+        }
+        let variants = j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing variants"))?
+            .iter()
+            .map(|v| {
+                let field = |k: &str| {
+                    v.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("variant missing '{k}'"))
+                };
+                Ok(Variant {
+                    file: v
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("variant missing 'file'"))?
+                        .to_string(),
+                    m: field("m")?,
+                    n_i: field("n_i")?,
+                    r: field("r")?,
+                    k_local: field("k_local")?,
+                    inner_sweeps: field("inner_sweeps")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if variants.is_empty() {
+            bail!("manifest has no variants — run `make artifacts`");
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    /// Pick the best variant for a client block: exact (m, r, k_local)
+    /// match, smallest n_i ≥ block width. Returns None if nothing fits.
+    pub fn select(&self, m: usize, width: usize, r: usize, k_local: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.m == m && v.r == r && v.k_local == k_local && v.n_i >= width)
+            .min_by_key(|v| v.n_i)
+    }
+
+    pub fn path_of(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "version": 1,
+        "dtype": "f32",
+        "variants": [
+            {"file": "a.hlo.txt", "m": 64, "n_i": 32, "r": 4, "k_local": 2, "inner_sweeps": 3},
+            {"file": "b.hlo.txt", "m": 64, "n_i": 64, "r": 4, "k_local": 2, "inner_sweeps": 3},
+            {"file": "c.hlo.txt", "m": 128, "n_i": 64, "r": 8, "k_local": 2, "inner_sweeps": 3}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_selects() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        // smallest fitting n_i
+        let v = m.select(64, 20, 4, 2).unwrap();
+        assert_eq!(v.file, "a.hlo.txt");
+        let v = m.select(64, 33, 4, 2).unwrap();
+        assert_eq!(v.file, "b.hlo.txt");
+        // exact fit boundary
+        let v = m.select(64, 64, 4, 2).unwrap();
+        assert_eq!(v.file, "b.hlo.txt");
+        // nothing fits
+        assert!(m.select(64, 65, 4, 2).is_none());
+        assert!(m.select(64, 20, 5, 2).is_none());
+        assert!(m.select(64, 20, 4, 3).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "variants": []}"#, PathBuf::new()).is_err());
+        assert!(
+            Manifest::parse(r#"{"version": 1, "variants": []}"#, PathBuf::new()).is_err(),
+            "empty variants should demand `make artifacts`"
+        );
+        assert!(Manifest::parse(
+            r#"{"version": 1, "variants": [{"file": "x", "m": 1}]}"#,
+            PathBuf::new()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn path_join() {
+        let m = Manifest::parse(DOC, PathBuf::from("/arts")).unwrap();
+        assert_eq!(m.path_of(&m.variants[0]), PathBuf::from("/arts/a.hlo.txt"));
+    }
+}

@@ -1,0 +1,273 @@
+//! `PjrtKernel` — the artifact-backed implementation of
+//! [`LocalUpdateKernel`]: client local epochs execute the AOT-compiled
+//! JAX/Pallas `client_update` through PJRT instead of the native rust
+//! kernels. Parity against [`NativeKernel`] is verified in
+//! `rust/tests/runtime_parity.rs`.
+//!
+//! The artifact signature (see `python/compile/model.py`):
+//!
+//! ```text
+//! client_update(U f32[m,p], S f32[m,n_i], M f32[m,n_i],
+//!               eta f32[], n_frac f32[])
+//!   -> (U' f32[m,p], V' f32[n_i,p], S' f32[m,n_i], grad_norm f32[])
+//! ```
+//!
+//! There is no V input: the first exact inner sweep recomputes V from
+//! (U, S), so only S carries state across rounds (the native kernel has
+//! the same property — its first sweep discards the incoming V).
+//!
+//! K (local iterations), J (inner sweeps), ρ and λ are all baked into
+//! each variant at lowering time (compile-time constants in the
+//! artifact). Every variant is lowered with the library defaults from
+//! `python/compile/shapes.py::BAKED`; running with different
+//! hyperparameters requires editing that file and re-running
+//! `make artifacts`. The executor validates the requested hyper against
+//! the baked values and fails with a pointed error otherwise.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::algorithms::factor::{lipschitz_estimate, ClientState, FactorHyper};
+use crate::coordinator::kernel::{EpochOutput, LocalUpdateKernel};
+use crate::linalg::Mat;
+
+use super::artifacts::{Manifest, Variant};
+use super::pjrt::{CompiledHlo, PjrtArg, PjrtRuntime};
+
+/// Hyperparameters baked into the artifacts at lowering time. Must match
+/// `python/compile/shapes.py`.
+#[derive(Clone, Copy, Debug)]
+pub struct BakedHyper {
+    pub rho: f64,
+    pub lambda_scale: f64, // λ = lambda_scale·√r
+}
+
+impl Default for BakedHyper {
+    fn default() -> Self {
+        // keep in sync with python/compile/shapes.py
+        BakedHyper { rho: 1e-2, lambda_scale: 1.0 }
+    }
+}
+
+struct Compiled {
+    variant: Variant,
+    hlo: CompiledHlo,
+}
+
+/// Artifact-backed local-update kernel. Thread-safe: PJRT executions are
+/// serialized through a mutex (the CPU plugin is single-device anyway and
+/// the testbed has one core).
+pub struct PjrtKernel {
+    inner: Mutex<PjrtInner>,
+    baked: BakedHyper,
+}
+
+struct PjrtInner {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    compiled: Vec<Compiled>,
+}
+
+// SAFETY: all access to the PJRT client/executables goes through the
+// Mutex; the underlying objects are not thread-affine (PJRT's C API is
+// thread-safe), we just never call it concurrently.
+unsafe impl Send for PjrtKernel {}
+unsafe impl Sync for PjrtKernel {}
+
+impl PjrtKernel {
+    /// Load the manifest and set up the CPU PJRT client. Artifacts are
+    /// compiled lazily on first use of each variant.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(PjrtKernel {
+            inner: Mutex::new(PjrtInner { runtime, manifest, compiled: Vec::new() }),
+            baked: BakedHyper::default(),
+        })
+    }
+
+    /// Check that requested hyperparameters match the baked ones.
+    fn check_hyper(&self, hyper: &FactorHyper) -> Result<()> {
+        let lambda_expected = self.baked.lambda_scale * (hyper.rank as f64).sqrt().max(1.0);
+        if (hyper.rho - self.baked.rho).abs() > 1e-12
+            || (hyper.lambda - lambda_expected).abs() > 1e-9
+        {
+            bail!(
+                "artifact was lowered with ρ={}, λ={:.4} (= {}·√r) but the run requests \
+                 ρ={}, λ={:.4}; re-run `make artifacts` with matching hyperparameters",
+                self.baked.rho,
+                lambda_expected,
+                self.baked.lambda_scale,
+                hyper.rho,
+                hyper.lambda
+            );
+        }
+        Ok(())
+    }
+}
+
+impl PjrtInner {
+    fn compiled_for(
+        &mut self,
+        m: usize,
+        width: usize,
+        r: usize,
+        k_local: usize,
+        inner_sweeps: usize,
+    ) -> Result<usize> {
+        if let Some(idx) = self.compiled.iter().position(|c| {
+            c.variant.m == m
+                && c.variant.r == r
+                && c.variant.k_local == k_local
+                && c.variant.n_i >= width
+        }) {
+            return Ok(idx);
+        }
+        let variant = self
+            .manifest
+            .select(m, width, r, k_local)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact variant for m={m}, width={width}, r={r}, K={k_local} — \
+                     add it to python/compile/shapes.py and re-run `make artifacts`"
+                )
+            })?
+            .clone();
+        if variant.inner_sweeps != inner_sweeps {
+            bail!(
+                "artifact variant {} was lowered with J={} inner sweeps, run requests J={}",
+                variant.file,
+                variant.inner_sweeps,
+                inner_sweeps
+            );
+        }
+        let path = self.manifest.path_of(&variant);
+        let hlo = self
+            .runtime
+            .compile_file(&path, 4)
+            .with_context(|| format!("compiling artifact {}", path.display()))?;
+        self.compiled.push(Compiled { variant, hlo });
+        Ok(self.compiled.len() - 1)
+    }
+}
+
+/// Zero-pad a matrix's columns to `n_i`.
+fn pad_cols(m: &Mat, n_i: usize) -> Mat {
+    if m.cols() == n_i {
+        return m.clone();
+    }
+    let mut out = Mat::zeros(m.rows(), n_i);
+    out.set_cols_range(0, m);
+    out
+}
+
+/// Zero-pad a matrix's rows to `n_i` (for V). Retained alongside
+/// `pad_cols` for artifact variants that may take V inputs (J=0 designs);
+/// currently exercised by tests only.
+#[allow(dead_code)]
+fn pad_rows(m: &Mat, n_i: usize) -> Mat {
+    if m.rows() == n_i {
+        return m.clone();
+    }
+    let mut out = Mat::zeros(n_i, m.cols());
+    for i in 0..m.rows() {
+        out.row_mut(i).copy_from_slice(m.row(i));
+    }
+    out
+}
+
+impl LocalUpdateKernel for PjrtKernel {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn local_epoch(
+        &self,
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        eta: f64,
+        k_local: usize,
+    ) -> Result<EpochOutput> {
+        self.check_hyper(hyper)?;
+        let (m, width) = m_block.shape();
+        let mut inner = self.inner.lock().map_err(|_| anyhow!("pjrt mutex poisoned"))?;
+        let idx = inner.compiled_for(m, width, hyper.rank, k_local, hyper.inner_sweeps)?;
+        let n_i = inner.compiled[idx].variant.n_i;
+
+        let s_pad = pad_cols(&state.s, n_i);
+        let m_pad = pad_cols(m_block, n_i);
+        let outputs = inner.compiled[idx]
+            .hlo
+            .run(&[
+                PjrtArg::Mat(u),
+                PjrtArg::Mat(&s_pad),
+                PjrtArg::Mat(&m_pad),
+                PjrtArg::Scalar(eta),
+                PjrtArg::Scalar(n_frac),
+            ])
+            .context("executing client_update artifact")?;
+        drop(inner);
+
+        let [u_out, v_out, s_out, gn_out]: [Mat; 4] = outputs
+            .try_into()
+            .map_err(|_| anyhow!("artifact returned wrong arity"))?;
+        if u_out.shape() != (m, hyper.rank) {
+            bail!("artifact returned U of shape {:?}", u_out.shape());
+        }
+        // strip padding
+        state.v = Mat::from_fn(width, hyper.rank, |i, j| v_out[(i, j)]);
+        state.s = s_out.cols_range(0, width);
+        let grad_norm = gn_out[(0, 0)];
+        let lipschitz = lipschitz_estimate(state, hyper);
+        Ok(EpochOutput { u: u_out, grad_norm, lipschitz })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_helpers() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let pc = pad_cols(&m, 5);
+        assert_eq!(pc.shape(), (2, 5));
+        assert_eq!(pc[(1, 2)], 5.0);
+        assert_eq!(pc[(1, 4)], 0.0);
+        let pr = pad_rows(&m, 4);
+        assert_eq!(pr.shape(), (4, 3));
+        assert_eq!(pr[(1, 2)], 5.0);
+        assert_eq!(pr[(3, 0)], 0.0);
+        // no-op when already sized
+        assert_eq!(pad_cols(&m, 3), m);
+        assert_eq!(pad_rows(&m, 2), m);
+    }
+
+    #[test]
+    fn baked_hyper_check() {
+        // construct without touching PJRT
+        let kernel = PjrtKernel {
+            inner: Mutex::new(PjrtInner {
+                runtime: match PjrtRuntime::cpu() {
+                    Ok(r) => r,
+                    Err(_) => return, // PJRT unavailable in this env: skip
+                },
+                manifest: Manifest {
+                    dir: std::path::PathBuf::new(),
+                    variants: vec![],
+                },
+                compiled: vec![],
+            }),
+            baked: BakedHyper::default(),
+        };
+        let good = FactorHyper::default_for(64, 64, 4);
+        assert!(kernel.check_hyper(&good).is_ok());
+        let mut bad = good;
+        bad.lambda *= 2.0;
+        assert!(kernel.check_hyper(&bad).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: loads AOT-compiled HLO artifacts (produced once by
+//! `make artifacts` from the JAX/Pallas sources in `python/compile/`) and
+//! executes them through the PJRT C API on the request path. See
+//! [`executor::PjrtKernel`] for the coordinator-facing entry point.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{Manifest, Variant};
+pub use executor::PjrtKernel;
+pub use pjrt::{CompiledHlo, PjrtArg, PjrtRuntime};

@@ -1,0 +1,117 @@
+//! PJRT execution of AOT-compiled HLO artifacts.
+//!
+//! Wraps the `xla` crate: load HLO **text** (the interchange format — see
+//! DESIGN.md §Substitutions and /opt/xla-example/README.md for why not
+//! serialized protos), compile it once on the CPU PJRT client, execute it
+//! with f32 literals from the rust hot path. Python is never involved at
+//! runtime.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// A compiled HLO computation ready to execute.
+pub struct CompiledHlo {
+    exe: xla::PjRtLoadedExecutable,
+    /// number of outputs expected in the result tuple
+    pub num_outputs: usize,
+}
+
+/// Owns the PJRT client and compiles artifacts against it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile_file(&self, path: impl AsRef<Path>, num_outputs: usize) -> Result<CompiledHlo> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap_xla)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledHlo { exe, num_outputs })
+    }
+}
+
+impl CompiledHlo {
+    /// Execute with f32 matrix/scalar inputs; returns the output tuple as
+    /// f64 matrices (shapes taken from the artifact's outputs).
+    pub fn run(&self, inputs: &[PjrtArg<'_>]) -> Result<Vec<Mat>> {
+        let literals: Vec<xla::Literal> = inputs.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap_xla)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("executable produced no outputs"))?
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        let parts = out.to_tuple().map_err(wrap_xla)?;
+        if parts.len() != self.num_outputs {
+            bail!("expected {} outputs, artifact returned {}", self.num_outputs, parts.len());
+        }
+        parts.into_iter().map(literal_to_mat).collect()
+    }
+}
+
+/// An input argument: a matrix (f64 → f32 converted) or a scalar.
+pub enum PjrtArg<'a> {
+    Mat(&'a Mat),
+    Scalar(f64),
+}
+
+impl PjrtArg<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            PjrtArg::Mat(m) => {
+                let f32s = m.to_f32();
+                xla::Literal::vec1(&f32s)
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(wrap_xla)
+            }
+            PjrtArg::Scalar(s) => Ok(xla::Literal::scalar(*s as f32)),
+        }
+    }
+}
+
+/// Convert an output literal (f32 array of rank ≤ 2) into a [`Mat`].
+fn literal_to_mat(lit: xla::Literal) -> Result<Mat> {
+    let shape = lit.array_shape().map_err(wrap_xla)?;
+    let dims = shape.dims();
+    let (rows, cols) = match dims.len() {
+        0 => (1usize, 1usize),
+        1 => (dims[0] as usize, 1),
+        2 => (dims[0] as usize, dims[1] as usize),
+        n => bail!("rank-{n} output not supported"),
+    };
+    let data: Vec<f32> = lit.to_vec::<f32>().map_err(wrap_xla)?;
+    if data.len() != rows * cols {
+        bail!("output size {} != {rows}x{cols}", data.len());
+    }
+    Ok(Mat::from_f32(rows, cols, &data))
+}
+
+/// The xla crate's error type does not implement std::error::Error in a
+/// way anyhow can consume directly on all versions — stringify.
+fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}

@@ -1,0 +1,102 @@
+//! Run telemetry: a minimal leveled logger (no `log`-crate consumers in
+//! the offline tree worth wiring) and experiment-output helpers shared by
+//! the CLI and benches.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity. Default Info; set via `DCF_PCA_LOG=debug|info|warn|off`
+/// or [`set_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("DCF_PCA_LOG").as_deref() {
+        Ok("off") => Level::Off,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Off,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Leveled log line to stderr with a component tag.
+pub fn log(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Warn => "WARN",
+            Level::Debug => "DEBG",
+            _ => "INFO",
+        };
+        eprintln!("[{tag}][{component}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::telemetry::log($crate::telemetry::Level::Info, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::telemetry::log($crate::telemetry::Level::Warn, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::telemetry::log($crate::telemetry::Level::Debug, $component, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Off < Level::Warn);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

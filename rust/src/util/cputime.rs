@@ -1,0 +1,52 @@
+//! Per-thread CPU time. The experiment harness simulates E clients as
+//! threads on (possibly) one core, so *wall* time per client would be
+//! inflated by scheduler interleaving up to E×; per-thread CPU time is
+//! the honest "what would this client compute on its own device" metric
+//! used for the paper's Eq. 26 per-client cost curves.
+
+/// CPU seconds consumed by the calling thread.
+pub fn thread_cpu_seconds() -> f64 {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+        if libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) == 0 {
+            return ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9;
+        }
+        0.0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        // portable fallback: process wall clock (documented imprecision)
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_advances_under_load() {
+        let t0 = thread_cpu_seconds();
+        // burn some cpu
+        let mut acc = 0.0f64;
+        for i in 0..2_000_000 {
+            acc += (i as f64).sqrt();
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cpu_seconds();
+        assert!(t1 > t0, "cpu time advanced: {t0} -> {t1}");
+    }
+
+    #[test]
+    fn sleep_does_not_consume_cpu_time() {
+        let t0 = thread_cpu_seconds();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t1 = thread_cpu_seconds();
+        assert!(t1 - t0 < 0.02, "sleeping burned {} cpu-s", t1 - t0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Tiny CSV writer used by the experiment drivers to dump figure series
+//! (err-vs-iteration curves, phase-diagram grids, …) for external plotting.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Accumulates rows and writes a CSV file.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(columns: &[&str]) -> Self {
+        CsvWriter {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, values: &[&dyn std::fmt::Display]) {
+        assert_eq!(values.len(), self.header.len(), "csv row width mismatch");
+        self.rows
+            .push(values.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) {
+        assert_eq!(values.len(), self.header.len(), "csv row width mismatch");
+        self.rows
+            .push(values.iter().map(|v| format!("{v:.10e}")).collect());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let escaped: Vec<String> = row
+                .iter()
+                .map(|f| {
+                    if f.contains(',') || f.contains('"') || f.contains('\n') {
+                        format!("\"{}\"", f.replace('"', "\"\""))
+                    } else {
+                        f.clone()
+                    }
+                })
+                .collect();
+            let _ = writeln!(out, "{}", escaped.join(","));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_csv_text() {
+        let mut w = CsvWriter::new(&["iter", "err"]);
+        w.row(&[&1, &0.5]);
+        w.row(&[&2, &0.25]);
+        let text = w.to_string();
+        assert_eq!(text, "iter,err\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn escapes_fields() {
+        let mut w = CsvWriter::new(&["name"]);
+        w.row(&[&"a,b"]);
+        w.row(&[&"say \"hi\""]);
+        let text = w.to_string();
+        assert!(text.contains("\"a,b\""));
+        assert!(text.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_wrong_width() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&[&1]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small shared utilities: a minimal JSON codec (no serde offline) and a
+//! CSV writer for experiment series.
+
+pub mod cputime;
+pub mod csv;
+pub mod json;
+
+pub use json::Json;

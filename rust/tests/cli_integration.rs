@@ -1,0 +1,160 @@
+//! CLI integration: spawn the real `dcf-pca` binary and check the
+//! launcher surface end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dcf-pca"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["solve", "generate", "serve", "worker", "experiment", "artifacts-check"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn solve_small_dcf_and_csv() {
+    let dir = std::env::temp_dir().join(format!("dcfpca-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("curve.csv");
+    let out = bin()
+        .args([
+            "solve", "--algorithm", "dcf-pca", "--n", "60", "--rank", "3", "--clients", "5",
+            "--rounds", "15", "--csv",
+        ])
+        .arg(&csv)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("DCF-PCA: final err"), "{stdout}");
+    let curve = std::fs::read_to_string(&csv).unwrap();
+    assert!(curve.starts_with("iter,err"));
+    assert_eq!(curve.lines().count(), 16, "header + 15 rounds");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn solve_all_centralized_algorithms() {
+    for algo in ["cf-pca", "apgm", "alm"] {
+        let out = bin()
+            .args(["solve", "--algorithm", algo, "--n", "50", "--rank", "2", "--iters", "40"])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{algo} failed: {}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("final err"), "{algo}: {stdout}");
+    }
+}
+
+#[test]
+fn generate_writes_matrix_and_truth() {
+    let dir = std::env::temp_dir().join(format!("dcfpca-gen-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("m.csv");
+    let out = bin()
+        .args(["generate", "--n", "20", "--rank", "2", "--seed", "9", "--truth", "--out"])
+        .arg(&out_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let m = dcf_pca::cli::commands::generate::read_matrix_csv(out_path.to_str().unwrap()).unwrap();
+    assert_eq!(m.shape(), (20, 20));
+    let l0 = dcf_pca::cli::commands::generate::read_matrix_csv(
+        &format!("{}.l0.csv", out_path.display()),
+    )
+    .unwrap();
+    let s0 = dcf_pca::cli::commands::generate::read_matrix_csv(
+        &format!("{}.s0.csv", out_path.display()),
+    )
+    .unwrap();
+    // M = L0 + S0 (up to CSV round-trip precision)
+    let recomposed = &l0 + &s0;
+    assert!((&recomposed - &m).frob_norm() < 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn solve_rejects_bad_flags() {
+    let out = bin().args(["solve", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown option"));
+}
+
+#[test]
+fn config_file_run() {
+    let dir = std::env::temp_dir().join(format!("dcfpca-cfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        r#"
+name = "itest"
+algorithm = "dcf-pca"
+[problem]
+n = 50
+rank = 2
+seed = 3
+[dcf]
+clients = 5
+rounds = 10
+"#,
+    )
+    .unwrap();
+    let out = bin().args(["solve", "--config"]).arg(&cfg_path).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_and_worker_over_tcp() {
+    // spawn the server process, then 2 worker processes, on an ephemeral
+    // port; tiny problem so the whole thing finishes in seconds.
+    let port = 17431 + (std::process::id() % 1000) as u16;
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = bin()
+        .args([
+            "serve", "--listen", &addr, "--clients", "2", "--n", "40", "--rank", "2",
+            "--rounds", "8", "--seed", "5",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let workers: Vec<_> = (0..2)
+        .map(|id| {
+            // workers must connect in id order (documented demo-launcher
+            // constraint); stagger them
+            std::thread::sleep(std::time::Duration::from_millis(150 * id as u64));
+            bin()
+                .args([
+                    "worker", "--connect", &addr, "--id", &id.to_string(), "--clients", "2",
+                    "--n", "40", "--rank", "2", "--seed", "5",
+                ])
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let status = server.wait().unwrap();
+    assert!(status.success());
+    let mut out = String::new();
+    use std::io::Read as _;
+    server.stdout.take().unwrap().read_to_string(&mut out).unwrap();
+    assert!(out.contains("run complete"), "{out}");
+    assert!(out.contains("final tracked err"), "{out}");
+    for mut w in workers {
+        assert!(w.wait().unwrap().success());
+    }
+}

@@ -1,0 +1,163 @@
+//! Distributed integration over real TCP sockets: the server and clients
+//! exercise the same binary protocol `dcf-pca serve`/`worker` use.
+
+use std::time::Duration;
+
+use dcf_pca::algorithms::factor::FactorHyper;
+use dcf_pca::coordinator::client::{run_client, ClientConfig, FaultPlan};
+use dcf_pca::coordinator::kernel::NativeKernel;
+use dcf_pca::coordinator::protocol::{round_wire_size, update_wire_size};
+use dcf_pca::coordinator::server::{run_server, FaultPolicy, ServerConfig};
+use dcf_pca::coordinator::transport::tcp::{TcpAcceptor, TcpChannel};
+use dcf_pca::coordinator::transport::Channel;
+use dcf_pca::coordinator::PrivacySpec;
+use dcf_pca::rpca::partition::ColumnPartition;
+use dcf_pca::rpca::problem::ProblemSpec;
+
+fn spawn_tcp_clients(
+    addr: &str,
+    problem: &dcf_pca::rpca::problem::RpcaProblem,
+    partition: &ColumnPartition,
+    faults: Vec<FaultPlan>,
+) -> Vec<std::thread::JoinHandle<anyhow::Result<u64>>> {
+    let spec = problem.spec;
+    (0..partition.num_clients())
+        .map(|id| {
+            let addr = addr.to_string();
+            let (a, b) = partition.range(id);
+            let m_block = problem.observed.cols_range(a, b);
+            let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
+            let fault = faults.get(id).copied().unwrap_or_default();
+            std::thread::spawn(move || -> anyhow::Result<u64> {
+                let mut ch = TcpChannel::connect(&addr)?;
+                let cfg = ClientConfig {
+                    id,
+                    n_frac: (b - a) as f64 / spec.n as f64,
+                    m_block,
+                    hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
+                    polish_sweeps: 3,
+                    truth: Some(truth),
+                    faults: fault,
+                    compression: dcf_pca::coordinator::Compression::None,
+                    dp_sigma: 0.0,
+                };
+                let _ = run_client(&mut ch, cfg, &NativeKernel);
+                Ok(ch.bytes_sent())
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_end_to_end_recovers_and_meters_bytes() {
+    let spec = ProblemSpec::square(60, 3, 0.05);
+    let problem = spec.generate(11);
+    let e = 4;
+    let rounds = 30;
+    let partition = ColumnPartition::even(spec.n, e);
+
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+    let addr = acceptor.local_addr().unwrap();
+    let handles = spawn_tcp_clients(&addr, &problem, &partition, vec![]);
+
+    let mut channels: Vec<Box<dyn Channel>> = acceptor
+        .accept_n(e)
+        .unwrap()
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Channel>)
+        .collect();
+    let mut cfg = ServerConfig::new(spec.m, spec.rank, rounds, 2);
+    cfg.err_denominator = Some(problem.l0.frob_norm_sq() + problem.s0.frob_norm_sq());
+    let outcome = run_server(&mut channels, &cfg).unwrap();
+
+    // recovery happened
+    let last_err = outcome.rounds.last().unwrap().err.unwrap();
+    assert!(last_err < 5e-3, "err {last_err}");
+    assert_eq!(outcome.revealed.len(), e);
+
+    // Eq. 28 accounting holds on real sockets too
+    let per_round = (e * round_wire_size(spec.m, spec.rank)
+        + e * update_wire_size(spec.m, spec.rank)) as u64;
+    for r in &outcome.rounds {
+        assert_eq!(r.bytes_down + r.bytes_up, per_round, "round {}", r.round);
+    }
+
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn tcp_client_crash_with_skip_policy() {
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(12);
+    let e = 3;
+    let partition = ColumnPartition::even(spec.n, e);
+
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+    let addr = acceptor.local_addr().unwrap();
+    let faults = vec![
+        FaultPlan::default(),
+        FaultPlan { crash_at_round: Some(4) },
+        FaultPlan::default(),
+    ];
+    let handles = spawn_tcp_clients(&addr, &problem, &partition, faults);
+
+    let mut channels: Vec<Box<dyn Channel>> = acceptor
+        .accept_n(e)
+        .unwrap()
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Channel>)
+        .collect();
+    let mut cfg = ServerConfig::new(spec.m, spec.rank, 20, 2);
+    cfg.fault_policy = FaultPolicy::SkipMissing;
+    cfg.round_timeout = Duration::from_secs(2);
+    cfg.err_denominator = Some(problem.l0.frob_norm_sq() + problem.s0.frob_norm_sq());
+    let outcome = run_server(&mut channels, &cfg).unwrap();
+
+    assert!(outcome.withheld.contains(&1));
+    assert_eq!(outcome.revealed.len(), 2);
+    assert!(outcome.rounds.iter().any(|r| r.participants == 2));
+    // survivors still make progress
+    let last_err = outcome.rounds.last().unwrap().err;
+    assert!(last_err.is_none() || last_err.unwrap() < 0.5);
+
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+}
+
+#[test]
+fn tcp_privacy_upload_independent_of_block_size() {
+    // one client holds 4 columns, another 36 — their uploads must be
+    // identical (m×r updates only), which is the §2.2 privacy argument
+    // in its quantitative form.
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(13);
+    let partition = ColumnPartition::from_sizes(&[4, 36]);
+    let rounds = 10;
+
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+    let addr = acceptor.local_addr().unwrap();
+    let handles = spawn_tcp_clients(&addr, &problem, &partition, vec![]);
+
+    let mut channels: Vec<Box<dyn Channel>> = acceptor
+        .accept_n(2)
+        .unwrap()
+        .into_iter()
+        .map(|c| Box::new(c) as Box<dyn Channel>)
+        .collect();
+    let mut cfg = ServerConfig::new(spec.m, spec.rank, rounds, 2);
+    cfg.privacy = PrivacySpec::with_private([0usize, 1]); // both private
+    let outcome = run_server(&mut channels, &cfg).unwrap();
+    assert_eq!(outcome.revealed.len(), 0);
+    assert_eq!(outcome.withheld, vec![0, 1]);
+
+    let uploads: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+    assert_eq!(
+        uploads[0], uploads[1],
+        "uploads must not depend on n_i: {uploads:?}"
+    );
+    // and each upload is ≪ the larger block
+    assert!(uploads[1] < (spec.m * 36 * 8) as u64);
+}

@@ -1,0 +1,236 @@
+//! Cross-module property tests using the in-crate mini-proptest
+//! framework (`dcf_pca::testing`). Each property runs dozens of seeded
+//! random cases; failures report the case index and a replay seed.
+
+use dcf_pca::algorithms::factor::{
+    inner_objective, inner_sweep, ClientState, FactorHyper,
+};
+use dcf_pca::coordinator::aggregate::{aggregate, Aggregation};
+use dcf_pca::coordinator::protocol::{ToClient, ToServer};
+use dcf_pca::coordinator::transport::framing::{put_mat, Reader};
+use dcf_pca::linalg::{
+    matmul, matmul_nt, matmul_tn, shrink, singular_values, svd_jacobi, Mat,
+};
+use dcf_pca::rpca::partition::ColumnPartition;
+use dcf_pca::testing::property;
+
+#[test]
+fn prop_partition_split_assemble_roundtrip() {
+    property("partition roundtrip", 40, |g| {
+        let rows = g.usize_in(1, 12);
+        let cols = g.usize_in(2, 40);
+        let clients = g.usize_in(1, cols.min(8));
+        let m = g.mat(rows, cols);
+        let p = if g.bool() {
+            ColumnPartition::even(cols, clients)
+        } else {
+            let mut rng = g.rng(1);
+            ColumnPartition::random_uneven(cols, clients, &mut rng)
+        };
+        let back = p.assemble(&p.split(&m));
+        assert_eq!(m, back);
+    });
+}
+
+#[test]
+fn prop_mat_framing_roundtrip() {
+    property("matrix framing roundtrip", 50, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols2 = g.usize_in(1, 20);
+        let m = g.mat(rows, cols2);
+        let mut buf = Vec::new();
+        put_mat(&mut buf, &m);
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.mat().unwrap(), m);
+        r.expect_end().unwrap();
+    });
+}
+
+#[test]
+fn prop_protocol_roundtrip_fuzzed() {
+    property("protocol roundtrip", 50, |g| {
+        let ur = g.usize_in(1, 10);
+        let uc = g.usize_in(1, 5);
+        let u = g.mat(ur, uc);
+        let msg = ToClient::Round {
+            round: g.usize_in(0, 1000) as u32,
+            k_local: g.usize_in(1, 16) as u32,
+            eta: g.f64_in(1e-6, 1.0),
+            u: u.clone(),
+        };
+        assert_eq!(ToClient::decode(&msg.encode()).unwrap(), msg);
+        let up = ToServer::Update {
+            client: g.usize_in(0, 64) as u32,
+            round: g.usize_in(0, 1000) as u32,
+            u,
+            grad_norm: g.f64_in(0.0, 1e6),
+            lipschitz: g.f64_in(0.0, 1e6),
+            err_num: g.f64_in(0.0, 1e6),
+            local_secs: g.f64_in(0.0, 100.0),
+        };
+        assert_eq!(ToServer::decode(&up.encode()).unwrap(), up);
+    });
+}
+
+#[test]
+fn prop_truncated_frames_never_panic() {
+    property("truncated frames rejected", 60, |g| {
+        let ur = g.usize_in(1, 8);
+        let uc = g.usize_in(1, 8);
+        let u = g.mat(ur, uc);
+        let full = ToClient::Round { round: 1, k_local: 1, eta: 0.1, u }.encode();
+        let cut = g.usize_in(0, full.len().saturating_sub(1));
+        // must error, not panic
+        assert!(ToClient::decode(&full[..cut]).is_err());
+    });
+}
+
+#[test]
+fn prop_aggregation_mean_bounds() {
+    property("aggregation stays in convex hull", 30, |g| {
+        let e = g.usize_in(1, 6);
+        let us: Vec<Mat> = (0..e).map(|_| g.mat(4, 3)).collect();
+        let weights = vec![1usize; e];
+        let kind = if g.bool() { Aggregation::Uniform } else { Aggregation::WeightedByCols };
+        let mean = aggregate(kind, &us, &weights);
+        for i in 0..4 {
+            for j in 0..3 {
+                let lo = us.iter().map(|u| u[(i, j)]).fold(f64::INFINITY, f64::min);
+                let hi = us.iter().map(|u| u[(i, j)]).fold(f64::NEG_INFINITY, f64::max);
+                let v = mean[(i, j)];
+                assert!(v >= lo - 1e-12 && v <= hi + 1e-12, "{v} not in [{lo}, {hi}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_inner_sweep_monotone_descent() {
+    property("inner sweep descends", 25, |g| {
+        let m_dim = g.usize_in(5, 25);
+        let n_dim = g.usize_in(3, 25);
+        let r = g.usize_in(1, 3.min(m_dim).min(n_dim));
+        let hyper = FactorHyper {
+            rank: r,
+            rho: g.f64_in(1e-3, 1.0),
+            lambda: g.f64_in(0.05, 3.0),
+            inner_sweeps: 1,
+        };
+        let m_block = g.mat(m_dim, n_dim);
+        let u = g.mat(m_dim, r);
+        let mut state = ClientState::zeros(m_dim, n_dim, r);
+        let mut prev = inner_objective(&u, &m_block, &state, &hyper);
+        for _ in 0..4 {
+            inner_sweep(&u, &m_block, &mut state, &hyper);
+            let cur = inner_objective(&u, &m_block, &state, &hyper);
+            assert!(cur <= prev * (1.0 + 1e-10) + 1e-10, "{cur} > {prev}");
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn prop_shrink_never_increases_magnitude() {
+    property("shrink contracts", 40, |g| {
+        let ar = g.usize_in(1, 10);
+        let ac = g.usize_in(1, 10);
+        let a = g.mat(ar, ac);
+        let lam = g.f64_in(0.0, 2.0);
+        let s = shrink(&a, lam);
+        for (x, y) in a.as_slice().iter().zip(s.as_slice()) {
+            assert!(y.abs() <= x.abs() + 1e-15);
+            assert!(x.signum() == y.signum() || *y == 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_and_spectrum() {
+    property("svd reconstructs", 15, |g| {
+        let rows = g.usize_in(2, 15);
+        let cols = g.usize_in(2, 15);
+        let a = g.mat(rows, cols);
+        let svd = svd_jacobi(&a);
+        let k = rows.min(cols);
+        let back = dcf_pca::linalg::reconstruct(&svd, k);
+        let rel = (&back - &a).frob_norm() / a.frob_norm().max(1e-12);
+        assert!(rel < 1e-9, "rel {rel}");
+        // spectral norm dominates every matvec ratio
+        let x = g.mat(cols, 1);
+        let ax = matmul(&a, &x);
+        assert!(ax.frob_norm() <= svd.s[0] * x.frob_norm() * (1.0 + 1e-9));
+    });
+}
+
+#[test]
+fn prop_gemm_transpose_identities() {
+    property("gemm transpose identities", 30, |g| {
+        let m = g.usize_in(1, 12);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 12);
+        let a = g.mat(m, k);
+        let b = g.mat(k, n);
+        // (A·B)ᵀ = Bᵀ·Aᵀ
+        let ab_t = matmul(&a, &b).transpose();
+        let bt_at = matmul(&b.transpose(), &a.transpose());
+        assert!((&ab_t - &bt_at).frob_norm() < 1e-10);
+        // Aᵀ·B via matmul_tn equals explicit transpose
+        let c = g.mat(m, n);
+        let tn = matmul_tn(&a, &c);
+        let explicit = matmul(&a.transpose(), &c);
+        assert!((&tn - &explicit).frob_norm() < 1e-10);
+        // A·Bᵀ via matmul_nt
+        let d = g.mat(n, k);
+        let nt = matmul_nt(&a, &d);
+        let explicit2 = matmul(&a, &d.transpose());
+        assert!((&nt - &explicit2).frob_norm() < 1e-10);
+    });
+}
+
+#[test]
+fn prop_problem_generator_invariants() {
+    property("problem generator invariants", 20, |g| {
+        let n = g.usize_in(10, 40);
+        let rank = g.usize_in(1, 3);
+        let s = g.f64_in(0.01, 0.3);
+        let spec = dcf_pca::rpca::problem::ProblemSpec::square(n, rank, s);
+        let p = spec.generate(g.usize_in(0, 10_000) as u64);
+        // M = L0 + S0 exactly
+        assert_eq!(&p.l0 + &p.s0, p.observed);
+        // support size
+        assert_eq!(p.corruption_count(), ((s * (n * n) as f64).floor()) as usize);
+        // rank of L0
+        let sv = singular_values(&p.l0);
+        if rank < n {
+            assert!(sv[rank] < 1e-8 * sv[0].max(1e-300));
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzzed() {
+    use dcf_pca::util::json::Json;
+    property("json roundtrip", 40, |g| {
+        // build a random JSON value
+        fn build(g: &mut dcf_pca::testing::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}-\"q\"\n", g.usize_in(0, 99))),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize_in(0, 4) {
+                        m.insert(format!("k{i}"), build(g, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "text was: {text}");
+    });
+}

@@ -1,0 +1,119 @@
+//! Cross-algorithm integration: all four solvers recover the paper's
+//! synthetic instances, and their behaviours relate the way §4 claims.
+
+use dcf_pca::algorithms::{Alm, Apgm, CfPca, RpcaSolver, Schedule, StopCriteria};
+use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use dcf_pca::rpca::metrics::singular_value_error;
+use dcf_pca::rpca::problem::ProblemSpec;
+
+#[test]
+fn all_four_algorithms_recover_the_same_instance() {
+    let spec = ProblemSpec::square(80, 4, 0.05);
+    let problem = spec.generate(1);
+
+    let alm = Alm::new().solve(&problem.observed, Some(&problem));
+    assert!(alm.final_error.unwrap() < 1e-5, "ALM {:?}", alm.final_error);
+
+    let apgm = Apgm::new()
+        .with_stop(StopCriteria { max_iters: 300, tol: 1e-8 })
+        .solve(&problem.observed, Some(&problem));
+    assert!(apgm.final_error.unwrap() < 1e-3, "APGM {:?}", apgm.final_error);
+
+    let cf = CfPca::new(80, 80, 4)
+        .with_stop(StopCriteria { max_iters: 80, tol: 1e-9 })
+        .solve(&problem.observed, Some(&problem));
+    assert!(cf.final_error.unwrap() < 1e-3, "CF-PCA {:?}", cf.final_error);
+
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(8).with_rounds(50);
+    let dcf = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(dcf.final_error.unwrap() < 1e-3, "DCF-PCA {:?}", dcf.final_error);
+}
+
+#[test]
+fn dcf_with_one_client_matches_cf_pca_exactly() {
+    // E = 1, identical constant schedule, identical seeds ⇒ Algorithm 1
+    // degenerates to the centralized iteration: the trajectories must be
+    // bit-identical (both f64 native kernels).
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(2);
+    let eta = 5e-3;
+    let rounds = 15;
+
+    let cfg = DcfPcaConfig::default_for(&spec)
+        .with_clients(1)
+        .with_rounds(rounds)
+        .with_k_local(1)
+        .with_schedule(Schedule::Const { eta })
+        .with_seed(77);
+    let mut cfg = cfg;
+    cfg.polish_sweeps = 0;
+    let dcf = run_dcf_pca(&problem, &cfg).unwrap();
+
+    let mut cf = CfPca::new(40, 40, 2)
+        .with_schedule(Schedule::Const { eta })
+        .with_stop(StopCriteria { max_iters: rounds, tol: 0.0 })
+        .with_seed(77);
+    cf.polish_sweeps = 0;
+    let cf_res = cf.solve(&problem.observed, Some(&problem));
+
+    // same per-iteration error trajectory
+    let dcf_curve = dcf.error_curve();
+    let cf_curve = cf_res.error_curve();
+    assert_eq!(dcf_curve.len(), cf_curve.len());
+    for ((_, a), (_, b)) in dcf_curve.iter().zip(&cf_curve) {
+        assert!(
+            (a - b).abs() <= 1e-12 * b.max(1e-30),
+            "trajectories diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn phase_boundary_hard_instances_fail() {
+    // paper Fig. 2: beyond r ≈ 0.15n and s ≈ 0.2 recovery breaks down.
+    // r = 0.25n, s = 0.35 is far past the boundary.
+    let spec = ProblemSpec::square(80, 20, 0.35);
+    let problem = spec.generate(3);
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(8).with_rounds(50);
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(
+        res.final_error.unwrap() > 1e-2,
+        "impossible instance should not be recovered: {:?}",
+        res.final_error
+    );
+}
+
+#[test]
+fn easy_phase_cell_recovers_harder_one_does_not_diverge() {
+    // middle of the recoverable region: s=0.15, r=0.075n
+    let spec = ProblemSpec::square(80, 6, 0.15);
+    let problem = spec.generate(4);
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(8).with_rounds(60);
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(res.final_error.unwrap() < 1e-2, "err {:?}", res.final_error);
+}
+
+#[test]
+fn upper_bound_rank_matches_table1_band() {
+    // n=200 row of Table 1: paper reports 0.0286; accept the same order.
+    let spec = ProblemSpec::square(200, 10, 0.05);
+    let problem = spec.generate(42);
+    let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(10).with_rounds(50);
+    cfg.hyper.rank = 20; // p = 2r
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+    let sv = singular_value_error(&res.l, &problem.l0, 10);
+    assert!(sv.relative < 0.12, "σ error {} (paper: 0.0286)", sv.relative);
+    assert!(sv.tail_ratio < 0.2, "tail ratio {}", sv.tail_ratio);
+}
+
+#[test]
+fn alm_beats_factorization_on_accuracy_at_small_scale() {
+    // the convex baseline with exact SVD should reach deeper accuracy —
+    // the trade the paper describes (accuracy vs distributability)
+    let spec = ProblemSpec::square(60, 3, 0.05);
+    let problem = spec.generate(5);
+    let alm = Alm::new().solve(&problem.observed, Some(&problem));
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(6).with_rounds(40);
+    let dcf = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(alm.final_error.unwrap() < dcf.final_error.unwrap());
+}

@@ -1,0 +1,139 @@
+//! PJRT-artifact vs native-kernel parity, and the full coordinator loop
+//! through the artifact path. Requires `make artifacts`; tests
+//! self-skip (with a loud message) if the manifest is absent so plain
+//! `cargo test` stays runnable before the artifacts are built.
+
+use std::sync::Arc;
+
+use dcf_pca::algorithms::factor::{ClientState, FactorHyper};
+use dcf_pca::algorithms::Schedule;
+use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig, KernelSpec};
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use dcf_pca::linalg::Mat;
+use dcf_pca::rng::Pcg64;
+use dcf_pca::rpca::problem::ProblemSpec;
+use dcf_pca::runtime::{Manifest, PjrtKernel};
+
+fn artifacts_available() -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        false
+    }
+}
+
+#[test]
+fn every_manifest_variant_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let manifest = Manifest::load("artifacts").unwrap();
+    let kernel = PjrtKernel::load("artifacts").unwrap();
+    for v in &manifest.variants {
+        let rel = dcf_pca::cli::commands::artifacts_check::check_variant(
+            &kernel,
+            v.m,
+            v.n_i,
+            v.r,
+            v.k_local,
+            v.inner_sweeps,
+        )
+        .unwrap();
+        assert!(rel < 2e-3, "variant {} parity {rel}", v.file);
+    }
+}
+
+#[test]
+fn padded_narrow_block_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    // variant client_m64_n32_r4 exists; feed a 17-column block (padded
+    // to 32 inside the executor) and compare against native on the
+    // unpadded block.
+    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let spec = ProblemSpec { m: 64, n: 17, rank: 4, sparsity: 0.05 };
+    let problem = spec.generate(21);
+    let mut hyper = FactorHyper::default_for(64, 17, 4);
+    hyper.inner_sweeps = 3;
+    let mut rng = Pcg64::new(3);
+    let u = Mat::gaussian(64, 4, &mut rng);
+
+    let mut st_native = ClientState::zeros(64, 17, 4);
+    let native = NativeKernel
+        .local_epoch(&u, &problem.observed, &mut st_native, &hyper, 0.3, 1e-3, 2)
+        .unwrap();
+    let mut st_pjrt = ClientState::zeros(64, 17, 4);
+    let pjrt = kernel
+        .local_epoch(&u, &problem.observed, &mut st_pjrt, &hyper, 0.3, 1e-3, 2)
+        .unwrap();
+
+    assert_eq!(st_pjrt.v.shape(), (17, 4));
+    assert_eq!(st_pjrt.s.shape(), (64, 17));
+    let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1e-12);
+    assert!(rel(&pjrt.u, &native.u) < 2e-3);
+    assert!(rel(&st_pjrt.v, &st_native.v) < 2e-3);
+    assert!(rel(&st_pjrt.s, &st_native.s) < 2e-3);
+}
+
+#[test]
+fn full_coordinator_loop_through_pjrt() {
+    if !artifacts_available() {
+        return;
+    }
+    let spec = ProblemSpec::square(60, 3, 0.05);
+    let problem = spec.generate(42);
+    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let mut cfg = DcfPcaConfig::default_for(&spec)
+        .with_clients(5)
+        .with_rounds(25)
+        .with_k_local(2)
+        .with_schedule(Schedule::Const { eta: 2e-2 });
+    cfg.kernel = KernelSpec::Custom(Arc::new(kernel));
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(
+        res.final_error.unwrap() < 5e-2,
+        "PJRT coordinator run err {:?}",
+        res.final_error
+    );
+}
+
+#[test]
+fn missing_variant_is_a_clean_error() {
+    if !artifacts_available() {
+        return;
+    }
+    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let spec = ProblemSpec { m: 123, n: 10, rank: 7, sparsity: 0.05 };
+    let problem = spec.generate(1);
+    let hyper = FactorHyper::default_for(123, 10, 7);
+    let mut st = ClientState::zeros(123, 10, 7);
+    let mut rng = Pcg64::new(1);
+    let u = Mat::gaussian(123, 7, &mut rng);
+    let err = kernel
+        .local_epoch(&u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 2)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact variant"), "got: {msg}");
+    assert!(msg.contains("make artifacts"), "got: {msg}");
+}
+
+#[test]
+fn mismatched_hyper_is_a_clean_error() {
+    if !artifacts_available() {
+        return;
+    }
+    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(2);
+    let mut hyper = FactorHyper::default_for(40, 40, 2);
+    hyper.lambda *= 3.0; // not what the artifacts were baked with
+    let mut st = ClientState::zeros(40, 40, 2);
+    let mut rng = Pcg64::new(2);
+    let u = Mat::gaussian(40, 2, &mut rng);
+    let err = kernel
+        .local_epoch(&u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 1)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("re-run `make artifacts`"));
+}
