@@ -29,7 +29,7 @@ use dcf_pca::rpca::problem::ProblemSpec;
 const E: usize = 5;
 const ROUNDS: usize = 25;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dcf_pca::anyhow::Result<()> {
     let spec = ProblemSpec::paper_default(150);
     let problem = spec.generate(7);
     let partition = ColumnPartition::even(spec.n, E);
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
         let hyper = FactorHyper::default_for(spec.m, spec.n, spec.rank);
         let n_frac = (b - a) as f64 / spec.n as f64;
-        party_handles.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+        party_handles.push(std::thread::spawn(move || -> dcf_pca::anyhow::Result<u64> {
             let mut ch = TcpChannel::connect(&addr)?;
             let cfg = ClientConfig {
                 id,

@@ -12,7 +12,7 @@
 use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
 use dcf_pca::rpca::problem::ProblemSpec;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dcf_pca::anyhow::Result<()> {
     // m = n = 200, true rank 10 (= 0.05n), 5% of entries corrupted by
     // ±√(mn) spikes — the paper's standard generator.
     let spec = ProblemSpec::paper_default(200);

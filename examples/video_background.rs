@@ -40,7 +40,7 @@ fn object_pos(t: usize) -> (usize, usize) {
     (((W - 6) as f64 * f) as usize, ((H - 6) as f64 * f) as usize)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dcf_pca::anyhow::Result<()> {
     // build the video: columns are vectorized frames
     let mut video = Mat::zeros(W * H, FRAMES);
     let mut truth_fg = Mat::zeros(W * H, FRAMES);
@@ -135,7 +135,7 @@ fn main() -> anyhow::Result<()> {
         println!("  {obs}   {bg}   {fg}");
     }
 
-    anyhow::ensure!(f1 > 0.9, "foreground F1 too low: {f1}");
+    dcf_pca::ensure!(f1 > 0.9, "foreground F1 too low: {f1}");
     Ok(())
 }
 

@@ -1,21 +1,128 @@
 //! Bench: hot-path kernels across the stack (§Perf of EXPERIMENTS.md).
 //!
-//! - L3-native: blocked gemm (the dominant flops), inner sweep, local
-//!   epoch, exact/randomized SVD (baseline cost), transport framing.
+//! - L1: blocked gemm (the dominant flops), exact/randomized SVD
+//!   (baseline cost), transport framing.
+//! - L2/L3: inner solve and the full local epoch, measured BOTH ways —
+//!   the historical allocating path (fresh buffers every sweep,
+//!   reconstructed here from the allocating linalg twins) against the
+//!   `Workspace`-based zero-allocation path the kernels now use — at the
+//!   paper's §4 shapes (m = n = 1000, p ∈ {5, 25}).
 //! - RT: one PJRT client_update execution (artifact path), if artifacts
 //!   are built.
+//!
+//! Besides the human-readable table, each run writes a fresh snapshot
+//! of `{op, shape, ns_per_iter, gflops}` records to
+//! `BENCH_kernel_hotpath.json` (overwriting the previous run — the
+//! perf trajectory accumulates as the file's history in git).
+
+use std::collections::BTreeMap;
 
 use dcf_pca::algorithms::factor::{inner_solve, ClientState, FactorHyper};
 use dcf_pca::bench_util::{fmt_secs, Bencher, Table};
 use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
-use dcf_pca::linalg::{matmul, matmul_nt, rsvd, svd_jacobi, Mat, RsvdParams};
+use dcf_pca::linalg::{
+    gram, matmul, matmul_nt, matmul_tn, matvec, residual_shrink_into, ridge_solve_v, rsvd,
+    svd_jacobi, Mat, RsvdParams, Workspace,
+};
 use dcf_pca::rng::Pcg64;
 use dcf_pca::rpca::problem::ProblemSpec;
+use dcf_pca::util::json::Json;
+
+/// One machine-readable bench record.
+struct Record {
+    op: String,
+    shape: String,
+    ns_per_iter: f64,
+    gflops: Option<f64>,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str(self.op.clone()));
+        obj.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        obj.insert("ns_per_iter".to_string(), Json::Num(self.ns_per_iter));
+        obj.insert(
+            "gflops".to_string(),
+            match self.gflops {
+                Some(g) => Json::Num(g),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// The pre-Workspace local epoch, reconstructed from the allocating
+/// linalg twins: four to six full-size matrices are allocated and freed
+/// per inner sweep (`gram`, `resid`, `rhs`, the ridge solve's internal
+/// scratch, `uv`) plus the gradient temporaries and a per-epoch U clone —
+/// exactly the traffic the Workspace refactor eliminates.
+fn allocating_local_epoch(
+    u0: &Mat,
+    m_block: &Mat,
+    state: &mut ClientState,
+    hyper: &FactorHyper,
+    n_frac: f64,
+    eta: f64,
+    k_local: usize,
+) -> (Mat, f64) {
+    let mut u = u0.clone();
+    let mut grad_norm = 0.0;
+    for _ in 0..k_local {
+        for _ in 0..hyper.inner_sweeps {
+            let g = gram(&u);
+            let resid = m_block - &state.s;
+            let rhs = matmul_tn(&u, &resid);
+            state.v = ridge_solve_v(&g, &rhs, hyper.rho);
+            let uv = matmul_nt(&u, &state.v);
+            residual_shrink_into(&mut state.s, m_block, &uv, hyper.lambda);
+        }
+        let uv = matmul_nt(&u, &state.v);
+        let resid = &(&uv + &state.s) - m_block;
+        let mut grad = matmul(&resid, &state.v);
+        grad.axpy(hyper.rho * n_frac, &u);
+        grad_norm = grad.frob_norm();
+        u.axpy(-eta, &grad);
+    }
+    // allocating curvature estimate (gram + per-iteration matvec Vecs),
+    // matching what the old kernel did after every epoch
+    let g = gram(&state.v);
+    let r = g.rows();
+    let mut x = vec![1.0 / (r as f64).sqrt(); r];
+    for _ in 0..20 {
+        let y = matvec(&g, &x);
+        let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            break;
+        }
+        for (xi, yi) in x.iter_mut().zip(&y) {
+            *xi = yi / norm;
+        }
+    }
+    (u, grad_norm)
+}
 
 fn main() {
     let mut rng = Pcg64::new(1);
     let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(240) };
     let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s"]);
+    let mut records: Vec<Record> = Vec::new();
+
+    let push = |t: &mut Table, records: &mut Vec<Record>, op: &str, shape: &str, mean: f64, gflops: Option<f64>| {
+        t.row(&[
+            op.into(),
+            shape.into(),
+            fmt_secs(mean),
+            gflops.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()),
+        ]);
+        records.push(Record {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: mean * 1e9,
+            gflops,
+        });
+    };
 
     // gemm at the fig1 working shapes
     for &(m, k, n) in &[(500usize, 500usize, 25usize), (500, 25, 500), (1000, 1000, 50)] {
@@ -23,12 +130,7 @@ fn main() {
         let bm = Mat::gaussian(k, n, &mut rng);
         let stats = b.run(|| matmul(&a, &bm));
         let gflops = 2.0 * (m * k * n) as f64 / stats.mean / 1e9;
-        t.row(&[
-            "gemm".into(),
-            format!("{m}x{k}x{n}"),
-            fmt_secs(stats.mean),
-            format!("{gflops:.2}"),
-        ]);
+        push(&mut t, &mut records, "gemm", &format!("{m}x{k}x{n}"), stats.mean, Some(gflops));
     }
 
     // U·Vᵀ (the residual product of every inner sweep)
@@ -37,35 +139,62 @@ fn main() {
         let v = Mat::gaussian(500, 25, &mut rng);
         let stats = b.run(|| matmul_nt(&u, &v));
         let gflops = 2.0 * (500 * 25 * 500) as f64 / stats.mean / 1e9;
-        t.row(&["gemm_nt (U·Vᵀ)".into(), "500x25x500".into(), fmt_secs(stats.mean), format!("{gflops:.2}")]);
+        push(&mut t, &mut records, "gemm_nt (U·Vᵀ)", "500x25x500", stats.mean, Some(gflops));
     }
 
-    // one inner solve + one full local epoch at the paper's client shape
+    // one inner solve at the paper's client shape (workspace path)
     {
         let spec = ProblemSpec { m: 500, n: 50, rank: 25, sparsity: 0.05 };
         let p = spec.generate(7);
         let hyper = FactorHyper::default_for(500, 50, 25);
         let u = Mat::gaussian(500, 25, &mut rng);
         let mut state = ClientState::zeros(500, 50, 25);
-        let stats = b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper));
-        t.row(&["inner_solve (J=3)".into(), "m=500 n_i=50 r=25".into(), fmt_secs(stats.mean), "—".into()]);
-        let mut state2 = ClientState::zeros(500, 50, 25);
-        let stats = b.run(|| {
+        let mut ws = Workspace::new(500, 50, 25);
+        let stats = b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper, &mut ws));
+        push(&mut t, &mut records, "inner_solve (J=3)", "m=500 n_i=50 r=25", stats.mean, None);
+    }
+
+    // THE headline comparison: allocating vs workspace local epoch at the
+    // paper's §4 shapes — m = n = 1000, p ∈ {5, 25}, J=3, K=2
+    for &p_width in &[5usize, 25] {
+        let spec = ProblemSpec { m: 1000, n: 1000, rank: p_width, sparsity: 0.05 };
+        let prob = spec.generate(11);
+        let hyper = FactorHyper::default_for(1000, 1000, p_width);
+        let u0 = Mat::gaussian(1000, p_width, &mut rng);
+        let shape = format!("m=n=1000 p={p_width} J=3 K=2");
+
+        let mut state_a = ClientState::zeros(1000, 1000, p_width);
+        let stats_alloc = b.run(|| {
+            allocating_local_epoch(&u0, &prob.observed, &mut state_a, &hyper, 1.0, 1e-3, 2)
+        });
+        push(&mut t, &mut records, "local_epoch (allocating)", &shape, stats_alloc.mean, None);
+
+        let mut state_b = ClientState::zeros(1000, 1000, p_width);
+        let mut ws = Workspace::new(1000, 1000, p_width);
+        let mut u_ws = u0.clone();
+        let stats_ws = b.run(|| {
+            // restart U from u0 each sample (matching the allocating
+            // arm's clone) so both rows measure identical numerical work
+            // — only (V, S) warm-start across samples, in both arms
+            u_ws.copy_from(&u0);
             NativeKernel
-                .local_epoch(&u, &p.observed, &mut state2, &hyper, 0.1, 1e-3, 2)
+                .local_epoch(&mut u_ws, &prob.observed, &mut state_b, &hyper, 1.0, 1e-3, 2, &mut ws)
                 .unwrap()
         });
-        t.row(&["local_epoch (K=2)".into(), "m=500 n_i=50 r=25".into(), fmt_secs(stats.mean), "—".into()]);
+        push(&mut t, &mut records, "local_epoch (workspace)", &shape, stats_ws.mean, None);
+
+        let speedup = stats_alloc.mean / stats_ws.mean;
+        println!("local epoch at {shape}: workspace path {speedup:.2}x vs allocating");
     }
 
     // SVD costs (what the baselines pay per iteration)
     {
         let a = Mat::gaussian(200, 200, &mut rng);
         let stats = b.run(|| svd_jacobi(&a));
-        t.row(&["svd_jacobi".into(), "200x200".into(), fmt_secs(stats.mean), "—".into()]);
+        push(&mut t, &mut records, "svd_jacobi", "200x200", stats.mean, None);
         let big = Mat::gaussian(1000, 1000, &mut rng);
         let stats = b.run(|| rsvd(&big, RsvdParams::new(60)));
-        t.row(&["rsvd k=60".into(), "1000x1000".into(), fmt_secs(stats.mean), "—".into()]);
+        push(&mut t, &mut records, "rsvd k=60", "1000x1000", stats.mean, None);
     }
 
     // transport framing round-trip
@@ -82,36 +211,56 @@ fn main() {
             dcf_pca::coordinator::protocol::ToClient::decode(&bytes).unwrap()
         });
         let mbps = (500.0 * 25.0 * 8.0) / stats.mean / 1e6;
-        t.row(&["protocol enc+dec".into(), "U 500x25".into(), fmt_secs(stats.mean), format!("{mbps:.0} MB/s")]);
+        t.row(&[
+            "protocol enc+dec".into(),
+            "U 500x25".into(),
+            fmt_secs(stats.mean),
+            format!("{mbps:.0} MB/s"),
+        ]);
+        records.push(Record {
+            op: "protocol enc+dec".to_string(),
+            shape: "U 500x25".to_string(),
+            ns_per_iter: stats.mean * 1e9,
+            gflops: None,
+        });
     }
 
-    // PJRT artifact execution (if built)
+    // PJRT artifact execution (if built and the runtime is available)
     if std::path::Path::new("artifacts/manifest.json").exists() {
-        let kernel = dcf_pca::runtime::PjrtKernel::load("artifacts").unwrap();
-        let spec = ProblemSpec { m: 64, n: 32, rank: 4, sparsity: 0.05 };
-        let p = spec.generate(9);
-        let hyper = FactorHyper::default_for(64, 32, 4);
-        let u = Mat::gaussian(64, 4, &mut rng);
-        let mut state = ClientState::zeros(64, 32, 4);
-        // warm compile
-        kernel.local_epoch(&u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2).unwrap();
-        let stats = b.run(|| {
-            kernel
-                .local_epoch(&u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2)
-                .unwrap()
-        });
-        t.row(&["pjrt client_update".into(), "m=64 n_i=32 r=4 K=2".into(), fmt_secs(stats.mean), "—".into()]);
-        let mut state3 = ClientState::zeros(64, 32, 4);
-        let stats = b.run(|| {
-            NativeKernel
-                .local_epoch(&u, &p.observed, &mut state3, &hyper, 0.5, 1e-3, 2)
-                .unwrap()
-        });
-        t.row(&["native client_update".into(), "m=64 n_i=32 r=4 K=2".into(), fmt_secs(stats.mean), "—".into()]);
+        match dcf_pca::runtime::PjrtKernel::load("artifacts") {
+            Ok(kernel) => {
+                let spec = ProblemSpec { m: 64, n: 32, rank: 4, sparsity: 0.05 };
+                let p = spec.generate(9);
+                let hyper = FactorHyper::default_for(64, 32, 4);
+                let u0 = Mat::gaussian(64, 4, &mut rng);
+                let mut state = ClientState::zeros(64, 32, 4);
+                let mut ws = Workspace::new(64, 32, 4);
+                let mut u = u0.clone();
+                // warm compile
+                kernel
+                    .local_epoch(&mut u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2, &mut ws)
+                    .unwrap();
+                let stats = b.run(|| {
+                    let mut u = u0.clone();
+                    kernel
+                        .local_epoch(&mut u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2, &mut ws)
+                        .unwrap()
+                });
+                push(&mut t, &mut records, "pjrt client_update", "m=64 n_i=32 r=4 K=2", stats.mean, None);
+            }
+            Err(err) => println!("(PJRT unavailable — skipping artifact rows: {err})"),
+        }
     } else {
         println!("(artifacts not built — skipping PJRT row; run `make artifacts`)");
     }
 
     println!("\nkernel hot-path timings:");
     t.print();
+
+    let json = Json::Arr(records.iter().map(Record::to_json).collect());
+    let out_path = "BENCH_kernel_hotpath.json";
+    match std::fs::write(out_path, format!("{json}\n")) {
+        Ok(()) => println!("\nmachine-readable results written to {out_path}"),
+        Err(err) => eprintln!("could not write {out_path}: {err}"),
+    }
 }

@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use crate::linalg::{rsvd_svt, shrink, svt, Mat};
+use crate::linalg::{rsvd_svt, svt, Mat};
 use crate::rpca::problem::RpcaProblem;
 
 use super::apgm::spectral_norm;
@@ -71,6 +71,9 @@ impl RpcaSolver for Alm {
 
         let mut l = Mat::zeros(m, n);
         let mut s = Mat::zeros(m, n);
+        // reused SVT-input buffer: the only per-iteration full-size
+        // temporaries left are inside the SVD itself
+        let mut target = Mat::zeros(m, n);
         let mut rank_hint = self.svt_rank_hint;
         let m_norm = observed.frob_norm().max(1e-300);
 
@@ -79,15 +82,24 @@ impl RpcaSolver for Alm {
         let mut iters = 0;
 
         for k in 0..self.stop.max_iters {
-            // L = SVT_{1/μ}(M − S + Y/μ)
-            let target_l = &(observed - &s) + &y.scale(1.0 / mu);
+            let inv_mu = 1.0 / mu;
+            // L = SVT_{1/μ}(M − S + Y/μ), target fused in one pass
+            {
+                let td = target.as_mut_slice();
+                let md = observed.as_slice();
+                let sd = s.as_slice();
+                let yd = y.as_slice();
+                for i in 0..td.len() {
+                    td[i] = md[i] - sd[i] + yd[i] * inv_mu;
+                }
+            }
             let min_dim = m.min(n);
             let (l_new, rank) = if min_dim <= SVD_EXACT_LIMIT {
-                svt(&target_l, 1.0 / mu)
+                svt(&target, 1.0 / mu)
             } else {
                 let mut hint = rank_hint.min(min_dim);
                 loop {
-                    let (out, r) = rsvd_svt(&target_l, 1.0 / mu, hint, 0xA1 + k as u64);
+                    let (out, r) = rsvd_svt(&target, 1.0 / mu, hint, 0xA1 + k as u64);
                     if r < hint || hint == min_dim {
                         rank_hint = (r + 5).max(hint / 2).min(min_dim);
                         break (out, r);
@@ -96,16 +108,34 @@ impl RpcaSolver for Alm {
                 }
             };
             l = l_new;
-            // S = shrink_{λ/μ}(M − L + Y/μ)
-            let target_s = &(observed - &l) + &y.scale(1.0 / mu);
-            s = shrink(&target_s, lambda / mu);
-            // dual ascent
-            let infeas = &(observed - &l) - &s;
-            y.axpy(mu, &infeas);
+            // S = shrink_{λ/μ}(M − L + Y/μ), fused directly into S
+            {
+                let sd = s.as_mut_slice();
+                let md = observed.as_slice();
+                let ld = l.as_slice();
+                let yd = y.as_slice();
+                let thresh = lambda * inv_mu;
+                for i in 0..sd.len() {
+                    sd[i] = crate::linalg::shrink_scalar(md[i] - ld[i] + yd[i] * inv_mu, thresh);
+                }
+            }
+            // dual ascent Y += μ(M − L − S), feasibility norm in the same pass
+            let mut infeas_sq = 0.0;
+            {
+                let yd = y.as_mut_slice();
+                let md = observed.as_slice();
+                let ld = l.as_slice();
+                let sd = s.as_slice();
+                for i in 0..yd.len() {
+                    let r = md[i] - ld[i] - sd[i];
+                    infeas_sq += r * r;
+                    yd[i] += mu * r;
+                }
+            }
             mu *= self.mu_growth;
             iters = k + 1;
 
-            let crit = infeas.frob_norm() / m_norm;
+            let crit = infeas_sq.sqrt() / m_norm;
             let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
             history.push(IterRecord {
                 iter: k,

@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use crate::linalg::{rsvd_svt, shrink, svt, Mat};
+use crate::linalg::{rsvd_svt, svt, Mat};
 use crate::rpca::problem::RpcaProblem;
 
 use super::traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};
@@ -114,6 +114,12 @@ impl RpcaSolver for Apgm {
         let mut s = Mat::zeros(m, n);
         let mut l_prev = Mat::zeros(m, n);
         let mut s_prev = Mat::zeros(m, n);
+        // reused prox-input buffers: the extrapolation points, smooth-part
+        // residual, and both gradient steps are fused into two passes that
+        // write these fixed buffers instead of allocating five m×n
+        // temporaries per iteration
+        let mut gl = Mat::zeros(m, n);
+        let mut gs = Mat::zeros(m, n);
         let mut t_k: f64 = 1.0;
         let mut t_prev: f64 = 1.0;
         let mut rank_hint = self.svt_rank_hint;
@@ -124,21 +130,41 @@ impl RpcaSolver for Apgm {
         let m_norm = observed.frob_norm().max(1e-300);
 
         for k in 0..self.stop.max_iters {
-            // extrapolation points
+            // extrapolation points Y_L = L + β(L − L_prev), Y_S likewise;
+            // gradient of the smooth part 1/2‖Y_L + Y_S − M‖² at (Y_L, Y_S):
+            // G_L = Y_L − resid/2, G_S = Y_S − resid/2 — all in one pass
             let beta = (t_prev - 1.0) / t_k;
-            let yl = &l + &(&l - &l_prev).scale(beta);
-            let ys = &s + &(&s - &s_prev).scale(beta);
-            // gradient of the smooth part 1/2‖Y_L + Y_S − M‖² at (Y_L, Y_S)
-            let resid = &(&yl + &ys) - observed;
-            let gl = &yl - &resid.scale(0.5);
-            let gs = &ys - &resid.scale(0.5);
-            l_prev = l;
-            s_prev = s;
+            {
+                let gld = gl.as_mut_slice();
+                let gsd = gs.as_mut_slice();
+                let ld = l.as_slice();
+                let lpd = l_prev.as_slice();
+                let sd = s.as_slice();
+                let spd = s_prev.as_slice();
+                let md = observed.as_slice();
+                for i in 0..gld.len() {
+                    let yl = ld[i] + beta * (ld[i] - lpd[i]);
+                    let ys = sd[i] + beta * (sd[i] - spd[i]);
+                    let half_resid = 0.5 * (yl + ys - md[i]);
+                    gld[i] = yl - half_resid;
+                    gsd[i] = ys - half_resid;
+                }
+            }
+            std::mem::swap(&mut l_prev, &mut l);
+            std::mem::swap(&mut s_prev, &mut s);
             // prox steps
             let (l_new, rank, next_hint) = svt_step(&gl, mu / 2.0, rank_hint, 0xA6 + k as u64);
             rank_hint = next_hint;
             l = l_new;
-            s = shrink(&gs, lambda * mu / 2.0);
+            {
+                // S = shrink_{λμ/2}(G_S), written straight into S
+                let sd = s.as_mut_slice();
+                let gsd = gs.as_slice();
+                let thresh = lambda * mu / 2.0;
+                for i in 0..sd.len() {
+                    sd[i] = crate::linalg::shrink_scalar(gsd[i], thresh);
+                }
+            }
 
             let t_next = (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt()) / 2.0;
             t_prev = t_k;
@@ -146,9 +172,21 @@ impl RpcaSolver for Apgm {
             mu = (self.mu_decay * mu).max(mu_bar);
             iters = k + 1;
 
-            // stopping: relative change of the iterate pair
-            let delta = ((&l - &l_prev).frob_norm_sq() + (&s - &s_prev).frob_norm_sq()).sqrt()
-                / m_norm;
+            // stopping: relative change of the iterate pair, accumulated
+            // in one pass (no difference temporaries)
+            let mut delta_sq = 0.0;
+            {
+                let ld = l.as_slice();
+                let lpd = l_prev.as_slice();
+                let sd = s.as_slice();
+                let spd = s_prev.as_slice();
+                for i in 0..ld.len() {
+                    let dl = ld[i] - lpd[i];
+                    let ds = sd[i] - spd[i];
+                    delta_sq += dl * dl + ds * ds;
+                }
+            }
+            let delta = delta_sq.sqrt() / m_norm;
             let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
             history.push(IterRecord {
                 iter: k,

@@ -8,11 +8,11 @@
 
 use std::time::Instant;
 
-use crate::linalg::{matmul_nt, Mat};
+use crate::linalg::{matmul_nt_into, Mat, Workspace};
 use crate::rpca::problem::RpcaProblem;
 
 use super::factor::{
-    inner_objective, inner_solve, lipschitz_estimate, polish_sweep, u_gradient, ClientState,
+    inner_objective, inner_solve, lipschitz_estimate, polish_sweep, u_gradient_into, ClientState,
     FactorHyper,
 };
 use super::schedule::Schedule;
@@ -71,21 +71,27 @@ impl RpcaSolver for CfPca {
         let mut rng = crate::rng::Pcg64::new(self.seed);
         let mut u = Mat::gaussian(m, self.hyper.rank, &mut rng);
         let mut state = ClientState::zeros(m, n, self.hyper.rank);
+        // one workspace for the whole run — the outer loop's linalg reuses
+        // these buffers instead of allocating per iteration
+        let mut ws = Workspace::new(m, n, self.hyper.rank);
+        // telemetry buffers for the L = U·Vᵀ convergence check
+        let mut l = Mat::zeros(m, n);
+        let mut prev_l = Mat::zeros(m, n);
+        let mut have_prev = false;
         let mut history = Vec::with_capacity(self.stop.max_iters);
         let mut converged = false;
         let mut iters = 0;
-        let mut prev_l: Option<Mat> = None;
 
         for t in 0..self.stop.max_iters {
-            inner_solve(&u, observed, &mut state, &self.hyper);
-            let lip = lipschitz_estimate(&state, &self.hyper);
+            inner_solve(&u, observed, &mut state, &self.hyper, &mut ws);
+            let lip = lipschitz_estimate(&state, &self.hyper, &mut ws);
             let eta = self.schedule.eta(t, lip);
-            let grad = u_gradient(&u, observed, &state, &self.hyper, 1.0);
-            let gn = grad.frob_norm();
-            u.axpy(-eta, &grad);
+            u_gradient_into(&u, observed, &state, &self.hyper, 1.0, &mut ws);
+            let gn = ws.grad.frob_norm();
+            u.axpy(-eta, &ws.grad);
             iters = t + 1;
 
-            let l = matmul_nt(&u, &state.v);
+            matmul_nt_into(&mut l, &u, &state.v);
             let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &state.s));
             let obj =
                 inner_objective(&u, observed, &state, &self.hyper) + 0.5 * self.hyper.rho * u.frob_norm_sq();
@@ -97,22 +103,31 @@ impl RpcaSolver for CfPca {
                 elapsed: start.elapsed().as_secs_f64(),
             });
 
-            if let Some(pl) = &prev_l {
-                let delta = (&l - pl).frob_norm() / pl.frob_norm().max(1e-300);
+            if have_prev {
+                // one-pass relative-change check (no difference temporary)
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for (cur, prev) in l.as_slice().iter().zip(prev_l.as_slice()) {
+                    let d = cur - prev;
+                    num += d * d;
+                    den += prev * prev;
+                }
+                let delta = num.sqrt() / den.sqrt().max(1e-300);
                 if delta < self.stop.tol {
                     converged = true;
                     break;
                 }
             }
-            prev_l = Some(l);
+            prev_l.copy_from(&l);
+            have_prev = true;
         }
 
         // final inner solve so (V,S) correspond to the final U
-        inner_solve(&u, observed, &mut state, &self.hyper);
+        inner_solve(&u, observed, &mut state, &self.hyper, &mut ws);
         for _ in 0..self.polish_sweeps {
-            polish_sweep(&u, observed, &mut state, &self.hyper);
+            polish_sweep(&u, observed, &mut state, &self.hyper, &mut ws);
         }
-        let l = matmul_nt(&u, &state.v);
+        matmul_nt_into(&mut l, &u, &state.v);
         let final_error = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &state.s));
         SolveResult {
             l,

@@ -15,12 +15,19 @@
 //!    `U ← U − η ∇_U L_i`,
 //!    `∇_U L_i = (U V_iᵀ + S_i − M_i) V_i + ρ (n_i/n) U` (Lemma 2).
 //!
+//! Every function here borrows a [`Workspace`] sized for the block
+//! (`(m, n_i, p)`) instead of allocating temporaries: the inner sweep and
+//! the gradient run J × K × T times per DCF-PCA run, and on that path
+//! steady-state heap traffic is zero (asserted by the counting-allocator
+//! test in `coordinator::kernel`).
+//!
 //! This module is the native (f64) twin of the AOT-compiled JAX/Pallas
 //! `client_update` artifact; `runtime::executor` checks the two against
 //! each other.
 
 use crate::linalg::{
-    gram, matmul, matmul_nt, matmul_tn, residual_shrink_into, ridge_solve_v, Mat,
+    gram_into, matmul_into, matmul_nt, matmul_nt_into, matmul_tn_into, matvec_into, residual_into,
+    residual_shrink_into, ridge_solve_v_into, sub_into, Mat, Workspace,
 };
 
 /// Hyperparameters of the factorized objective (paper Eq. 4).
@@ -76,27 +83,42 @@ impl ClientState {
     }
 }
 
-/// One exact alternation sweep of the inner problem (Eqs. 15 + 16).
-pub fn inner_sweep(u: &Mat, m_block: &Mat, state: &mut ClientState, hyper: &FactorHyper) {
+/// One exact alternation sweep of the inner problem (Eqs. 15 + 16),
+/// entirely inside `ws` — no allocation.
+pub fn inner_sweep(
+    u: &Mat,
+    m_block: &Mat,
+    state: &mut ClientState,
+    hyper: &FactorHyper,
+    ws: &mut Workspace,
+) {
+    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
     // V ← (M − S)ᵀ U (UᵀU + ρI)^{-1}
-    let g = gram(u);
-    let resid = m_block - &state.s; // M − S
-    let rhs = matmul_tn(u, &resid); // r×n_i
-    state.v = ridge_solve_v(&g, &rhs, hyper.rho);
+    gram_into(&mut ws.gram, u);
+    sub_into(&mut ws.resid, m_block, &state.s); // M − S
+    matmul_tn_into(&mut ws.rhs, u, &ws.resid); // r×n_i
+    ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
     // S ← shrink_λ(M − U Vᵀ)
-    let uv = matmul_nt(u, &state.v);
-    residual_shrink_into(&mut state.s, m_block, &uv, hyper.lambda);
+    matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ, reusing the residual buffer
+    residual_shrink_into(&mut state.s, m_block, &ws.resid, hyper.lambda);
 }
 
 /// Solve the inner problem (Eq. 7) to tolerance by J alternation sweeps.
-pub fn inner_solve(u: &Mat, m_block: &Mat, state: &mut ClientState, hyper: &FactorHyper) {
+pub fn inner_solve(
+    u: &Mat,
+    m_block: &Mat,
+    state: &mut ClientState,
+    hyper: &FactorHyper,
+    ws: &mut Workspace,
+) {
     for _ in 0..hyper.inner_sweeps {
-        inner_sweep(u, m_block, state, hyper);
+        inner_sweep(u, m_block, state, hyper, ws);
     }
 }
 
 /// Inner objective value (Eq. 7's argument):
 /// `1/2‖U Vᵀ + S − M‖²_F + ρ/2‖V‖²_F + λ‖S‖₁`.
+/// Telemetry-only (tests, per-iteration logging) — allocates.
 pub fn inner_objective(u: &Mat, m_block: &Mat, state: &ClientState, hyper: &FactorHyper) -> f64 {
     let uv = matmul_nt(u, &state.v);
     let fit = &(&uv + &state.s) - m_block;
@@ -116,25 +138,26 @@ pub fn local_objective(
     inner_objective(u, m_block, state, hyper) + 0.5 * hyper.rho * n_frac * u.frob_norm_sq()
 }
 
-/// ∇_U L_i (Lemma 2): `(U Vᵀ + S − M) V + ρ (n_i/n) U`.
+/// ∇_U L_i (Lemma 2): `(U Vᵀ + S − M) V + ρ (n_i/n) U`, written into
+/// `ws.grad` (no allocation; the residual is fused into one pass).
 /// `n_frac` is n_i/n (1.0 for the centralized solver).
-pub fn u_gradient(
+pub fn u_gradient_into(
     u: &Mat,
     m_block: &Mat,
     state: &ClientState,
     hyper: &FactorHyper,
     n_frac: f64,
-) -> Mat {
-    let uv = matmul_nt(u, &state.v); // m×n_i
-    let resid = &(&uv + &state.s) - m_block; // U Vᵀ + S − M
-    let mut grad = matmul(&resid, &state.v); // m×r
-    grad.axpy(hyper.rho * n_frac, u);
-    grad
+    ws: &mut Workspace,
+) {
+    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
+    residual_into(&mut ws.resid, u, &state.v, &state.s, m_block); // U Vᵀ + S − M
+    matmul_into(&mut ws.grad, &ws.resid, &state.v); // m×r
+    ws.grad.axpy(hyper.rho * n_frac, u);
 }
 
 /// One full local iteration (Algorithm 1's loop body): inner solve, then a
-/// gradient step on U with step size η. Returns the gradient norm (used
-/// for convergence telemetry / Theorem 1's metric).
+/// gradient step on U with step size η, all in place. Returns the gradient
+/// norm (used for convergence telemetry / Theorem 1's metric).
 pub fn local_iteration(
     u: &mut Mat,
     m_block: &Mat,
@@ -142,11 +165,12 @@ pub fn local_iteration(
     hyper: &FactorHyper,
     n_frac: f64,
     eta: f64,
+    ws: &mut Workspace,
 ) -> f64 {
-    inner_solve(u, m_block, state, hyper);
-    let grad = u_gradient(u, m_block, state, hyper, n_frac);
-    let gn = grad.frob_norm();
-    u.axpy(-eta, &grad);
+    inner_solve(u, m_block, state, hyper, ws);
+    u_gradient_into(u, m_block, state, hyper, n_frac, ws);
+    let gn = ws.grad.frob_norm();
+    u.axpy(-eta, &ws.grad);
     gn
 }
 
@@ -158,41 +182,49 @@ pub fn local_iteration(
 /// correctly identified, `M − S` equals `L₀` on the support exactly and
 /// the factorization fit becomes unbiased. Standard practice for
 /// ℓ1-regularized estimators (refit on the selected support).
-pub fn polish_sweep(u: &Mat, m_block: &Mat, state: &mut ClientState, hyper: &FactorHyper) {
+pub fn polish_sweep(
+    u: &Mat,
+    m_block: &Mat,
+    state: &mut ClientState,
+    hyper: &FactorHyper,
+    ws: &mut Workspace,
+) {
+    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
     // hard-threshold S on the current residual
-    let uv = matmul_nt(u, &state.v);
+    matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ
     {
         let sd = state.s.as_mut_slice();
         let md = m_block.as_slice();
-        let ud = uv.as_slice();
+        let ud = ws.resid.as_slice();
         for i in 0..sd.len() {
             let r = md[i] - ud[i];
             sd[i] = if r.abs() > hyper.lambda { r } else { 0.0 };
         }
     }
     // exact ridge re-solve of V against the debiased S
-    let g = gram(u);
-    let resid = m_block - &state.s;
-    let rhs = matmul_tn(u, &resid);
-    state.v = ridge_solve_v(&g, &rhs, hyper.rho);
+    gram_into(&mut ws.gram, u);
+    sub_into(&mut ws.resid, m_block, &state.s);
+    matmul_tn_into(&mut ws.rhs, u, &ws.resid);
+    ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
 }
 
 /// Curvature estimate for adaptive step sizes: the largest eigenvalue of
 /// VᵀV + ρI bounds the local Lipschitz constant of ∇_U L_i in U. Estimated
-/// by a few power iterations on the (r×r) Gram of V.
-pub fn lipschitz_estimate(state: &ClientState, hyper: &FactorHyper) -> f64 {
-    let g = gram(&state.v); // r×r = VᵀV
-    let r = g.rows();
-    let mut x = vec![1.0 / (r as f64).sqrt(); r];
+/// by a few power iterations on the (r×r) Gram of V, using the
+/// workspace's power-iteration buffers (no allocation).
+pub fn lipschitz_estimate(state: &ClientState, hyper: &FactorHyper, ws: &mut Workspace) -> f64 {
+    gram_into(&mut ws.gram, &state.v); // r×r = VᵀV
+    let r = ws.gram.rows();
+    ws.pow_x.fill(1.0 / (r as f64).sqrt());
     let mut lam = 0.0;
     for _ in 0..20 {
-        let y = crate::linalg::matvec(&g, &x);
-        let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        matvec_into(&mut ws.pow_y, &ws.gram, &ws.pow_x);
+        let norm = ws.pow_y.iter().map(|v| v * v).sum::<f64>().sqrt();
         if norm < 1e-300 {
             return hyper.rho;
         }
         lam = norm;
-        for (xi, yi) in x.iter_mut().zip(&y) {
+        for (xi, yi) in ws.pow_x.iter_mut().zip(&ws.pow_y) {
             *xi = yi / norm;
         }
     }
@@ -202,6 +234,7 @@ pub fn lipschitz_estimate(state: &ClientState, hyper: &FactorHyper) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{gram, matmul_tn, ridge_solve_v};
     use crate::rng::Pcg64;
     use crate::rpca::problem::ProblemSpec;
 
@@ -217,13 +250,40 @@ mod tests {
         let mut rng = Pcg64::new(1);
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
+        let mut ws = Workspace::new(40, 40, 3);
         let mut prev = inner_objective(&u, &m, &state, &hyper);
         for _ in 0..6 {
-            inner_sweep(&u, &m, &mut state, &hyper);
+            inner_sweep(&u, &m, &mut state, &hyper, &mut ws);
             let cur = inner_objective(&u, &m, &state, &hyper);
             assert!(cur <= prev + 1e-9 * prev.abs().max(1.0), "{cur} > {prev}");
             prev = cur;
         }
+    }
+
+    #[test]
+    fn inner_sweep_matches_allocating_composition() {
+        // the workspace sweep must equal the same math written with the
+        // allocating linalg twins, to the last bit of f64 rounding
+        let (m, hyper) = small_problem();
+        let mut rng = Pcg64::new(9);
+        let u = Mat::gaussian(40, 3, &mut rng);
+
+        let mut state_ws = ClientState::zeros(40, 40, 3);
+        let mut ws = Workspace::new(40, 40, 3);
+        inner_sweep(&u, &m, &mut state_ws, &hyper, &mut ws);
+
+        let mut state_alloc = ClientState::zeros(40, 40, 3);
+        let g = gram(&u);
+        let resid = &m - &state_alloc.s;
+        let rhs = matmul_tn(&u, &resid);
+        state_alloc.v = ridge_solve_v(&g, &rhs, hyper.rho);
+        let uv = crate::linalg::matmul_nt(&u, &state_alloc.v);
+        residual_shrink_into(&mut state_alloc.s, &m, &uv, hyper.lambda);
+
+        let dv = (&state_ws.v - &state_alloc.v).frob_norm();
+        let ds = (&state_ws.s - &state_alloc.s).frob_norm();
+        assert!(dv < 1e-12, "V deviates {dv}");
+        assert!(ds < 1e-12, "S deviates {ds}");
     }
 
     #[test]
@@ -234,10 +294,11 @@ mod tests {
         let mut rng = Pcg64::new(2);
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper);
+        let mut ws = Workspace::new(40, 40, 3);
+        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
         let v_before = state.v.clone();
         let s_before = state.s.clone();
-        inner_sweep(&u, &m, &mut state, &hyper);
+        inner_sweep(&u, &m, &mut state, &hyper, &mut ws);
         // linear convergence rate degrades as ρ → 0 (Lemma 1's strong
         // convexity is only ρ); after 60 sweeps a further sweep should
         // move the blocks by <1e-4 relative
@@ -253,10 +314,12 @@ mod tests {
         let mut rng = Pcg64::new(3);
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
+        let mut ws = Workspace::new(40, 40, 3);
         // fix (V,S) at some point — gradient formula holds for any (V,S)
-        inner_solve(&u, &m, &mut state, &hyper);
+        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
         let n_frac = 1.0;
-        let grad = u_gradient(&u, &m, &state, &hyper, n_frac);
+        u_gradient_into(&u, &m, &state, &hyper, n_frac, &mut ws);
+        let grad = ws.grad.clone();
         let eps = 1e-6;
         let mut rng2 = Pcg64::new(4);
         for _ in 0..10 {
@@ -286,16 +349,18 @@ mod tests {
         let mut rng = Pcg64::new(5);
         let mut u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper);
-        let g_before = inner_objective(&u, &m, &state, &hyper)
-            + 0.5 * hyper.rho * u.frob_norm_sq();
-        let grad = u_gradient(&u, &m, &state, &hyper, 1.0);
-        let lip = lipschitz_estimate(&state, &hyper);
+        let mut ws = Workspace::new(40, 40, 3);
+        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        let g_before =
+            inner_objective(&u, &m, &state, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
+        u_gradient_into(&u, &m, &state, &hyper, 1.0, &mut ws);
+        let grad = ws.grad.clone();
+        let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         u.axpy(-0.5 / lip, &grad);
         let mut state2 = state.clone();
-        inner_solve(&u, &m, &mut state2, &hyper);
-        let g_after = inner_objective(&u, &m, &state2, &hyper)
-            + 0.5 * hyper.rho * u.frob_norm_sq();
+        inner_solve(&u, &m, &mut state2, &hyper, &mut ws);
+        let g_after =
+            inner_objective(&u, &m, &state2, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
         assert!(g_after < g_before, "{g_after} !< {g_before}");
     }
 
@@ -308,7 +373,8 @@ mod tests {
         let mut rng = Pcg64::new(6);
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
-        inner_sweep(&u, &m_of(&p), &mut state, &hyper);
+        let mut ws = Workspace::new(40, 40, 3);
+        inner_sweep(&u, &m_of(&p), &mut state, &hyper, &mut ws);
         let acc = crate::rpca::metrics::support_sign_accuracy(&state.s, &p.s0);
         assert!(acc > 0.95, "support sign accuracy {acc}");
     }
@@ -323,12 +389,28 @@ mod tests {
         let mut rng = Pcg64::new(7);
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper);
-        let lip = lipschitz_estimate(&state, &hyper);
+        let mut ws = Workspace::new(40, 40, 3);
+        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         let g = gram(&state.v);
         for i in 0..3 {
             assert!(lip >= g[(i, i)] - 1e-6, "lip {lip} < diag {}", g[(i, i)]);
         }
+    }
+
+    #[test]
+    fn local_iteration_is_steady_state_allocation_free() {
+        let (m, hyper) = small_problem();
+        let mut rng = Pcg64::new(8);
+        let mut u = Mat::gaussian(40, 3, &mut rng);
+        let mut state = ClientState::zeros(40, 40, 3);
+        let mut ws = Workspace::new(40, 40, 3);
+        // warm-up (first call settles lazy state like TLS)
+        local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, &mut ws);
+        let (_, allocs) = crate::alloc_counter::measure(|| {
+            local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, &mut ws)
+        });
+        assert_eq!(allocs, 0, "local_iteration allocated {allocs} times after warm-up");
     }
 
     #[test]

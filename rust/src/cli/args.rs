@@ -5,7 +5,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::Result;
+use crate::{anyhow, bail};
 
 /// Declared option for help text and validation.
 #[derive(Clone, Debug)]
@@ -47,7 +48,7 @@ impl ParsedArgs {
                             i += 1;
                             args.get(i)
                                 .cloned()
-                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
                         }
                     };
                     if out.options.insert(name.to_string(), val).is_some() {
@@ -73,19 +74,19 @@ impl ParsedArgs {
 
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         self.get(name)
-            .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("--{name} must be an integer")))
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{name} must be an integer")))
             .transpose()
     }
 
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         self.get(name)
-            .map(|v| v.parse::<f64>().map_err(|_| anyhow::anyhow!("--{name} must be a number")))
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow!("--{name} must be a number")))
             .transpose()
     }
 
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
         self.get(name)
-            .map(|v| v.parse::<u64>().map_err(|_| anyhow::anyhow!("--{name} must be an integer")))
+            .map(|v| v.parse::<u64>().map_err(|_| anyhow!("--{name} must be an integer")))
             .transpose()
     }
 

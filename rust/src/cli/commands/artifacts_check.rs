@@ -2,12 +2,13 @@
 //! manifest variant, compile it on the PJRT CPU client, execute it on a
 //! synthetic block, and compare against the native kernel.
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::error::{Context, Result};
 
 use crate::algorithms::factor::{ClientState, FactorHyper};
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
 use crate::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 use crate::rng::Pcg64;
 use crate::rpca::problem::ProblemSpec;
 use crate::runtime::{Manifest, PjrtKernel};
@@ -45,7 +46,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             failures += 1;
         }
     }
-    anyhow::ensure!(failures == 0, "{failures} variant(s) failed parity");
+    ensure!(failures == 0, "{failures} variant(s) failed parity");
     println!("all variants match (tol {tol:.1e})");
     Ok(())
 }
@@ -67,16 +68,36 @@ pub fn check_variant(
     let mut rng = Pcg64::new(0xAB);
     let u = Mat::gaussian(m, r, &mut rng);
     let eta = 1e-3;
+    let mut ws = Workspace::new(m, n_i, r);
 
     let mut st_native = ClientState::zeros(m, n_i, r);
-    let native = NativeKernel
-        .local_epoch(&u, &problem.observed, &mut st_native, &hyper, 0.5, eta, k_local)?;
+    let mut u_native = u.clone();
+    NativeKernel.local_epoch(
+        &mut u_native,
+        &problem.observed,
+        &mut st_native,
+        &hyper,
+        0.5,
+        eta,
+        k_local,
+        &mut ws,
+    )?;
 
     let mut st_pjrt = ClientState::zeros(m, n_i, r);
-    let pjrt = kernel.local_epoch(&u, &problem.observed, &mut st_pjrt, &hyper, 0.5, eta, k_local)?;
+    let mut u_pjrt = u;
+    kernel.local_epoch(
+        &mut u_pjrt,
+        &problem.observed,
+        &mut st_pjrt,
+        &hyper,
+        0.5,
+        eta,
+        k_local,
+        &mut ws,
+    )?;
 
     let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1e-12);
-    let du = rel(&pjrt.u, &native.u);
+    let du = rel(&u_pjrt, &u_native);
     let dv = rel(&st_pjrt.v, &st_native.v);
     let ds = rel(&st_pjrt.s, &st_native.s);
     Ok(du.max(dv).max(ds))

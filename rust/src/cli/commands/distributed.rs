@@ -8,7 +8,8 @@
 //! where blocks are client-local to begin with. (For real data, point
 //! each worker at its own `--data <csv>`.)
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Error, Result};
 
 use crate::algorithms::factor::FactorHyper;
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
@@ -60,7 +61,7 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
     };
 
     let spec = ProblemSpec::square(n, rank, sparsity);
-    spec.validate().map_err(anyhow::Error::msg)?;
+    spec.validate().map_err(Error::msg)?;
     let problem = spec.generate(seed);
 
     let acceptor = TcpAcceptor::bind(listen)?;

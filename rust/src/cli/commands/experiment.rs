@@ -1,6 +1,7 @@
 //! `dcf-pca experiment <id>` — regenerate a paper table/figure.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
 use crate::experiments::{ablations, comm, fig1, fig2, fig3_table1, fig4, theory, Effort};

@@ -1,7 +1,8 @@
 //! `dcf-pca generate` — emit a synthetic RPCA instance (observed matrix
 //! and optionally the ground-truth components) as CSV files.
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::error::{Context, Error, Result};
 
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
 use crate::linalg::Mat;
@@ -34,7 +35,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     let out = args.get("out").context("--out is required")?;
 
     let spec = ProblemSpec { m, n, rank, sparsity };
-    spec.validate().map_err(anyhow::Error::msg)?;
+    spec.validate().map_err(Error::msg)?;
     let problem = spec.generate(seed);
 
     write_matrix_csv(out, &problem.observed)?;
@@ -86,12 +87,9 @@ pub fn read_matrix_csv(path: &str) -> Result<Mat> {
             .collect();
         rows.push(row?);
     }
-    anyhow::ensure!(!rows.is_empty(), "{path}: empty matrix");
+    ensure!(!rows.is_empty(), "{path}: empty matrix");
     let cols = rows[0].len();
-    anyhow::ensure!(
-        rows.iter().all(|r| r.len() == cols),
-        "{path}: ragged rows"
-    );
+    ensure!(rows.iter().all(|r| r.len() == cols), "{path}: ragged rows");
     let data: Vec<f64> = rows.into_iter().flatten().collect();
     Ok(Mat::from_vec(data.len() / cols, cols, data))
 }

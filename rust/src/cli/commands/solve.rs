@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Error, Result};
 
 use crate::algorithms::{Alm, Apgm, CfPca, RpcaSolver, StopCriteria};
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
@@ -53,7 +53,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
         let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
         cfg.problem = ProblemSpec { m, n, rank, sparsity };
-        cfg.problem.validate().map_err(anyhow::Error::msg)?;
+        cfg.problem.validate().map_err(Error::msg)?;
         cfg.dcf = crate::coordinator::driver::DcfPcaConfig::default_for(&cfg.problem);
     }
     if let Some(seed) = args.get_u64("seed")? {

@@ -13,7 +13,7 @@
 pub mod args;
 pub mod commands;
 
-use anyhow::Result;
+use crate::error::Result;
 
 pub use args::{usage, OptSpec, ParsedArgs};
 

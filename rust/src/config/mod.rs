@@ -8,8 +8,8 @@ pub mod toml;
 use std::collections::BTreeSet;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::error::{Context, Error, Result};
 
 use crate::algorithms::schedule::Schedule;
 use crate::coordinator::driver::{DcfPcaConfig, KernelSpec, PartitionSpec};
@@ -129,7 +129,7 @@ impl RunConfig {
         if let Some(v) = doc.get("problem", "seed") {
             cfg.problem_seed = v.as_int().context("problem.seed")? as u64;
         }
-        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        spec.validate().map_err(Error::msg)?;
         cfg.problem = spec;
         cfg.dcf = DcfPcaConfig::default_for(&spec);
 

@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// A parsed value.
 #[derive(Clone, Debug, PartialEq)]

@@ -6,10 +6,11 @@
 //! sends anything derived from `M_i` except the m×r consensus updates and
 //! — if and only if the server grants `reveal` — the final blocks.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
-use crate::linalg::{matmul_nt, Mat};
+use crate::linalg::{matmul_nt, Mat, Workspace};
 
 use super::compress::Compression;
 use super::kernel::LocalUpdateKernel;
@@ -53,6 +54,9 @@ pub fn run_client(
 ) -> Result<usize> {
     let (m, n_i) = cfg.m_block.shape();
     let mut state = ClientState::zeros(m, n_i, cfg.hyper.rank);
+    // one workspace for the whole worker lifetime: every round's local
+    // epoch (and the final polish sweeps) runs with zero heap allocations
+    let mut ws = Workspace::new(m, n_i, cfg.hyper.rank);
     ch.send(&ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }.encode())
         .context("send hello")?;
 
@@ -75,17 +79,21 @@ pub fn run_client(
                         cfg.hyper.rank
                     );
                 }
+                // the decoded broadcast U becomes this client's working
+                // copy — the kernel advances it in place (no clone)
+                let mut u = u;
                 // per-thread CPU time: honest per-client cost even when E
                 // simulated clients share one core (see util::cputime)
                 let t0 = crate::util::cputime::thread_cpu_seconds();
-                let mut out = kernel.local_epoch(
-                    &u,
+                let out = kernel.local_epoch(
+                    &mut u,
                     &cfg.m_block,
                     &mut state,
                     &cfg.hyper,
                     cfg.n_frac,
                     eta,
                     k_local as usize,
+                    &mut ws,
                 )?;
                 let local_secs = crate::util::cputime::thread_cpu_seconds() - t0;
                 if cfg.dp_sigma > 0.0 {
@@ -93,14 +101,14 @@ pub fn run_client(
                     let mut g = crate::rng::GaussianSource::new(
                         crate::rng::Pcg64::new(0xD9).fork(seed),
                     );
-                    for x in out.u.as_mut_slice() {
+                    for x in u.as_mut_slice() {
                         *x += cfg.dp_sigma * g.next_gaussian();
                     }
                 }
                 // telemetry: partial error numerator against ground truth
                 let err_num = match &cfg.truth {
                     Some((l0, s0)) => {
-                        let l_i = matmul_nt(&out.u, &state.v);
+                        let l_i = matmul_nt(&u, &state.v);
                         (&l_i - l0).frob_norm_sq() + (&state.s - s0).frob_norm_sq()
                     }
                     None => f64::NAN,
@@ -109,7 +117,7 @@ pub fn run_client(
                     &ToServer::Update {
                         client: cfg.id as u32,
                         round,
-                        u: out.u,
+                        u,
                         grad_norm: out.grad_norm,
                         lipschitz: out.lipschitz,
                         err_num,
@@ -124,7 +132,7 @@ pub fn run_client(
                 // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional
                 // debias polish of the local (V_i, S_i) with U fixed)
                 for _ in 0..cfg.polish_sweeps {
-                    polish_sweep(&final_u, &cfg.m_block, &mut state, &cfg.hyper);
+                    polish_sweep(&final_u, &cfg.m_block, &mut state, &cfg.hyper, &mut ws);
                 }
                 let reply = if reveal {
                     let l_i = matmul_nt(&final_u, &state.v);

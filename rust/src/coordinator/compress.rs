@@ -14,8 +14,8 @@
 //! Both directions (broadcast and update) use the same codec; it is part
 //! of the run configuration, not negotiated.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
+use crate::error::Result;
 use crate::linalg::Mat;
 
 use super::transport::framing::{put_f64, put_u32, put_u64, Reader};

@@ -5,7 +5,8 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 use crate::algorithms::factor::FactorHyper;
 use crate::algorithms::schedule::Schedule;
@@ -23,7 +24,7 @@ use super::metrics::{CommStats, RoundRecord};
 use super::privacy::PrivacySpec;
 use super::server::{run_server, FaultPolicy, ServerConfig, ServerOutcome};
 use super::transport::inproc::pair;
-use super::transport::Channel;
+use super::transport::{Channel, DEFAULT_ROUND_TIMEOUT};
 
 /// How clients' column blocks are formed.
 #[derive(Clone, Debug)]
@@ -105,7 +106,7 @@ impl DcfPcaConfig {
             seed: 0xDCF,
             fault_policy: FaultPolicy::Strict,
             faults: Vec::new(),
-            round_timeout: Duration::from_secs(600),
+            round_timeout: DEFAULT_ROUND_TIMEOUT,
             err_stop: None,
             compression: Compression::None,
             participation: 1.0,

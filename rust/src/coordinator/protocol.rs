@@ -7,8 +7,8 @@
 //! very end. Privacy (§2.2) is therefore structural, and the byte
 //! counters verify Eq. 28 exactly.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
+use crate::error::Result;
 use crate::linalg::Mat;
 
 use super::compress::{put_mat_compressed, read_mat_compressed, Compression};

@@ -7,7 +7,8 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::algorithms::schedule::Schedule;
 use crate::linalg::Mat;
@@ -18,7 +19,7 @@ use super::compress::Compression;
 use super::metrics::{CommStats, RoundRecord};
 use super::privacy::PrivacySpec;
 use super::protocol::{ToClient, ToServer};
-use super::transport::Channel;
+use super::transport::{Channel, DEFAULT_ROUND_TIMEOUT};
 
 /// What to do when a client misses the round deadline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,7 +73,7 @@ impl ServerConfig {
             aggregation: Aggregation::Uniform,
             privacy: PrivacySpec::all_public(),
             seed: 0xDCF,
-            round_timeout: Duration::from_secs(600),
+            round_timeout: DEFAULT_ROUND_TIMEOUT,
             fault_policy: FaultPolicy::Strict,
             err_denominator: None,
             err_stop: None,

@@ -5,8 +5,8 @@
 //! the paper's Eq. 28 communication accounting (`2·E·m·r` floats per
 //! round) directly verifiable from the transport byte counters.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
+use crate::error::Result;
 use crate::linalg::Mat;
 
 pub fn put_u32(buf: &mut Vec<u8>, v: u32) {

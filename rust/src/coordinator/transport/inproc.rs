@@ -9,7 +9,8 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::error::Result;
 
 use super::Channel;
 

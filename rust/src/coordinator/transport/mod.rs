@@ -18,7 +18,25 @@ pub mod tcp;
 
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::error::Result;
+
+/// Seconds behind both protocol deadlines below.
+const RECV_TIMEOUT_SECS: u64 = 300;
+
+/// Default deadline for a blocking receive on the round protocol —
+/// the client-side wait in [`recv`] for the next server message. Five
+/// minutes comfortably covers the slowest server round at the paper's
+/// scales while still unsticking a genuinely hung run.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(RECV_TIMEOUT_SECS);
+
+/// Default per-round fault deadline used by the server and driver
+/// ([`crate::coordinator::server::ServerConfig::new`],
+/// [`crate::coordinator::driver::DcfPcaConfig::default_for`]): a client
+/// silent longer than this is treated as faulted, which `FaultPolicy`
+/// then adjudicates. Derived as 2× [`DEFAULT_RECV_TIMEOUT`] (= the
+/// historical 600 s default) so the coordinator always outlasts a
+/// client-side receive before declaring the peer dead.
+pub const DEFAULT_ROUND_TIMEOUT: Duration = Duration::from_secs(2 * RECV_TIMEOUT_SECS);
 
 /// A reliable, ordered, byte-counted duplex message channel.
 pub trait Channel: Send {
@@ -35,9 +53,10 @@ pub trait Channel: Send {
     fn bytes_received(&self) -> u64;
 }
 
-/// Blanket helper: receive with a long default timeout.
+/// Blanket helper: receive with the default fault deadline
+/// ([`DEFAULT_RECV_TIMEOUT`]).
 pub fn recv(ch: &mut dyn Channel) -> Result<Vec<u8>> {
-    ch.recv_timeout(Duration::from_secs(300))
+    ch.recv_timeout(DEFAULT_RECV_TIMEOUT)
 }
 
 #[cfg(test)]

@@ -9,7 +9,8 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use super::Channel;
 

@@ -1,0 +1,248 @@
+//! Minimal error handling in the spirit of `anyhow` (which is not in the
+//! offline vendor tree): a single string-chained [`Error`] type, a
+//! [`Result`] alias with a defaulted error parameter, a [`Context`]
+//! extension trait for `Result`/`Option`, and the [`anyhow!`], [`bail!`],
+//! [`ensure!`] macros.
+//!
+//! The lib imports these as `use crate::error::{...}`; external crates
+//! (tests, benches, examples) reach them through the `dcf_pca::anyhow`
+//! module alias re-exported from the crate root.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error: `chain[0]` is the outermost (most recently
+/// attached) message, `chain.last()` the root cause.
+///
+/// Like `anyhow::Error`, this type deliberately does **not** implement
+/// `std::error::Error` — that is what lets the blanket
+/// `From<E: std::error::Error>` conversion below coexist with the
+/// reflexive `From<Error> for Error`.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Attach an outer context message (consumes and returns self).
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` prints the full chain
+    /// joined by `: ` (matching `anyhow`'s alternate formatting).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or format
+/// arguments — same call shapes as `anyhow::anyhow!`.
+///
+/// Shim limitation vs real `anyhow`: `anyhow!(err_value)` keeps only the
+/// value's Display output. To preserve a source chain, convert with `?`
+/// or `.context(..)` instead of rewrapping through this macro.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::error::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error — `bail!(..)` is `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return ::std::result::Result::Err($crate::error::Error::msg(::std::format!($msg)))
+    };
+    ($err:expr $(,)?) => {
+        return ::std::result::Result::Err($crate::error::Error::msg($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::error::Error::msg(::std::format!($fmt, $($arg)*)))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::error::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::error::Error::msg(::std::format!($msg)));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::error::Error::msg($err));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::error::Error::msg(::std::format!(
+                $fmt,
+                $($arg)*
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let err = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:#}"), "outer: middle: root");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+        assert_eq!(err.root_cause(), "root");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("value {x}");
+        assert_eq!(format!("{e}"), "value 3");
+        let e2 = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{e2}"), "1 and 2");
+        let owned: String = "owned".into();
+        let e3 = anyhow!(owned);
+        assert_eq!(format!("{e3}"), "owned");
+    }
+
+    #[test]
+    fn ensure_and_bail_flow() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let err = fails(false).unwrap_err();
+        assert_eq!(format!("{err}"), "flag was false");
+    }
+
+    #[derive(Debug)]
+    struct Boom;
+
+    impl fmt::Display for Boom {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "boom")
+        }
+    }
+
+    impl std::error::Error for Boom {}
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), Boom> = Err(Boom);
+        let err = r.context("while reading").unwrap_err();
+        assert_eq!(format!("{err:#}"), "while reading: boom");
+
+        let o: Option<u8> = None;
+        let err = o.with_context(|| "missing thing").unwrap_err();
+        assert_eq!(format!("{err}"), "missing thing");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn parses(text: &str) -> Result<u32> {
+            Ok(text.parse::<u32>()?)
+        }
+        assert_eq!(parses("17").unwrap(), 17);
+        let err = parses("nope").unwrap_err();
+        assert!(!format!("{err}").is_empty());
+    }
+}

@@ -21,6 +21,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod linalg;
 pub mod rng;
@@ -30,4 +31,76 @@ pub mod telemetry;
 pub mod testing;
 pub mod util;
 
+/// Compatibility alias for the vendored error substrate (`src/error.rs`)
+/// under the name external callers knew from the `anyhow` crate:
+/// `dcf_pca::anyhow::Result`, `dcf_pca::anyhow::Context`, … The macros
+/// live at the crate root (`dcf_pca::anyhow!`, `dcf_pca::bail!`,
+/// `dcf_pca::ensure!`).
+pub mod anyhow {
+    pub use crate::error::{Context, Error, Result};
+}
+
 pub use linalg::Mat;
+pub use linalg::Workspace;
+
+/// Thread-local allocation counter used by the zero-allocation hot-path
+/// tests: counts heap allocations made on the calling thread between
+/// [`alloc_counter::measure`] boundaries. Installed as the global
+/// allocator only in the lib's own test builds.
+#[cfg(test)]
+pub(crate) mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    std::thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+        static ARMED: Cell<bool> = const { Cell::new(false) };
+    }
+
+    pub struct CountingAllocator;
+
+    fn bump() {
+        // try_with: never panic inside the allocator (TLS may be mid-teardown)
+        let _ = ARMED.try_with(|armed| {
+            if armed.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+    }
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            bump();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Run `f` with allocation counting armed on this thread; returns
+    /// `(f(), allocations_made)`.
+    pub fn measure<T>(f: impl FnOnce() -> T) -> (T, u64) {
+        ARMED.with(|armed| armed.set(true));
+        ALLOCS.with(|c| c.set(0));
+        let out = f();
+        let count = ALLOCS.with(|c| c.get());
+        ARMED.with(|armed| armed.set(false));
+        (out, count)
+    }
+}
+
+#[cfg(test)]
+#[global_allocator]
+static COUNTING_ALLOCATOR: alloc_counter::CountingAllocator = alloc_counter::CountingAllocator;

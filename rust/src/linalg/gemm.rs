@@ -20,16 +20,31 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// C ← A · B into a preallocated output (zero-allocation twin of
+/// [`matmul`]; any prior contents of `c` are overwritten).
+pub fn matmul_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    matmul_acc(c, a, b, 1.0, 0.0);
+}
+
 /// C = Aᵀ · B without materializing Aᵀ.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    matmul_tn_into(&mut c, a, b);
+    c
+}
+
+/// C ← Aᵀ · B into a preallocated output, without materializing Aᵀ
+/// (zero-allocation twin of [`matmul_tn`]).
+pub fn matmul_tn_into(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dim mismatch");
     let (k_dim, m) = a.shape();
     let n = b.cols();
-    let mut c = Mat::zeros(m, n);
+    assert_eq!(c.shape(), (m, n), "matmul_tn: output shape mismatch");
     // Aᵀ(i,k) = A(k,i): accumulate outer products of A rows into C rows,
     // k unrolled 4× (4 FMAs per C element load/store — same store-bound
     // argument as matmul_acc).
     let cd = c.as_mut_slice();
+    cd.fill(0.0);
     let ad = a.as_slice();
     let bd = b.as_slice();
     let mut k = 0;
@@ -63,19 +78,112 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
         }
         k += 1;
     }
-    c
 }
 
 /// C = A · Bᵀ.
-///
-/// The inner dimension here is the factor rank r (tiny) in every hot
-/// call (U·Vᵀ), so dot-product forms stall on short serial reductions.
-/// The blocked transpose is O(n·r) against the O(m·n·r) product — going
-/// through [`matmul`]'s store-amortized kernel wins measurably
-/// (see EXPERIMENTS.md §Perf iteration log).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_nt_into(&mut c, a, b);
+    c
+}
+
+/// C ← A · Bᵀ into a preallocated output, without materializing Bᵀ.
+///
+/// The inner dimension is the factor rank p (small) in every hot call
+/// (U·Vᵀ), where a plain dot-product loop stalls on one short serial
+/// reduction per output element. Processing eight rows of B at once
+/// gives eight independent FMA chains per pass over A's row — enough
+/// in-flight accumulators to cover FMA latency, matching the port
+/// pressure of the store-amortized [`matmul`] kernel the old
+/// transpose-then-multiply route used, minus the O(n·p) transpose and
+/// its allocation.
+pub fn matmul_nt_into(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dim mismatch");
-    matmul(a, &b.transpose())
+    let (m, k_dim) = a.shape();
+    let n = b.rows();
+    assert_eq!(c.shape(), (m, n), "matmul_nt: output shape mismatch");
+    let bd = b.as_slice();
+    for i in 0..m {
+        let ar = a.row(i);
+        let crow = &mut c.as_mut_slice()[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 8 <= n {
+            let b0 = &bd[j * k_dim..(j + 1) * k_dim];
+            let b1 = &bd[(j + 1) * k_dim..(j + 2) * k_dim];
+            let b2 = &bd[(j + 2) * k_dim..(j + 3) * k_dim];
+            let b3 = &bd[(j + 3) * k_dim..(j + 4) * k_dim];
+            let b4 = &bd[(j + 4) * k_dim..(j + 5) * k_dim];
+            let b5 = &bd[(j + 5) * k_dim..(j + 6) * k_dim];
+            let b6 = &bd[(j + 6) * k_dim..(j + 7) * k_dim];
+            let b7 = &bd[(j + 7) * k_dim..(j + 8) * k_dim];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            let (mut s4, mut s5, mut s6, mut s7) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..k_dim {
+                let av = ar[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+                s2 += av * b2[t];
+                s3 += av * b3[t];
+                s4 += av * b4[t];
+                s5 += av * b5[t];
+                s6 += av * b6[t];
+                s7 += av * b7[t];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            crow[j + 4] = s4;
+            crow[j + 5] = s5;
+            crow[j + 6] = s6;
+            crow[j + 7] = s7;
+            j += 8;
+        }
+        while j + 4 <= n {
+            let b0 = &bd[j * k_dim..(j + 1) * k_dim];
+            let b1 = &bd[(j + 1) * k_dim..(j + 2) * k_dim];
+            let b2 = &bd[(j + 2) * k_dim..(j + 3) * k_dim];
+            let b3 = &bd[(j + 3) * k_dim..(j + 4) * k_dim];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..k_dim {
+                let av = ar[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+                s2 += av * b2[t];
+                s3 += av * b3[t];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let br = &bd[j * k_dim..(j + 1) * k_dim];
+            crow[j] = ar.iter().zip(br).map(|(x, y)| x * y).sum();
+            j += 1;
+        }
+    }
+}
+
+/// Fused residual of the factorized objective: R ← U·Vᵀ + S − M in a
+/// single pass over the m×n_i block, instead of materializing U·Vᵀ and
+/// (U·Vᵀ + S) as separate temporaries. This is the hot kernel behind
+/// every gradient evaluation (Lemma 2).
+pub fn residual_into(r: &mut Mat, u: &Mat, v: &Mat, s: &Mat, m: &Mat) {
+    assert_eq!(s.shape(), m.shape(), "residual_into: S/M shape mismatch");
+    assert_eq!(
+        s.shape(),
+        (u.rows(), v.rows()),
+        "residual_into: S/M must match U·Vᵀ's shape"
+    );
+    matmul_nt_into(r, u, v); // also asserts r is m×n_i
+    let rd = r.as_mut_slice();
+    let sd = s.as_slice();
+    let md = m.as_slice();
+    for i in 0..rd.len() {
+        rd[i] += sd[i] - md[i];
+    }
 }
 
 /// C = beta*C + alpha * A·B — the blocked core.
@@ -85,7 +193,11 @@ pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
     assert_eq!(k_dim, kb_dim, "matmul: inner dim mismatch");
     assert_eq!(c.shape(), (m, n), "matmul: output shape mismatch");
 
-    if beta != 1.0 {
+    if beta == 0.0 {
+        // explicit overwrite (not `*= 0`) so reused workspace buffers
+        // holding NaN/inf garbage cannot poison the product
+        c.as_mut_slice().fill(0.0);
+    } else if beta != 1.0 {
         for x in c.as_mut_slice() {
             *x *= beta;
         }
@@ -134,8 +246,17 @@ pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
 
 /// Gram matrix G = AᵀA (r×r for A m×r), exploiting symmetry.
 pub fn gram(a: &Mat) -> Mat {
+    let mut g = Mat::zeros(a.cols(), a.cols());
+    gram_into(&mut g, a);
+    g
+}
+
+/// G ← AᵀA into a preallocated r×r output (zero-allocation twin of
+/// [`gram`]).
+pub fn gram_into(g: &mut Mat, a: &Mat) {
     let (m, r) = a.shape();
-    let mut g = Mat::zeros(r, r);
+    assert_eq!(g.shape(), (r, r), "gram: output shape mismatch");
+    g.as_mut_slice().fill(0.0);
     for i in 0..m {
         let row = a.row(i);
         for p in 0..r {
@@ -155,15 +276,22 @@ pub fn gram(a: &Mat) -> Mat {
             g[(q, p)] = g[(p, q)];
         }
     }
-    g
 }
 
 /// y = A·x for a vector x (len = A.cols).
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.cols(), x.len());
-    (0..a.rows())
-        .map(|i| a.row(i).iter().zip(x).map(|(av, xv)| av * xv).sum())
-        .collect()
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(&mut y, a, x);
+    y
+}
+
+/// y ← A·x into a preallocated output slice (len = A.rows).
+pub fn matvec_into(y: &mut [f64], a: &Mat, x: &[f64]) {
+    assert_eq!(a.cols(), x.len(), "matvec: x length mismatch");
+    assert_eq!(a.rows(), y.len(), "matvec: y length mismatch");
+    for (i, yv) in y.iter_mut().enumerate() {
+        *yv = a.row(i).iter().zip(x).map(|(av, xv)| av * xv).sum();
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +388,69 @@ mod tests {
         for i in 0..9 {
             assert!((y[i] - y2[(i, 0)]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_twins_on_dirty_buffers() {
+        // the _into kernels must fully overwrite stale garbage (NaN) and
+        // agree with their allocating twins to 1e-12
+        let mut rng = Pcg64::new(18);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 3, 5), (33, 17, 9), (20, 25, 4)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let mut c = Mat::from_fn(m, n, |_, _| f64::NAN);
+            matmul_into(&mut c, &a, &b);
+            assert_close(&c, &matmul(&a, &b), 1e-12);
+
+            let at_b = Mat::gaussian(m, n, &mut rng); // for Aᵀ·B, A is m×k → use (k=m rows)
+            let mut c_tn = Mat::from_fn(k, n, |_, _| f64::NAN);
+            matmul_tn_into(&mut c_tn, &a, &at_b);
+            assert_close(&c_tn, &matmul_tn(&a, &at_b), 1e-12);
+
+            let bt = Mat::gaussian(n, k, &mut rng);
+            let mut c_nt = Mat::from_fn(m, n, |_, _| f64::NAN);
+            matmul_nt_into(&mut c_nt, &a, &bt);
+            assert_close(&c_nt, &matmul_nt(&a, &bt), 1e-12);
+
+            let mut g = Mat::from_fn(k, k, |_, _| f64::NAN);
+            gram_into(&mut g, &a);
+            assert_close(&g, &gram(&a), 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_acc_beta_zero_overwrites_nan() {
+        let mut rng = Pcg64::new(19);
+        let a = Mat::gaussian(5, 4, &mut rng);
+        let b = Mat::gaussian(4, 6, &mut rng);
+        let mut c = Mat::from_fn(5, 6, |_, _| f64::NAN);
+        matmul_acc(&mut c, &a, &b, 1.0, 0.0);
+        assert!(c.as_slice().iter().all(|x| x.is_finite()));
+        assert_close(&c, &matmul(&a, &b), 1e-12);
+    }
+
+    #[test]
+    fn residual_into_matches_composed() {
+        let mut rng = Pcg64::new(20);
+        let (m, n, p) = (23, 11, 3);
+        let u = Mat::gaussian(m, p, &mut rng);
+        let v = Mat::gaussian(n, p, &mut rng);
+        let s = Mat::gaussian(m, n, &mut rng);
+        let mb = Mat::gaussian(m, n, &mut rng);
+        let mut r = Mat::from_fn(m, n, |_, _| f64::NAN);
+        residual_into(&mut r, &u, &v, &s, &mb);
+        let expect = &(&matmul_nt(&u, &v) + &s) - &mb;
+        assert_close(&r, &expect, 1e-12);
+    }
+
+    #[test]
+    fn matvec_into_matches() {
+        let mut rng = Pcg64::new(21);
+        let a = Mat::gaussian(9, 4, &mut rng);
+        let x = [0.5, -1.5, 2.0, 0.25];
+        let mut y = [f64::NAN; 9];
+        matvec_into(&mut y, &a, &x);
+        assert_eq!(y.to_vec(), matvec(&a, &x));
     }
 
     #[test]

@@ -88,18 +88,42 @@ impl Mat {
 
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
-        // blocked transpose for cache friendliness
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Blocked transpose into a preallocated `cols×rows` output — the
+    /// zero-allocation twin of [`Mat::transpose`].
+    pub fn transpose_into(&self, out: &mut Mat) {
+        assert_eq!(
+            out.shape(),
+            (self.cols, self.rows),
+            "transpose_into: output must be {}x{}",
+            self.cols,
+            self.rows
+        );
+        // blocked for cache friendliness
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
                 for i in ib..(ib + B).min(self.rows) {
                     for j in jb..(jb + B).min(self.cols) {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
                     }
                 }
             }
         }
-        t
+    }
+
+    /// Overwrite `self` with `other`'s entries (shapes must match).
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Set every entry to `v` without reallocating.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
     }
 
     /// Column slice `self[:, a..b]` as a new (contiguous) matrix.
@@ -293,6 +317,26 @@ mod tests {
         let m = Mat::gaussian(17, 33, &mut rng);
         let tt = m.transpose().transpose();
         assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_into_matches_and_overwrites() {
+        let mut rng = Pcg64::new(4);
+        let m = Mat::gaussian(13, 7, &mut rng);
+        let mut out = Mat::from_fn(7, 13, |_, _| f64::NAN); // stale garbage
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
+    }
+
+    #[test]
+    fn copy_from_and_fill() {
+        let mut rng = Pcg64::new(5);
+        let src = Mat::gaussian(4, 6, &mut rng);
+        let mut dst = Mat::zeros(4, 6);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        dst.fill(2.5);
+        assert!(dst.as_slice().iter().all(|&x| x == 2.5));
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! LAPACK in the offline environment): matrices, blocked GEMM, QR, exact
 //! Jacobi SVD, randomized truncated SVD, Cholesky solves, and the
 //! elementwise operators (shrinkage, Huber) the RPCA solvers are made of.
+//!
+//! Every hot-path kernel has a `_into` twin that writes into
+//! caller-provided buffers; [`Workspace`] bundles those buffers for the
+//! factorization inner loop so the steady-state local epoch allocates
+//! nothing (see `algorithms::factor`).
 
 pub mod gemm;
 pub mod matrix;
@@ -10,11 +15,21 @@ pub mod qr;
 pub mod rsvd;
 pub mod solve;
 pub mod svd;
+pub mod workspace;
 
-pub use gemm::{gram, matmul, matmul_acc, matmul_nt, matmul_tn, matvec};
+pub use gemm::{
+    gram, gram_into, matmul, matmul_acc, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+    matmul_tn_into, matvec, matvec_into, residual_into,
+};
 pub use matrix::Mat;
-pub use ops::{huber, l1_norm, residual_shrink_into, shrink, shrink_inplace, shrink_scalar};
+pub use ops::{
+    huber, l1_norm, residual_shrink_into, shrink, shrink_inplace, shrink_scalar, sub_into,
+};
 pub use qr::{orthonormalize, qr_thin};
 pub use rsvd::{rsvd, rsvd_svt, RsvdParams};
-pub use solve::{cholesky, cholesky_solve, ridge_solve_v, solve_spd};
+pub use solve::{
+    cholesky, cholesky_shifted_into, cholesky_solve, cholesky_solve_in_place, ridge_solve_v,
+    ridge_solve_v_into, solve_spd,
+};
 pub use svd::{reconstruct, singular_values, svd_jacobi, svt, svt_from, Svd};
+pub use workspace::Workspace;

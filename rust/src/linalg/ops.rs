@@ -42,6 +42,19 @@ pub fn residual_shrink_into(s: &mut Mat, m: &Mat, uv: &Mat, lambda: f64) {
     }
 }
 
+/// out ← a − b elementwise into a preallocated buffer (the `M − S`
+/// residual of Eq. 15 without the clone-then-axpy double pass).
+pub fn sub_into(out: &mut Mat, a: &Mat, b: &Mat) {
+    assert_eq!(a.shape(), b.shape(), "sub_into: input shape mismatch");
+    assert_eq!(out.shape(), a.shape(), "sub_into: output shape mismatch");
+    let od = out.as_mut_slice();
+    let ad = a.as_slice();
+    let bd = b.as_slice();
+    for i in 0..od.len() {
+        od[i] = ad[i] - bd[i];
+    }
+}
+
 /// Scalar Huber loss H_λ (paper Eq. 32).
 #[inline]
 pub fn huber_scalar(x: f64, lambda: f64) -> f64 {
@@ -109,6 +122,16 @@ mod tests {
         residual_shrink_into(&mut s, &m, &uv, 0.3);
         let expect = shrink(&(&m - &uv), 0.3);
         assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn sub_into_matches_operator() {
+        let mut rng = Pcg64::new(64);
+        let a = Mat::gaussian(6, 5, &mut rng);
+        let b = Mat::gaussian(6, 5, &mut rng);
+        let mut out = Mat::from_fn(6, 5, |_, _| f64::NAN);
+        sub_into(&mut out, &a, &b);
+        assert_eq!(out, &a - &b);
     }
 
     #[test]

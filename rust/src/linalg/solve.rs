@@ -10,15 +10,31 @@ use super::matrix::Mat;
 /// Returns `None` if A is not (numerically) positive definite.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
     let n = a.rows();
-    assert_eq!(a.rows(), a.cols(), "cholesky: square required");
     let mut l = Mat::zeros(n, n);
+    if cholesky_shifted_into(&mut l, a, 0.0) {
+        Some(l)
+    } else {
+        None
+    }
+}
+
+/// L ← Cholesky factor of (A + shift·I) into a preallocated n×n buffer
+/// (zero-allocation core of [`cholesky`] and the Eq. 15 ridge solve,
+/// which needs exactly the shifted form G + ρI). Returns `false` when
+/// A + shift·I is not (numerically) positive definite; `l`'s contents
+/// are unspecified in that case.
+pub fn cholesky_shifted_into(l: &mut Mat, a: &Mat, shift: f64) -> bool {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky: square required");
+    assert_eq!(l.shape(), (n, n), "cholesky: factor buffer shape mismatch");
+    l.as_mut_slice().fill(0.0);
     for j in 0..n {
-        let mut d = a[(j, j)];
+        let mut d = a[(j, j)] + shift;
         for k in 0..j {
             d -= l[(j, k)] * l[(j, k)];
         }
         if d <= 0.0 || !d.is_finite() {
-            return None;
+            return false;
         }
         let dj = d.sqrt();
         l[(j, j)] = dj;
@@ -30,7 +46,7 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
             l[(i, j)] = s / dj;
         }
     }
-    Some(l)
+    true
 }
 
 /// Solve A·X = B for SPD A via Cholesky; B and X are n×k.
@@ -41,10 +57,17 @@ pub fn solve_spd(a: &Mat, b: &Mat) -> Option<Mat> {
 
 /// Given the Cholesky factor L of A, solve A·X = B (forward + back subst).
 pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
-    let n = l.rows();
-    assert_eq!(b.rows(), n);
-    let k = b.cols();
     let mut x = b.clone();
+    cholesky_solve_in_place(l, &mut x);
+    x
+}
+
+/// Given the Cholesky factor L of A, overwrite `x` (initially B) with the
+/// solution of A·X = B — the zero-allocation twin of [`cholesky_solve`].
+pub fn cholesky_solve_in_place(l: &Mat, x: &mut Mat) {
+    let n = l.rows();
+    assert_eq!(x.rows(), n, "cholesky_solve: rhs row mismatch");
+    let k = x.cols();
     // forward: L·Y = B
     for i in 0..n {
         for c in 0..k {
@@ -65,7 +88,6 @@ pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
             x[(i, c)] = s / l[(i, i)];
         }
     }
-    x
 }
 
 /// Ridge solve for the RPCA inner problem (Eq. 15):
@@ -74,13 +96,39 @@ pub fn cholesky_solve(l: &Mat, b: &Mat) -> Mat {
 /// `g` must already be UᵀU; `rhs` must be Uᵀ(M−S) (r×n_i). Output is n_i×r.
 pub fn ridge_solve_v(g: &Mat, rhs: &Mat, rho: f64) -> Mat {
     let r = g.rows();
-    let mut greg = g.clone();
-    for i in 0..r {
-        greg[(i, i)] += rho;
-    }
-    // (G+ρI) Vᵀ = RHS  →  Vᵀ is r×n_i; return V = (Vᵀ)ᵀ
-    let vt = solve_spd(&greg, rhs).expect("G+ρI must be SPD for ρ>0");
-    vt.transpose()
+    let n_i = rhs.cols();
+    let mut v = Mat::zeros(n_i, r);
+    let mut chol = Mat::zeros(r, r);
+    let mut sol = Mat::zeros(r, n_i);
+    ridge_solve_v_into(&mut v, g, rhs, rho, &mut chol, &mut sol);
+    v
+}
+
+/// Zero-allocation twin of [`ridge_solve_v`]: writes V (n_i×r) into `v`
+/// using caller-provided scratch — `chol` (r×r) holds the Cholesky
+/// factor of G+ρI, `sol` (r×n_i) the intermediate Vᵀ. Both scratch
+/// buffers come from [`crate::linalg::Workspace`] on the hot path.
+pub fn ridge_solve_v_into(
+    v: &mut Mat,
+    g: &Mat,
+    rhs: &Mat,
+    rho: f64,
+    chol: &mut Mat,
+    sol: &mut Mat,
+) {
+    let r = g.rows();
+    let n_i = rhs.cols();
+    assert_eq!(rhs.rows(), r, "ridge_solve_v: rhs must be r×n_i");
+    assert_eq!(v.shape(), (n_i, r), "ridge_solve_v: output must be n_i×r");
+    assert_eq!(sol.shape(), (r, n_i), "ridge_solve_v: sol scratch must be r×n_i");
+    // (G+ρI) Vᵀ = RHS  →  Vᵀ is r×n_i; V = (Vᵀ)ᵀ
+    assert!(
+        cholesky_shifted_into(chol, g, rho),
+        "G+ρI must be SPD for ρ>0"
+    );
+    sol.copy_from(rhs);
+    cholesky_solve_in_place(chol, sol);
+    sol.transpose_into(v);
 }
 
 #[cfg(test)]
@@ -139,6 +187,37 @@ mod tests {
         }
         let lhs = matmul(&greg, &v.transpose());
         assert!((&lhs - &rhs).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_solve_into_matches_allocating_twin() {
+        let mut rng = Pcg64::new(25);
+        let u = Mat::gaussian(30, 4, &mut rng);
+        let resid = Mat::gaussian(30, 10, &mut rng);
+        let g = gram(&u);
+        let rhs = matmul_tn(&u, &resid);
+        let rho = 0.1;
+        let expect = ridge_solve_v(&g, &rhs, rho);
+        let mut v = Mat::from_fn(10, 4, |_, _| f64::NAN);
+        let mut chol = Mat::from_fn(4, 4, |_, _| f64::NAN);
+        let mut sol = Mat::from_fn(4, 10, |_, _| f64::NAN);
+        ridge_solve_v_into(&mut v, &g, &rhs, rho, &mut chol, &mut sol);
+        assert!((&v - &expect).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_shifted_matches_explicit_shift() {
+        let mut rng = Pcg64::new(26);
+        let b = Mat::gaussian(14, 5, &mut rng);
+        let g = gram(&b);
+        let mut shifted = g.clone();
+        for i in 0..5 {
+            shifted[(i, i)] += 0.7;
+        }
+        let expect = cholesky(&shifted).unwrap();
+        let mut l = Mat::from_fn(5, 5, |_, _| f64::NAN);
+        assert!(cholesky_shifted_into(&mut l, &g, 0.7));
+        assert!((&l - &expect).frob_norm() < 1e-12);
     }
 
     #[test]

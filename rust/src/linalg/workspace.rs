@@ -1,0 +1,111 @@
+//! Reusable scratch buffers for the factorization hot path.
+//!
+//! One [`Workspace`] holds every temporary the inner-problem sweep
+//! (Eqs. 15–16), the U-gradient (Lemma 2), and the curvature estimate
+//! need, sized once from the client's block shape `(m, n_i, p)`. Threaded
+//! through `algorithms::factor` → `coordinator::kernel` →
+//! `coordinator::client`, it makes the steady-state local epoch perform
+//! **zero heap allocations** (asserted by a counting-allocator test in
+//! `coordinator::kernel`): the J × K × T inner sweeps of a DCF-PCA run
+//! touch only these preallocated buffers.
+//!
+//! Shape discipline: every consumer calls [`Workspace::assert_shape`]
+//! first, so a workspace sized for one client can never be silently used
+//! for a differently-shaped block.
+
+use super::matrix::Mat;
+
+/// Preallocated scratch for one client block of shape m×n_i with factor
+/// width p. All fields are public working buffers; their contents are
+/// unspecified between calls — every kernel fully overwrites what it
+/// reads.
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    m: usize,
+    n_i: usize,
+    p: usize,
+    /// p×p — Gram matrix UᵀU (or VᵀV for the curvature estimate)
+    pub gram: Mat,
+    /// p×p — Cholesky factor of G+ρI (Eq. 15's system matrix)
+    pub chol: Mat,
+    /// p×n_i — right-hand side Uᵀ(M−S)
+    pub rhs: Mat,
+    /// p×n_i — ridge-solve intermediate Vᵀ
+    pub sol: Mat,
+    /// m×n_i — block-sized residual (M−S, then U·Vᵀ, then U·Vᵀ+S−M)
+    pub resid: Mat,
+    /// m×p — ∇_U L_i
+    pub grad: Mat,
+    /// p — power-iteration vector for the curvature estimate
+    pub pow_x: Vec<f64>,
+    /// p — power-iteration image G·x
+    pub pow_y: Vec<f64>,
+}
+
+impl Workspace {
+    /// Allocate all buffers for a client block of shape `m×n_i` with
+    /// factor width `p`. This is the only allocating call on the hot
+    /// path — do it once per client, outside the round loop.
+    pub fn new(m: usize, n_i: usize, p: usize) -> Self {
+        assert!(m > 0 && n_i > 0 && p > 0, "workspace dims must be positive");
+        Workspace {
+            m,
+            n_i,
+            p,
+            gram: Mat::zeros(p, p),
+            chol: Mat::zeros(p, p),
+            rhs: Mat::zeros(p, n_i),
+            sol: Mat::zeros(p, n_i),
+            resid: Mat::zeros(m, n_i),
+            grad: Mat::zeros(m, p),
+            pow_x: vec![0.0; p],
+            pow_y: vec![0.0; p],
+        }
+    }
+
+    /// Does this workspace fit a block of the given shape exactly?
+    #[inline]
+    pub fn matches(&self, m: usize, n_i: usize, p: usize) -> bool {
+        self.m == m && self.n_i == n_i && self.p == p
+    }
+
+    /// Panic with a pointed message unless the workspace was sized for
+    /// exactly `(m, n_i, p)`. Cheap (three integer compares) — called at
+    /// the top of every hot-path kernel.
+    #[inline]
+    pub fn assert_shape(&self, m: usize, n_i: usize, p: usize) {
+        assert!(
+            self.matches(m, n_i, p),
+            "workspace sized for (m={}, n_i={}, p={}) used with a (m={m}, n_i={n_i}, p={p}) block",
+            self.m,
+            self.n_i,
+            self.p,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_have_documented_shapes() {
+        let ws = Workspace::new(12, 7, 3);
+        assert_eq!(ws.gram.shape(), (3, 3));
+        assert_eq!(ws.chol.shape(), (3, 3));
+        assert_eq!(ws.rhs.shape(), (3, 7));
+        assert_eq!(ws.sol.shape(), (3, 7));
+        assert_eq!(ws.resid.shape(), (12, 7));
+        assert_eq!(ws.grad.shape(), (12, 3));
+        assert_eq!(ws.pow_x.len(), 3);
+        assert_eq!(ws.pow_y.len(), 3);
+        assert!(ws.matches(12, 7, 3));
+        ws.assert_shape(12, 7, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace sized for")]
+    fn shape_mismatch_panics() {
+        Workspace::new(4, 4, 2).assert_shape(4, 4, 3);
+    }
+}

@@ -20,7 +20,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::util::json::Json;
 

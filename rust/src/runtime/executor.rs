@@ -26,11 +26,12 @@
 
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::algorithms::factor::{lipschitz_estimate, ClientState, FactorHyper};
 use crate::coordinator::kernel::{EpochOutput, LocalUpdateKernel};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 
 use super::artifacts::{Manifest, Variant};
 use super::pjrt::{CompiledHlo, PjrtArg, PjrtRuntime};
@@ -182,15 +183,17 @@ impl LocalUpdateKernel for PjrtKernel {
         "pjrt"
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn local_epoch(
         &self,
-        u: &Mat,
+        u: &mut Mat,
         m_block: &Mat,
         state: &mut ClientState,
         hyper: &FactorHyper,
         n_frac: f64,
         eta: f64,
         k_local: usize,
+        ws: &mut Workspace,
     ) -> Result<EpochOutput> {
         self.check_hyper(hyper)?;
         let (m, width) = m_block.shape();
@@ -221,9 +224,12 @@ impl LocalUpdateKernel for PjrtKernel {
         // strip padding
         state.v = Mat::from_fn(width, hyper.rank, |i, j| v_out[(i, j)]);
         state.s = s_out.cols_range(0, width);
+        *u = u_out;
         let grad_norm = gn_out[(0, 0)];
-        let lipschitz = lipschitz_estimate(state, hyper);
-        Ok(EpochOutput { u: u_out, grad_norm, lipschitz })
+        // the artifact does not report curvature — estimate natively from
+        // the returned V, reusing the caller's workspace buffers
+        let lipschitz = lipschitz_estimate(state, hyper, ws);
+        Ok(EpochOutput { grad_norm, lipschitz })
     }
 }
 

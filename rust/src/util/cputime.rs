@@ -4,17 +4,40 @@
 //! the honest "what would this client compute on its own device" metric
 //! used for the paper's Eq. 26 per-client cost curves.
 
+/// Raw `clock_gettime(2)` binding — declared directly against the C
+/// library (which is linked anyway) instead of pulling in the `libc`
+/// crate, keeping the build dependency-free. The hand-rolled
+/// `timespec` layout (two i64s) is only correct for 64-bit Linux, so
+/// the binding is gated on that; 32-bit targets take the portable
+/// fallback rather than silently reading a mis-sized struct.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod sys {
+    /// Matches glibc/musl `struct timespec` on 64-bit Linux.
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    /// `CLOCK_THREAD_CPUTIME_ID` from `<time.h>` on Linux.
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+    extern "C" {
+        pub fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+}
+
 /// CPU seconds consumed by the calling thread.
 pub fn thread_cpu_seconds() -> f64 {
-    #[cfg(target_os = "linux")]
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
     unsafe {
-        let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-        if libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) == 0 {
+        let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
+        if sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) == 0 {
             return ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9;
         }
         0.0
     }
-    #[cfg(not(target_os = "linux"))]
+    #[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
     {
         // portable fallback: process wall clock (documented imprecision)
         use std::time::{SystemTime, UNIX_EPOCH};

@@ -19,7 +19,7 @@ fn spawn_tcp_clients(
     problem: &dcf_pca::rpca::problem::RpcaProblem,
     partition: &ColumnPartition,
     faults: Vec<FaultPlan>,
-) -> Vec<std::thread::JoinHandle<anyhow::Result<u64>>> {
+) -> Vec<std::thread::JoinHandle<dcf_pca::anyhow::Result<u64>>> {
     let spec = problem.spec;
     (0..partition.num_clients())
         .map(|id| {
@@ -28,7 +28,7 @@ fn spawn_tcp_clients(
             let m_block = problem.observed.cols_range(a, b);
             let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
             let fault = faults.get(id).copied().unwrap_or_default();
-            std::thread::spawn(move || -> anyhow::Result<u64> {
+            std::thread::spawn(move || -> dcf_pca::anyhow::Result<u64> {
                 let mut ch = TcpChannel::connect(&addr)?;
                 let cfg = ClientConfig {
                     id,

@@ -5,6 +5,7 @@
 use dcf_pca::algorithms::factor::{
     inner_objective, inner_sweep, ClientState, FactorHyper,
 };
+use dcf_pca::linalg::Workspace;
 use dcf_pca::coordinator::aggregate::{aggregate, Aggregation};
 use dcf_pca::coordinator::protocol::{ToClient, ToServer};
 use dcf_pca::coordinator::transport::framing::{put_mat, Reader};
@@ -119,9 +120,10 @@ fn prop_inner_sweep_monotone_descent() {
         let m_block = g.mat(m_dim, n_dim);
         let u = g.mat(m_dim, r);
         let mut state = ClientState::zeros(m_dim, n_dim, r);
+        let mut ws = Workspace::new(m_dim, n_dim, r);
         let mut prev = inner_objective(&u, &m_block, &state, &hyper);
         for _ in 0..4 {
-            inner_sweep(&u, &m_block, &mut state, &hyper);
+            inner_sweep(&u, &m_block, &mut state, &hyper, &mut ws);
             let cur = inner_objective(&u, &m_block, &state, &hyper);
             assert!(cur <= prev * (1.0 + 1e-10) + 1e-10, "{cur} > {prev}");
             prev = cur;

@@ -9,27 +9,35 @@ use dcf_pca::algorithms::factor::{ClientState, FactorHyper};
 use dcf_pca::algorithms::Schedule;
 use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig, KernelSpec};
 use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
-use dcf_pca::linalg::Mat;
+use dcf_pca::linalg::{Mat, Workspace};
 use dcf_pca::rng::Pcg64;
 use dcf_pca::rpca::problem::ProblemSpec;
 use dcf_pca::runtime::{Manifest, PjrtKernel};
 
-fn artifacts_available() -> bool {
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        true
-    } else {
+/// Self-skip helper: parity tests need both the AOT artifacts on disk
+/// AND a working PJRT runtime (the `xla`-less stub build makes
+/// `PjrtKernel::load` fail even when artifacts exist).
+fn load_kernel_or_skip() -> Option<PjrtKernel> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
-        false
+        return None;
+    }
+    match PjrtKernel::load("artifacts") {
+        Ok(kernel) => Some(kernel),
+        Err(err) => {
+            eprintln!("SKIP: PJRT runtime unavailable: {err:#}");
+            None
+        }
     }
 }
 
 #[test]
 fn every_manifest_variant_matches_native() {
-    if !artifacts_available() {
-        return;
-    }
+    let kernel = match load_kernel_or_skip() {
+        Some(k) => k,
+        None => return,
+    };
     let manifest = Manifest::load("artifacts").unwrap();
-    let kernel = PjrtKernel::load("artifacts").unwrap();
     for v in &manifest.variants {
         let rel = dcf_pca::cli::commands::artifacts_check::check_variant(
             &kernel,
@@ -46,13 +54,13 @@ fn every_manifest_variant_matches_native() {
 
 #[test]
 fn padded_narrow_block_matches_native() {
-    if !artifacts_available() {
-        return;
-    }
     // variant client_m64_n32_r4 exists; feed a 17-column block (padded
     // to 32 inside the executor) and compare against native on the
     // unpadded block.
-    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let kernel = match load_kernel_or_skip() {
+        Some(k) => k,
+        None => return,
+    };
     let spec = ProblemSpec { m: 64, n: 17, rank: 4, sparsity: 0.05 };
     let problem = spec.generate(21);
     let mut hyper = FactorHyper::default_for(64, 17, 4);
@@ -60,31 +68,34 @@ fn padded_narrow_block_matches_native() {
     let mut rng = Pcg64::new(3);
     let u = Mat::gaussian(64, 4, &mut rng);
 
+    let mut ws = Workspace::new(64, 17, 4);
     let mut st_native = ClientState::zeros(64, 17, 4);
-    let native = NativeKernel
-        .local_epoch(&u, &problem.observed, &mut st_native, &hyper, 0.3, 1e-3, 2)
+    let mut u_native = u.clone();
+    NativeKernel
+        .local_epoch(&mut u_native, &problem.observed, &mut st_native, &hyper, 0.3, 1e-3, 2, &mut ws)
         .unwrap();
     let mut st_pjrt = ClientState::zeros(64, 17, 4);
-    let pjrt = kernel
-        .local_epoch(&u, &problem.observed, &mut st_pjrt, &hyper, 0.3, 1e-3, 2)
+    let mut u_pjrt = u.clone();
+    kernel
+        .local_epoch(&mut u_pjrt, &problem.observed, &mut st_pjrt, &hyper, 0.3, 1e-3, 2, &mut ws)
         .unwrap();
 
     assert_eq!(st_pjrt.v.shape(), (17, 4));
     assert_eq!(st_pjrt.s.shape(), (64, 17));
     let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1e-12);
-    assert!(rel(&pjrt.u, &native.u) < 2e-3);
+    assert!(rel(&u_pjrt, &u_native) < 2e-3);
     assert!(rel(&st_pjrt.v, &st_native.v) < 2e-3);
     assert!(rel(&st_pjrt.s, &st_native.s) < 2e-3);
 }
 
 #[test]
 fn full_coordinator_loop_through_pjrt() {
-    if !artifacts_available() {
-        return;
-    }
+    let kernel = match load_kernel_or_skip() {
+        Some(k) => k,
+        None => return,
+    };
     let spec = ProblemSpec::square(60, 3, 0.05);
     let problem = spec.generate(42);
-    let kernel = PjrtKernel::load("artifacts").unwrap();
     let mut cfg = DcfPcaConfig::default_for(&spec)
         .with_clients(5)
         .with_rounds(25)
@@ -101,18 +112,19 @@ fn full_coordinator_loop_through_pjrt() {
 
 #[test]
 fn missing_variant_is_a_clean_error() {
-    if !artifacts_available() {
-        return;
-    }
-    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let kernel = match load_kernel_or_skip() {
+        Some(k) => k,
+        None => return,
+    };
     let spec = ProblemSpec { m: 123, n: 10, rank: 7, sparsity: 0.05 };
     let problem = spec.generate(1);
     let hyper = FactorHyper::default_for(123, 10, 7);
     let mut st = ClientState::zeros(123, 10, 7);
+    let mut ws = Workspace::new(123, 10, 7);
     let mut rng = Pcg64::new(1);
-    let u = Mat::gaussian(123, 7, &mut rng);
+    let mut u = Mat::gaussian(123, 7, &mut rng);
     let err = kernel
-        .local_epoch(&u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 2)
+        .local_epoch(&mut u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 2, &mut ws)
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("no artifact variant"), "got: {msg}");
@@ -121,19 +133,20 @@ fn missing_variant_is_a_clean_error() {
 
 #[test]
 fn mismatched_hyper_is_a_clean_error() {
-    if !artifacts_available() {
-        return;
-    }
-    let kernel = PjrtKernel::load("artifacts").unwrap();
+    let kernel = match load_kernel_or_skip() {
+        Some(k) => k,
+        None => return,
+    };
     let spec = ProblemSpec::square(40, 2, 0.05);
     let problem = spec.generate(2);
     let mut hyper = FactorHyper::default_for(40, 40, 2);
     hyper.lambda *= 3.0; // not what the artifacts were baked with
     let mut st = ClientState::zeros(40, 40, 2);
+    let mut ws = Workspace::new(40, 40, 2);
     let mut rng = Pcg64::new(2);
-    let u = Mat::gaussian(40, 2, &mut rng);
+    let mut u = Mat::gaussian(40, 2, &mut rng);
     let err = kernel
-        .local_epoch(&u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 1)
+        .local_epoch(&mut u, &problem.observed, &mut st, &hyper, 1.0, 1e-3, 1, &mut ws)
         .unwrap_err();
     assert!(format!("{err:#}").contains("re-run `make artifacts`"));
 }
