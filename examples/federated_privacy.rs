@@ -61,7 +61,7 @@ fn main() -> dcf_pca::anyhow::Result<()> {
                 compression: dcf_pca::coordinator::Compression::None,
                 dp_sigma: 0.0,
             };
-            run_client(&mut ch, cfg, &NativeKernel)?;
+            run_client(&mut ch, cfg, &NativeKernel::new())?;
             Ok(ch.bytes_sent())
         }));
     }

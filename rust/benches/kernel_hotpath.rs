@@ -2,22 +2,31 @@
 //!
 //! - L1: blocked gemm (the dominant flops), exact/randomized SVD
 //!   (baseline cost), transport framing.
-//! - L2/L3: inner solve and the full local epoch, measured BOTH ways —
-//!   the historical allocating path (fresh buffers every sweep,
-//!   reconstructed here from the allocating linalg twins) against the
-//!   `Workspace`-based zero-allocation path the kernels now use — at the
-//!   paper's §4 shapes (m = n = 1000, p ∈ {5, 25}).
+//! - L2/L3: the local epoch measured THREE ways at the paper's §4 shapes
+//!   (m = n = 1000, p ∈ {5, 25}, J=3, K=2) —
+//!     1. the historical allocating path (fresh buffers every sweep),
+//!     2. the PR-1 multi-pass workspace path (zero-allocation but 4–6
+//!        DRAM streams of the block per sweep; preserved as
+//!        `factor::oracle`),
+//!     3. the fused column-tile pipeline (one DRAM pass per sweep) at
+//!        `--threads 1` (fusion alone) and `--threads 2` (fusion +
+//!        panel parallelism).
+//!   The fused and multi-pass rows carry both a GFLOP/s rate and an
+//!   *effective bandwidth* (`effective_gb_per_s`): the block bytes the
+//!   epoch logically moves under each traffic model divided by wall
+//!   time — the number that shows fusion converting a bandwidth-bound
+//!   kernel into a compute-bound one.
 //! - RT: one PJRT client_update execution (artifact path), if artifacts
 //!   are built.
 //!
-//! Besides the human-readable table, each run writes a fresh snapshot
-//! of `{op, shape, ns_per_iter, gflops}` records to
-//! `BENCH_kernel_hotpath.json` (overwriting the previous run — the
-//! perf trajectory accumulates as the file's history in git).
+//! Besides the human-readable table, each run writes a fresh snapshot of
+//! `{op, shape, ns_per_iter, gflops, effective_gb_per_s}` records to
+//! `BENCH_kernel_hotpath.json` (overwriting the previous run — the perf
+//! trajectory accumulates as the file's history in git).
 
 use std::collections::BTreeMap;
 
-use dcf_pca::algorithms::factor::{inner_solve, ClientState, FactorHyper};
+use dcf_pca::algorithms::factor::{inner_solve, oracle, ClientState, FactorHyper};
 use dcf_pca::bench_util::{fmt_secs, Bencher, Table};
 use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
 use dcf_pca::linalg::{
@@ -26,6 +35,7 @@ use dcf_pca::linalg::{
 };
 use dcf_pca::rng::Pcg64;
 use dcf_pca::rpca::problem::ProblemSpec;
+use dcf_pca::runtime::pool;
 use dcf_pca::util::json::Json;
 
 /// One machine-readable bench record.
@@ -34,6 +44,7 @@ struct Record {
     shape: String,
     ns_per_iter: f64,
     gflops: Option<f64>,
+    effective_gb_per_s: Option<f64>,
 }
 
 impl Record {
@@ -42,22 +53,50 @@ impl Record {
         obj.insert("op".to_string(), Json::Str(self.op.clone()));
         obj.insert("shape".to_string(), Json::Str(self.shape.clone()));
         obj.insert("ns_per_iter".to_string(), Json::Num(self.ns_per_iter));
-        obj.insert(
-            "gflops".to_string(),
-            match self.gflops {
-                Some(g) => Json::Num(g),
-                None => Json::Null,
-            },
-        );
+        let opt = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        obj.insert("gflops".to_string(), opt(self.gflops));
+        obj.insert("effective_gb_per_s".to_string(), opt(self.effective_gb_per_s));
         Json::Obj(obj)
     }
+}
+
+/// FLOPs of one local epoch: per sweep, the RHS accumulation and the
+/// U·Vᵀ-for-shrink each cost 2mnp; the gradient pass costs another
+/// 4mnp (residual + accumulate). Ridge solves and Gram terms are
+/// O(np²)/O(mp²) — negligible at p ≪ min(m, n).
+fn epoch_flops(m: usize, n: usize, p: usize, j: usize, k: usize) -> f64 {
+    let mnp = (m * n * p) as f64;
+    (k * j) as f64 * 4.0 * mnp + k as f64 * 4.0 * mnp
+}
+
+/// Block bytes one *fused* epoch moves (traffic model, 8 B/entry): each
+/// sweep reads M once, reads S once, writes S once (3mn); each gradient
+/// pass reads M and S (2mn). Factor-sized traffic (U, V) is L2-resident
+/// and excluded on both sides of the comparison.
+fn fused_epoch_bytes(m: usize, n: usize, j: usize, k: usize) -> f64 {
+    let mn = (m * n) as f64 * 8.0;
+    (k * j) as f64 * 3.0 * mn + k as f64 * 2.0 * mn
+}
+
+/// Block bytes one *multi-pass* epoch moves: per sweep — sub_into reads
+/// M, S and writes resid (3mn), matmul_tn reads resid (mn), matmul_nt
+/// rewrites resid (mn), residual_shrink reads M, resid and writes S
+/// (3mn) — 8mn total; per gradient — residual_into writes resid, then
+/// reads resid, S, M and rewrites it (5mn), matmul reads resid (mn) —
+/// 6mn total.
+fn multipass_epoch_bytes(m: usize, n: usize, j: usize, k: usize) -> f64 {
+    let mn = (m * n) as f64 * 8.0;
+    (k * j) as f64 * 8.0 * mn + k as f64 * 6.0 * mn
 }
 
 /// The pre-Workspace local epoch, reconstructed from the allocating
 /// linalg twins: four to six full-size matrices are allocated and freed
 /// per inner sweep (`gram`, `resid`, `rhs`, the ridge solve's internal
 /// scratch, `uv`) plus the gradient temporaries and a per-epoch U clone —
-/// exactly the traffic the Workspace refactor eliminates.
+/// exactly the traffic the Workspace refactor eliminated in PR 1.
 fn allocating_local_epoch(
     u0: &Mat,
     m_block: &Mat,
@@ -86,7 +125,7 @@ fn allocating_local_epoch(
         u.axpy(-eta, &grad);
     }
     // allocating curvature estimate (gram + per-iteration matvec Vecs),
-    // matching what the old kernel did after every epoch
+    // matching what the pre-PR-1 kernel did after every epoch
     let g = gram(&state.v);
     let r = g.rows();
     let mut x = vec![1.0 / (r as f64).sqrt(); r];
@@ -106,21 +145,24 @@ fn allocating_local_epoch(
 fn main() {
     let mut rng = Pcg64::new(1);
     let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(240) };
-    let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s"]);
+    let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s", "eff GB/s"]);
     let mut records: Vec<Record> = Vec::new();
 
-    let push = |t: &mut Table, records: &mut Vec<Record>, op: &str, shape: &str, mean: f64, gflops: Option<f64>| {
-        t.row(&[
-            op.into(),
-            shape.into(),
-            fmt_secs(mean),
-            gflops.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()),
-        ]);
+    let push = |t: &mut Table,
+                records: &mut Vec<Record>,
+                op: &str,
+                shape: &str,
+                mean: f64,
+                gflops: Option<f64>,
+                gbs: Option<f64>| {
+        let fmt_opt = |v: Option<f64>| v.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into());
+        t.row(&[op.into(), shape.into(), fmt_secs(mean), fmt_opt(gflops), fmt_opt(gbs)]);
         records.push(Record {
             op: op.to_string(),
             shape: shape.to_string(),
             ns_per_iter: mean * 1e9,
             gflops,
+            effective_gb_per_s: gbs,
         });
     };
 
@@ -130,7 +172,7 @@ fn main() {
         let bm = Mat::gaussian(k, n, &mut rng);
         let stats = b.run(|| matmul(&a, &bm));
         let gflops = 2.0 * (m * k * n) as f64 / stats.mean / 1e9;
-        push(&mut t, &mut records, "gemm", &format!("{m}x{k}x{n}"), stats.mean, Some(gflops));
+        push(&mut t, &mut records, "gemm", &format!("{m}x{k}x{n}"), stats.mean, Some(gflops), None);
     }
 
     // U·Vᵀ (the residual product of every inner sweep)
@@ -139,10 +181,11 @@ fn main() {
         let v = Mat::gaussian(500, 25, &mut rng);
         let stats = b.run(|| matmul_nt(&u, &v));
         let gflops = 2.0 * (500 * 25 * 500) as f64 / stats.mean / 1e9;
-        push(&mut t, &mut records, "gemm_nt (U·Vᵀ)", "500x25x500", stats.mean, Some(gflops));
+        let (op, shape) = ("gemm_nt (U·Vᵀ)", "500x25x500");
+        push(&mut t, &mut records, op, shape, stats.mean, Some(gflops), None);
     }
 
-    // one inner solve at the paper's client shape (workspace path)
+    // one inner solve at the paper's client shape (fused panel path)
     {
         let spec = ProblemSpec { m: 500, n: 50, rank: 25, sparsity: 0.05 };
         let p = spec.generate(7);
@@ -150,51 +193,129 @@ fn main() {
         let u = Mat::gaussian(500, 25, &mut rng);
         let mut state = ClientState::zeros(500, 50, 25);
         let mut ws = Workspace::new(500, 50, 25);
-        let stats = b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper, &mut ws));
-        push(&mut t, &mut records, "inner_solve (J=3)", "m=500 n_i=50 r=25", stats.mean, None);
+        let stats =
+            b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper, pool::global(), &mut ws));
+        push(
+            &mut t,
+            &mut records,
+            "inner_solve (J=3)",
+            "m=500 n_i=50 r=25",
+            stats.mean,
+            None,
+            None,
+        );
     }
 
-    // THE headline comparison: allocating vs workspace local epoch at the
-    // paper's §4 shapes — m = n = 1000, p ∈ {5, 25}, J=3, K=2
+    // THE headline comparison: allocating vs multi-pass workspace (PR 1,
+    // preserved as factor::oracle) vs the fused column-tile epoch at
+    // --threads 1 and 2 — m = n = 1000, p ∈ {5, 25}, J=3, K=2
+    let (j_sweeps, k_local) = (3usize, 2usize);
     for &p_width in &[5usize, 25] {
         let spec = ProblemSpec { m: 1000, n: 1000, rank: p_width, sparsity: 0.05 };
         let prob = spec.generate(11);
         let hyper = FactorHyper::default_for(1000, 1000, p_width);
+        assert_eq!(hyper.inner_sweeps, j_sweeps, "flop/byte models assume J = inner_sweeps");
         let u0 = Mat::gaussian(1000, p_width, &mut rng);
-        let shape = format!("m=n=1000 p={p_width} J=3 K=2");
+        let shape = format!("m=n=1000 p={p_width} J={j_sweeps} K={k_local}");
+        let flops = epoch_flops(1000, 1000, p_width, j_sweeps, k_local);
 
         let mut state_a = ClientState::zeros(1000, 1000, p_width);
         let stats_alloc = b.run(|| {
-            allocating_local_epoch(&u0, &prob.observed, &mut state_a, &hyper, 1.0, 1e-3, 2)
+            allocating_local_epoch(&u0, &prob.observed, &mut state_a, &hyper, 1.0, 1e-3, k_local)
         });
-        push(&mut t, &mut records, "local_epoch (allocating)", &shape, stats_alloc.mean, None);
+        push(
+            &mut t,
+            &mut records,
+            "local_epoch (allocating)",
+            &shape,
+            stats_alloc.mean,
+            Some(flops / stats_alloc.mean / 1e9),
+            None,
+        );
 
-        let mut state_b = ClientState::zeros(1000, 1000, p_width);
-        let mut ws = Workspace::new(1000, 1000, p_width);
-        let mut u_ws = u0.clone();
-        let stats_ws = b.run(|| {
-            // restart U from u0 each sample (matching the allocating
-            // arm's clone) so both rows measure identical numerical work
-            // — only (V, S) warm-start across samples, in both arms
-            u_ws.copy_from(&u0);
-            NativeKernel
-                .local_epoch(&mut u_ws, &prob.observed, &mut state_b, &hyper, 1.0, 1e-3, 2, &mut ws)
-                .unwrap()
+        // PR-1 multi-pass workspace epoch (the ≥1.8×/≥1.2× baseline)
+        let mut state_mp = ClientState::zeros(1000, 1000, p_width);
+        let mut ows = oracle::MultipassWorkspace::new(1000, 1000, p_width);
+        let mut u_mp = u0.clone();
+        let stats_mp = b.run(|| {
+            // restart U from u0 each sample so every arm measures the
+            // identical numerical work; only (V, S) warm-start across
+            // samples, in all arms
+            u_mp.copy_from(&u0);
+            oracle::local_epoch(
+                &mut u_mp,
+                &prob.observed,
+                &mut state_mp,
+                &hyper,
+                1.0,
+                1e-3,
+                k_local,
+                &mut ows,
+            )
         });
-        push(&mut t, &mut records, "local_epoch (workspace)", &shape, stats_ws.mean, None);
+        let mp_bytes = multipass_epoch_bytes(1000, 1000, j_sweeps, k_local);
+        push(
+            &mut t,
+            &mut records,
+            "local_epoch (multipass)",
+            &shape,
+            stats_mp.mean,
+            Some(flops / stats_mp.mean / 1e9),
+            Some(mp_bytes / stats_mp.mean / 1e9),
+        );
 
-        let speedup = stats_alloc.mean / stats_ws.mean;
-        println!("local epoch at {shape}: workspace path {speedup:.2}x vs allocating");
+        // fused column-tile epoch, threads ∈ {1, 2}
+        let fused_bytes = fused_epoch_bytes(1000, 1000, j_sweeps, k_local);
+        let mut fused_means = Vec::new();
+        for threads in [1usize, 2] {
+            let kernel = NativeKernel::with_threads(threads);
+            let mut state_f = ClientState::zeros(1000, 1000, p_width);
+            let mut ws = Workspace::new(1000, 1000, p_width);
+            let mut u_f = u0.clone();
+            let stats_f = b.run(|| {
+                u_f.copy_from(&u0);
+                kernel
+                    .local_epoch(
+                        &mut u_f,
+                        &prob.observed,
+                        &mut state_f,
+                        &hyper,
+                        1.0,
+                        1e-3,
+                        k_local,
+                        &mut ws,
+                    )
+                    .unwrap()
+            });
+            push(
+                &mut t,
+                &mut records,
+                &format!("local_epoch (fused t{threads})"),
+                &shape,
+                stats_f.mean,
+                Some(flops / stats_f.mean / 1e9),
+                Some(fused_bytes / stats_f.mean / 1e9),
+            );
+            fused_means.push(stats_f.mean);
+        }
+
+        println!(
+            "local epoch at {shape}: fused t1 {:.2}x, fused t2 {:.2}x vs multipass \
+             ({:.2}x vs allocating)",
+            stats_mp.mean / fused_means[0],
+            stats_mp.mean / fused_means[1],
+            stats_alloc.mean / fused_means[1],
+        );
     }
 
     // SVD costs (what the baselines pay per iteration)
     {
         let a = Mat::gaussian(200, 200, &mut rng);
         let stats = b.run(|| svd_jacobi(&a));
-        push(&mut t, &mut records, "svd_jacobi", "200x200", stats.mean, None);
+        push(&mut t, &mut records, "svd_jacobi", "200x200", stats.mean, None, None);
         let big = Mat::gaussian(1000, 1000, &mut rng);
         let stats = b.run(|| rsvd(&big, RsvdParams::new(60)));
-        push(&mut t, &mut records, "rsvd k=60", "1000x1000", stats.mean, None);
+        push(&mut t, &mut records, "rsvd k=60", "1000x1000", stats.mean, None, None);
     }
 
     // transport framing round-trip
@@ -216,12 +337,14 @@ fn main() {
             "U 500x25".into(),
             fmt_secs(stats.mean),
             format!("{mbps:.0} MB/s"),
+            "—".into(),
         ]);
         records.push(Record {
             op: "protocol enc+dec".to_string(),
             shape: "U 500x25".to_string(),
             ns_per_iter: stats.mean * 1e9,
             gflops: None,
+            effective_gb_per_s: None,
         });
     }
 
@@ -246,7 +369,15 @@ fn main() {
                         .local_epoch(&mut u, &p.observed, &mut state, &hyper, 0.5, 1e-3, 2, &mut ws)
                         .unwrap()
                 });
-                push(&mut t, &mut records, "pjrt client_update", "m=64 n_i=32 r=4 K=2", stats.mean, None);
+                push(
+                    &mut t,
+                    &mut records,
+                    "pjrt client_update",
+                    "m=64 n_i=32 r=4 K=2",
+                    stats.mean,
+                    None,
+                    None,
+                );
             }
             Err(err) => println!("(PJRT unavailable — skipping artifact rows: {err})"),
         }

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use crate::linalg::{rsvd_svt, svt, Mat};
 use crate::rpca::problem::RpcaProblem;
+use crate::runtime::pool::BandSlice;
 
 use super::apgm::spectral_norm;
 use super::traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};
@@ -80,18 +81,26 @@ impl RpcaSolver for Alm {
         let mut history = Vec::new();
         let mut converged = false;
         let mut iters = 0;
+        // fused elementwise passes fan across the process-wide pool in
+        // fixed bands (deterministic at any `--threads`)
+        let pool = crate::runtime::pool::global();
 
         for k in 0..self.stop.max_iters {
             let inv_mu = 1.0 / mu;
-            // L = SVT_{1/μ}(M − S + Y/μ), target fused in one pass
+            // L = SVT_{1/μ}(M − S + Y/μ), target fused in one banded pass
             {
-                let td = target.as_mut_slice();
+                let tv = BandSlice::new(target.as_mut_slice());
                 let md = observed.as_slice();
                 let sd = s.as_slice();
                 let yd = y.as_slice();
-                for i in 0..td.len() {
-                    td[i] = md[i] - sd[i] + yd[i] * inv_mu;
-                }
+                pool.run_bands(md.len(), &|_, lo, hi| {
+                    // SAFETY: bands are disjoint ranges
+                    let td = unsafe { tv.range(lo, hi) };
+                    for (t, i) in td.iter_mut().zip(lo..hi) {
+                        *t = md[i] - sd[i] + yd[i] * inv_mu;
+                    }
+                    0.0
+                });
             }
             let min_dim = m.min(n);
             let (l_new, rank) = if min_dim <= SVD_EXACT_LIMIT {
@@ -110,28 +119,39 @@ impl RpcaSolver for Alm {
             l = l_new;
             // S = shrink_{λ/μ}(M − L + Y/μ), fused directly into S
             {
-                let sd = s.as_mut_slice();
+                let sv = BandSlice::new(s.as_mut_slice());
                 let md = observed.as_slice();
                 let ld = l.as_slice();
                 let yd = y.as_slice();
                 let thresh = lambda * inv_mu;
-                for i in 0..sd.len() {
-                    sd[i] = crate::linalg::shrink_scalar(md[i] - ld[i] + yd[i] * inv_mu, thresh);
-                }
+                pool.run_bands(md.len(), &|_, lo, hi| {
+                    // SAFETY: bands are disjoint ranges
+                    let sd = unsafe { sv.range(lo, hi) };
+                    for (sx, i) in sd.iter_mut().zip(lo..hi) {
+                        *sx = crate::linalg::shrink_scalar(md[i] - ld[i] + yd[i] * inv_mu, thresh);
+                    }
+                    0.0
+                });
             }
-            // dual ascent Y += μ(M − L − S), feasibility norm in the same pass
-            let mut infeas_sq = 0.0;
-            {
-                let yd = y.as_mut_slice();
+            // dual ascent Y += μ(M − L − S), feasibility norm in the same
+            // pass (band partials summed in band order — deterministic)
+            let infeas_sq = {
+                let yv = BandSlice::new(y.as_mut_slice());
                 let md = observed.as_slice();
                 let ld = l.as_slice();
                 let sd = s.as_slice();
-                for i in 0..yd.len() {
-                    let r = md[i] - ld[i] - sd[i];
-                    infeas_sq += r * r;
-                    yd[i] += mu * r;
-                }
-            }
+                pool.run_bands(md.len(), &|_, lo, hi| {
+                    // SAFETY: bands are disjoint ranges
+                    let yd = unsafe { yv.range(lo, hi) };
+                    let mut acc = 0.0;
+                    for (yx, i) in yd.iter_mut().zip(lo..hi) {
+                        let r = md[i] - ld[i] - sd[i];
+                        acc += r * r;
+                        *yx += mu * r;
+                    }
+                    acc
+                })
+            };
             mu *= self.mu_growth;
             iters = k + 1;
 

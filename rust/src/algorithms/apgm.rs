@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use crate::linalg::{rsvd_svt, svt, Mat};
 use crate::rpca::problem::RpcaProblem;
+use crate::runtime::pool::BandSlice;
 
 use super::traits::{IterRecord, RpcaSolver, SolveResult, StopCriteria};
 
@@ -128,6 +129,9 @@ impl RpcaSolver for Apgm {
         let mut converged = false;
         let mut iters = 0;
         let m_norm = observed.frob_norm().max(1e-300);
+        // fused elementwise passes fan across the process-wide pool in
+        // fixed bands (deterministic at any `--threads`)
+        let pool = crate::runtime::pool::global();
 
         for k in 0..self.stop.max_iters {
             // extrapolation points Y_L = L + β(L − L_prev), Y_S likewise;
@@ -135,20 +139,26 @@ impl RpcaSolver for Apgm {
             // G_L = Y_L − resid/2, G_S = Y_S − resid/2 — all in one pass
             let beta = (t_prev - 1.0) / t_k;
             {
-                let gld = gl.as_mut_slice();
-                let gsd = gs.as_mut_slice();
+                let glv = BandSlice::new(gl.as_mut_slice());
+                let gsv = BandSlice::new(gs.as_mut_slice());
                 let ld = l.as_slice();
                 let lpd = l_prev.as_slice();
                 let sd = s.as_slice();
                 let spd = s_prev.as_slice();
                 let md = observed.as_slice();
-                for i in 0..gld.len() {
-                    let yl = ld[i] + beta * (ld[i] - lpd[i]);
-                    let ys = sd[i] + beta * (sd[i] - spd[i]);
-                    let half_resid = 0.5 * (yl + ys - md[i]);
-                    gld[i] = yl - half_resid;
-                    gsd[i] = ys - half_resid;
-                }
+                pool.run_bands(md.len(), &|_, lo, hi| {
+                    // SAFETY: bands are disjoint ranges
+                    let gld = unsafe { glv.range(lo, hi) };
+                    let gsd = unsafe { gsv.range(lo, hi) };
+                    for (k, i) in (lo..hi).enumerate() {
+                        let yl = ld[i] + beta * (ld[i] - lpd[i]);
+                        let ys = sd[i] + beta * (sd[i] - spd[i]);
+                        let half_resid = 0.5 * (yl + ys - md[i]);
+                        gld[k] = yl - half_resid;
+                        gsd[k] = ys - half_resid;
+                    }
+                    0.0
+                });
             }
             std::mem::swap(&mut l_prev, &mut l);
             std::mem::swap(&mut s_prev, &mut s);
@@ -158,12 +168,17 @@ impl RpcaSolver for Apgm {
             l = l_new;
             {
                 // S = shrink_{λμ/2}(G_S), written straight into S
-                let sd = s.as_mut_slice();
+                let sv = BandSlice::new(s.as_mut_slice());
                 let gsd = gs.as_slice();
                 let thresh = lambda * mu / 2.0;
-                for i in 0..sd.len() {
-                    sd[i] = crate::linalg::shrink_scalar(gsd[i], thresh);
-                }
+                pool.run_bands(gsd.len(), &|_, lo, hi| {
+                    // SAFETY: bands are disjoint ranges
+                    let sd = unsafe { sv.range(lo, hi) };
+                    for (sx, i) in sd.iter_mut().zip(lo..hi) {
+                        *sx = crate::linalg::shrink_scalar(gsd[i], thresh);
+                    }
+                    0.0
+                });
             }
 
             let t_next = (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt()) / 2.0;
@@ -173,19 +188,22 @@ impl RpcaSolver for Apgm {
             iters = k + 1;
 
             // stopping: relative change of the iterate pair, accumulated
-            // in one pass (no difference temporaries)
-            let mut delta_sq = 0.0;
-            {
+            // in one banded pass (partials summed in band order)
+            let delta_sq = {
                 let ld = l.as_slice();
                 let lpd = l_prev.as_slice();
                 let sd = s.as_slice();
                 let spd = s_prev.as_slice();
-                for i in 0..ld.len() {
-                    let dl = ld[i] - lpd[i];
-                    let ds = sd[i] - spd[i];
-                    delta_sq += dl * dl + ds * ds;
-                }
-            }
+                pool.run_bands(ld.len(), &|_, lo, hi| {
+                    let mut acc = 0.0;
+                    for i in lo..hi {
+                        let dl = ld[i] - lpd[i];
+                        let ds = sd[i] - spd[i];
+                        acc += dl * dl + ds * ds;
+                    }
+                    acc
+                })
+            };
             let delta = delta_sq.sqrt() / m_norm;
             let err = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &s));
             history.push(IterRecord {

@@ -72,7 +72,9 @@ impl RpcaSolver for CfPca {
         let mut u = Mat::gaussian(m, self.hyper.rank, &mut rng);
         let mut state = ClientState::zeros(m, n, self.hyper.rank);
         // one workspace for the whole run — the outer loop's linalg reuses
-        // these buffers instead of allocating per iteration
+        // these buffers instead of allocating per iteration; panels fan
+        // out over the process-wide pool (CLI `--threads`)
+        let pool = crate::runtime::pool::global();
         let mut ws = Workspace::new(m, n, self.hyper.rank);
         // telemetry buffers for the L = U·Vᵀ convergence check
         let mut l = Mat::zeros(m, n);
@@ -83,10 +85,10 @@ impl RpcaSolver for CfPca {
         let mut iters = 0;
 
         for t in 0..self.stop.max_iters {
-            inner_solve(&u, observed, &mut state, &self.hyper, &mut ws);
+            inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws);
             let lip = lipschitz_estimate(&state, &self.hyper, &mut ws);
             let eta = self.schedule.eta(t, lip);
-            u_gradient_into(&u, observed, &state, &self.hyper, 1.0, &mut ws);
+            u_gradient_into(&u, observed, &state, &self.hyper, 1.0, pool, &mut ws);
             let gn = ws.grad.frob_norm();
             u.axpy(-eta, &ws.grad);
             iters = t + 1;
@@ -123,9 +125,9 @@ impl RpcaSolver for CfPca {
         }
 
         // final inner solve so (V,S) correspond to the final U
-        inner_solve(&u, observed, &mut state, &self.hyper, &mut ws);
+        inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws);
         for _ in 0..self.polish_sweeps {
-            polish_sweep(&u, observed, &mut state, &self.hyper, &mut ws);
+            polish_sweep(&u, observed, &mut state, &self.hyper, pool, &mut ws);
         }
         matmul_nt_into(&mut l, &u, &state.v);
         let final_error = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &state.s));

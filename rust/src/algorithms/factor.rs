@@ -15,6 +15,16 @@
 //!    `U ← U − η ∇_U L_i`,
 //!    `∇_U L_i = (U V_iᵀ + S_i − M_i) V_i + ρ (n_i/n) U` (Lemma 2).
 //!
+//! Both moves run the **fused column-tile pipeline** (`linalg::tile`):
+//! the ridge solve is column-separable, so each L2-resident panel of the
+//! block computes its RHS, V rows, and shrunk S columns in one DRAM pass
+//! over M per sweep (the gradient takes one more), instead of the 4–6
+//! full-matrix streams of the multi-pass formulation. Panels fan out
+//! across a [`ThreadPool`] in fixed *slots* — a shape-derived
+//! decomposition with slot-ordered gradient reduction — so results are
+//! bitwise identical at any thread count. The multi-pass path survives
+//! as the parity [`oracle`] used by tests and the hot-path bench.
+//!
 //! Every function here borrows a [`Workspace`] sized for the block
 //! (`(m, n_i, p)`) instead of allocating temporaries: the inner sweep and
 //! the gradient run J × K × T times per DCF-PCA run, and on that path
@@ -26,9 +36,10 @@
 //! each other.
 
 use crate::linalg::{
-    gram_into, matmul_into, matmul_nt, matmul_nt_into, matmul_tn_into, matvec_into, residual_into,
-    residual_shrink_into, ridge_solve_v_into, sub_into, Mat, Workspace,
+    cholesky_shifted_into, gram_into, matmul_nt, matvec_into, tile, GradCtx, Mat, PanelCtx,
+    PanelScratch, Workspace,
 };
+use crate::runtime::pool::{Slots, ThreadPool};
 
 /// Hyperparameters of the factorized objective (paper Eq. 4).
 #[derive(Clone, Copy, Debug)]
@@ -83,24 +94,62 @@ impl ClientState {
     }
 }
 
-/// One exact alternation sweep of the inner problem (Eqs. 15 + 16),
-/// entirely inside `ws` — no allocation.
+/// Fan `panels` across the pool as [`tile::NUM_SLOTS`]-capped slots:
+/// slot `s` processes panels `s, s + jobs, s + 2·jobs, …` in order with
+/// its private scratch. `jobs` depends on shape only, so the work (and
+/// any slot-ordered reduction over the returned `jobs` scratches) is
+/// deterministic at every thread count. The closure receives
+/// `(panel, first, scratch)` — `first` is true for the slot's first
+/// panel, so per-slot accumulators can be reset without a second copy
+/// of the stride formula. Returns `jobs`.
+fn dispatch_panels(
+    pool: &ThreadPool,
+    panels: usize,
+    slots: &mut [PanelScratch],
+    run: impl Fn(usize, bool, &mut PanelScratch) + Sync,
+) -> usize {
+    let jobs = tile::NUM_SLOTS.min(panels).max(1);
+    let access = Slots::new(&mut slots[..jobs]);
+    pool.run(jobs, &|s| {
+        // SAFETY: each job index is claimed exactly once per dispatch.
+        let scratch = unsafe { access.get(s) };
+        let mut k = s;
+        let mut first = true;
+        while k < panels {
+            run(k, first, scratch);
+            first = false;
+            k += jobs;
+        }
+    });
+    jobs
+}
+
+/// One exact alternation sweep of the inner problem (Eqs. 15 + 16) as a
+/// fused panel pipeline — one DRAM pass over `m_block`, entirely inside
+/// `ws`, panels fanned across `pool`. No allocation.
 pub fn inner_sweep(
     u: &Mat,
     m_block: &Mat,
     state: &mut ClientState,
     hyper: &FactorHyper,
+    pool: &ThreadPool,
     ws: &mut Workspace,
 ) {
+    factor_ridge(u, m_block, hyper, ws);
+    let ctx = PanelCtx::new(u, &ws.chol, m_block, &mut state.v, &mut state.s, hyper.lambda);
+    let panels = ctx.panels();
+    dispatch_panels(pool, panels, &mut ws.slots, |k, _, scratch| ctx.sweep_panel(k, scratch));
+}
+
+/// Shared sweep/polish preamble: check the workspace shape and factor
+/// (UᵀU + ρI) into `ws.chol` — every column's ridge system shares it.
+fn factor_ridge(u: &Mat, m_block: &Mat, hyper: &FactorHyper, ws: &mut Workspace) {
     ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
-    // V ← (M − S)ᵀ U (UᵀU + ρI)^{-1}
     gram_into(&mut ws.gram, u);
-    sub_into(&mut ws.resid, m_block, &state.s); // M − S
-    matmul_tn_into(&mut ws.rhs, u, &ws.resid); // r×n_i
-    ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
-    // S ← shrink_λ(M − U Vᵀ)
-    matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ, reusing the residual buffer
-    residual_shrink_into(&mut state.s, m_block, &ws.resid, hyper.lambda);
+    assert!(
+        cholesky_shifted_into(&mut ws.chol, &ws.gram, hyper.rho),
+        "G+ρI must be SPD for ρ>0"
+    );
 }
 
 /// Solve the inner problem (Eq. 7) to tolerance by J alternation sweeps.
@@ -109,10 +158,11 @@ pub fn inner_solve(
     m_block: &Mat,
     state: &mut ClientState,
     hyper: &FactorHyper,
+    pool: &ThreadPool,
     ws: &mut Workspace,
 ) {
     for _ in 0..hyper.inner_sweeps {
-        inner_sweep(u, m_block, state, hyper, ws);
+        inner_sweep(u, m_block, state, hyper, pool, ws);
     }
 }
 
@@ -139,25 +189,41 @@ pub fn local_objective(
 }
 
 /// ∇_U L_i (Lemma 2): `(U Vᵀ + S − M) V + ρ (n_i/n) U`, written into
-/// `ws.grad` (no allocation; the residual is fused into one pass).
-/// `n_frac` is n_i/n (1.0 for the centralized solver).
+/// `ws.grad`. One fused DRAM pass over the block: each slot accumulates
+/// its panels' contributions into private scratch, reduced here in slot
+/// order (deterministic at any thread count). `n_frac` is n_i/n (1.0 for
+/// the centralized solver). No allocation.
 pub fn u_gradient_into(
     u: &Mat,
     m_block: &Mat,
     state: &ClientState,
     hyper: &FactorHyper,
     n_frac: f64,
+    pool: &ThreadPool,
     ws: &mut Workspace,
 ) {
     ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
-    residual_into(&mut ws.resid, u, &state.v, &state.s, m_block); // U Vᵀ + S − M
-    matmul_into(&mut ws.grad, &ws.resid, &state.v); // m×r
+    let ctx = GradCtx::new(u, m_block, &state.v, &state.s);
+    let panels = ctx.panels();
+    let jobs = dispatch_panels(pool, panels, &mut ws.slots, |k, first, scratch| {
+        if first {
+            // first panel of this slot: start the accumulator fresh
+            scratch.grad_acc.fill(0.0);
+        }
+        ctx.grad_panel(k, scratch);
+    });
+    // fixed-order reduction: Σ_slots acc + ρ·(n_i/n)·U
+    ws.grad.copy_from(&ws.slots[0].grad_acc);
+    for s in 1..jobs {
+        ws.grad.axpy(1.0, &ws.slots[s].grad_acc);
+    }
     ws.grad.axpy(hyper.rho * n_frac, u);
 }
 
 /// One full local iteration (Algorithm 1's loop body): inner solve, then a
 /// gradient step on U with step size η, all in place. Returns the gradient
 /// norm (used for convergence telemetry / Theorem 1's metric).
+#[allow(clippy::too_many_arguments)]
 pub fn local_iteration(
     u: &mut Mat,
     m_block: &Mat,
@@ -165,10 +231,11 @@ pub fn local_iteration(
     hyper: &FactorHyper,
     n_frac: f64,
     eta: f64,
+    pool: &ThreadPool,
     ws: &mut Workspace,
 ) -> f64 {
-    inner_solve(u, m_block, state, hyper, ws);
-    u_gradient_into(u, m_block, state, hyper, n_frac, ws);
+    inner_solve(u, m_block, state, hyper, pool, ws);
+    u_gradient_into(u, m_block, state, hyper, n_frac, pool, ws);
     let gn = ws.grad.frob_norm();
     u.axpy(-eta, &ws.grad);
     gn
@@ -181,31 +248,20 @@ pub fn local_iteration(
 /// detected spikes — and re-solve the ridge for V. With the support
 /// correctly identified, `M − S` equals `L₀` on the support exactly and
 /// the factorization fit becomes unbiased. Standard practice for
-/// ℓ1-regularized estimators (refit on the selected support).
+/// ℓ1-regularized estimators (refit on the selected support). Runs the
+/// same fused panel pipeline as [`inner_sweep`].
 pub fn polish_sweep(
     u: &Mat,
     m_block: &Mat,
     state: &mut ClientState,
     hyper: &FactorHyper,
+    pool: &ThreadPool,
     ws: &mut Workspace,
 ) {
-    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
-    // hard-threshold S on the current residual
-    matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ
-    {
-        let sd = state.s.as_mut_slice();
-        let md = m_block.as_slice();
-        let ud = ws.resid.as_slice();
-        for i in 0..sd.len() {
-            let r = md[i] - ud[i];
-            sd[i] = if r.abs() > hyper.lambda { r } else { 0.0 };
-        }
-    }
-    // exact ridge re-solve of V against the debiased S
-    gram_into(&mut ws.gram, u);
-    sub_into(&mut ws.resid, m_block, &state.s);
-    matmul_tn_into(&mut ws.rhs, u, &ws.resid);
-    ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
+    factor_ridge(u, m_block, hyper, ws);
+    let ctx = PanelCtx::new(u, &ws.chol, m_block, &mut state.v, &mut state.s, hyper.lambda);
+    let panels = ctx.panels();
+    dispatch_panels(pool, panels, &mut ws.slots, |k, _, scratch| ctx.polish_panel(k, scratch));
 }
 
 /// Curvature estimate for adaptive step sizes: the largest eigenvalue of
@@ -231,17 +287,196 @@ pub fn lipschitz_estimate(state: &ClientState, hyper: &FactorHyper, ws: &mut Wor
     lam + hyper.rho
 }
 
+/// The PR-1 multi-pass formulation, preserved verbatim as the parity
+/// oracle: every stage is a separate full-matrix kernel (4–6 DRAM
+/// streams of the block per sweep). Tests pin the fused tile pipeline
+/// to this path at 1e-12; `benches/kernel_hotpath.rs` uses it as the
+/// before-side of the fusion speedup. Not for production use.
+pub mod oracle {
+    use super::{ClientState, FactorHyper};
+    use crate::linalg::{
+        gram_into, matmul_into, matmul_nt_into, matmul_tn_into, matvec_into, residual_into,
+        residual_shrink_into, ridge_solve_v_into, sub_into, Mat,
+    };
+
+    /// The old Workspace layout: full-width intermediates for each
+    /// separate pass (`resid` is a whole m×n_i stream).
+    #[derive(Clone, Debug)]
+    pub struct MultipassWorkspace {
+        pub gram: Mat,
+        pub chol: Mat,
+        /// p×n_i — right-hand side Uᵀ(M−S)
+        pub rhs: Mat,
+        /// p×n_i — ridge-solve intermediate Vᵀ
+        pub sol: Mat,
+        /// m×n_i — block-sized residual (M−S, then U·Vᵀ, then U·Vᵀ+S−M)
+        pub resid: Mat,
+        pub grad: Mat,
+        pub pow_x: Vec<f64>,
+        pub pow_y: Vec<f64>,
+    }
+
+    impl MultipassWorkspace {
+        pub fn new(m: usize, n_i: usize, p: usize) -> Self {
+            MultipassWorkspace {
+                gram: Mat::zeros(p, p),
+                chol: Mat::zeros(p, p),
+                rhs: Mat::zeros(p, n_i),
+                sol: Mat::zeros(p, n_i),
+                resid: Mat::zeros(m, n_i),
+                grad: Mat::zeros(m, p),
+                pow_x: vec![0.0; p],
+                pow_y: vec![0.0; p],
+            }
+        }
+    }
+
+    /// Multi-pass Eqs. 15 + 16 (the PR-1 `inner_sweep`).
+    pub fn inner_sweep(
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        ws: &mut MultipassWorkspace,
+    ) {
+        // V ← (M − S)ᵀ U (UᵀU + ρI)^{-1}
+        gram_into(&mut ws.gram, u);
+        sub_into(&mut ws.resid, m_block, &state.s); // M − S
+        matmul_tn_into(&mut ws.rhs, u, &ws.resid); // r×n_i
+        ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
+        // S ← shrink_λ(M − U Vᵀ)
+        matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ
+        residual_shrink_into(&mut state.s, m_block, &ws.resid, hyper.lambda);
+    }
+
+    pub fn inner_solve(
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        ws: &mut MultipassWorkspace,
+    ) {
+        for _ in 0..hyper.inner_sweeps {
+            inner_sweep(u, m_block, state, hyper, ws);
+        }
+    }
+
+    /// Multi-pass Lemma 2 gradient (the PR-1 `u_gradient_into`).
+    pub fn u_gradient_into(
+        u: &Mat,
+        m_block: &Mat,
+        state: &ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        ws: &mut MultipassWorkspace,
+    ) {
+        residual_into(&mut ws.resid, u, &state.v, &state.s, m_block); // U Vᵀ + S − M
+        matmul_into(&mut ws.grad, &ws.resid, &state.v); // m×r
+        ws.grad.axpy(hyper.rho * n_frac, u);
+    }
+
+    /// Multi-pass debias polish (the PR-1 `polish_sweep`).
+    pub fn polish_sweep(
+        u: &Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        ws: &mut MultipassWorkspace,
+    ) {
+        matmul_nt_into(&mut ws.resid, u, &state.v); // U·Vᵀ
+        {
+            let sd = state.s.as_mut_slice();
+            let md = m_block.as_slice();
+            let ud = ws.resid.as_slice();
+            for i in 0..sd.len() {
+                let r = md[i] - ud[i];
+                sd[i] = if r.abs() > hyper.lambda { r } else { 0.0 };
+            }
+        }
+        gram_into(&mut ws.gram, u);
+        sub_into(&mut ws.resid, m_block, &state.s);
+        matmul_tn_into(&mut ws.rhs, u, &ws.resid);
+        ridge_solve_v_into(&mut state.v, &ws.gram, &ws.rhs, hyper.rho, &mut ws.chol, &mut ws.sol);
+    }
+
+    pub fn lipschitz_estimate(
+        state: &ClientState,
+        hyper: &FactorHyper,
+        ws: &mut MultipassWorkspace,
+    ) -> f64 {
+        gram_into(&mut ws.gram, &state.v);
+        let r = ws.gram.rows();
+        ws.pow_x.fill(1.0 / (r as f64).sqrt());
+        let mut lam = 0.0;
+        for _ in 0..20 {
+            matvec_into(&mut ws.pow_y, &ws.gram, &ws.pow_x);
+            let norm = ws.pow_y.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return hyper.rho;
+            }
+            lam = norm;
+            for (xi, yi) in ws.pow_x.iter_mut().zip(&ws.pow_y) {
+                *xi = yi / norm;
+            }
+        }
+        lam + hyper.rho
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_iteration(
+        u: &mut Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        eta: f64,
+        ws: &mut MultipassWorkspace,
+    ) -> f64 {
+        inner_solve(u, m_block, state, hyper, ws);
+        u_gradient_into(u, m_block, state, hyper, n_frac, ws);
+        let gn = ws.grad.frob_norm();
+        u.axpy(-eta, &ws.grad);
+        gn
+    }
+
+    /// The PR-1 local epoch (K multi-pass iterations + curvature) —
+    /// the bench baseline the fused pipeline is measured against.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_epoch(
+        u: &mut Mat,
+        m_block: &Mat,
+        state: &mut ClientState,
+        hyper: &FactorHyper,
+        n_frac: f64,
+        eta: f64,
+        k_local: usize,
+        ws: &mut MultipassWorkspace,
+    ) -> (f64, f64) {
+        let mut grad_norm = 0.0;
+        for _ in 0..k_local {
+            grad_norm = local_iteration(u, m_block, state, hyper, n_frac, eta, ws);
+        }
+        let lipschitz = lipschitz_estimate(state, hyper, ws);
+        (grad_norm, lipschitz)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{gram, matmul_tn, ridge_solve_v};
+    use crate::linalg::{gram, matmul_tn, residual_shrink_into, ridge_solve_v};
     use crate::rng::Pcg64;
     use crate::rpca::problem::ProblemSpec;
+    use crate::runtime::pool;
 
     fn small_problem() -> (Mat, FactorHyper) {
         let p = ProblemSpec::square(40, 3, 0.05).generate(11);
         let hyper = FactorHyper::default_for(40, 40, 3);
         (p.observed, hyper)
+    }
+
+    fn test_pool() -> &'static crate::runtime::pool::ThreadPool {
+        pool::global()
     }
 
     #[test]
@@ -253,7 +488,7 @@ mod tests {
         let mut ws = Workspace::new(40, 40, 3);
         let mut prev = inner_objective(&u, &m, &state, &hyper);
         for _ in 0..6 {
-            inner_sweep(&u, &m, &mut state, &hyper, &mut ws);
+            inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
             let cur = inner_objective(&u, &m, &state, &hyper);
             assert!(cur <= prev + 1e-9 * prev.abs().max(1.0), "{cur} > {prev}");
             prev = cur;
@@ -262,15 +497,15 @@ mod tests {
 
     #[test]
     fn inner_sweep_matches_allocating_composition() {
-        // the workspace sweep must equal the same math written with the
-        // allocating linalg twins, to the last bit of f64 rounding
+        // the fused panel sweep must equal the same math written with the
+        // allocating linalg twins, to fp-reordering tolerance
         let (m, hyper) = small_problem();
         let mut rng = Pcg64::new(9);
         let u = Mat::gaussian(40, 3, &mut rng);
 
         let mut state_ws = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_sweep(&u, &m, &mut state_ws, &hyper, &mut ws);
+        inner_sweep(&u, &m, &mut state_ws, &hyper, test_pool(), &mut ws);
 
         let mut state_alloc = ClientState::zeros(40, 40, 3);
         let g = gram(&u);
@@ -287,6 +522,53 @@ mod tests {
     }
 
     #[test]
+    fn fused_sweep_and_gradient_match_multipass_oracle() {
+        // the tentpole parity pin: fused panels vs the preserved PR-1
+        // multi-pass path, across several shapes including panel edges
+        // shapes chosen to cover one-panel blocks, multi-panel blocks
+        // (panel_width(256,·)=64, panel_width(512,·)=32), and a ragged
+        // last panel
+        for &(mdim, ndim, p) in &[
+            (40usize, 40usize, 3usize),
+            (33, 57, 4),
+            (24, 7, 2),
+            (256, 300, 5),
+            (512, 100, 4),
+        ] {
+            let prob = ProblemSpec { m: mdim, n: ndim, rank: p, sparsity: 0.05 }.generate(77);
+            let hyper = FactorHyper::default_for(mdim, ndim, p);
+            let mut rng = Pcg64::new(13);
+            let u = Mat::gaussian(mdim, p, &mut rng);
+
+            let mut st_fused = ClientState::zeros(mdim, ndim, p);
+            let mut ws = Workspace::new(mdim, ndim, p);
+            let mut st_oracle = st_fused.clone();
+            let mut ows = oracle::MultipassWorkspace::new(mdim, ndim, p);
+
+            for _ in 0..3 {
+                inner_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws);
+                oracle::inner_sweep(&u, &prob.observed, &mut st_oracle, &hyper, &mut ows);
+            }
+            let dv = (&st_fused.v - &st_oracle.v).frob_norm() / st_oracle.v.frob_norm().max(1.0);
+            let ds = (&st_fused.s - &st_oracle.s).frob_norm() / st_oracle.s.frob_norm().max(1.0);
+            assert!(dv < 1e-12, "V deviates {dv} at {mdim}x{ndim} p={p}");
+            assert!(ds < 1e-12, "S deviates {ds} at {mdim}x{ndim} p={p}");
+
+            u_gradient_into(&u, &prob.observed, &st_fused, &hyper, 0.7, test_pool(), &mut ws);
+            oracle::u_gradient_into(&u, &prob.observed, &st_oracle, &hyper, 0.7, &mut ows);
+            let dg = (&ws.grad - &ows.grad).frob_norm() / ows.grad.frob_norm().max(1.0);
+            assert!(dg < 1e-12, "grad deviates {dg} at {mdim}x{ndim} p={p}");
+
+            polish_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws);
+            oracle::polish_sweep(&u, &prob.observed, &mut st_oracle, &hyper, &mut ows);
+            let dv = (&st_fused.v - &st_oracle.v).frob_norm() / st_oracle.v.frob_norm().max(1.0);
+            let ds = (&st_fused.s - &st_oracle.s).frob_norm() / st_oracle.s.frob_norm().max(1.0);
+            assert!(dv < 1e-12, "polish V deviates {dv} at {mdim}x{ndim} p={p}");
+            assert!(ds < 1e-12, "polish S deviates {ds} at {mdim}x{ndim} p={p}");
+        }
+    }
+
+    #[test]
     fn inner_solve_reaches_fixed_point() {
         // after enough sweeps, one more sweep barely moves (V,S)
         let (m, mut hyper) = small_problem();
@@ -295,10 +577,10 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
         let v_before = state.v.clone();
         let s_before = state.s.clone();
-        inner_sweep(&u, &m, &mut state, &hyper, &mut ws);
+        inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
         // linear convergence rate degrades as ρ → 0 (Lemma 1's strong
         // convexity is only ρ); after 60 sweeps a further sweep should
         // move the blocks by <1e-4 relative
@@ -316,9 +598,9 @@ mod tests {
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
         // fix (V,S) at some point — gradient formula holds for any (V,S)
-        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
         let n_frac = 1.0;
-        u_gradient_into(&u, &m, &state, &hyper, n_frac, &mut ws);
+        u_gradient_into(&u, &m, &state, &hyper, n_frac, test_pool(), &mut ws);
         let grad = ws.grad.clone();
         let eps = 1e-6;
         let mut rng2 = Pcg64::new(4);
@@ -350,15 +632,15 @@ mod tests {
         let mut u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
         let g_before =
             inner_objective(&u, &m, &state, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
-        u_gradient_into(&u, &m, &state, &hyper, 1.0, &mut ws);
+        u_gradient_into(&u, &m, &state, &hyper, 1.0, test_pool(), &mut ws);
         let grad = ws.grad.clone();
         let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         u.axpy(-0.5 / lip, &grad);
         let mut state2 = state.clone();
-        inner_solve(&u, &m, &mut state2, &hyper, &mut ws);
+        inner_solve(&u, &m, &mut state2, &hyper, test_pool(), &mut ws);
         let g_after =
             inner_objective(&u, &m, &state2, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
         assert!(g_after < g_before, "{g_after} !< {g_before}");
@@ -374,7 +656,7 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_sweep(&u, &m_of(&p), &mut state, &hyper, &mut ws);
+        inner_sweep(&u, &m_of(&p), &mut state, &hyper, test_pool(), &mut ws);
         let acc = crate::rpca::metrics::support_sign_accuracy(&state.s, &p.s0);
         assert!(acc > 0.95, "support sign accuracy {acc}");
     }
@@ -390,7 +672,7 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
         let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         let g = gram(&state.v);
         for i in 0..3 {
@@ -405,10 +687,11 @@ mod tests {
         let mut u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
+        let pool = test_pool();
         // warm-up (first call settles lazy state like TLS)
-        local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, &mut ws);
+        local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, pool, &mut ws);
         let (_, allocs) = crate::alloc_counter::measure(|| {
-            local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, &mut ws)
+            local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, pool, &mut ws)
         });
         assert_eq!(allocs, 0, "local_iteration allocated {allocs} times after warm-up");
     }

@@ -16,6 +16,33 @@ pub struct OptSpec {
     pub help: &'static str,
 }
 
+/// The shared `--threads` knob: width of the process-wide pool the
+/// panel-parallel kernels fan out over. Include this spec in a
+/// command's option list and call [`apply_threads`] after parsing.
+pub const THREADS_OPT: OptSpec = OptSpec {
+    name: "threads",
+    takes_value: true,
+    help: "compute threads for panel-parallel kernels (default: all cores)",
+};
+
+/// Apply a parsed `--threads` value to the process-wide pool. Must run
+/// before the first kernel dispatch (the pool is sized on first use);
+/// results are bitwise identical at any thread count, so the knob only
+/// trades wall-clock for cores.
+pub fn apply_threads(args: &ParsedArgs) -> Result<()> {
+    if let Some(t) = args.get_usize("threads")? {
+        if t == 0 {
+            bail!("--threads must be ≥ 1");
+        }
+        if !crate::runtime::pool::set_global_threads(t) {
+            // the pool is sized on first use and never resized — a late
+            // request must not silently run at a different width
+            bail!("--threads {t} requested after the compute pool was already created");
+        }
+    }
+    Ok(())
+}
+
 /// Parsed arguments.
 #[derive(Clone, Debug, Default)]
 pub struct ParsedArgs {

@@ -72,7 +72,7 @@ pub fn check_variant(
 
     let mut st_native = ClientState::zeros(m, n_i, r);
     let mut u_native = u.clone();
-    NativeKernel.local_epoch(
+    NativeKernel::new().local_epoch(
         &mut u_native,
         &problem.observed,
         &mut st_native,

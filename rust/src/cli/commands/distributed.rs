@@ -12,7 +12,7 @@ use crate::bail;
 use crate::error::{Context, Error, Result};
 
 use crate::algorithms::factor::FactorHyper;
-use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
 use crate::coordinator::client::{run_client, ClientConfig, FaultPlan};
 use crate::coordinator::kernel::NativeKernel;
 use crate::coordinator::server::{run_server, ServerConfig};
@@ -41,6 +41,7 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
         print!("{}", usage("serve", SERVE_SPECS));
         return Ok(());
     }
+    // (the server does no kernel work — no --threads knob here)
     let listen = args.get("listen").unwrap_or("127.0.0.1:7070");
     let clients = args.get_usize("clients")?.unwrap_or(4);
     let n = args.get_usize("n")?.unwrap_or(200);
@@ -110,6 +111,7 @@ const WORKER_SPECS: &[OptSpec] = &[
     OptSpec { name: "rank", takes_value: true, help: "rank — must match the server" },
     OptSpec { name: "sparsity", takes_value: true, help: "corruption — must match the server" },
     OptSpec { name: "seed", takes_value: true, help: "shared seed — must match the server" },
+    THREADS_OPT,
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
 
@@ -119,6 +121,7 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         print!("{}", usage("worker", WORKER_SPECS));
         return Ok(());
     }
+    apply_threads(&args)?;
     let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
     let id = match args.get_usize("id")? {
         Some(i) => i,
@@ -155,7 +158,7 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         compression: crate::coordinator::Compression::None,
         dp_sigma: 0.0,
     };
-    let rounds = run_client(&mut ch, cfg, &NativeKernel)?;
+    let rounds = run_client(&mut ch, cfg, &NativeKernel::new())?;
     println!("worker {id} done after {rounds} rounds");
     Ok(())
 }

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use crate::error::{Context, Error, Result};
 
 use crate::algorithms::{Alm, Apgm, CfPca, RpcaSolver, StopCriteria};
-use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
 use crate::config::{Algorithm, RunConfig};
 use crate::coordinator::driver::{run_dcf_pca, KernelSpec};
 use crate::rpca::problem::ProblemSpec;
@@ -27,6 +27,7 @@ const SPECS: &[OptSpec] = &[
     OptSpec { name: "pjrt", takes_value: false, help: "execute client updates via the AOT artifact" },
     OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory (default: artifacts)" },
     OptSpec { name: "csv", takes_value: true, help: "write the error curve to this CSV" },
+    THREADS_OPT,
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
 
@@ -36,6 +37,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         print!("{}", usage("solve", SPECS));
         return Ok(());
     }
+    apply_threads(&args)?;
 
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::from_file(path)?,

@@ -130,9 +130,17 @@ pub fn run_client(
             }
             ToClient::Finish { reveal, final_u } => {
                 // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional
-                // debias polish of the local (V_i, S_i) with U fixed)
+                // debias polish of the local (V_i, S_i) with U fixed);
+                // the polish panels share the process-wide pool
                 for _ in 0..cfg.polish_sweeps {
-                    polish_sweep(&final_u, &cfg.m_block, &mut state, &cfg.hyper, &mut ws);
+                    polish_sweep(
+                        &final_u,
+                        &cfg.m_block,
+                        &mut state,
+                        &cfg.hyper,
+                        crate::runtime::pool::global(),
+                        &mut ws,
+                    );
                 }
                 let reply = if reveal {
                     let l_i = matmul_nt(&final_u, &state.v);
@@ -161,7 +169,7 @@ mod tests {
     ) -> (crate::coordinator::transport::inproc::InProcChannel, std::thread::JoinHandle<Result<usize>>) {
         let (server_side, mut client_side) = pair();
         let handle =
-            std::thread::spawn(move || run_client(&mut client_side, cfg, &NativeKernel));
+            std::thread::spawn(move || run_client(&mut client_side, cfg, &NativeKernel::new()));
         (server_side, handle)
     }
 

@@ -292,8 +292,16 @@ fn run_dcf_pca_on(
         };
         let kernel = cfg.kernel.clone();
         handles.push(std::thread::spawn(move || {
+            // E client threads already parallelize across blocks; each
+            // native kernel additionally fans panels over the shared
+            // process-wide pool (contended dispatches fall back inline,
+            // bitwise-identically)
+            let native;
             let k: &dyn LocalUpdateKernel = match &kernel {
-                KernelSpec::Native => &NativeKernel,
+                KernelSpec::Native => {
+                    native = NativeKernel::new();
+                    &native
+                }
                 KernelSpec::Custom(k) => k.as_ref(),
             };
             run_client(&mut client_side, client_cfg, k)

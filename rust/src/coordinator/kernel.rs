@@ -8,16 +8,23 @@
 //! for every round (zero steady-state heap traffic; asserted below with
 //! a counting allocator). Two implementations exist:
 //!
-//! - [`NativeKernel`] (here) — pure-rust f64, the reference semantics.
+//! - [`NativeKernel`] (here) — pure-rust f64, the reference semantics:
+//!   the fused column-tile pipeline of `algorithms::factor`, with panels
+//!   fanned across a [`ThreadPool`] (the CLI `--threads` knob; defaults
+//!   to the process-wide pool sized to available parallelism). Results
+//!   are bitwise identical at any thread count.
 //! - `runtime::executor::PjrtKernel` — executes the AOT-compiled
 //!   JAX/Pallas artifact through the PJRT C API (f32), zero python at
 //!   runtime. Parity between the two is tested in
 //!   `rust/tests/runtime_parity.rs`.
 
+use std::sync::Arc;
+
 use crate::error::Result;
 
 use crate::algorithms::factor::{lipschitz_estimate, local_iteration, ClientState, FactorHyper};
 use crate::linalg::{Mat, Workspace};
+use crate::runtime::pool::{self, ThreadPool};
 
 /// Telemetry scalars from one local epoch (the advanced `U_i` itself is
 /// returned in place through the `u` argument).
@@ -53,9 +60,41 @@ pub trait LocalUpdateKernel: Send {
     ) -> Result<EpochOutput>;
 }
 
-/// Pure-rust reference backend.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeKernel;
+/// Pure-rust reference backend running the fused panel pipeline on a
+/// thread pool. [`NativeKernel::new`] (and `Default`) borrow the
+/// process-wide pool — size it with `--threads` / `pool::set_global_threads`
+/// before first use; [`NativeKernel::with_threads`] owns a private pool,
+/// which is what the determinism tests use to pin `--threads 1/2/4` to
+/// bitwise-identical results.
+#[derive(Clone, Debug, Default)]
+pub struct NativeKernel {
+    /// `None` → the process-wide pool
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl NativeKernel {
+    /// Kernel on the process-wide pool.
+    pub fn new() -> Self {
+        NativeKernel { pool: None }
+    }
+
+    /// Kernel with a private pool of exactly `threads` lanes.
+    pub fn with_threads(threads: usize) -> Self {
+        NativeKernel { pool: Some(Arc::new(ThreadPool::new(threads))) }
+    }
+
+    /// Kernel sharing an existing pool.
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        NativeKernel { pool: Some(pool) }
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        match &self.pool {
+            Some(p) => p,
+            None => pool::global(),
+        }
+    }
+}
 
 impl LocalUpdateKernel for NativeKernel {
     fn name(&self) -> &'static str {
@@ -74,9 +113,10 @@ impl LocalUpdateKernel for NativeKernel {
         k_local: usize,
         ws: &mut Workspace,
     ) -> Result<EpochOutput> {
+        let pool = self.pool();
         let mut grad_norm = 0.0;
         for _ in 0..k_local {
-            grad_norm = local_iteration(u, m_block, state, hyper, n_frac, eta, ws);
+            grad_norm = local_iteration(u, m_block, state, hyper, n_frac, eta, pool, ws);
         }
         let lipschitz = lipschitz_estimate(state, hyper, ws);
         Ok(EpochOutput { grad_norm, lipschitz })
@@ -98,7 +138,7 @@ mod tests {
         let mut u = u0.clone();
         let mut state = ClientState::zeros(30, 30, 2);
         let mut ws = Workspace::new(30, 30, 2);
-        let out = NativeKernel
+        let out = NativeKernel::new()
             .local_epoch(&mut u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws)
             .unwrap();
         assert_ne!(u, u0);
@@ -116,7 +156,7 @@ mod tests {
         let mut state_a = ClientState::zeros(25, 25, 2);
         let mut u_a = u.clone();
         let mut ws_a = Workspace::new(25, 25, 2);
-        let out = NativeKernel
+        let out = NativeKernel::new()
             .local_epoch(&mut u_a, &p.observed, &mut state_a, &hyper, 1.0, 1e-3, 1, &mut ws_a)
             .unwrap();
 
@@ -124,7 +164,14 @@ mod tests {
         let mut u_b = u.clone();
         let mut ws_b = Workspace::new(25, 25, 2);
         let gn = crate::algorithms::factor::local_iteration(
-            &mut u_b, &p.observed, &mut state_b, &hyper, 1.0, 1e-3, &mut ws_b,
+            &mut u_b,
+            &p.observed,
+            &mut state_b,
+            &hyper,
+            1.0,
+            1e-3,
+            crate::runtime::pool::global(),
+            &mut ws_b,
         );
         assert_eq!(u_a, u_b);
         assert_eq!(state_a.v, state_b.v);
@@ -140,17 +187,18 @@ mod tests {
         let mut rng = Pcg64::new(6);
         let u0 = Mat::gaussian(20, 2, &mut rng);
 
+        let kernel = NativeKernel::new();
         let mut state_a = ClientState::zeros(20, 20, 2);
         let mut u_a = u0.clone();
         let mut ws = Workspace::new(20, 20, 2);
-        NativeKernel
+        kernel
             .local_epoch(&mut u_a, &p.observed, &mut state_a, &hyper, 1.0, 5e-4, 3, &mut ws)
             .unwrap();
 
         let mut state_b = ClientState::zeros(20, 20, 2);
         let mut u_b = u0;
         for _ in 0..3 {
-            NativeKernel
+            kernel
                 .local_epoch(&mut u_b, &p.observed, &mut state_b, &hyper, 1.0, 5e-4, 1, &mut ws)
                 .unwrap();
         }
@@ -158,22 +206,52 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_does_not_change_bits() {
+        // the determinism contract of the slot dispatch: private pools of
+        // 1, 2, and 4 threads produce bitwise-identical epochs. The shape
+        // is chosen so the block genuinely splits into several panels
+        // (panel_width(256, ·) = 64 → 5 panels) — a single-panel block
+        // would degenerate to inline execution and test nothing.
+        let (m, n) = (256usize, 300usize);
+        assert!(crate::linalg::panel_count(n, crate::linalg::panel_width(m, n)) >= 4);
+        let p = ProblemSpec { m, n, rank: 4, sparsity: 0.05 }.generate(9);
+        let hyper = FactorHyper::default_for(m, n, 4);
+        let mut rng = Pcg64::new(10);
+        let u0 = Mat::gaussian(m, 4, &mut rng);
+        let mut outputs = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let kernel = NativeKernel::with_threads(threads);
+            let mut u = u0.clone();
+            let mut state = ClientState::zeros(m, n, 4);
+            let mut ws = Workspace::new(m, n, 4);
+            let out = kernel
+                .local_epoch(&mut u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 3, &mut ws)
+                .unwrap();
+            outputs.push((u, state.v, state.s, out.grad_norm.to_bits()));
+        }
+        assert_eq!(outputs[0], outputs[1], "threads=1 vs threads=2 diverged");
+        assert_eq!(outputs[0], outputs[2], "threads=1 vs threads=4 diverged");
+    }
+
+    #[test]
     fn workspace_epoch_is_allocation_free_after_warmup() {
         // the tentpole invariant: a steady-state local epoch — J×K inner
         // sweeps, gradient steps, curvature estimate — performs zero heap
-        // allocations once the per-client workspace exists
+        // allocations once the per-client workspace exists, with the
+        // panel-parallel dispatch included
         let p = ProblemSpec::square(48, 3, 0.05).generate(9);
         let hyper = FactorHyper::default_for(48, 48, 3);
         let mut rng = Pcg64::new(8);
         let mut u = Mat::gaussian(48, 3, &mut rng);
         let mut state = ClientState::zeros(48, 48, 3);
         let mut ws = Workspace::new(48, 48, 3);
+        let kernel = NativeKernel::new();
         // warm-up epoch
-        NativeKernel
+        kernel
             .local_epoch(&mut u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws)
             .unwrap();
         let (res, allocs) = crate::alloc_counter::measure(|| {
-            NativeKernel.local_epoch(&mut u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws)
+            kernel.local_epoch(&mut u, &p.observed, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws)
         });
         res.unwrap();
         assert_eq!(allocs, 0, "local epoch allocated {allocs} times after warm-up");

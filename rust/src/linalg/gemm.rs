@@ -257,13 +257,14 @@ pub fn gram_into(g: &mut Mat, a: &Mat) {
     let (m, r) = a.shape();
     assert_eq!(g.shape(), (r, r), "gram: output shape mismatch");
     g.as_mut_slice().fill(0.0);
+    // no sparsity short-circuit on `ap`: on dense (Gaussian) data an
+    // `ap == 0.0` test is a never-taken branch inside the innermost hot
+    // loop — the multiply-add is cheaper than the compare+branch, and
+    // `ap·0 = 0` contributes nothing either way
     for i in 0..m {
         let row = a.row(i);
         for p in 0..r {
             let ap = row[p];
-            if ap == 0.0 {
-                continue;
-            }
             let grow = g.row_mut(p);
             for q in p..r {
                 grow[q] += ap * row[q];
@@ -286,11 +287,31 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
 }
 
 /// y ← A·x into a preallocated output slice (len = A.rows).
+///
+/// Each row's dot product runs four independent accumulator chains
+/// (strided partial sums recombined at the end) instead of one serial
+/// reduction — the same FMA-latency stall [`matmul_nt_into`] fixes with
+/// its eight-row blocking, applied to the vector case.
 pub fn matvec_into(y: &mut [f64], a: &Mat, x: &[f64]) {
     assert_eq!(a.cols(), x.len(), "matvec: x length mismatch");
     assert_eq!(a.rows(), y.len(), "matvec: y length mismatch");
+    let k_dim = x.len();
     for (i, yv) in y.iter_mut().enumerate() {
-        *yv = a.row(i).iter().zip(x).map(|(av, xv)| av * xv).sum();
+        let row = a.row(i);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        let mut t = 0;
+        while t + 4 <= k_dim {
+            s0 += row[t] * x[t];
+            s1 += row[t + 1] * x[t + 1];
+            s2 += row[t + 2] * x[t + 2];
+            s3 += row[t + 3] * x[t + 3];
+            t += 4;
+        }
+        while t < k_dim {
+            s0 += row[t] * x[t];
+            t += 1;
+        }
+        *yv = (s0 + s1) + (s2 + s3);
     }
 }
 

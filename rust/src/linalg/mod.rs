@@ -15,6 +15,7 @@ pub mod qr;
 pub mod rsvd;
 pub mod solve;
 pub mod svd;
+pub mod tile;
 pub mod workspace;
 
 pub use gemm::{
@@ -32,4 +33,5 @@ pub use solve::{
     ridge_solve_v_into, solve_spd,
 };
 pub use svd::{reconstruct, singular_values, svd_jacobi, svt, svt_from, Svd};
-pub use workspace::Workspace;
+pub use tile::{panel_count, panel_width, GradCtx, PanelCtx};
+pub use workspace::{PanelScratch, Workspace};

@@ -1,0 +1,554 @@
+//! Fused column-tile kernels for the factorization hot path.
+//!
+//! The inner problem (Eqs. 15–16) is *column-separable* once the Gram
+//! matrix G = UᵀU is in hand: every column `j` of the block solves its
+//! own ridge system `(G + ρI) vⱼ = Uᵀ(mⱼ − sⱼ)` and its own shrink
+//! `sⱼ = shrink_λ(mⱼ − U vⱼ)`. The multi-pass formulation (PR 1) ran
+//! each of those stages as a full-matrix kernel and streamed the m×n_i
+//! block from DRAM 4–6 times per sweep; at the paper's §4 shapes that
+//! made the local epoch memory-bandwidth-bound. This module restructures
+//! the sweep around **L2-resident column panels**: for one panel of
+//! [`panel_width`] columns, it accumulates the panel RHS, solves the
+//! panel's V rows against the prefactored Cholesky of G + ρI, and
+//! recomputes U·Vᵀ for the shrink while the panel is still cached — one
+//! DRAM pass over M (and one read + one write of S) per sweep.
+//!
+//! Parallelism: panels are independent (their V rows and S columns are
+//! disjoint), so callers fan panels across `runtime::pool` threads. The
+//! dispatch unit is a **slot** — a fixed panel subsequence
+//! (`slot, slot + stride, …` with a shape-derived stride ≤ [`NUM_SLOTS`])
+//! processed in order with that slot's private [`PanelScratch`]. Slot
+//! decomposition never depends on thread count, and the gradient's
+//! per-slot accumulators are reduced in slot order, so every result is
+//! bitwise identical for `--threads 1`, `2`, `4`, … The multi-pass path
+//! survives only as the parity oracle (`algorithms::factor::oracle`).
+//!
+//! Safety: [`PanelCtx`] carries raw pointers into V and S so that
+//! concurrently running panels can write disjoint regions of the same
+//! matrices. The claim-once job distribution of `ThreadPool::run`
+//! guarantees each panel index is processed exactly once, which is the
+//! entire aliasing argument; the unsafe blocks below only materialize
+//! references to panel-local ranges.
+
+use super::matrix::Mat;
+use super::ops::shrink_scalar;
+use super::workspace::PanelScratch;
+
+/// Fixed number of dispatch slots (and per-workspace scratch lanes) —
+/// owned by the dispatch layer, re-exported here for the panel
+/// pipeline. Independent of thread count by design: this is what makes
+/// the fused epoch deterministic at any `--threads`.
+pub use crate::runtime::pool::NUM_SLOTS;
+
+/// Byte budget for one column panel of M. The panel is touched twice per
+/// sweep (RHS accumulation, then shrink) and must survive in L2 between
+/// the two, alongside the same-shaped S panel and the factor U — so the
+/// budget is a conservative fraction of a typical 512 KiB–1 MiB L2 (see
+/// EXPERIMENTS.md §Perf for the measured sweep).
+const PANEL_BYTES: usize = 128 * 1024;
+
+/// Panel width for an m×n_i block: the widest panel whose m×w column
+/// tile of M fits [`PANEL_BYTES`], clamped to [8, n_i]. Derived from
+/// shape only (never thread count) so the tiling is deterministic.
+pub fn panel_width(m: usize, n_i: usize) -> usize {
+    let w = (PANEL_BYTES / (8 * m.max(1))).max(8);
+    w.min(n_i.max(1))
+}
+
+/// Number of panels covering `n_i` columns at width `w`.
+pub fn panel_count(n_i: usize, w: usize) -> usize {
+    n_i.div_ceil(w)
+}
+
+/// `dst[jj] += Σ_q urow[q] · vt[q·w + jj]` — one block row of U·Vᵀ over
+/// a staged p×w panel of Vᵀ, accumulated onto `dst`. The q loop runs
+/// four independent FMA streams per pass over `dst` (4 FMAs per
+/// load/store — the store-amortization argument of `matmul_acc`). The
+/// sweep's shrink, the polish's residual, and the gradient's r-row all
+/// share this kernel, so a tuning change lands in every pass at once.
+#[inline]
+fn accum_uvt_row(dst: &mut [f64], urow: &[f64], vt: &[f64], w: usize, p: usize) {
+    let mut q = 0;
+    while q + 4 <= p {
+        let (a0, a1, a2, a3) = (urow[q], urow[q + 1], urow[q + 2], urow[q + 3]);
+        let v0 = &vt[q * w..(q + 1) * w];
+        let v1 = &vt[(q + 1) * w..(q + 2) * w];
+        let v2 = &vt[(q + 2) * w..(q + 3) * w];
+        let v3 = &vt[(q + 3) * w..(q + 4) * w];
+        for jj in 0..w {
+            dst[jj] += a0 * v0[jj] + a1 * v1[jj] + a2 * v2[jj] + a3 * v3[jj];
+        }
+        q += 4;
+    }
+    while q < p {
+        let a = urow[q];
+        let vq = &vt[q * w..(q + 1) * w];
+        for jj in 0..w {
+            dst[jj] += a * vq[jj];
+        }
+        q += 1;
+    }
+}
+
+/// Shared context for one fused sweep (or polish) over a block: borrows
+/// the inputs, carries raw output pointers for panel-disjoint writes.
+pub struct PanelCtx<'a> {
+    u: &'a Mat,
+    /// Cholesky factor of G + ρI (prefactored once per sweep)
+    chol: &'a Mat,
+    m_block: &'a Mat,
+    v: *mut f64,
+    s: *mut f64,
+    lambda: f64,
+    m: usize,
+    n_i: usize,
+    p: usize,
+    w: usize,
+}
+
+// SAFETY: all &-fields are Sync; the raw pointers are only written
+// through panel-disjoint ranges (each panel index is claimed exactly
+// once per dispatch — see the module docs).
+unsafe impl Sync for PanelCtx<'_> {}
+unsafe impl Send for PanelCtx<'_> {}
+
+impl<'a> PanelCtx<'a> {
+    /// `chol` must hold the Cholesky factor of UᵀU + ρI; `v` is n_i×p,
+    /// `s` is m×n_i, both fully overwritten panel by panel.
+    pub fn new(
+        u: &'a Mat,
+        chol: &'a Mat,
+        m_block: &'a Mat,
+        v: &'a mut Mat,
+        s: &'a mut Mat,
+        lambda: f64,
+    ) -> Self {
+        let (m, n_i) = m_block.shape();
+        let p = u.cols();
+        assert_eq!(u.rows(), m, "PanelCtx: U row mismatch");
+        assert_eq!(chol.shape(), (p, p), "PanelCtx: chol shape mismatch");
+        assert_eq!(v.shape(), (n_i, p), "PanelCtx: V shape mismatch");
+        assert_eq!(s.shape(), (m, n_i), "PanelCtx: S shape mismatch");
+        let w = panel_width(m, n_i);
+        PanelCtx {
+            u,
+            chol,
+            m_block,
+            v: v.as_mut_slice().as_mut_ptr(),
+            s: s.as_mut_slice().as_mut_ptr(),
+            lambda,
+            m,
+            n_i,
+            p,
+            w,
+        }
+    }
+
+    /// Number of panels this context will be dispatched over.
+    pub fn panels(&self) -> usize {
+        panel_count(self.n_i, self.w)
+    }
+
+    /// Column range of panel `k`.
+    #[inline]
+    fn range(&self, k: usize) -> (usize, usize) {
+        let j0 = k * self.w;
+        (j0, (j0 + self.w).min(self.n_i))
+    }
+
+    /// One fused inner-sweep panel (Eqs. 15 + 16 for columns
+    /// `[k·w, (k+1)·w)`): accumulate RHS = Uᵀ(M − S) over the panel,
+    /// solve the ridge system in place, write the panel's V rows, then
+    /// recompute U·Vᵀ and soft-threshold S — all while the M panel is
+    /// L2-resident. One DRAM pass over the panel of M per sweep.
+    ///
+    /// Caller contract (upheld by the slot dispatch): each panel index
+    /// is processed by exactly one thread per sweep.
+    pub fn sweep_panel(&self, k: usize, scratch: &mut PanelScratch) {
+        let (j0, j1) = self.range(k);
+        let w = j1 - j0;
+        let (p, n_i) = (self.p, self.n_i);
+        let rhs = &mut scratch.a[..p * w];
+        rhs.fill(0.0);
+        let ud = self.u.as_slice();
+        let md = self.m_block.as_slice();
+
+        // Phase A: RHS ← Uᵀ(M − S) over the panel. Rows are processed
+        // four at a time so each pass over an RHS row performs four FMAs
+        // per load/store (the same latency argument as matmul_tn_into).
+        let mut i = 0;
+        while i + 4 <= self.m {
+            let t = &mut scratch.rows[..4 * w];
+            for r in 0..4 {
+                let row = i + r;
+                let mrow = &md[row * n_i + j0..row * n_i + j1];
+                // SAFETY: read-only view of this panel's S columns; no
+                // concurrent writer touches them (panel-disjoint).
+                let srow =
+                    unsafe { std::slice::from_raw_parts(self.s.add(row * n_i + j0), w) };
+                let dst = &mut t[r * w..(r + 1) * w];
+                for jj in 0..w {
+                    dst[jj] = mrow[jj] - srow[jj];
+                }
+            }
+            let (t0, rest) = t.split_at(w);
+            let (t1, rest) = rest.split_at(w);
+            let (t2, t3) = rest.split_at(w);
+            let u0 = &ud[i * p..(i + 1) * p];
+            let u1 = &ud[(i + 1) * p..(i + 2) * p];
+            let u2 = &ud[(i + 2) * p..(i + 3) * p];
+            let u3 = &ud[(i + 3) * p..(i + 4) * p];
+            for q in 0..p {
+                let (a0, a1, a2, a3) = (u0[q], u1[q], u2[q], u3[q]);
+                let dst = &mut rhs[q * w..(q + 1) * w];
+                for jj in 0..w {
+                    dst[jj] += a0 * t0[jj] + a1 * t1[jj] + a2 * t2[jj] + a3 * t3[jj];
+                }
+            }
+            i += 4;
+        }
+        while i < self.m {
+            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            let srow = unsafe { std::slice::from_raw_parts(self.s.add(i * n_i + j0), w) };
+            let t = &mut scratch.rows[..w];
+            for jj in 0..w {
+                t[jj] = mrow[jj] - srow[jj];
+            }
+            let urow = &ud[i * p..(i + 1) * p];
+            for q in 0..p {
+                let a = urow[q];
+                let dst = &mut rhs[q * w..(q + 1) * w];
+                for jj in 0..w {
+                    dst[jj] += a * t[jj];
+                }
+            }
+            i += 1;
+        }
+
+        // Ridge solve in place: rhs becomes the panel of Vᵀ.
+        solve_panel_in_place(self.chol, rhs, w);
+
+        // Write the panel's V rows (disjoint across panels).
+        // SAFETY: rows j0..j1 of V belong to this panel alone.
+        let vpan =
+            unsafe { std::slice::from_raw_parts_mut(self.v.add(j0 * p), w * p) };
+        for jj in 0..w {
+            for q in 0..p {
+                vpan[jj * p + q] = rhs[q * w + jj];
+            }
+        }
+
+        // Phase B: S ← shrink_λ(M − U·Vᵀ) over the same (still cached)
+        // panel. d_row accumulates U·Vᵀ for one block row, q unrolled 4×.
+        let vt = &scratch.a[..p * w]; // now holds Vᵀ panel
+        for i in 0..self.m {
+            let urow = &ud[i * p..(i + 1) * p];
+            let d = &mut scratch.rows[..w];
+            d.fill(0.0);
+            accum_uvt_row(d, urow, vt, w, p);
+            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            // SAFETY: this panel's S columns, written by this thread only.
+            let srow =
+                unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
+            for jj in 0..w {
+                srow[jj] = shrink_scalar(mrow[jj] - d[jj], self.lambda);
+            }
+        }
+    }
+
+    /// One fused debias-polish panel: hard-threshold S on the residual
+    /// against the *current* V (`s = r·1[|r| > λ]`, keeping the full
+    /// residual on detected spikes), then re-solve the panel's ridge
+    /// system against the debiased S — the panel form of
+    /// `factor::polish_sweep`, same single-DRAM-pass structure.
+    pub fn polish_panel(&self, k: usize, scratch: &mut PanelScratch) {
+        let (j0, j1) = self.range(k);
+        let w = j1 - j0;
+        let (p, n_i) = (self.p, self.n_i);
+        let ud = self.u.as_slice();
+        let md = self.m_block.as_slice();
+
+        // stage the panel's current Vᵀ (read before any write to V)
+        {
+            let vt_old = &mut scratch.b[..p * w];
+            // SAFETY: read of this panel's V rows; writer is this thread,
+            // later in this call.
+            let vpan = unsafe { std::slice::from_raw_parts(self.v.add(j0 * p), w * p) };
+            for q in 0..p {
+                for jj in 0..w {
+                    vt_old[q * w + jj] = vpan[jj * p + q];
+                }
+            }
+        }
+        let rhs = &mut scratch.a[..p * w];
+        rhs.fill(0.0);
+        let vt_old = &scratch.b[..p * w];
+
+        for i in 0..self.m {
+            let urow = &ud[i * p..(i + 1) * p];
+            // d ← (U·Vᵀ_old) row segment
+            let d = &mut scratch.rows[..w];
+            d.fill(0.0);
+            accum_uvt_row(d, urow, vt_old, w, p);
+            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            // SAFETY: this panel's S columns, this thread only.
+            let srow =
+                unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
+            // hard threshold + (M − S_new) staged for the RHS in one pass
+            let t = d; // reuse: after this loop t holds M − S_new
+            for jj in 0..w {
+                let r = mrow[jj] - t[jj];
+                if r.abs() > self.lambda {
+                    srow[jj] = r;
+                    t[jj] = mrow[jj] - r; // = (U·Vᵀ)ᵢⱼ
+                } else {
+                    srow[jj] = 0.0;
+                    t[jj] = mrow[jj];
+                }
+            }
+            let trow = &scratch.rows[..w];
+            for q in 0..p {
+                let a = urow[q];
+                let dst = &mut rhs[q * w..(q + 1) * w];
+                for jj in 0..w {
+                    dst[jj] += a * trow[jj];
+                }
+            }
+        }
+
+        solve_panel_in_place(self.chol, rhs, w);
+        // SAFETY: this panel's V rows, this thread only.
+        let vpan =
+            unsafe { std::slice::from_raw_parts_mut(self.v.add(j0 * p), w * p) };
+        for jj in 0..w {
+            for q in 0..p {
+                vpan[jj * p + q] = rhs[q * w + jj];
+            }
+        }
+    }
+}
+
+/// Read-only context for the fused gradient pass (Lemma 2's
+/// `(U Vᵀ + S − M) V`): panels accumulate their contribution into the
+/// calling slot's private `grad_acc`, reduced in slot order by the
+/// caller. No shared writes at all, hence no unsafe.
+pub struct GradCtx<'a> {
+    u: &'a Mat,
+    m_block: &'a Mat,
+    v: &'a Mat,
+    s: &'a Mat,
+    m: usize,
+    n_i: usize,
+    p: usize,
+    w: usize,
+}
+
+impl<'a> GradCtx<'a> {
+    pub fn new(u: &'a Mat, m_block: &'a Mat, v: &'a Mat, s: &'a Mat) -> Self {
+        let (m, n_i) = m_block.shape();
+        let p = u.cols();
+        assert_eq!(u.rows(), m, "GradCtx: U row mismatch");
+        assert_eq!(v.shape(), (n_i, p), "GradCtx: V shape mismatch");
+        assert_eq!(s.shape(), (m, n_i), "GradCtx: S shape mismatch");
+        GradCtx { u, m_block, v, s, m, n_i, p, w: panel_width(m, n_i) }
+    }
+
+    pub fn panels(&self) -> usize {
+        panel_count(self.n_i, self.w)
+    }
+
+    /// Accumulate panel `k`'s gradient contribution
+    /// `Σ_{j∈panel} rⱼ vⱼᵀ` (r = U Vᵀ + S − M) into `scratch.grad_acc`.
+    /// One DRAM pass over the panel of M and S; V and the r-row stay
+    /// L1/L2-resident.
+    pub fn grad_panel(&self, k: usize, scratch: &mut PanelScratch) {
+        let j0 = k * self.w;
+        let j1 = (j0 + self.w).min(self.n_i);
+        let w = j1 - j0;
+        let (p, n_i) = (self.p, self.n_i);
+        let ud = self.u.as_slice();
+        let md = self.m_block.as_slice();
+        let sd = self.s.as_slice();
+        let vd = self.v.as_slice();
+
+        // stage the panel's Vᵀ once (L1-resident for the row loop)
+        let vt = &mut scratch.b[..p * w];
+        for q in 0..p {
+            for jj in 0..w {
+                vt[q * w + jj] = vd[(j0 + jj) * p + q];
+            }
+        }
+        let vt = &scratch.b[..p * w];
+        let acc = scratch.grad_acc.as_mut_slice();
+
+        for i in 0..self.m {
+            let urow = &ud[i * p..(i + 1) * p];
+            // r ← S − M over the panel row, then r += U·Vᵀ (q unrolled 4×)
+            let r = &mut scratch.rows[..w];
+            {
+                let mrow = &md[i * n_i + j0..i * n_i + j1];
+                let srow = &sd[i * n_i + j0..i * n_i + j1];
+                for jj in 0..w {
+                    r[jj] = srow[jj] - mrow[jj];
+                }
+            }
+            accum_uvt_row(r, urow, vt, w, p);
+            // grad_acc[i, :] += r · Vᵀ_panelᵀ — p dot products of length
+            // w, four independent accumulator chains at a time
+            let r = &scratch.rows[..w];
+            let arow = &mut acc[i * p..(i + 1) * p];
+            let mut q = 0;
+            while q + 4 <= p {
+                let v0 = &vt[q * w..(q + 1) * w];
+                let v1 = &vt[(q + 1) * w..(q + 2) * w];
+                let v2 = &vt[(q + 2) * w..(q + 3) * w];
+                let v3 = &vt[(q + 3) * w..(q + 4) * w];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                for jj in 0..w {
+                    let rv = r[jj];
+                    s0 += rv * v0[jj];
+                    s1 += rv * v1[jj];
+                    s2 += rv * v2[jj];
+                    s3 += rv * v3[jj];
+                }
+                arow[q] += s0;
+                arow[q + 1] += s1;
+                arow[q + 2] += s2;
+                arow[q + 3] += s3;
+                q += 4;
+            }
+            while q < p {
+                let vq = &vt[q * w..(q + 1) * w];
+                let mut sacc = 0.0;
+                for jj in 0..w {
+                    sacc += r[jj] * vq[jj];
+                }
+                arow[q] += sacc;
+                q += 1;
+            }
+        }
+    }
+}
+
+/// In-place triangular solve of `(L Lᵀ) X = B` for a p×w panel stored
+/// row-major with row stride `w` — the panel twin of
+/// `solve::cholesky_solve_in_place`, vectorized across the panel width.
+fn solve_panel_in_place(chol: &Mat, panel: &mut [f64], w: usize) {
+    let p = chol.rows();
+    debug_assert_eq!(panel.len(), p * w);
+    // forward: L·Y = B
+    for r in 0..p {
+        let lrow = chol.row(r);
+        for k in 0..r {
+            let l = lrow[k];
+            let (head, tail) = panel.split_at_mut(r * w);
+            let src = &head[k * w..(k + 1) * w];
+            let dst = &mut tail[..w];
+            for jj in 0..w {
+                dst[jj] -= l * src[jj];
+            }
+        }
+        // divide (not multiply-by-reciprocal): matches the rounding of
+        // cholesky_solve_in_place, and p·w divisions per panel are noise
+        // next to the 2·m·p·w FMA stages
+        let diag = lrow[r];
+        for x in &mut panel[r * w..(r + 1) * w] {
+            *x /= diag;
+        }
+    }
+    // backward: Lᵀ·X = Y
+    for r in (0..p).rev() {
+        for k in (r + 1)..p {
+            let l = chol[(k, r)];
+            let (head, tail) = panel.split_at_mut(k * w);
+            let src = &tail[..w];
+            let dst = &mut head[r * w..(r + 1) * w];
+            for jj in 0..w {
+                dst[jj] -= l * src[jj];
+            }
+        }
+        let diag = chol[(r, r)];
+        for x in &mut panel[r * w..(r + 1) * w] {
+            *x /= diag;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve::{cholesky_shifted_into, cholesky_solve};
+    use crate::linalg::{gram, matmul_tn};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn panel_width_is_shape_derived_and_bounded() {
+        assert_eq!(panel_width(1000, 1000), PANEL_BYTES / 8000);
+        assert_eq!(panel_width(4, 5), 5); // small blocks: one panel
+        assert_eq!(panel_width(1_000_000, 64), 8); // floor
+        let w = panel_width(500, 300);
+        assert!(w >= 8 && w <= 300);
+        assert_eq!(panel_count(10, 3), 4);
+        assert_eq!(panel_count(9, 3), 3);
+    }
+
+    #[test]
+    fn panel_solve_matches_cholesky_solve() {
+        let mut rng = Pcg64::new(31);
+        for &(p, w) in &[(1usize, 1usize), (3, 7), (5, 16), (8, 33)] {
+            let b = Mat::gaussian(2 * p + 3, p, &mut rng);
+            let g = gram(&b);
+            let mut chol = Mat::zeros(p, p);
+            assert!(cholesky_shifted_into(&mut chol, &g, 0.3));
+            let rhs = Mat::gaussian(p, w, &mut rng);
+            let mut panel: Vec<f64> = rhs.as_slice().to_vec();
+            solve_panel_in_place(&chol, &mut panel, w);
+            let expect = cholesky_solve(&chol, &rhs);
+            for q in 0..p {
+                for jj in 0..w {
+                    assert!(
+                        (panel[q * w + jj] - expect[(q, jj)]).abs() < 1e-12,
+                        "({q},{jj}): {} vs {}",
+                        panel[q * w + jj],
+                        expect[(q, jj)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_panels_cover_all_columns() {
+        // running every panel serially must produce a full (V, S) update
+        // equal to the multi-pass composition to fp-reordering tolerance;
+        // the shape forces several panels plus a ragged last one
+        // (panel_width(600, ·) = 27)
+        let mut rng = Pcg64::new(32);
+        let (m, n_i, p) = (600, 50, 3);
+        assert!(panel_count(n_i, panel_width(m, n_i)) >= 2);
+        let u = Mat::gaussian(m, p, &mut rng);
+        let m_block = Mat::gaussian(m, n_i, &mut rng);
+        let mut v = Mat::zeros(n_i, p);
+        let mut s = Mat::gaussian(m, n_i, &mut rng).map(|x| x * 0.1);
+        let (rho, lambda) = (0.05, 0.4);
+
+        // multi-pass reference
+        let g = gram(&u);
+        let resid = &m_block - &s;
+        let rhs = matmul_tn(&u, &resid);
+        let v_ref = crate::linalg::ridge_solve_v(&g, &rhs, rho);
+        let uv = crate::linalg::matmul_nt(&u, &v_ref);
+        let mut s_ref = Mat::zeros(m, n_i);
+        crate::linalg::residual_shrink_into(&mut s_ref, &m_block, &uv, lambda);
+
+        let mut chol = Mat::zeros(p, p);
+        assert!(cholesky_shifted_into(&mut chol, &g, rho));
+        let ctx = PanelCtx::new(&u, &chol, &m_block, &mut v, &mut s, lambda);
+        let mut scratch = PanelScratch::new(m, p, panel_width(m, n_i));
+        for k in 0..ctx.panels() {
+            ctx.sweep_panel(k, &mut scratch);
+        }
+        assert!((&v - &v_ref).frob_norm() < 1e-12, "V {}", (&v - &v_ref).frob_norm());
+        assert!((&s - &s_ref).frob_norm() < 1e-12, "S {}", (&s - &s_ref).frob_norm());
+    }
+}

@@ -1,19 +1,52 @@
 //! Reusable scratch buffers for the factorization hot path.
 //!
-//! One [`Workspace`] holds every temporary the inner-problem sweep
-//! (Eqs. 15–16), the U-gradient (Lemma 2), and the curvature estimate
-//! need, sized once from the client's block shape `(m, n_i, p)`. Threaded
-//! through `algorithms::factor` → `coordinator::kernel` →
-//! `coordinator::client`, it makes the steady-state local epoch perform
-//! **zero heap allocations** (asserted by a counting-allocator test in
-//! `coordinator::kernel`): the J × K × T inner sweeps of a DCF-PCA run
-//! touch only these preallocated buffers.
+//! One [`Workspace`] holds every temporary the fused column-tile sweep
+//! (Eqs. 15–16 via `linalg::tile`), the U-gradient (Lemma 2), and the
+//! curvature estimate need, sized once from the client's block shape
+//! `(m, n_i, p)`. Threaded through `algorithms::factor` →
+//! `coordinator::kernel` → `coordinator::client`, it makes the
+//! steady-state local epoch perform **zero heap allocations** (asserted
+//! by a counting-allocator test in `coordinator::kernel`): the J × K × T
+//! inner sweeps of a DCF-PCA run touch only these preallocated buffers.
+//!
+//! Parallelism: the workspace carries [`tile::NUM_SLOTS`] independent
+//! [`PanelScratch`] lanes — one per dispatch slot of the panel pipeline,
+//! *not* one per thread. The slot count is fixed, so the decomposition
+//! (and therefore every result, including the slot-ordered gradient
+//! reduction) is identical at any `--threads`.
 //!
 //! Shape discipline: every consumer calls [`Workspace::assert_shape`]
 //! first, so a workspace sized for one client can never be silently used
 //! for a differently-shaped block.
 
 use super::matrix::Mat;
+use super::tile;
+
+/// Private scratch for one dispatch slot of the panel pipeline: the
+/// panel RHS / Vᵀ staging buffers, a 4-row staging strip, and the
+/// slot's gradient accumulator. Contents are unspecified between calls.
+#[derive(Clone, Debug)]
+pub struct PanelScratch {
+    /// p×w — panel RHS, solved in place into the panel of Vᵀ
+    pub a: Vec<f64>,
+    /// p×w — staged (old) Vᵀ panel for the polish and gradient passes
+    pub b: Vec<f64>,
+    /// 4×w — row staging strip (4 rows at a time in the RHS accumulation)
+    pub rows: Vec<f64>,
+    /// m×p — this slot's gradient accumulator, reduced in slot order
+    pub grad_acc: Mat,
+}
+
+impl PanelScratch {
+    pub fn new(m: usize, p: usize, w: usize) -> Self {
+        PanelScratch {
+            a: vec![0.0; p * w],
+            b: vec![0.0; p * w],
+            rows: vec![0.0; 4 * w],
+            grad_acc: Mat::zeros(m, p),
+        }
+    }
+}
 
 /// Preallocated scratch for one client block of shape m×n_i with factor
 /// width p. All fields are public working buffers; their contents are
@@ -24,18 +57,16 @@ pub struct Workspace {
     m: usize,
     n_i: usize,
     p: usize,
+    /// panel width of the fused tile pipeline (shape-derived)
+    panel_w: usize,
     /// p×p — Gram matrix UᵀU (or VᵀV for the curvature estimate)
     pub gram: Mat,
     /// p×p — Cholesky factor of G+ρI (Eq. 15's system matrix)
     pub chol: Mat,
-    /// p×n_i — right-hand side Uᵀ(M−S)
-    pub rhs: Mat,
-    /// p×n_i — ridge-solve intermediate Vᵀ
-    pub sol: Mat,
-    /// m×n_i — block-sized residual (M−S, then U·Vᵀ, then U·Vᵀ+S−M)
-    pub resid: Mat,
-    /// m×p — ∇_U L_i
+    /// m×p — ∇_U L_i (the slot accumulators' fixed-order reduction)
     pub grad: Mat,
+    /// per-slot panel scratch (fixed [`tile::NUM_SLOTS`] lanes)
+    pub slots: Vec<PanelScratch>,
     /// p — power-iteration vector for the curvature estimate
     pub pow_x: Vec<f64>,
     /// p — power-iteration image G·x
@@ -48,19 +79,25 @@ impl Workspace {
     /// path — do it once per client, outside the round loop.
     pub fn new(m: usize, n_i: usize, p: usize) -> Self {
         assert!(m > 0 && n_i > 0 && p > 0, "workspace dims must be positive");
+        let panel_w = tile::panel_width(m, n_i);
         Workspace {
             m,
             n_i,
             p,
+            panel_w,
             gram: Mat::zeros(p, p),
             chol: Mat::zeros(p, p),
-            rhs: Mat::zeros(p, n_i),
-            sol: Mat::zeros(p, n_i),
-            resid: Mat::zeros(m, n_i),
             grad: Mat::zeros(m, p),
+            slots: (0..tile::NUM_SLOTS).map(|_| PanelScratch::new(m, p, panel_w)).collect(),
             pow_x: vec![0.0; p],
             pow_y: vec![0.0; p],
         }
+    }
+
+    /// Panel width of the fused tile pipeline for this block shape.
+    #[inline]
+    pub fn panel_width(&self) -> usize {
+        self.panel_w
     }
 
     /// Does this workspace fit a block of the given shape exactly?
@@ -93,12 +130,17 @@ mod tests {
         let ws = Workspace::new(12, 7, 3);
         assert_eq!(ws.gram.shape(), (3, 3));
         assert_eq!(ws.chol.shape(), (3, 3));
-        assert_eq!(ws.rhs.shape(), (3, 7));
-        assert_eq!(ws.sol.shape(), (3, 7));
-        assert_eq!(ws.resid.shape(), (12, 7));
         assert_eq!(ws.grad.shape(), (12, 3));
         assert_eq!(ws.pow_x.len(), 3);
         assert_eq!(ws.pow_y.len(), 3);
+        assert_eq!(ws.panel_width(), tile::panel_width(12, 7));
+        assert_eq!(ws.slots.len(), tile::NUM_SLOTS);
+        for s in &ws.slots {
+            assert_eq!(s.a.len(), 3 * ws.panel_width());
+            assert_eq!(s.b.len(), 3 * ws.panel_width());
+            assert_eq!(s.rows.len(), 4 * ws.panel_width());
+            assert_eq!(s.grad_acc.shape(), (12, 3));
+        }
         assert!(ws.matches(12, 7, 3));
         ws.assert_shape(12, 7, 3);
     }

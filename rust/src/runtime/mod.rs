@@ -6,7 +6,9 @@
 pub mod artifacts;
 pub mod executor;
 pub mod pjrt;
+pub mod pool;
 
 pub use artifacts::{Manifest, Variant};
 pub use executor::PjrtKernel;
 pub use pjrt::{CompiledHlo, PjrtArg, PjrtRuntime};
+pub use pool::ThreadPool;

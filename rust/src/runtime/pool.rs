@@ -1,0 +1,535 @@
+//! Zero-dependency scoped thread pool for the panel-parallel hot path.
+//!
+//! A [`ThreadPool`] owns `threads − 1` persistent `std::thread` workers
+//! (the dispatching thread is the remaining lane — `threads = 1` means
+//! no workers at all and every dispatch runs inline). [`ThreadPool::run`]
+//! is a *scoped* dispatch: it hands a borrowed closure to the workers,
+//! participates in the work itself, and does not return until every job
+//! has finished — so the closure may freely borrow from the caller's
+//! stack. Dispatch performs **no heap allocation** (the closure crosses
+//! threads as a borrowed fat pointer), which keeps the zero-allocation
+//! local-epoch invariant from PR 1 intact at any thread count.
+//!
+//! Determinism contract: the pool never decides *how work is split* —
+//! callers pass a fixed job count derived from problem shape only (at
+//! most [`NUM_SLOTS`]), per-job outputs are disjoint or reduced in
+//! fixed job order, and therefore results are bitwise identical for any
+//! thread count, including the inline fallbacks below.
+//!
+//! Re-entrancy: if a dispatch is already in flight (another thread is
+//! using the pool, or a worker calls back into the pool), `run` degrades
+//! gracefully by executing all jobs inline on the caller — same results,
+//! no deadlock. This matters in the L3 driver, where E client threads
+//! share the process-wide pool.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Fixed number of dispatch slots / reduction bands. Work is decomposed
+/// by this constant — never by thread count — which is what makes every
+/// slot-ordered reduction bitwise identical at any `--threads`. Owned by
+/// the pool (the dispatch layer); `linalg::tile` re-exports it for the
+/// panel pipeline's scratch lanes. 8 comfortably covers the core counts
+/// this crate targets; extra slots only cost idle scratch.
+pub const NUM_SLOTS: usize = 8;
+
+/// Below this element count, `run_bands` computes its band sums inline:
+/// a condvar dispatch costs microseconds, which dwarfs the loop body on
+/// small inputs (the decomposition — and therefore the result — is
+/// identical either way).
+const PAR_BAND_MIN_LEN: usize = 64 * 1024;
+
+/// Worker-visible dispatch state. `task` is the caller's closure with its
+/// lifetime erased; it is only ever dereferenced while the dispatching
+/// `run` call is blocked, which keeps the borrow alive.
+struct Ctrl {
+    epoch: u64,
+    jobs: usize,
+    task: Option<&'static (dyn Fn(usize) + Sync)>,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    work: Condvar,
+    done: Condvar,
+    /// next unclaimed job index (workers and the caller race on this)
+    next: AtomicUsize,
+    /// jobs fully executed (completion barrier)
+    completed: AtomicUsize,
+    /// workers currently inside a claim loop for the live dispatch — the
+    /// dispatcher waits for this to drain before resetting `next`, so a
+    /// straggler can never claim into the *next* dispatch with a stale
+    /// task pointer
+    active: AtomicUsize,
+    /// a job of the live dispatch panicked (re-raised by the dispatcher)
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+/// Persistent scoped-dispatch worker pool. See the module docs.
+pub struct ThreadPool {
+    shared: &'static Shared,
+    /// serializes dispatchers; `try_lock` failure ⇒ inline fallback
+    dispatch: Mutex<()>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// static pools (the global) must not try to join on drop
+    leaked: bool,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total compute lanes (the caller's thread is
+    /// one of them; `threads − 1` workers are spawned). `0` is treated
+    /// as `1`.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        // The shared block is leaked so worker threads may hold a plain
+        // &'static — one small allocation per pool, never on a hot path.
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            ctrl: Mutex::new(Ctrl { epoch: 0, jobs: 0, task: None }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        }));
+        let handles = (1..threads)
+            .map(|i| {
+                std::thread::Builder::new()
+                    .name(format!("dcf-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, dispatch: Mutex::new(()), threads, handles, leaked: false }
+    }
+
+    /// Total compute lanes (workers + the dispatching thread).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0) … f(jobs − 1)` across the pool, returning when all jobs
+    /// have completed. Jobs are claimed dynamically, so `f` must not care
+    /// *which thread* runs a job — only that each index runs exactly
+    /// once. Falls back to inline execution when the pool is busy or has
+    /// no workers (identical results by the determinism contract).
+    pub fn run(&self, jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        if jobs == 0 {
+            return;
+        }
+        if self.handles.is_empty() || jobs == 1 {
+            for i in 0..jobs {
+                f(i);
+            }
+            return;
+        }
+        let Ok(guard) = self.dispatch.try_lock() else {
+            // pool busy (concurrent dispatcher or re-entrant call): the
+            // slot decomposition is thread-count independent, so inline
+            // execution is bitwise-identical
+            for i in 0..jobs {
+                f(i);
+            }
+            return;
+        };
+        // SAFETY: lifetime erasure only — `run` does not return until
+        // `completed == jobs`, and workers never touch `task` after
+        // completing their claimed jobs for this epoch, so the borrow
+        // outlives every dereference.
+        let task = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        self.shared.next.store(0, Ordering::Release);
+        self.shared.completed.store(0, Ordering::Release);
+        {
+            let mut c = self.shared.ctrl.lock().unwrap();
+            c.epoch = c.epoch.wrapping_add(1);
+            c.jobs = jobs;
+            c.task = Some(task);
+        }
+        self.shared.work.notify_all();
+        // The dispatcher is a full compute lane. Panics are caught on
+        // every lane (never unwound mid-dispatch): unwinding out of this
+        // frame while workers still hold the lifetime-erased `task`
+        // would free the closure's captured stack under them. Instead
+        // each lane records the panic, the dispatch drains normally, and
+        // the panic is re-raised below from the dispatcher.
+        loop {
+            let i = self.shared.next.fetch_add(1, Ordering::AcqRel);
+            if i >= jobs {
+                break;
+            }
+            run_job_caught(self.shared, f, i);
+            self.shared.completed.fetch_add(1, Ordering::AcqRel);
+        }
+        let mut c = self.shared.ctrl.lock().unwrap();
+        while self.shared.completed.load(Ordering::Acquire) < jobs
+            || self.shared.active.load(Ordering::Acquire) > 0
+        {
+            c = self.shared.done.wait(c).unwrap();
+        }
+        // workers adopt the task only under this lock, and `active` drained
+        // above — nothing can dereference `task` past this point
+        c.task = None;
+        drop(c);
+        // release the dispatch guard BEFORE re-raising: unwinding with it
+        // held would poison the mutex and silently demote every future
+        // dispatch to the inline fallback
+        drop(guard);
+        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("ThreadPool job panicked (see worker output above)");
+        }
+    }
+
+    /// Split `len` into [`NUM_SLOTS`] contiguous bands (a fixed
+    /// decomposition independent of thread count), run `f(band, lo, hi)`
+    /// for each band in parallel, and return the per-band partial
+    /// results summed **in band order** — a deterministic parallel
+    /// reduction for the fused elementwise passes in the ALM/APGM
+    /// baselines. Small inputs run inline with the identical band
+    /// structure, so the result never depends on which path was taken.
+    pub fn run_bands(&self, len: usize, f: &(dyn Fn(usize, usize, usize) -> f64 + Sync)) -> f64 {
+        let nb = NUM_SLOTS.min(len.max(1));
+        let chunk = len.div_ceil(nb);
+        if len < PAR_BAND_MIN_LEN || self.handles.is_empty() {
+            let mut total = 0.0;
+            for b in 0..nb {
+                let lo = b * chunk;
+                let hi = ((b + 1) * chunk).min(len);
+                total += if lo < hi { f(b, lo, hi) } else { 0.0 };
+            }
+            return total;
+        }
+        let mut partials = [0.0f64; NUM_SLOTS];
+        let slots = Slots::new(&mut partials[..nb]);
+        self.run(nb, &|b| {
+            let lo = b * chunk;
+            let hi = ((b + 1) * chunk).min(len);
+            // SAFETY: each band index is claimed exactly once per `run`.
+            let out = unsafe { slots.get(b) };
+            *out = if lo < hi { f(b, lo, hi) } else { 0.0 };
+        });
+        partials[..nb].iter().sum()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if self.leaked {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _c = self.shared.ctrl.lock().unwrap();
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // `shared` itself stays leaked: a handful of bytes per pool, and
+        // reclaiming it would race a worker mid-exit.
+    }
+}
+
+fn worker_loop(shared: &'static Shared) {
+    let mut seen = 0u64;
+    loop {
+        let (task, jobs) = {
+            let mut c = shared.ctrl.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if c.epoch != seen {
+                    if let Some(t) = c.task {
+                        seen = c.epoch;
+                        // adopted under the ctrl lock — pairs with the
+                        // dispatcher's drain-then-retire sequence
+                        shared.active.fetch_add(1, Ordering::AcqRel);
+                        break (t, c.jobs);
+                    }
+                    // epoch advanced but task already retired: observe it
+                    seen = c.epoch;
+                }
+                c = shared.work.wait(c).unwrap();
+            }
+        };
+        loop {
+            let i = shared.next.fetch_add(1, Ordering::AcqRel);
+            if i >= jobs {
+                break;
+            }
+            // catch panics so `completed`/`active` always drain — a dying
+            // worker would otherwise deadlock the dispatcher's wait loop
+            run_job_caught(shared, task, i);
+            shared.completed.fetch_add(1, Ordering::AcqRel);
+        }
+        shared.active.fetch_sub(1, Ordering::AcqRel);
+        // wake the dispatcher: either the last job finished or the last
+        // straggler left its claim loop (lock pairs the wake with the
+        // dispatcher's predicate check, preventing a lost notify)
+        let _c = shared.ctrl.lock().unwrap();
+        shared.done.notify_all();
+    }
+}
+
+/// Run one job with panic containment: a panic is recorded in
+/// `shared.panicked` (re-raised by the dispatcher after the dispatch
+/// drains) instead of unwinding through the pool's bookkeeping.
+fn run_job_caught(shared: &Shared, f: &(dyn Fn(usize) + Sync), i: usize) {
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+    if res.is_err() {
+        shared.panicked.store(true, Ordering::Release);
+    }
+}
+
+/// Per-job exclusive views into a mutable slice, for closures dispatched
+/// through [`ThreadPool::run`]: job `i` takes `slots.get(i)` as its
+/// private scratch. The aliasing invariant is upheld by the pool's
+/// claim-once job distribution.
+pub struct Slots<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is partitioned by job index (each index claimed by
+// exactly one thread per dispatch), so no two threads alias an element.
+unsafe impl<T: Send> Sync for Slots<'_, T> {}
+unsafe impl<T: Send> Send for Slots<'_, T> {}
+
+impl<'a, T> Slots<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Slots { ptr: slice.as_mut_ptr(), len: slice.len(), _lt: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// At most one live reference per index: callers must only pass a
+    /// job index they exclusively claimed from the dispatching `run`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // disjointness guaranteed by claim-once dispatch
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "slot index {i} out of bounds ({} slots)", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Shared-mutable view of a slice for *band-disjoint* parallel writes
+/// (the ALM/APGM fused elementwise passes): each band job writes only its
+/// own `[lo, hi)` range.
+pub struct BandSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: same argument as `Slots` — ranges are disjoint across jobs.
+unsafe impl<T: Send> Sync for BandSlice<'_, T> {}
+unsafe impl<T: Send> Send for BandSlice<'_, T> {}
+
+impl<'a, T> BandSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        BandSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _lt: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// Concurrent callers must use non-overlapping `[lo, hi)` ranges.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // disjointness guaranteed by band decomposition
+    pub unsafe fn range(&self, lo: usize, hi: usize) -> &mut [T] {
+        assert!(lo <= hi && hi <= self.len, "band [{lo},{hi}) out of bounds (len {})", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Requested size for the process-wide pool; 0 = not configured.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Number of hardware threads, the default width of the global pool (and
+/// of the CLI `--threads` knob).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Configure the width of the process-wide pool. Takes effect only if
+/// called before the first [`global`] use (the CLI does this while
+/// parsing `--threads`); returns whether the pool now has the requested
+/// width. Forcing initialization here makes the answer race-free: the
+/// `OnceLock` decides a single winner, and the return value reports the
+/// actual outcome rather than a check-then-act guess.
+pub fn set_global_threads(threads: usize) -> bool {
+    let t = threads.max(1);
+    GLOBAL_THREADS.store(t, Ordering::Release);
+    global().threads() == t
+}
+
+/// The process-wide pool, created on first use with the configured (or
+/// hardware-default) width.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let t = match GLOBAL_THREADS.load(Ordering::Acquire) {
+            0 => default_threads(),
+            t => t,
+        };
+        let mut pool = ThreadPool::new(t);
+        pool.leaked = true; // static: never joined
+        pool
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for jobs in [0usize, 1, 2, 7, 8, 33] {
+            let hits: Vec<AtomicU64> = (0..jobs).map(|_| AtomicU64::new(0)).collect();
+            pool.run(jobs, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let me = std::thread::current().id();
+        pool.run(5, &|_| assert_eq!(std::thread::current().id(), me));
+    }
+
+    #[test]
+    fn repeated_dispatches_reuse_workers() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(8, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 200 * 36);
+    }
+
+    #[test]
+    fn scoped_borrow_of_caller_stack() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 64];
+        let slots = Slots::new(&mut out);
+        pool.run(64, &|i| {
+            // SAFETY: each index claimed once
+            unsafe { *slots.get(i) = (i * i) as u64 };
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn reentrant_dispatch_falls_back_inline() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicU64::new(0);
+        pool.run(2, &|_| {
+            // a job dispatching again must not deadlock
+            pool.run(3, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn run_bands_matches_serial_sum() {
+        let pool = ThreadPool::new(3);
+        // long enough to take the parallel path (> PAR_BAND_MIN_LEN)
+        let xs: Vec<f64> = (0..100_000).map(|i| (i as f64).sin()).collect();
+        assert!(xs.len() >= PAR_BAND_MIN_LEN);
+        let serial: f64 = {
+            // identical band decomposition, summed the same way
+            let nb = NUM_SLOTS.min(xs.len());
+            let chunk = xs.len().div_ceil(nb);
+            (0..nb)
+                .map(|b| {
+                    let lo = b * chunk;
+                    let hi = ((b + 1) * chunk).min(xs.len());
+                    xs[lo..hi].iter().sum::<f64>()
+                })
+                .sum()
+        };
+        for _ in 0..5 {
+            let par = pool.run_bands(xs.len(), &|_, lo, hi| xs[lo..hi].iter().sum());
+            assert_eq!(par, serial, "band reduction must be bitwise deterministic");
+        }
+        // the small-input inline path uses the identical decomposition
+        let short = &xs[..1000];
+        let inline = pool.run_bands(short.len(), &|_, lo, hi| short[lo..hi].iter().sum());
+        let expect: f64 = {
+            let nb = NUM_SLOTS.min(short.len());
+            let chunk = short.len().div_ceil(nb);
+            (0..nb)
+                .map(|b| short[(b * chunk).min(short.len())..((b + 1) * chunk).min(short.len())]
+                    .iter()
+                    .sum::<f64>())
+                .sum()
+        };
+        assert_eq!(inline, expect);
+    }
+
+    #[test]
+    fn job_panic_is_contained_and_reraised() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "dispatcher must re-raise a job panic");
+        // the dispatch mutex must not be poisoned — a poisoned guard
+        // would silently demote every future dispatch to the inline
+        // fallback (correct results, zero parallelism)
+        assert!(pool.dispatch.try_lock().is_ok(), "dispatch mutex poisoned by re-raise");
+        // and the pool must remain fully usable afterwards
+        let n = AtomicU64::new(0);
+        pool.run(8, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = global();
+        let n = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+        assert!(pool.threads() >= 1);
+    }
+}

@@ -94,6 +94,35 @@ fn solve_rejects_bad_flags() {
 }
 
 #[test]
+fn solve_threads_knob_is_result_invariant() {
+    // --threads sizes the process-wide pool; the panel pipeline's slot
+    // decomposition makes the printed final error identical at any width
+    let run = |threads: &str| {
+        let out = bin()
+            .args([
+                "solve", "--algorithm", "cf-pca", "--n", "80", "--rank", "3", "--iters", "25",
+                "--threads", threads,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "t={threads}: {}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+        let err_line = stdout
+            .lines()
+            .find(|l| l.contains("final err"))
+            .unwrap_or_else(|| panic!("t={threads}: no final err in {stdout}"))
+            .to_string();
+        // "CF-PCA: final err 1.23e-4 after N iterations in <wall>" —
+        // compare everything but the wall time
+        err_line.split(" in ").next().unwrap().to_string()
+    };
+    assert_eq!(run("1"), run("2"));
+    // zero is rejected up front
+    let out = bin().args(["solve", "--n", "20", "--threads", "0"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn config_file_run() {
     let dir = std::env::temp_dir().join(format!("dcfpca-cfg-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -41,7 +41,7 @@ fn spawn_tcp_clients(
                     compression: dcf_pca::coordinator::Compression::None,
                     dp_sigma: 0.0,
                 };
-                let _ = run_client(&mut ch, cfg, &NativeKernel);
+                let _ = run_client(&mut ch, cfg, &NativeKernel::new());
                 Ok(ch.bytes_sent())
             })
         })

@@ -3,9 +3,11 @@
 //! random cases; failures report the case index and a replay seed.
 
 use dcf_pca::algorithms::factor::{
-    inner_objective, inner_sweep, ClientState, FactorHyper,
+    inner_objective, inner_sweep, oracle, u_gradient_into, ClientState, FactorHyper,
 };
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
 use dcf_pca::linalg::Workspace;
+use dcf_pca::runtime::pool;
 use dcf_pca::coordinator::aggregate::{aggregate, Aggregation};
 use dcf_pca::coordinator::protocol::{ToClient, ToServer};
 use dcf_pca::coordinator::transport::framing::{put_mat, Reader};
@@ -123,11 +125,80 @@ fn prop_inner_sweep_monotone_descent() {
         let mut ws = Workspace::new(m_dim, n_dim, r);
         let mut prev = inner_objective(&u, &m_block, &state, &hyper);
         for _ in 0..4 {
-            inner_sweep(&u, &m_block, &mut state, &hyper, &mut ws);
+            inner_sweep(&u, &m_block, &mut state, &hyper, pool::global(), &mut ws);
             let cur = inner_objective(&u, &m_block, &state, &hyper);
             assert!(cur <= prev * (1.0 + 1e-10) + 1e-10, "{cur} > {prev}");
             prev = cur;
         }
+    });
+}
+
+#[test]
+fn prop_fused_tile_sweep_matches_multipass_oracle() {
+    // the fused column-tile pipeline (one DRAM pass per sweep) must agree
+    // with the preserved multi-pass formulation to 1e-12 over random
+    // shapes, hyperparameters, and warm-started states — including the
+    // gradient's slot-ordered reduction
+    property("fused tile == multipass oracle", 20, |g| {
+        let m_dim = g.usize_in(4, 80);
+        let n_dim = g.usize_in(2, 90);
+        let r = g.usize_in(1, 4.min(m_dim).min(n_dim));
+        let hyper = FactorHyper {
+            rank: r,
+            rho: g.f64_in(1e-3, 1.0),
+            lambda: g.f64_in(0.05, 3.0),
+            inner_sweeps: 1,
+        };
+        let m_block = g.mat(m_dim, n_dim);
+        let u = g.mat(m_dim, r);
+        let n_frac = g.f64_in(0.1, 1.0);
+
+        let mut st_fused = ClientState::zeros(m_dim, n_dim, r);
+        let mut ws = Workspace::new(m_dim, n_dim, r);
+        let mut st_oracle = st_fused.clone();
+        let mut ows = oracle::MultipassWorkspace::new(m_dim, n_dim, r);
+
+        for _ in 0..3 {
+            inner_sweep(&u, &m_block, &mut st_fused, &hyper, pool::global(), &mut ws);
+            oracle::inner_sweep(&u, &m_block, &mut st_oracle, &hyper, &mut ows);
+        }
+        u_gradient_into(&u, &m_block, &st_fused, &hyper, n_frac, pool::global(), &mut ws);
+        oracle::u_gradient_into(&u, &m_block, &st_oracle, &hyper, n_frac, &mut ows);
+
+        let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1.0);
+        assert!(rel(&st_fused.v, &st_oracle.v) < 1e-12, "V {}", rel(&st_fused.v, &st_oracle.v));
+        assert!(rel(&st_fused.s, &st_oracle.s) < 1e-12, "S {}", rel(&st_fused.s, &st_oracle.s));
+        assert!(rel(&ws.grad, &ows.grad) < 1e-12, "grad {}", rel(&ws.grad, &ows.grad));
+    });
+}
+
+#[test]
+fn prop_local_epoch_identical_across_thread_counts() {
+    // --threads 1/2/4 must be *bitwise* identical on the same seed: the
+    // slot decomposition and the slot-ordered gradient reduction never
+    // depend on thread count
+    property("epoch bitwise-deterministic across threads", 6, |g| {
+        // wide enough that several panels exist at every m (panel width
+        // shrinks as m grows; m ≥ 128 → w ≤ 128)
+        let m_dim = g.usize_in(128, 300);
+        let n_dim = g.usize_in(150, 320);
+        let r = g.usize_in(1, 5);
+        let hyper = FactorHyper::default_for(m_dim, n_dim, r);
+        let m_block = g.mat(m_dim, n_dim);
+        let u0 = g.mat(m_dim, r);
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let kernel = NativeKernel::with_threads(threads);
+            let mut u = u0.clone();
+            let mut state = ClientState::zeros(m_dim, n_dim, r);
+            let mut ws = Workspace::new(m_dim, n_dim, r);
+            let out = kernel
+                .local_epoch(&mut u, &m_block, &mut state, &hyper, 0.5, 1e-3, 2, &mut ws)
+                .unwrap();
+            results.push((u, state.v, state.s, out.grad_norm.to_bits(), out.lipschitz.to_bits()));
+        }
+        assert_eq!(results[0], results[1], "threads=1 vs 2 diverged");
+        assert_eq!(results[0], results[2], "threads=1 vs 4 diverged");
     });
 }
 

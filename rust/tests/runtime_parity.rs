@@ -71,7 +71,7 @@ fn padded_narrow_block_matches_native() {
     let mut ws = Workspace::new(64, 17, 4);
     let mut st_native = ClientState::zeros(64, 17, 4);
     let mut u_native = u.clone();
-    NativeKernel
+    NativeKernel::new()
         .local_epoch(&mut u_native, &problem.observed, &mut st_native, &hyper, 0.3, 1e-3, 2, &mut ws)
         .unwrap();
     let mut st_pjrt = ClientState::zeros(64, 17, 4);
