@@ -52,6 +52,7 @@ fn main() -> dcf_pca::anyhow::Result<()> {
             let mut ch = TcpChannel::connect(&addr)?;
             let cfg = ClientConfig {
                 id,
+                job: 0,
                 m_block,
                 hyper,
                 n_frac,
@@ -66,8 +67,8 @@ fn main() -> dcf_pca::anyhow::Result<()> {
         }));
     }
 
-    // server side: accept in connection order = id order (threads spawn
-    // sequentially and connect() blocks until accepted)
+    // server side: any accept order works — the engine binds identities
+    // from each party's Hello, not from connection order
     let mut channels: Vec<Box<dyn Channel>> = acceptor
         .accept_n(E)?
         .into_iter()

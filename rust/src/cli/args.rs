@@ -25,6 +25,29 @@ pub const THREADS_OPT: OptSpec = OptSpec {
     help: "compute threads for panel-parallel kernels (default: all cores)",
 };
 
+/// Parse the shared `--compression` knob (wire codec for the per-round
+/// consensus factors). Used by `solve`, `serve`, and `worker` so the
+/// flag's vocabulary cannot drift between commands.
+pub fn parse_compression(args: &ParsedArgs) -> Result<crate::coordinator::Compression> {
+    match args.get("compression") {
+        Some(c) => crate::coordinator::Compression::parse(c),
+        None => Ok(crate::coordinator::Compression::None),
+    }
+}
+
+/// Parse the shared `--round-timeout` knob (positive seconds → the
+/// coordinator's per-round straggler deadline). Used by `solve` and
+/// `serve` so the flag's semantics cannot drift between commands.
+pub fn parse_round_timeout(args: &ParsedArgs) -> Result<Option<std::time::Duration>> {
+    match args.get_f64("round-timeout")? {
+        Some(secs) if secs.is_finite() && secs > 0.0 => {
+            Ok(Some(std::time::Duration::from_secs_f64(secs)))
+        }
+        Some(_) => Err(anyhow!("--round-timeout must be positive seconds")),
+        None => Ok(None),
+    }
+}
+
 /// Apply a parsed `--threads` value to the process-wide pool. Must run
 /// before the first kernel dispatch (the pool is sized on first use);
 /// results are bitwise identical at any thread count, so the knob only

@@ -2,6 +2,14 @@
 //! over TCP: the server and each client run as separate processes
 //! (possibly on separate hosts).
 //!
+//! The server is a single-threaded event loop: on Linux it runs the
+//! epoll reactor over non-blocking sockets (no thread per connection, no
+//! blocking on stragglers), elsewhere it falls back to the portable
+//! channel poller. Workers may connect in any order — identity comes
+//! from the protocol `Hello` — and under `--fault-policy skip` extra
+//! workers may even join *after* the run has started (elastic
+//! membership: they enter at the next round boundary).
+//!
 //! Data provisioning: all parties derive the same synthetic instance from
 //! a shared `--seed`, and each worker slices out its own column block —
 //! so no raw data ever crosses the network, matching the paper's setting
@@ -12,19 +20,21 @@ use crate::bail;
 use crate::error::{Context, Error, Result};
 
 use crate::algorithms::factor::FactorHyper;
-use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
+use crate::cli::args::{
+    apply_threads, parse_compression, parse_round_timeout, usage, OptSpec, ParsedArgs, THREADS_OPT,
+};
 use crate::coordinator::client::{run_client, ClientConfig, FaultPlan};
+use crate::coordinator::engine::RoundEngine;
 use crate::coordinator::kernel::NativeKernel;
-use crate::coordinator::server::{run_server, ServerConfig};
+use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use crate::coordinator::transport::tcp::{TcpAcceptor, TcpChannel};
-use crate::coordinator::transport::Channel;
 use crate::coordinator::PrivacySpec;
 use crate::rpca::partition::ColumnPartition;
 use crate::rpca::problem::ProblemSpec;
 
 const SERVE_SPECS: &[OptSpec] = &[
     OptSpec { name: "listen", takes_value: true, help: "bind address (default 127.0.0.1:7070)" },
-    OptSpec { name: "clients", takes_value: true, help: "number of workers to expect (default 4)" },
+    OptSpec { name: "clients", takes_value: true, help: "workers that start the run (default 4)" },
     OptSpec { name: "n", takes_value: true, help: "problem size (default 200)" },
     OptSpec { name: "rank", takes_value: true, help: "rank (default 0.05n)" },
     OptSpec { name: "sparsity", takes_value: true, help: "corruption (default 0.05)" },
@@ -32,6 +42,26 @@ const SERVE_SPECS: &[OptSpec] = &[
     OptSpec { name: "k-local", takes_value: true, help: "local iterations K (default 2)" },
     OptSpec { name: "seed", takes_value: true, help: "shared problem seed (default 42)" },
     OptSpec { name: "private", takes_value: true, help: "comma-separated private client ids" },
+    OptSpec {
+        name: "participation",
+        takes_value: true,
+        help: "fraction of clients sampled per round (0,1]; default 1.0",
+    },
+    OptSpec {
+        name: "compression",
+        takes_value: true,
+        help: "wire codec for consensus factors: none | f32 | int8 (workers must match)",
+    },
+    OptSpec {
+        name: "round-timeout",
+        takes_value: true,
+        help: "per-round straggler deadline in seconds (default 600)",
+    },
+    OptSpec {
+        name: "fault-policy",
+        takes_value: true,
+        help: "strict | skip — what a missed deadline/disconnect does (default strict)",
+    },
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
 
@@ -60,27 +90,35 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
         ),
         None => PrivacySpec::all_public(),
     };
+    let participation = args.get_f64("participation")?.unwrap_or(1.0);
+    if !(0.0 < participation && participation <= 1.0) {
+        bail!("--participation must be in (0, 1], got {participation}");
+    }
+    let compression = parse_compression(&args)?;
+    let fault_policy = match args.get("fault-policy") {
+        None | Some("strict") => FaultPolicy::Strict,
+        Some("skip") => FaultPolicy::SkipMissing,
+        Some(other) => bail!("--fault-policy must be strict or skip, got {other}"),
+    };
 
     let spec = ProblemSpec::square(n, rank, sparsity);
     spec.validate().map_err(Error::msg)?;
     let problem = spec.generate(seed);
 
-    let acceptor = TcpAcceptor::bind(listen)?;
-    println!("server listening on {} for {clients} workers…", acceptor.local_addr()?);
-    let mut channels: Vec<Box<dyn Channel>> = acceptor
-        .accept_n(clients)?
-        .into_iter()
-        .map(|c| Box::new(c) as Box<dyn Channel>)
-        .collect();
-    // order channels by the client id announced in Hello: peek is awkward
-    // with the current trait, so require workers to connect in id order
-    // for the demo launcher (documented in --help of `worker`).
-
     let mut cfg = ServerConfig::new(spec.m, rank, rounds, k_local);
     cfg.privacy = privacy;
     cfg.seed = seed;
     cfg.err_denominator = Some(problem.l0.frob_norm_sq() + problem.s0.frob_norm_sq());
-    let outcome = run_server(&mut channels, &cfg)?;
+    cfg.participation = participation;
+    cfg.compression = compression;
+    cfg.fault_policy = fault_policy;
+    if let Some(t) = parse_round_timeout(&args)? {
+        cfg.round_timeout = t;
+    }
+
+    let acceptor = TcpAcceptor::bind(listen)?;
+    println!("server listening on {} for {clients} workers…", acceptor.local_addr()?);
+    let outcome = serve_event_loop(acceptor, cfg, clients)?;
 
     println!("run complete: {} rounds", outcome.rounds.len());
     if let Some(last) = outcome.rounds.last() {
@@ -103,14 +141,50 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Drive one job to completion on the best reactor for the platform.
+fn serve_event_loop(
+    acceptor: TcpAcceptor,
+    cfg: ServerConfig,
+    clients: usize,
+) -> Result<ServerOutcome> {
+    use crate::coordinator::transport::reactor::drive;
+    let mut engine = RoundEngine::new();
+    engine.add_job(0, cfg, clients);
+    #[cfg(target_os = "linux")]
+    {
+        use crate::coordinator::transport::reactor::EpollReactor;
+        let mut reactor = EpollReactor::new(acceptor.into_listener())?;
+        drive(&mut reactor, &mut engine)?;
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        // portable fallback: fixed membership, channel readiness polling
+        use crate::coordinator::transport::reactor::ChannelReactor;
+        use crate::coordinator::transport::Channel;
+        let mut channels: Vec<Box<dyn Channel>> = acceptor
+            .accept_n(clients)?
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Channel>)
+            .collect();
+        let mut reactor = ChannelReactor::new(&mut channels);
+        drive(&mut reactor, &mut engine)?;
+    }
+    engine.take_result(0).expect("job 0 completed")
+}
+
 const WORKER_SPECS: &[OptSpec] = &[
     OptSpec { name: "connect", takes_value: true, help: "server address (default 127.0.0.1:7070)" },
-    OptSpec { name: "id", takes_value: true, help: "client id 0..E-1 (required; connect in order)" },
+    OptSpec { name: "id", takes_value: true, help: "client id 0..E-1 (required; any order)" },
     OptSpec { name: "clients", takes_value: true, help: "total workers E (default 4)" },
     OptSpec { name: "n", takes_value: true, help: "problem size — must match the server" },
     OptSpec { name: "rank", takes_value: true, help: "rank — must match the server" },
     OptSpec { name: "sparsity", takes_value: true, help: "corruption — must match the server" },
     OptSpec { name: "seed", takes_value: true, help: "shared seed — must match the server" },
+    OptSpec {
+        name: "compression",
+        takes_value: true,
+        help: "wire codec: none | f32 | int8 — must match the server",
+    },
     THREADS_OPT,
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
@@ -134,6 +208,7 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
     let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
     let seed = args.get_u64("seed")?.unwrap_or(42);
+    let compression = parse_compression(&args)?;
     if id >= clients {
         bail!("--id {id} out of range for {clients} clients");
     }
@@ -149,13 +224,14 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
     println!("worker {id} connected to {addr}, columns {a}..{b}");
     let cfg = ClientConfig {
         id,
+        job: 0,
         n_frac: (b - a) as f64 / n as f64,
         m_block,
         hyper: FactorHyper::default_for(spec.m, spec.n, rank),
         polish_sweeps: 3,
         truth: Some(truth),
         faults: FaultPlan::default(),
-        compression: crate::coordinator::Compression::None,
+        compression,
         dp_sigma: 0.0,
     };
     let rounds = run_client(&mut ch, cfg, &NativeKernel::new())?;

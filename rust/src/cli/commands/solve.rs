@@ -24,6 +24,21 @@ const SPECS: &[OptSpec] = &[
     OptSpec { name: "rounds", takes_value: true, help: "DCF-PCA: communication rounds T" },
     OptSpec { name: "k-local", takes_value: true, help: "DCF-PCA: local iterations K" },
     OptSpec { name: "iters", takes_value: true, help: "centralized solvers: iteration cap" },
+    OptSpec {
+        name: "participation",
+        takes_value: true,
+        help: "DCF-PCA: fraction of clients sampled per round (0,1]",
+    },
+    OptSpec {
+        name: "compression",
+        takes_value: true,
+        help: "DCF-PCA: wire codec for consensus factors: none | f32 | int8",
+    },
+    OptSpec {
+        name: "round-timeout",
+        takes_value: true,
+        help: "DCF-PCA: per-round straggler deadline in seconds",
+    },
     OptSpec { name: "pjrt", takes_value: false, help: "execute client updates via the AOT artifact" },
     OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory (default: artifacts)" },
     OptSpec { name: "csv", takes_value: true, help: "write the error curve to this CSV" },
@@ -76,6 +91,15 @@ pub fn run(argv: &[String]) -> Result<()> {
     }
     if let Some(i) = args.get_usize("iters")? {
         cfg.max_iters = i;
+    }
+    if let Some(q) = args.get_f64("participation")? {
+        cfg.dcf.participation = q;
+    }
+    if args.get("compression").is_some() {
+        cfg.dcf.compression = crate::cli::args::parse_compression(&args)?;
+    }
+    if let Some(t) = crate::cli::args::parse_round_timeout(&args)? {
+        cfg.dcf.round_timeout = t;
     }
     if args.flag("pjrt") {
         cfg.use_pjrt = true;

@@ -17,16 +17,24 @@ use super::kernel::LocalUpdateKernel;
 use super::protocol::{ToClient, ToServer};
 use super::transport::Channel;
 
-/// Failure-injection hooks for tests (client "crashes" silently).
+/// Failure/latency-injection hooks for tests (client "crashes" silently
+/// or straggles behind the round deadline).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FaultPlan {
     /// stop responding at the start of this round (None = healthy)
     pub crash_at_round: Option<u32>,
+    /// crash after the last round but before answering `Finish` — the
+    /// reveal-phase loss the coordinator must tolerate under SkipMissing
+    pub crash_at_finish: bool,
+    /// sleep this long before every round reply (straggler injection)
+    pub reply_delay: Option<std::time::Duration>,
 }
 
 /// Per-client configuration handed to the worker at spawn.
 pub struct ClientConfig {
     pub id: usize,
+    /// engine job this client belongs to (0 for single-job runs)
+    pub job: u32,
     /// this client's column block
     pub m_block: Mat,
     pub hyper: FactorHyper,
@@ -57,12 +65,18 @@ pub fn run_client(
     // one workspace for the whole worker lifetime: every round's local
     // epoch (and the final polish sweeps) runs with zero heap allocations
     let mut ws = Workspace::new(m, n_i, cfg.hyper.rank);
-    ch.send(&ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }.encode())
-        .context("send hello")?;
+    ch.send(
+        &ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }
+            .encode_with(cfg.job, Compression::None),
+    )
+    .context("send hello")?;
 
     let mut rounds_served = 0usize;
     loop {
-        let msg = ToClient::decode(&super::transport::recv(ch)?)?;
+        let (job, msg) = ToClient::decode_job(&super::transport::recv(ch)?)?;
+        if job != cfg.job {
+            bail!("client {}: message for job {job} on a job-{} connection", cfg.id, cfg.job);
+        }
         match msg {
             ToClient::Round { round, k_local, eta, u } => {
                 if let Some(crash) = cfg.faults.crash_at_round {
@@ -113,6 +127,10 @@ pub fn run_client(
                     }
                     None => f64::NAN,
                 };
+                if let Some(delay) = cfg.faults.reply_delay {
+                    // injected straggle: the reply exists but arrives late
+                    std::thread::sleep(delay);
+                }
                 ch.send(
                     &ToServer::Update {
                         client: cfg.id as u32,
@@ -123,12 +141,16 @@ pub fn run_client(
                         err_num,
                         local_secs,
                     }
-                    .encode_with(cfg.compression),
+                    .encode_with(cfg.job, cfg.compression),
                 )
                 .context("send update")?;
                 rounds_served += 1;
             }
             ToClient::Finish { reveal, final_u } => {
+                if cfg.faults.crash_at_finish {
+                    // lost between the last round and the reveal phase
+                    return Ok(rounds_served);
+                }
                 // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional
                 // debias polish of the local (V_i, S_i) with U fixed);
                 // the polish panels share the process-wide pool
@@ -148,7 +170,8 @@ pub fn run_client(
                 } else {
                     ToServer::Withhold { client: cfg.id as u32 }
                 };
-                ch.send(&reply.encode()).context("send final")?;
+                ch.send(&reply.encode_with(cfg.job, Compression::None))
+                    .context("send final")?;
             }
             ToClient::Shutdown => return Ok(rounds_served),
         }
@@ -178,6 +201,7 @@ mod tests {
         let p = ProblemSpec::square(20, 2, 0.05).generate(1);
         let cfg = ClientConfig {
             id: 0,
+            job: 0,
             m_block: p.observed.clone(),
             hyper: FactorHyper::default_for(20, 20, 2),
             n_frac: 1.0,
@@ -226,6 +250,7 @@ mod tests {
         let p = ProblemSpec::square(15, 2, 0.05).generate(2);
         let cfg = ClientConfig {
             id: 5,
+            job: 0,
             m_block: p.observed.clone(),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,
@@ -251,12 +276,13 @@ mod tests {
         let p = ProblemSpec::square(15, 2, 0.05).generate(3);
         let cfg = ClientConfig {
             id: 1,
+            job: 0,
             m_block: p.observed.clone(),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,
             polish_sweeps: 0,
             truth: None,
-            faults: FaultPlan { crash_at_round: Some(1) },
+            faults: FaultPlan { crash_at_round: Some(1), ..Default::default() },
             compression: Compression::None,
             dp_sigma: 0.0,
         };
@@ -278,6 +304,7 @@ mod tests {
         let p = ProblemSpec::square(15, 2, 0.05).generate(4);
         let cfg = ClientConfig {
             id: 0,
+            job: 0,
             m_block: p.observed.clone(),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,

@@ -1,0 +1,829 @@
+//! Sans-I/O round engine: the entire server protocol (handshake → round
+//! broadcast/collect/aggregate → finish/reveal) as a pure state machine.
+//!
+//! The engine performs **no I/O and reads no clock**. Its only inputs
+//! are [`RoundEngine::handle_message`] / [`RoundEngine::on_disconnect`]
+//! (what arrived) and [`RoundEngine::poll_deadline`] (what time it is,
+//! as told by the caller); its only outputs are [`Action`]s the caller
+//! executes. Any event loop that can deliver bytes and a monotonic
+//! `Duration` can drive it: the in-proc channel poller and the epoll TCP
+//! reactor in [`super::transport::reactor`] are the two shipped drivers,
+//! and the unit tests drive a full federation from a plain `Vec` of
+//! in-memory events.
+//!
+//! Design points (vs the old sequentially blocking loop):
+//!
+//! - **Arrival-order aggregation.** Updates are ingested the moment they
+//!   arrive, whichever client sent them; a round closes when every
+//!   selected client replied *or* the per-round deadline passes
+//!   (straggler cut). Worst-case round latency is the deadline — the
+//!   max, not the sum, of client delays.
+//! - **Deterministic reduction.** Updates land in per-client *slots* and
+//!   are reduced in client-id order at round close, so the aggregate —
+//!   and every f64 telemetry sum — is bitwise independent of arrival
+//!   order (same discipline as the thread-pool's slot-ordered panel
+//!   reductions).
+//! - **Elastic membership.** A `Hello` arriving mid-run registers the
+//!   client and activates it at the next round boundary; disconnects
+//!   fold into [`FaultPolicy`]. A straggler that misses one deadline is
+//!   *not* evicted — it simply misses that round (its late update is
+//!   dropped as stale) and keeps participating.
+//! - **Job multiplexing.** Every protocol message carries a job id in
+//!   its envelope; one engine (hence one reactor, one port) can run any
+//!   number of independent solves concurrently.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::mem;
+use std::time::Duration;
+
+use crate::anyhow;
+use crate::error::Result;
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+use super::aggregate::{aggregate, consensus_dispersion};
+use super::metrics::{CommStats, RoundRecord};
+use super::protocol::{ToClient, ToServer};
+use super::server::{FaultPolicy, ServerConfig, ServerOutcome};
+
+/// Reactor-assigned connection identity (not a client id — clients name
+/// themselves in `Hello`, which is what binds an endpoint to a member).
+pub type EndpointId = usize;
+
+/// Job identity from the protocol envelope.
+pub type JobId = u32;
+
+/// What the engine wants its driver to do.
+#[derive(Debug)]
+pub enum Action {
+    /// Write one protocol message to an endpoint.
+    Send { ep: EndpointId, bytes: Vec<u8> },
+    /// The engine is done with this endpoint; the driver may close it
+    /// (after flushing pending writes).
+    Close { ep: EndpointId },
+    /// A job reached a terminal state — collect it with
+    /// [`RoundEngine::take_result`].
+    JobDone { job: JobId },
+}
+
+#[derive(Clone, Debug)]
+struct Member {
+    ep: EndpointId,
+    cols: usize,
+    alive: bool,
+    /// first round this member participates in (0 for founding members,
+    /// `current + 1` for elastic joiners)
+    active_from: usize,
+}
+
+/// Telemetry scalars riding along with an update.
+struct UpdateScalars {
+    grad_norm: f64,
+    lipschitz: f64,
+    err_num: f64,
+    local_secs: f64,
+}
+
+/// One client's round contribution, parked in its slot until the round
+/// closes and everything reduces in id order.
+struct UpdateSlot {
+    u: Mat,
+    cols: usize,
+    scalars: UpdateScalars,
+}
+
+struct RoundAccum {
+    started: Duration,
+    deadline: Duration,
+    eta: f64,
+    /// selected clients that have not replied yet
+    pending: BTreeSet<usize>,
+    /// arrived updates, keyed (hence ordered) by client id
+    slots: BTreeMap<usize, UpdateSlot>,
+    bytes_down0: u64,
+    bytes_up0: u64,
+}
+
+enum Phase {
+    /// collecting `Hello`s until `expected` members are present
+    Handshake { deadline: Option<Duration> },
+    Collecting(RoundAccum),
+    /// `Finish` broadcast sent; waiting on Reveal/Withhold replies.
+    /// `pending` maps client id → whether reveal was granted.
+    Finishing { deadline: Duration, pending: BTreeMap<usize, bool> },
+    Done,
+}
+
+struct Job {
+    id: JobId,
+    cfg: ServerConfig,
+    expected: usize,
+    members: BTreeMap<usize, Member>,
+    u: Mat,
+    sample_rng: Pcg64,
+    lipschitz_max: f64,
+    /// index of the round currently collecting (or about to start)
+    round: usize,
+    rounds: Vec<RoundRecord>,
+    revealed: Vec<(usize, Mat, Mat)>,
+    withheld: Vec<usize>,
+    bytes_down: u64,
+    bytes_up: u64,
+    result: Option<Result<ServerOutcome>>,
+    phase: Phase,
+}
+
+impl Job {
+    fn new(id: JobId, cfg: ServerConfig, expected: usize) -> Self {
+        // same init sequence as the historical server loop, so a given
+        // seed reproduces the exact same U⁰ and participation draws
+        let mut rng = Pcg64::new(cfg.seed);
+        let u = Mat::gaussian(cfg.m, cfg.rank, &mut rng);
+        let sample_rng = rng.fork(0x5A);
+        Job {
+            id,
+            cfg,
+            expected,
+            members: BTreeMap::new(),
+            u,
+            sample_rng,
+            lipschitz_max: 1.0,
+            round: 0,
+            rounds: Vec::new(),
+            revealed: Vec::new(),
+            withheld: Vec::new(),
+            bytes_down: 0,
+            bytes_up: 0,
+            result: None,
+            phase: Phase::Handshake { deadline: None },
+        }
+    }
+
+    fn done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    fn fail(&mut self, reason: String, actions: &mut Vec<Action>) {
+        for m in self.members.values().filter(|m| m.alive) {
+            actions.push(Action::Close { ep: m.ep });
+        }
+        self.result = Some(Err(anyhow!("job {}: {reason}", self.id)));
+        self.phase = Phase::Done;
+        actions.push(Action::JobDone { job: self.id });
+    }
+
+    /// Queue one message to a member, metering the downstream bytes.
+    fn send(&mut self, ep: EndpointId, bytes: Vec<u8>, actions: &mut Vec<Action>) {
+        self.bytes_down += bytes.len() as u64;
+        actions.push(Action::Send { ep, bytes });
+    }
+
+    fn start_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        let t = self.round;
+        if t >= self.cfg.rounds {
+            self.start_finish(now, actions);
+            return;
+        }
+        let eta = self.cfg.schedule.eta(t, self.lipschitz_max);
+        let active: Vec<usize> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.alive && m.active_from <= t)
+            .map(|(&id, _)| id)
+            .collect();
+        if active.is_empty() {
+            self.fail(format!("round {t}: no live clients"), actions);
+            return;
+        }
+        let selected: Vec<usize> = if self.cfg.participation >= 1.0 {
+            active
+        } else {
+            let want = ((self.cfg.participation * active.len() as f64).ceil() as usize)
+                .clamp(1, active.len());
+            let picks =
+                crate::rng::sample_distinct_indices(&mut self.sample_rng, active.len(), want);
+            let mut sel: Vec<usize> = picks.into_iter().map(|p| active[p]).collect();
+            sel.sort_unstable();
+            sel
+        };
+
+        let bytes_down0 = self.bytes_down;
+        let bytes_up0 = self.bytes_up;
+        let msg = ToClient::Round {
+            round: t as u32,
+            k_local: self.cfg.k_local as u32,
+            eta,
+            u: self.u.clone(),
+        };
+        let encoded = msg.encode_with(self.id, self.cfg.compression);
+        let mut pending = BTreeSet::new();
+        for &c in &selected {
+            let ep = self.members[&c].ep;
+            self.send(ep, encoded.clone(), actions);
+            pending.insert(c);
+        }
+        self.phase = Phase::Collecting(RoundAccum {
+            started: now,
+            deadline: now + self.cfg.round_timeout,
+            eta,
+            pending,
+            slots: BTreeMap::new(),
+            bytes_down0,
+            bytes_up0,
+        });
+    }
+
+    /// Reduce the round's slots in client-id order and advance.
+    fn close_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        let t = self.round;
+        let acc = match mem::replace(&mut self.phase, Phase::Done) {
+            Phase::Collecting(acc) => acc,
+            other => {
+                self.phase = other;
+                return;
+            }
+        };
+        if acc.slots.is_empty() {
+            self.fail(format!("round {t}: all clients missing"), actions);
+            return;
+        }
+
+        // slot-ordered reduction: BTreeMap iteration is id order, so all
+        // f64 folds below are independent of arrival order
+        let mut updates = Vec::with_capacity(acc.slots.len());
+        let mut weights = Vec::with_capacity(acc.slots.len());
+        let mut grad_sum = 0.0;
+        let mut err_num_sum = 0.0;
+        let mut err_all_finite = true;
+        let mut max_client_secs: f64 = 0.0;
+        let mut sum_client_secs = 0.0;
+        let mut round_lip: f64 = 0.0;
+        for slot in acc.slots.into_values() {
+            grad_sum += slot.scalars.grad_norm;
+            round_lip = round_lip.max(slot.scalars.lipschitz);
+            if slot.scalars.err_num.is_finite() {
+                err_num_sum += slot.scalars.err_num;
+            } else {
+                err_all_finite = false;
+            }
+            max_client_secs = max_client_secs.max(slot.scalars.local_secs);
+            sum_client_secs += slot.scalars.local_secs;
+            weights.push(slot.cols);
+            updates.push(slot.u);
+        }
+        self.lipschitz_max = round_lip.max(1e-12);
+
+        let u_next = aggregate(self.cfg.aggregation, &updates, &weights);
+        let dispersion = consensus_dispersion(&updates, &u_next);
+        self.u = u_next;
+
+        let err = match (self.cfg.err_denominator, err_all_finite) {
+            (Some(den), true) => Some(err_num_sum / den),
+            _ => None,
+        };
+        self.rounds.push(RoundRecord {
+            round: t,
+            err,
+            mean_grad_norm: grad_sum / updates.len() as f64,
+            dispersion,
+            eta: acc.eta,
+            round_secs: now.saturating_sub(acc.started).as_secs_f64(),
+            max_client_secs,
+            sum_client_secs,
+            bytes_down: self.bytes_down - acc.bytes_down0,
+            bytes_up: self.bytes_up - acc.bytes_up0,
+            participants: updates.len(),
+        });
+
+        if let (Some(stop), Some(e_now)) = (self.cfg.err_stop, err) {
+            if e_now < stop {
+                self.start_finish(now, actions);
+                return;
+            }
+        }
+        self.round += 1;
+        self.start_round(now, actions);
+    }
+
+    fn start_finish(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        let mut pending = BTreeMap::new();
+        let alive: Vec<(usize, EndpointId)> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.alive)
+            .map(|(&id, m)| (id, m.ep))
+            .collect();
+        for (id, ep) in alive {
+            let reveal = self.cfg.privacy.is_public(id);
+            let msg = ToClient::Finish { reveal, final_u: self.u.clone() };
+            let encoded = msg.encode_with(self.id, super::compress::Compression::None);
+            self.send(ep, encoded, actions);
+            pending.insert(id, reveal);
+        }
+        for (&id, m) in &self.members {
+            if !m.alive {
+                self.withheld.push(id);
+            }
+        }
+        if pending.is_empty() {
+            self.finish(actions);
+        } else {
+            self.phase = Phase::Finishing { deadline: now + self.cfg.round_timeout, pending };
+        }
+    }
+
+    fn finish(&mut self, actions: &mut Vec<Action>) {
+        // deterministic outcome ordering regardless of reply arrival
+        self.revealed.sort_by_key(|(id, _, _)| *id);
+        self.withheld.sort_unstable();
+        self.withheld.dedup();
+        let max_id = self.members.keys().max().copied().unwrap_or(0);
+        let mut client_cols = vec![0usize; max_id + 1];
+        for (&id, m) in &self.members {
+            client_cols[id] = m.cols;
+        }
+        let rounds = mem::take(&mut self.rounds);
+        let comm = CommStats {
+            total_down: self.bytes_down,
+            total_up: self.bytes_up,
+            rounds: rounds.len(),
+        };
+        self.result = Some(Ok(ServerOutcome {
+            u: self.u.clone(),
+            rounds,
+            revealed: mem::take(&mut self.revealed),
+            withheld: mem::take(&mut self.withheld),
+            comm,
+            client_cols,
+        }));
+        self.phase = Phase::Done;
+        actions.push(Action::JobDone { job: self.id });
+    }
+
+    fn on_hello(
+        &mut self,
+        ep: EndpointId,
+        client: usize,
+        cols: usize,
+        now: Duration,
+        actions: &mut Vec<Action>,
+    ) -> bool {
+        let active_from = match &self.phase {
+            Phase::Handshake { .. } => 0,
+            // elastic join: becomes eligible at the next round boundary
+            Phase::Collecting(_) => self.round + 1,
+            Phase::Finishing { .. } | Phase::Done => {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: client {client} arrived after training finished",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
+                return false;
+            }
+        };
+        if let Some(m) = self.members.get_mut(&client) {
+            if m.alive || self.cfg.fault_policy == FaultPolicy::Strict {
+                // a live duplicate is a protocol violation: fatal for a
+                // strict simulation, shed (endpoint only) otherwise
+                if self.cfg.fault_policy == FaultPolicy::Strict {
+                    self.fail(format!("duplicate Hello for client {client}"), actions);
+                } else {
+                    crate::log_warn!(
+                        "engine",
+                        "job {}: refusing duplicate Hello for client {client}",
+                        self.id
+                    );
+                    actions.push(Action::Close { ep });
+                }
+                return false;
+            }
+            // SkipMissing re-join: a departed member comes back on a
+            // fresh connection and re-enters at the next round boundary
+            crate::log_warn!(
+                "engine",
+                "job {}: client {client} rejoined, active from round {active_from}",
+                self.id
+            );
+            m.ep = ep;
+            m.cols = cols;
+            m.alive = true;
+            m.active_from = active_from;
+            return true;
+        }
+        if active_from > 0 {
+            crate::log_warn!(
+                "engine",
+                "job {}: client {client} joined late, active from round {active_from}",
+                self.id
+            );
+        }
+        self.members.insert(client, Member { ep, cols, alive: true, active_from });
+        if matches!(self.phase, Phase::Handshake { .. }) && self.members.len() >= self.expected {
+            self.start_round(now, actions);
+        }
+        true
+    }
+
+    fn on_update(
+        &mut self,
+        client: usize,
+        round: usize,
+        u: Mat,
+        scalars: UpdateScalars,
+        now: Duration,
+        actions: &mut Vec<Action>,
+    ) {
+        // if the deadline already passed, the cut wins the race against
+        // this reply: fire it first so the update is judged (and dropped
+        // as stale) against the advanced phase — keeps the straggler cut
+        // deterministic even when the event loop stalls past a deadline
+        if let Phase::Collecting(acc) = &self.phase {
+            if now >= acc.deadline {
+                self.poll_deadline(now, actions);
+            }
+        }
+        let current = self.round;
+        let acc = match &mut self.phase {
+            Phase::Collecting(acc) => acc,
+            _ => {
+                // a straggler's cut-off reply arriving after the loop
+                // moved on (e.g. during the finish phase) — stale
+                crate::log_warn!(
+                    "engine",
+                    "job {}: dropping out-of-phase update from client {client}",
+                    self.id
+                );
+                return;
+            }
+        };
+        if round < current {
+            crate::log_warn!(
+                "engine",
+                "job {}: dropping stale round-{round} update from client {client} (now {current})",
+                self.id
+            );
+            return;
+        }
+        if round > current {
+            self.fail(
+                format!("client {client} sent update for future round {round} (now {current})"),
+                actions,
+            );
+            return;
+        }
+        if u.shape() != (self.cfg.m, self.cfg.rank) {
+            self.fail(
+                format!("round {current}: client {client} sent U of shape {:?}", u.shape()),
+                actions,
+            );
+            return;
+        }
+        if !acc.pending.remove(&client) {
+            match self.cfg.fault_policy {
+                FaultPolicy::Strict => self.fail(
+                    format!("round {current}: unexpected update from client {client}"),
+                    actions,
+                ),
+                FaultPolicy::SkipMissing => crate::log_warn!(
+                    "engine",
+                    "job {}: dropping unselected update from client {client}",
+                    self.id
+                ),
+            }
+            return;
+        }
+        let cols = self.members[&client].cols;
+        acc.slots.insert(client, UpdateSlot { u, cols, scalars });
+        if acc.pending.is_empty() {
+            self.close_round(now, actions);
+        }
+    }
+
+    fn on_final(&mut self, client: usize, reply: ToServer, actions: &mut Vec<Action>) {
+        let granted = match &mut self.phase {
+            Phase::Finishing { pending, .. } => match pending.remove(&client) {
+                Some(g) => g,
+                None => {
+                    crate::log_warn!(
+                        "engine",
+                        "job {}: duplicate finish reply from client {client}",
+                        self.id
+                    );
+                    return;
+                }
+            },
+            _ => {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: out-of-phase finish reply from client {client}",
+                    self.id
+                );
+                return;
+            }
+        };
+        match reply {
+            ToServer::Reveal { l, s, .. } => {
+                if !granted {
+                    self.fail(
+                        format!("client {client} revealed despite privacy policy"),
+                        actions,
+                    );
+                    return;
+                }
+                self.revealed.push((client, l, s));
+            }
+            ToServer::Withhold { .. } => self.withheld.push(client),
+            _ => unreachable!("on_final only receives Reveal/Withhold"),
+        }
+        let ep = self.members[&client].ep;
+        let shutdown = ToClient::Shutdown.encode_with(self.id, super::compress::Compression::None);
+        self.send(ep, shutdown, actions);
+        actions.push(Action::Close { ep });
+        if matches!(&self.phase, Phase::Finishing { pending, .. } if pending.is_empty()) {
+            self.finish(actions);
+        }
+    }
+
+    fn on_disconnect(&mut self, client: usize, now: Duration, actions: &mut Vec<Action>) {
+        if self.done() {
+            return;
+        }
+        let Some(m) = self.members.get_mut(&client) else { return };
+        if !m.alive {
+            return;
+        }
+        m.alive = false;
+        if self.cfg.fault_policy == FaultPolicy::Strict {
+            self.fail(format!("client {client} disconnected"), actions);
+            return;
+        }
+        crate::log_warn!("engine", "job {}: client {client} departed", self.id);
+        match &mut self.phase {
+            Phase::Handshake { .. } => {
+                self.members.remove(&client);
+            }
+            Phase::Collecting(acc) => {
+                acc.pending.remove(&client);
+                if acc.pending.is_empty() {
+                    self.close_round(now, actions);
+                }
+            }
+            Phase::Finishing { pending, .. } => {
+                if pending.remove(&client).is_some() {
+                    self.withheld.push(client);
+                }
+                if matches!(&self.phase, Phase::Finishing { pending, .. } if pending.is_empty()) {
+                    self.finish(actions);
+                }
+            }
+            Phase::Done => {}
+        }
+    }
+
+    fn poll_deadline(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        match &mut self.phase {
+            Phase::Handshake { deadline } => {
+                let d = *deadline.get_or_insert(now + self.cfg.round_timeout);
+                if now < d {
+                    return;
+                }
+                let have = self.members.len();
+                match self.cfg.fault_policy {
+                    FaultPolicy::SkipMissing if have > 0 => {
+                        crate::log_warn!(
+                            "engine",
+                            "job {}: handshake deadline with {have}/{} clients — starting anyway",
+                            self.id,
+                            self.expected
+                        );
+                        self.start_round(now, actions);
+                    }
+                    _ => self.fail(
+                        format!("handshake timeout: {have}/{} clients", self.expected),
+                        actions,
+                    ),
+                }
+            }
+            Phase::Collecting(acc) => {
+                if now < acc.deadline {
+                    return;
+                }
+                let stragglers: Vec<usize> = acc.pending.iter().copied().collect();
+                match self.cfg.fault_policy {
+                    FaultPolicy::Strict => {
+                        let t = self.round;
+                        self.fail(
+                            format!("round {t}: no update from client {}", stragglers[0]),
+                            actions,
+                        );
+                    }
+                    FaultPolicy::SkipMissing => {
+                        // straggler cut: close with whoever made it; the
+                        // slow clients stay members and rejoin next round
+                        crate::log_warn!(
+                            "engine",
+                            "job {}: round {} deadline — cutting {stragglers:?}",
+                            self.id,
+                            self.round
+                        );
+                        acc.pending.clear();
+                        self.close_round(now, actions);
+                    }
+                }
+            }
+            Phase::Finishing { deadline, pending } => {
+                if now < *deadline {
+                    return;
+                }
+                let missing: Vec<usize> = pending.keys().copied().collect();
+                match self.cfg.fault_policy {
+                    FaultPolicy::Strict => self.fail(
+                        format!("finish: no reveal from client {}", missing[0]),
+                        actions,
+                    ),
+                    FaultPolicy::SkipMissing => {
+                        // a client lost between the last round and the
+                        // reveal is withheld, never fatal
+                        pending.clear();
+                        for id in missing {
+                            self.withheld.push(id);
+                            let ep = self.members[&id].ep;
+                            let bye = ToClient::Shutdown
+                                .encode_with(self.id, super::compress::Compression::None);
+                            self.send(ep, bye, actions);
+                            actions.push(Action::Close { ep });
+                        }
+                        self.finish(actions);
+                    }
+                }
+            }
+            Phase::Done => {}
+        }
+    }
+
+    fn next_deadline(&self) -> Option<Duration> {
+        match &self.phase {
+            Phase::Handshake { deadline } => *deadline,
+            Phase::Collecting(acc) => Some(acc.deadline),
+            Phase::Finishing { deadline, .. } => Some(*deadline),
+            Phase::Done => None,
+        }
+    }
+}
+
+/// The transport-agnostic coordinator state machine. See the module docs.
+#[derive(Default)]
+pub struct RoundEngine {
+    jobs: BTreeMap<JobId, Job>,
+    /// endpoint → (job, client id), established by `Hello`
+    bindings: BTreeMap<EndpointId, (JobId, usize)>,
+}
+
+impl RoundEngine {
+    pub fn new() -> Self {
+        RoundEngine::default()
+    }
+
+    /// Register a solve job. `expected_clients` founding members must
+    /// `Hello` before round 0 starts; later Hellos join elastically.
+    pub fn add_job(&mut self, id: JobId, cfg: ServerConfig, expected_clients: usize) {
+        assert!(expected_clients > 0, "a job needs at least one client");
+        assert!(
+            self.jobs.insert(id, Job::new(id, cfg, expected_clients)).is_none(),
+            "job {id} already registered"
+        );
+    }
+
+    /// A new endpoint appeared. Nothing happens until it says `Hello`.
+    pub fn on_connect(&mut self, _ep: EndpointId) {}
+
+    /// An endpoint died (read error, EOF, failed write).
+    pub fn on_disconnect(&mut self, ep: EndpointId, now: Duration) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if let Some((job_id, client)) = self.bindings.remove(&ep) {
+            if let Some(job) = self.jobs.get_mut(&job_id) {
+                job.on_disconnect(client, now, &mut actions);
+            }
+        }
+        actions
+    }
+
+    /// Feed one received message. `now` is the caller's monotonic clock.
+    pub fn handle_message(&mut self, ep: EndpointId, bytes: &[u8], now: Duration) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let (job_id, msg) = match ToServer::decode_job(bytes) {
+            Ok(v) => v,
+            Err(err) => {
+                // a corrupt stream makes the endpoint unusable: treat it
+                // as a departure and let FaultPolicy adjudicate (Strict
+                // still fails the job, SkipMissing sheds the member)
+                crate::log_warn!("engine", "unreadable message from endpoint {ep}: {err}");
+                actions.push(Action::Close { ep });
+                actions.extend(self.on_disconnect(ep, now));
+                return actions;
+            }
+        };
+
+        if let ToServer::Hello { client, cols } = msg {
+            let client = client as usize;
+            if self.bindings.contains_key(&ep) {
+                // a bound endpoint re-introducing itself is as broken as
+                // a corrupt stream — same departure treatment
+                crate::log_warn!("engine", "endpoint {ep} sent a second Hello");
+                actions.push(Action::Close { ep });
+                actions.extend(self.on_disconnect(ep, now));
+                return actions;
+            }
+            let Some(job) = self.jobs.get_mut(&job_id) else {
+                crate::log_warn!("engine", "Hello for unknown job {job_id} from endpoint {ep}");
+                actions.push(Action::Close { ep });
+                return actions;
+            };
+            job.bytes_up += bytes.len() as u64;
+            if job.on_hello(ep, client, cols as usize, now, &mut actions) {
+                self.bindings.insert(ep, (job_id, client));
+            }
+            return actions;
+        }
+
+        let Some(&(bound_job, bound_client)) = self.bindings.get(&ep) else {
+            crate::log_warn!("engine", "message from unbound endpoint {ep} dropped");
+            actions.push(Action::Close { ep });
+            return actions;
+        };
+        let Some(job) = self.jobs.get_mut(&bound_job) else { return actions };
+        if job.done() {
+            return actions;
+        }
+        job.bytes_up += bytes.len() as u64;
+        if bound_job != job_id {
+            job.fail(
+                format!("endpoint {ep} switched jobs mid-stream ({bound_job} → {job_id})"),
+                &mut actions,
+            );
+            return actions;
+        }
+
+        match msg {
+            ToServer::Hello { .. } => unreachable!("handled above"),
+            ToServer::Update { client, round, u, grad_norm, lipschitz, err_num, local_secs } => {
+                let client = client as usize;
+                if client != bound_client {
+                    job.fail(
+                        format!("endpoint {ep} bound to client {bound_client} spoke as {client}"),
+                        &mut actions,
+                    );
+                    return actions;
+                }
+                let scalars = UpdateScalars { grad_norm, lipschitz, err_num, local_secs };
+                job.on_update(client, round as usize, u, scalars, now, &mut actions);
+            }
+            reply @ (ToServer::Reveal { .. } | ToServer::Withhold { .. }) => {
+                let client = match &reply {
+                    ToServer::Reveal { client, .. } | ToServer::Withhold { client } => {
+                        *client as usize
+                    }
+                    _ => unreachable!(),
+                };
+                if client != bound_client {
+                    job.fail(
+                        format!("endpoint {ep} bound to client {bound_client} spoke as {client}"),
+                        &mut actions,
+                    );
+                    return actions;
+                }
+                job.on_final(client, reply, &mut actions);
+            }
+        }
+        actions
+    }
+
+    /// Advance time. Fires handshake/round/finish deadlines; also lazily
+    /// arms the handshake deadline on first call.
+    pub fn poll_deadline(&mut self, now: Duration) -> Vec<Action> {
+        let mut actions = Vec::new();
+        for job in self.jobs.values_mut() {
+            job.poll_deadline(now, &mut actions);
+        }
+        actions
+    }
+
+    /// Earliest pending deadline across jobs (drivers use this as their
+    /// poll timeout). `None` until the first `poll_deadline` call arms
+    /// the handshake windows.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        self.jobs.values().filter_map(Job::next_deadline).min()
+    }
+
+    /// True once every registered job reached a terminal state.
+    pub fn all_done(&self) -> bool {
+        self.jobs.values().all(Job::done)
+    }
+
+    /// Collect a finished job's outcome (once).
+    pub fn take_result(&mut self, job: JobId) -> Option<Result<ServerOutcome>> {
+        self.jobs.get_mut(&job).and_then(|j| j.result.take())
+    }
+}

@@ -1,10 +1,14 @@
 //! L3 — the paper's system contribution: the DCF-PCA federated
 //! coordinator (Algorithm 1).
 //!
-//! - [`server`]: outer loop — broadcast U, gather U_i, FedAvg (Eq. 9)
+//! - [`engine`]: the sans-I/O round state machine — handshake, rounds
+//!   with arrival-order aggregation and straggler deadlines, elastic
+//!   membership, reveal, multiplexed over job ids
+//! - [`server`]: config/outcome types + the single-job `run_server`
 //! - [`client`]: worker owning (M_i, V_i, S_i), runs K local iterations
 //! - [`kernel`]: compute backend (native rust or the PJRT artifact)
-//! - [`transport`]: byte-counted channels (in-proc mpsc, TCP)
+//! - [`transport`]: byte-counted channels (in-proc mpsc, TCP) and the
+//!   reactors (channel poller, Linux epoll) that drive the engine
 //! - [`protocol`]: wire messages — structurally unable to leak M_i
 //! - [`aggregate`], [`privacy`], [`metrics`]: Eq. 9 variants, §2.2
 //!   privacy sets, round telemetry
@@ -14,6 +18,7 @@ pub mod aggregate;
 pub mod client;
 pub mod compress;
 pub mod driver;
+pub mod engine;
 pub mod kernel;
 pub mod metrics;
 pub mod privacy;
@@ -24,6 +29,7 @@ pub mod transport;
 pub use aggregate::Aggregation;
 pub use compress::Compression;
 pub use driver::{run_dcf_pca, run_dcf_pca_raw, DcfPcaConfig, DcfPcaResult, KernelSpec, PartitionSpec};
+pub use engine::RoundEngine;
 pub use kernel::{LocalUpdateKernel, NativeKernel};
 pub use privacy::PrivacySpec;
 pub use server::{FaultPolicy, ServerConfig};

@@ -6,6 +6,12 @@
 //! except the explicit opt-in `Reveal` reply for public clients at the
 //! very end. Privacy (§2.2) is therefore structural, and the byte
 //! counters verify Eq. 28 exactly.
+//!
+//! Every message starts with a 5-byte versioned envelope: `[version u8]
+//! [job u32]`. The job id lets one coordinator process multiplex several
+//! concurrent solves over a single reactor — the engine routes each
+//! message to the job named in its envelope. Single-job setups (the
+//! driver, the CLI) use job 0 throughout.
 
 use crate::bail;
 use crate::error::Result;
@@ -13,6 +19,26 @@ use crate::linalg::Mat;
 
 use super::compress::{put_mat_compressed, read_mat_compressed, Compression};
 use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
+
+/// Wire protocol version (bumped when the envelope or a message layout
+/// changes incompatibly). Version 2 introduced the job-id envelope.
+pub const WIRE_VERSION: u8 = 2;
+
+/// Size of the `[version u8][job u32]` envelope on every message.
+pub const ENVELOPE_BYTES: usize = 5;
+
+fn put_envelope(buf: &mut Vec<u8>, job: u32) {
+    buf.push(WIRE_VERSION);
+    put_u32(buf, job);
+}
+
+fn read_envelope(r: &mut Reader<'_>) -> Result<u32> {
+    let version = r.u8()?;
+    if version != WIRE_VERSION {
+        bail!("unsupported wire version {version} (expected {WIRE_VERSION})");
+    }
+    r.u32()
+}
 
 /// Downstream: server → client.
 #[derive(Clone, Debug, PartialEq)]
@@ -61,16 +87,17 @@ const TAG_REVEAL: u8 = 18;
 const TAG_WITHHOLD: u8 = 19;
 
 impl ToClient {
-    /// Encode with the default (lossless) codec.
+    /// Encode for job 0 with the default (lossless) codec.
     pub fn encode(&self) -> Vec<u8> {
-        self.encode_with(Compression::None)
+        self.encode_with(0, Compression::None)
     }
 
-    /// Encode; `codec` applies to the consensus factor in `Round` (the
-    /// per-round payload — Eq. 28). `Finish.final_u` stays lossless: it
-    /// is sent once and defines the revealed L_i.
-    pub fn encode_with(&self, codec: Compression) -> Vec<u8> {
+    /// Encode for `job`; `codec` applies to the consensus factor in
+    /// `Round` (the per-round payload — Eq. 28). `Finish.final_u` stays
+    /// lossless: it is sent once and defines the revealed L_i.
+    pub fn encode_with(&self, job: u32, codec: Compression) -> Vec<u8> {
         let mut buf = Vec::new();
+        put_envelope(&mut buf, job);
         match self {
             ToClient::Round { round, k_local, eta, u } => {
                 buf.push(TAG_ROUND);
@@ -89,8 +116,15 @@ impl ToClient {
         buf
     }
 
+    /// Decode, discarding the job id (single-job clients and tests).
     pub fn decode(bytes: &[u8]) -> Result<ToClient> {
+        Ok(Self::decode_job(bytes)?.1)
+    }
+
+    /// Decode the envelope and message: `(job, msg)`.
+    pub fn decode_job(bytes: &[u8]) -> Result<(u32, ToClient)> {
         let mut r = Reader::new(bytes);
+        let job = read_envelope(&mut r)?;
         let msg = match r.u8()? {
             TAG_ROUND => ToClient::Round {
                 round: r.u32()?,
@@ -103,20 +137,21 @@ impl ToClient {
             t => bail!("unknown ToClient tag {t}"),
         };
         r.expect_end()?;
-        Ok(msg)
+        Ok((job, msg))
     }
 }
 
 impl ToServer {
-    /// Encode with the default (lossless) codec.
+    /// Encode for job 0 with the default (lossless) codec.
     pub fn encode(&self) -> Vec<u8> {
-        self.encode_with(Compression::None)
+        self.encode_with(0, Compression::None)
     }
 
-    /// Encode; `codec` applies to the consensus factor in `Update`.
-    /// `Reveal` blocks stay lossless (they ARE the output).
-    pub fn encode_with(&self, codec: Compression) -> Vec<u8> {
+    /// Encode for `job`; `codec` applies to the consensus factor in
+    /// `Update`. `Reveal` blocks stay lossless (they ARE the output).
+    pub fn encode_with(&self, job: u32, codec: Compression) -> Vec<u8> {
         let mut buf = Vec::new();
+        put_envelope(&mut buf, job);
         match self {
             ToServer::Hello { client, cols } => {
                 buf.push(TAG_HELLO);
@@ -147,8 +182,15 @@ impl ToServer {
         buf
     }
 
+    /// Decode, discarding the job id (single-job tests).
     pub fn decode(bytes: &[u8]) -> Result<ToServer> {
+        Ok(Self::decode_job(bytes)?.1)
+    }
+
+    /// Decode the envelope and message: `(job, msg)`.
+    pub fn decode_job(bytes: &[u8]) -> Result<(u32, ToServer)> {
         let mut r = Reader::new(bytes);
+        let job = read_envelope(&mut r)?;
         let msg = match r.u8()? {
             TAG_HELLO => ToServer::Hello { client: r.u32()?, cols: r.u64()? },
             TAG_UPDATE => ToServer::Update {
@@ -165,7 +207,7 @@ impl ToServer {
             t => bail!("unknown ToServer tag {t}"),
         };
         r.expect_end()?;
-        Ok(msg)
+        Ok((job, msg))
     }
 }
 
@@ -181,7 +223,7 @@ pub fn round_wire_size(m: usize, r: usize) -> usize {
 }
 
 pub fn round_wire_size_with(m: usize, r: usize, codec: Compression) -> usize {
-    1 + 4 + 4 + 8 + compressed_mat_size(m, r, codec)
+    ENVELOPE_BYTES + 1 + 4 + 4 + 8 + compressed_mat_size(m, r, codec)
 }
 
 /// Wire size of a client update — the upstream half of Eq. 28.
@@ -190,7 +232,7 @@ pub fn update_wire_size(m: usize, r: usize) -> usize {
 }
 
 pub fn update_wire_size_with(m: usize, r: usize, codec: Compression) -> usize {
-    1 + 4 + 4 + 8 * 4 + compressed_mat_size(m, r, codec)
+    ENVELOPE_BYTES + 1 + 4 + 4 + 8 * 4 + compressed_mat_size(m, r, codec)
 }
 
 #[cfg(test)]
@@ -258,8 +300,25 @@ mod tests {
 
     #[test]
     fn decode_rejects_unknown_tag() {
-        assert!(ToClient::decode(&[99]).is_err());
-        assert!(ToServer::decode(&[99]).is_err());
+        let mut bad = vec![WIRE_VERSION];
+        put_u32(&mut bad, 0);
+        bad.push(99);
+        assert!(ToClient::decode(&bad).is_err());
+        assert!(ToServer::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn envelope_carries_job_and_rejects_bad_version() {
+        let msg = ToClient::Shutdown;
+        let bytes = msg.encode_with(7, Compression::None);
+        assert_eq!(bytes.len(), ENVELOPE_BYTES + 1);
+        assert_eq!(ToClient::decode_job(&bytes).unwrap(), (7, ToClient::Shutdown));
+        let up = ToServer::Withhold { client: 3 }.encode_with(9, Compression::None);
+        assert_eq!(ToServer::decode_job(&up).unwrap(), (9, ToServer::Withhold { client: 3 }));
+        // wrong version byte is refused outright
+        let mut stale = bytes.clone();
+        stale[0] = WIRE_VERSION + 1;
+        assert!(ToClient::decode(&stale).is_err());
     }
 
     #[test]

@@ -1,37 +1,48 @@
 //! DCF-PCA server: Algorithm 1's outer loop.
 //!
 //! Per round: broadcast `U^(t)` with the step size from the schedule,
-//! gather the locally advanced `U_i`, aggregate by (weighted) average
-//! (Eq. 9), and record telemetry. At the end, send `Finish` and collect
-//! the revealed blocks from public clients.
+//! gather the locally advanced `U_i` *in arrival order*, aggregate by
+//! (weighted) average (Eq. 9), and record telemetry. At the end, send
+//! `Finish` and collect the revealed blocks from public clients.
+//!
+//! All protocol logic lives in the sans-I/O [`super::engine::RoundEngine`];
+//! this module keeps the configuration/outcome types and [`run_server`],
+//! which drives a single job over a set of established channels via the
+//! multiplexing [`ChannelReactor`]. A round closes as soon as every
+//! selected client replied or the per-round deadline passes — one
+//! straggler delays a round by at most the deadline (the *max* of client
+//! latencies, never the sum), and under [`FaultPolicy::SkipMissing`] the
+//! round simply closes without the stragglers.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::Result;
 
 use crate::algorithms::schedule::Schedule;
 use crate::linalg::Mat;
-use crate::rng::Pcg64;
 
-use super::aggregate::{aggregate, consensus_dispersion, Aggregation};
+use super::aggregate::Aggregation;
 use super::compress::Compression;
+use super::engine::RoundEngine;
 use super::metrics::{CommStats, RoundRecord};
 use super::privacy::PrivacySpec;
-use super::protocol::{ToClient, ToServer};
+use super::transport::reactor::{drive, ChannelReactor};
 use super::transport::{Channel, DEFAULT_ROUND_TIMEOUT};
 
-/// What to do when a client misses the round deadline.
+/// What to do when a client misses the round deadline or disconnects.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultPolicy {
     /// abort the run (default — a missing update is a bug in simulations)
     Strict,
-    /// aggregate over the clients that did reply (FedAvg partial
-    /// participation); a round with zero replies still aborts
+    /// straggler cut: aggregate over the clients that did reply before
+    /// the deadline (FedAvg partial participation); disconnected clients
+    /// leave the membership, slow ones just miss the round. A round with
+    /// zero replies still aborts.
     SkipMissing,
 }
 
-/// Server-side configuration.
+/// Server-side configuration (one job's worth — the engine can run many).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// communication rounds T
@@ -47,7 +58,7 @@ pub struct ServerConfig {
     pub privacy: PrivacySpec,
     /// seed for the U⁰ init
     pub seed: u64,
-    /// per-round reply deadline
+    /// per-round reply deadline (the straggler cut)
     pub round_timeout: Duration,
     pub fault_policy: FaultPolicy,
     /// denominator of Eq. 30 (‖L₀‖²+‖S₀‖²) when truth-telemetry is on
@@ -90,213 +101,29 @@ pub struct ServerOutcome {
     pub u: Mat,
     /// per-round telemetry
     pub rounds: Vec<RoundRecord>,
-    /// revealed blocks from public clients, by client id
+    /// revealed blocks from public clients, by client id (id-sorted)
     pub revealed: Vec<(usize, Mat, Mat)>,
-    /// clients that withheld (private) or went missing
+    /// clients that withheld (private) or went missing (id-sorted)
     pub withheld: Vec<usize>,
     pub comm: CommStats,
-    /// column counts per client (from Hello)
+    /// column counts per client id (from Hello)
     pub client_cols: Vec<usize>,
 }
 
-/// Run the full server protocol over established channels (one per
-/// client, index = client id).
+/// Run the full server protocol over established channels as a single
+/// engine job (job id 0). Channel index is the transport endpoint id;
+/// client identity comes from each `Hello`, so channels need not be in
+/// client-id order.
 pub fn run_server(channels: &mut [Box<dyn Channel>], cfg: &ServerConfig) -> Result<ServerOutcome> {
     let e = channels.len();
     if e == 0 {
         bail!("server needs at least one client");
     }
-
-    // ---- handshake -------------------------------------------------------
-    let mut client_cols = vec![0usize; e];
-    for (i, ch) in channels.iter_mut().enumerate() {
-        let hello = ToServer::decode(&ch.recv_timeout(cfg.round_timeout)?)
-            .context("decode hello")?;
-        match hello {
-            ToServer::Hello { client, cols } => {
-                if client as usize != i {
-                    bail!("client on channel {i} introduced itself as {client}");
-                }
-                client_cols[i] = cols as usize;
-            }
-            other => bail!("expected Hello, got {other:?}"),
-        }
-    }
-
-    // ---- init ------------------------------------------------------------
-    let mut rng = Pcg64::new(cfg.seed);
-    let mut u = Mat::gaussian(cfg.m, cfg.rank, &mut rng);
-    let mut rounds = Vec::with_capacity(cfg.rounds);
-    let mut lipschitz_max: f64 = 1.0; // refreshed from client reports
-    let mut alive: Vec<bool> = vec![true; e];
-
-    // ---- round loop ------------------------------------------------------
-    let mut sample_rng = rng.fork(0x5A);
-    for t in 0..cfg.rounds {
-        let t0 = Instant::now();
-        let eta = cfg.schedule.eta(t, lipschitz_max);
-        let down0: u64 = channels.iter().map(|c| c.bytes_sent()).sum();
-        let up0: u64 = channels.iter().map(|c| c.bytes_received()).sum();
-
-        // partial participation: sample ⌈q·E⌉ of the alive clients
-        let alive_ids: Vec<usize> = (0..e).filter(|&i| alive[i]).collect();
-        let selected: Vec<bool> = if cfg.participation >= 1.0 {
-            alive.clone()
-        } else {
-            let want = ((cfg.participation * alive_ids.len() as f64).ceil() as usize)
-                .clamp(1, alive_ids.len());
-            let picks = crate::rng::sample_distinct_indices(
-                &mut sample_rng,
-                alive_ids.len(),
-                want,
-            );
-            let mut sel = vec![false; e];
-            for p in picks {
-                sel[alive_ids[p]] = true;
-            }
-            sel
-        };
-
-        let msg = ToClient::Round {
-            round: t as u32,
-            k_local: cfg.k_local as u32,
-            eta,
-            u: u.clone(),
-        };
-        let encoded = msg.encode_with(cfg.compression);
-        for (i, ch) in channels.iter_mut().enumerate() {
-            if alive[i] && selected[i] {
-                // a send to a crashed in-proc client can error; tolerate
-                // under SkipMissing
-                if let Err(err) = ch.send(&encoded) {
-                    match cfg.fault_policy {
-                        FaultPolicy::Strict => return Err(err.context(format!("broadcast to {i}"))),
-                        FaultPolicy::SkipMissing => alive[i] = false,
-                    }
-                }
-            }
-        }
-
-        let mut updates: Vec<Mat> = Vec::with_capacity(e);
-        let mut weights: Vec<usize> = Vec::with_capacity(e);
-        let mut grad_sum = 0.0;
-        let mut err_num_sum = 0.0;
-        let mut err_all_finite = true;
-        let mut max_client_secs: f64 = 0.0;
-        let mut sum_client_secs = 0.0;
-        let mut round_lip: f64 = 0.0;
-        for (i, ch) in channels.iter_mut().enumerate() {
-            if !alive[i] || !selected[i] {
-                continue;
-            }
-            let reply = match ch.recv_timeout(cfg.round_timeout) {
-                Ok(r) => r,
-                Err(err) => match cfg.fault_policy {
-                    FaultPolicy::Strict => {
-                        return Err(err.context(format!("round {t}: no update from client {i}")))
-                    }
-                    FaultPolicy::SkipMissing => {
-                        crate::log_warn!("server", "round {t}: client {i} missing, skipping");
-                        alive[i] = false;
-                        continue;
-                    }
-                },
-            };
-            match ToServer::decode(&reply)? {
-                ToServer::Update {
-                    client,
-                    round,
-                    u: u_i,
-                    grad_norm,
-                    lipschitz,
-                    err_num,
-                    local_secs,
-                } => {
-                    if client as usize != i || round as usize != t {
-                        bail!("round {t}: stale update (client {client}, round {round})");
-                    }
-                    if u_i.shape() != (cfg.m, cfg.rank) {
-                        bail!("round {t}: client {i} sent U of shape {:?}", u_i.shape());
-                    }
-                    updates.push(u_i);
-                    weights.push(client_cols[i]);
-                    grad_sum += grad_norm;
-                    round_lip = round_lip.max(lipschitz);
-                    if err_num.is_finite() {
-                        err_num_sum += err_num;
-                    } else {
-                        err_all_finite = false;
-                    }
-                    max_client_secs = max_client_secs.max(local_secs);
-                    sum_client_secs += local_secs;
-                }
-                other => bail!("round {t}: expected Update, got {other:?}"),
-            }
-        }
-        if updates.is_empty() {
-            bail!("round {t}: all clients missing");
-        }
-        lipschitz_max = round_lip.max(1e-12);
-
-        let u_next = aggregate(cfg.aggregation, &updates, &weights);
-        let dispersion = consensus_dispersion(&updates, &u_next);
-        u = u_next;
-
-        let down1: u64 = channels.iter().map(|c| c.bytes_sent()).sum();
-        let up1: u64 = channels.iter().map(|c| c.bytes_received()).sum();
-        let err = match (cfg.err_denominator, err_all_finite) {
-            (Some(den), true) => Some(err_num_sum / den),
-            _ => None,
-        };
-        rounds.push(RoundRecord {
-            round: t,
-            err,
-            mean_grad_norm: grad_sum / updates.len() as f64,
-            dispersion,
-            eta,
-            round_secs: t0.elapsed().as_secs_f64(),
-            max_client_secs,
-            sum_client_secs,
-            bytes_down: down1 - down0,
-            bytes_up: up1 - up0,
-            participants: updates.len(),
-        });
-
-        if let (Some(stop), Some(e_now)) = (cfg.err_stop, err) {
-            if e_now < stop {
-                break;
-            }
-        }
-    }
-
-    // ---- finish: collect public blocks -----------------------------------
-    let mut revealed = Vec::new();
-    let mut withheld = Vec::new();
-    for (i, ch) in channels.iter_mut().enumerate() {
-        if !alive[i] {
-            withheld.push(i);
-            continue;
-        }
-        let reveal = cfg.privacy.is_public(i);
-        ch.send(&ToClient::Finish { reveal, final_u: u.clone() }.encode())
-            .with_context(|| format!("finish to {i}"))?;
-        match ToServer::decode(&ch.recv_timeout(cfg.round_timeout)?)? {
-            ToServer::Reveal { client, l, s } if client as usize == i => {
-                if !reveal {
-                    bail!("client {i} revealed despite privacy policy");
-                }
-                revealed.push((i, l, s));
-            }
-            ToServer::Withhold { client } if client as usize == i => withheld.push(i),
-            other => bail!("finish: unexpected {other:?}"),
-        }
-        let _ = ch.send(&ToClient::Shutdown.encode());
-    }
-
-    let comm = CommStats {
-        total_down: channels.iter().map(|c| c.bytes_sent()).sum(),
-        total_up: channels.iter().map(|c| c.bytes_received()).sum(),
-        rounds: rounds.len(),
-    };
-    Ok(ServerOutcome { u, rounds, revealed, withheld, comm, client_cols })
+    let mut engine = RoundEngine::new();
+    engine.add_job(0, cfg.clone(), e);
+    let mut reactor = ChannelReactor::new(channels);
+    drive(&mut reactor, &mut engine)?;
+    engine
+        .take_result(0)
+        .expect("drive() returns only when every job has a result")
 }

@@ -1,13 +1,94 @@
-//! Wire encoding: little-endian primitives and matrix codecs.
+//! Wire encoding: little-endian primitives, matrix codecs, and the
+//! length-prefix frame codec shared by every byte-stream transport.
 //!
 //! Every matrix crossing the wire is exactly `16 + 8·rows·cols` bytes
 //! (u32 rows, u32 cols, u64 payload length guard, f64 data), which makes
 //! the paper's Eq. 28 communication accounting (`2·E·m·r` floats per
 //! round) directly verifiable from the transport byte counters.
+//!
+//! Stream framing is `u32 LE payload length, then the payload`.
+//! [`FrameDecoder`] consumes that format *incrementally*: bytes arrive in
+//! whatever fragments the kernel hands a non-blocking read, and complete
+//! frames pop out as soon as their last byte lands — the property the
+//! epoll reactor needs so a partial read never blocks the event loop.
 
 use crate::bail;
 use crate::error::Result;
 use crate::linalg::Mat;
+
+/// Hard cap on a single frame (guards against corrupt length headers).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Prepend the length header and append `msg` to a stream buffer.
+pub fn frame_into(buf: &mut Vec<u8>, msg: &[u8]) {
+    debug_assert!(msg.len() as u64 <= MAX_FRAME as u64);
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg);
+}
+
+/// Incremental decoder for length-prefixed frames.
+///
+/// Feed arbitrary byte fragments with [`push`](Self::push); drain
+/// complete frames with [`next_frame`](Self::next_frame). Decoding is
+/// independent of fragment boundaries: any split of a byte stream —
+/// including one byte at a time — yields exactly the frames the one-shot
+/// path would (see the property tests in `tests/property_suite.rs`).
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// consumed prefix of `buf` (compacted lazily)
+    start: usize,
+    /// a corrupt header poisons the stream — no resynchronization
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Append freshly received bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next complete frame, if one is fully buffered.
+    ///
+    /// Returns `Err` on a corrupt length header (> [`MAX_FRAME`]); the
+    /// decoder stays poisoned afterwards, mirroring the one-shot path
+    /// which kills the connection on the same input.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.poisoned {
+            bail!("frame stream poisoned by corrupt header");
+        }
+        if self.buffered() < 4 {
+            return Ok(None);
+        }
+        let header: [u8; 4] = self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(header);
+        if len > MAX_FRAME {
+            self.poisoned = true;
+            bail!("corrupt frame header: length {len}");
+        }
+        let len = len as usize;
+        if self.buffered() < 4 + len {
+            return Ok(None);
+        }
+        let frame = self.buf[self.start + 4..self.start + 4 + len].to_vec();
+        self.start += 4 + len;
+        // compact once the dead prefix dominates, keeping push() amortized O(1)
+        if self.start > 4096 && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
 
 pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -152,6 +233,46 @@ mod tests {
         buf2.extend_from_slice(&[0u8; 40]);
         let mut r2 = Reader::new(&buf2);
         assert!(r2.mat().is_err());
+    }
+
+    #[test]
+    fn frame_decoder_handles_fragmentation() {
+        let mut stream = Vec::new();
+        let frames: Vec<Vec<u8>> = vec![vec![], vec![7], vec![1, 2, 3], vec![0xAB; 300]];
+        for f in &frames {
+            frame_into(&mut stream, f);
+        }
+        // byte at a time
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            dec.push(&[b]);
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert_eq!(dec.buffered(), 0);
+        // all at once
+        let mut dec = FrameDecoder::new();
+        dec.push(&stream);
+        let mut got = Vec::new();
+        while let Some(f) = dec.next_frame().unwrap() {
+            got.push(f);
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn frame_decoder_rejects_corrupt_header_and_stays_poisoned() {
+        let mut dec = FrameDecoder::new();
+        dec.push(&u32::MAX.to_le_bytes());
+        assert!(dec.next_frame().is_err());
+        // still poisoned even if more (valid-looking) bytes arrive
+        let mut good = Vec::new();
+        frame_into(&mut good, b"ok");
+        dec.push(&good);
+        assert!(dec.next_frame().is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! so communication-cost experiments behave identically to TCP.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -59,6 +59,14 @@ impl Channel for InProcChannel {
         }
     }
 
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("peer endpoint dropped")),
+        }
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.sent.load(Ordering::Relaxed)
     }
@@ -85,6 +93,17 @@ mod tests {
         assert_eq!(b.bytes_received(), 5);
         assert_eq!(b.bytes_sent(), 10);
         assert_eq!(a.bytes_received(), 10);
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking() {
+        let (mut a, mut b) = pair();
+        assert!(a.try_recv().unwrap().is_none());
+        b.send(&[42]).unwrap();
+        assert_eq!(a.try_recv().unwrap(), Some(vec![42]));
+        assert!(a.try_recv().unwrap().is_none());
+        drop(b);
+        assert!(a.try_recv().is_err());
     }
 
     #[test]

@@ -11,9 +11,17 @@
 //! Both meter every byte, which is how the Eq. 28 communication-cost
 //! experiment measures `2·E·m·r` per round *on the wire* rather than
 //! trusting the formula.
+//!
+//! Channels expose both a blocking receive (client workers sit in a
+//! simple request/reply loop) and a non-blocking [`Channel::try_recv`]
+//! readiness probe. The server side never blocks per channel: the
+//! [`reactor`] module multiplexes many channels (or raw epoll'd sockets)
+//! into the arrival-order event stream that drives
+//! [`crate::coordinator::engine::RoundEngine`].
 
 pub mod framing;
 pub mod inproc;
+pub mod reactor;
 pub mod tcp;
 
 use std::time::Duration;
@@ -45,6 +53,11 @@ pub trait Channel: Send {
 
     /// Block until the next message arrives or `timeout` elapses.
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>>;
+
+    /// Non-blocking receive: `Ok(Some(msg))` if a complete message is
+    /// ready, `Ok(None)` if not, `Err` once the peer is gone. Never
+    /// blocks — partial frames stay buffered inside the channel.
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
 
     /// Total payload bytes sent through this endpoint.
     fn bytes_sent(&self) -> u64;

@@ -1,0 +1,600 @@
+//! Event-loop drivers for the sans-I/O [`RoundEngine`].
+//!
+//! The engine consumes `(endpoint, bytes, now)` events and emits
+//! [`Action`]s; everything transport-specific lives here:
+//!
+//! - [`ChannelReactor`] multiplexes any set of [`Channel`]s (in-proc
+//!   mpsc pairs or framed TCP streams) by round-robin readiness polling
+//!   — the simulation driver, and the portable fallback for TCP.
+//! - [`EpollReactor`] (Linux) is a single-threaded epoll event loop over
+//!   non-blocking sockets with incremental frame decoding and buffered
+//!   writes: one coordinator thread serves any number of clients — and
+//!   accepts new ones mid-run (elastic membership) — without ever
+//!   blocking on a slow peer. The epoll binding is direct syscall FFI
+//!   against the C library, matching the crate's zero-dependency style
+//!   (see `util::cputime` for the same pattern on `clock_gettime`).
+//!
+//! [`drive`] is the shared loop: poll → feed engine → execute actions,
+//! with failed writes folded back into the engine as disconnects.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+use crate::coordinator::engine::{Action, EndpointId, RoundEngine};
+
+use super::Channel;
+
+/// What a reactor observed during one poll.
+#[derive(Debug)]
+pub enum IoEvent {
+    /// A new endpoint appeared (TCP accept; pre-registered channels
+    /// report this once at startup).
+    Connected(EndpointId),
+    /// One complete protocol message arrived.
+    Message(EndpointId, Vec<u8>),
+    /// The endpoint is gone (EOF, reset, dropped channel).
+    Disconnected(EndpointId),
+    /// The poll timeout elapsed with nothing to report.
+    Tick,
+}
+
+/// A source of I/O events plus a sink for engine actions.
+pub trait Reactor {
+    /// Wait up to `timeout` (forever if `None`... but see [`drive`],
+    /// which always bounds it) for the next event.
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<IoEvent>;
+
+    /// Queue/send one message. An `Err` means the peer is unreachable —
+    /// [`drive`] reports it to the engine as a disconnect.
+    fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()>;
+
+    /// The engine is done with this endpoint.
+    fn close(&mut self, ep: EndpointId);
+
+    /// Monotonic time since the reactor started — the `now` handed to
+    /// the engine (which never reads a clock itself).
+    fn now(&self) -> Duration;
+}
+
+/// Largest idle sleep while deadlines are pending: keeps the loop
+/// responsive to deadline expiry without spinning.
+const MAX_IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Run `engine` on `reactor` until every registered job completes.
+/// Per-job failures land in the job results (collect them with
+/// [`RoundEngine::take_result`]); only reactor-level I/O faults surface
+/// as `Err` here.
+pub fn drive(reactor: &mut dyn Reactor, engine: &mut RoundEngine) -> Result<()> {
+    while !engine.all_done() {
+        let timeout = engine
+            .next_deadline()
+            .map(|d| d.saturating_sub(reactor.now()))
+            .map_or(MAX_IDLE_POLL, |t| t.min(MAX_IDLE_POLL));
+        let event = reactor.poll(Some(timeout))?;
+        let now = reactor.now();
+        let mut actions = VecDeque::new();
+        match event {
+            IoEvent::Connected(ep) => engine.on_connect(ep),
+            IoEvent::Message(ep, bytes) => {
+                actions.extend(engine.handle_message(ep, &bytes, now))
+            }
+            IoEvent::Disconnected(ep) => actions.extend(engine.on_disconnect(ep, now)),
+            IoEvent::Tick => {}
+        }
+        actions.extend(engine.poll_deadline(reactor.now()));
+        while let Some(action) = actions.pop_front() {
+            match action {
+                Action::Send { ep, bytes } => {
+                    if reactor.send(ep, &bytes).is_err() {
+                        actions.extend(engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
+                Action::Close { ep } => reactor.close(ep),
+                Action::JobDone { .. } => {}
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ChannelReactor: readiness multiplexing over ordinary channels
+// ---------------------------------------------------------------------------
+
+/// Multiplexes pre-established [`Channel`]s into the engine's event
+/// stream by round-robin [`Channel::try_recv`] sweeps. Endpoint ids are
+/// channel indices. Used by `run_server` for simulations (in-proc pairs)
+/// and as the portable TCP path.
+pub struct ChannelReactor<'a> {
+    channels: &'a mut [Box<dyn Channel>],
+    open: Vec<bool>,
+    /// one-shot Connected announcements + queued sweep finds
+    pending: VecDeque<IoEvent>,
+    /// next channel to scan (rotates for fairness)
+    cursor: usize,
+    start: Instant,
+}
+
+/// Idle sleep between empty sweeps starts here and doubles per empty
+/// sweep up to [`SWEEP_IDLE_MAX`]: stays responsive right after
+/// activity, backs off while clients compute so the coordinator thread
+/// doesn't steal cycles from them. The cap keeps deadline firing and
+/// round wall-time accurate to ~2 ms.
+const SWEEP_IDLE_MIN: Duration = Duration::from_micros(100);
+const SWEEP_IDLE_MAX: Duration = Duration::from_millis(2);
+
+impl<'a> ChannelReactor<'a> {
+    pub fn new(channels: &'a mut [Box<dyn Channel>]) -> Self {
+        let n = channels.len();
+        ChannelReactor {
+            channels,
+            open: vec![true; n],
+            pending: (0..n).map(IoEvent::Connected).collect(),
+            cursor: 0,
+            start: Instant::now(),
+        }
+    }
+
+    /// One fair sweep over all open channels; queues everything found.
+    fn sweep(&mut self) {
+        let n = self.channels.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            if !self.open[i] {
+                continue;
+            }
+            match self.channels[i].try_recv() {
+                Ok(Some(msg)) => self.pending.push_back(IoEvent::Message(i, msg)),
+                Ok(None) => {}
+                Err(_) => {
+                    self.open[i] = false;
+                    self.pending.push_back(IoEvent::Disconnected(i));
+                }
+            }
+        }
+        self.cursor = (self.cursor + 1) % n.max(1);
+    }
+}
+
+impl Reactor for ChannelReactor<'_> {
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<IoEvent> {
+        if let Some(e) = self.pending.pop_front() {
+            return Ok(e);
+        }
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut idle = SWEEP_IDLE_MIN;
+        loop {
+            self.sweep();
+            if let Some(e) = self.pending.pop_front() {
+                return Ok(e);
+            }
+            if let Some(d) = deadline {
+                let left = d.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Ok(IoEvent::Tick);
+                }
+                std::thread::sleep(left.min(idle));
+            } else {
+                std::thread::sleep(idle);
+            }
+            idle = (idle * 2).min(SWEEP_IDLE_MAX);
+        }
+    }
+
+    fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()> {
+        if !self.open[ep] {
+            crate::bail!("endpoint {ep} is closed");
+        }
+        self.channels[ep].send(msg)
+    }
+
+    fn close(&mut self, ep: EndpointId) {
+        // stop reading; the channel object itself stays with the caller
+        // (its queue may still deliver a final Shutdown to a slow peer)
+        self.open[ep] = false;
+    }
+
+    fn now(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EpollReactor: single-threaded non-blocking TCP event loop (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub use epoll::EpollReactor;
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use std::collections::VecDeque;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::{Duration, Instant};
+
+    use crate::bail;
+    use crate::error::{Context, Result};
+
+    use crate::coordinator::engine::EndpointId;
+    use crate::coordinator::transport::framing::{frame_into, FrameDecoder, MAX_FRAME};
+
+    use super::{IoEvent, Reactor};
+
+    /// Direct bindings for the three epoll syscalls — declared against
+    /// the C library (linked anyway) instead of pulling in `libc`.
+    mod sys {
+        /// Matches the kernel's `struct epoll_event`; packed on x86-64
+        /// (the one ABI where the kernel packs it), natural elsewhere.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+
+        pub const EPOLL_CTL_ADD: i32 = 1;
+        pub const EPOLL_CTL_DEL: i32 = 2;
+        pub const EPOLL_CTL_MOD: i32 = 3;
+
+        extern "C" {
+            pub fn epoll_create1(flags: i32) -> i32;
+            pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+            pub fn epoll_wait(
+                epfd: i32,
+                events: *mut EpollEvent,
+                maxevents: i32,
+                timeout_ms: i32,
+            ) -> i32;
+            pub fn close(fd: i32) -> i32;
+        }
+    }
+
+    /// `data` value that marks the listener in epoll events.
+    const LISTENER_TOKEN: u64 = u64::MAX;
+
+    struct Conn {
+        stream: TcpStream,
+        decoder: FrameDecoder,
+        /// bytes queued behind a short write, waiting for EPOLLOUT
+        outbuf: VecDeque<u8>,
+        /// EPOLLOUT currently armed
+        want_write: bool,
+        /// engine said Close — drop once `outbuf` drains
+        closing: bool,
+    }
+
+    /// Single-threaded epoll event loop: accepts connections for the
+    /// lifetime of the run (late joiners welcome), reads whatever bytes
+    /// are ready into per-connection frame decoders, and never blocks on
+    /// any one peer. Writes go straight to the socket when it has room
+    /// and spill into a per-connection buffer armed on EPOLLOUT when it
+    /// does not.
+    pub struct EpollReactor {
+        epfd: i32,
+        listener: TcpListener,
+        conns: Vec<Option<Conn>>,
+        pending: VecDeque<IoEvent>,
+        start: Instant,
+    }
+
+    impl EpollReactor {
+        pub fn new(listener: TcpListener) -> Result<Self> {
+            listener.set_nonblocking(true).context("listener nonblocking")?;
+            let epfd = unsafe { sys::epoll_create1(0) };
+            if epfd < 0 {
+                bail!("epoll_create1 failed: {}", std::io::Error::last_os_error());
+            }
+            let reactor = EpollReactor {
+                epfd,
+                listener,
+                conns: Vec::new(),
+                pending: VecDeque::new(),
+                start: Instant::now(),
+            };
+            reactor.ctl(
+                sys::EPOLL_CTL_ADD,
+                reactor.listener.as_raw_fd(),
+                sys::EPOLLIN,
+                LISTENER_TOKEN,
+            )?;
+            Ok(reactor)
+        }
+
+        fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> Result<()> {
+            let mut ev = sys::EpollEvent { events, data: token };
+            let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc != 0 {
+                bail!("epoll_ctl failed: {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn interest(&self, ep: EndpointId) -> u32 {
+            let want_write = self.conns[ep].as_ref().is_some_and(|c| c.want_write);
+            let mut ev = sys::EPOLLIN | sys::EPOLLRDHUP;
+            if want_write {
+                ev |= sys::EPOLLOUT;
+            }
+            ev
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        let setup =
+                            stream.set_nonblocking(true).and_then(|()| stream.set_nodelay(true));
+                        if setup.is_err() {
+                            continue;
+                        }
+                        let fd = stream.as_raw_fd();
+                        let ep = self.conns.len();
+                        self.conns.push(Some(Conn {
+                            stream,
+                            decoder: FrameDecoder::new(),
+                            outbuf: VecDeque::new(),
+                            want_write: false,
+                            closing: false,
+                        }));
+                        if self
+                            .ctl(sys::EPOLL_CTL_ADD, fd, sys::EPOLLIN | sys::EPOLLRDHUP, ep as u64)
+                            .is_err()
+                        {
+                            self.conns[ep] = None;
+                            continue;
+                        }
+                        self.pending.push_back(IoEvent::Connected(ep));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        }
+
+        /// Read everything ready on `ep`; queue complete frames. Returns
+        /// false if the connection died.
+        fn read_ready(&mut self, ep: EndpointId) -> bool {
+            let Some(conn) = self.conns[ep].as_mut() else { return true };
+            let mut chunk = [0u8; 64 * 1024];
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => return false,
+                    Ok(n) => {
+                        conn.decoder.push(&chunk[..n]);
+                        loop {
+                            match conn.decoder.next_frame() {
+                                Ok(Some(frame)) => {
+                                    self.pending.push_back(IoEvent::Message(ep, frame))
+                                }
+                                Ok(None) => break,
+                                Err(_) => return false,
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+        }
+
+        /// Flush as much queued output as the socket accepts. Returns
+        /// false if the connection died.
+        fn write_ready(&mut self, ep: EndpointId) -> bool {
+            let (drained, fd, closing, rearm) = {
+                let Some(conn) = self.conns[ep].as_mut() else { return true };
+                loop {
+                    if conn.outbuf.is_empty() {
+                        break;
+                    }
+                    let (head, _) = conn.outbuf.as_slices();
+                    match conn.stream.write(head) {
+                        Ok(0) => return false,
+                        Ok(n) => {
+                            conn.outbuf.drain(..n);
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(_) => return false,
+                    }
+                }
+                let drained = conn.outbuf.is_empty();
+                let rearm = drained == conn.want_write;
+                conn.want_write = !drained;
+                (drained, conn.stream.as_raw_fd(), conn.closing, rearm)
+            };
+            if rearm {
+                let interest = self.interest(ep);
+                let _ = self.ctl(sys::EPOLL_CTL_MOD, fd, interest, ep as u64);
+            }
+            if drained && closing {
+                self.drop_conn(ep);
+            }
+            true
+        }
+
+        fn drop_conn(&mut self, ep: EndpointId) {
+            if let Some(conn) = self.conns[ep].take() {
+                let _ = self.ctl(sys::EPOLL_CTL_DEL, conn.stream.as_raw_fd(), 0, ep as u64);
+                // conn (and its socket) drops here
+            }
+        }
+    }
+
+    impl Drop for EpollReactor {
+        fn drop(&mut self) {
+            unsafe { sys::close(self.epfd) };
+        }
+    }
+
+    impl Reactor for EpollReactor {
+        fn poll(&mut self, timeout: Option<Duration>) -> Result<IoEvent> {
+            if let Some(e) = self.pending.pop_front() {
+                return Ok(e);
+            }
+            let timeout_ms: i32 = match timeout {
+                // round up so sub-millisecond waits don't busy-spin
+                Some(t) => t.as_millis().min(i32::MAX as u128 - 1) as i32
+                    + i32::from(t.subsec_nanos() % 1_000_000 != 0),
+                None => -1,
+            };
+            let mut events = [sys::EpollEvent { events: 0, data: 0 }; 64];
+            let n = unsafe {
+                sys::epoll_wait(self.epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if n < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.kind() == ErrorKind::Interrupted {
+                    return Ok(IoEvent::Tick);
+                }
+                bail!("epoll_wait failed: {err}");
+            }
+            for ev in &events[..n as usize] {
+                // copy out of the (possibly packed) struct before use
+                let token = ev.data;
+                let bits = ev.events;
+                if token == LISTENER_TOKEN {
+                    self.accept_ready();
+                    continue;
+                }
+                let ep = token as EndpointId;
+                if ep >= self.conns.len() || self.conns[ep].is_none() {
+                    continue;
+                }
+                let mut alive = true;
+                if bits & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
+                    // always try to read first: a HUP peer may still have
+                    // parked bytes we want (read drains until EOF/err)
+                    alive = self.read_ready(ep);
+                }
+                if alive && bits & sys::EPOLLOUT != 0 {
+                    alive = self.write_ready(ep);
+                }
+                if !alive {
+                    self.drop_conn(ep);
+                    self.pending.push_back(IoEvent::Disconnected(ep));
+                }
+            }
+            Ok(self.pending.pop_front().unwrap_or(IoEvent::Tick))
+        }
+
+        fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()> {
+            if msg.len() as u64 > MAX_FRAME as u64 {
+                bail!("frame too large: {}", msg.len());
+            }
+            let Some(conn) = self.conns.get_mut(ep).and_then(Option::as_mut) else {
+                bail!("endpoint {ep} is closed");
+            };
+            if conn.closing {
+                bail!("endpoint {ep} is closing");
+            }
+            let mut framed = Vec::with_capacity(4 + msg.len());
+            frame_into(&mut framed, msg);
+            conn.outbuf.extend(framed);
+            if !self.write_ready(ep) {
+                self.drop_conn(ep);
+                bail!("endpoint {ep} write failed");
+            }
+            Ok(())
+        }
+
+        fn close(&mut self, ep: EndpointId) {
+            let drop_now = match self.conns.get_mut(ep).and_then(Option::as_mut) {
+                Some(conn) if conn.outbuf.is_empty() => true,
+                Some(conn) => {
+                    // flush the tail (e.g. Shutdown) before dropping
+                    conn.closing = true;
+                    false
+                }
+                None => false,
+            };
+            if drop_now {
+                self.drop_conn(ep);
+            }
+        }
+
+        fn now(&self) -> Duration {
+            self.start.elapsed()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::inproc::pair;
+
+    #[test]
+    fn channel_reactor_reports_arrival_order_and_disconnects() {
+        let (s0, c0) = pair();
+        let (s1, mut c1) = pair();
+        let mut chans: Vec<Box<dyn Channel>> = vec![Box::new(s0), Box::new(s1)];
+        let mut r = ChannelReactor::new(&mut chans);
+        // both channels announce themselves first
+        assert!(matches!(r.poll(Some(Duration::ZERO)).unwrap(), IoEvent::Connected(0)));
+        assert!(matches!(r.poll(Some(Duration::ZERO)).unwrap(), IoEvent::Connected(1)));
+        c1.send(b"from-1").unwrap();
+        match r.poll(Some(Duration::from_secs(1))).unwrap() {
+            IoEvent::Message(1, m) => assert_eq!(m, b"from-1"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // replies flow back
+        r.send(1, b"pong").unwrap();
+        assert_eq!(c1.recv_timeout(Duration::from_secs(1)).unwrap(), b"pong");
+        // idle poll ticks
+        assert!(matches!(r.poll(Some(Duration::from_millis(5))).unwrap(), IoEvent::Tick));
+        // dropped peer surfaces exactly once
+        drop(c0);
+        match r.poll(Some(Duration::from_secs(1))).unwrap() {
+            IoEvent::Disconnected(0) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(r.send(0, b"x").is_err());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reactor_echoes_frames() {
+        use crate::coordinator::transport::tcp::TcpChannel;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut r = EpollReactor::new(listener).unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = TcpChannel::connect(&addr).unwrap();
+            c.send(b"hello epoll").unwrap();
+            let reply = c.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply, b"HELLO");
+            // a second exchange exercises decoder reuse
+            let big = vec![7u8; 100_000];
+            c.send(&big).unwrap();
+            c.recv_timeout(Duration::from_secs(5)).unwrap()
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut big_seen = false;
+        while !big_seen {
+            assert!(Instant::now() < deadline, "epoll echo timed out");
+            match r.poll(Some(Duration::from_millis(20))).unwrap() {
+                IoEvent::Message(ep, m) if m == b"hello epoll" => r.send(ep, b"HELLO").unwrap(),
+                IoEvent::Message(ep, m) => {
+                    assert_eq!(m.len(), 100_000);
+                    r.send(ep, b"ok").unwrap();
+                    big_seen = true;
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(h.join().unwrap(), b"ok");
+    }
+}

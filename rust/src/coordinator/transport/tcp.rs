@@ -1,25 +1,28 @@
 //! TCP transport: length-prefix framed messages over `std::net`.
 //!
-//! Frame format: u32 LE payload length, then the payload. A thread per
-//! connection (blocking I/O) — the round protocol is a strict
-//! broadcast/gather barrier, so async buys nothing here (see DESIGN.md
-//! §Substitutions on tokio).
+//! Frame format: u32 LE payload length, then the payload (see
+//! [`framing::FrameDecoder`]). The channel buffers partial frames
+//! internally, so the same endpoint serves both the blocking client
+//! loop ([`Channel::recv_timeout`]) and the server-side readiness API
+//! ([`Channel::try_recv`]) that the reactors multiplex over.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::bail;
 use crate::error::{Context, Result};
 
+use super::framing::{self, FrameDecoder};
 use super::Channel;
-
-/// Hard cap on a single frame (guards against corrupt length headers).
-const MAX_FRAME: u32 = 1 << 30;
 
 /// One endpoint of a TCP duplex channel.
 pub struct TcpChannel {
     stream: TcpStream,
+    decoder: FrameDecoder,
+    /// current `set_nonblocking` state of the socket (avoids a syscall
+    /// per receive when the mode is unchanged)
+    nonblocking: bool,
     sent: u64,
     received: u64,
 }
@@ -27,7 +30,13 @@ pub struct TcpChannel {
 impl TcpChannel {
     pub fn from_stream(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true).context("set_nodelay")?;
-        Ok(TcpChannel { stream, sent: 0, received: 0 })
+        Ok(TcpChannel {
+            stream,
+            decoder: FrameDecoder::new(),
+            nonblocking: false,
+            sent: 0,
+            received: 0,
+        })
     }
 
     /// Connect to a listening server.
@@ -35,11 +44,29 @@ impl TcpChannel {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         Self::from_stream(stream)
     }
+
+    fn set_nonblocking(&mut self, nb: bool) -> Result<()> {
+        if self.nonblocking != nb {
+            self.stream.set_nonblocking(nb).context("set_nonblocking")?;
+            self.nonblocking = nb;
+        }
+        Ok(())
+    }
+
+    fn pop_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.decoder.next_frame()? {
+            Some(f) => {
+                self.received += f.len() as u64;
+                Ok(Some(f))
+            }
+            None => Ok(None),
+        }
+    }
 }
 
-/// Server-side acceptor: bind, then accept exactly `n` client channels
-/// (in connection order — client 0 is the first to connect; the protocol
-/// assigns ids in the handshake, not by arrival order).
+/// Server-side acceptor: bind, then accept exactly `n` client channels.
+/// Client identity is established by the protocol's `Hello` handshake,
+/// not by connection order.
 pub struct TcpAcceptor {
     listener: TcpListener,
 }
@@ -54,6 +81,11 @@ impl TcpAcceptor {
         Ok(self.listener.local_addr()?.to_string())
     }
 
+    /// Hand the raw listener to an epoll reactor (elastic accept loop).
+    pub fn into_listener(self) -> TcpListener {
+        self.listener
+    }
+
     pub fn accept_n(&self, n: usize) -> Result<Vec<TcpChannel>> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
@@ -66,9 +98,12 @@ impl TcpAcceptor {
 
 impl Channel for TcpChannel {
     fn send(&mut self, msg: &[u8]) -> Result<()> {
-        if msg.len() as u64 > MAX_FRAME as u64 {
+        if msg.len() as u64 > framing::MAX_FRAME as u64 {
             bail!("frame too large: {}", msg.len());
         }
+        // sends are always blocking: the consensus payloads are small and
+        // the server's reactor queues writes at a higher layer
+        self.set_nonblocking(false)?;
         self.stream
             .write_all(&(msg.len() as u32).to_le_bytes())
             .context("write frame header")?;
@@ -79,23 +114,63 @@ impl Channel for TcpChannel {
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
-        self.stream
-            .set_read_timeout(Some(timeout))
-            .context("set_read_timeout")?;
-        let mut header = [0u8; 4];
-        self.stream
-            .read_exact(&mut header)
-            .context("read frame header")?;
-        let len = u32::from_le_bytes(header);
-        if len > MAX_FRAME {
-            bail!("corrupt frame header: length {len}");
+        if let Some(f) = self.pop_frame()? {
+            return Ok(f);
         }
-        let mut payload = vec![0u8; len as usize];
-        self.stream
-            .read_exact(&mut payload)
-            .context("read frame payload")?;
-        self.received += len as u64;
-        Ok(payload)
+        self.set_nonblocking(false)?;
+        let deadline = Instant::now() + timeout;
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("recv timeout after {timeout:?}");
+            }
+            self.stream
+                .set_read_timeout(Some(remaining))
+                .context("set_read_timeout")?;
+            match self.stream.read(&mut chunk) {
+                Ok(0) => bail!("peer closed connection"),
+                Ok(n) => {
+                    self.decoder.push(&chunk[..n]);
+                    if let Some(f) = self.pop_frame()? {
+                        return Ok(f);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    bail!("recv timeout after {timeout:?}");
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("read frame"),
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(f) = self.pop_frame()? {
+            return Ok(Some(f));
+        }
+        self.set_nonblocking(true)?;
+        let mut chunk = [0u8; 64 * 1024];
+        let mut closed = false;
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    closed = true;
+                    break;
+                }
+                Ok(n) => self.decoder.push(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("read frame"),
+            }
+        }
+        // deliver frames that arrived with (or before) the FIN first; the
+        // close surfaces on a later call once the decoder is drained
+        match self.pop_frame()? {
+            Some(f) => Ok(Some(f)),
+            None if closed => bail!("peer closed connection"),
+            None => Ok(None),
+        }
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -173,5 +248,44 @@ mod tests {
         let got = s.recv_timeout(Duration::from_secs(10)).unwrap();
         assert_eq!(got, payload);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_interleaves_with_blocking_recv() {
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0").unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = TcpChannel::connect(&addr).unwrap();
+            c.send(b"one").unwrap();
+            c.send(b"two").unwrap();
+        });
+        let mut s = acceptor.accept_n(1).unwrap().pop().unwrap();
+        // poll until the first message lands, without ever blocking
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let first = loop {
+            if let Some(m) = s.try_recv().unwrap() {
+                break m;
+            }
+            assert!(Instant::now() < deadline, "message never arrived");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(first, b"one");
+        // the second may already be buffered; blocking recv must see it
+        let second = s.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second, b"two");
+        assert_eq!(s.bytes_received(), 6);
+        h.join().unwrap();
+        // after the peer exits, try_recv reports the closed stream
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match s.try_recv() {
+                Err(_) => break,
+                Ok(None) => {
+                    assert!(Instant::now() < deadline, "close never observed");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(Some(m)) => panic!("unexpected message {m:?}"),
+            }
+        }
     }
 }

@@ -1,11 +1,18 @@
 //! §3.4 — computation & communication complexity: measure the per-round
 //! bytes on the wire against Eq. 28 (`T_comm = 2·E·m·r` floats) and the
 //! per-client compute time against Eq. 26
-//! (`T_local = O(K·m·r·max(r, (n/E)·log(1/ε)))`) as E grows.
+//! (`T_local = O(K·m·r·max(r, (n/E)·log(1/ε)))`) as E grows — plus the
+//! coordinator's straggler behavior: with the event-driven engine, one
+//! slow client costs a round its deadline (the straggler cut), not an
+//! unbounded wait.
+
+use std::time::Duration;
 
 use crate::bench_util::Table;
+use crate::coordinator::client::FaultPlan;
 use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
 use crate::coordinator::protocol::{round_wire_size, update_wire_size};
+use crate::coordinator::server::FaultPolicy;
 use crate::rpca::problem::ProblemSpec;
 use crate::util::csv::CsvWriter;
 
@@ -94,6 +101,79 @@ pub fn run(effort: Effort) -> Vec<CommRow> {
 
     print_table(n, &rows);
     rows
+}
+
+/// Straggler scenario: E clients, one of them `delay` late every round,
+/// under `SkipMissing` with a per-round deadline. The event-driven
+/// engine closes each round at the straggler cut, so round latency is
+/// bounded by the deadline — never by the slow client.
+#[derive(Clone, Debug)]
+pub struct StragglerRow {
+    pub clients: usize,
+    pub slow_clients: usize,
+    pub delay_secs: f64,
+    pub deadline_secs: f64,
+    /// percentile round wall-times with the straggler present
+    pub round_p50_secs: f64,
+    pub round_p99_secs: f64,
+    /// p50 of the same config without the straggler, for scale
+    pub baseline_p50_secs: f64,
+    pub participants_min: usize,
+    pub participants_max: usize,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn round_secs_sorted(res: &crate::coordinator::driver::DcfPcaResult) -> Vec<f64> {
+    let mut v: Vec<f64> = res.rounds.iter().map(|r| r.round_secs).collect();
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+pub fn straggler_run(effort: Effort) -> StragglerRow {
+    let (n, rounds) = match effort {
+        Effort::Quick => (160, 6),
+        Effort::Full => (640, 10),
+    };
+    let e = 32;
+    // the slow client overshoots the deadline every round → it is cut,
+    // and round latency pins to the deadline instead of the straggler
+    let delay = Duration::from_millis(120);
+    let deadline = Duration::from_millis(80);
+    let spec = ProblemSpec::paper_default(n);
+    let problem = spec.generate(42);
+
+    let mut cfg = DcfPcaConfig::default_for(&spec)
+        .with_clients(e)
+        .with_rounds(rounds)
+        .with_k_local(2)
+        .with_seed(5);
+    cfg.fault_policy = FaultPolicy::SkipMissing;
+    cfg.round_timeout = deadline;
+
+    let baseline = run_dcf_pca(&problem, &cfg).expect("straggler baseline");
+    let base_sorted = round_secs_sorted(&baseline);
+
+    cfg.faults = vec![FaultPlan::default(); e];
+    cfg.faults[0].reply_delay = Some(delay);
+    let slow = run_dcf_pca(&problem, &cfg).expect("straggler run");
+    let slow_sorted = round_secs_sorted(&slow);
+
+    StragglerRow {
+        clients: e,
+        slow_clients: 1,
+        delay_secs: delay.as_secs_f64(),
+        deadline_secs: deadline.as_secs_f64(),
+        round_p50_secs: percentile(&slow_sorted, 0.5),
+        round_p99_secs: percentile(&slow_sorted, 0.99),
+        baseline_p50_secs: percentile(&base_sorted, 0.5),
+        participants_min: slow.rounds.iter().map(|r| r.participants).min().unwrap_or(0),
+        participants_max: slow.rounds.iter().map(|r| r.participants).max().unwrap_or(0),
+    }
 }
 
 fn print_table(n: usize, rows: &[CommRow]) {

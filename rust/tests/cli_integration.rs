@@ -47,6 +47,33 @@ fn solve_small_dcf_and_csv() {
 }
 
 #[test]
+fn solve_accepts_coordinator_knobs() {
+    // --participation / --compression / --round-timeout reach the driver
+    let out = bin()
+        .args([
+            "solve", "--algorithm", "dcf-pca", "--n", "50", "--rank", "2", "--clients", "5",
+            "--rounds", "20", "--participation", "0.6", "--compression", "int8",
+            "--round-timeout", "30",
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stderr: {stderr}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("DCF-PCA: final err"));
+    // bad values are rejected up front
+    for bad in [
+        vec!["--participation", "1.5"],
+        vec!["--compression", "zip"],
+        vec!["--round-timeout", "-1"],
+    ] {
+        let mut args = vec!["solve", "--algorithm", "dcf-pca", "--n", "40", "--rounds", "5"];
+        args.extend(bad.clone());
+        let out = bin().args(&args).output().unwrap();
+        assert!(!out.status.success(), "expected rejection of {bad:?}");
+    }
+}
+
+#[test]
 fn solve_all_centralized_algorithms() {
     for algo in ["cf-pca", "apgm", "alm"] {
         let out = bin()

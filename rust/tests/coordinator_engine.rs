@@ -1,0 +1,654 @@
+//! RoundEngine integration: the sans-I/O state machine driven purely
+//! from in-memory events (no sockets, no channels, no clock), plus the
+//! straggler/elasticity behavior of the reactor-driven paths.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use dcf_pca::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
+use dcf_pca::coordinator::client::FaultPlan;
+use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use dcf_pca::coordinator::engine::{Action, RoundEngine};
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use dcf_pca::coordinator::protocol::{ToClient, ToServer};
+use dcf_pca::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
+use dcf_pca::coordinator::Compression;
+use dcf_pca::linalg::{matmul_nt, Mat, Workspace};
+use dcf_pca::rpca::partition::ColumnPartition;
+use dcf_pca::rpca::problem::{ProblemSpec, RpcaProblem};
+use dcf_pca::runtime::pool;
+
+// ---------------------------------------------------------------------------
+// in-memory federation: a client that is itself sans-I/O
+// ---------------------------------------------------------------------------
+
+/// Mirrors `run_client` exactly (same state/workspace/polish sequence),
+/// but produces outbound messages into a queue instead of a channel —
+/// so an engine test never touches a transport or a clock.
+struct SimClient {
+    id: u32,
+    job: u32,
+    m_block: Mat,
+    hyper: FactorHyper,
+    n_frac: f64,
+    polish_sweeps: usize,
+    truth: Option<(Mat, Mat)>,
+    state: ClientState,
+    ws: Workspace,
+    kernel: NativeKernel,
+    outbox: VecDeque<Vec<u8>>,
+}
+
+impl SimClient {
+    fn new(
+        id: usize,
+        job: u32,
+        m_block: Mat,
+        hyper: FactorHyper,
+        n_frac: f64,
+        truth: Option<(Mat, Mat)>,
+    ) -> Self {
+        let (m, n_i) = m_block.shape();
+        let mut outbox = VecDeque::new();
+        outbox.push_back(
+            ToServer::Hello { client: id as u32, cols: n_i as u64 }
+                .encode_with(job, Compression::None),
+        );
+        SimClient {
+            id: id as u32,
+            job,
+            m_block,
+            hyper,
+            n_frac,
+            polish_sweeps: 3,
+            truth,
+            state: ClientState::zeros(m, n_i, hyper.rank),
+            ws: Workspace::new(m, n_i, hyper.rank),
+            kernel: NativeKernel::new(),
+            outbox,
+        }
+    }
+
+    fn handle(&mut self, bytes: &[u8]) {
+        let (job, msg) = ToClient::decode_job(bytes).unwrap();
+        assert_eq!(job, self.job, "client {} got a message for job {job}", self.id);
+        match msg {
+            ToClient::Round { round, k_local, eta, u } => {
+                let mut u = u;
+                let out = self
+                    .kernel
+                    .local_epoch(
+                        &mut u,
+                        &self.m_block,
+                        &mut self.state,
+                        &self.hyper,
+                        self.n_frac,
+                        eta,
+                        k_local as usize,
+                        &mut self.ws,
+                    )
+                    .unwrap();
+                let err_num = match &self.truth {
+                    Some((l0, s0)) => {
+                        let l_i = matmul_nt(&u, &self.state.v);
+                        (&l_i - l0).frob_norm_sq() + (&self.state.s - s0).frob_norm_sq()
+                    }
+                    None => f64::NAN,
+                };
+                self.outbox.push_back(
+                    ToServer::Update {
+                        client: self.id,
+                        round,
+                        u,
+                        grad_norm: out.grad_norm,
+                        lipschitz: out.lipschitz,
+                        err_num,
+                        local_secs: 0.0,
+                    }
+                    .encode_with(self.job, Compression::None),
+                );
+            }
+            ToClient::Finish { reveal, final_u } => {
+                for _ in 0..self.polish_sweeps {
+                    polish_sweep(
+                        &final_u,
+                        &self.m_block,
+                        &mut self.state,
+                        &self.hyper,
+                        pool::global(),
+                        &mut self.ws,
+                    );
+                }
+                let reply = if reveal {
+                    let l_i = matmul_nt(&final_u, &self.state.v);
+                    ToServer::Reveal { client: self.id, l: l_i, s: self.state.s.clone() }
+                } else {
+                    ToServer::Withhold { client: self.id }
+                };
+                self.outbox
+                    .push_back(reply.encode_with(self.job, Compression::None));
+            }
+            ToClient::Shutdown => {}
+        }
+    }
+}
+
+/// Feed the federation to completion. `order[k]` decides whose pending
+/// messages enter the engine first after each step — i.e. the simulated
+/// arrival order. `late_hello = Some((ep, after))` withholds one client's
+/// Hello until `after` inbound messages have been processed (elastic
+/// join mid-run).
+fn drive_in_memory(
+    engine: &mut RoundEngine,
+    clients: &mut [SimClient],
+    order: &[usize],
+    late_hello: Option<(usize, usize)>,
+) {
+    let mut inbound: VecDeque<(usize, Vec<u8>)> = VecDeque::new();
+    let late_ep = late_hello.map(|(ep, _)| ep);
+    for &i in order {
+        if Some(i) != late_ep {
+            while let Some(m) = clients[i].outbox.pop_front() {
+                inbound.push_back((i, m));
+            }
+        }
+    }
+    // a synthetic clock the engine never reads on its own
+    let mut now = Duration::from_millis(1);
+    let mut processed = 0usize;
+    let mut joined = late_hello.is_none();
+    let mut guard = 0usize;
+    while !engine.all_done() {
+        guard += 1;
+        assert!(guard < 200_000, "engine made no progress");
+        if !joined {
+            if let Some((ep, after)) = late_hello {
+                if processed >= after {
+                    while let Some(m) = clients[ep].outbox.pop_front() {
+                        inbound.push_back((ep, m));
+                    }
+                    joined = true;
+                }
+            }
+        }
+        let (ep, bytes) = inbound.pop_front().expect("engine idle but not done");
+        processed += 1;
+        now += Duration::from_millis(1);
+        let actions = engine.handle_message(ep, &bytes, now);
+        for a in actions {
+            match a {
+                Action::Send { ep, bytes } => clients[ep].handle(&bytes),
+                Action::Close { .. } | Action::JobDone { .. } => {}
+            }
+        }
+        for &i in order {
+            if joined || Some(i) != late_ep {
+                while let Some(m) = clients[i].outbox.pop_front() {
+                    inbound.push_back((i, m));
+                }
+            }
+        }
+    }
+}
+
+/// Driver-equivalent ServerConfig for a generated problem.
+fn server_cfg_for(problem: &RpcaProblem, cfg: &DcfPcaConfig) -> ServerConfig {
+    let mut s = ServerConfig::new(problem.spec.m, cfg.hyper.rank, cfg.rounds, cfg.k_local);
+    s.schedule = cfg.schedule;
+    s.aggregation = cfg.aggregation;
+    s.privacy = cfg.privacy.clone();
+    s.seed = cfg.seed;
+    s.round_timeout = cfg.round_timeout;
+    s.fault_policy = cfg.fault_policy;
+    s.err_denominator = Some(problem.l0.frob_norm_sq() + problem.s0.frob_norm_sq());
+    s.compression = cfg.compression;
+    s.participation = cfg.participation;
+    s
+}
+
+fn sim_clients(problem: &RpcaProblem, cfg: &DcfPcaConfig, e: usize, job: u32) -> Vec<SimClient> {
+    let n = problem.spec.n;
+    let partition = ColumnPartition::even(n, e);
+    (0..e)
+        .map(|i| {
+            let (a, b) = partition.range(i);
+            SimClient::new(
+                i,
+                job,
+                problem.observed.cols_range(a, b),
+                cfg.hyper,
+                (b - a) as f64 / n as f64,
+                Some((problem.l0.cols_range(a, b), problem.s0.cols_range(a, b))),
+            )
+        })
+        .collect()
+}
+
+/// Eq. 30 error over revealed blocks (post-polish), as the driver
+/// assembles it.
+fn assembled_error(
+    problem: &RpcaProblem,
+    partition: &ColumnPartition,
+    revealed: &[(usize, Mat, Mat)],
+) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, l_i, s_i) in revealed {
+        let (a, b) = partition.range(*i);
+        let l0 = problem.l0.cols_range(a, b);
+        let s0 = problem.s0.cols_range(a, b);
+        num += (l_i - &l0).frob_norm_sq() + (s_i - &s0).frob_norm_sq();
+        den += l0.frob_norm_sq() + s0.frob_norm_sq();
+    }
+    num / den
+}
+
+// ---------------------------------------------------------------------------
+// sans-I/O: full E=4 federation from in-memory events only
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_runs_e4_purely_in_memory_and_matches_driver_bitwise() {
+    let spec = ProblemSpec::square(60, 3, 0.05);
+    let problem = spec.generate(7);
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(40);
+
+    // reference: the threaded in-proc driver (ChannelReactor path)
+    let reference = run_dcf_pca(&problem, &cfg).unwrap();
+    assert!(reference.final_error.unwrap() < 1e-3);
+
+    // same federation, zero I/O: every event is an in-memory Vec<u8>
+    let mut engine = RoundEngine::new();
+    engine.add_job(0, server_cfg_for(&problem, &cfg), 4);
+    let mut clients = sim_clients(&problem, &cfg, 4, 0);
+    drive_in_memory(&mut engine, &mut clients, &[0, 1, 2, 3], None);
+    let outcome: ServerOutcome = engine.take_result(0).unwrap().unwrap();
+
+    assert_eq!(outcome.u, reference.u, "sans-I/O engine diverged from the driver");
+    assert_eq!(outcome.rounds.len(), 40);
+    assert!(outcome.rounds.last().unwrap().err.unwrap() < 1e-3);
+    assert_eq!(outcome.revealed.len(), 4);
+    assert_eq!(outcome.client_cols, vec![15; 4]);
+}
+
+#[test]
+fn engine_aggregate_is_bitwise_invariant_to_arrival_order() {
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(9);
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(12);
+
+    let mut results = Vec::new();
+    for order in [[0, 1, 2, 3], [3, 1, 0, 2], [2, 3, 1, 0]] {
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, server_cfg_for(&problem, &cfg), 4);
+        let mut clients = sim_clients(&problem, &cfg, 4, 0);
+        drive_in_memory(&mut engine, &mut clients, &order, None);
+        results.push(engine.take_result(0).unwrap().unwrap());
+    }
+    // slot-ordered reduction ⇒ same U and same telemetry sums, bitwise,
+    // no matter which client's update lands first
+    assert_eq!(results[0].u, results[1].u);
+    assert_eq!(results[0].u, results[2].u);
+    for k in 1..results.len() {
+        for (a, b) in results[0].rounds.iter().zip(&results[k].rounds) {
+            assert_eq!(a.err, b.err);
+            assert_eq!(a.mean_grad_norm, b.mean_grad_norm);
+            assert_eq!(a.dispersion, b.dispersion);
+        }
+    }
+}
+
+#[test]
+fn engine_elastic_join_enters_at_next_round_boundary() {
+    let spec = ProblemSpec::square(60, 3, 0.05);
+    let problem = spec.generate(7);
+    let cfg = DcfPcaConfig::default_for(&spec).with_clients(5).with_rounds(40);
+
+    let mut engine = RoundEngine::new();
+    // only 4 founding members; the 5th Hello arrives mid-run
+    engine.add_job(0, server_cfg_for(&problem, &cfg), 4);
+    let mut clients = sim_clients(&problem, &cfg, 5, 0);
+    // 4 hellos + 3 rounds × 4 updates = 16 messages, then client 4 knocks
+    drive_in_memory(&mut engine, &mut clients, &[0, 1, 2, 3, 4], Some((4, 16)));
+    let outcome = engine.take_result(0).unwrap().unwrap();
+
+    assert_eq!(outcome.client_cols.len(), 5, "late joiner registered");
+    assert_eq!(outcome.revealed.len(), 5, "late joiner revealed its block");
+    let participants: Vec<usize> = outcome.rounds.iter().map(|r| r.participants).collect();
+    assert_eq!(participants[0], 4, "founding rounds run with 4 clients");
+    assert_eq!(*participants.last().unwrap(), 5, "joiner active after the boundary");
+    assert!(participants.windows(2).all(|w| w[0] <= w[1]), "{participants:?}");
+    // recovery still lands: U saw all blocks for most of the run, and
+    // polish refits every revealed block against the final U
+    let partition = ColumnPartition::even(spec.n, 5);
+    let err = assembled_error(&problem, &partition, &outcome.revealed);
+    assert!(err < 5e-3, "elastic-join recovery err {err}");
+}
+
+#[test]
+fn engine_multiplexes_concurrent_jobs_over_one_reactor() {
+    use dcf_pca::coordinator::client::{run_client, ClientConfig};
+    use dcf_pca::coordinator::transport::inproc::pair;
+    use dcf_pca::coordinator::transport::reactor::{drive, ChannelReactor};
+    use dcf_pca::coordinator::transport::Channel;
+
+    let spec_a = ProblemSpec::square(50, 2, 0.05);
+    let spec_b = ProblemSpec::square(40, 3, 0.05);
+    let problem_a = spec_a.generate(21);
+    let problem_b = spec_b.generate(22);
+    let cfg_a = DcfPcaConfig::default_for(&spec_a).with_clients(3).with_rounds(25).with_seed(0xA);
+    let cfg_b = DcfPcaConfig::default_for(&spec_b).with_clients(3).with_rounds(30).with_seed(0xB);
+
+    // single-job references
+    let ref_a = run_dcf_pca(&problem_a, &cfg_a).unwrap();
+    let ref_b = run_dcf_pca(&problem_b, &cfg_b).unwrap();
+
+    // one coordinator, one reactor, six endpoints, two interleaved jobs
+    let mut channels: Vec<Box<dyn Channel>> = Vec::new();
+    let mut handles = Vec::new();
+    for ep in 0..6 {
+        let job = (ep % 2) as u32;
+        let id = ep / 2;
+        let (problem, cfg) = if job == 0 { (&problem_a, &cfg_a) } else { (&problem_b, &cfg_b) };
+        let n = problem.spec.n;
+        let partition = ColumnPartition::even(n, 3);
+        let (a, b) = partition.range(id);
+        let client_cfg = ClientConfig {
+            id,
+            job,
+            m_block: problem.observed.cols_range(a, b),
+            hyper: cfg.hyper,
+            n_frac: (b - a) as f64 / n as f64,
+            polish_sweeps: cfg.polish_sweeps,
+            truth: Some((problem.l0.cols_range(a, b), problem.s0.cols_range(a, b))),
+            faults: FaultPlan::default(),
+            compression: Compression::None,
+            dp_sigma: 0.0,
+        };
+        let (server_side, mut client_side) = pair();
+        channels.push(Box::new(server_side));
+        handles.push(std::thread::spawn(move || {
+            run_client(&mut client_side, client_cfg, &NativeKernel::new())
+        }));
+    }
+
+    let mut engine = RoundEngine::new();
+    engine.add_job(0, server_cfg_for(&problem_a, &cfg_a), 3);
+    engine.add_job(1, server_cfg_for(&problem_b, &cfg_b), 3);
+    let mut reactor = ChannelReactor::new(&mut channels);
+    drive(&mut reactor, &mut engine).unwrap();
+    let out_a = engine.take_result(0).unwrap().unwrap();
+    let out_b = engine.take_result(1).unwrap().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // each multiplexed job matches its solo run bitwise
+    assert_eq!(out_a.u, ref_a.u);
+    assert_eq!(out_b.u, ref_b.u);
+    assert_eq!(out_a.rounds.len(), 25);
+    assert_eq!(out_b.rounds.len(), 30);
+    assert!(out_a.rounds.last().unwrap().err.unwrap() < 5e-2);
+    assert!(out_b.rounds.last().unwrap().err.unwrap() < 5e-2);
+}
+
+// ---------------------------------------------------------------------------
+// stragglers over the real in-proc transport (driver path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn straggler_round_time_tracks_max_not_sum() {
+    let spec = ProblemSpec::square(64, 2, 0.05);
+    let problem = spec.generate(31);
+    let e = 8;
+    let delay = Duration::from_millis(60);
+    let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(4);
+    cfg.faults = vec![FaultPlan { reply_delay: Some(delay), ..Default::default() }; e];
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+
+    let mean_round = res.rounds.iter().map(|r| r.round_secs).sum::<f64>() / res.rounds.len() as f64;
+    let sum_of_delays = e as f64 * delay.as_secs_f64(); // 0.48 s
+    assert!(
+        mean_round < 0.5 * sum_of_delays,
+        "round time {mean_round:.3}s looks sequential (sum would be {sum_of_delays:.2}s)"
+    );
+    assert!(
+        mean_round >= delay.as_secs_f64() * 0.9,
+        "round time {mean_round:.3}s beat the slowest client — impossible"
+    );
+}
+
+#[test]
+fn deterministic_u_regardless_of_which_client_straggles() {
+    let spec = ProblemSpec::square(50, 2, 0.05);
+    let problem = spec.generate(32);
+    let e = 5;
+    let base = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(6);
+
+    let mut slow_first = base.clone();
+    slow_first.faults = vec![FaultPlan::default(); e];
+    slow_first.faults[0].reply_delay = Some(Duration::from_millis(40));
+
+    let mut slow_last = base.clone();
+    slow_last.faults = vec![FaultPlan::default(); e];
+    slow_last.faults[e - 1].reply_delay = Some(Duration::from_millis(40));
+
+    let a = run_dcf_pca(&problem, &slow_first).unwrap();
+    let b = run_dcf_pca(&problem, &slow_last).unwrap();
+    let c = run_dcf_pca(&problem, &base).unwrap();
+    // arrival order changed; slot-ordered reduction keeps U (and hence
+    // L, S) bitwise identical
+    assert_eq!(a.u, b.u);
+    assert_eq!(a.u, c.u);
+    assert_eq!(a.l, b.l);
+    assert_eq!(a.s, b.s);
+}
+
+#[test]
+fn straggler_cut_bounds_round_latency() {
+    let spec = ProblemSpec::square(64, 2, 0.05);
+    let problem = spec.generate(33);
+    let e = 8;
+    let deadline = Duration::from_millis(150);
+    let delay = Duration::from_millis(400);
+
+    // baseline: no straggler, same deadline
+    let mut base = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(6);
+    base.fault_policy = FaultPolicy::SkipMissing;
+    base.round_timeout = deadline;
+    let baseline = run_dcf_pca(&problem, &base).unwrap();
+    let base_mean =
+        baseline.rounds.iter().map(|r| r.round_secs).sum::<f64>() / baseline.rounds.len() as f64;
+
+    // one client 200 ms late every round: the cut closes each round at
+    // the deadline instead of waiting out the straggler
+    let mut cfg = base.clone();
+    cfg.faults = vec![FaultPlan::default(); e];
+    cfg.faults[0].reply_delay = Some(delay);
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+
+    let mean_round = res.rounds.iter().map(|r| r.round_secs).sum::<f64>() / res.rounds.len() as f64;
+    assert!(
+        mean_round < base_mean + 2.0 * deadline.as_secs_f64(),
+        "straggler dominated the round: {mean_round:.3}s vs baseline {base_mean:.3}s"
+    );
+    assert!(
+        mean_round < delay.as_secs_f64(),
+        "round waited out the straggler: {mean_round:.3}s"
+    );
+    // the cut excluded the straggler, not the run: it overshoots every
+    // deadline so it can never be a participant, while the healthy
+    // majority lands (≤ rather than == tolerates scheduler noise)
+    let participants: Vec<usize> = res.rounds.iter().map(|r| r.participants).collect();
+    assert!(participants.iter().all(|&p| p <= e - 1), "{participants:?}");
+    assert!(participants.iter().any(|&p| p == e - 1), "{participants:?}");
+    // hundreds of ms behind per round, it also misses the reveal
+    // deadline; the healthy majority reveals
+    assert!(res.withheld_clients.contains(&0));
+    assert!(res.revealed_clients.len() >= e - 2);
+    assert!(!res.revealed_clients.contains(&0));
+}
+
+// ---------------------------------------------------------------------------
+// reveal-phase faults (regression: used to abort the whole run)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reveal_phase_crash_is_withheld_under_skip_missing() {
+    let spec = ProblemSpec::square(40, 2, 0.05);
+    let problem = spec.generate(34);
+    let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(3).with_rounds(12);
+    cfg.fault_policy = FaultPolicy::SkipMissing;
+    cfg.round_timeout = Duration::from_secs(5);
+    cfg.faults = vec![
+        FaultPlan::default(),
+        FaultPlan { crash_at_finish: true, ..Default::default() },
+        FaultPlan::default(),
+    ];
+    let res = run_dcf_pca(&problem, &cfg).unwrap();
+    // every round ran with all three; only the reveal is missing
+    assert!(res.rounds.iter().all(|r| r.participants == 3));
+    assert_eq!(res.withheld_clients, vec![1]);
+    assert_eq!(res.revealed_clients, vec![0, 2]);
+    assert!(res.final_error.unwrap() < 5e-2);
+}
+
+#[test]
+fn reveal_phase_crash_still_fails_under_strict() {
+    let spec = ProblemSpec::square(30, 2, 0.05);
+    let problem = spec.generate(35);
+    let mut cfg = DcfPcaConfig::default_for(&spec).with_clients(2).with_rounds(5);
+    cfg.fault_policy = FaultPolicy::Strict;
+    cfg.round_timeout = Duration::from_secs(2);
+    cfg.faults = vec![
+        FaultPlan { crash_at_finish: true, ..Default::default() },
+        FaultPlan::default(),
+    ];
+    assert!(run_dcf_pca(&problem, &cfg).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// epoll reactor end-to-end (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll_e2e {
+    use super::*;
+    use dcf_pca::coordinator::client::{run_client, ClientConfig};
+    use dcf_pca::coordinator::transport::reactor::{drive, EpollReactor};
+    use dcf_pca::coordinator::transport::tcp::TcpChannel;
+
+    fn spawn_worker(
+        addr: String,
+        problem: &RpcaProblem,
+        partition: &ColumnPartition,
+        id: usize,
+        faults: FaultPlan,
+    ) -> std::thread::JoinHandle<dcf_pca::anyhow::Result<usize>> {
+        let spec = problem.spec;
+        let (a, b) = partition.range(id);
+        let m_block = problem.observed.cols_range(a, b);
+        let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
+        std::thread::spawn(move || {
+            let mut ch = TcpChannel::connect(&addr)?;
+            let cfg = ClientConfig {
+                id,
+                job: 0,
+                n_frac: (b - a) as f64 / spec.n as f64,
+                m_block,
+                hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
+                polish_sweeps: 3,
+                truth: Some(truth),
+                faults,
+                compression: Compression::None,
+                dp_sigma: 0.0,
+            };
+            run_client(&mut ch, cfg, &NativeKernel::new())
+        })
+    }
+
+    fn run_epoll_server(
+        listener: std::net::TcpListener,
+        cfg: ServerConfig,
+        expected: usize,
+    ) -> std::thread::JoinHandle<ServerOutcome> {
+        std::thread::spawn(move || {
+            let mut engine = RoundEngine::new();
+            engine.add_job(0, cfg, expected);
+            let mut reactor = EpollReactor::new(listener).unwrap();
+            drive(&mut reactor, &mut engine).unwrap();
+            engine.take_result(0).unwrap().unwrap()
+        })
+    }
+
+    /// Mirrors `driver::tests::recovers_distributed_small` numerically —
+    /// same problem, seed, E, rounds — so the epoll reactor must land the
+    /// same sub-1e-3 recovery as the in-proc path.
+    #[test]
+    fn epoll_reactor_recovers_like_the_inproc_path() {
+        let spec = ProblemSpec::square(60, 3, 0.05);
+        let problem = spec.generate(7);
+        let e = 5;
+        let partition = ColumnPartition::even(spec.n, e);
+        let dcf = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(40);
+        let cfg = server_cfg_for(&problem, &dcf);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = run_epoll_server(listener, cfg, e);
+        let workers: Vec<_> = (0..e)
+            .map(|id| spawn_worker(addr.clone(), &problem, &partition, id, FaultPlan::default()))
+            .collect();
+
+        let outcome = server.join().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        assert_eq!(outcome.revealed.len(), e);
+        let err = assembled_error(&problem, &partition, &outcome.revealed);
+        assert!(err < 1e-3, "epoll recovery err {err}");
+    }
+
+    #[test]
+    fn epoll_reactor_accepts_late_joiner_mid_run() {
+        let spec = ProblemSpec::square(60, 3, 0.05);
+        let problem = spec.generate(11);
+        let blocks = 5; // 4 founding workers + 1 elastic joiner
+        let partition = ColumnPartition::even(spec.n, blocks);
+        let mut dcf = DcfPcaConfig::default_for(&spec).with_clients(blocks).with_rounds(40);
+        dcf.round_timeout = Duration::from_secs(30);
+        let cfg = server_cfg_for(&problem, &dcf);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = run_epoll_server(listener, cfg, blocks - 1);
+
+        // founding workers pace the run at ≥20 ms per round so the
+        // joiner reliably lands mid-training
+        let pace = FaultPlan { reply_delay: Some(Duration::from_millis(20)), ..Default::default() };
+        let mut workers: Vec<_> = (0..blocks - 1)
+            .map(|id| spawn_worker(addr.clone(), &problem, &partition, id, pace))
+            .collect();
+        std::thread::sleep(Duration::from_millis(250));
+        workers.push(spawn_worker(
+            addr.clone(),
+            &problem,
+            &partition,
+            blocks - 1,
+            FaultPlan::default(),
+        ));
+
+        let outcome = server.join().unwrap();
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+
+        assert_eq!(outcome.client_cols.len(), blocks);
+        assert_eq!(outcome.revealed.len(), blocks, "joiner revealed its block");
+        let participants: Vec<usize> = outcome.rounds.iter().map(|r| r.participants).collect();
+        assert_eq!(participants[0], blocks - 1);
+        assert_eq!(*participants.last().unwrap(), blocks, "{participants:?}");
+        let err = assembled_error(&problem, &partition, &outcome.revealed);
+        assert!(err < 5e-3, "elastic TCP recovery err {err}");
+    }
+}

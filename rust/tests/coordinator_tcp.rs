@@ -32,6 +32,7 @@ fn spawn_tcp_clients(
                 let mut ch = TcpChannel::connect(&addr)?;
                 let cfg = ClientConfig {
                     id,
+                    job: 0,
                     n_frac: (b - a) as f64 / spec.n as f64,
                     m_block,
                     hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
@@ -98,7 +99,7 @@ fn tcp_client_crash_with_skip_policy() {
     let addr = acceptor.local_addr().unwrap();
     let faults = vec![
         FaultPlan::default(),
-        FaultPlan { crash_at_round: Some(4) },
+        FaultPlan { crash_at_round: Some(4), ..Default::default() },
         FaultPlan::default(),
     ];
     let handles = spawn_tcp_clients(&addr, &problem, &partition, faults);

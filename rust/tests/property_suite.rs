@@ -10,7 +10,7 @@ use dcf_pca::linalg::Workspace;
 use dcf_pca::runtime::pool;
 use dcf_pca::coordinator::aggregate::{aggregate, Aggregation};
 use dcf_pca::coordinator::protocol::{ToClient, ToServer};
-use dcf_pca::coordinator::transport::framing::{put_mat, Reader};
+use dcf_pca::coordinator::transport::framing::{frame_into, put_mat, FrameDecoder, Reader};
 use dcf_pca::linalg::{
     matmul, matmul_nt, matmul_tn, shrink, singular_values, svd_jacobi, Mat,
 };
@@ -85,6 +85,99 @@ fn prop_truncated_frames_never_panic() {
         let cut = g.usize_in(0, full.len().saturating_sub(1));
         // must error, not panic
         assert!(ToClient::decode(&full[..cut]).is_err());
+    });
+}
+
+/// Reference one-shot framing: the historical blocking read path
+/// (u32 LE length, then exactly that many payload bytes).
+fn one_shot_frames(mut stream: &[u8]) -> Result<Vec<Vec<u8>>, ()> {
+    let mut out = Vec::new();
+    while stream.len() >= 4 {
+        let len = u32::from_le_bytes(stream[..4].try_into().unwrap());
+        if len > (1 << 30) {
+            return Err(()); // corrupt header kills the connection
+        }
+        let len = len as usize;
+        if stream.len() < 4 + len {
+            break; // trailing partial frame: not yet arrived
+        }
+        out.push(stream[4..4 + len].to_vec());
+        stream = &stream[4 + len..];
+    }
+    Ok(out)
+}
+
+/// Run the incremental decoder over `stream` split at `cuts` (sorted
+/// fragment boundaries); `Err` mirrors a poisoned stream.
+fn incremental_frames(stream: &[u8], cuts: &[usize]) -> Result<Vec<Vec<u8>>, ()> {
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::new();
+    let mut prev = 0;
+    for &c in cuts.iter().chain(std::iter::once(&stream.len())) {
+        dec.push(&stream[prev..c]);
+        prev = c;
+        loop {
+            match dec.next_frame() {
+                Ok(Some(f)) => out.push(f),
+                Ok(None) => break,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[test]
+fn prop_frame_decoder_split_invariant() {
+    // any fragmentation of a valid multi-frame stream — including one
+    // byte at a time and every single split point — decodes identically
+    // to the one-shot path
+    property("frame decoder split invariance", 40, |g| {
+        let mut stream = Vec::new();
+        let mut frames = Vec::new();
+        for _ in 0..g.usize_in(0, 5) {
+            let len = g.usize_in(0, 60);
+            let frame: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+            frame_into(&mut stream, &frame);
+            frames.push(frame);
+        }
+        // maybe leave a dangling partial frame at the end
+        if g.bool() {
+            stream.extend_from_slice(&8u32.to_le_bytes());
+            stream.extend_from_slice(&[1, 2, 3]); // 3 of 8 payload bytes
+        }
+        let reference = one_shot_frames(&stream).unwrap();
+        assert_eq!(reference, frames);
+
+        // byte at a time
+        let every_byte: Vec<usize> = (1..stream.len()).collect();
+        assert_eq!(incremental_frames(&stream, &every_byte).unwrap(), frames);
+        // split at every single boundary in turn
+        for cut in 0..=stream.len() {
+            assert_eq!(incremental_frames(&stream, &[cut]).unwrap(), frames, "cut {cut}");
+        }
+        // a random handful of cuts
+        let mut cuts: Vec<usize> =
+            (0..g.usize_in(0, 6)).map(|_| g.usize_in(0, stream.len())).collect();
+        cuts.sort_unstable();
+        assert_eq!(incremental_frames(&stream, &cuts).unwrap(), frames);
+    });
+}
+
+#[test]
+fn prop_frame_decoder_garbage_prefix_matches_one_shot() {
+    // a stream whose first "length" word is garbage must be rejected by
+    // both paths the same way, at any fragmentation
+    property("frame decoder garbage prefix", 40, |g| {
+        let mut stream: Vec<u8> =
+            ((1u32 << 30) + 1 + g.usize_in(0, 1 << 20) as u32).to_le_bytes().to_vec();
+        for _ in 0..g.usize_in(0, 40) {
+            stream.push(g.usize_in(0, 255) as u8);
+        }
+        assert!(one_shot_frames(&stream).is_err());
+        let every_byte: Vec<usize> = (1..stream.len()).collect();
+        assert!(incremental_frames(&stream, &every_byte).is_err());
+        assert!(incremental_frames(&stream, &[]).is_err());
     });
 }
 
