@@ -4,7 +4,7 @@ use crate::bail;
 use crate::error::Result;
 
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
-use crate::experiments::{ablations, comm, fig1, fig2, fig3_table1, fig4, theory, Effort};
+use crate::experiments::{ablations, comm, fig1, fig2, fig3_table1, fig4, sim, theory, Effort};
 
 const SPECS: &[OptSpec] = &[
     OptSpec { name: "quick", takes_value: false, help: "reduced scales (minutes instead of tens of minutes)" },
@@ -15,7 +15,10 @@ const SPECS: &[OptSpec] = &[
 pub fn run(argv: &[String]) -> Result<()> {
     let args = ParsedArgs::parse(argv, SPECS)?;
     if args.flag("help") || args.positionals.is_empty() {
-        print!("{}", usage("experiment <fig1|fig2|fig3|table1|fig4|comm|ablations|theory|all>", SPECS));
+        print!(
+            "{}",
+            usage("experiment <fig1|fig2|fig3|table1|fig4|comm|ablations|theory|sim|all>", SPECS)
+        );
         return Ok(());
     }
     let effort = if args.flag("full") {
@@ -50,6 +53,12 @@ pub fn run(argv: &[String]) -> Result<()> {
                 theory::run_theorem1(effort);
                 theory::run_theorem2(effort);
             }
+            "sim" => {
+                let failures = sim::run(effort);
+                if failures > 0 {
+                    bail!("sim sweep found {failures} invariant violation(s)");
+                }
+            }
             "all" => {
                 fig1::run(effort);
                 fig2::run(effort);
@@ -59,9 +68,14 @@ pub fn run(argv: &[String]) -> Result<()> {
                 ablations::run(effort);
                 theory::run_theorem1(effort);
                 theory::run_theorem2(effort);
+                let failures = sim::run(effort);
+                if failures > 0 {
+                    bail!("sim sweep found {failures} invariant violation(s)");
+                }
             }
             other => bail!(
-                "unknown experiment '{other}' (fig1 fig2 fig3 table1 fig4 comm ablations theory all)"
+                "unknown experiment '{other}' \
+                 (fig1 fig2 fig3 table1 fig4 comm ablations theory sim all)"
             ),
         }
     }

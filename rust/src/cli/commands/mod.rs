@@ -4,4 +4,5 @@ pub mod artifacts_check;
 pub mod distributed;
 pub mod experiment;
 pub mod generate;
+pub mod simulate;
 pub mod solve;

@@ -1,0 +1,217 @@
+//! `dcf-pca simulate` — seeded fault-schedule fuzzing of the full
+//! protocol over the sans-I/O engine, entirely in virtual time.
+//!
+//! Thousands of multi-round federations run per wall-minute; every
+//! failure prints the seed that reproduces it (`--seeds S..S+1`) and,
+//! with `--shrink`, the greedily minimized fault schedule.
+
+use crate::bail;
+use crate::error::Result;
+
+use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
+use crate::sim::{SimConfig, SimHarness};
+use crate::telemetry;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec {
+        name: "seeds",
+        takes_value: true,
+        help: "seed range A..B (half-open) or a single seed; default 0..64",
+    },
+    OptSpec { name: "clients", takes_value: true, help: "federation size E (default 4)" },
+    OptSpec { name: "n", takes_value: true, help: "problem size (default 48)" },
+    OptSpec { name: "rank", takes_value: true, help: "rank (default 2)" },
+    OptSpec { name: "sparsity", takes_value: true, help: "corruption fraction (default 0.05)" },
+    OptSpec { name: "rounds", takes_value: true, help: "rounds T (default 16)" },
+    OptSpec { name: "k-local", takes_value: true, help: "local iterations K (default 2)" },
+    OptSpec {
+        name: "polish-sweeps",
+        takes_value: true,
+        help: "pre-reveal polish sweeps (default 3)",
+    },
+    OptSpec { name: "problem-seed", takes_value: true, help: "synthetic-instance seed (default 7)" },
+    OptSpec {
+        name: "server-seed",
+        takes_value: true,
+        help: "coordinator seed for U⁰/participation (default 0xDCF)",
+    },
+    OptSpec {
+        name: "timeout-ms",
+        takes_value: true,
+        help: "virtual per-round straggler deadline in ms (default 50)",
+    },
+    OptSpec {
+        name: "tolerance",
+        takes_value: true,
+        help: "error ceiling for under-budget schedules (default 5e-2)",
+    },
+    OptSpec {
+        name: "shrink",
+        takes_value: false,
+        help: "greedily minimize each failing schedule before printing it",
+    },
+    OptSpec { name: "verbose", takes_value: false, help: "one line per seed + engine logs" },
+    THREADS_OPT,
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+/// Parse `A..B` (half-open) or a bare `N` (meaning `N..N+1`).
+fn parse_seed_range(spec: &str) -> Result<(u64, u64)> {
+    if let Some((a, b)) = spec.split_once("..") {
+        let a: u64 = a.trim().parse().map_err(|_| crate::anyhow!("bad seed range '{spec}'"))?;
+        let b: u64 = b.trim().parse().map_err(|_| crate::anyhow!("bad seed range '{spec}'"))?;
+        if a >= b {
+            bail!("seed range '{spec}' is empty (want A < B)");
+        }
+        Ok((a, b))
+    } else {
+        let s: u64 = spec.trim().parse().map_err(|_| crate::anyhow!("bad seed '{spec}'"))?;
+        Ok((s, s + 1))
+    }
+}
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("simulate", SPECS));
+        return Ok(());
+    }
+    apply_threads(&args)?;
+    let verbose = args.flag("verbose");
+    if !verbose {
+        // the engine narrates straggler cuts and departures at warn
+        // level — thousands of simulated faults would drown the report
+        telemetry::set_level(telemetry::Level::Off);
+    }
+    let (first, last) = parse_seed_range(args.get("seeds").unwrap_or("0..64"))?;
+
+    let mut cfg = SimConfig::default();
+    if let Some(e) = args.get_usize("clients")? {
+        cfg.clients = e;
+    }
+    if let Some(n) = args.get_usize("n")? {
+        cfg.n = n;
+    }
+    if let Some(r) = args.get_usize("rank")? {
+        cfg.rank = r;
+    }
+    if let Some(s) = args.get_f64("sparsity")? {
+        cfg.sparsity = s;
+    }
+    if let Some(t) = args.get_usize("rounds")? {
+        cfg.rounds = t;
+    }
+    if let Some(k) = args.get_usize("k-local")? {
+        cfg.k_local = k;
+    }
+    if let Some(p) = args.get_usize("polish-sweeps")? {
+        cfg.polish_sweeps = p;
+    }
+    if let Some(s) = args.get_u64("problem-seed")? {
+        cfg.problem_seed = s;
+    }
+    if let Some(s) = args.get_u64("server-seed")? {
+        cfg.server_seed = s;
+    }
+    if let Some(ms) = args.get_u64("timeout-ms")? {
+        if ms == 0 {
+            bail!("--timeout-ms must be positive");
+        }
+        cfg.round_timeout = std::time::Duration::from_millis(ms);
+    }
+    if let Some(tol) = args.get_f64("tolerance")? {
+        cfg.err_tolerance = tol;
+    }
+
+    println!(
+        "simulate: E={} n={} rank={} T={} K={} timeout={}ms seeds {first}..{last}",
+        cfg.clients,
+        cfg.n,
+        cfg.rank,
+        cfg.rounds,
+        cfg.k_local,
+        cfg.round_timeout.as_millis()
+    );
+    let harness = SimHarness::new(cfg)?;
+
+    let wall = std::time::Instant::now();
+    let total = last - first;
+    let mut ok = 0u64;
+    let mut failures = 0u64;
+    let mut virtual_total = std::time::Duration::ZERO;
+    for seed in first..last {
+        match harness.check_seed(seed) {
+            Ok(report) => {
+                ok += 1;
+                virtual_total += report.virtual_elapsed;
+                if verbose {
+                    println!(
+                        "seed {seed}: ok — {} fault(s), {} materialized, {} delayed, \
+                         {} round(s), min participants {}, err {}, {:?} virtual{}",
+                        report.faults,
+                        report.materialized,
+                        report.delayed,
+                        report.rounds_run,
+                        report.min_participants,
+                        report
+                            .final_err
+                            .map_or_else(|| "n/a".to_string(), |e| format!("{e:.2e}")),
+                        report.virtual_elapsed,
+                        if report.bitwise_clean { ", bitwise-clean" } else { "" }
+                    );
+                }
+            }
+            Err(violation) => {
+                failures += 1;
+                println!("seed {seed}: FAIL");
+                println!("{violation}");
+                if args.flag("shrink") {
+                    match harness.shrink(&violation.schedule) {
+                        Some((minimal, min_violation)) => {
+                            println!(
+                                "shrunk to {} fault(s):\n{}\nstill fails with: {}",
+                                minimal.faults.len(),
+                                minimal.describe(),
+                                min_violation.detail
+                            );
+                        }
+                        None => println!("shrink: failure did not reproduce on re-run"),
+                    }
+                }
+            }
+        }
+        let done = seed - first + 1;
+        if !verbose && done % 128 == 0 && done < total {
+            eprintln!("… {done}/{total} seeds checked ({failures} failure(s))");
+        }
+    }
+
+    let wall = wall.elapsed();
+    println!(
+        "{total} seed(s): {ok} ok, {failures} failed — {:.1}s simulated in {:.1}s wall \
+         ({:.0} seeds/s)",
+        virtual_total.as_secs_f64(),
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    if failures > 0 {
+        bail!("{failures} of {total} seeds violated protocol invariants");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_range_forms() {
+        assert_eq!(parse_seed_range("0..64").unwrap(), (0, 64));
+        assert_eq!(parse_seed_range("7").unwrap(), (7, 8));
+        assert_eq!(parse_seed_range(" 3 .. 9 ").unwrap(), (3, 9));
+        assert!(parse_seed_range("9..3").is_err());
+        assert!(parse_seed_range("5..5").is_err());
+        assert!(parse_seed_range("abc").is_err());
+        assert!(parse_seed_range("1..z").is_err());
+    }
+}

@@ -6,7 +6,8 @@
 //! dcf-pca generate    --n 500 [--rank 25 --sparsity 0.05 --seed 42] --out m.csv
 //! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [...]
 //! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [...]
-//! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm> [--quick]
+//! dcf-pca simulate    --seeds 0..512 [--shrink]
+//! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm|sim> [--quick]
 //! dcf-pca artifacts-check [--dir artifacts]
 //! ```
 
@@ -26,6 +27,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "generate" => commands::generate::run(rest),
         "serve" => commands::distributed::run_serve(rest),
         "worker" => commands::distributed::run_worker(rest),
+        "simulate" => commands::simulate::run(rest),
         "experiment" => commands::experiment::run(rest),
         "artifacts-check" => commands::artifacts_check::run(rest),
         "help" | "--help" | "-h" => {
@@ -48,7 +50,9 @@ commands:
   generate         emit a synthetic RPCA instance as CSV
   serve            run the DCF-PCA server over TCP
   worker           run one DCF-PCA client over TCP
-  experiment       regenerate a paper table/figure (fig1 fig2 fig3 table1 fig4 comm)
+  simulate         fuzz the full protocol under seeded fault schedules (virtual time)
+  experiment       regenerate a paper table/figure
+                   (fig1 fig2 fig3 table1 fig4 comm ablations theory sim)
   artifacts-check  validate AOT artifacts against the native kernels
   help             this message
 

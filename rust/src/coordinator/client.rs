@@ -110,15 +110,7 @@ pub fn run_client(
                     &mut ws,
                 )?;
                 let local_secs = crate::util::cputime::thread_cpu_seconds() - t0;
-                if cfg.dp_sigma > 0.0 {
-                    let seed = (cfg.id as u64) << 32 | round as u64;
-                    let mut g = crate::rng::GaussianSource::new(
-                        crate::rng::Pcg64::new(0xD9).fork(seed),
-                    );
-                    for x in u.as_mut_slice() {
-                        *x += cfg.dp_sigma * g.next_gaussian();
-                    }
-                }
+                super::privacy::perturb_update(&mut u, cfg.dp_sigma, cfg.id, round);
                 // telemetry: partial error numerator against ground truth
                 let err_num = match &cfg.truth {
                     Some((l0, s0)) => {

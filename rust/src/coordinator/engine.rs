@@ -822,8 +822,90 @@ impl RoundEngine {
         self.jobs.values().all(Job::done)
     }
 
+    /// Index of the round `job` is currently collecting (`None` in any
+    /// other phase). The simulation harness checks every `Round`
+    /// broadcast against this.
+    pub fn round_of(&self, job: JobId) -> Option<usize> {
+        self.jobs.get(&job).and_then(|j| match &j.phase {
+            Phase::Collecting(_) => Some(j.round),
+            _ => None,
+        })
+    }
+
+    /// Coarse phase label for diagnostics and simulation invariants.
+    pub fn phase_of(&self, job: JobId) -> Option<&'static str> {
+        self.jobs.get(&job).map(|j| match &j.phase {
+            Phase::Handshake { .. } => "handshake",
+            Phase::Collecting(_) => "collecting",
+            Phase::Finishing { .. } => "finishing",
+            Phase::Done => "done",
+        })
+    }
+
     /// Collect a finished job's outcome (once).
     pub fn take_result(&mut self, job: JobId) -> Option<Result<ServerOutcome>> {
         self.jobs.get_mut(&job).and_then(|j| j.result.take())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc_counter;
+    use crate::coordinator::compress::Compression;
+    use crate::coordinator::protocol::ToServer;
+    use crate::rng::Pcg64;
+
+    fn update_msg(client: u32, round: u32, m: usize, rank: usize) -> Vec<u8> {
+        let mut rng = Pcg64::new(client as u64 + 1);
+        ToServer::Update {
+            client,
+            round,
+            u: Mat::gaussian(m, rank, &mut rng),
+            grad_norm: 1.0,
+            lipschitz: 1.0,
+            err_num: f64::NAN,
+            local_secs: 0.0,
+        }
+        .encode_with(0, Compression::None)
+    }
+
+    /// Allocation counts for one steady-state (post-handshake,
+    /// non-round-closing) `handle_message` and one idle `poll_deadline`.
+    fn steady_state_allocs(m: usize) -> (u64, u64) {
+        let rank = 2;
+        let cfg = ServerConfig::new(m, rank, 4, 1);
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, cfg, 2);
+        let t = Duration::from_millis(1);
+        engine.handle_message(0, &ToServer::Hello { client: 0, cols: 4 }.encode(), t);
+        // second Hello completes the handshake and broadcasts round 0
+        engine.handle_message(1, &ToServer::Hello { client: 1, cols: 4 }.encode(), t);
+        let msg = update_msg(0, 0, m, rank);
+        let (actions, update_allocs) =
+            alloc_counter::measure(|| engine.handle_message(0, &msg, Duration::from_millis(2)));
+        assert!(actions.is_empty(), "a non-closing update must not emit actions");
+        let (actions, poll_allocs) =
+            alloc_counter::measure(|| engine.poll_deadline(Duration::from_millis(3)));
+        assert!(actions.is_empty(), "no deadline is due yet");
+        (update_allocs, poll_allocs)
+    }
+
+    /// PR-1's zero-alloc discipline, extended to the engine: an idle
+    /// deadline poll allocates nothing, and ingesting an update costs a
+    /// handful of allocations (the decoded matrix and its slot) whose
+    /// *count* is independent of the payload size — no per-entry or
+    /// per-member allocation hides in the steady-state path.
+    #[test]
+    fn steady_state_handle_message_allocates_o1_and_poll_nothing() {
+        let (update_small, poll_small) = steady_state_allocs(16);
+        let (update_large, poll_large) = steady_state_allocs(96);
+        assert_eq!(poll_small, 0, "idle poll_deadline must not allocate");
+        assert_eq!(poll_large, 0, "idle poll_deadline must not allocate");
+        assert_eq!(
+            update_small, update_large,
+            "handle_message allocation count must not scale with the matrix"
+        );
+        assert!(update_small <= 8, "steady-state update made {update_small} allocations");
     }
 }

@@ -2,8 +2,17 @@
 //! everyone but reveals recovered blocks `(L_i, S_i)` only for clients in
 //! `I_public`; for `i ∈ I_private`, nothing derived from `M_i` beyond the
 //! m×r consensus updates ever leaves the client.
+//!
+//! Beyond the reveal sets, this module owns the upload perturbation:
+//! [`perturb_update`] adds Gaussian noise to a consensus update, seeded
+//! per `(client, round)` so runs stay bit-reproducible, and
+//! [`gaussian_sigma`] maps an (ε, δ) budget to the mechanism's σ
+//! (vanishing as ε → ∞).
 
 use std::collections::BTreeSet;
+
+use crate::linalg::Mat;
+use crate::rng::{GaussianSource, Pcg64};
 
 /// Which clients may reveal their recovered blocks.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -35,6 +44,38 @@ impl PrivacySpec {
 
     pub fn num_private(&self) -> usize {
         self.private.len()
+    }
+}
+
+/// σ of the Gaussian mechanism for an L2 sensitivity `sensitivity` at
+/// budget (ε, δ): `σ = Δ·√(2 ln(1.25/δ)) / ε` (Dwork & Roth, Thm A.1).
+/// Monotone decreasing in ε, exactly 0 at ε = ∞ (no privacy, no noise).
+pub fn gaussian_sigma(epsilon: f64, delta: f64, sensitivity: f64) -> f64 {
+    assert!(epsilon > 0.0, "epsilon must be positive");
+    assert!(delta > 0.0 && delta < 1.0, "delta must be in (0, 1)");
+    assert!(sensitivity >= 0.0, "sensitivity must be non-negative");
+    if epsilon.is_infinite() {
+        return 0.0;
+    }
+    sensitivity * (2.0 * (1.25 / delta).ln()).sqrt() / epsilon
+}
+
+/// Add seeded Gaussian noise (scale `sigma`) to a consensus update
+/// before upload. The stream is derived from `(client, round)` only, so
+/// re-running a federation reproduces the noise bit for bit, and two
+/// clients (or two rounds) never share a stream. `sigma = 0` (the
+/// ε → ∞ budget) leaves `u` untouched — exactly, not just in
+/// distribution.
+pub fn perturb_update(u: &mut Mat, sigma: f64, client: usize, round: u32) {
+    // a NaN σ is a no-op (matching the historical `dp_sigma > 0.0`
+    // gate), never a matrix-wide NaN injection
+    if sigma.is_nan() || sigma <= 0.0 {
+        return;
+    }
+    let seed = (client as u64) << 32 | round as u64;
+    let mut g = GaussianSource::new(Pcg64::new(0xD9).fork(seed));
+    for x in u.as_mut_slice() {
+        *x += sigma * g.next_gaussian();
     }
 }
 

@@ -12,6 +12,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3_table1;
 pub mod fig4;
+pub mod sim;
 pub mod theory;
 
 /// Experiment scale knob.

@@ -1,0 +1,94 @@
+//! §Sim — fault-schedule fuzz sweep over the virtual-time simulator.
+//!
+//! Not a paper figure: this is the verification layer's own experiment.
+//! One row per seed records how hostile the drawn world was and how the
+//! protocol fared (rounds completed, minimum participation, assembled
+//! error, whether the bitwise-identity invariant applied). The CSV feeds
+//! the scenario-diversity tracking in EXPERIMENTS.md §Sim.
+
+use crate::sim::{SimConfig, SimHarness};
+use crate::telemetry;
+use crate::util::csv::CsvWriter;
+
+use super::{results_dir, Effort};
+
+/// Run the sweep; returns the number of invariant violations (0 for a
+/// healthy protocol).
+pub fn run(effort: Effort) -> usize {
+    let seeds = match effort {
+        Effort::Quick => 0..64u64,
+        Effort::Full => 0..1024u64,
+    };
+    // silence per-fault engine warnings for the sweep only — `experiment
+    // sim comm` must not mute the experiments that run after us
+    let prev_level = telemetry::level();
+    telemetry::set_level(telemetry::Level::Off);
+    let failures = run_sweep(seeds);
+    telemetry::set_level(prev_level);
+    failures
+}
+
+fn run_sweep(seeds: std::ops::Range<u64>) -> usize {
+    let harness = match SimHarness::new(SimConfig::default()) {
+        Ok(h) => h,
+        Err(err) => {
+            println!("sim: harness construction failed: {err}");
+            return 1;
+        }
+    };
+    let summary = harness.fuzz(seeds);
+
+    let mut csv = CsvWriter::new(&[
+        "seed",
+        "faults",
+        "materialized",
+        "delayed",
+        "completed_ok",
+        "rounds",
+        "min_participants",
+        "bitwise_clean",
+        "final_err",
+        "virtual_ms",
+    ]);
+    for r in &summary.reports {
+        csv.row(&[
+            &r.seed,
+            &r.faults,
+            &r.materialized,
+            &r.delayed,
+            &u8::from(r.completed_ok),
+            &r.rounds_run,
+            &r.min_participants,
+            &u8::from(r.bitwise_clean),
+            &r.final_err.unwrap_or(f64::NAN),
+            &r.virtual_elapsed.as_millis(),
+        ]);
+    }
+    for v in &summary.failures {
+        println!("sim seed {}: FAIL\n{v}", v.seed);
+        csv.row(&[
+            &v.seed,
+            &v.schedule.faults.len(),
+            &0usize,
+            &0usize,
+            &0u8,
+            &0usize,
+            &0usize,
+            &0u8,
+            &f64::NAN,
+            &0u128,
+        ]);
+    }
+    let path = results_dir().join("sim_fuzz.csv");
+    if let Err(err) = csv.write_file(&path) {
+        println!("sim: could not write {}: {err}", path.display());
+    }
+    let clean = summary.reports.iter().filter(|r| r.bitwise_clean).count();
+    println!(
+        "sim: {} seeds, {} failure(s), {clean} bitwise-clean — {}",
+        summary.seeds_run,
+        summary.failures.len(),
+        path.display()
+    );
+    summary.failures.len()
+}

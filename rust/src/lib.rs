@@ -27,6 +27,7 @@ pub mod linalg;
 pub mod rng;
 pub mod rpca;
 pub mod runtime;
+pub mod sim;
 pub mod telemetry;
 pub mod testing;
 pub mod util;

@@ -1,0 +1,145 @@
+//! Virtual time: a monotone simulated clock plus a deterministic ordered
+//! event heap.
+//!
+//! The simulation never sleeps — time advances only by jumping to the
+//! timestamp of the next scheduled event (or to a caller-imposed poll
+//! deadline). Ties are broken by insertion sequence, so two events at
+//! the same instant always replay in the order they were scheduled:
+//! a run is a pure function of (config, fault schedule), which is what
+//! makes every fuzz failure reproducible from its seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+/// The simulated monotonic clock. Starts at zero, only moves forward.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now: Duration,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    pub fn now(&self) -> Duration {
+        self.now
+    }
+
+    /// Jump forward to `t`. Jumping backwards is a harness bug.
+    pub fn advance_to(&mut self, t: Duration) {
+        debug_assert!(t >= self.now, "virtual clock moved backwards");
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+struct Entry<E> {
+    at: Duration,
+    seq: u64,
+    event: E,
+}
+
+// Reverse ordering on (at, seq) so the BinaryHeap (a max-heap) pops the
+// earliest event first. The payload never participates in ordering.
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Time-ordered event queue with deterministic FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` to fire at absolute virtual time `at`.
+    pub fn push_at(&mut self, at: Duration, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, event });
+    }
+
+    /// Timestamp of the next event, if any.
+    pub fn next_time(&self) -> Option<Duration> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    pub fn pop(&mut self) -> Option<(Duration, E)> {
+        self.heap.pop().map(|e| (e.at, e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_only_moves_forward() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance_to(Duration::from_millis(5));
+        c.advance_to(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn queue_orders_by_time_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push_at(Duration::from_millis(10), "b");
+        q.push_at(Duration::from_millis(5), "a");
+        q.push_at(Duration::from_millis(10), "c");
+        q.push_at(Duration::from_millis(20), "d");
+        assert_eq!(q.next_time(), Some(Duration::from_millis(5)));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c", "d"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamps_replay_in_schedule_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push_at(Duration::from_millis(1), i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,776 @@
+//! `SimHarness`: complete DCF-PCA federations in virtual time, with
+//! protocol invariants checked after every event.
+//!
+//! One harness owns one generated problem and its fault-free reference
+//! outcome; [`SimHarness::check_seed`] then replays the same federation
+//! under the fault schedule drawn from a seed and verifies:
+//!
+//! 1. **Action legality** — every engine output decodes, targets an open
+//!    endpoint, never follows `JobDone`, and every `Round` broadcast
+//!    carries exactly the round the engine is collecting.
+//! 2. **Monotone round counter** — broadcast round indices never go
+//!    backwards and never reach past the configured horizon.
+//! 3. **Bitwise determinism** — whenever no fault materialized and no
+//!    update was cut, the final `U` (and the slot-ordered per-round
+//!    telemetry sums) must equal the fault-free reference bit for bit:
+//!    latency reordering alone may never change the result.
+//! 4. **No panic, no livelock** — the run must terminate within an event
+//!    budget, and a reveal-phase crash must never panic or abort the job
+//!    while a healthy client remains (the PR-3 withheld-reveal fix).
+//! 5. **Recovery under budget** — when the schedule stays inside
+//!    [`FaultSchedule::under_budget`], every client reveals and the
+//!    assembled Eq. 30 error stays within the §4 tolerance.
+//!
+//! A failing seed reproduces exactly (`dcf-pca simulate --seeds S..S+1`)
+//! and [`SimHarness::shrink`] greedily deletes fault events while the
+//! failure persists, printing the minimal schedule.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::error::Result;
+
+use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
+use crate::coordinator::compress::Compression;
+use crate::coordinator::engine::{Action, RoundEngine};
+use crate::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use crate::coordinator::protocol::{ToClient, ToServer};
+use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
+use crate::coordinator::transport::reactor::{drive, IoEvent, Reactor};
+use crate::linalg::{matmul_nt, Mat, Workspace};
+use crate::rpca::partition::ColumnPartition;
+use crate::rpca::problem::{ProblemSpec, RpcaProblem};
+use crate::runtime::pool;
+
+use super::net::{SimNet, SimPeer};
+use super::schedule::FaultSchedule;
+
+/// Shape and tolerances of the simulated federation.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub clients: usize,
+    /// problem size (square instance, paper §4.1 style)
+    pub n: usize,
+    pub rank: usize,
+    pub sparsity: f64,
+    pub rounds: usize,
+    pub k_local: usize,
+    pub polish_sweeps: usize,
+    /// seed of the synthetic instance (independent of fault seeds)
+    pub problem_seed: u64,
+    /// server seed (U⁰ init + participation draws)
+    pub server_seed: u64,
+    /// per-round straggler deadline, in *virtual* time
+    pub round_timeout: Duration,
+    /// assembled-error ceiling for under-budget schedules (§4 scale)
+    pub err_tolerance: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            clients: 4,
+            n: 48,
+            rank: 2,
+            sparsity: 0.05,
+            rounds: 16,
+            k_local: 2,
+            polish_sweeps: 3,
+            problem_seed: 7,
+            server_seed: 0xDCF,
+            round_timeout: Duration::from_millis(50),
+            err_tolerance: 5e-2,
+        }
+    }
+}
+
+/// What one simulated run looked like (successful seeds).
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub seed: u64,
+    /// scheduled fault events
+    pub faults: usize,
+    /// faults that actually changed something
+    pub materialized: usize,
+    /// messages held by a delay fault (straggler/reorder injections)
+    pub delayed: usize,
+    pub rounds_run: usize,
+    pub min_participants: usize,
+    /// assembled Eq. 30 error over revealed blocks (None if none revealed)
+    pub final_err: Option<f64>,
+    pub virtual_elapsed: Duration,
+    /// the job reached `Ok` (over-budget schedules may legitimately abort)
+    pub completed_ok: bool,
+    /// this run qualified for — and passed — the bitwise-identity check
+    pub bitwise_clean: bool,
+}
+
+/// An invariant violation, carrying everything needed to reproduce it.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub seed: u64,
+    pub detail: String,
+    pub schedule: FaultSchedule,
+    /// full `dcf-pca simulate` command reproducing this failure —
+    /// includes the harness shape, not just the seed, so replays of
+    /// non-default configs run the same world
+    pub replay: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "invariant violated: {}", self.detail)?;
+        writeln!(f, "fault schedule (seed {}):", self.seed)?;
+        writeln!(f, "{}", self.schedule.describe())?;
+        write!(f, "replay with: {}", self.replay)
+    }
+}
+
+/// Aggregate of a seed sweep.
+#[derive(Debug, Default)]
+pub struct FuzzSummary {
+    pub seeds_run: u64,
+    pub reports: Vec<SimReport>,
+    pub failures: Vec<Violation>,
+    pub virtual_total: Duration,
+    pub wall: Duration,
+}
+
+// ---------------------------------------------------------------------------
+// sans-I/O client (mirrors coordinator::client::run_client exactly)
+// ---------------------------------------------------------------------------
+
+struct SimClientPeer {
+    id: u32,
+    job: u32,
+    m_block: Mat,
+    hyper: FactorHyper,
+    n_frac: f64,
+    polish_sweeps: usize,
+    truth: Option<(Mat, Mat)>,
+    state: ClientState,
+    ws: Workspace,
+    kernel: NativeKernel,
+}
+
+impl SimClientPeer {
+    fn new(
+        id: usize,
+        m_block: Mat,
+        hyper: FactorHyper,
+        n_frac: f64,
+        polish_sweeps: usize,
+        truth: Option<(Mat, Mat)>,
+    ) -> Self {
+        let (m, n_i) = m_block.shape();
+        SimClientPeer {
+            id: id as u32,
+            job: 0,
+            m_block,
+            hyper,
+            n_frac,
+            polish_sweeps,
+            truth,
+            state: ClientState::zeros(m, n_i, hyper.rank),
+            ws: Workspace::new(m, n_i, hyper.rank),
+            kernel: NativeKernel::new(),
+        }
+    }
+}
+
+impl SimPeer for SimClientPeer {
+    fn on_start(&mut self) -> Vec<Vec<u8>> {
+        vec![ToServer::Hello { client: self.id, cols: self.m_block.cols() as u64 }
+            .encode_with(self.job, Compression::None)]
+    }
+
+    fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>> {
+        let (job, msg) =
+            ToClient::decode_job(bytes).expect("client received undecodable bytes from engine");
+        assert_eq!(job, self.job, "client {} got a message for job {job}", self.id);
+        match msg {
+            ToClient::Round { round, k_local, eta, u } => {
+                let mut u = u;
+                let out = self
+                    .kernel
+                    .local_epoch(
+                        &mut u,
+                        &self.m_block,
+                        &mut self.state,
+                        &self.hyper,
+                        self.n_frac,
+                        eta,
+                        k_local as usize,
+                        &mut self.ws,
+                    )
+                    .expect("local epoch failed");
+                let err_num = match &self.truth {
+                    Some((l0, s0)) => {
+                        let l_i = matmul_nt(&u, &self.state.v);
+                        (&l_i - l0).frob_norm_sq() + (&self.state.s - s0).frob_norm_sq()
+                    }
+                    None => f64::NAN,
+                };
+                vec![ToServer::Update {
+                    client: self.id,
+                    round,
+                    u,
+                    grad_norm: out.grad_norm,
+                    lipschitz: out.lipschitz,
+                    err_num,
+                    local_secs: 0.0,
+                }
+                .encode_with(self.job, Compression::None)]
+            }
+            ToClient::Finish { reveal, final_u } => {
+                for _ in 0..self.polish_sweeps {
+                    polish_sweep(
+                        &final_u,
+                        &self.m_block,
+                        &mut self.state,
+                        &self.hyper,
+                        pool::global(),
+                        &mut self.ws,
+                    );
+                }
+                let reply = if reveal {
+                    let l_i = matmul_nt(&final_u, &self.state.v);
+                    ToServer::Reveal { client: self.id, l: l_i, s: self.state.s.clone() }
+                } else {
+                    ToServer::Withhold { client: self.id }
+                };
+                vec![reply.encode_with(self.job, Compression::None)]
+            }
+            ToClient::Shutdown => Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the harness
+// ---------------------------------------------------------------------------
+
+/// Per-run bookkeeping for the action-legality invariants.
+#[derive(Default)]
+struct RunTrace {
+    last_round: Option<usize>,
+    closed: BTreeSet<usize>,
+    job_done: bool,
+    disconnects: usize,
+}
+
+/// What `execute` hands back for post-run invariant checks.
+struct ExecOutcome {
+    outcome: Result<ServerOutcome>,
+    materialized: Vec<String>,
+    delayed: usize,
+    disconnects: usize,
+    virtual_elapsed: Duration,
+}
+
+/// Largest idle poll while deadlines are pending — mirrors the
+/// production `drive` loop (all virtual here, so it costs nothing).
+const MAX_IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Terminate-or-fail budget: no legal run at these scales comes within
+/// orders of magnitude of this many loop events.
+const MAX_EVENTS: u64 = 1_000_000;
+
+pub struct SimHarness {
+    cfg: SimConfig,
+    hyper: FactorHyper,
+    problem: RpcaProblem,
+    partition: ColumnPartition,
+    reference: ServerOutcome,
+}
+
+impl SimHarness {
+    /// Generate the problem and establish the fault-free reference run.
+    pub fn new(cfg: SimConfig) -> Result<Self> {
+        if cfg.clients == 0 || cfg.clients > cfg.n {
+            bail!("sim needs 1..=n clients, got {} for n={}", cfg.clients, cfg.n);
+        }
+        if cfg.rounds == 0 || cfg.k_local == 0 {
+            bail!("sim rounds and k_local must be positive");
+        }
+        let spec = ProblemSpec::square(cfg.n, cfg.rank, cfg.sparsity);
+        let problem = spec.generate(cfg.problem_seed);
+        let partition = ColumnPartition::even(cfg.n, cfg.clients);
+        let hyper = FactorHyper::default_for(spec.m, spec.n, cfg.rank);
+        let mut harness = SimHarness {
+            cfg,
+            hyper,
+            problem,
+            partition,
+            // placeholder until the reference run below replaces it
+            reference: ServerOutcome {
+                u: Mat::zeros(0, 0),
+                rounds: Vec::new(),
+                revealed: Vec::new(),
+                withheld: Vec::new(),
+                comm: Default::default(),
+                client_cols: Vec::new(),
+            },
+        };
+        let fault_free = FaultSchedule::fault_free(
+            harness.cfg.problem_seed,
+            harness.cfg.clients,
+            harness.cfg.rounds,
+        );
+        let exec = harness
+            .execute(&fault_free)
+            .map_err(|detail| crate::anyhow!("fault-free reference run failed: {detail}"))?;
+        let outcome = exec.outcome?;
+        let err = harness.assembled_error(&outcome.revealed);
+        if !(err <= harness.cfg.err_tolerance / 4.0) {
+            bail!(
+                "sim config does not converge fault-free (err {err:.3e} vs tolerance {:.1e}) — \
+                 raise rounds or the tolerance",
+                harness.cfg.err_tolerance
+            );
+        }
+        harness.reference = outcome;
+        Ok(harness)
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn problem(&self) -> &RpcaProblem {
+        &self.problem
+    }
+
+    /// The fault-free outcome every clean run must match bitwise.
+    pub fn reference(&self) -> &ServerOutcome {
+        &self.reference
+    }
+
+    fn server_cfg(&self) -> ServerConfig {
+        let mut cfg = ServerConfig::new(
+            self.problem.spec.m,
+            self.cfg.rank,
+            self.cfg.rounds,
+            self.cfg.k_local,
+        );
+        cfg.seed = self.cfg.server_seed;
+        cfg.round_timeout = self.cfg.round_timeout;
+        cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.err_denominator =
+            Some(self.problem.l0.frob_norm_sq() + self.problem.s0.frob_norm_sq());
+        cfg
+    }
+
+    fn peers(&self) -> Vec<Box<dyn SimPeer>> {
+        (0..self.cfg.clients)
+            .map(|i| {
+                let (a, b) = self.partition.range(i);
+                Box::new(SimClientPeer::new(
+                    i,
+                    self.problem.observed.cols_range(a, b),
+                    self.hyper,
+                    (b - a) as f64 / self.cfg.n as f64,
+                    self.cfg.polish_sweeps,
+                    Some((
+                        self.problem.l0.cols_range(a, b),
+                        self.problem.s0.cols_range(a, b),
+                    )),
+                )) as Box<dyn SimPeer>
+            })
+            .collect()
+    }
+
+    /// Eq. 30 error assembled over revealed blocks (as the driver does).
+    pub fn assembled_error(&self, revealed: &[(usize, Mat, Mat)]) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, l_i, s_i) in revealed {
+            let (a, b) = self.partition.range(*i);
+            let l0 = self.problem.l0.cols_range(a, b);
+            let s0 = self.problem.s0.cols_range(a, b);
+            num += (l_i - &l0).frob_norm_sq() + (s_i - &s0).frob_norm_sq();
+            den += l0.frob_norm_sq() + s0.frob_norm_sq();
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Per-action legality checks (invariants 1 and 2).
+    fn check_send(
+        &self,
+        engine: &RoundEngine,
+        trace: &mut RunTrace,
+        ep: usize,
+        bytes: &[u8],
+    ) -> std::result::Result<(), String> {
+        if trace.job_done {
+            return Err(format!("engine sent to endpoint {ep} after JobDone"));
+        }
+        if trace.closed.contains(&ep) {
+            return Err(format!("engine sent to endpoint {ep} after closing it"));
+        }
+        if ep >= self.cfg.clients {
+            return Err(format!("engine sent to unknown endpoint {ep}"));
+        }
+        let (job, msg) = ToClient::decode_job(bytes)
+            .map_err(|e| format!("engine emitted an undecodable message: {e}"))?;
+        if job != 0 {
+            return Err(format!("engine emitted a message for unregistered job {job}"));
+        }
+        if let ToClient::Round { round, .. } = msg {
+            let round = round as usize;
+            if round >= self.cfg.rounds {
+                return Err(format!(
+                    "broadcast for round {round} beyond the {}-round horizon",
+                    self.cfg.rounds
+                ));
+            }
+            if let Some(last) = trace.last_round {
+                if round < last {
+                    return Err(format!("round counter went backwards: {last} → {round}"));
+                }
+            }
+            if engine.round_of(0) != Some(round) {
+                return Err(format!(
+                    "round-{round} broadcast while engine is in phase {:?} (round {:?})",
+                    engine.phase_of(0),
+                    engine.round_of(0)
+                ));
+            }
+            trace.last_round = Some(round);
+        }
+        Ok(())
+    }
+
+    /// Run one schedule to completion on the invariant-checking loop
+    /// (the production `drive` loop plus per-action checks). `Err` is a
+    /// run-level invariant violation.
+    fn execute(&self, schedule: &FaultSchedule) -> std::result::Result<ExecOutcome, String> {
+        if schedule.clients != self.cfg.clients {
+            return Err(format!(
+                "schedule sized for {} clients, harness has {}",
+                schedule.clients, self.cfg.clients
+            ));
+        }
+        if schedule.founders() == 0 {
+            return Err("schedule leaves no founding clients".to_string());
+        }
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, self.server_cfg(), schedule.founders());
+        let mut net = SimNet::new(schedule.clone(), self.peers());
+        let mut trace = RunTrace::default();
+        let mut events = 0u64;
+        while !engine.all_done() {
+            events += 1;
+            if events > MAX_EVENTS {
+                return Err(format!("livelock: no completion within {MAX_EVENTS} events"));
+            }
+            let timeout = engine
+                .next_deadline()
+                .map(|d| d.saturating_sub(net.now()))
+                .map_or(MAX_IDLE_POLL, |t| t.min(MAX_IDLE_POLL));
+            let event =
+                net.poll(Some(timeout)).map_err(|e| format!("sim reactor poll failed: {e}"))?;
+            let now = net.now();
+            let mut actions: VecDeque<Action> = VecDeque::new();
+            match event {
+                IoEvent::Connected(ep) => engine.on_connect(ep),
+                IoEvent::Message(ep, bytes) => {
+                    actions.extend(engine.handle_message(ep, &bytes, now))
+                }
+                IoEvent::Disconnected(ep) => {
+                    trace.disconnects += 1;
+                    actions.extend(engine.on_disconnect(ep, now));
+                }
+                IoEvent::Tick => {}
+            }
+            actions.extend(engine.poll_deadline(net.now()));
+            while let Some(action) = actions.pop_front() {
+                match action {
+                    Action::Send { ep, bytes } => {
+                        self.check_send(&engine, &mut trace, ep, &bytes)?;
+                        if let Err(e) = net.send(ep, &bytes) {
+                            return Err(format!("send to endpoint {ep} failed: {e}"));
+                        }
+                    }
+                    Action::Close { ep } => {
+                        trace.closed.insert(ep);
+                        net.close(ep);
+                    }
+                    Action::JobDone { job } => {
+                        if job != 0 {
+                            return Err(format!("JobDone for unregistered job {job}"));
+                        }
+                        if trace.job_done {
+                            return Err("JobDone emitted twice".to_string());
+                        }
+                        trace.job_done = true;
+                    }
+                }
+            }
+        }
+        if !trace.job_done {
+            return Err("engine terminated without emitting JobDone".to_string());
+        }
+        let outcome = engine
+            .take_result(0)
+            .ok_or_else(|| "engine terminated without a job result".to_string())?;
+        Ok(ExecOutcome {
+            outcome,
+            materialized: net.materialized().to_vec(),
+            delayed: net.delayed(),
+            disconnects: trace.disconnects,
+            virtual_elapsed: net.now(),
+        })
+    }
+
+    /// Run one schedule under the *production* `drive` loop — no
+    /// invariant hooks, just [`SimNet`] standing in as the engine's
+    /// reactor, exactly like `ChannelReactor`/`EpollReactor` would.
+    pub fn run_production_drive(&self, schedule: &FaultSchedule) -> Result<ServerOutcome> {
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, self.server_cfg(), schedule.founders());
+        let mut net = SimNet::new(schedule.clone(), self.peers());
+        drive(&mut net, &mut engine)?;
+        engine.take_result(0).expect("drive returns only when every job has a result")
+    }
+
+    /// Run the fault schedule drawn from `seed` and check every invariant.
+    pub fn check_seed(&self, seed: u64) -> std::result::Result<SimReport, Violation> {
+        self.check_schedule(&FaultSchedule::draw(seed, self.cfg.clients, self.cfg.rounds))
+    }
+
+    /// The exact CLI invocation reproducing `seed` under this config:
+    /// every `SimConfig` field has a `simulate` flag, and all of them
+    /// are emitted here.
+    pub fn replay_command(&self, seed: u64) -> String {
+        format!(
+            "dcf-pca simulate --seeds {}..{} --clients {} --n {} --rank {} --sparsity {} \
+             --rounds {} --k-local {} --polish-sweeps {} --problem-seed {} --server-seed {} \
+             --timeout-ms {} --tolerance {}",
+            seed,
+            seed + 1,
+            self.cfg.clients,
+            self.cfg.n,
+            self.cfg.rank,
+            self.cfg.sparsity,
+            self.cfg.rounds,
+            self.cfg.k_local,
+            self.cfg.polish_sweeps,
+            self.cfg.problem_seed,
+            self.cfg.server_seed,
+            self.cfg.round_timeout.as_millis(),
+            self.cfg.err_tolerance
+        )
+    }
+
+    /// Run an explicit schedule and check every invariant.
+    pub fn check_schedule(
+        &self,
+        schedule: &FaultSchedule,
+    ) -> std::result::Result<SimReport, Violation> {
+        let viol = |detail: String| {
+            // only a seed-derived schedule replays from a seed range;
+            // hand-built or shrunk fault lists must be fed back through
+            // check_schedule verbatim, and the handle must say so
+            let derived =
+                FaultSchedule::draw(schedule.seed, schedule.clients, schedule.rounds);
+            let replay = if *schedule == derived {
+                self.replay_command(schedule.seed)
+            } else {
+                format!(
+                    "SimHarness::check_schedule with the fault list above (hand-built or \
+                     shrunk schedule — not derivable from seed {})",
+                    schedule.seed
+                )
+            };
+            Violation { seed: schedule.seed, detail, schedule: schedule.clone(), replay }
+        };
+        // invariant 4 front line: a panic anywhere in engine/client/net
+        // is itself the failure, reported with its replay seed
+        let exec = match catch_unwind(AssertUnwindSafe(|| self.execute(schedule))) {
+            Ok(Ok(exec)) => exec,
+            Ok(Err(detail)) => return Err(viol(detail)),
+            Err(panic) => {
+                let msg = crate::testing::panic_message(panic.as_ref());
+                return Err(viol(format!("panic during run: {msg}")));
+            }
+        };
+        let ExecOutcome { outcome, materialized, delayed, disconnects, virtual_elapsed } = exec;
+
+        let mut report = SimReport {
+            seed: schedule.seed,
+            faults: schedule.faults.len(),
+            materialized: materialized.len(),
+            delayed,
+            rounds_run: 0,
+            min_participants: 0,
+            final_err: None,
+            virtual_elapsed,
+            completed_ok: false,
+            bitwise_clean: false,
+        };
+
+        let out = match outcome {
+            Err(err) => {
+                // SkipMissing may only abort when faults starved the job
+                if schedule.has_healthy_client() {
+                    return Err(viol(format!(
+                        "job aborted despite a fault-free client: {err}"
+                    )));
+                }
+                return Ok(report);
+            }
+            Ok(out) => out,
+        };
+        report.completed_ok = true;
+        report.rounds_run = out.rounds.len();
+        report.min_participants =
+            out.rounds.iter().map(|r| r.participants).min().unwrap_or(0);
+
+        // telemetry sanity: monotone rounds, sane participation
+        if out.rounds.len() > self.cfg.rounds {
+            return Err(viol(format!(
+                "{} rounds recorded for a {}-round job",
+                out.rounds.len(),
+                self.cfg.rounds
+            )));
+        }
+        for w in out.rounds.windows(2) {
+            if w[1].round <= w[0].round {
+                return Err(viol(format!(
+                    "round telemetry not increasing: {} then {}",
+                    w[0].round, w[1].round
+                )));
+            }
+        }
+        for r in &out.rounds {
+            if r.participants == 0 || r.participants > self.cfg.clients {
+                return Err(viol(format!(
+                    "round {} recorded {} participants",
+                    r.round, r.participants
+                )));
+            }
+        }
+
+        // reveal bookkeeping: disjoint, in-range, id-sorted
+        let revealed: BTreeSet<usize> = out.revealed.iter().map(|(i, _, _)| *i).collect();
+        if revealed.len() != out.revealed.len() {
+            return Err(viol("duplicate client id in revealed blocks".to_string()));
+        }
+        for id in revealed.iter().chain(out.withheld.iter()) {
+            if *id >= self.cfg.clients {
+                return Err(viol(format!("unknown client {id} in the outcome")));
+            }
+        }
+        for id in &out.withheld {
+            if revealed.contains(id) {
+                return Err(viol(format!("client {id} both revealed and withheld")));
+            }
+        }
+
+        if !out.revealed.is_empty() {
+            report.final_err = Some(self.assembled_error(&out.revealed));
+        }
+
+        // invariant 3: nothing materialized and nobody cut ⇒ the run is a
+        // pure reordering of the reference and must match it bitwise
+        let full_participation = out.rounds.len() == self.cfg.rounds
+            && out.rounds.iter().all(|r| r.participants == self.cfg.clients);
+        if materialized.is_empty() && disconnects == 0 && full_participation {
+            if out.u != self.reference.u {
+                return Err(viol(
+                    "no update was cut, yet U diverged bitwise from the fault-free run"
+                        .to_string(),
+                ));
+            }
+            for (a, b) in out.rounds.iter().zip(&self.reference.rounds) {
+                if a.err != b.err
+                    || a.mean_grad_norm != b.mean_grad_norm
+                    || a.dispersion != b.dispersion
+                {
+                    return Err(viol(format!(
+                        "round {} telemetry diverged from the fault-free run \
+                         (slot-ordered reduction broken)",
+                        a.round
+                    )));
+                }
+            }
+            report.bitwise_clean = true;
+        }
+
+        // invariant 5: under-budget schedules still recover
+        if schedule.under_budget(self.cfg.round_timeout) {
+            if out.revealed.len() != self.cfg.clients {
+                return Err(viol(format!(
+                    "under-budget schedule withheld reveals: {:?}",
+                    out.withheld
+                )));
+            }
+            let err = report.final_err.unwrap_or(f64::NAN);
+            if !(err <= self.cfg.err_tolerance) {
+                return Err(viol(format!(
+                    "under-budget error {err:.3e} above the {:.1e} tolerance",
+                    self.cfg.err_tolerance
+                )));
+            }
+        }
+
+        Ok(report)
+    }
+
+    /// Greedy schedule minimization: repeatedly delete single fault
+    /// events while the run still fails any invariant. Returns the
+    /// minimal failing schedule and its violation.
+    pub fn shrink(&self, schedule: &FaultSchedule) -> Option<(FaultSchedule, Violation)> {
+        let mut current = schedule.clone();
+        let mut violation = match self.check_schedule(&current) {
+            Err(v) => v,
+            Ok(_) => return None,
+        };
+        loop {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < current.faults.len() {
+                let mut candidate = current.clone();
+                candidate.faults.remove(i);
+                match self.check_schedule(&candidate) {
+                    Err(v) => {
+                        current = candidate;
+                        violation = v;
+                        progressed = true;
+                    }
+                    Ok(_) => i += 1,
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        Some((current, violation))
+    }
+
+    /// Sweep a seed range; collect reports and failures.
+    pub fn fuzz(&self, seeds: Range<u64>) -> FuzzSummary {
+        let wall = Instant::now();
+        let mut summary = FuzzSummary::default();
+        for seed in seeds {
+            summary.seeds_run += 1;
+            match self.check_seed(seed) {
+                Ok(report) => {
+                    summary.virtual_total += report.virtual_elapsed;
+                    summary.reports.push(report);
+                }
+                Err(violation) => summary.failures.push(violation),
+            }
+        }
+        summary.wall = wall.elapsed();
+        summary
+    }
+}

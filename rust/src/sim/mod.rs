@@ -1,0 +1,34 @@
+//! Deterministic simulation of the full DCF-PCA protocol in virtual
+//! time.
+//!
+//! PR 3 made the coordinator a sans-I/O state machine precisely so the
+//! whole protocol could be driven by a simulated world; this module is
+//! that world:
+//!
+//! - [`clock`] — virtual time: a monotone [`clock::SimClock`] and a
+//!   deterministic ordered event heap (no real sleeps anywhere).
+//! - [`schedule`] — [`schedule::FaultSchedule`]: every message fate
+//!   (deliver-after-delay, drop, duplicate, reorder, partition) plus
+//!   crashes and late joins, materialized from one `u64` seed via
+//!   [`crate::rng::Pcg64`] so any failure replays from its seed.
+//! - [`net`] — [`net::SimNet`]: a virtual-time transport implementing
+//!   the PR-3 [`crate::coordinator::transport::reactor::Reactor`]
+//!   interface, so the production `drive` loop runs over it unchanged.
+//! - [`harness`] — [`harness::SimHarness`]: complete multi-client jobs
+//!   (E clients, elastic joins, crashes at any phase) with protocol
+//!   invariants checked after every event, plus greedy schedule
+//!   shrinking for failing seeds.
+//!
+//! Entry points: `dcf-pca simulate --seeds A..B [--shrink]` (CLI),
+//! `dcf-pca experiment sim` (CSV sweep), and the `sim_smoke` /
+//! `sim_fuzz` tests in `rust/tests/sim_harness.rs`.
+
+pub mod clock;
+pub mod harness;
+pub mod net;
+pub mod schedule;
+
+pub use clock::{EventQueue, SimClock};
+pub use harness::{FuzzSummary, SimConfig, SimHarness, SimReport, Violation};
+pub use net::{SimNet, SimPeer};
+pub use schedule::{Dir, Fault, FaultSchedule};

@@ -1,0 +1,397 @@
+//! `SimNet`: a simulated network + client fleet behind the PR-3 reactor
+//! interface.
+//!
+//! `SimNet` implements [`Reactor`], so the *production* event loop
+//! ([`crate::coordinator::transport::reactor::drive`]) — or the
+//! invariant-checking loop in [`super::harness`] — drives the engine
+//! over it unchanged. The difference from `ChannelReactor`/`EpollReactor`
+//! is that `poll` never sleeps: the reactor's clock is a [`SimClock`]
+//! that jumps to the timestamp of the next scheduled event, so thousands
+//! of multi-round federations run per wall-second.
+//!
+//! Every message's fate — deliver after latency, drop, duplicate,
+//! delay, partition-block — comes from the [`FaultSchedule`]; client
+//! compute happens inline (virtual-instant) when a delivery event pops,
+//! via the [`SimPeer`] registered for the endpoint. Crashes and late
+//! joins are schedule events too: a crash surfaces to the engine as the
+//! `Disconnected` it would see from a TCP reset, a join as a fresh
+//! `Connected` + `Hello`.
+//!
+//! Endpoint ids equal client ids (the sim never reconnects an endpoint),
+//! which keeps fault-schedule lookups and engine bindings aligned.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::bail;
+use crate::error::Result;
+
+use crate::coordinator::engine::EndpointId;
+use crate::coordinator::transport::reactor::{IoEvent, Reactor};
+
+use super::clock::{EventQueue, SimClock};
+use super::schedule::{Dir, FaultSchedule};
+
+/// A sans-I/O client: consumes protocol bytes, produces protocol bytes.
+/// Implementations must mirror the real worker loop so a simulated run
+/// is bitwise-comparable to a threaded in-proc run.
+pub trait SimPeer {
+    /// Messages the peer emits when it comes online (its `Hello`).
+    fn on_start(&mut self) -> Vec<Vec<u8>>;
+
+    /// Deliver one server→client message; returns the replies.
+    fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>>;
+}
+
+enum NetEvent {
+    DeliverToEngine { ep: EndpointId, bytes: Vec<u8> },
+    DeliverToPeer { ep: EndpointId, bytes: Vec<u8> },
+    Crash { ep: EndpointId },
+    Join { ep: EndpointId },
+}
+
+/// Virtual-time reactor over a fleet of [`SimPeer`]s and one
+/// [`FaultSchedule`].
+pub struct SimNet {
+    clock: SimClock,
+    queue: EventQueue<NetEvent>,
+    schedule: FaultSchedule,
+    peers: Vec<Option<Box<dyn SimPeer>>>,
+    /// false once the client process died (crash fault)
+    alive: Vec<bool>,
+    /// true once the engine closed its side of the endpoint
+    engine_closed: Vec<bool>,
+    crash_notified: Vec<bool>,
+    /// per-(dir, client) message counters — the `nth` of fate lookups
+    sent_down: Vec<usize>,
+    sent_up: Vec<usize>,
+    pending: VecDeque<IoEvent>,
+    /// faults that actually changed the run (empty ⇒ the bitwise
+    /// invariant against the fault-free reference applies)
+    materialized: Vec<String>,
+    /// messages a `Delay` fault held (straggler/reorder ledger; delays
+    /// are deliberately not `materialized` — see the bitwise invariant)
+    delayed: usize,
+}
+
+impl SimNet {
+    pub fn new(schedule: FaultSchedule, peers: Vec<Box<dyn SimPeer>>) -> Self {
+        let n = peers.len();
+        assert_eq!(n, schedule.clients, "schedule sized for a different fleet");
+        let mut net = SimNet {
+            clock: SimClock::new(),
+            queue: EventQueue::new(),
+            schedule,
+            peers: peers.into_iter().map(Some).collect(),
+            alive: vec![true; n],
+            engine_closed: vec![false; n],
+            crash_notified: vec![false; n],
+            sent_down: vec![0; n],
+            sent_up: vec![0; n],
+            pending: VecDeque::new(),
+            materialized: Vec::new(),
+            delayed: 0,
+        };
+        for ep in 0..n {
+            if let Some(at) = net.schedule.crash_time(ep) {
+                net.queue.push_at(at, NetEvent::Crash { ep });
+            }
+            match net.schedule.join_time(ep) {
+                Some(at) => net.queue.push_at(at, NetEvent::Join { ep }),
+                None => net.start_peer(ep),
+            }
+        }
+        net
+    }
+
+    /// Faults that materialized so far (human-readable, in event order).
+    pub fn materialized(&self) -> &[String] {
+        &self.materialized
+    }
+
+    /// Messages held by a `Delay` fault so far.
+    pub fn delayed(&self) -> usize {
+        self.delayed
+    }
+
+    /// Announce the peer to the engine and put its Hello on the wire.
+    fn start_peer(&mut self, ep: EndpointId) {
+        if !self.alive[ep] {
+            return;
+        }
+        self.pending.push_back(IoEvent::Connected(ep));
+        let msgs = match self.peers[ep].as_mut() {
+            Some(peer) => peer.on_start(),
+            None => return,
+        };
+        for m in msgs {
+            self.send_up(ep, m);
+        }
+    }
+
+    /// One client→server message enters the world.
+    fn send_up(&mut self, ep: EndpointId, bytes: Vec<u8>) {
+        if !self.alive[ep] {
+            return;
+        }
+        let nth = self.sent_up[ep];
+        self.sent_up[ep] += 1;
+        let now = self.clock.now();
+        if self.schedule.crash_before_send(ep, nth) {
+            // the client dies instead of replying; the engine notices
+            // one link-latency later, like a TCP reset would surface
+            self.alive[ep] = false;
+            self.materialized
+                .push(format!("client {ep} crashed before sending msg {nth} at {now:?}"));
+            let notice = now + self.schedule.base_latency(Dir::Up, ep, nth);
+            self.queue.push_at(notice, NetEvent::Crash { ep });
+            return;
+        }
+        if self.schedule.partitioned(ep, now) {
+            self.materialized.push(format!("partition ate up msg {nth} of client {ep} at {now:?}"));
+            return;
+        }
+        if self.schedule.is_delayed(Dir::Up, ep, nth) {
+            self.delayed += 1;
+        }
+        let fates = self.schedule.deliveries(Dir::Up, ep, nth);
+        if fates.is_empty() {
+            self.materialized.push(format!("dropped up msg {nth} of client {ep} at {now:?}"));
+        } else if fates.len() > 1 {
+            self.materialized.push(format!("duplicated up msg {nth} of client {ep} at {now:?}"));
+        }
+        for latency in fates {
+            self.queue
+                .push_at(now + latency, NetEvent::DeliverToEngine { ep, bytes: bytes.clone() });
+        }
+    }
+
+    fn process(&mut self, event: NetEvent) {
+        match event {
+            NetEvent::DeliverToEngine { ep, bytes } => {
+                // drop if the engine stopped reading (Close) or already
+                // saw the endpoint's reset: TCP never delivers stream
+                // data after the disconnect surfaced
+                if !self.engine_closed[ep] && !self.crash_notified[ep] {
+                    self.pending.push_back(IoEvent::Message(ep, bytes));
+                }
+            }
+            NetEvent::DeliverToPeer { ep, bytes } => {
+                if !self.alive[ep] {
+                    return;
+                }
+                // take the peer out so replies can re-borrow the net
+                let Some(mut peer) = self.peers[ep].take() else { return };
+                let replies = peer.on_message(&bytes);
+                self.peers[ep] = Some(peer);
+                for r in replies {
+                    self.send_up(ep, r);
+                }
+            }
+            NetEvent::Crash { ep } => {
+                self.alive[ep] = false;
+                if !self.crash_notified[ep] {
+                    self.crash_notified[ep] = true;
+                    self.materialized.push(format!("client {ep} dead at {:?}", self.clock.now()));
+                    if !self.engine_closed[ep] {
+                        self.pending.push_back(IoEvent::Disconnected(ep));
+                    }
+                }
+            }
+            NetEvent::Join { ep } => {
+                self.materialized.push(format!("client {ep} joined at {:?}", self.clock.now()));
+                self.start_peer(ep);
+            }
+        }
+    }
+}
+
+impl Reactor for SimNet {
+    /// Advance virtual time, running the world, until an engine-facing
+    /// event is due or `timeout` virtual time has passed. Never sleeps.
+    fn poll(&mut self, timeout: Option<Duration>) -> Result<IoEvent> {
+        let deadline = timeout.map(|t| self.clock.now() + t);
+        loop {
+            if let Some(e) = self.pending.pop_front() {
+                return Ok(e);
+            }
+            match self.queue.next_time() {
+                Some(t) if deadline.is_none_or(|d| t <= d) => {
+                    self.clock.advance_to(t);
+                    let (_, event) = self.queue.pop().expect("peeked event vanished");
+                    self.process(event);
+                }
+                _ => {
+                    // nothing due inside the window: burn the wait
+                    // instantly (an unbounded poll with an empty queue
+                    // would spin — report the idle tick instead)
+                    if let Some(d) = deadline {
+                        self.clock.advance_to(d);
+                    }
+                    return Ok(IoEvent::Tick);
+                }
+            }
+        }
+    }
+
+    /// One server→client message enters the world.
+    fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()> {
+        if ep >= self.peers.len() || self.engine_closed[ep] {
+            bail!("endpoint {ep} is closed");
+        }
+        let nth = self.sent_down[ep];
+        self.sent_down[ep] += 1;
+        let now = self.clock.now();
+        if !self.alive[ep] {
+            // written into the void between the crash and the engine
+            // noticing — in-flight loss, not an error
+            return Ok(());
+        }
+        if self.schedule.partitioned(ep, now) {
+            self.materialized
+                .push(format!("partition ate down msg {nth} to client {ep} at {now:?}"));
+            return Ok(());
+        }
+        if self.schedule.is_delayed(Dir::Down, ep, nth) {
+            self.delayed += 1;
+        }
+        let fates = self.schedule.deliveries(Dir::Down, ep, nth);
+        if fates.is_empty() {
+            self.materialized.push(format!("dropped down msg {nth} to client {ep} at {now:?}"));
+        } else if fates.len() > 1 {
+            self.materialized.push(format!("duplicated down msg {nth} to client {ep} at {now:?}"));
+        }
+        for latency in fates {
+            self.queue
+                .push_at(now + latency, NetEvent::DeliverToPeer { ep, bytes: msg.to_vec() });
+        }
+        Ok(())
+    }
+
+    fn close(&mut self, ep: EndpointId) {
+        if ep < self.engine_closed.len() {
+            self.engine_closed[ep] = true;
+        }
+    }
+
+    fn now(&self) -> Duration {
+        self.clock.now()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo peer: replies `reply` to every delivery, `hello` on start.
+    struct Echo {
+        hello: Vec<u8>,
+        reply: Vec<u8>,
+        seen: usize,
+    }
+
+    impl SimPeer for Echo {
+        fn on_start(&mut self) -> Vec<Vec<u8>> {
+            vec![self.hello.clone()]
+        }
+
+        fn on_message(&mut self, _bytes: &[u8]) -> Vec<Vec<u8>> {
+            self.seen += 1;
+            vec![self.reply.clone()]
+        }
+    }
+
+    fn echo_fleet(n: usize) -> Vec<Box<dyn SimPeer>> {
+        (0..n)
+            .map(|i| {
+                Box::new(Echo { hello: vec![i as u8], reply: vec![100 + i as u8], seen: 0 })
+                    as Box<dyn SimPeer>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn virtual_time_advances_without_sleeping() {
+        let schedule = FaultSchedule::fault_free(3, 2, 4);
+        let mut net = SimNet::new(schedule, echo_fleet(2));
+        // both peers announce + their hellos arrive within base latency
+        let wall = std::time::Instant::now();
+        let mut connected = 0;
+        let mut hellos = 0;
+        for _ in 0..8 {
+            match net.poll(Some(Duration::from_secs(3600))).unwrap() {
+                IoEvent::Connected(_) => connected += 1,
+                IoEvent::Message(ep, m) => {
+                    assert_eq!(m, vec![ep as u8]);
+                    hellos += 1;
+                }
+                IoEvent::Tick => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(connected, 2);
+        assert_eq!(hellos, 2);
+        // a full simulated hour of idle polling costs ~no wall time
+        assert!(matches!(net.poll(Some(Duration::from_secs(3600))).unwrap(), IoEvent::Tick));
+        assert!(net.now() >= Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(5), "sim slept on the wall clock");
+    }
+
+    #[test]
+    fn send_round_trips_through_a_peer() {
+        let schedule = FaultSchedule::fault_free(5, 1, 4);
+        let mut net = SimNet::new(schedule, echo_fleet(1));
+        // drain hello traffic
+        while !matches!(net.poll(Some(Duration::from_millis(50))).unwrap(), IoEvent::Tick) {}
+        net.send(0, b"ping").unwrap();
+        match net.poll(Some(Duration::from_millis(50))).unwrap() {
+            IoEvent::Message(0, m) => assert_eq!(m, vec![100]),
+            other => panic!("expected echo reply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crash_surfaces_as_disconnect_and_silences_the_peer() {
+        let mut schedule = FaultSchedule::fault_free(7, 2, 4);
+        schedule.faults.push(crate::sim::Fault::CrashAt { client: 1, at_ms: 10 });
+        let mut net = SimNet::new(schedule, echo_fleet(2));
+        let mut disconnected = None;
+        for _ in 0..16 {
+            match net.poll(Some(Duration::from_millis(100))).unwrap() {
+                IoEvent::Disconnected(ep) => {
+                    disconnected = Some(ep);
+                    break;
+                }
+                IoEvent::Tick => break,
+                _ => {}
+            }
+        }
+        assert_eq!(disconnected, Some(1));
+        // sends to the dead peer vanish quietly; the live one still echoes
+        net.send(1, b"x").unwrap();
+        net.send(0, b"y").unwrap();
+        let mut echoed = false;
+        for _ in 0..8 {
+            match net.poll(Some(Duration::from_millis(100))).unwrap() {
+                IoEvent::Message(0, m) => {
+                    assert_eq!(m, vec![100]);
+                    echoed = true;
+                    break;
+                }
+                IoEvent::Tick => break,
+                _ => {}
+            }
+        }
+        assert!(echoed);
+        assert!(!net.materialized().is_empty());
+    }
+
+    #[test]
+    fn closed_endpoint_rejects_sends() {
+        let schedule = FaultSchedule::fault_free(9, 1, 4);
+        let mut net = SimNet::new(schedule, echo_fleet(1));
+        net.close(0);
+        assert!(net.send(0, b"late").is_err());
+        assert!(net.send(7, b"bogus").is_err());
+    }
+}

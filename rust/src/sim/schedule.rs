@@ -1,0 +1,486 @@
+//! Fault schedules: every non-determinism source of a simulated run,
+//! materialized up front from one `u64` seed.
+//!
+//! A schedule has two parts:
+//!
+//! - **Environment** — a deterministic per-message base latency, derived
+//!   by forking [`Pcg64`] on `(direction, client, message index)`. This
+//!   is weather, not weapons: latency jitter alone must never change
+//!   the converged factor (the slot-ordered-reduction invariant).
+//! - **Faults** — an explicit `Vec<Fault>` of discrete events (drops,
+//!   duplicates, delays, crashes, partitions, late joins). Keeping them
+//!   as a list (rather than inline RNG draws at delivery time) is what
+//!   makes `--shrink` possible: the minimizer deletes one event at a
+//!   time and re-runs, and the remaining events keep their exact
+//!   meaning.
+//!
+//! The distribution drawn by [`FaultSchedule::draw`] is documented in
+//! EXPERIMENTS.md §Sim; anything outside [`FaultSchedule::under_budget`]
+//! is allowed to degrade the run (withheld reveals, aborted jobs) but
+//! never to panic or hang it.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::rng::Pcg64;
+
+/// Message direction through the simulated network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// server → client (Round / Finish / Shutdown broadcasts)
+    Down,
+    /// client → server (Hello / Update / Reveal / Withhold)
+    Up,
+}
+
+impl fmt::Display for Dir {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Dir::Down => "down",
+            Dir::Up => "up",
+        })
+    }
+}
+
+/// One discrete injected fault. `nth` counts messages per (direction,
+/// client) from 0 over the whole run — upstream message 0 is always the
+/// client's `Hello`, messages `1..=rounds` its round updates, and
+/// `rounds + 1` its finish reply (when it participated in every round).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// the message vanishes on the wire
+    Drop { dir: Dir, client: usize, nth: usize },
+    /// the message is delivered twice (second copy 1 ms later)
+    Duplicate { dir: Dir, client: usize, nth: usize },
+    /// the message is held `extra_ms` beyond its base latency — large
+    /// values straggle past the round deadline, small ones reorder
+    Delay { dir: Dir, client: usize, nth: usize, extra_ms: u64 },
+    /// the client process dies at this virtual time (any phase)
+    CrashAt { client: usize, at_ms: u64 },
+    /// the client dies instead of sending its `nth` upstream message —
+    /// `nth = rounds + 1` is exactly the reveal-phase crash
+    CrashBeforeSend { client: usize, nth: usize },
+    /// both directions to/from the client are cut during the window
+    Partition { client: usize, from_ms: u64, until_ms: u64 },
+    /// the client is not a founding member; its Hello enters at `at_ms`
+    LateJoin { client: usize, at_ms: u64 },
+}
+
+impl Fault {
+    /// The client this fault targets.
+    pub fn client(&self) -> usize {
+        match *self {
+            Fault::Drop { client, .. }
+            | Fault::Duplicate { client, .. }
+            | Fault::Delay { client, .. }
+            | Fault::CrashAt { client, .. }
+            | Fault::CrashBeforeSend { client, .. }
+            | Fault::Partition { client, .. }
+            | Fault::LateJoin { client, .. } => client,
+        }
+    }
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::Drop { dir, client, nth } => {
+                write!(f, "drop {dir} client {client} msg {nth}")
+            }
+            Fault::Duplicate { dir, client, nth } => {
+                write!(f, "duplicate {dir} client {client} msg {nth}")
+            }
+            Fault::Delay { dir, client, nth, extra_ms } => {
+                write!(f, "delay {dir} client {client} msg {nth} by {extra_ms}ms")
+            }
+            Fault::CrashAt { client, at_ms } => write!(f, "crash client {client} at {at_ms}ms"),
+            Fault::CrashBeforeSend { client, nth } => {
+                write!(f, "crash client {client} before sending msg {nth}")
+            }
+            Fault::Partition { client, from_ms, until_ms } => {
+                write!(f, "partition client {client} from {from_ms}ms until {until_ms}ms")
+            }
+            Fault::LateJoin { client, at_ms } => {
+                write!(f, "late join client {client} at {at_ms}ms")
+            }
+        }
+    }
+}
+
+/// A complete, deterministic description of one simulated world.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSchedule {
+    /// the seed this schedule was drawn from (0 for hand-built ones)
+    pub seed: u64,
+    /// number of clients the world is sized for
+    pub clients: usize,
+    /// protocol rounds the job is configured for (bounds `nth` draws)
+    pub rounds: usize,
+    /// base per-message latency is uniform in `[1, base_latency_ms]` ms
+    pub base_latency_ms: u64,
+    /// the injected fault events — `--shrink` deletes entries from here
+    pub faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    /// Latency-jitter-only schedule: the reference world every faulted
+    /// run is compared against.
+    pub fn fault_free(seed: u64, clients: usize, rounds: usize) -> Self {
+        FaultSchedule { seed, clients, rounds, base_latency_ms: 4, faults: Vec::new() }
+    }
+
+    /// Virtual-time horizon the time-based faults are drawn over: a
+    /// generous over-estimate of the run's event-driven length.
+    fn horizon_ms(&self) -> u64 {
+        (self.rounds as u64 + 4) * (2 * self.base_latency_ms + 4)
+    }
+
+    /// Draw the full fault distribution for `seed` (see EXPERIMENTS.md
+    /// §Sim): ⅕ of worlds are calm (latency jitter only — these assert
+    /// the bitwise-identical invariant); otherwise per client ⅛ crash
+    /// (half time-based, half message-based), ⅛ partition, ⅒ late join
+    /// (client 0 always founds); globally up to 3 drops, 2 duplicates,
+    /// and 5 delays of 1–80 ms on uniformly chosen messages.
+    pub fn draw(seed: u64, clients: usize, rounds: usize) -> Self {
+        let mut s = FaultSchedule::fault_free(seed, clients, rounds);
+        let horizon = s.horizon_ms();
+        let root = Pcg64::new(seed);
+
+        let mut calm = root.fork(0xCA1F);
+        if calm.next_f64() < 0.2 {
+            return s;
+        }
+
+        let mut crash = root.fork(0xC4A5);
+        for c in 0..clients {
+            if crash.next_f64() < 0.125 {
+                if crash.next_u64() & 1 == 0 {
+                    s.faults.push(Fault::CrashAt { client: c, at_ms: crash.next_below(horizon) });
+                } else {
+                    let nth = 1 + crash.next_below(rounds as u64 + 1) as usize;
+                    s.faults.push(Fault::CrashBeforeSend { client: c, nth });
+                }
+            }
+        }
+
+        let mut part = root.fork(0x9A47);
+        for c in 0..clients {
+            if part.next_f64() < 0.125 {
+                let from_ms = part.next_below(horizon);
+                let until_ms = from_ms + 5 + part.next_below(50);
+                s.faults.push(Fault::Partition { client: c, from_ms, until_ms });
+            }
+        }
+
+        // client 0 always founds, so the handshake can start. Joins are
+        // floored past the founding Hellos (≤ base latency): a joiner
+        // racing the handshake would demote a founding member to elastic
+        // status and void the healthy-founder completion invariant.
+        let mut join = root.fork(0x1017);
+        let join_floor = 2 * s.base_latency_ms + 2;
+        for c in 1..clients {
+            if join.next_f64() < 0.1 {
+                let at_ms = join_floor + join.next_below(horizon / 2);
+                s.faults.push(Fault::LateJoin { client: c, at_ms });
+            }
+        }
+
+        let mut msg = root.fork(0xD409);
+        let pick = |rng: &mut Pcg64, clients: usize, rounds: usize| {
+            let dir = if rng.next_u64() & 1 == 0 { Dir::Down } else { Dir::Up };
+            let client = rng.next_below(clients as u64) as usize;
+            let nth = rng.next_below(rounds as u64 + 2) as usize;
+            (dir, client, nth)
+        };
+        for _ in 0..msg.next_below(4) {
+            let (dir, client, nth) = pick(&mut msg, clients, rounds);
+            s.faults.push(Fault::Drop { dir, client, nth });
+        }
+        let mut dup = root.fork(0xD119);
+        for _ in 0..dup.next_below(3) {
+            let (dir, client, nth) = pick(&mut dup, clients, rounds);
+            s.faults.push(Fault::Duplicate { dir, client, nth });
+        }
+        let mut delay = root.fork(0xDE1A);
+        for _ in 0..delay.next_below(6) {
+            let (dir, client, nth) = pick(&mut delay, clients, rounds);
+            let extra_ms = 1 + delay.next_below(80);
+            s.faults.push(Fault::Delay { dir, client, nth, extra_ms });
+        }
+        s
+    }
+
+    /// Deterministic base latency of one message, independent of the
+    /// order messages are processed in.
+    pub fn base_latency(&self, dir: Dir, client: usize, nth: usize) -> Duration {
+        let key = ((dir == Dir::Up) as u64) << 62 | (client as u64) << 32 | nth as u64;
+        let mut rng = Pcg64::new(self.seed ^ 0x1A7E_4C7D).fork(key);
+        Duration::from_millis(1 + rng.next_below(self.base_latency_ms.max(1)))
+    }
+
+    /// Delivery offsets (from send time) for one message: empty means
+    /// dropped, more than one means duplicated.
+    pub fn deliveries(&self, dir: Dir, client: usize, nth: usize) -> Vec<Duration> {
+        let matches = |fd: Dir, fc: usize, fnth: usize| fd == dir && fc == client && fnth == nth;
+        let mut latency = self.base_latency(dir, client, nth);
+        let mut copies = 1usize;
+        for f in &self.faults {
+            match *f {
+                Fault::Drop { dir: fd, client: fc, nth: fn_ } if matches(fd, fc, fn_) => {
+                    return Vec::new();
+                }
+                Fault::Delay { dir: fd, client: fc, nth: fn_, extra_ms }
+                    if matches(fd, fc, fn_) =>
+                {
+                    latency += Duration::from_millis(extra_ms);
+                }
+                Fault::Duplicate { dir: fd, client: fc, nth: fn_ } if matches(fd, fc, fn_) => {
+                    copies += 1;
+                }
+                _ => {}
+            }
+        }
+        (0..copies).map(|i| latency + Duration::from_millis(i as u64)).collect()
+    }
+
+    /// Does any `Delay` fault target this message? (The net's ledger of
+    /// straggler/reorder injections — delays stay out of `materialized`
+    /// so delay-only worlds still assert the bitwise invariant.)
+    pub fn is_delayed(&self, dir: Dir, client: usize, nth: usize) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(*f, Fault::Delay { dir: fd, client: fc, nth: fnth, .. }
+                if fd == dir && fc == client && fnth == nth)
+        })
+    }
+
+    /// When (if ever) this client's process dies on the wall clock.
+    pub fn crash_time(&self, client: usize) -> Option<Duration> {
+        self.faults.iter().find_map(|f| match *f {
+            Fault::CrashAt { client: c, at_ms } if c == client => {
+                Some(Duration::from_millis(at_ms))
+            }
+            _ => None,
+        })
+    }
+
+    /// Does this client die instead of sending its `nth` upstream message?
+    pub fn crash_before_send(&self, client: usize, nth: usize) -> bool {
+        self.faults.iter().any(
+            |f| matches!(*f, Fault::CrashBeforeSend { client: c, nth: n } if c == client && n == nth),
+        )
+    }
+
+    /// Is the client's link cut at virtual time `now`?
+    pub fn partitioned(&self, client: usize, now: Duration) -> bool {
+        self.faults.iter().any(|f| match *f {
+            Fault::Partition { client: c, from_ms, until_ms } if c == client => {
+                now >= Duration::from_millis(from_ms) && now < Duration::from_millis(until_ms)
+            }
+            _ => false,
+        })
+    }
+
+    /// When this client's Hello enters the world (None = founding member).
+    pub fn join_time(&self, client: usize) -> Option<Duration> {
+        self.faults.iter().find_map(|f| match *f {
+            Fault::LateJoin { client: c, at_ms } if c == client => {
+                Some(Duration::from_millis(at_ms))
+            }
+            _ => None,
+        })
+    }
+
+    /// Founding members (clients whose Hello is present at time zero).
+    pub fn founders(&self) -> usize {
+        (0..self.clients).filter(|&c| self.join_time(c).is_none()).count()
+    }
+
+    pub fn is_fault_free(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// True if client `c` founds the job and no fault targets it: such a
+    /// client stays responsive for the whole run, so under SkipMissing
+    /// the job must complete (the regression oracle for reveal-phase
+    /// crash handling).
+    pub fn is_healthy(&self, client: usize) -> bool {
+        self.faults.iter().all(|f| f.client() != client)
+    }
+
+    pub fn has_healthy_client(&self) -> bool {
+        (0..self.clients).any(|c| self.is_healthy(c))
+    }
+
+    /// The FaultPolicy budget (ISSUE invariant: final error must stay
+    /// within tolerance when the schedule stays inside it): only faults
+    /// that cost at most a per-round update — dropped/duplicated round
+    /// updates and sub-deadline delays. Membership faults (crash,
+    /// partition, join), lost Hellos/reveals, and deadline-crossing
+    /// delays are over budget: the run must still terminate cleanly,
+    /// but its error is unconstrained.
+    ///
+    /// Delays are judged by the *per-client total* of extras, because
+    /// several small delays can stack on one round trip (broadcast leg
+    /// plus reply leg) and together push a reply — possibly the finish
+    /// reply — past the deadline. The bound is conservative: any round
+    /// trip of client `c` carries at most `total(c)` extra delay plus
+    /// two base latencies plus duplicate offsets (≤ 2 ms).
+    pub fn under_budget(&self, round_timeout: Duration) -> bool {
+        let timeout_ms = round_timeout.as_millis() as u64;
+        let delay_total = |client: usize| -> u64 {
+            self.faults
+                .iter()
+                .filter_map(|g| match *g {
+                    Fault::Delay { client: gc, extra_ms, .. } if gc == client => Some(extra_ms),
+                    _ => None,
+                })
+                .sum()
+        };
+        self.faults.iter().all(|f| match *f {
+            Fault::Drop { dir: Dir::Up, nth, .. } => nth >= 1 && nth <= self.rounds,
+            Fault::Duplicate { dir, nth, .. } => !(dir == Dir::Up && nth == 0),
+            Fault::Delay { client, .. } => {
+                delay_total(client) + 2 * self.base_latency_ms + 2 < timeout_ms
+            }
+            _ => false,
+        })
+    }
+
+    /// One line per fault (the `--shrink` output format).
+    pub fn describe(&self) -> String {
+        if self.faults.is_empty() {
+            return "  (no faults — latency jitter only)".to_string();
+        }
+        self.faults
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_deterministic_per_seed() {
+        let a = FaultSchedule::draw(42, 5, 16);
+        let b = FaultSchedule::draw(42, 5, 16);
+        assert_eq!(a.faults, b.faults);
+        let c = FaultSchedule::draw(43, 5, 16);
+        // adjacent seeds draw different worlds (with overwhelming
+        // probability — this particular pair differs)
+        assert!(
+            a.faults != c.faults
+                || a.base_latency(Dir::Up, 0, 0) != c.base_latency(Dir::Up, 0, 0)
+        );
+    }
+
+    #[test]
+    fn latency_is_per_message_deterministic_and_bounded() {
+        let s = FaultSchedule::fault_free(7, 4, 10);
+        for nth in 0..12 {
+            let l = s.base_latency(Dir::Up, 2, nth);
+            assert_eq!(l, s.base_latency(Dir::Up, 2, nth));
+            assert!(l >= Duration::from_millis(1));
+            assert!(l <= Duration::from_millis(s.base_latency_ms));
+        }
+        // direction participates in the key
+        let down: Vec<_> = (0..16).map(|n| s.base_latency(Dir::Down, 1, n)).collect();
+        let up: Vec<_> = (0..16).map(|n| s.base_latency(Dir::Up, 1, n)).collect();
+        assert_ne!(down, up);
+    }
+
+    #[test]
+    fn deliveries_reflect_faults() {
+        let mut s = FaultSchedule::fault_free(1, 3, 8);
+        assert_eq!(s.deliveries(Dir::Up, 0, 1).len(), 1);
+        s.faults.push(Fault::Drop { dir: Dir::Up, client: 0, nth: 1 });
+        assert!(s.deliveries(Dir::Up, 0, 1).is_empty());
+        assert_eq!(s.deliveries(Dir::Up, 0, 2).len(), 1, "other messages unaffected");
+        s.faults.push(Fault::Duplicate { dir: Dir::Down, client: 2, nth: 0 });
+        assert_eq!(s.deliveries(Dir::Down, 2, 0).len(), 2);
+        s.faults.push(Fault::Delay { dir: Dir::Up, client: 1, nth: 3, extra_ms: 40 });
+        let base = s.base_latency(Dir::Up, 1, 3);
+        assert_eq!(s.deliveries(Dir::Up, 1, 3), vec![base + Duration::from_millis(40)]);
+    }
+
+    #[test]
+    fn budget_classifies_faults() {
+        let timeout = Duration::from_millis(50);
+        let mut s = FaultSchedule::fault_free(1, 4, 10);
+        assert!(s.under_budget(timeout));
+        s.faults = vec![Fault::Drop { dir: Dir::Up, client: 1, nth: 3 }];
+        assert!(s.under_budget(timeout), "a dropped round update is in budget");
+        s.faults = vec![Fault::Drop { dir: Dir::Up, client: 1, nth: 0 }];
+        assert!(!s.under_budget(timeout), "a dropped Hello is not");
+        s.faults = vec![Fault::Drop { dir: Dir::Down, client: 1, nth: 2 }];
+        assert!(!s.under_budget(timeout), "down drops can hit Finish");
+        s.faults = vec![Fault::Delay { dir: Dir::Up, client: 0, nth: 2, extra_ms: 10 }];
+        assert!(s.under_budget(timeout));
+        s.faults = vec![Fault::Delay { dir: Dir::Up, client: 0, nth: 2, extra_ms: 70 }];
+        assert!(!s.under_budget(timeout), "deadline-crossing delay is over budget");
+        // two small delays on the same client stack across the round trip
+        s.faults = vec![
+            Fault::Delay { dir: Dir::Down, client: 0, nth: 3, extra_ms: 25 },
+            Fault::Delay { dir: Dir::Up, client: 0, nth: 4, extra_ms: 25 },
+        ];
+        assert!(!s.under_budget(timeout), "stacked delays are judged together");
+        // the same two delays on different clients never share a path
+        s.faults = vec![
+            Fault::Delay { dir: Dir::Down, client: 0, nth: 3, extra_ms: 25 },
+            Fault::Delay { dir: Dir::Up, client: 1, nth: 4, extra_ms: 25 },
+        ];
+        assert!(s.under_budget(timeout));
+        s.faults = vec![Fault::CrashAt { client: 0, at_ms: 5 }];
+        assert!(!s.under_budget(timeout));
+    }
+
+    #[test]
+    fn founders_and_health() {
+        let mut s = FaultSchedule::fault_free(1, 4, 10);
+        s.faults.push(Fault::LateJoin { client: 2, at_ms: 30 });
+        s.faults.push(Fault::CrashAt { client: 1, at_ms: 50 });
+        assert_eq!(s.founders(), 3);
+        assert!(s.is_healthy(0));
+        assert!(!s.is_healthy(1));
+        assert!(!s.is_healthy(2));
+        assert!(s.has_healthy_client());
+        assert_eq!(s.join_time(2), Some(Duration::from_millis(30)));
+        assert_eq!(s.crash_time(1), Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn seeds_cover_the_fault_space() {
+        // over a seed range, every fault kind must appear somewhere, and
+        // a healthy fraction of worlds must stay fault-free
+        let mut kinds = [0usize; 7];
+        let mut fault_free = 0usize;
+        for seed in 0..256 {
+            let s = FaultSchedule::draw(seed, 4, 16);
+            if s.is_fault_free() {
+                fault_free += 1;
+            }
+            for f in &s.faults {
+                let k = match f {
+                    Fault::Drop { .. } => 0,
+                    Fault::Duplicate { .. } => 1,
+                    Fault::Delay { .. } => 2,
+                    Fault::CrashAt { .. } => 3,
+                    Fault::CrashBeforeSend { .. } => 4,
+                    Fault::Partition { .. } => 5,
+                    Fault::LateJoin { .. } => 6,
+                };
+                kinds[k] += 1;
+            }
+        }
+        assert!(kinds.iter().all(|&k| k > 0), "fault kinds drawn: {kinds:?}");
+        // the calm-world gate pins the benign fraction near 20%, plus the
+        // rare all-zero draw on the faulted side
+        assert!(
+            (25..=135).contains(&fault_free),
+            "benign fraction off: {fault_free}/256"
+        );
+    }
+}

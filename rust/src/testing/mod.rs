@@ -69,27 +69,65 @@ fn base_seed() -> u64 {
         .unwrap_or(0x00D1CE)
 }
 
-/// Run `body` on `cases` generated inputs; panics with the case index and
-/// seed on the first failure.
-pub fn property(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
-    let seed = base_seed();
+/// Environment knob: DCF_PCA_PROPTEST_CASE restricts a run to a single
+/// case index — paired with the seed, it replays exactly the failing
+/// input without sitting through the preceding cases.
+fn case_filter() -> Option<usize> {
+    std::env::var("DCF_PCA_PROPTEST_CASE").ok().and_then(|s| s.parse().ok())
+}
+
+/// Run `body` on `cases` generated inputs; panics with the case index,
+/// seed, and a copy-paste replay command on the first failure.
+pub fn property(name: &str, cases: usize, body: impl FnMut(&mut Gen)) {
+    property_impl(name, cases, base_seed(), case_filter(), body)
+}
+
+fn property_impl(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    only_case: Option<usize>,
+    mut body: impl FnMut(&mut Gen),
+) {
+    if let Some(c) = only_case {
+        if c >= cases {
+            // warn, don't panic: the case-filter env var is global, and a
+            // replay targeting one property also reaches every other
+            // property in the run (possibly with fewer cases)
+            eprintln!(
+                "warning: DCF_PCA_PROPTEST_CASE={c} is out of range for property \
+                 '{name}' ({cases} cases) — no case will run"
+            );
+        }
+    }
     for case in 0..cases {
+        if only_case.is_some_and(|c| c != case) {
+            continue;
+        }
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut g = Gen::new(seed, case);
             body(&mut g);
         }));
         if let Err(panic) = result {
-            let msg = panic
-                .downcast_ref::<String>()
-                .map(|s| s.as_str())
-                .or_else(|| panic.downcast_ref::<&str>().copied())
-                .unwrap_or("<non-string panic>");
+            let msg = panic_message(panic.as_ref());
             panic!(
-                "property '{name}' failed at case {case}/{cases} (seed {seed}; \
-                 replay with DCF_PCA_PROPTEST_SEED={seed}): {msg}"
+                "property '{name}' failed at case {case}/{cases} (seed {seed}): {msg}\n\
+                 replay with: DCF_PCA_PROPTEST_SEED={seed} DCF_PCA_PROPTEST_CASE={case} \
+                 cargo test -q"
             );
         }
     }
+}
+
+/// Best-effort extraction of a panic payload's message (String or &str
+/// payloads; anything else becomes a placeholder). Shared with the
+/// simulation harness's no-panic invariant reporting.
+pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
 }
 
 #[cfg(test)]
@@ -112,6 +150,23 @@ mod tests {
     fn failing_property_reports_case() {
         property("fails-eventually", 50, |g| {
             assert!(g.case < 10, "boom at case {}", g.case);
+        });
+    }
+
+    #[test]
+    fn case_filter_runs_exactly_one_case() {
+        // exercised through the internal entry point: env vars are
+        // process-global and the test harness is multi-threaded
+        let mut seen = Vec::new();
+        property_impl("filtered", 50, 0x00D1CE, Some(3), |g| seen.push(g.case));
+        assert_eq!(seen, vec![3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with: DCF_PCA_PROPTEST_SEED=")]
+    fn failure_message_carries_replay_command() {
+        property_impl("replay-hint", 10, 0xBEEF, None, |g| {
+            assert!(g.case < 5, "boom");
         });
     }
 

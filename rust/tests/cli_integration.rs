@@ -12,9 +12,22 @@ fn help_lists_commands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["solve", "generate", "serve", "worker", "experiment", "artifacts-check"] {
+    for cmd in ["solve", "generate", "serve", "worker", "simulate", "experiment", "artifacts-check"]
+    {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+}
+
+#[test]
+fn simulate_small_seed_range_passes() {
+    let out = bin().args(["simulate", "--seeds", "0..2"]).output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "simulate failed:\n{text}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("2 seed(s): 2 ok, 0 failed"), "unexpected summary:\n{text}");
 }
 
 #[test]

@@ -9,6 +9,8 @@ use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
 use dcf_pca::linalg::Workspace;
 use dcf_pca::runtime::pool;
 use dcf_pca::coordinator::aggregate::{aggregate, Aggregation};
+use dcf_pca::coordinator::compress::{put_mat_compressed, read_mat_compressed, Compression};
+use dcf_pca::coordinator::privacy::{gaussian_sigma, perturb_update};
 use dcf_pca::coordinator::protocol::{ToClient, ToServer};
 use dcf_pca::coordinator::transport::framing::{frame_into, put_mat, FrameDecoder, Reader};
 use dcf_pca::linalg::{
@@ -178,6 +180,98 @@ fn prop_frame_decoder_garbage_prefix_matches_one_shot() {
         let every_byte: Vec<usize> = (1..stream.len()).collect();
         assert!(incremental_frames(&stream, &every_byte).is_err());
         assert!(incremental_frames(&stream, &[]).is_err());
+    });
+}
+
+fn compress_roundtrip(m: &Mat, codec: Compression) -> Mat {
+    let mut buf = Vec::new();
+    put_mat_compressed(&mut buf, m, codec);
+    let mut r = Reader::new(&buf);
+    let out = read_mat_compressed(&mut r).unwrap();
+    r.expect_end().unwrap();
+    out
+}
+
+#[test]
+fn prop_compress_roundtrip_every_mode_and_shape() {
+    // every codec, over random shapes *including* the degenerate ones:
+    // empty (0×c, r×0), single-entry, and odd/1-wide layouts. `None` is
+    // bit-exact; `F32`/`Int8` stay within their documented per-entry
+    // quantization error.
+    property("compressed matrix roundtrip", 60, |g| {
+        let (rows, cols) = match g.usize_in(0, 5) {
+            0 => (0, g.usize_in(0, 6)), // empty: no rows
+            1 => (g.usize_in(1, 6), 0), // empty: no columns
+            2 => (1, 1),                // single entry
+            3 => (g.usize_in(1, 9) * 2 - 1, g.usize_in(1, 4) * 2 - 1), // odd×odd
+            4 => (g.usize_in(1, 20), 1), // single column
+            _ => (g.usize_in(1, 20), g.usize_in(1, 10)),
+        };
+        let m = g.mat(rows, cols);
+
+        let exact = compress_roundtrip(&m, Compression::None);
+        assert_eq!(exact, m, "None must be bit-exact for {rows}x{cols}");
+
+        let f32back = compress_roundtrip(&m, Compression::F32);
+        assert_eq!(f32back.shape(), (rows, cols));
+        for (y, x) in f32back.as_slice().iter().zip(m.as_slice()) {
+            // |x| ≤ ~6σ here, far inside f32 range: relative 2⁻²⁴ bound
+            assert!((y - x).abs() <= x.abs() * 1e-7 + 1e-300, "f32 entry {y} vs {x}");
+        }
+
+        let q8 = compress_roundtrip(&m, Compression::Int8);
+        assert_eq!(q8.shape(), (rows, cols));
+        for j in 0..cols {
+            let col_max = (0..rows).map(|i| m[(i, j)].abs()).fold(0.0f64, f64::max);
+            let step = col_max / 127.0;
+            for i in 0..rows {
+                assert!(
+                    (q8[(i, j)] - m[(i, j)]).abs() <= step / 2.0 + 1e-12,
+                    "int8 entry ({i},{j}) off by more than half a step"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_privacy_noise_seeded_per_client_and_round() {
+    property("privacy noise determinism", 40, |g| {
+        let rows = g.usize_in(1, 12);
+        let cols = g.usize_in(1, 4);
+        let base = g.mat(rows, cols);
+        let sigma = g.f64_in(1e-6, 2.0);
+        let client = g.usize_in(0, 64);
+        let round = g.usize_in(0, 100) as u32;
+
+        // same (client, round) ⇒ bitwise-identical noise
+        let mut a = base.clone();
+        let mut b = base.clone();
+        perturb_update(&mut a, sigma, client, round);
+        perturb_update(&mut b, sigma, client, round);
+        assert_eq!(a, b, "noise must be deterministic per (client, round)");
+        assert_ne!(a, base, "σ > 0 must actually perturb");
+
+        // a different client or round draws a different stream
+        let mut c = base.clone();
+        perturb_update(&mut c, sigma, client + 1, round);
+        assert_ne!(a, c, "clients must not share a noise stream");
+        let mut d = base.clone();
+        perturb_update(&mut d, sigma, client, round + 1);
+        assert_ne!(a, d, "rounds must not share a noise stream");
+
+        // ε → ∞ ⇒ σ = 0 ⇒ exactly zero noise
+        let sigma_inf = gaussian_sigma(f64::INFINITY, 1e-5, g.f64_in(0.1, 10.0));
+        assert_eq!(sigma_inf, 0.0);
+        let mut e = base.clone();
+        perturb_update(&mut e, sigma_inf, client, round);
+        assert_eq!(e, base, "ε = ∞ must leave the update untouched");
+
+        // σ(ε) is monotone decreasing in ε
+        let delta = 1e-5;
+        let sens = g.f64_in(0.1, 10.0);
+        let eps = g.f64_in(0.01, 10.0);
+        assert!(gaussian_sigma(eps, delta, sens) > gaussian_sigma(eps * 2.0, delta, sens));
     });
 }
 

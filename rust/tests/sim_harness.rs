@@ -1,0 +1,188 @@
+//! Simulation-harness integration: the `sim_smoke` subset runs inside
+//! the tier-1 `cargo test -q` budget; the exhaustive fuzz sweep is
+//! `#[ignore]`d (CI's `sim-fuzz` job runs `dcf-pca simulate --seeds
+//! 0..256` on the release binary instead — same code path, faster).
+
+use std::time::{Duration, Instant};
+
+use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
+use dcf_pca::rpca::problem::ProblemSpec;
+use dcf_pca::sim::{Dir, Fault, FaultSchedule, SimConfig, SimHarness};
+
+fn harness() -> SimHarness {
+    SimHarness::new(SimConfig::default()).expect("default sim config must converge")
+}
+
+fn default_schedule() -> FaultSchedule {
+    let cfg = SimConfig::default();
+    FaultSchedule::fault_free(0, cfg.clients, cfg.rounds)
+}
+
+// ---------------------------------------------------------------------------
+// sim_smoke: fast subset, tier-1
+// ---------------------------------------------------------------------------
+
+/// Acceptance: the fault-free simulated federation is bitwise-identical
+/// (U factor) to the threaded in-proc driver at the same seed/shape.
+#[test]
+fn sim_smoke_fault_free_matches_inproc_driver_bitwise() {
+    let h = harness();
+    let cfg = h.config().clone();
+    let spec = ProblemSpec::square(cfg.n, cfg.rank, cfg.sparsity);
+    let problem = spec.generate(cfg.problem_seed);
+    let driver_cfg = DcfPcaConfig::default_for(&spec)
+        .with_clients(cfg.clients)
+        .with_rounds(cfg.rounds)
+        .with_k_local(cfg.k_local)
+        .with_seed(cfg.server_seed);
+    let reference = run_dcf_pca(&problem, &driver_cfg).unwrap();
+    assert_eq!(
+        h.reference().u,
+        reference.u,
+        "virtual-time simulation diverged from the threaded driver"
+    );
+    assert_eq!(h.reference().rounds.len(), reference.rounds.len());
+    for (a, b) in h.reference().rounds.iter().zip(&reference.rounds) {
+        assert_eq!(a.err, b.err, "round {} err diverged", a.round);
+        assert_eq!(a.participants, b.participants);
+    }
+}
+
+/// SimNet really is a drop-in Reactor: the production `drive` loop runs
+/// the whole federation over it, in virtual time, to the same U.
+#[test]
+fn sim_smoke_production_drive_loop_runs_over_simnet() {
+    let h = harness();
+    let outcome = h.run_production_drive(&default_schedule()).unwrap();
+    assert_eq!(outcome.u, h.reference().u);
+    assert_eq!(outcome.revealed.len(), h.config().clients);
+}
+
+/// A small seed sweep holds every invariant and runs in virtual time
+/// (simulated duration visible, negligible wall time per seed).
+#[test]
+fn sim_smoke_seed_sweep_holds_invariants() {
+    let h = harness();
+    let wall = Instant::now();
+    let summary = h.fuzz(0..12);
+    assert_eq!(summary.seeds_run, 12);
+    assert!(
+        summary.failures.is_empty(),
+        "seed sweep violated invariants: {}",
+        summary
+            .failures
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n---\n")
+    );
+    // the drawn worlds are not all trivial
+    assert!(summary.reports.iter().any(|r| r.faults > 0), "no faults drawn in 12 seeds");
+    assert!(summary.virtual_total > Duration::ZERO);
+    assert!(wall.elapsed() < Duration::from_secs(120), "sim is sleeping on the wall clock");
+}
+
+/// A calm seed (latency jitter only) must reproduce the fault-free run
+/// bit for bit — the slot-ordered-reduction invariant, end to end.
+#[test]
+fn sim_smoke_calm_seed_is_bitwise_clean() {
+    let h = harness();
+    let cfg = h.config();
+    let calm_seed = (0u64..)
+        .find(|&s| FaultSchedule::draw(s, cfg.clients, cfg.rounds).is_fault_free())
+        .expect("a fifth of seeds draw calm worlds");
+    let report = h.check_seed(calm_seed).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.bitwise_clean, "calm seed {calm_seed} did not verify bitwise");
+    assert_eq!(report.rounds_run, cfg.rounds);
+    assert_eq!(report.min_participants, cfg.clients);
+}
+
+/// Reveal-phase crash (the PR-3 withheld-reveal regression): the run
+/// completes, the dead client is withheld, everyone else reveals.
+#[test]
+fn sim_smoke_reveal_phase_crash_is_withheld() {
+    let h = harness();
+    let rounds = h.config().rounds;
+    let mut schedule = default_schedule();
+    // upstream message rounds+1 is the finish reply when every round ran
+    schedule.faults.push(Fault::CrashBeforeSend { client: 1, nth: rounds + 1 });
+    let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok, "reveal-phase crash must not abort the job");
+    assert_eq!(report.rounds_run, rounds, "crash was after the last round");
+    assert_eq!(report.min_participants, h.config().clients, "every round was full");
+    assert!(!report.bitwise_clean, "a materialized crash is not a clean run");
+}
+
+/// One dropped round update = one straggler cut, then full recovery.
+#[test]
+fn sim_smoke_dropped_update_cuts_exactly_one_round() {
+    let h = harness();
+    let mut schedule = default_schedule();
+    schedule.faults.push(Fault::Drop { dir: Dir::Up, client: 2, nth: 3 });
+    assert!(schedule.under_budget(h.config().round_timeout));
+    let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok);
+    assert_eq!(report.rounds_run, h.config().rounds);
+    assert_eq!(report.min_participants, h.config().clients - 1, "one cut round");
+    // under budget ⇒ the tolerance invariant already ran inside check
+    assert!(report.final_err.unwrap() <= h.config().err_tolerance);
+}
+
+/// Membership chaos — a late joiner plus a partition window — still
+/// terminates cleanly with every invariant satisfied.
+#[test]
+fn sim_smoke_late_join_and_partition_terminate() {
+    let h = harness();
+    let mut schedule = default_schedule();
+    schedule.faults.push(Fault::LateJoin { client: 3, at_ms: 20 });
+    schedule.faults.push(Fault::Partition { client: 1, from_ms: 10, until_ms: 60 });
+    let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok, "healthy clients remained — the job must finish");
+    assert!(report.materialized > 0, "the join (at least) must have materialized");
+}
+
+/// Shrink mechanics: a passing schedule yields no shrink; a failing one
+/// is greedily minimized until only failure-relevant state remains.
+#[test]
+fn sim_smoke_shrink_minimizes_failing_schedules() {
+    let h = harness();
+    assert!(h.shrink(&default_schedule()).is_none(), "passing schedules do not shrink");
+
+    // a schedule sized for the wrong fleet fails deterministically no
+    // matter which fault events it carries — shrink must strip all the
+    // decoy faults and still reproduce the failure
+    let cfg = SimConfig::default();
+    let mut bad = FaultSchedule::fault_free(99, cfg.clients - 1, cfg.rounds);
+    bad.faults.push(Fault::Drop { dir: Dir::Up, client: 0, nth: 1 });
+    bad.faults.push(Fault::Delay { dir: Dir::Down, client: 1, nth: 2, extra_ms: 5 });
+    bad.faults.push(Fault::Duplicate { dir: Dir::Up, client: 2, nth: 3 });
+    let (minimal, violation) = h.shrink(&bad).expect("mis-sized schedule must keep failing");
+    assert!(minimal.faults.is_empty(), "decoy faults survived shrinking: {:?}", minimal.faults);
+    assert!(violation.detail.contains("sized for"), "unexpected violation: {}", violation.detail);
+}
+
+// ---------------------------------------------------------------------------
+// the long sweep — explicitly opted into (CI sim-fuzz runs the CLI
+// equivalent `dcf-pca simulate --seeds 0..256` on the release binary)
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "long fuzz sweep; run with --ignored or via `dcf-pca simulate --seeds 0..256`"]
+fn sim_fuzz_seeds_0_256() {
+    let h = harness();
+    let summary = h.fuzz(0..256);
+    assert_eq!(summary.seeds_run, 256);
+    assert!(
+        summary.failures.is_empty(),
+        "{} of 256 seeds violated invariants; first:\n{}",
+        summary.failures.len(),
+        summary.failures[0]
+    );
+    // coverage sanity over the big sweep: calm worlds verified bitwise,
+    // and some worlds actually lost updates
+    assert!(summary.reports.iter().filter(|r| r.bitwise_clean).count() > 10);
+    assert!(summary
+        .reports
+        .iter()
+        .any(|r| r.completed_ok && r.min_participants < SimConfig::default().clients));
+}
