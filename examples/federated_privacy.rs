@@ -53,7 +53,7 @@ fn main() -> dcf_pca::anyhow::Result<()> {
             let cfg = ClientConfig {
                 id,
                 job: 0,
-                m_block,
+                data: Box::new(m_block),
                 hyper,
                 n_frac,
                 polish_sweeps: 3,

@@ -1,0 +1,176 @@
+//! Bench: the out-of-core data layer (§Data of EXPERIMENTS.md).
+//!
+//! Two comparisons, written to `BENCH_data_io.json`:
+//!
+//! 1. **Load**: parsing a text CSV vs opening + materializing a
+//!    `.dcfshard` (binary, panel-major, checksummed) of the same matrix
+//!    — the format change is the first win (no float parsing, one
+//!    sequential pass).
+//! 2. **Epoch throughput**: a resident local epoch vs the identical
+//!    epoch streamed from the shard panel by panel (positioned reads +
+//!    page-cache readahead, the same fused pipeline). The gap between
+//!    the two rows is the true cost of going out-of-core; gflops and
+//!    `effective_gb_per_s` use the PR-2 fused traffic model.
+//!
+//! Like every bench here, each run overwrites the JSON snapshot — the
+//! perf trajectory accumulates as the file's git history.
+
+use std::collections::BTreeMap;
+
+use dcf_pca::algorithms::factor::{ClientState, FactorHyper};
+use dcf_pca::bench_util::{fmt_secs, Bencher, Table};
+use dcf_pca::cli::commands::generate::{read_matrix_csv, write_matrix_csv};
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use dcf_pca::data::{shard::write_block, DataSource, ShardSource};
+use dcf_pca::linalg::panel_width;
+use dcf_pca::rng::Pcg64;
+use dcf_pca::rpca::problem::ProblemSpec;
+use dcf_pca::util::json::Json;
+use dcf_pca::{Mat, Workspace};
+
+struct Record {
+    op: String,
+    shape: String,
+    ns_per_iter: f64,
+    gflops: Option<f64>,
+    effective_gb_per_s: Option<f64>,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str(self.op.clone()));
+        obj.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        obj.insert("ns_per_iter".to_string(), Json::Num(self.ns_per_iter));
+        let opt = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        obj.insert("gflops".to_string(), opt(self.gflops));
+        obj.insert("effective_gb_per_s".to_string(), opt(self.effective_gb_per_s));
+        Json::Obj(obj)
+    }
+}
+
+/// FLOPs of one local epoch (same model as `benches/kernel_hotpath.rs`).
+fn epoch_flops(m: usize, n: usize, p: usize, j: usize, k: usize) -> f64 {
+    let mnp = (m * n * p) as f64;
+    (k * j) as f64 * 4.0 * mnp + k as f64 * 4.0 * mnp
+}
+
+/// Fused-epoch traffic model (same as `benches/kernel_hotpath.rs`).
+fn fused_epoch_bytes(m: usize, n: usize, j: usize, k: usize) -> f64 {
+    let mn = (m * n) as f64 * 8.0;
+    (k * j) as f64 * 3.0 * mn + k as f64 * 2.0 * mn
+}
+
+fn main() {
+    let mut rng = Pcg64::new(3);
+    let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(180) };
+    let mut t = Table::new(&["op", "shape", "time (mean)", "GFLOP/s", "eff GB/s"]);
+    let mut records: Vec<Record> = Vec::new();
+
+    let push = |t: &mut Table,
+                records: &mut Vec<Record>,
+                op: &str,
+                shape: &str,
+                mean: f64,
+                gflops: Option<f64>,
+                gbs: Option<f64>| {
+        let fmt_opt = |v: Option<f64>| v.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into());
+        t.row(&[op.into(), shape.into(), fmt_secs(mean), fmt_opt(gflops), fmt_opt(gbs)]);
+        records.push(Record {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: mean * 1e9,
+            gflops,
+            effective_gb_per_s: gbs,
+        });
+    };
+
+    let dir = std::env::temp_dir().join(format!("dcf-data-io-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // --- load-path comparison: CSV parse vs shard open+materialize ---
+    {
+        let (m, n) = (1000usize, 1000usize);
+        let mat = Mat::gaussian(m, n, &mut rng);
+        let shape = format!("{m}x{n}");
+        let csv_path = dir.join("load.csv");
+        let shard_path = dir.join("load.dcfshard");
+        write_matrix_csv(csv_path.to_str().unwrap(), &mat).unwrap();
+        write_block(&shard_path, &mat, panel_width(m, n), 0, n, 3).unwrap();
+        let mb = (m * n * 8) as f64;
+
+        let stats = b.run(|| read_matrix_csv(csv_path.to_str().unwrap()).unwrap());
+        let gbs = Some(mb / stats.mean / 1e9);
+        push(&mut t, &mut records, "load csv", &shape, stats.mean, None, gbs);
+
+        let stats = b.run(|| ShardSource::open(&shard_path).unwrap().to_mat().unwrap());
+        push(
+            &mut t,
+            &mut records,
+            "load shard",
+            &shape,
+            stats.mean,
+            None,
+            Some(mb / stats.mean / 1e9),
+        );
+    }
+
+    // --- epoch throughput: resident vs streamed, same bits ---
+    let (j_sweeps, k_local) = (3usize, 2usize);
+    for &p_width in &[5usize, 25] {
+        let (m, n) = (1000usize, 1000usize);
+        let spec = ProblemSpec { m, n, rank: p_width, sparsity: 0.05 };
+        let prob = spec.generate(13);
+        let hyper = FactorHyper::default_for(m, n, p_width);
+        assert_eq!(hyper.inner_sweeps, j_sweeps, "flop/byte models assume J = inner_sweeps");
+        let u0 = Mat::gaussian(m, p_width, &mut rng);
+        let shape = format!("m=n={m} p={p_width} J={j_sweeps} K={k_local}");
+        let flops = epoch_flops(m, n, p_width, j_sweeps, k_local);
+        let bytes = fused_epoch_bytes(m, n, j_sweeps, k_local);
+
+        let shard_path = dir.join(format!("epoch-p{p_width}.dcfshard"));
+        write_block(&shard_path, &prob.observed, panel_width(m, n), 0, n, 13).unwrap();
+        let shard = ShardSource::open(&shard_path).unwrap();
+
+        let kernel = NativeKernel::with_threads(2);
+        let mut outputs: Vec<Mat> = Vec::new();
+        for (label, src) in
+            [("resident", &prob.observed as &dyn DataSource), ("streamed", &shard)]
+        {
+            let mut state = ClientState::zeros(m, n, p_width);
+            let mut ws = Workspace::for_source(src, p_width);
+            let mut u = u0.clone();
+            let stats = b.run(|| {
+                u.copy_from(&u0);
+                kernel
+                    .local_epoch(&mut u, src, &mut state, &hyper, 1.0, 1e-3, k_local, &mut ws)
+                    .unwrap()
+            });
+            push(
+                &mut t,
+                &mut records,
+                &format!("local_epoch ({label} t2)"),
+                &shape,
+                stats.mean,
+                Some(flops / stats.mean / 1e9),
+                Some(bytes / stats.mean / 1e9),
+            );
+            outputs.push(u);
+        }
+        assert_eq!(outputs[0], outputs[1], "streamed epoch diverged from resident (p={p_width})");
+    }
+
+    println!("\ndata I/O timings:");
+    t.print();
+
+    let json = Json::Arr(records.iter().map(Record::to_json).collect());
+    let out_path = "BENCH_data_io.json";
+    match std::fs::write(out_path, format!("{json}\n")) {
+        Ok(()) => println!("\nmachine-readable results written to {out_path}"),
+        Err(err) => eprintln!("could not write {out_path}: {err}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -193,8 +193,9 @@ fn main() {
         let u = Mat::gaussian(500, 25, &mut rng);
         let mut state = ClientState::zeros(500, 50, 25);
         let mut ws = Workspace::new(500, 50, 25);
-        let stats =
-            b.run(|| inner_solve(&u, &p.observed, &mut state, &hyper, pool::global(), &mut ws));
+        let stats = b.run(|| {
+            inner_solve(&u, &p.observed, &mut state, &hyper, pool::global(), &mut ws).unwrap()
+        });
         push(
             &mut t,
             &mut records,

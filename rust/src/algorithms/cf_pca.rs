@@ -85,10 +85,12 @@ impl RpcaSolver for CfPca {
         let mut iters = 0;
 
         for t in 0..self.stop.max_iters {
-            inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws);
+            inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws)
+                .expect("resident panel fetch cannot fail");
             let lip = lipschitz_estimate(&state, &self.hyper, &mut ws);
             let eta = self.schedule.eta(t, lip);
-            u_gradient_into(&u, observed, &state, &self.hyper, 1.0, pool, &mut ws);
+            u_gradient_into(&u, observed, &state, &self.hyper, 1.0, pool, &mut ws)
+                .expect("resident panel fetch cannot fail");
             let gn = ws.grad.frob_norm();
             u.axpy(-eta, &ws.grad);
             iters = t + 1;
@@ -125,9 +127,11 @@ impl RpcaSolver for CfPca {
         }
 
         // final inner solve so (V,S) correspond to the final U
-        inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws);
+        inner_solve(&u, observed, &mut state, &self.hyper, pool, &mut ws)
+            .expect("resident panel fetch cannot fail");
         for _ in 0..self.polish_sweeps {
-            polish_sweep(&u, observed, &mut state, &self.hyper, pool, &mut ws);
+            polish_sweep(&u, observed, &mut state, &self.hyper, pool, &mut ws)
+                .expect("resident panel fetch cannot fail");
         }
         matmul_nt_into(&mut l, &u, &state.v);
         let final_error = truth.map(|p| crate::rpca::metrics::problem_error(p, &l, &state.s));

@@ -25,19 +25,31 @@
 //! bitwise identical at any thread count. The multi-pass path survives
 //! as the parity [`oracle`] used by tests and the hot-path bench.
 //!
+//! The block itself arrives through a [`DataSource`], not `&Mat`: a
+//! resident matrix hands out zero-copy panel views (and `&Mat` coerces
+//! to `&dyn DataSource`, so the in-memory call surface is unchanged),
+//! while a `ShardSource` streams each panel from disk into its slot's
+//! `Workspace::io` buffer with readahead of the slot's next panel — the
+//! same sweep runs out-of-core, bit-identically. Fetch failures (an
+//! out-of-core read can fail; a resident one cannot) surface as `Err`
+//! from the sweep, which is why these functions return [`Result`].
+//!
 //! Every function here borrows a [`Workspace`] sized for the block
-//! (`(m, n_i, p)`) instead of allocating temporaries: the inner sweep and
-//! the gradient run J × K × T times per DCF-PCA run, and on that path
-//! steady-state heap traffic is zero (asserted by the counting-allocator
-//! test in `coordinator::kernel`).
+//! (`(m, n_i, p)`, panel width from the source) instead of allocating
+//! temporaries: the inner sweep and the gradient run J × K × T times per
+//! DCF-PCA run, and on that path steady-state heap traffic is zero —
+//! resident *and* streamed (asserted by counting-allocator tests in
+//! `coordinator::kernel` and `data::source`).
 //!
 //! This module is the native (f64) twin of the AOT-compiled JAX/Pallas
 //! `client_update` artifact; `runtime::executor` checks the two against
 //! each other.
 
+use crate::data::DataSource;
+use crate::error::{Error, Result};
 use crate::linalg::{
     cholesky_shifted_into, gram_into, matmul_nt, matvec_into, tile, GradCtx, Mat, PanelCtx,
-    PanelScratch, Workspace,
+    PanelScratch, PanelView, Workspace,
 };
 use crate::runtime::pool::{Slots, ThreadPool};
 
@@ -94,57 +106,93 @@ impl ClientState {
     }
 }
 
-/// Fan `panels` across the pool as [`tile::NUM_SLOTS`]-capped slots:
-/// slot `s` processes panels `s, s + jobs, s + 2·jobs, …` in order with
-/// its private scratch. `jobs` depends on shape only, so the work (and
-/// any slot-ordered reduction over the returned `jobs` scratches) is
-/// deterministic at every thread count. The closure receives
-/// `(panel, first, scratch)` — `first` is true for the slot's first
-/// panel, so per-slot accumulators can be reset without a second copy
-/// of the stride formula. Returns `jobs`.
+/// Fan `panels` of `data` across the pool as [`tile::NUM_SLOTS`]-capped
+/// slots: slot `s` processes panels `s, s + jobs, s + 2·jobs, …` in
+/// order with its private scratch and I/O lane. `jobs` depends on shape
+/// only, so the work (and any slot-ordered reduction over the `jobs`
+/// scratches) is deterministic at every thread count. Each panel is
+/// fetched from the source (zero-copy for resident blocks, a positioned
+/// read + next-panel readahead for shards) and handed to the closure as
+/// `(panel, first, view, scratch)` — `first` is true for the slot's
+/// first panel, so per-slot accumulators can be reset without a second
+/// copy of the stride formula. A fetch failure stops that slot and is
+/// re-raised after the dispatch drains (first slot in order wins).
+/// Returns `jobs`. No allocation on the success path.
 fn dispatch_panels(
     pool: &ThreadPool,
+    data: &dyn DataSource,
     panels: usize,
     slots: &mut [PanelScratch],
-    run: impl Fn(usize, bool, &mut PanelScratch) + Sync,
-) -> usize {
+    io: &mut [Vec<f64>],
+    run: impl Fn(usize, bool, PanelView<'_>, &mut PanelScratch) + Sync,
+) -> Result<usize> {
     let jobs = tile::NUM_SLOTS.min(panels).max(1);
     let access = Slots::new(&mut slots[..jobs]);
+    let io_access = Slots::new(&mut io[..jobs]);
+    let mut errs: [Option<Error>; tile::NUM_SLOTS] = std::array::from_fn(|_| None);
+    let err_access = Slots::new(&mut errs[..jobs]);
     pool.run(jobs, &|s| {
         // SAFETY: each job index is claimed exactly once per dispatch.
         let scratch = unsafe { access.get(s) };
+        let buf = unsafe { io_access.get(s) };
         let mut k = s;
         let mut first = true;
         while k < panels {
-            run(k, first, scratch);
+            let next = k + jobs;
+            let prefetch = if next < panels { Some(next) } else { None };
+            match data.panel(k, prefetch, buf) {
+                Ok(view) => run(k, first, view, scratch),
+                Err(e) => {
+                    // SAFETY: slot-private lane, claimed once.
+                    unsafe { *err_access.get(s) = Some(e) };
+                    break;
+                }
+            }
             first = false;
-            k += jobs;
+            k = next;
         }
     });
-    jobs
+    for e in errs.iter_mut() {
+        if let Some(e) = e.take() {
+            return Err(e);
+        }
+    }
+    Ok(jobs)
 }
 
 /// One exact alternation sweep of the inner problem (Eqs. 15 + 16) as a
-/// fused panel pipeline — one DRAM pass over `m_block`, entirely inside
-/// `ws`, panels fanned across `pool`. No allocation.
+/// fused panel pipeline — one pass over `data`'s panels (DRAM for
+/// resident blocks, disk-streamed for shards), entirely inside `ws`,
+/// panels fanned across `pool`. No allocation.
 pub fn inner_sweep(
     u: &Mat,
-    m_block: &Mat,
+    data: &dyn DataSource,
     state: &mut ClientState,
     hyper: &FactorHyper,
     pool: &ThreadPool,
     ws: &mut Workspace,
-) {
-    factor_ridge(u, m_block, hyper, ws);
-    let ctx = PanelCtx::new(u, &ws.chol, m_block, &mut state.v, &mut state.s, hyper.lambda);
+) -> Result<()> {
+    factor_ridge(u, data, hyper, ws);
+    let (m, n_i, w) = (data.rows(), data.cols(), data.panel_width());
+    let ctx = PanelCtx::new(u, &ws.chol, m, n_i, w, &mut state.v, &mut state.s, hyper.lambda);
     let panels = ctx.panels();
-    dispatch_panels(pool, panels, &mut ws.slots, |k, _, scratch| ctx.sweep_panel(k, scratch));
+    dispatch_panels(
+        pool,
+        data,
+        panels,
+        &mut ws.slots,
+        &mut ws.io,
+        |k, _, mp: PanelView<'_>, scratch| ctx.sweep_panel(k, mp, scratch),
+    )?;
+    Ok(())
 }
 
-/// Shared sweep/polish preamble: check the workspace shape and factor
-/// (UᵀU + ρI) into `ws.chol` — every column's ridge system shares it.
-fn factor_ridge(u: &Mat, m_block: &Mat, hyper: &FactorHyper, ws: &mut Workspace) {
-    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
+/// Shared sweep/polish preamble: check the workspace against the
+/// source's shape *and* panel width (a workspace sized for one
+/// decomposition must never run another) and factor (UᵀU + ρI) into
+/// `ws.chol` — every column's ridge system shares it.
+fn factor_ridge(u: &Mat, data: &dyn DataSource, hyper: &FactorHyper, ws: &mut Workspace) {
+    assert_ws_fits_source(data, hyper, ws);
     gram_into(&mut ws.gram, u);
     assert!(
         cholesky_shifted_into(&mut ws.chol, &ws.gram, hyper.rho),
@@ -152,18 +200,34 @@ fn factor_ridge(u: &Mat, m_block: &Mat, hyper: &FactorHyper, ws: &mut Workspace)
     );
 }
 
+/// The workspace must match the source's shape *and* panel width — the
+/// scratch lanes are sized for one decomposition, and running another
+/// would index past them. Guarded at the top of every panel-dispatching
+/// entry point (sweep, polish, gradient) so the failure is this message,
+/// not an opaque slice panic inside a panel kernel.
+fn assert_ws_fits_source(data: &dyn DataSource, hyper: &FactorHyper, ws: &Workspace) {
+    ws.assert_shape(data.rows(), data.cols(), hyper.rank);
+    assert_eq!(
+        ws.panel_width(),
+        data.panel_width(),
+        "workspace panel width does not match the data source's \
+         (size the workspace with Workspace::for_source)"
+    );
+}
+
 /// Solve the inner problem (Eq. 7) to tolerance by J alternation sweeps.
 pub fn inner_solve(
     u: &Mat,
-    m_block: &Mat,
+    data: &dyn DataSource,
     state: &mut ClientState,
     hyper: &FactorHyper,
     pool: &ThreadPool,
     ws: &mut Workspace,
-) {
+) -> Result<()> {
     for _ in 0..hyper.inner_sweeps {
-        inner_sweep(u, m_block, state, hyper, pool, ws);
+        inner_sweep(u, data, state, hyper, pool, ws)?;
     }
+    Ok(())
 }
 
 /// Inner objective value (Eq. 7's argument):
@@ -195,29 +259,38 @@ pub fn local_objective(
 /// the centralized solver). No allocation.
 pub fn u_gradient_into(
     u: &Mat,
-    m_block: &Mat,
+    data: &dyn DataSource,
     state: &ClientState,
     hyper: &FactorHyper,
     n_frac: f64,
     pool: &ThreadPool,
     ws: &mut Workspace,
-) {
-    ws.assert_shape(m_block.rows(), m_block.cols(), hyper.rank);
-    let ctx = GradCtx::new(u, m_block, &state.v, &state.s);
+) -> Result<()> {
+    assert_ws_fits_source(data, hyper, ws);
+    let (m, n_i, w) = (data.rows(), data.cols(), data.panel_width());
+    let ctx = GradCtx::new(u, m, n_i, w, &state.v, &state.s);
     let panels = ctx.panels();
-    let jobs = dispatch_panels(pool, panels, &mut ws.slots, |k, first, scratch| {
-        if first {
-            // first panel of this slot: start the accumulator fresh
-            scratch.grad_acc.fill(0.0);
-        }
-        ctx.grad_panel(k, scratch);
-    });
+    let jobs = dispatch_panels(
+        pool,
+        data,
+        panels,
+        &mut ws.slots,
+        &mut ws.io,
+        |k, first, mp: PanelView<'_>, scratch| {
+            if first {
+                // first panel of this slot: start the accumulator fresh
+                scratch.grad_acc.fill(0.0);
+            }
+            ctx.grad_panel(k, mp, scratch);
+        },
+    )?;
     // fixed-order reduction: Σ_slots acc + ρ·(n_i/n)·U
     ws.grad.copy_from(&ws.slots[0].grad_acc);
     for s in 1..jobs {
         ws.grad.axpy(1.0, &ws.slots[s].grad_acc);
     }
     ws.grad.axpy(hyper.rho * n_frac, u);
+    Ok(())
 }
 
 /// One full local iteration (Algorithm 1's loop body): inner solve, then a
@@ -226,19 +299,19 @@ pub fn u_gradient_into(
 #[allow(clippy::too_many_arguments)]
 pub fn local_iteration(
     u: &mut Mat,
-    m_block: &Mat,
+    data: &dyn DataSource,
     state: &mut ClientState,
     hyper: &FactorHyper,
     n_frac: f64,
     eta: f64,
     pool: &ThreadPool,
     ws: &mut Workspace,
-) -> f64 {
-    inner_solve(u, m_block, state, hyper, pool, ws);
-    u_gradient_into(u, m_block, state, hyper, n_frac, pool, ws);
+) -> Result<f64> {
+    inner_solve(u, data, state, hyper, pool, ws)?;
+    u_gradient_into(u, data, state, hyper, n_frac, pool, ws)?;
     let gn = ws.grad.frob_norm();
     u.axpy(-eta, &ws.grad);
-    gn
+    Ok(gn)
 }
 
 /// Debias polish (final-output refinement, not part of Algorithm 1's
@@ -252,16 +325,25 @@ pub fn local_iteration(
 /// same fused panel pipeline as [`inner_sweep`].
 pub fn polish_sweep(
     u: &Mat,
-    m_block: &Mat,
+    data: &dyn DataSource,
     state: &mut ClientState,
     hyper: &FactorHyper,
     pool: &ThreadPool,
     ws: &mut Workspace,
-) {
-    factor_ridge(u, m_block, hyper, ws);
-    let ctx = PanelCtx::new(u, &ws.chol, m_block, &mut state.v, &mut state.s, hyper.lambda);
+) -> Result<()> {
+    factor_ridge(u, data, hyper, ws);
+    let (m, n_i, w) = (data.rows(), data.cols(), data.panel_width());
+    let ctx = PanelCtx::new(u, &ws.chol, m, n_i, w, &mut state.v, &mut state.s, hyper.lambda);
     let panels = ctx.panels();
-    dispatch_panels(pool, panels, &mut ws.slots, |k, _, scratch| ctx.polish_panel(k, scratch));
+    dispatch_panels(
+        pool,
+        data,
+        panels,
+        &mut ws.slots,
+        &mut ws.io,
+        |k, _, mp: PanelView<'_>, scratch| ctx.polish_panel(k, mp, scratch),
+    )?;
+    Ok(())
 }
 
 /// Curvature estimate for adaptive step sizes: the largest eigenvalue of
@@ -488,7 +570,7 @@ mod tests {
         let mut ws = Workspace::new(40, 40, 3);
         let mut prev = inner_objective(&u, &m, &state, &hyper);
         for _ in 0..6 {
-            inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+            inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
             let cur = inner_objective(&u, &m, &state, &hyper);
             assert!(cur <= prev + 1e-9 * prev.abs().max(1.0), "{cur} > {prev}");
             prev = cur;
@@ -505,7 +587,7 @@ mod tests {
 
         let mut state_ws = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_sweep(&u, &m, &mut state_ws, &hyper, test_pool(), &mut ws);
+        inner_sweep(&u, &m, &mut state_ws, &hyper, test_pool(), &mut ws).unwrap();
 
         let mut state_alloc = ClientState::zeros(40, 40, 3);
         let g = gram(&u);
@@ -546,7 +628,7 @@ mod tests {
             let mut ows = oracle::MultipassWorkspace::new(mdim, ndim, p);
 
             for _ in 0..3 {
-                inner_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws);
+                inner_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws).unwrap();
                 oracle::inner_sweep(&u, &prob.observed, &mut st_oracle, &hyper, &mut ows);
             }
             let dv = (&st_fused.v - &st_oracle.v).frob_norm() / st_oracle.v.frob_norm().max(1.0);
@@ -554,12 +636,12 @@ mod tests {
             assert!(dv < 1e-12, "V deviates {dv} at {mdim}x{ndim} p={p}");
             assert!(ds < 1e-12, "S deviates {ds} at {mdim}x{ndim} p={p}");
 
-            u_gradient_into(&u, &prob.observed, &st_fused, &hyper, 0.7, test_pool(), &mut ws);
+            u_gradient_into(&u, &prob.observed, &st_fused, &hyper, 0.7, test_pool(), &mut ws).unwrap();
             oracle::u_gradient_into(&u, &prob.observed, &st_oracle, &hyper, 0.7, &mut ows);
             let dg = (&ws.grad - &ows.grad).frob_norm() / ows.grad.frob_norm().max(1.0);
             assert!(dg < 1e-12, "grad deviates {dg} at {mdim}x{ndim} p={p}");
 
-            polish_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws);
+            polish_sweep(&u, &prob.observed, &mut st_fused, &hyper, test_pool(), &mut ws).unwrap();
             oracle::polish_sweep(&u, &prob.observed, &mut st_oracle, &hyper, &mut ows);
             let dv = (&st_fused.v - &st_oracle.v).frob_norm() / st_oracle.v.frob_norm().max(1.0);
             let ds = (&st_fused.s - &st_oracle.s).frob_norm() / st_oracle.s.frob_norm().max(1.0);
@@ -577,10 +659,10 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
         let v_before = state.v.clone();
         let s_before = state.s.clone();
-        inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+        inner_sweep(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
         // linear convergence rate degrades as ρ → 0 (Lemma 1's strong
         // convexity is only ρ); after 60 sweeps a further sweep should
         // move the blocks by <1e-4 relative
@@ -598,9 +680,9 @@ mod tests {
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
         // fix (V,S) at some point — gradient formula holds for any (V,S)
-        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
         let n_frac = 1.0;
-        u_gradient_into(&u, &m, &state, &hyper, n_frac, test_pool(), &mut ws);
+        u_gradient_into(&u, &m, &state, &hyper, n_frac, test_pool(), &mut ws).unwrap();
         let grad = ws.grad.clone();
         let eps = 1e-6;
         let mut rng2 = Pcg64::new(4);
@@ -632,15 +714,15 @@ mod tests {
         let mut u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
         let g_before =
             inner_objective(&u, &m, &state, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
-        u_gradient_into(&u, &m, &state, &hyper, 1.0, test_pool(), &mut ws);
+        u_gradient_into(&u, &m, &state, &hyper, 1.0, test_pool(), &mut ws).unwrap();
         let grad = ws.grad.clone();
         let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         u.axpy(-0.5 / lip, &grad);
         let mut state2 = state.clone();
-        inner_solve(&u, &m, &mut state2, &hyper, test_pool(), &mut ws);
+        inner_solve(&u, &m, &mut state2, &hyper, test_pool(), &mut ws).unwrap();
         let g_after =
             inner_objective(&u, &m, &state2, &hyper) + 0.5 * hyper.rho * u.frob_norm_sq();
         assert!(g_after < g_before, "{g_after} !< {g_before}");
@@ -656,7 +738,7 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_sweep(&u, &m_of(&p), &mut state, &hyper, test_pool(), &mut ws);
+        inner_sweep(&u, &m_of(&p), &mut state, &hyper, test_pool(), &mut ws).unwrap();
         let acc = crate::rpca::metrics::support_sign_accuracy(&state.s, &p.s0);
         assert!(acc > 0.95, "support sign accuracy {acc}");
     }
@@ -672,7 +754,7 @@ mod tests {
         let u = Mat::gaussian(40, 3, &mut rng);
         let mut state = ClientState::zeros(40, 40, 3);
         let mut ws = Workspace::new(40, 40, 3);
-        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws);
+        inner_solve(&u, &m, &mut state, &hyper, test_pool(), &mut ws).unwrap();
         let lip = lipschitz_estimate(&state, &hyper, &mut ws);
         let g = gram(&state.v);
         for i in 0..3 {
@@ -689,7 +771,7 @@ mod tests {
         let mut ws = Workspace::new(40, 40, 3);
         let pool = test_pool();
         // warm-up (first call settles lazy state like TLS)
-        local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, pool, &mut ws);
+        local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, pool, &mut ws).unwrap();
         let (_, allocs) = crate::alloc_counter::measure(|| {
             local_iteration(&mut u, &m, &mut state, &hyper, 1.0, 1e-3, pool, &mut ws)
         });

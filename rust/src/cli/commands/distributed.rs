@@ -181,6 +181,12 @@ const WORKER_SPECS: &[OptSpec] = &[
     OptSpec { name: "sparsity", takes_value: true, help: "corruption — must match the server" },
     OptSpec { name: "seed", takes_value: true, help: "shared seed — must match the server" },
     OptSpec {
+        name: "data",
+        takes_value: true,
+        help: "this worker's .dcfshard: stream the block from disk instead of \
+               deriving it from --seed (out-of-core; --rank must still match the server)",
+    },
+    OptSpec {
         name: "compression",
         takes_value: true,
         help: "wire codec: none | f32 | int8 — must match the server",
@@ -203,33 +209,102 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
     };
     let clients = args.get_usize("clients")?.unwrap_or(4);
     let n = args.get_usize("n")?.unwrap_or(200);
-    let rank = args
-        .get_usize("rank")?
-        .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
+    let rank_flag = args.get_usize("rank")?;
     let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
     let seed = args.get_u64("seed")?.unwrap_or(42);
     let compression = parse_compression(&args)?;
     if id >= clients {
         bail!("--id {id} out of range for {clients} clients");
     }
+    let default_rank = |n: usize| ((n as f64) * 0.05).round().max(1.0) as usize;
 
-    let spec = ProblemSpec::square(n, rank, sparsity);
-    let problem = spec.generate(seed);
-    let partition = ColumnPartition::even(n, clients);
-    let (a, b) = partition.range(id);
-    let m_block = problem.observed.cols_range(a, b);
-    let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
+    // Data provisioning: either stream this worker's own .dcfshard from
+    // disk (out-of-core — the block is never resident in this process),
+    // or derive the shared synthetic instance from --seed and slice out
+    // the local columns.
+    let streaming = args.get("data").is_some();
+    let data: Box<dyn crate::data::DataSource>;
+    let n_frac: f64;
+    let mut truth = None;
+    let m_rows: usize;
+    let rank: usize;
+    let hyper_n: usize;
+    let span: (usize, usize);
+    match args.get("data") {
+        Some(path) => {
+            let src = crate::data::ShardSource::open(std::path::Path::new(path))?;
+            let h = *src.header();
+            if h.total_cols == 0 {
+                bail!("{path}: shard records no total_cols — cannot derive n_i/n");
+            }
+            // cross-check against the federation parameters: a shard from
+            // a different run would silently skew the n_i/n aggregation
+            // weights (they must sum to 1 across the server's partition)
+            if let Some(n_flag) = args.get_usize("n")? {
+                if h.total_cols != n_flag {
+                    bail!(
+                        "{path}: shard belongs to an n={} run, but --n {n_flag} was given \
+                         — weights n_i/n would be inconsistent with the server's partition",
+                        h.total_cols
+                    );
+                }
+            }
+            if h.col_offset + h.cols > h.total_cols {
+                bail!("{path}: shard columns exceed its recorded total_cols");
+            }
+            // ...and against this worker's slot: the server positions
+            // blocks purely by client id over its even partition, so a
+            // shard whose columns are not id's slot would silently land
+            // in the wrong place of the assembled result
+            let (ea, eb) = ColumnPartition::even(h.total_cols, clients).range(id);
+            if (h.col_offset, h.col_offset + h.cols) != (ea, eb) {
+                bail!(
+                    "{path}: shard covers columns {}..{}, but --id {id} of --clients {clients} \
+                     is the {ea}..{eb} slot — pass this worker the shard matching its id",
+                    h.col_offset,
+                    h.col_offset + h.cols
+                );
+            }
+            // shape comes from the shard, not --n's default: derive the
+            // default rank from the recorded total_cols (mirrors
+            // solve --data, which never lets rank depend silently on --n)
+            rank = rank_flag.unwrap_or_else(|| default_rank(h.total_cols));
+            hyper_n = h.total_cols;
+            n_frac = h.cols as f64 / h.total_cols as f64;
+            m_rows = h.rows;
+            span = (h.col_offset, h.col_offset + h.cols);
+            data = Box::new(src);
+        }
+        None => {
+            rank = rank_flag.unwrap_or_else(|| default_rank(n));
+            let spec = ProblemSpec::square(n, rank, sparsity);
+            let problem = spec.generate(seed);
+            let partition = ColumnPartition::even(n, clients);
+            let (a, b) = partition.range(id);
+            truth = Some((problem.l0.cols_range(a, b), problem.s0.cols_range(a, b)));
+            n_frac = (b - a) as f64 / n as f64;
+            m_rows = spec.m;
+            hyper_n = n;
+            span = (a, b);
+            data = Box::new(problem.observed.cols_range(a, b));
+        }
+    }
 
     let mut ch = TcpChannel::connect(addr)?;
-    println!("worker {id} connected to {addr}, columns {a}..{b}");
+    println!(
+        "worker {id} connected to {addr}, columns {}..{}{}",
+        span.0,
+        span.1,
+        if streaming { " (streaming from shard)" } else { "" }
+    );
     let cfg = ClientConfig {
         id,
         job: 0,
-        n_frac: (b - a) as f64 / n as f64,
-        m_block,
-        hyper: FactorHyper::default_for(spec.m, spec.n, rank),
+        n_frac,
+        data,
+        hyper: FactorHyper::default_for(m_rows, hyper_n, rank),
         polish_sweeps: 3,
-        truth: Some(truth),
+        truth,
         faults: FaultPlan::default(),
         compression,
         dp_sigma: 0.0,

@@ -1,11 +1,13 @@
-//! `dcf-pca generate` — emit a synthetic RPCA instance (observed matrix
-//! and optionally the ground-truth components) as CSV files.
+//! `dcf-pca generate` — emit a synthetic RPCA instance as CSV files or
+//! as per-client `.dcfshard` files plus a manifest (the out-of-core
+//! input of `solve --data` / `worker --data`).
 
 use crate::ensure;
 use crate::error::{Context, Error, Result};
 
 use crate::cli::args::{usage, OptSpec, ParsedArgs};
 use crate::linalg::Mat;
+use crate::rpca::partition::ColumnPartition;
 use crate::rpca::problem::ProblemSpec;
 
 const SPECS: &[OptSpec] = &[
@@ -14,7 +16,13 @@ const SPECS: &[OptSpec] = &[
     OptSpec { name: "rank", takes_value: true, help: "true rank (default 0.05n)" },
     OptSpec { name: "sparsity", takes_value: true, help: "corruption fraction (default 0.05)" },
     OptSpec { name: "seed", takes_value: true, help: "seed (default 42)" },
-    OptSpec { name: "out", takes_value: true, help: "output CSV for M (required)" },
+    OptSpec { name: "out", takes_value: true, help: "output path: CSV file or shard prefix (required)" },
+    OptSpec { name: "format", takes_value: true, help: "csv | shard (default csv)" },
+    OptSpec {
+        name: "shards",
+        takes_value: true,
+        help: "shard format: clients E to partition the columns across (default 4)",
+    },
     OptSpec { name: "truth", takes_value: false, help: "also write <out>.l0.csv / <out>.s0.csv" },
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
@@ -33,13 +41,41 @@ pub fn run(argv: &[String]) -> Result<()> {
     let sparsity = args.get_f64("sparsity")?.unwrap_or(0.05);
     let seed = args.get_u64("seed")?.unwrap_or(42);
     let out = args.get("out").context("--out is required")?;
+    let format = args.get("format").unwrap_or("csv");
 
     let spec = ProblemSpec { m, n, rank, sparsity };
     spec.validate().map_err(Error::msg)?;
     let problem = spec.generate(seed);
 
-    write_matrix_csv(out, &problem.observed)?;
-    println!("wrote {} ({m}x{n}, rank {rank}, sparsity {sparsity}, seed {seed})", out);
+    match format {
+        "csv" => {
+            write_matrix_csv(out, &problem.observed)?;
+            println!("wrote {out} ({m}x{n}, rank {rank}, sparsity {sparsity}, seed {seed})");
+        }
+        "shard" => {
+            let clients = args.get_usize("shards")?.unwrap_or(4);
+            ensure!(
+                clients >= 1 && clients <= n,
+                "--shards must be in 1..=n, got {clients} for n={n}"
+            );
+            let partition = ColumnPartition::even(n, clients);
+            let prefix = std::path::Path::new(out);
+            let manifest = crate::data::write_shards(
+                &problem.observed,
+                &partition,
+                prefix,
+                seed,
+                Some((rank, sparsity)),
+            )?;
+            println!(
+                "wrote {} shard(s) + {}.manifest.json ({m}x{n}, rank {rank}, \
+                 sparsity {sparsity}, seed {seed})",
+                manifest.shards.len(),
+                out
+            );
+        }
+        other => crate::bail!("--format must be csv or shard, got {other}"),
+    }
     if args.flag("truth") {
         let l0_path = format!("{out}.l0.csv");
         let s0_path = format!("{out}.s0.csv");
@@ -50,46 +86,65 @@ pub fn run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Plain numeric CSV (no header): one row per matrix row.
+/// Plain numeric CSV (no header): one row per matrix row, streamed
+/// through a `BufWriter` — the matrix is the only resident copy; no
+/// whole-file `String` is built.
 pub fn write_matrix_csv(path: &str, m: &Mat) -> Result<()> {
-    use std::fmt::Write as _;
-    let mut text = String::with_capacity(m.rows() * m.cols() * 12);
-    for i in 0..m.rows() {
-        for (j, v) in m.row(i).iter().enumerate() {
-            if j > 0 {
-                text.push(',');
-            }
-            let _ = write!(text, "{v:.10e}");
-        }
-        text.push('\n');
-    }
+    use std::io::Write as _;
     if let Some(parent) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(parent).ok();
     }
-    std::fs::write(path, text).with_context(|| format!("writing {path}"))
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut out = std::io::BufWriter::new(file);
+    let write = |out: &mut std::io::BufWriter<std::fs::File>| -> std::io::Result<()> {
+        for i in 0..m.rows() {
+            for (j, v) in m.row(i).iter().enumerate() {
+                if j > 0 {
+                    out.write_all(b",")?;
+                }
+                write!(out, "{v:.10e}")?;
+            }
+            out.write_all(b"\n")?;
+        }
+        out.flush()
+    };
+    write(&mut out).with_context(|| format!("writing {path}"))
 }
 
-/// Read a matrix back from a numeric CSV (used by examples/tests).
+/// Read a matrix back from a numeric CSV, line-streamed through a
+/// `BufRead` (no whole-file slurp, no intermediate `Vec<Vec<f64>>` —
+/// values parse straight into the flat row-major buffer). Parse errors
+/// keep their 1-based line numbers.
 pub fn read_matrix_csv(path: &str) -> Result<Mat> {
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let mut rows: Vec<Vec<f64>> = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
+    use std::io::BufRead as _;
+    let file = std::fs::File::open(path).with_context(|| format!("reading {path}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut data: Vec<f64> = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {path}:{}", lineno + 1))?;
         if line.trim().is_empty() {
             continue;
         }
-        let row: Result<Vec<f64>> = line
-            .split(',')
-            .map(|c| {
-                c.trim()
-                    .parse::<f64>()
-                    .with_context(|| format!("{path}:{}: bad number '{c}'", lineno + 1))
-            })
-            .collect();
-        rows.push(row?);
+        let before = data.len();
+        for c in line.split(',') {
+            data.push(c.trim().parse::<f64>().with_context(|| {
+                format!("{path}:{}: bad number '{c}'", lineno + 1)
+            })?);
+        }
+        let width = data.len() - before;
+        if rows == 0 {
+            cols = width;
+        } else {
+            ensure!(
+                width == cols,
+                "{path}:{}: ragged rows ({width} fields, expected {cols})",
+                lineno + 1
+            );
+        }
+        rows += 1;
     }
-    ensure!(!rows.is_empty(), "{path}: empty matrix");
-    let cols = rows[0].len();
-    ensure!(rows.iter().all(|r| r.len() == cols), "{path}: ragged rows");
-    let data: Vec<f64> = rows.into_iter().flatten().collect();
-    Ok(Mat::from_vec(data.len() / cols, cols, data))
+    ensure!(rows > 0, "{path}: empty matrix");
+    Ok(Mat::from_vec(rows, cols, data))
 }

@@ -14,6 +14,18 @@ use crate::util::csv::CsvWriter;
 const SPECS: &[OptSpec] = &[
     OptSpec { name: "config", takes_value: true, help: "TOML run configuration file" },
     OptSpec { name: "algorithm", takes_value: true, help: "dcf-pca | cf-pca | apgm | alm" },
+    OptSpec {
+        name: "data",
+        takes_value: true,
+        help: "shard manifest (.manifest.json): run DCF-PCA out-of-core, \
+               each client streaming its own .dcfshard",
+    },
+    OptSpec {
+        name: "no-truth",
+        takes_value: false,
+        help: "with --data: skip ground-truth regeneration (no error telemetry, \
+               nothing m×n is ever resident — required when M exceeds RAM)",
+    },
     OptSpec { name: "n", takes_value: true, help: "problem size (square m=n)" },
     OptSpec { name: "m", takes_value: true, help: "rows (defaults to n)" },
     OptSpec { name: "rank", takes_value: true, help: "true rank r (default 0.05n)" },
@@ -111,7 +123,64 @@ pub fn run(argv: &[String]) -> Result<()> {
         cfg.output_csv = Some(c.to_string());
     }
 
+    if let Some(manifest_path) = args.get("data") {
+        return execute_streamed(manifest_path, &cfg, &args);
+    }
     execute(&cfg)
+}
+
+/// Out-of-core DCF-PCA: clients stream their blocks from the shards a
+/// manifest names — the compute path never materializes M. Unlike the
+/// resident path, the problem shape comes from the *manifest*, so the
+/// hyperparameters are rebuilt here from its dims + the `--rank`/`--p`
+/// flags (or the manifest's recorded provenance) — `--rank` must not
+/// silently depend on `--n` being passed.
+fn execute_streamed(manifest_path: &str, cfg: &RunConfig, args: &ParsedArgs) -> Result<()> {
+    if !matches!(cfg.algorithm, Algorithm::DcfPca) {
+        crate::bail!("--data (shard streaming) is only supported for --algorithm dcf-pca");
+    }
+    let manifest = crate::data::ShardManifest::load(std::path::Path::new(manifest_path))?;
+    let (m, n) = (manifest.rows, manifest.total_cols);
+    let rank = match args.get_usize("rank")?.or(manifest.rank) {
+        Some(r) => r,
+        None => crate::bail!(
+            "{manifest_path} records no rank provenance — pass --rank explicitly"
+        ),
+    };
+    let p = args.get_usize("p")?.unwrap_or(rank);
+    crate::log_info!(
+        "solve",
+        "dcf-pca streaming m={m} n={n} r={rank} p={p} from {} shard(s) in {manifest_path}",
+        manifest.shards.len()
+    );
+    let mut dcf = cfg.dcf.clone();
+    // λ from the true rank, factor width p — same recipe as the resident
+    // path, but sized from the manifest's dims
+    dcf.hyper = crate::algorithms::factor::FactorHyper::default_for(m, n, rank);
+    dcf.hyper.rank = p;
+    if cfg.use_pjrt {
+        let kernel = crate::runtime::PjrtKernel::load(&cfg.artifacts_dir)
+            .context("loading PJRT artifacts (run `make artifacts`)")?;
+        dcf.kernel = KernelSpec::Custom(Arc::new(kernel));
+    }
+    let regenerate_truth = !args.flag("no-truth");
+    let res = crate::coordinator::driver::run_dcf_pca_streamed(&manifest, &dcf, regenerate_truth)?;
+    println!(
+        "DCF-PCA (streamed): final err {:.4e} after {} rounds in {}",
+        res.final_error.unwrap_or(f64::NAN),
+        res.rounds.len(),
+        crate::bench_util::fmt_secs(res.wall.as_secs_f64())
+    );
+    if let Some(path) = &cfg.output_csv {
+        let curve = res.error_curve();
+        let mut csv = CsvWriter::new(&["iter", "err"]);
+        for (t, e) in &curve {
+            csv.row(&[t, e]);
+        }
+        csv.write_file(path).with_context(|| format!("writing {path}"))?;
+        println!("error curve written to {path}");
+    }
+    Ok(())
 }
 
 /// Run a validated config (shared with tests).

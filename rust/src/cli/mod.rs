@@ -3,9 +3,11 @@
 //!
 //! ```text
 //! dcf-pca solve       [--config f.toml | --n 500 --algorithm dcf-pca ...]
+//!                     [--data fed.manifest.json]  # stream shards out-of-core
 //! dcf-pca generate    --n 500 [--rank 25 --sparsity 0.05 --seed 42] --out m.csv
+//!                     [--format shard --shards 8]  # per-client .dcfshard + manifest
 //! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [...]
-//! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [...]
+//! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [--data fed.shard0.dcfshard]
 //! dcf-pca simulate    --seeds 0..512 [--shrink]
 //! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm|sim> [--quick]
 //! dcf-pca artifacts-check [--dir artifacts]

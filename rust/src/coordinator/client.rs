@@ -5,11 +5,17 @@
 //! transport — see `examples/federated_privacy.rs`). The worker never
 //! sends anything derived from `M_i` except the m×r consensus updates and
 //! — if and only if the server grants `reveal` — the final blocks.
+//!
+//! The block is owned as a [`DataSource`], not a `Mat`: an in-proc
+//! driver hands the worker a resident block, a TCP worker can point it
+//! at a `.dcfshard` file and stream panels from disk — the round loop is
+//! identical (and bitwise so) either way.
 
 use crate::bail;
 use crate::error::{Context, Result};
 
 use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
+use crate::data::DataSource;
 use crate::linalg::{matmul_nt, Mat, Workspace};
 
 use super::compress::Compression;
@@ -35,8 +41,9 @@ pub struct ClientConfig {
     pub id: usize,
     /// engine job this client belongs to (0 for single-job runs)
     pub job: u32,
-    /// this client's column block
-    pub m_block: Mat,
+    /// this client's column block — resident (`Box<Mat>`) or streamed
+    /// from disk (`Box<ShardSource>`)
+    pub data: Box<dyn DataSource>,
     pub hyper: FactorHyper,
     /// n_i / n
     pub n_frac: f64,
@@ -60,11 +67,13 @@ pub fn run_client(
     cfg: ClientConfig,
     kernel: &dyn LocalUpdateKernel,
 ) -> Result<usize> {
-    let (m, n_i) = cfg.m_block.shape();
+    let (m, n_i) = (cfg.data.rows(), cfg.data.cols());
     let mut state = ClientState::zeros(m, n_i, cfg.hyper.rank);
     // one workspace for the whole worker lifetime: every round's local
-    // epoch (and the final polish sweeps) runs with zero heap allocations
-    let mut ws = Workspace::new(m, n_i, cfg.hyper.rank);
+    // epoch (and the final polish sweeps) runs with zero heap
+    // allocations — sized from the source so streamed panels land in
+    // preallocated io lanes
+    let mut ws = Workspace::for_source(cfg.data.as_ref(), cfg.hyper.rank);
     ch.send(
         &ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }
             .encode_with(cfg.job, Compression::None),
@@ -101,7 +110,7 @@ pub fn run_client(
                 let t0 = crate::util::cputime::thread_cpu_seconds();
                 let out = kernel.local_epoch(
                     &mut u,
-                    &cfg.m_block,
+                    cfg.data.as_ref(),
                     &mut state,
                     &cfg.hyper,
                     cfg.n_frac,
@@ -149,12 +158,13 @@ pub fn run_client(
                 for _ in 0..cfg.polish_sweeps {
                     polish_sweep(
                         &final_u,
-                        &cfg.m_block,
+                        cfg.data.as_ref(),
                         &mut state,
                         &cfg.hyper,
                         crate::runtime::pool::global(),
                         &mut ws,
-                    );
+                    )
+                    .context("polish sweep")?;
                 }
                 let reply = if reveal {
                     let l_i = matmul_nt(&final_u, &state.v);
@@ -194,7 +204,7 @@ mod tests {
         let cfg = ClientConfig {
             id: 0,
             job: 0,
-            m_block: p.observed.clone(),
+            data: Box::new(p.observed.clone()),
             hyper: FactorHyper::default_for(20, 20, 2),
             n_frac: 1.0,
             polish_sweeps: 2,
@@ -243,7 +253,7 @@ mod tests {
         let cfg = ClientConfig {
             id: 5,
             job: 0,
-            m_block: p.observed.clone(),
+            data: Box::new(p.observed.clone()),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,
             polish_sweeps: 0,
@@ -269,7 +279,7 @@ mod tests {
         let cfg = ClientConfig {
             id: 1,
             job: 0,
-            m_block: p.observed.clone(),
+            data: Box::new(p.observed.clone()),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,
             polish_sweeps: 0,
@@ -297,7 +307,7 @@ mod tests {
         let cfg = ClientConfig {
             id: 0,
             job: 0,
-            m_block: p.observed.clone(),
+            data: Box::new(p.observed.clone()),
             hyper: FactorHyper::default_for(15, 15, 2),
             n_frac: 1.0,
             polish_sweeps: 0,

@@ -5,12 +5,13 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::bail;
 use crate::error::Result;
+use crate::{bail, ensure};
 
 use crate::algorithms::factor::FactorHyper;
 use crate::algorithms::schedule::Schedule;
 use crate::algorithms::traits::{IterRecord, SolveResult};
+use crate::data::{DataSource, ShardManifest, ShardSource};
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use crate::rpca::partition::ColumnPartition;
@@ -242,6 +243,52 @@ pub fn run_dcf_pca_raw(observed: &Mat, cfg: &DcfPcaConfig) -> Result<DcfPcaResul
     run_dcf_pca_on(observed, None, cfg)
 }
 
+/// Run DCF-PCA out-of-core: every client streams its own `.dcfshard`
+/// from the manifest, panel by panel — the compute path never
+/// materializes M, so n is bounded by disk, not RAM. `clients`/partition
+/// come from the manifest (overriding the config). Bitwise identical to
+/// [`run_dcf_pca`] on the same data (the shards store exact f64 bits and
+/// the same panel decomposition a resident split uses).
+///
+/// `regenerate_truth`: when true and the manifest records generator
+/// provenance, ground truth is regenerated for per-round error
+/// telemetry — that materializes full m×n matrices *for telemetry only*
+/// and is exactly what out-of-core runs cannot afford at scale, so pass
+/// false (CLI: `--no-truth`) when M does not fit in RAM.
+pub fn run_dcf_pca_streamed(
+    manifest: &ShardManifest,
+    cfg: &DcfPcaConfig,
+    regenerate_truth: bool,
+) -> Result<DcfPcaResult> {
+    let partition = manifest.partition()?;
+    let (m, n) = (manifest.rows, manifest.total_cols);
+    let mut cfg = cfg.clone();
+    cfg.clients = partition.num_clients();
+    cfg.partition = PartitionSpec::Sizes(partition.sizes());
+    cfg.validate(m, n)?;
+    let truth = match (regenerate_truth, manifest.rank, manifest.sparsity) {
+        (true, Some(rank), Some(sparsity)) => {
+            Some(ProblemSpec { m, n, rank, sparsity }.generate(manifest.seed))
+        }
+        _ => None,
+    };
+    let mut sources: Vec<Box<dyn DataSource>> = Vec::with_capacity(manifest.shards.len());
+    for (i, entry) in manifest.shards.iter().enumerate() {
+        let src = ShardSource::open(std::path::Path::new(&entry.path))?;
+        ensure!(
+            src.rows() == m && src.cols() == partition.size(i),
+            "shard {i} ({}) is {}x{}, manifest implies {}x{}",
+            entry.path,
+            src.rows(),
+            src.cols(),
+            m,
+            partition.size(i)
+        );
+        sources.push(Box::new(src));
+    }
+    run_dcf_pca_sources(sources, partition, truth.as_ref(), &cfg, m, n)
+}
+
 fn make_partition(n: usize, cfg: &DcfPcaConfig) -> Result<ColumnPartition> {
     Ok(match &cfg.partition {
         PartitionSpec::Even => ColumnPartition::even(n, cfg.clients),
@@ -265,23 +312,41 @@ fn run_dcf_pca_on(
 ) -> Result<DcfPcaResult> {
     let (m, n) = observed.shape();
     cfg.validate(m, n)?;
-    let start = Instant::now();
     let partition = make_partition(n, cfg)?;
-    let blocks = partition.split(observed);
+    // resident run: each client's source is its in-memory column block
+    let sources: Vec<Box<dyn DataSource>> = partition
+        .split(observed)
+        .into_iter()
+        .map(|b| Box::new(b) as Box<dyn DataSource>)
+        .collect();
+    run_dcf_pca_sources(sources, partition, truth, cfg, m, n)
+}
+
+/// Shared driver core: spawn one worker thread per source (resident
+/// block or streamed shard), run the server, assemble the result.
+fn run_dcf_pca_sources(
+    sources: Vec<Box<dyn DataSource>>,
+    partition: ColumnPartition,
+    truth: Option<&RpcaProblem>,
+    cfg: &DcfPcaConfig,
+    m: usize,
+    n: usize,
+) -> Result<DcfPcaResult> {
+    let start = Instant::now();
     let truth_blocks: Option<(Vec<Mat>, Vec<Mat>)> =
         truth.map(|p| (partition.split(&p.l0), partition.split(&p.s0)));
 
     // spawn clients
     let mut server_channels: Vec<Box<dyn Channel>> = Vec::with_capacity(cfg.clients);
     let mut handles = Vec::with_capacity(cfg.clients);
-    for (i, block) in blocks.into_iter().enumerate() {
+    for (i, source) in sources.into_iter().enumerate() {
         let (server_side, mut client_side) = pair();
         server_channels.push(Box::new(server_side));
         let client_cfg = ClientConfig {
             id: i,
             job: 0,
-            n_frac: block.cols() as f64 / n as f64,
-            m_block: block,
+            n_frac: source.cols() as f64 / n as f64,
+            data: source,
             hyper: cfg.hyper,
             polish_sweeps: cfg.polish_sweeps,
             truth: truth_blocks
@@ -501,6 +566,41 @@ mod tests {
         cfg.faults =
             vec![FaultPlan { crash_at_round: Some(2), ..Default::default() }, FaultPlan::default()];
         assert!(run_dcf_pca(&p, &cfg).is_err());
+    }
+
+    #[test]
+    fn streamed_run_is_bitwise_identical_to_resident() {
+        // the tentpole invariant at the top of the stack: a full
+        // federation whose clients stream their blocks from .dcfshard
+        // files produces the exact bits of the resident in-memory run
+        let spec = ProblemSpec::square(40, 2, 0.05);
+        let p = spec.generate(31);
+        let cfg = DcfPcaConfig::default_for(&spec).with_clients(4).with_rounds(10).with_seed(31);
+        let resident = run_dcf_pca(&p, &cfg).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("dcfdriver-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let partition = ColumnPartition::even(40, 4);
+        crate::data::write_shards(&p.observed, &partition, &dir.join("run"), 31, Some((2, 0.05)))
+            .unwrap();
+        let manifest = ShardManifest::load(&dir.join("run.manifest.json")).unwrap();
+        let streamed = run_dcf_pca_streamed(&manifest, &cfg, true).unwrap();
+
+        assert_eq!(resident.u, streamed.u, "U diverged between resident and streamed");
+        assert_eq!(resident.l, streamed.l, "L diverged");
+        assert_eq!(resident.s, streamed.s, "S diverged");
+        assert_eq!(
+            resident.final_error.map(f64::to_bits),
+            streamed.final_error.map(f64::to_bits),
+            "error telemetry diverged"
+        );
+
+        // the truly out-of-core mode (no truth regeneration) computes the
+        // same factors, just without error telemetry
+        let no_truth = run_dcf_pca_streamed(&manifest, &cfg, false).unwrap();
+        assert_eq!(no_truth.u, resident.u, "no-truth run changed the algorithm bits");
+        assert!(no_truth.final_error.is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

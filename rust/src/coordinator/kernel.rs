@@ -23,6 +23,7 @@ use std::sync::Arc;
 use crate::error::Result;
 
 use crate::algorithms::factor::{lipschitz_estimate, local_iteration, ClientState, FactorHyper};
+use crate::data::DataSource;
 use crate::linalg::{Mat, Workspace};
 use crate::runtime::pool::{self, ThreadPool};
 
@@ -41,16 +42,19 @@ pub trait LocalUpdateKernel: Send {
     fn name(&self) -> &'static str;
 
     /// Advance `(u, state)` in place by `k_local` local iterations with
-    /// fixed step `eta`. `n_frac` = n_i/n. Mutates `state` (V_i, S_i
-    /// persist across rounds per Algorithm 1) and `u` (the locally
-    /// advanced consensus factor). `ws` must be sized for the block
-    /// (`Workspace::new(m, n_i, hyper.rank)`) and is reused across
+    /// fixed step `eta`. `n_frac` = n_i/n. The client's block arrives as
+    /// a [`DataSource`] — a resident `&Mat` coerces here directly, while
+    /// a `ShardSource` streams panels from disk (the native kernel never
+    /// materializes the block). Mutates `state` (V_i, S_i persist across
+    /// rounds per Algorithm 1) and `u` (the locally advanced consensus
+    /// factor). `ws` must be sized for the block
+    /// (`Workspace::for_source(data, hyper.rank)`) and is reused across
     /// rounds; no allocation happens on the native path.
     #[allow(clippy::too_many_arguments)]
     fn local_epoch(
         &self,
         u: &mut Mat,
-        m_block: &Mat,
+        data: &dyn DataSource,
         state: &mut ClientState,
         hyper: &FactorHyper,
         n_frac: f64,
@@ -105,7 +109,7 @@ impl LocalUpdateKernel for NativeKernel {
     fn local_epoch(
         &self,
         u: &mut Mat,
-        m_block: &Mat,
+        data: &dyn DataSource,
         state: &mut ClientState,
         hyper: &FactorHyper,
         n_frac: f64,
@@ -116,7 +120,7 @@ impl LocalUpdateKernel for NativeKernel {
         let pool = self.pool();
         let mut grad_norm = 0.0;
         for _ in 0..k_local {
-            grad_norm = local_iteration(u, m_block, state, hyper, n_frac, eta, pool, ws);
+            grad_norm = local_iteration(u, data, state, hyper, n_frac, eta, pool, ws)?;
         }
         let lipschitz = lipschitz_estimate(state, hyper, ws);
         Ok(EpochOutput { grad_norm, lipschitz })
@@ -172,7 +176,8 @@ mod tests {
             1e-3,
             crate::runtime::pool::global(),
             &mut ws_b,
-        );
+        )
+        .unwrap();
         assert_eq!(u_a, u_b);
         assert_eq!(state_a.v, state_b.v);
         assert_eq!(state_a.s, state_b.s);

@@ -1,0 +1,294 @@
+//! Shard manifests: a small JSON sidecar describing how a data matrix
+//! was partitioned into per-client `.dcfshard` files (paper Eq. 6's
+//! `M = [M₁ … M_E]`), so `solve`, `worker`, and tests can reassemble the
+//! federation without ever materializing M.
+//!
+//! Shard paths are stored relative to the manifest; [`ShardManifest::load`]
+//! resolves them against the manifest's directory, so a generated
+//! directory can be moved or mounted elsewhere wholesale.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Context, Result};
+use crate::linalg::{tile, Mat};
+use crate::rpca::partition::ColumnPartition;
+use crate::util::json::Json;
+use crate::{anyhow, ensure};
+
+use super::shard::write_block;
+
+/// One client's shard in a manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    pub client: usize,
+    /// path to the `.dcfshard` file (resolved against the manifest dir
+    /// after [`ShardManifest::load`])
+    pub path: String,
+    /// first global column of this client's block
+    pub col_offset: usize,
+    /// this client's column count n_i
+    pub cols: usize,
+}
+
+/// Manifest for one sharded data matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub rows: usize,
+    pub total_cols: usize,
+    pub seed: u64,
+    /// generator provenance, if the data is a synthetic instance: lets
+    /// `solve --data` regenerate ground truth for error telemetry
+    pub rank: Option<usize>,
+    pub sparsity: Option<f64>,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// The column partition the shards cover. Errors unless the shards
+    /// tile `[0, total_cols)` contiguously in client order.
+    pub fn partition(&self) -> Result<ColumnPartition> {
+        ensure!(!self.shards.is_empty(), "manifest has no shards");
+        let mut at = 0;
+        for (i, s) in self.shards.iter().enumerate() {
+            ensure!(
+                s.client == i && s.col_offset == at && s.cols > 0,
+                "shard {i} does not tile the columns contiguously \
+                 (client {}, offset {} ≠ {at}, cols {})",
+                s.client,
+                s.col_offset,
+                s.cols
+            );
+            at += s.cols;
+        }
+        ensure!(
+            at == self.total_cols,
+            "shards cover {at} columns, manifest claims {}",
+            self.total_cols
+        );
+        Ok(ColumnPartition::from_sizes(
+            &self.shards.iter().map(|s| s.cols).collect::<Vec<_>>(),
+        ))
+    }
+
+    /// Serialize to JSON at `path` (shard paths are written as given —
+    /// keep them relative for relocatable manifests).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("version".into(), Json::Num(1.0));
+        obj.insert("rows".into(), Json::Num(self.rows as f64));
+        obj.insert("total_cols".into(), Json::Num(self.total_cols as f64));
+        // seed as a string: the JSON layer stores numbers as f64, which
+        // would silently round u64 seeds above 2^53
+        obj.insert("seed".into(), Json::Str(self.seed.to_string()));
+        if let Some(r) = self.rank {
+            obj.insert("rank".into(), Json::Num(r as f64));
+        }
+        if let Some(s) = self.sparsity {
+            obj.insert("sparsity".into(), Json::Num(s));
+        }
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut e = BTreeMap::new();
+                e.insert("client".into(), Json::Num(s.client as f64));
+                e.insert("path".into(), Json::Str(s.path.clone()));
+                e.insert("col_offset".into(), Json::Num(s.col_offset as f64));
+                e.insert("cols".into(), Json::Num(s.cols as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        obj.insert("shards".into(), Json::Arr(shards));
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).ok();
+            }
+        }
+        std::fs::write(path, format!("{}\n", Json::Obj(obj)))
+            .with_context(|| format!("writing manifest {}", path.display()))
+    }
+
+    /// Load a manifest, resolving each shard path against the manifest's
+    /// directory.
+    pub fn load(path: &Path) -> Result<ShardManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let field = |name: &str| {
+            j.get(name)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("{}: missing/invalid '{name}'", path.display()))
+        };
+        let version = field("version")?;
+        ensure!(version == 1, "{}: unsupported manifest version {version}", path.display());
+        let dir = path.parent().unwrap_or(Path::new(""));
+        let shards_json = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("{}: missing 'shards'", path.display()))?;
+        let mut shards = Vec::with_capacity(shards_json.len());
+        for (i, s) in shards_json.iter().enumerate() {
+            let sfield = |name: &str| {
+                s.get(name)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("{}: shard {i}: missing/invalid '{name}'", path.display()))
+            };
+            let rel = s
+                .get("path")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{}: shard {i}: missing 'path'", path.display()))?;
+            shards.push(ShardEntry {
+                client: sfield("client")?,
+                path: dir.join(rel).to_string_lossy().into_owned(),
+                col_offset: sfield("col_offset")?,
+                cols: sfield("cols")?,
+            });
+        }
+        let seed = match j.get("seed") {
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow!("{}: invalid 'seed' \"{s}\"", path.display()))?,
+            // tolerate numeric seeds (hand-written manifests)
+            Some(Json::Num(n)) => *n as u64,
+            _ => 0,
+        };
+        Ok(ShardManifest {
+            rows: field("rows")?,
+            total_cols: field("total_cols")?,
+            seed,
+            rank: j.get("rank").and_then(Json::as_usize),
+            sparsity: j.get("sparsity").and_then(Json::as_f64),
+            shards,
+        })
+    }
+}
+
+/// Split `m` by `partition` and write one `.dcfshard` per client next to
+/// the manifest: `<prefix>.shard<i>.dcfshard` + `<prefix>.manifest.json`.
+/// Panel width per shard is the shape-derived tile width of that client's
+/// block — the same decomposition a resident split would use, which is
+/// what makes streamed runs bitwise identical to in-memory ones.
+/// Returns the manifest (with paths relative to its directory, as saved).
+pub fn write_shards(
+    m: &Mat,
+    partition: &ColumnPartition,
+    prefix: &Path,
+    seed: u64,
+    provenance: Option<(usize, f64)>,
+) -> Result<ShardManifest> {
+    ensure!(
+        partition.total_cols() == m.cols(),
+        "partition covers {} columns, matrix has {}",
+        partition.total_cols(),
+        m.cols()
+    );
+    let stem = prefix
+        .file_name()
+        .with_context(|| format!("shard prefix {} has no file name", prefix.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let dir = prefix.parent().unwrap_or(Path::new("")).to_path_buf();
+    let mut shards = Vec::with_capacity(partition.num_clients());
+    for (i, (a, b)) in partition.ranges().enumerate() {
+        let block = m.cols_range(a, b);
+        let name = format!("{stem}.shard{i}.dcfshard");
+        let w = tile::panel_width(block.rows(), block.cols());
+        write_block(&dir.join(&name), &block, w, a, m.cols(), seed)?;
+        shards.push(ShardEntry { client: i, path: name, col_offset: a, cols: b - a });
+    }
+    let manifest = ShardManifest {
+        rows: m.rows(),
+        total_cols: m.cols(),
+        seed,
+        rank: provenance.map(|(r, _)| r),
+        sparsity: provenance.map(|(_, s)| s),
+        shards,
+    };
+    manifest.save(&dir.join(format!("{stem}.manifest.json")))?;
+    Ok(manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DataSource, ShardSource};
+    use crate::rng::Pcg64;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("dcfmanifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_load_reassemble_roundtrip() {
+        let mut rng = Pcg64::new(4);
+        let m = Mat::gaussian(12, 31, &mut rng);
+        let partition = ColumnPartition::even(31, 4);
+        let prefix = tmpdir().join("round");
+        let saved = write_shards(&m, &partition, &prefix, 99, Some((3, 0.05))).unwrap();
+        assert_eq!(saved.shards.len(), 4);
+
+        let loaded = ShardManifest::load(&prefix.with_file_name("round.manifest.json")).unwrap();
+        assert_eq!(loaded.rows, 12);
+        assert_eq!(loaded.total_cols, 31);
+        assert_eq!(loaded.seed, 99);
+        assert_eq!(loaded.rank, Some(3));
+        assert_eq!(loaded.sparsity, Some(0.05));
+        assert_eq!(loaded.partition().unwrap(), partition);
+
+        // reassemble the matrix from the streamed shards, bitwise
+        let blocks: Vec<Mat> = loaded
+            .shards
+            .iter()
+            .map(|s| ShardSource::open(Path::new(&s.path)).unwrap().to_mat().unwrap())
+            .collect();
+        assert_eq!(partition.assemble(&blocks), m);
+    }
+
+    #[test]
+    fn non_contiguous_manifest_rejected() {
+        let mut man = ShardManifest {
+            rows: 4,
+            total_cols: 10,
+            seed: 0,
+            rank: None,
+            sparsity: None,
+            shards: vec![
+                ShardEntry { client: 0, path: "a".into(), col_offset: 0, cols: 5 },
+                ShardEntry { client: 1, path: "b".into(), col_offset: 6, cols: 4 },
+            ],
+        };
+        assert!(man.partition().is_err(), "gap at column 5 must be rejected");
+        man.shards[1].col_offset = 5;
+        assert!(man.partition().is_err(), "coverage 9 ≠ 10 must be rejected");
+        man.shards[1].cols = 5;
+        assert!(man.partition().is_ok());
+    }
+
+    #[test]
+    fn seed_roundtrips_above_f64_precision() {
+        let p = tmpdir().join("seed.manifest.json");
+        let man = ShardManifest {
+            rows: 1,
+            total_cols: 1,
+            seed: (1u64 << 53) + 1, // not representable as f64
+            rank: None,
+            sparsity: None,
+            shards: vec![ShardEntry { client: 0, path: "x".into(), col_offset: 0, cols: 1 }],
+        };
+        man.save(&p).unwrap();
+        assert_eq!(ShardManifest::load(&p).unwrap().seed, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let p = tmpdir().join("bad.manifest.json");
+        std::fs::write(&p, "{not json").unwrap();
+        assert!(ShardManifest::load(&p).is_err());
+        std::fs::write(&p, r#"{"version": 2, "rows": 1, "total_cols": 1, "shards": []}"#).unwrap();
+        assert!(ShardManifest::load(&p).is_err(), "future versions must be rejected");
+    }
+}

@@ -1,0 +1,20 @@
+//! Out-of-core data layer: the columnar `.dcfshard` store and the
+//! [`DataSource`] abstraction the compute stack streams panels through.
+//!
+//! - [`shard`] — the on-disk format: versioned header, panel-major
+//!   f64-LE payload, per-panel checksums; positioned-read access.
+//! - [`source`] — the [`DataSource`] trait (resident [`Mat`]/
+//!   [`MatrixSource`] + streaming [`ShardSource`]) consumed by
+//!   `algorithms::factor`, the kernels, and the coordinator clients.
+//! - [`manifest`] — per-client shard manifests mapping a
+//!   `ColumnPartition` onto shard files for `solve`/`worker`/tests.
+//!
+//! [`Mat`]: crate::linalg::Mat
+
+pub mod manifest;
+pub mod shard;
+pub mod source;
+
+pub use manifest::{write_shards, ShardEntry, ShardManifest};
+pub use shard::{ShardError, ShardHeader, ShardReader, ShardWriter};
+pub use source::{DataSource, MatrixSource, ShardSource};

@@ -1,0 +1,643 @@
+//! `.dcfshard` — the zero-dependency on-disk format for one client's
+//! column block, laid out the way the compute stack consumes it.
+//!
+//! The fused tile pipeline (PR 2) streams a block as independent column
+//! panels; this format stores the block **panel-major** so each panel is
+//! one contiguous positioned read:
+//!
+//! ```text
+//! offset  size   field
+//! 0       8      magic  b"DCFSHRD1"
+//! 8       4      version u32 LE (= 1)
+//! 12      4      reserved u32 LE (= 0)
+//! 16      8      rows u64 LE          (m)
+//! 24      8      cols u64 LE          (n_i — this shard's columns)
+//! 32      8      panel_width u64 LE   (w — the tile width the payload
+//!                                      was materialized at)
+//! 40      8      col_offset u64 LE    (first global column, Eq. 6 slot)
+//! 48      8      total_cols u64 LE    (global n across all shards)
+//! 56      8      seed u64 LE          (generator provenance)
+//! 64      8·P    per-panel FNV-1a64 checksums over the panel's bytes
+//! 64+8P   …      payload: panel k = rows × w_k f64 LE, row-major
+//!                (w_k = min(w, cols − k·w); P = ⌈cols / w⌉)
+//! ```
+//!
+//! All integers and floats are little-endian; f64 bits round-trip
+//! exactly, which is what makes a streamed epoch *bitwise* identical to
+//! the resident one. Checksums are verified on every panel read (they
+//! also catch torn writes), and every failure mode is a typed
+//! [`ShardError`] variant so callers and tests can distinguish
+//! truncation from corruption from version skew.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::linalg::Mat;
+
+/// File magic: "DCFSHRD" + format generation digit.
+pub const MAGIC: [u8; 8] = *b"DCFSHRD1";
+/// Current format version (bumped on incompatible layout changes).
+pub const VERSION: u32 = 1;
+/// Byte offset of the checksum table (fixed-size header above it).
+const HEADER_BYTES: u64 = 64;
+
+/// Typed failure modes of the shard format.
+#[derive(Debug)]
+pub enum ShardError {
+    Io(io::Error),
+    /// not a `.dcfshard` file at all
+    BadMagic { path: PathBuf },
+    /// right magic, wrong format generation
+    VersionMismatch { path: PathBuf, found: u32, expected: u32 },
+    /// file shorter (or longer) than the header's dims imply
+    Truncated { path: PathBuf, expected: u64, found: u64 },
+    /// a panel's bytes do not hash to the recorded checksum
+    ChecksumMismatch { path: PathBuf, panel: usize, recorded: u64, computed: u64 },
+    /// header dims are internally inconsistent (e.g. zero panel width)
+    BadHeader { path: PathBuf, what: String },
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Io(e) => write!(f, "shard I/O error: {e}"),
+            ShardError::BadMagic { path } => {
+                write!(f, "{}: not a .dcfshard file (bad magic)", path.display())
+            }
+            ShardError::VersionMismatch { path, found, expected } => write!(
+                f,
+                "{}: shard format version {found} (this build reads {expected})",
+                path.display()
+            ),
+            ShardError::Truncated { path, expected, found } => write!(
+                f,
+                "{}: truncated or oversized shard ({found} bytes, header implies {expected})",
+                path.display()
+            ),
+            ShardError::ChecksumMismatch { path, panel, recorded, computed } => write!(
+                f,
+                "{}: panel {panel} checksum mismatch (recorded {recorded:#018x}, \
+                 computed {computed:#018x}) — corrupt payload",
+                path.display()
+            ),
+            ShardError::BadHeader { path, what } => {
+                write!(f, "{}: bad shard header: {what}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ShardError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ShardError {
+    fn from(e: io::Error) -> Self {
+        ShardError::Io(e)
+    }
+}
+
+/// Decoded fixed-size header of a shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub version: u32,
+    pub rows: usize,
+    pub cols: usize,
+    pub panel_width: usize,
+    /// first global column of this shard (its slot in Eq. 6's partition)
+    pub col_offset: usize,
+    /// global column count across all shards of the run
+    pub total_cols: usize,
+    /// provenance: the generator seed the data came from (0 = unknown)
+    pub seed: u64,
+}
+
+impl ShardHeader {
+    /// Number of panels in the payload.
+    pub fn panel_count(&self) -> usize {
+        crate::linalg::panel_count(self.cols, self.panel_width)
+    }
+
+    /// Column count of panel `k`.
+    pub fn panel_cols(&self, k: usize) -> usize {
+        let j0 = k * self.panel_width;
+        (j0 + self.panel_width).min(self.cols) - j0
+    }
+
+    /// Expected total file size implied by the dims.
+    fn expected_file_len(&self) -> u64 {
+        HEADER_BYTES
+            + 8 * self.panel_count() as u64
+            + 8 * self.rows as u64 * self.cols as u64
+    }
+
+    /// Byte offset of panel `k`'s payload.
+    fn panel_offset(&self, k: usize) -> u64 {
+        // panels 0..k all have full width w except never before a ragged
+        // one, so the prefix is simply rows·(k·w) entries
+        HEADER_BYTES
+            + 8 * self.panel_count() as u64
+            + 8 * self.rows as u64 * (k * self.panel_width) as u64
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 step — the single source of truth for the
+/// checksum algorithm (the writer hashes panels chunk by chunk, the
+/// reader in one pass; both call this).
+#[inline]
+fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64 over a byte stream — cheap, allocation-free, good enough to
+/// catch truncation/bit-rot (this is an integrity check, not crypto).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET, bytes)
+}
+
+/// View an f64 slice as its raw bytes (for checksumming / positioned I/O).
+/// Alignment is trivially satisfied (f64 → u8).
+fn as_bytes(slice: &[f64]) -> &[u8] {
+    // SAFETY: same allocation, length scaled by size_of::<f64>, u8 has
+    // no validity requirements.
+    unsafe { std::slice::from_raw_parts(slice.as_ptr().cast::<u8>(), slice.len() * 8) }
+}
+
+fn as_bytes_mut(slice: &mut [f64]) -> &mut [u8] {
+    // SAFETY: as above; callers re-normalize endianness after writing.
+    unsafe { std::slice::from_raw_parts_mut(slice.as_mut_ptr().cast::<u8>(), slice.len() * 8) }
+}
+
+/// Streaming writer: header first, panels in order, checksum table
+/// back-patched on [`ShardWriter::finish`]. Buffered throughout — the
+/// writer never materializes more than one panel.
+pub struct ShardWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    header: ShardHeader,
+    checksums: Vec<u64>,
+}
+
+impl ShardWriter {
+    /// Create `path` and write the header (checksum table zeroed until
+    /// [`ShardWriter::finish`]).
+    pub fn create(path: &Path, header: ShardHeader) -> Result<ShardWriter, ShardError> {
+        if header.panel_width == 0 {
+            return Err(ShardError::BadHeader {
+                path: path.to_path_buf(),
+                what: "panel_width must be positive".into(),
+            });
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        out.write_all(&MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u32.to_le_bytes())?; // reserved
+        for v in [
+            header.rows as u64,
+            header.cols as u64,
+            header.panel_width as u64,
+            header.col_offset as u64,
+            header.total_cols as u64,
+            header.seed,
+        ] {
+            out.write_all(&v.to_le_bytes())?;
+        }
+        // placeholder checksum table, patched in finish()
+        for _ in 0..header.panel_count() {
+            out.write_all(&0u64.to_le_bytes())?;
+        }
+        Ok(ShardWriter { out, path: path.to_path_buf(), header, checksums: Vec::new() })
+    }
+
+    /// Append the next panel (rows × w_k, row-major). Panels must arrive
+    /// in order and with the exact widths the header implies.
+    pub fn write_panel(&mut self, panel: &[f64]) -> Result<(), ShardError> {
+        let k = self.checksums.len();
+        // order matters: panel_cols(k) underflows past the last panel,
+        // so the count guard must run first
+        if k >= self.header.panel_count() {
+            return Err(ShardError::BadHeader {
+                path: self.path.clone(),
+                what: format!("panel {k} written, header implies {}", self.header.panel_count()),
+            });
+        }
+        let expect = self.header.rows * self.header.panel_cols(k);
+        if panel.len() != expect {
+            return Err(ShardError::BadHeader {
+                path: self.path.clone(),
+                what: format!(
+                    "panel {k} has {} entries, header implies {expect}",
+                    panel.len()
+                ),
+            });
+        }
+        // hash the LE bytes as written (per-value chunks keep the encode
+        // endianness-portable; the incremental form matches fnv1a64)
+        let mut h = FNV_OFFSET;
+        for v in panel {
+            let bytes = v.to_bits().to_le_bytes();
+            h = fnv1a64_update(h, &bytes);
+            self.out.write_all(&bytes)?;
+        }
+        self.checksums.push(h);
+        Ok(())
+    }
+
+    /// Flush, back-patch the checksum table, and close the file.
+    pub fn finish(self) -> Result<(), ShardError> {
+        let ShardWriter { out, path, header, checksums } = self;
+        if checksums.len() != header.panel_count() {
+            return Err(ShardError::BadHeader {
+                path,
+                what: format!(
+                    "finish() after {} of {} panels",
+                    checksums.len(),
+                    header.panel_count()
+                ),
+            });
+        }
+        let mut file = out.into_inner().map_err(|e| ShardError::Io(e.into_error()))?;
+        file.seek(SeekFrom::Start(HEADER_BYTES))?;
+        for c in &checksums {
+            file.write_all(&c.to_le_bytes())?;
+        }
+        file.sync_all()?;
+        Ok(())
+    }
+}
+
+/// Write a resident column block `block` (already sliced to one client)
+/// as a shard at `path`. `col_offset`/`total_cols`/`seed` record where
+/// the block sits in the global matrix and where the data came from.
+pub fn write_block(
+    path: &Path,
+    block: &Mat,
+    panel_width: usize,
+    col_offset: usize,
+    total_cols: usize,
+    seed: u64,
+) -> Result<ShardHeader, ShardError> {
+    let (m, n_i) = block.shape();
+    let header = ShardHeader {
+        version: VERSION,
+        rows: m,
+        cols: n_i,
+        panel_width,
+        col_offset,
+        total_cols,
+        seed,
+    };
+    let mut writer = ShardWriter::create(path, header)?;
+    let mut panel = vec![0.0f64; m * panel_width.min(n_i.max(1))];
+    for k in 0..header.panel_count() {
+        let j0 = k * panel_width;
+        let wk = header.panel_cols(k);
+        for i in 0..m {
+            panel[i * wk..(i + 1) * wk]
+                .copy_from_slice(&block.as_slice()[i * n_i + j0..i * n_i + j0 + wk]);
+        }
+        writer.write_panel(&panel[..m * wk])?;
+    }
+    writer.finish()?;
+    Ok(header)
+}
+
+/// Positioned-read access to one shard. All reads go through
+/// `pread`-style positioned I/O (no shared cursor), so panels can be
+/// fetched concurrently from the panel-parallel dispatch slots, and
+/// [`ShardReader::prefetch`] hints the next panel into the page cache —
+/// the kernel's readahead is the second buffer of the double-buffering
+/// scheme (see the module docs of `data::source`).
+pub struct ShardReader {
+    file: File,
+    path: PathBuf,
+    header: ShardHeader,
+    checksums: Vec<u64>,
+    /// non-unix fallback: serializes the seek+read pairs
+    #[cfg(not(unix))]
+    pos_lock: std::sync::Mutex<()>,
+}
+
+impl ShardReader {
+    /// Open and validate `path`: magic, version, and that the file length
+    /// matches what the header's dims imply.
+    pub fn open(path: &Path) -> Result<ShardReader, ShardError> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        let p = || path.to_path_buf();
+        if len < HEADER_BYTES {
+            return Err(ShardError::Truncated { path: p(), expected: HEADER_BYTES, found: len });
+        }
+        let mut head = [0u8; HEADER_BYTES as usize];
+        pread_exact_file(&file, &mut head, 0)?;
+        if head[..8] != MAGIC {
+            return Err(ShardError::BadMagic { path: p() });
+        }
+        let u32_at = |at: usize| u32::from_le_bytes(head[at..at + 4].try_into().unwrap());
+        let u64_at = |at: usize| u64::from_le_bytes(head[at..at + 8].try_into().unwrap());
+        let version = u32_at(8);
+        if version != VERSION {
+            return Err(ShardError::VersionMismatch { path: p(), found: version, expected: VERSION });
+        }
+        let header = ShardHeader {
+            version,
+            rows: u64_at(16) as usize,
+            cols: u64_at(24) as usize,
+            panel_width: u64_at(32) as usize,
+            col_offset: u64_at(40) as usize,
+            total_cols: u64_at(48) as usize,
+            seed: u64_at(56),
+        };
+        if header.panel_width == 0 {
+            return Err(ShardError::BadHeader { path: p(), what: "panel_width = 0".into() });
+        }
+        let expected = header.expected_file_len();
+        if len != expected {
+            return Err(ShardError::Truncated { path: p(), expected, found: len });
+        }
+        let panels = header.panel_count();
+        let mut table = vec![0u8; 8 * panels];
+        pread_exact_file(&file, &mut table, HEADER_BYTES)?;
+        let checksums = (0..panels)
+            .map(|k| u64::from_le_bytes(table[8 * k..8 * k + 8].try_into().unwrap()))
+            .collect();
+        Ok(ShardReader {
+            file,
+            path: path.to_path_buf(),
+            header,
+            checksums,
+            #[cfg(not(unix))]
+            pos_lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Positioned read of panel `k` into `buf` (resized to rows × w_k;
+    /// steady-state callers keep a buffer of capacity rows × w so this
+    /// never reallocates). Verifies the panel checksum. Returns w_k.
+    pub fn read_panel_into(&self, k: usize, buf: &mut Vec<f64>) -> Result<usize, ShardError> {
+        let panels = self.header.panel_count();
+        assert!(k < panels, "panel {k} out of range ({panels} panels)");
+        let wk = self.header.panel_cols(k);
+        let len = self.header.rows * wk;
+        buf.resize(len, 0.0);
+        self.pread(as_bytes_mut(&mut buf[..len]), self.header.panel_offset(k))?;
+        let computed = fnv1a64(as_bytes(&buf[..len]));
+        let recorded = self.checksums[k];
+        if computed != recorded {
+            return Err(ShardError::ChecksumMismatch {
+                path: self.path.clone(),
+                panel: k,
+                recorded,
+                computed,
+            });
+        }
+        // decode LE in place (no-op on little-endian targets)
+        for x in buf[..len].iter_mut() {
+            *x = f64::from_bits(u64::from_le(x.to_bits()));
+        }
+        Ok(wk)
+    }
+
+    /// Positioned exact read with the platform-appropriate cursor
+    /// discipline: true `pread` on unix; elsewhere a mutex serializes the
+    /// seek+read pairs so concurrent panel fetches cannot interleave.
+    fn pread(&self, buf: &mut [u8], off: u64) -> io::Result<()> {
+        #[cfg(not(unix))]
+        let _guard = self.pos_lock.lock().unwrap();
+        pread_exact_file(&self.file, buf, off)
+    }
+
+    /// Best-effort readahead hint for panel `k`: asks the kernel to pull
+    /// the panel's bytes into the page cache while the caller computes on
+    /// the current one. No-op off Linux; never fails.
+    pub fn prefetch(&self, k: usize) {
+        #[cfg(target_os = "linux")]
+        {
+            use std::os::unix::io::AsRawFd;
+            if k < self.header.panel_count() {
+                let off = self.header.panel_offset(k) as i64;
+                let len = (8 * self.header.rows * self.header.panel_cols(k)) as i64;
+                // SAFETY: plain syscall on an open fd; advisory only.
+                unsafe {
+                    sys::posix_fadvise(self.file.as_raw_fd(), off, len, sys::POSIX_FADV_WILLNEED);
+                }
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = k;
+    }
+
+    /// Materialize the whole shard as a resident matrix (checksum-verified
+    /// panel by panel). Allocating — load path, not the hot path.
+    pub fn to_mat(&self) -> Result<Mat, ShardError> {
+        let (m, n_i, w) = (self.header.rows, self.header.cols, self.header.panel_width);
+        let mut out = Mat::zeros(m, n_i);
+        let mut buf = Vec::new();
+        for k in 0..self.header.panel_count() {
+            let wk = self.read_panel_into(k, &mut buf)?;
+            let j0 = k * w;
+            for i in 0..m {
+                out.row_mut(i)[j0..j0 + wk].copy_from_slice(&buf[i * wk..(i + 1) * wk]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `pread`-style positioned exact read: no shared cursor on unix, a
+/// mutex-serialized seek+read elsewhere.
+#[cfg(unix)]
+fn pread_exact_file(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(not(unix))]
+fn pread_exact_file(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    use std::io::Read;
+    // &File implements Read/Seek; callers additionally hold pos_lock so
+    // concurrent panel fetches do not interleave their cursors — on the
+    // only non-unix dev targets this is the portable fallback, not the
+    // perf path.
+    let mut f = file;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const POSIX_FADV_WILLNEED: i32 = 3;
+    extern "C" {
+        /// Direct binding (the C library is linked anyway) — same
+        /// zero-dependency pattern as `util::cputime`.
+        pub fn posix_fadvise(fd: i32, offset: i64, len: i64, advice: i32) -> i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dcfshard-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn roundtrip(m: usize, n: usize, w: usize, name: &str) {
+        let mut rng = Pcg64::new((m * 31 + n * 7 + w) as u64);
+        let block = if m * n > 0 { Mat::gaussian(m, n, &mut rng) } else { Mat::zeros(m, n) };
+        let path = tmp(name);
+        let header = write_block(&path, &block, w, 3, n + 5, 42).unwrap();
+        assert_eq!(header.panel_count(), crate::linalg::panel_count(n, w));
+        let reader = ShardReader::open(&path).unwrap();
+        assert_eq!(reader.header(), &header);
+        assert_eq!(reader.header().col_offset, 3);
+        assert_eq!(reader.header().total_cols, n + 5);
+        assert_eq!(reader.header().seed, 42);
+        let back = reader.to_mat().unwrap();
+        assert_eq!(back, block, "bitwise roundtrip failed at {m}x{n} w={w}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_every_panel_width() {
+        // every width from degenerate 1 through > n (single panel),
+        // covering ragged last panels at each divisor class
+        let (m, n) = (13, 11);
+        for w in 1..=n + 2 {
+            roundtrip(m, n, w, &format!("w{w}.dcfshard"));
+        }
+    }
+
+    #[test]
+    fn roundtrip_edge_shapes() {
+        roundtrip(7, 1, 4, "one-col.dcfshard"); // 1-column block
+        roundtrip(1, 9, 4, "one-row.dcfshard"); // 1-row block
+        roundtrip(5, 0, 4, "no-cols.dcfshard"); // empty payload
+        roundtrip(33, 57, 16, "odd.dcfshard"); // odd non-divisible shape
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let mut rng = Pcg64::new(5);
+        let block = Mat::gaussian(6, 9, &mut rng);
+        let path = tmp("trunc.dcfshard");
+        write_block(&path, &block, 4, 0, 9, 0).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 17]).unwrap();
+        match ShardReader::open(&path) {
+            Err(ShardError::Truncated { expected, found, .. }) => {
+                assert_eq!(expected, full.len() as u64);
+                assert_eq!(found, full.len() as u64 - 17);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // shorter than even the fixed header
+        std::fs::write(&path, &full[..32]).unwrap();
+        assert!(matches!(ShardReader::open(&path), Err(ShardError::Truncated { .. })));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_and_version_are_typed() {
+        let mut rng = Pcg64::new(6);
+        let block = Mat::gaussian(6, 9, &mut rng);
+        let path = tmp("corrupt.dcfshard");
+        write_block(&path, &block, 4, 0, 9, 0).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        // flip one payload byte in the last (ragged 6×1) panel → checksum
+        // mismatch on read; the panel occupies the file's final 48 bytes
+        let mut bad = pristine.clone();
+        let payload_at = bad.len() - 45;
+        bad[payload_at] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let reader = ShardReader::open(&path).unwrap(); // header still fine
+        let mut buf = Vec::new();
+        let last = reader.header().panel_count() - 1;
+        match reader.read_panel_into(last, &mut buf) {
+            Err(ShardError::ChecksumMismatch { panel, .. }) => assert_eq!(panel, last),
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        // earlier panels are untouched and still verify
+        assert!(reader.read_panel_into(0, &mut buf).is_ok());
+
+        // version bump → VersionMismatch
+        let mut vbad = pristine.clone();
+        vbad[8] = 99;
+        std::fs::write(&path, &vbad).unwrap();
+        assert!(matches!(
+            ShardReader::open(&path),
+            Err(ShardError::VersionMismatch { found: 99, expected: VERSION, .. })
+        ));
+
+        // magic stomp → BadMagic
+        let mut mbad = pristine;
+        mbad[0] = b'X';
+        std::fs::write(&path, &mbad).unwrap();
+        assert!(matches!(ShardReader::open(&path), Err(ShardError::BadMagic { .. })));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_rejects_wrong_panel_shapes() {
+        let path = tmp("shape.dcfshard");
+        let header = ShardHeader {
+            version: VERSION,
+            rows: 4,
+            cols: 6,
+            panel_width: 4,
+            col_offset: 0,
+            total_cols: 6,
+            seed: 0,
+        };
+        let mut w = ShardWriter::create(&path, header).unwrap();
+        assert!(matches!(w.write_panel(&[0.0; 7]), Err(ShardError::BadHeader { .. })));
+        w.write_panel(&[0.0; 16]).unwrap(); // panel 0: 4×4
+        // premature finish (panel 1 missing) is rejected
+        assert!(matches!(w.finish(), Err(ShardError::BadHeader { .. })));
+        // one panel too many is a typed error, not a panic
+        let mut w = ShardWriter::create(&path, header).unwrap();
+        w.write_panel(&[0.0; 16]).unwrap(); // panel 0: 4×4
+        w.write_panel(&[0.0; 8]).unwrap(); // panel 1 (ragged): 4×2
+        assert!(matches!(w.write_panel(&[0.0; 8]), Err(ShardError::BadHeader { .. })));
+        w.finish().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,344 @@
+//! `DataSource` — the data-ownership contract of the compute stack.
+//!
+//! Since PR 2 the hot path consumes a client's block M_i strictly as a
+//! sequence of column panels, one DRAM pass per sweep. This trait makes
+//! that access pattern the *interface*: the factorization kernels
+//! (`algorithms::factor`) no longer hold `&Mat` — they ask a source for
+//! panel `k` and get back a [`PanelView`]. Two families implement it:
+//!
+//! - **Resident** ([`Mat`] itself, and [`MatrixSource`] when a custom
+//!   panel width is needed): `panel()` is a zero-copy view into the
+//!   in-memory matrix — exactly the indexing the kernels performed
+//!   before, so this refactor costs the resident path nothing.
+//! - **Streaming** ([`ShardSource`]): `panel()` is a positioned read
+//!   from a `.dcfshard` file into the caller's per-slot buffer (one of
+//!   `Workspace::io`'s lanes), plus a readahead hint for the slot's
+//!   *next* panel. The panel being computed on and the panel the kernel
+//!   is pulling into the page cache form the two halves of a double
+//!   buffer — compute and I/O overlap without any extra thread, and the
+//!   steady-state epoch still allocates nothing (buffers live in the
+//!   workspace; asserted by a counting-allocator test below).
+//!
+//! Determinism: a source fixes the panel width, the kernels derive the
+//! panel decomposition from it, and the f64 payload round-trips bitwise
+//! — so a streamed epoch is *bit-identical* to the resident epoch on the
+//! same data at any thread count (pinned in `tests/data_stream.rs`).
+
+use std::path::Path;
+
+use crate::error::{Context, Result};
+use crate::linalg::{tile, Mat, PanelView};
+
+use super::shard::{ShardHeader, ShardReader};
+
+/// A provider of one client block's column panels. See the module docs.
+pub trait DataSource: Send + Sync {
+    /// Block row count m.
+    fn rows(&self) -> usize;
+
+    /// Block column count n_i.
+    fn cols(&self) -> usize;
+
+    /// Panel width w of this source's decomposition. Shape-derived
+    /// (`tile::panel_width`) for resident sources; recorded in the file
+    /// header for shards.
+    fn panel_width(&self) -> usize;
+
+    /// Number of panels covering the block.
+    fn panel_count(&self) -> usize {
+        tile::panel_count(self.cols(), self.panel_width())
+    }
+
+    /// Fetch panel `k` (columns `[k·w, min((k+1)·w, n_i))`). `buf` is the
+    /// caller's reusable panel buffer — streaming sources fill it,
+    /// resident sources ignore it and return a zero-copy view.
+    /// `prefetch` names the panel the caller will ask for next (its
+    /// slot's next claim), letting streaming sources overlap the next
+    /// read with the current compute.
+    fn panel<'a>(
+        &'a self,
+        k: usize,
+        prefetch: Option<usize>,
+        buf: &'a mut Vec<f64>,
+    ) -> Result<PanelView<'a>>;
+
+    /// The resident matrix, if this source holds one (backends that need
+    /// the whole block at once — e.g. the PJRT artifact path — use this
+    /// to skip materialization).
+    fn as_resident(&self) -> Option<&Mat> {
+        None
+    }
+
+    /// Materialize the block as a resident matrix (allocating; load
+    /// path, not the hot path).
+    fn to_mat(&self) -> Result<Mat> {
+        if let Some(m) = self.as_resident() {
+            return Ok(m.clone());
+        }
+        let (m, n_i, w) = (self.rows(), self.cols(), self.panel_width());
+        let mut out = Mat::zeros(m, n_i);
+        let mut buf = Vec::new();
+        for k in 0..self.panel_count() {
+            let j0 = k * w;
+            let wk = (j0 + w).min(n_i) - j0;
+            let view = self.panel(k, None, &mut buf)?;
+            for i in 0..m {
+                out.row_mut(i)[j0..j0 + wk].copy_from_slice(view.row(i, wk));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Every resident matrix is a `DataSource` with the shape-derived panel
+/// width — which is why the whole existing resident call surface
+/// (`&problem.observed` and friends) kept compiling through this
+/// refactor: `&Mat` coerces to `&dyn DataSource` at every call site.
+impl DataSource for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+
+    fn panel_width(&self) -> usize {
+        tile::panel_width(Mat::rows(self), Mat::cols(self))
+    }
+
+    fn panel<'a>(
+        &'a self,
+        k: usize,
+        _prefetch: Option<usize>,
+        _buf: &'a mut Vec<f64>,
+    ) -> Result<PanelView<'a>> {
+        let w = DataSource::panel_width(self);
+        debug_assert!(k * w < Mat::cols(self), "panel {k} out of range");
+        Ok(PanelView::new(self.as_slice(), Mat::cols(self), k * w))
+    }
+
+    fn as_resident(&self) -> Option<&Mat> {
+        Some(self)
+    }
+}
+
+/// An owned resident source with an explicit panel width — the parity
+/// twin of a [`ShardSource`] written at the same width (tests pin the
+/// two bitwise against each other at arbitrary widths).
+pub struct MatrixSource {
+    mat: Mat,
+    width: usize,
+}
+
+impl MatrixSource {
+    /// Resident source at the shape-derived tile width.
+    pub fn new(mat: Mat) -> Self {
+        let width = tile::panel_width(mat.rows(), mat.cols());
+        MatrixSource { mat, width }
+    }
+
+    /// Resident source at an explicit panel width.
+    pub fn with_panel_width(mat: Mat, width: usize) -> Self {
+        assert!(width >= 1, "panel width must be positive");
+        MatrixSource { mat, width }
+    }
+
+    pub fn into_inner(self) -> Mat {
+        self.mat
+    }
+}
+
+impl DataSource for MatrixSource {
+    fn rows(&self) -> usize {
+        self.mat.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.mat.cols()
+    }
+
+    fn panel_width(&self) -> usize {
+        self.width
+    }
+
+    fn panel<'a>(
+        &'a self,
+        k: usize,
+        _prefetch: Option<usize>,
+        _buf: &'a mut Vec<f64>,
+    ) -> Result<PanelView<'a>> {
+        debug_assert!(k * self.width < self.mat.cols().max(1), "panel {k} out of range");
+        Ok(PanelView::new(self.mat.as_slice(), self.mat.cols(), k * self.width))
+    }
+
+    fn as_resident(&self) -> Option<&Mat> {
+        Some(&self.mat)
+    }
+}
+
+/// Out-of-core source: panels stream from a `.dcfshard` file by
+/// positioned read, checksum-verified, with page-cache readahead of the
+/// slot's next panel. The whole block is never resident — peak working
+/// set per slot is one m×w panel buffer in the workspace.
+pub struct ShardSource {
+    reader: ShardReader,
+}
+
+impl ShardSource {
+    /// Open and validate a shard file.
+    pub fn open(path: &Path) -> Result<Self> {
+        let reader = ShardReader::open(path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        Ok(ShardSource { reader })
+    }
+
+    pub fn header(&self) -> &ShardHeader {
+        self.reader.header()
+    }
+}
+
+impl DataSource for ShardSource {
+    fn rows(&self) -> usize {
+        self.reader.header().rows
+    }
+
+    fn cols(&self) -> usize {
+        self.reader.header().cols
+    }
+
+    fn panel_width(&self) -> usize {
+        self.reader.header().panel_width
+    }
+
+    fn panel<'a>(
+        &'a self,
+        k: usize,
+        prefetch: Option<usize>,
+        buf: &'a mut Vec<f64>,
+    ) -> Result<PanelView<'a>> {
+        let wk = self.reader.read_panel_into(k, buf)?;
+        if let Some(next) = prefetch {
+            // overlap the slot's next read with this panel's compute:
+            // the kernel pulls `next` into the page cache while we work
+            self.reader.prefetch(next);
+        }
+        Ok(PanelView::new(&buf[..self.rows() * wk], wk, 0))
+    }
+
+    fn to_mat(&self) -> Result<Mat> {
+        Ok(self.reader.to_mat()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::write_block;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("dcfsource-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn mat_is_a_zero_copy_source() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::gaussian(20, 30, &mut rng);
+        let src: &dyn DataSource = &m;
+        assert_eq!(src.rows(), 20);
+        assert_eq!(src.cols(), 30);
+        assert_eq!(src.panel_width(), tile::panel_width(20, 30));
+        assert!(src.as_resident().is_some());
+        let mut buf = Vec::new();
+        let w = src.panel_width();
+        for k in 0..src.panel_count() {
+            let j0 = k * w;
+            let wk = (j0 + w).min(30) - j0;
+            let view = src.panel(k, None, &mut buf).unwrap();
+            for i in 0..20 {
+                assert_eq!(view.row(i, wk), &m.as_slice()[i * 30 + j0..i * 30 + j0 + wk]);
+            }
+        }
+        assert!(buf.is_empty(), "resident sources must not touch the io buffer");
+        assert_eq!(src.to_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn shard_source_streams_identical_values() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::gaussian(17, 23, &mut rng);
+        let path = tmp("stream.dcfshard");
+        let w = tile::panel_width(17, 23);
+        write_block(&path, &m, w, 0, 23, 7).unwrap();
+        let src = ShardSource::open(&path).unwrap();
+        assert_eq!(src.rows(), 17);
+        assert_eq!(src.cols(), 23);
+        assert_eq!(src.panel_width(), w);
+        assert!(src.as_resident().is_none());
+        let mut buf = Vec::new();
+        for k in 0..src.panel_count() {
+            let j0 = k * w;
+            let wk = (j0 + w).min(23) - j0;
+            let next = if k + 1 < src.panel_count() { Some(k + 1) } else { None };
+            let view = src.panel(k, next, &mut buf).unwrap();
+            for i in 0..17 {
+                assert_eq!(view.row(i, wk), &m.as_slice()[i * 23 + j0..i * 23 + j0 + wk]);
+            }
+        }
+        assert_eq!(src.to_mat().unwrap(), m, "materialized shard must be bitwise equal");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_epoch_steady_state_is_allocation_free() {
+        // the out-of-core resident-set pin: once the per-client
+        // workspace (with its presized io lanes) exists, a streamed
+        // local epoch — J×K sweeps + gradients + curvature, every panel
+        // a positioned disk read — performs zero heap allocations on the
+        // measuring thread. Peak working set is the workspace + (V, S),
+        // never the block.
+        use crate::algorithms::factor::{ClientState, FactorHyper};
+        use crate::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+        use crate::linalg::Workspace;
+        use crate::rpca::problem::ProblemSpec;
+
+        let p = ProblemSpec::square(48, 3, 0.05).generate(9);
+        let path = tmp("zeroalloc.dcfshard");
+        let w = tile::panel_width(48, 48);
+        write_block(&path, &p.observed, w, 0, 48, 9).unwrap();
+        let src = ShardSource::open(&path).unwrap();
+        let hyper = FactorHyper::default_for(48, 48, 3);
+        let mut rng = Pcg64::new(8);
+        let mut u = Mat::gaussian(48, 3, &mut rng);
+        let mut state = ClientState::zeros(48, 48, 3);
+        let mut ws = Workspace::for_source(&src, 3);
+        assert!(ws.io.iter().all(|l| l.len() == 48 * w), "io lanes presized for streaming");
+        let kernel = NativeKernel::new();
+        // warm-up epoch (first call settles lazy state like TLS)
+        kernel.local_epoch(&mut u, &src, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws).unwrap();
+        let (res, allocs) = crate::alloc_counter::measure(|| {
+            kernel.local_epoch(&mut u, &src, &mut state, &hyper, 1.0, 1e-3, 2, &mut ws)
+        });
+        res.unwrap();
+        assert_eq!(allocs, 0, "streamed local epoch allocated {allocs} times after warm-up");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn matrix_source_honours_custom_width() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::gaussian(6, 10, &mut rng);
+        let src = MatrixSource::with_panel_width(m.clone(), 3);
+        assert_eq!(src.panel_width(), 3);
+        assert_eq!(src.panel_count(), 4); // 3+3+3+1
+        let mut buf = Vec::new();
+        let view = src.panel(3, None, &mut buf).unwrap(); // ragged last
+        for i in 0..6 {
+            assert_eq!(view.row(i, 1), &m.as_slice()[i * 10 + 9..i * 10 + 10]);
+        }
+        assert_eq!(src.into_inner(), m);
+    }
+}

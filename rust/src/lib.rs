@@ -21,6 +21,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod data;
 pub mod error;
 pub mod experiments;
 pub mod linalg;
@@ -41,6 +42,7 @@ pub mod anyhow {
     pub use crate::error::{Context, Error, Result};
 }
 
+pub use data::DataSource;
 pub use linalg::Mat;
 pub use linalg::Workspace;
 

@@ -33,5 +33,5 @@ pub use solve::{
     ridge_solve_v_into, solve_spd,
 };
 pub use svd::{reconstruct, singular_values, svd_jacobi, svt, svt_from, Svd};
-pub use tile::{panel_count, panel_width, GradCtx, PanelCtx};
+pub use tile::{panel_count, panel_width, GradCtx, PanelCtx, PanelView};
 pub use workspace::{PanelScratch, Workspace};

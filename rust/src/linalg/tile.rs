@@ -60,6 +60,41 @@ pub fn panel_count(n_i: usize, w: usize) -> usize {
     n_i.div_ceil(w)
 }
 
+/// One panel of the data matrix M, as the tile kernels consume it: a
+/// borrowed f64 slice plus the indexing needed to find row `i`'s segment
+/// of the panel. Two producers exist (`data::DataSource` impls):
+///
+/// - a **resident** matrix hands out its full slice with
+///   `row_stride = n_i` and `col_offset = j0` — zero-copy, exactly the
+///   indexing the kernels used when they held `&Mat` directly;
+/// - a **streamed** shard hands out a panel-contiguous buffer
+///   (`row_stride = w_k`, `col_offset = 0`) filled by a positioned read.
+///
+/// The kernels touch only `row(i, w)` segments, whose *values* are
+/// identical under both layouts — which is the whole bitwise
+/// streamed-vs-resident parity argument: same panel decomposition, same
+/// loop order, same numbers.
+#[derive(Clone, Copy)]
+pub struct PanelView<'a> {
+    data: &'a [f64],
+    row_stride: usize,
+    col_offset: usize,
+}
+
+impl<'a> PanelView<'a> {
+    #[inline]
+    pub fn new(data: &'a [f64], row_stride: usize, col_offset: usize) -> Self {
+        PanelView { data, row_stride, col_offset }
+    }
+
+    /// Row `i`'s `w`-wide segment of this panel.
+    #[inline]
+    pub fn row(&self, i: usize, w: usize) -> &'a [f64] {
+        let at = i * self.row_stride + self.col_offset;
+        &self.data[at..at + w]
+    }
+}
+
 /// `dst[jj] += Σ_q urow[q] · vt[q·w + jj]` — one block row of U·Vᵀ over
 /// a staged p×w panel of Vᵀ, accumulated onto `dst`. The q loop runs
 /// four independent FMA streams per pass over `dst` (4 FMAs per
@@ -92,11 +127,13 @@ fn accum_uvt_row(dst: &mut [f64], urow: &[f64], vt: &[f64], w: usize, p: usize) 
 
 /// Shared context for one fused sweep (or polish) over a block: borrows
 /// the inputs, carries raw output pointers for panel-disjoint writes.
+/// The M panel itself is *not* held here — each panel call receives a
+/// [`PanelView`] fetched by the dispatcher (resident slice or streamed
+/// buffer), which is what lets the same kernels run out-of-core.
 pub struct PanelCtx<'a> {
     u: &'a Mat,
     /// Cholesky factor of G + ρI (prefactored once per sweep)
     chol: &'a Mat,
-    m_block: &'a Mat,
     v: *mut f64,
     s: *mut f64,
     lambda: f64,
@@ -114,26 +151,30 @@ unsafe impl Send for PanelCtx<'_> {}
 
 impl<'a> PanelCtx<'a> {
     /// `chol` must hold the Cholesky factor of UᵀU + ρI; `v` is n_i×p,
-    /// `s` is m×n_i, both fully overwritten panel by panel.
+    /// `s` is m×n_i, both fully overwritten panel by panel. `(m, n_i)`
+    /// is the block shape and `w` the panel width — both come from the
+    /// block's `DataSource` (shape-derived for resident blocks, recorded
+    /// in the header for shards).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         u: &'a Mat,
         chol: &'a Mat,
-        m_block: &'a Mat,
+        m: usize,
+        n_i: usize,
+        w: usize,
         v: &'a mut Mat,
         s: &'a mut Mat,
         lambda: f64,
     ) -> Self {
-        let (m, n_i) = m_block.shape();
         let p = u.cols();
         assert_eq!(u.rows(), m, "PanelCtx: U row mismatch");
         assert_eq!(chol.shape(), (p, p), "PanelCtx: chol shape mismatch");
         assert_eq!(v.shape(), (n_i, p), "PanelCtx: V shape mismatch");
         assert_eq!(s.shape(), (m, n_i), "PanelCtx: S shape mismatch");
-        let w = panel_width(m, n_i);
+        assert!(w >= 1, "PanelCtx: panel width must be positive");
         PanelCtx {
             u,
             chol,
-            m_block,
             v: v.as_mut_slice().as_mut_ptr(),
             s: s.as_mut_slice().as_mut_ptr(),
             lambda,
@@ -160,18 +201,18 @@ impl<'a> PanelCtx<'a> {
     /// `[k·w, (k+1)·w)`): accumulate RHS = Uᵀ(M − S) over the panel,
     /// solve the ridge system in place, write the panel's V rows, then
     /// recompute U·Vᵀ and soft-threshold S — all while the M panel is
-    /// L2-resident. One DRAM pass over the panel of M per sweep.
+    /// L2-resident. One DRAM pass over the panel of M per sweep. `mp`
+    /// must view exactly this panel's columns of M.
     ///
     /// Caller contract (upheld by the slot dispatch): each panel index
     /// is processed by exactly one thread per sweep.
-    pub fn sweep_panel(&self, k: usize, scratch: &mut PanelScratch) {
+    pub fn sweep_panel(&self, k: usize, mp: PanelView<'_>, scratch: &mut PanelScratch) {
         let (j0, j1) = self.range(k);
         let w = j1 - j0;
         let (p, n_i) = (self.p, self.n_i);
         let rhs = &mut scratch.a[..p * w];
         rhs.fill(0.0);
         let ud = self.u.as_slice();
-        let md = self.m_block.as_slice();
 
         // Phase A: RHS ← Uᵀ(M − S) over the panel. Rows are processed
         // four at a time so each pass over an RHS row performs four FMAs
@@ -181,7 +222,7 @@ impl<'a> PanelCtx<'a> {
             let t = &mut scratch.rows[..4 * w];
             for r in 0..4 {
                 let row = i + r;
-                let mrow = &md[row * n_i + j0..row * n_i + j1];
+                let mrow = mp.row(row, w);
                 // SAFETY: read-only view of this panel's S columns; no
                 // concurrent writer touches them (panel-disjoint).
                 let srow =
@@ -208,7 +249,7 @@ impl<'a> PanelCtx<'a> {
             i += 4;
         }
         while i < self.m {
-            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            let mrow = mp.row(i, w);
             let srow = unsafe { std::slice::from_raw_parts(self.s.add(i * n_i + j0), w) };
             let t = &mut scratch.rows[..w];
             for jj in 0..w {
@@ -246,7 +287,7 @@ impl<'a> PanelCtx<'a> {
             let d = &mut scratch.rows[..w];
             d.fill(0.0);
             accum_uvt_row(d, urow, vt, w, p);
-            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            let mrow = mp.row(i, w);
             // SAFETY: this panel's S columns, written by this thread only.
             let srow =
                 unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
@@ -261,12 +302,11 @@ impl<'a> PanelCtx<'a> {
     /// residual on detected spikes), then re-solve the panel's ridge
     /// system against the debiased S — the panel form of
     /// `factor::polish_sweep`, same single-DRAM-pass structure.
-    pub fn polish_panel(&self, k: usize, scratch: &mut PanelScratch) {
+    pub fn polish_panel(&self, k: usize, mp: PanelView<'_>, scratch: &mut PanelScratch) {
         let (j0, j1) = self.range(k);
         let w = j1 - j0;
         let (p, n_i) = (self.p, self.n_i);
         let ud = self.u.as_slice();
-        let md = self.m_block.as_slice();
 
         // stage the panel's current Vᵀ (read before any write to V)
         {
@@ -290,7 +330,7 @@ impl<'a> PanelCtx<'a> {
             let d = &mut scratch.rows[..w];
             d.fill(0.0);
             accum_uvt_row(d, urow, vt_old, w, p);
-            let mrow = &md[i * n_i + j0..i * n_i + j1];
+            let mrow = mp.row(i, w);
             // SAFETY: this panel's S columns, this thread only.
             let srow =
                 unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
@@ -334,7 +374,6 @@ impl<'a> PanelCtx<'a> {
 /// caller. No shared writes at all, hence no unsafe.
 pub struct GradCtx<'a> {
     u: &'a Mat,
-    m_block: &'a Mat,
     v: &'a Mat,
     s: &'a Mat,
     m: usize,
@@ -344,13 +383,16 @@ pub struct GradCtx<'a> {
 }
 
 impl<'a> GradCtx<'a> {
-    pub fn new(u: &'a Mat, m_block: &'a Mat, v: &'a Mat, s: &'a Mat) -> Self {
-        let (m, n_i) = m_block.shape();
+    /// `(m, n_i)` is the block shape and `w` the panel width — both come
+    /// from the block's `DataSource`; M itself arrives per panel as a
+    /// [`PanelView`].
+    pub fn new(u: &'a Mat, m: usize, n_i: usize, w: usize, v: &'a Mat, s: &'a Mat) -> Self {
         let p = u.cols();
         assert_eq!(u.rows(), m, "GradCtx: U row mismatch");
         assert_eq!(v.shape(), (n_i, p), "GradCtx: V shape mismatch");
         assert_eq!(s.shape(), (m, n_i), "GradCtx: S shape mismatch");
-        GradCtx { u, m_block, v, s, m, n_i, p, w: panel_width(m, n_i) }
+        assert!(w >= 1, "GradCtx: panel width must be positive");
+        GradCtx { u, v, s, m, n_i, p, w }
     }
 
     pub fn panels(&self) -> usize {
@@ -360,14 +402,13 @@ impl<'a> GradCtx<'a> {
     /// Accumulate panel `k`'s gradient contribution
     /// `Σ_{j∈panel} rⱼ vⱼᵀ` (r = U Vᵀ + S − M) into `scratch.grad_acc`.
     /// One DRAM pass over the panel of M and S; V and the r-row stay
-    /// L1/L2-resident.
-    pub fn grad_panel(&self, k: usize, scratch: &mut PanelScratch) {
+    /// L1/L2-resident. `mp` must view exactly this panel's columns of M.
+    pub fn grad_panel(&self, k: usize, mp: PanelView<'_>, scratch: &mut PanelScratch) {
         let j0 = k * self.w;
         let j1 = (j0 + self.w).min(self.n_i);
         let w = j1 - j0;
         let (p, n_i) = (self.p, self.n_i);
         let ud = self.u.as_slice();
-        let md = self.m_block.as_slice();
         let sd = self.s.as_slice();
         let vd = self.v.as_slice();
 
@@ -386,7 +427,7 @@ impl<'a> GradCtx<'a> {
             // r ← S − M over the panel row, then r += U·Vᵀ (q unrolled 4×)
             let r = &mut scratch.rows[..w];
             {
-                let mrow = &md[i * n_i + j0..i * n_i + j1];
+                let mrow = mp.row(i, w);
                 let srow = &sd[i * n_i + j0..i * n_i + j1];
                 for jj in 0..w {
                     r[jj] = srow[jj] - mrow[jj];
@@ -543,12 +584,60 @@ mod tests {
 
         let mut chol = Mat::zeros(p, p);
         assert!(cholesky_shifted_into(&mut chol, &g, rho));
-        let ctx = PanelCtx::new(&u, &chol, &m_block, &mut v, &mut s, lambda);
-        let mut scratch = PanelScratch::new(m, p, panel_width(m, n_i));
+        let w = panel_width(m, n_i);
+        let ctx = PanelCtx::new(&u, &chol, m, n_i, w, &mut v, &mut s, lambda);
+        let mut scratch = PanelScratch::new(m, p, w);
         for k in 0..ctx.panels() {
-            ctx.sweep_panel(k, &mut scratch);
+            // resident view: full slice, row stride n_i, offset k·w
+            let view = PanelView::new(m_block.as_slice(), n_i, k * w);
+            ctx.sweep_panel(k, view, &mut scratch);
         }
         assert!((&v - &v_ref).frob_norm() < 1e-12, "V {}", (&v - &v_ref).frob_norm());
         assert!((&s - &s_ref).frob_norm() < 1e-12, "S {}", (&s - &s_ref).frob_norm());
+    }
+
+    #[test]
+    fn panel_contiguous_view_is_bitwise_identical_to_resident() {
+        // the out-of-core parity pin at the lowest layer: running the
+        // sweep from a panel-contiguous copy of each panel (the shard
+        // layout: row stride w_k, offset 0) must produce bit-identical
+        // (V, S) to the resident layout (row stride n_i, offset k·w)
+        let mut rng = Pcg64::new(33);
+        let (m, n_i, p) = (600, 50, 3);
+        let u = Mat::gaussian(m, p, &mut rng);
+        let m_block = Mat::gaussian(m, n_i, &mut rng);
+        let s0 = Mat::gaussian(m, n_i, &mut rng).map(|x| x * 0.1);
+        let (rho, lambda) = (0.05, 0.4);
+        let g = gram(&u);
+        let mut chol = Mat::zeros(p, p);
+        assert!(cholesky_shifted_into(&mut chol, &g, rho));
+        let w = panel_width(m, n_i);
+
+        let run = |contiguous: bool| {
+            let mut v = Mat::zeros(n_i, p);
+            let mut s = s0.clone();
+            let ctx = PanelCtx::new(&u, &chol, m, n_i, w, &mut v, &mut s, lambda);
+            let mut scratch = PanelScratch::new(m, p, w);
+            let mut buf = vec![0.0f64; m * w];
+            for k in 0..ctx.panels() {
+                let j0 = k * w;
+                let wk = (j0 + w).min(n_i) - j0;
+                if contiguous {
+                    for i in 0..m {
+                        buf[i * wk..(i + 1) * wk]
+                            .copy_from_slice(&m_block.as_slice()[i * n_i + j0..i * n_i + j0 + wk]);
+                    }
+                    ctx.sweep_panel(k, PanelView::new(&buf[..m * wk], wk, 0), &mut scratch);
+                } else {
+                    ctx.sweep_panel(k, PanelView::new(m_block.as_slice(), n_i, j0), &mut scratch);
+                }
+            }
+            drop(ctx);
+            (v, s)
+        };
+        let (v_res, s_res) = run(false);
+        let (v_str, s_str) = run(true);
+        assert_eq!(v_res, v_str, "streamed-layout V diverged from resident");
+        assert_eq!(s_res, s_str, "streamed-layout S diverged from resident");
     }
 }

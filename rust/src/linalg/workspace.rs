@@ -67,6 +67,12 @@ pub struct Workspace {
     pub grad: Mat,
     /// per-slot panel scratch (fixed [`tile::NUM_SLOTS`] lanes)
     pub slots: Vec<PanelScratch>,
+    /// per-slot streaming panel buffers (fixed [`tile::NUM_SLOTS`]
+    /// lanes, m×panel_w each when sized). Resident sources never touch
+    /// these, so [`Workspace::new`] leaves them empty; streaming sources
+    /// get them presized by [`Workspace::for_source`] so even the first
+    /// out-of-core epoch performs no hot-path allocation.
+    pub io: Vec<Vec<f64>>,
     /// p — power-iteration vector for the curvature estimate
     pub pow_x: Vec<f64>,
     /// p — power-iteration image G·x
@@ -78,8 +84,15 @@ impl Workspace {
     /// factor width `p`. This is the only allocating call on the hot
     /// path — do it once per client, outside the round loop.
     pub fn new(m: usize, n_i: usize, p: usize) -> Self {
+        Workspace::with_panel_width(m, n_i, p, tile::panel_width(m, n_i))
+    }
+
+    /// Like [`Workspace::new`] but with an explicit panel width — used
+    /// when the block's `DataSource` fixes the width (a shard records it
+    /// in its header) instead of deriving it from the shape.
+    pub fn with_panel_width(m: usize, n_i: usize, p: usize, panel_w: usize) -> Self {
         assert!(m > 0 && n_i > 0 && p > 0, "workspace dims must be positive");
-        let panel_w = tile::panel_width(m, n_i);
+        assert!(panel_w > 0, "panel width must be positive");
         Workspace {
             m,
             n_i,
@@ -89,9 +102,26 @@ impl Workspace {
             chol: Mat::zeros(p, p),
             grad: Mat::zeros(m, p),
             slots: (0..tile::NUM_SLOTS).map(|_| PanelScratch::new(m, p, panel_w)).collect(),
+            io: (0..tile::NUM_SLOTS).map(|_| Vec::new()).collect(),
             pow_x: vec![0.0; p],
             pow_y: vec![0.0; p],
         }
+    }
+
+    /// Workspace sized for a block served by `src`: panel width taken
+    /// from the source, and — when the source streams (no resident
+    /// matrix) — the per-slot I/O lanes presized to one m×panel_w panel
+    /// each, so the steady-state streamed epoch allocates nothing.
+    pub fn for_source(src: &dyn crate::data::DataSource, p: usize) -> Self {
+        use crate::data::DataSource as _;
+        let (m, n_i) = (src.rows(), src.cols());
+        let mut ws = Workspace::with_panel_width(m, n_i, p, src.panel_width());
+        if src.as_resident().is_none() {
+            for lane in &mut ws.io {
+                lane.resize(m * ws.panel_w, 0.0);
+            }
+        }
+        ws
     }
 
     /// Panel width of the fused tile pipeline for this block shape.
@@ -135,6 +165,8 @@ mod tests {
         assert_eq!(ws.pow_y.len(), 3);
         assert_eq!(ws.panel_width(), tile::panel_width(12, 7));
         assert_eq!(ws.slots.len(), tile::NUM_SLOTS);
+        assert_eq!(ws.io.len(), tile::NUM_SLOTS);
+        assert!(ws.io.iter().all(|l| l.is_empty()), "resident workspaces keep io lanes empty");
         for s in &ws.slots {
             assert_eq!(s.a.len(), 3 * ws.panel_width());
             assert_eq!(s.b.len(), 3 * ws.panel_width());

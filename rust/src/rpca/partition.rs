@@ -81,6 +81,12 @@ impl ColumnPartition {
         (0..self.num_clients()).map(|i| self.size(i)).collect()
     }
 
+    /// All client column ranges in order — the iteration the shard
+    /// manifest writer (`data::manifest::write_shards`) tiles files over.
+    pub fn ranges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.num_clients()).map(|i| self.range(i))
+    }
+
     /// Split M into per-client column blocks.
     pub fn split(&self, m: &Mat) -> Vec<Mat> {
         assert_eq!(m.cols(), self.total_cols(), "partition does not cover M");
@@ -135,6 +141,7 @@ mod tests {
         assert_eq!(p.range(0), (0, 2));
         assert_eq!(p.range(1), (2, 7));
         assert_eq!(p.range(2), (7, 10));
+        assert_eq!(p.ranges().collect::<Vec<_>>(), vec![(0, 2), (2, 7), (7, 10)]);
     }
 
     #[test]

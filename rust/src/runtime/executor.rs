@@ -31,6 +31,7 @@ use crate::{anyhow, bail};
 
 use crate::algorithms::factor::{lipschitz_estimate, ClientState, FactorHyper};
 use crate::coordinator::kernel::{EpochOutput, LocalUpdateKernel};
+use crate::data::DataSource;
 use crate::linalg::{Mat, Workspace};
 
 use super::artifacts::{Manifest, Variant};
@@ -187,7 +188,7 @@ impl LocalUpdateKernel for PjrtKernel {
     fn local_epoch(
         &self,
         u: &mut Mat,
-        m_block: &Mat,
+        data: &dyn DataSource,
         state: &mut ClientState,
         hyper: &FactorHyper,
         n_frac: f64,
@@ -196,6 +197,21 @@ impl LocalUpdateKernel for PjrtKernel {
         ws: &mut Workspace,
     ) -> Result<EpochOutput> {
         self.check_hyper(hyper)?;
+        // The artifact consumes the whole block at once (one f32 device
+        // buffer), so a streaming source is materialized here — the PJRT
+        // path trades the out-of-core property for the AOT kernels, and
+        // pays a full shard re-read *per epoch* (the kernel is shared
+        // across clients, so there is no per-client slot to cache the
+        // block in; hold a resident source at the call layer if that
+        // cost ever matters). The native kernel is the one that streams.
+        let materialized;
+        let m_block: &Mat = match data.as_resident() {
+            Some(m) => m,
+            None => {
+                materialized = data.to_mat()?;
+                &materialized
+            }
+        };
         let (m, width) = m_block.shape();
         let mut inner = self.inner.lock().map_err(|_| anyhow!("pjrt mutex poisoned"))?;
         let idx = inner.compiled_for(m, width, hyper.rank, k_local, hyper.inner_sweeps)?;

@@ -234,7 +234,8 @@ impl SimPeer for SimClientPeer {
                         &self.hyper,
                         pool::global(),
                         &mut self.ws,
-                    );
+                    )
+                    .expect("polish sweep failed");
                 }
                 let reply = if reveal {
                     let l_i = matmul_nt(&final_u, &self.state.v);

@@ -100,6 +100,59 @@ fn solve_all_centralized_algorithms() {
 }
 
 #[test]
+fn generate_shards_then_solve_streams_them() {
+    // the out-of-core smoke path CI runs on the release binary:
+    // generate per-client shards + manifest, then a distributed solve
+    // whose clients stream their own shards lazily from disk
+    let dir = std::env::temp_dir().join(format!("dcfpca-shard-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let prefix = dir.join("fed");
+    let out = bin()
+        .args(["generate", "--n", "60", "--rank", "3", "--seed", "7", "--format", "shard",
+            "--shards", "4", "--out"])
+        .arg(&prefix)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let manifest = dir.join("fed.manifest.json");
+    assert!(manifest.exists(), "manifest not written");
+    for i in 0..4 {
+        assert!(dir.join(format!("fed.shard{i}.dcfshard")).exists(), "shard {i} missing");
+    }
+
+    let out = bin()
+        .args(["solve", "--algorithm", "dcf-pca", "--n", "60", "--rank", "3", "--clients", "4",
+            "--rounds", "20", "--data"])
+        .arg(&manifest)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("DCF-PCA (streamed): final err"), "{stdout}");
+
+    // genuinely out-of-core mode: --rank works without --n (the shape
+    // comes from the manifest) and --no-truth skips regeneration
+    let out = bin()
+        .args(["solve", "--algorithm", "dcf-pca", "--rank", "3", "--rounds", "5", "--no-truth",
+            "--data"])
+        .arg(&manifest)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("DCF-PCA (streamed)"));
+
+    // streaming is refused for centralized algorithms
+    let out = bin()
+        .args(["solve", "--algorithm", "alm", "--data"])
+        .arg(&manifest)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--data must be dcf-pca only");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn generate_writes_matrix_and_truth() {
     let dir = std::env::temp_dir().join(format!("dcfpca-gen-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -117,7 +117,8 @@ impl SimClient {
                         &self.hyper,
                         pool::global(),
                         &mut self.ws,
-                    );
+                    )
+                    .expect("polish sweep failed");
                 }
                 let reply = if reveal {
                     let l_i = matmul_nt(&final_u, &self.state.v);
@@ -356,7 +357,7 @@ fn engine_multiplexes_concurrent_jobs_over_one_reactor() {
         let client_cfg = ClientConfig {
             id,
             job,
-            m_block: problem.observed.cols_range(a, b),
+            data: Box::new(problem.observed.cols_range(a, b)),
             hyper: cfg.hyper,
             n_frac: (b - a) as f64 / n as f64,
             polish_sweeps: cfg.polish_sweeps,
@@ -555,7 +556,7 @@ mod epoll_e2e {
                 id,
                 job: 0,
                 n_frac: (b - a) as f64 / spec.n as f64,
-                m_block,
+                data: Box::new(m_block),
                 hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
                 polish_sweeps: 3,
                 truth: Some(truth),

@@ -34,7 +34,7 @@ fn spawn_tcp_clients(
                     id,
                     job: 0,
                     n_frac: (b - a) as f64 / spec.n as f64,
-                    m_block,
+                    data: Box::new(m_block),
                     hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
                     polish_sweeps: 3,
                     truth: Some(truth),

@@ -312,7 +312,7 @@ fn prop_inner_sweep_monotone_descent() {
         let mut ws = Workspace::new(m_dim, n_dim, r);
         let mut prev = inner_objective(&u, &m_block, &state, &hyper);
         for _ in 0..4 {
-            inner_sweep(&u, &m_block, &mut state, &hyper, pool::global(), &mut ws);
+            inner_sweep(&u, &m_block, &mut state, &hyper, pool::global(), &mut ws).unwrap();
             let cur = inner_objective(&u, &m_block, &state, &hyper);
             assert!(cur <= prev * (1.0 + 1e-10) + 1e-10, "{cur} > {prev}");
             prev = cur;
@@ -346,10 +346,11 @@ fn prop_fused_tile_sweep_matches_multipass_oracle() {
         let mut ows = oracle::MultipassWorkspace::new(m_dim, n_dim, r);
 
         for _ in 0..3 {
-            inner_sweep(&u, &m_block, &mut st_fused, &hyper, pool::global(), &mut ws);
+            inner_sweep(&u, &m_block, &mut st_fused, &hyper, pool::global(), &mut ws).unwrap();
             oracle::inner_sweep(&u, &m_block, &mut st_oracle, &hyper, &mut ows);
         }
-        u_gradient_into(&u, &m_block, &st_fused, &hyper, n_frac, pool::global(), &mut ws);
+        u_gradient_into(&u, &m_block, &st_fused, &hyper, n_frac, pool::global(), &mut ws)
+            .unwrap();
         oracle::u_gradient_into(&u, &m_block, &st_oracle, &hyper, n_frac, &mut ows);
 
         let rel = |a: &Mat, b: &Mat| (a - b).frob_norm() / b.frob_norm().max(1.0);
