@@ -19,10 +19,22 @@
 //! - RT: one PJRT client_update execution (artifact path), if artifacts
 //!   are built.
 //!
-//! Besides the human-readable table, each run writes a fresh snapshot of
-//! `{op, shape, ns_per_iter, gflops, effective_gb_per_s}` records to
-//! `BENCH_kernel_hotpath.json` (overwriting the previous run — the perf
-//! trajectory accumulates as the file's history in git).
+//! The run opens by probing the machine itself — peak FMA throughput of
+//! the active dispatch (register-only chain loop) and streaming read
+//! bandwidth (64 MiB sum) — and every compute row reports a
+//! `roofline_fraction`: achieved GFLOP/s over `min(peak, AI·bandwidth)`
+//! for that kernel's arithmetic intensity. A dedicated section times
+//! each dispatched linalg entry point against its `*_scalar` oracle at
+//! the §4 kernel shapes, so the SIMD speedup is tracked per kernel.
+//!
+//! Besides the human-readable table, each run writes a fresh snapshot to
+//! `BENCH_kernel_hotpath.json` as `{host, records}`: `host` carries the
+//! dispatch choice, detected CPU features, core count, and the two probe
+//! numbers (so cross-machine records are interpretable); `records` is
+//! the array of `{op, shape, ns_per_iter, gflops, effective_gb_per_s,
+//! roofline_fraction}` rows (overwriting the previous run — the perf
+//! trajectory accumulates as the file's history in git, diffed by
+//! `scripts/bench_trend.sh`).
 
 use std::collections::BTreeMap;
 
@@ -30,8 +42,9 @@ use dcf_pca::algorithms::factor::{inner_solve, oracle, ClientState, FactorHyper}
 use dcf_pca::bench_util::{fmt_secs, Bencher, Table};
 use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
 use dcf_pca::linalg::{
-    gram, matmul, matmul_nt, matmul_tn, matvec, residual_shrink_into, ridge_solve_v, rsvd,
-    svd_jacobi, Mat, RsvdParams, Workspace,
+    gemm, gram, gram_into, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+    matmul_tn_into, matvec, matvec_into, residual_shrink_into, ridge_solve_v, rsvd, shrink_sub_into,
+    simd, svd_jacobi, Mat, RsvdParams, Workspace,
 };
 use dcf_pca::rng::Pcg64;
 use dcf_pca::rpca::problem::ProblemSpec;
@@ -45,6 +58,10 @@ struct Record {
     ns_per_iter: f64,
     gflops: Option<f64>,
     effective_gb_per_s: Option<f64>,
+    /// Achieved GFLOP/s over the kernel's roofline ceiling
+    /// `min(peak_fma, AI · stream_bw)` — present on rows with a traffic
+    /// model.
+    roofline_fraction: Option<f64>,
 }
 
 impl Record {
@@ -59,8 +76,25 @@ impl Record {
         };
         obj.insert("gflops".to_string(), opt(self.gflops));
         obj.insert("effective_gb_per_s".to_string(), opt(self.effective_gb_per_s));
+        obj.insert("roofline_fraction".to_string(), opt(self.roofline_fraction));
         Json::Obj(obj)
     }
+}
+
+/// Host fingerprint for the JSON header: dispatch arm, features, cores,
+/// and the measured machine ceilings the roofline fractions refer to.
+fn host_header(peak_fma_gflops: f64, stream_gb_per_s: f64) -> Json {
+    let features: Vec<Json> =
+        simd::detected_features().into_iter().map(|f| Json::Str(f.to_string())).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut obj = BTreeMap::new();
+    obj.insert("dispatch".to_string(), Json::Str(simd::Dispatch::active().name().to_string()));
+    obj.insert("forced_scalar".to_string(), Json::Bool(simd::forced_scalar()));
+    obj.insert("features".to_string(), Json::Arr(features));
+    obj.insert("cores".to_string(), Json::Num(cores as f64));
+    obj.insert("peak_fma_gflops".to_string(), Json::Num(peak_fma_gflops));
+    obj.insert("stream_gb_per_s".to_string(), Json::Num(stream_gb_per_s));
+    Json::Obj(obj)
 }
 
 /// FLOPs of one local epoch: per sweep, the RHS accumulation and the
@@ -145,8 +179,26 @@ fn allocating_local_epoch(
 fn main() {
     let mut rng = Pcg64::new(1);
     let b = Bencher { warmup: 1, samples: 5, max_total: std::time::Duration::from_secs(240) };
-    let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s", "eff GB/s"]);
+    let mut t = Table::new(&["kernel", "shape", "time (mean)", "GFLOP/s", "eff GB/s", "roofline"]);
     let mut records: Vec<Record> = Vec::new();
+
+    // machine ceilings first — every roofline fraction below refers to
+    // these two single-core probes, so rows from multi-threaded arms
+    // deliberately omit the fraction
+    let peak_gflops = simd::probe_peak_fma_gflops();
+    let stream_gbs = simd::probe_stream_gb_per_s();
+    println!(
+        "host: dispatch={} peak_fma={peak_gflops:.1} GFLOP/s stream={stream_gbs:.1} GB/s",
+        simd::Dispatch::active().name(),
+    );
+
+    // achieved GFLOP/s and its fraction of the kernel's roofline ceiling
+    // min(peak, AI · bandwidth) under the given traffic model
+    let roof = |flops: f64, bytes: f64, mean: f64| -> (f64, f64) {
+        let gflops = flops / mean / 1e9;
+        let ceiling = peak_gflops.min(stream_gbs * flops / bytes);
+        (gflops, gflops / ceiling)
+    };
 
     let push = |t: &mut Table,
                 records: &mut Vec<Record>,
@@ -154,16 +206,47 @@ fn main() {
                 shape: &str,
                 mean: f64,
                 gflops: Option<f64>,
-                gbs: Option<f64>| {
+                gbs: Option<f64>,
+                frac: Option<f64>| {
         let fmt_opt = |v: Option<f64>| v.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into());
-        t.row(&[op.into(), shape.into(), fmt_secs(mean), fmt_opt(gflops), fmt_opt(gbs)]);
+        let fmt_pct =
+            |v: Option<f64>| v.map(|f| format!("{:.0}%", f * 100.0)).unwrap_or_else(|| "—".into());
+        t.row(&[
+            op.into(),
+            shape.into(),
+            fmt_secs(mean),
+            fmt_opt(gflops),
+            fmt_opt(gbs),
+            fmt_pct(frac),
+        ]);
         records.push(Record {
             op: op.to_string(),
             shape: shape.to_string(),
             ns_per_iter: mean * 1e9,
             gflops,
             effective_gb_per_s: gbs,
+            roofline_fraction: frac,
         });
+    };
+
+    // times a dispatched entry point against its scalar oracle and emits
+    // the pair as adjacent rows (`<op>` / `<op>_scalar`); the speedup
+    // line is the tentpole's acceptance number
+    let pair = |t: &mut Table,
+                records: &mut Vec<Record>,
+                op: &str,
+                shape: &str,
+                flops: f64,
+                bytes: f64,
+                dispatched: &mut dyn FnMut(),
+                scalar: &mut dyn FnMut()| {
+        let sd = b.run(&mut *dispatched);
+        let ss = b.run(&mut *scalar);
+        let (gf, frac) = roof(flops, bytes, sd.mean);
+        push(t, records, op, shape, sd.mean, Some(gf), None, Some(frac));
+        let op_s = format!("{op}_scalar");
+        push(t, records, &op_s, shape, ss.mean, Some(flops / ss.mean / 1e9), None, None);
+        println!("  {op} {shape}: {:.2}x vs scalar", ss.mean / sd.mean);
     };
 
     // gemm at the fig1 working shapes
@@ -171,8 +254,11 @@ fn main() {
         let a = Mat::gaussian(m, k, &mut rng);
         let bm = Mat::gaussian(k, n, &mut rng);
         let stats = b.run(|| matmul(&a, &bm));
-        let gflops = 2.0 * (m * k * n) as f64 / stats.mean / 1e9;
-        push(&mut t, &mut records, "gemm", &format!("{m}x{k}x{n}"), stats.mean, Some(gflops), None);
+        let flops = 2.0 * (m * k * n) as f64;
+        let bytes = 8.0 * (m * k + k * n + m * n) as f64;
+        let (gflops, frac) = roof(flops, bytes, stats.mean);
+        let shape = format!("{m}x{k}x{n}");
+        push(&mut t, &mut records, "gemm", &shape, stats.mean, Some(gflops), None, Some(frac));
     }
 
     // U·Vᵀ (the residual product of every inner sweep)
@@ -180,9 +266,113 @@ fn main() {
         let u = Mat::gaussian(500, 25, &mut rng);
         let v = Mat::gaussian(500, 25, &mut rng);
         let stats = b.run(|| matmul_nt(&u, &v));
-        let gflops = 2.0 * (500 * 25 * 500) as f64 / stats.mean / 1e9;
+        let flops = 2.0 * (500 * 25 * 500) as f64;
+        let bytes = 8.0 * (500 * 25 + 500 * 25 + 500 * 500) as f64;
+        let (gflops, frac) = roof(flops, bytes, stats.mean);
         let (op, shape) = ("gemm_nt (U·Vᵀ)", "500x25x500");
-        push(&mut t, &mut records, op, shape, stats.mean, Some(gflops), None);
+        push(&mut t, &mut records, op, shape, stats.mean, Some(gflops), None, Some(frac));
+    }
+
+    // dispatched kernels vs their scalar oracles at the §4 kernel shapes
+    // (m = n = 1000, p ∈ {5, 25}) — the SIMD tentpole's headline: the
+    // matmul family and gram_into should clear ≥2× on AVX2 hosts (a
+    // forced-scalar run prints ~1.00× by construction)
+    {
+        println!("SIMD dispatch ({}) vs scalar oracle:", simd::Dispatch::active().name());
+        let (m, n) = (1000usize, 1000usize);
+        let a = Mat::gaussian(m, n, &mut rng);
+        for &p_width in &[5usize, 25] {
+            let bp = Mat::gaussian(n, p_width, &mut rng);
+            let u = Mat::gaussian(m, p_width, &mut rng);
+            let v = Mat::gaussian(n, p_width, &mut rng);
+            let shape = format!("m=n=1000 p={p_width}");
+            let flops = 2.0 * (m * n * p_width) as f64;
+
+            let mut cd = Mat::zeros(m, p_width);
+            let mut cs = Mat::zeros(m, p_width);
+            pair(
+                &mut t,
+                &mut records,
+                "matmul_into",
+                &shape,
+                flops,
+                8.0 * (m * n + n * p_width + m * p_width) as f64,
+                &mut || matmul_into(&mut cd, &a, &bp),
+                &mut || gemm::matmul_acc_scalar(&mut cs, &a, &bp, 1.0, 0.0),
+            );
+
+            let mut td = Mat::zeros(p_width, n);
+            let mut ts = Mat::zeros(p_width, n);
+            pair(
+                &mut t,
+                &mut records,
+                "matmul_tn_into",
+                &shape,
+                flops,
+                8.0 * (m * p_width + m * n + p_width * n) as f64,
+                &mut || matmul_tn_into(&mut td, &u, &a),
+                &mut || gemm::matmul_tn_into_scalar(&mut ts, &u, &a),
+            );
+
+            let mut nd = Mat::zeros(m, n);
+            let mut ns = Mat::zeros(m, n);
+            pair(
+                &mut t,
+                &mut records,
+                "matmul_nt_into",
+                &shape,
+                flops,
+                8.0 * (m * p_width + n * p_width + m * n) as f64,
+                &mut || matmul_nt_into(&mut nd, &u, &v),
+                &mut || gemm::matmul_nt_into_scalar(&mut ns, &u, &v),
+            );
+
+            // gflops are nominal 2mp² for both arms (the scalar twin
+            // exploits symmetry and does ~half the multiplies, so its
+            // printed rate is a work rate, not a hardware rate)
+            let mut gd = Mat::zeros(p_width, p_width);
+            let mut gs = Mat::zeros(p_width, p_width);
+            pair(
+                &mut t,
+                &mut records,
+                "gram_into",
+                &shape,
+                2.0 * (m * p_width * p_width) as f64,
+                8.0 * (m * p_width + p_width * p_width) as f64,
+                &mut || gram_into(&mut gd, &u),
+                &mut || gemm::gram_into_scalar(&mut gs, &u),
+            );
+        }
+
+        // memory-bound rows: these ride the bandwidth ceiling, so the
+        // roofline fraction is achieved traffic over the stream probe
+        let x = vec![0.5f64; n];
+        let mut yd = vec![0.0f64; m];
+        let mut ys = vec![0.0f64; m];
+        pair(
+            &mut t,
+            &mut records,
+            "matvec_into",
+            "1000x1000",
+            2.0 * (m * n) as f64,
+            8.0 * (m * n + n + m) as f64,
+            &mut || matvec_into(&mut yd, &a, &x),
+            &mut || gemm::matvec_into_scalar(&mut ys, &a, &x),
+        );
+
+        let a2 = Mat::gaussian(m, n, &mut rng);
+        let mut dst_d = vec![0.0f64; m * n];
+        let mut dst_s = vec![0.0f64; m * n];
+        pair(
+            &mut t,
+            &mut records,
+            "shrink_sub_into",
+            "1000x1000",
+            2.0 * (m * n) as f64,
+            8.0 * 3.0 * (m * n) as f64,
+            &mut || shrink_sub_into(&mut dst_d, a.as_slice(), a2.as_slice(), 0.1),
+            &mut || simd::scalar::shrink_sub(&mut dst_s, a.as_slice(), a2.as_slice(), 0.1),
+        );
     }
 
     // one inner solve at the paper's client shape (fused panel path)
@@ -202,6 +392,7 @@ fn main() {
             "inner_solve (J=3)",
             "m=500 n_i=50 r=25",
             stats.mean,
+            None,
             None,
             None,
         );
@@ -231,6 +422,7 @@ fn main() {
             &shape,
             stats_alloc.mean,
             Some(flops / stats_alloc.mean / 1e9),
+            None,
             None,
         );
 
@@ -263,6 +455,7 @@ fn main() {
             stats_mp.mean,
             Some(flops / stats_mp.mean / 1e9),
             Some(mp_bytes / stats_mp.mean / 1e9),
+            None,
         );
 
         // fused column-tile epoch, threads ∈ {1, 2}
@@ -296,6 +489,8 @@ fn main() {
                 stats_f.mean,
                 Some(flops / stats_f.mean / 1e9),
                 Some(fused_bytes / stats_f.mean / 1e9),
+                // single-core ceilings only apply to the t1 arm
+                if threads == 1 { Some(roof(flops, fused_bytes, stats_f.mean).1) } else { None },
             );
             fused_means.push(stats_f.mean);
         }
@@ -313,10 +508,10 @@ fn main() {
     {
         let a = Mat::gaussian(200, 200, &mut rng);
         let stats = b.run(|| svd_jacobi(&a));
-        push(&mut t, &mut records, "svd_jacobi", "200x200", stats.mean, None, None);
+        push(&mut t, &mut records, "svd_jacobi", "200x200", stats.mean, None, None, None);
         let big = Mat::gaussian(1000, 1000, &mut rng);
         let stats = b.run(|| rsvd(&big, RsvdParams::new(60)));
-        push(&mut t, &mut records, "rsvd k=60", "1000x1000", stats.mean, None, None);
+        push(&mut t, &mut records, "rsvd k=60", "1000x1000", stats.mean, None, None, None);
     }
 
     // transport framing round-trip
@@ -339,6 +534,7 @@ fn main() {
             fmt_secs(stats.mean),
             format!("{mbps:.0} MB/s"),
             "—".into(),
+            "—".into(),
         ]);
         records.push(Record {
             op: "protocol enc+dec".to_string(),
@@ -346,6 +542,7 @@ fn main() {
             ns_per_iter: stats.mean * 1e9,
             gflops: None,
             effective_gb_per_s: None,
+            roofline_fraction: None,
         });
     }
 
@@ -378,6 +575,7 @@ fn main() {
                     stats.mean,
                     None,
                     None,
+                    None,
                 );
             }
             Err(err) => println!("(PJRT unavailable — skipping artifact rows: {err})"),
@@ -389,7 +587,10 @@ fn main() {
     println!("\nkernel hot-path timings:");
     t.print();
 
-    let json = Json::Arr(records.iter().map(Record::to_json).collect());
+    let mut top = BTreeMap::new();
+    top.insert("host".to_string(), host_header(peak_gflops, stream_gbs));
+    top.insert("records".to_string(), Json::Arr(records.iter().map(Record::to_json).collect()));
+    let json = Json::Obj(top);
     let out_path = "BENCH_kernel_hotpath.json";
     match std::fs::write(out_path, format!("{json}\n")) {
         Ok(()) => println!("\nmachine-readable results written to {out_path}"),

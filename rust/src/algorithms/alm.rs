@@ -127,9 +127,14 @@ impl RpcaSolver for Alm {
                 pool.run_bands(md.len(), &|_, lo, hi| {
                     // SAFETY: bands are disjoint ranges
                     let sd = unsafe { sv.range(lo, hi) };
-                    for (sx, i) in sd.iter_mut().zip(lo..hi) {
-                        *sx = crate::linalg::shrink_scalar(md[i] - ld[i] + yd[i] * inv_mu, thresh);
-                    }
+                    crate::linalg::shrink_dual_into(
+                        sd,
+                        &md[lo..hi],
+                        &ld[lo..hi],
+                        &yd[lo..hi],
+                        inv_mu,
+                        thresh,
+                    );
                     0.0
                 });
             }
@@ -209,7 +214,9 @@ mod tests {
     #[test]
     fn feasibility_residual_decreases() {
         let p = ProblemSpec::square(40, 2, 0.05).generate(50);
-        let res = Alm::new().with_stop(StopCriteria { max_iters: 30, tol: 0.0 }).solve(&p.observed, Some(&p));
+        let res = Alm::new()
+            .with_stop(StopCriteria { max_iters: 30, tol: 0.0 })
+            .solve(&p.observed, Some(&p));
         let first = res.history.first().unwrap().grad_norm;
         let last = res.history.last().unwrap().grad_norm;
         assert!(last < first * 1e-3, "first {first} last {last}");

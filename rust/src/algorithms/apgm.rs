@@ -174,9 +174,7 @@ impl RpcaSolver for Apgm {
                 pool.run_bands(gsd.len(), &|_, lo, hi| {
                     // SAFETY: bands are disjoint ranges
                     let sd = unsafe { sv.range(lo, hi) };
-                    for (sx, i) in sd.iter_mut().zip(lo..hi) {
-                        *sx = crate::linalg::shrink_scalar(gsd[i], thresh);
-                    }
+                    crate::linalg::shrink_into(sd, &gsd[lo..hi], thresh);
                     0.0
                 });
             }

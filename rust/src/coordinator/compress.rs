@@ -16,9 +16,14 @@
 
 use crate::bail;
 use crate::error::Result;
+use crate::linalg::simd::{self, Dispatch};
 use crate::linalg::Mat;
 
 use super::transport::framing::{put_f64, put_u32, put_u64, Reader};
+
+/// Stack-buffer size for the chunked f64↔f32 conversions (4 KiB of f64 —
+/// big enough to amortize dispatch, small enough to stay L1-resident).
+const CVT_CHUNK: usize = 512;
 
 /// Wire codec for consensus-factor matrices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -70,18 +75,28 @@ pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
             }
         }
         Compression::F32 => {
-            for &x in m.as_slice() {
-                buf.extend_from_slice(&(x as f32).to_le_bytes());
+            // narrow through the SIMD layer in L1-sized chunks (the cast
+            // is bitwise identical to `as f32` under both dispatch arms),
+            // then serialize — the byte shuffling itself is not the cost
+            let d = Dispatch::active();
+            let mut tmp = [0.0f32; CVT_CHUNK];
+            for chunk in m.as_slice().chunks(CVT_CHUNK) {
+                let t = &mut tmp[..chunk.len()];
+                simd::cvt_to_f32(d, t, chunk);
+                for x in t.iter() {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
             }
         }
         Compression::Int8 => {
-            // per-column scales
+            // per-column scales: one abs-max sweep per row (bitwise equal
+            // to the scalar `s.max(|x|)` fold it replaced)
             let (rows, cols) = m.shape();
             let mut scales = vec![0.0f64; cols];
+            let d = Dispatch::active();
+            let md = m.as_slice();
             for i in 0..rows {
-                for (j, s) in scales.iter_mut().enumerate() {
-                    *s = s.max(m[(i, j)].abs());
-                }
+                simd::abs_max_update(d, &mut scales, &md[i * cols..(i + 1) * cols]);
             }
             for s in &scales {
                 put_f64(buf, *s / 127.0);
@@ -122,9 +137,19 @@ pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
             }
         }
         TAG_F32 => {
-            for i in 0..len {
-                let b = [r.u8()?, r.u8()?, r.u8()?, r.u8()?];
-                m.as_mut_slice()[i] = f32::from_le_bytes(b) as f64;
+            // bulk-borrow the payload, widen in chunks through the SIMD
+            // layer (exact: every f32 is representable as f64)
+            let raw = r.bytes(len * 4)?;
+            let d = Dispatch::active();
+            let mut tmp = [0.0f32; CVT_CHUNK];
+            for (ci, out) in m.as_mut_slice().chunks_mut(CVT_CHUNK).enumerate() {
+                let base = ci * CVT_CHUNK * 4;
+                let t = &mut tmp[..out.len()];
+                for (k, v) in t.iter_mut().enumerate() {
+                    let at = base + 4 * k;
+                    *v = f32::from_le_bytes([raw[at], raw[at + 1], raw[at + 2], raw[at + 3]]);
+                }
+                simd::cvt_to_f64(d, out, t);
             }
         }
         TAG_INT8 => {

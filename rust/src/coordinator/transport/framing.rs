@@ -130,6 +130,12 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    /// Borrow the next `n` raw bytes of the frame (bulk twin of [`u8`](Self::u8)
+    /// for payloads decoded outside the reader, e.g. compressed matrices).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
     pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }

@@ -1,17 +1,26 @@
 //! Blocked dense matrix multiplication kernels.
 //!
-//! Single-threaded (the testbed exposes one vCPU) but cache-blocked and
-//! written so the inner loop auto-vectorizes: the k-panel of B is walked
-//! row-wise (unit stride) and accumulated into a register-blocked C tile.
+//! Cache-blocked and register-blocked for the single-core testbed. Every
+//! entry point is runtime-dispatched (see [`crate::linalg::simd`]): on
+//! x86-64 with AVX2+FMA the inner loops run the hand-vectorized cores in
+//! `simd::avx2`; everywhere else (or under `DCF_PCA_FORCE_SCALAR=1`) the
+//! original scalar kernels below run unchanged. The `*_scalar` twins are
+//! public on purpose — they are the parity oracle the tests and the
+//! roofline bench pin the SIMD path against.
+//!
 //! This is the rust-native analogue of the L1 Pallas kernels' MXU tiling —
 //! same loop order (m-tile outer, k inner, n unit-stride innermost).
 
 use super::matrix::Mat;
+#[cfg(target_arch = "x86_64")]
+use super::simd::avx2;
+use super::simd::Dispatch;
 
 /// Cache-block sizes tuned on the single-core testbed (see EXPERIMENTS.md
 /// §Perf): MC×KC panel of A ~ 128 KiB (L2-resident), KC×N rows of B stream.
-const MC: usize = 64;
-const KC: usize = 256;
+/// Shared with the AVX2 core so both dispatch arms block identically.
+pub(crate) const MC: usize = 64;
+pub(crate) const KC: usize = 256;
 
 /// C = A · B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -36,6 +45,23 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
 /// C ← Aᵀ · B into a preallocated output, without materializing Aᵀ
 /// (zero-allocation twin of [`matmul_tn`]).
 pub fn matmul_tn_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    match Dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => {
+            assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dim mismatch");
+            let (k_dim, m) = a.shape();
+            let n = b.cols();
+            assert_eq!(c.shape(), (m, n), "matmul_tn: output shape mismatch");
+            unsafe {
+                avx2::matmul_tn_core(c.as_mut_slice(), a.as_slice(), b.as_slice(), k_dim, m, n)
+            }
+        }
+        _ => matmul_tn_into_scalar(c, a, b),
+    }
+}
+
+/// Scalar [`matmul_tn_into`] (fallback + parity oracle).
+pub fn matmul_tn_into_scalar(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dim mismatch");
     let (k_dim, m) = a.shape();
     let n = b.cols();
@@ -91,13 +117,29 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 ///
 /// The inner dimension is the factor rank p (small) in every hot call
 /// (U·Vᵀ), where a plain dot-product loop stalls on one short serial
-/// reduction per output element. Processing eight rows of B at once
-/// gives eight independent FMA chains per pass over A's row — enough
-/// in-flight accumulators to cover FMA latency, matching the port
-/// pressure of the store-amortized [`matmul`] kernel the old
-/// transpose-then-multiply route used, minus the O(n·p) transpose and
-/// its allocation.
+/// reduction per output element. The AVX2 core stages Bᵀ tiles on the
+/// stack and runs 8 broadcast-FMA streams per A row; the scalar kernel
+/// processes eight rows of B at once for the same latency-hiding effect.
 pub fn matmul_nt_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    match Dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => {
+            assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dim mismatch");
+            let (m, k_dim) = a.shape();
+            let n = b.rows();
+            assert_eq!(c.shape(), (m, n), "matmul_nt: output shape mismatch");
+            unsafe {
+                avx2::matmul_nt_core(c.as_mut_slice(), a.as_slice(), b.as_slice(), m, k_dim, n)
+            }
+        }
+        _ => matmul_nt_into_scalar(c, a, b),
+    }
+}
+
+/// Scalar [`matmul_nt_into`] (fallback + parity oracle): eight rows of B
+/// at once give eight independent FMA chains per pass over A's row —
+/// enough in-flight accumulators to cover FMA latency.
+pub fn matmul_nt_into_scalar(c: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dim mismatch");
     let (m, k_dim) = a.shape();
     let n = b.rows();
@@ -186,8 +228,42 @@ pub fn residual_into(r: &mut Mat, u: &Mat, v: &Mat, s: &Mat, m: &Mat) {
     }
 }
 
-/// C = beta*C + alpha * A·B — the blocked core.
+/// C = beta*C + alpha * A·B — the blocked core (runtime-dispatched).
 pub fn matmul_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
+    match Dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => {
+            let (m, k_dim) = a.shape();
+            let (kb_dim, n) = b.shape();
+            assert_eq!(k_dim, kb_dim, "matmul: inner dim mismatch");
+            assert_eq!(c.shape(), (m, n), "matmul: output shape mismatch");
+            if beta == 0.0 {
+                // explicit overwrite (not `*= 0`) so reused workspace buffers
+                // holding NaN/inf garbage cannot poison the product
+                c.as_mut_slice().fill(0.0);
+            } else if beta != 1.0 {
+                for x in c.as_mut_slice() {
+                    *x *= beta;
+                }
+            }
+            unsafe {
+                avx2::matmul_acc_core(
+                    c.as_mut_slice(),
+                    a.as_slice(),
+                    b.as_slice(),
+                    m,
+                    k_dim,
+                    n,
+                    alpha,
+                )
+            }
+        }
+        _ => matmul_acc_scalar(c, a, b, alpha, beta),
+    }
+}
+
+/// Scalar [`matmul_acc`] (fallback + parity oracle).
+pub fn matmul_acc_scalar(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
     let (m, k_dim) = a.shape();
     let (kb_dim, n) = b.shape();
     assert_eq!(k_dim, kb_dim, "matmul: inner dim mismatch");
@@ -254,6 +330,24 @@ pub fn gram(a: &Mat) -> Mat {
 /// G ← AᵀA into a preallocated r×r output (zero-allocation twin of
 /// [`gram`]).
 pub fn gram_into(g: &mut Mat, a: &Mat) {
+    match Dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => {
+            let (m, r) = a.shape();
+            assert_eq!(g.shape(), (r, r), "gram: output shape mismatch");
+            // AᵀA through the shared tn core with A = B: the full p×p
+            // product is symmetric bitwise (entries (p,q) and (q,p)
+            // accumulate the same products in the same order), and at
+            // the hot rank p ≤ 25 the wasted lower-triangle flops are
+            // cheaper than a second, branchier kernel.
+            unsafe { avx2::matmul_tn_core(g.as_mut_slice(), a.as_slice(), a.as_slice(), m, r, r) }
+        }
+        _ => gram_into_scalar(g, a),
+    }
+}
+
+/// Scalar [`gram_into`] (fallback + parity oracle).
+pub fn gram_into_scalar(g: &mut Mat, a: &Mat) {
     let (m, r) = a.shape();
     assert_eq!(g.shape(), (r, r), "gram: output shape mismatch");
     g.as_mut_slice().fill(0.0);
@@ -287,12 +381,25 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
 }
 
 /// y ← A·x into a preallocated output slice (len = A.rows).
+pub fn matvec_into(y: &mut [f64], a: &Mat, x: &[f64]) {
+    match Dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => {
+            assert_eq!(a.cols(), x.len(), "matvec: x length mismatch");
+            assert_eq!(a.rows(), y.len(), "matvec: y length mismatch");
+            unsafe { avx2::matvec_core(y, a.as_slice(), x) }
+        }
+        _ => matvec_into_scalar(y, a, x),
+    }
+}
+
+/// Scalar [`matvec_into`] (fallback + parity oracle).
 ///
 /// Each row's dot product runs four independent accumulator chains
 /// (strided partial sums recombined at the end) instead of one serial
 /// reduction — the same FMA-latency stall [`matmul_nt_into`] fixes with
 /// its eight-row blocking, applied to the vector case.
-pub fn matvec_into(y: &mut [f64], a: &Mat, x: &[f64]) {
+pub fn matvec_into_scalar(y: &mut [f64], a: &Mat, x: &[f64]) {
     assert_eq!(a.cols(), x.len(), "matvec: x length mismatch");
     assert_eq!(a.rows(), y.len(), "matvec: y length mismatch");
     let k_dim = x.len();
@@ -480,5 +587,60 @@ mod tests {
         let a = Mat::gaussian(12, 12, &mut rng);
         assert_close(&matmul(&a, &Mat::eye(12)), &a, 1e-14);
         assert_close(&matmul(&Mat::eye(12), &a), &a, 1e-14);
+    }
+
+    #[test]
+    fn dispatched_entry_points_match_scalar_twins() {
+        // the shape list deliberately walks every AVX2 code path: vector
+        // remainders (k, n not multiples of 4), the staged short-k nt
+        // panel (full 32-wide + ragged tail), the long-k nt dot path,
+        // and MC/KC block boundaries
+        let mut rng = Pcg64::new(22);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (5, 3, 9),
+            (33, 17, 8),
+            (40, 20, 70),
+            (64, 65, 31),
+            (70, 257, 33),
+        ] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let mut c = Mat::from_fn(m, n, |_, _| f64::NAN);
+            let mut c_s = Mat::from_fn(m, n, |_, _| f64::NAN);
+            matmul_acc(&mut c, &a, &b, 1.25, 0.0);
+            matmul_acc_scalar(&mut c_s, &a, &b, 1.25, 0.0);
+            assert_close(&c, &c_s, 1e-12);
+
+            let b2 = Mat::gaussian(m, n, &mut rng);
+            let mut t = Mat::from_fn(k, n, |_, _| f64::NAN);
+            let mut t_s = Mat::from_fn(k, n, |_, _| f64::NAN);
+            matmul_tn_into(&mut t, &a, &b2);
+            matmul_tn_into_scalar(&mut t_s, &a, &b2);
+            assert_close(&t, &t_s, 1e-12);
+
+            let bt = Mat::gaussian(n, k, &mut rng);
+            let mut q = Mat::from_fn(m, n, |_, _| f64::NAN);
+            let mut q_s = Mat::from_fn(m, n, |_, _| f64::NAN);
+            matmul_nt_into(&mut q, &a, &bt);
+            matmul_nt_into_scalar(&mut q_s, &a, &bt);
+            assert_close(&q, &q_s, 1e-12);
+
+            let mut g = Mat::from_fn(k, k, |_, _| f64::NAN);
+            let mut g_s = Mat::from_fn(k, k, |_, _| f64::NAN);
+            gram_into(&mut g, &a);
+            gram_into_scalar(&mut g_s, &a);
+            assert_close(&g, &g_s, 1e-12);
+
+            let x: Vec<f64> = (0..k).map(|i| (i as f64) * 0.37 - 1.0).collect();
+            let mut y = vec![f64::NAN; m];
+            let mut y_s = vec![f64::NAN; m];
+            matvec_into(&mut y, &a, &x);
+            matvec_into_scalar(&mut y_s, &a, &x);
+            for (v, v_s) in y.iter().zip(&y_s) {
+                let denom = v_s.abs().max(1.0);
+                assert!((v - v_s).abs() / denom < 1e-12, "matvec {v} vs {v_s}");
+            }
+        }
     }
 }

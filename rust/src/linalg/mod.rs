@@ -13,6 +13,7 @@ pub mod matrix;
 pub mod ops;
 pub mod qr;
 pub mod rsvd;
+pub mod simd;
 pub mod solve;
 pub mod svd;
 pub mod tile;
@@ -24,10 +25,12 @@ pub use gemm::{
 };
 pub use matrix::Mat;
 pub use ops::{
-    huber, l1_norm, residual_shrink_into, shrink, shrink_inplace, shrink_scalar, sub_into,
+    huber, l1_norm, residual_shrink_into, shrink, shrink_dual_into, shrink_inplace, shrink_into,
+    shrink_scalar, shrink_sub_into, sub_into,
 };
 pub use qr::{orthonormalize, qr_thin};
 pub use rsvd::{rsvd, rsvd_svt, RsvdParams};
+pub use simd::Dispatch;
 pub use solve::{
     cholesky, cholesky_shifted_into, cholesky_solve, cholesky_solve_in_place, ridge_solve_v,
     ridge_solve_v_into, solve_spd,

@@ -3,6 +3,7 @@
 //! loss (paper Appendix A.2), and norm helpers.
 
 use super::matrix::Mat;
+use super::simd::{self, Dispatch};
 
 /// Scalar soft threshold: sign(x)·max(|x|−λ, 0).
 #[inline]
@@ -18,14 +19,48 @@ pub fn shrink_scalar(x: f64, lambda: f64) -> f64 {
 
 /// Elementwise soft threshold of a matrix (new allocation).
 pub fn shrink(a: &Mat, lambda: f64) -> Mat {
-    a.map(|x| shrink_scalar(x, lambda))
+    let mut out = Mat::zeros(a.rows(), a.cols());
+    shrink_into(out.as_mut_slice(), a.as_slice(), lambda);
+    out
 }
 
 /// In-place soft threshold.
 pub fn shrink_inplace(a: &mut Mat, lambda: f64) {
-    for x in a.as_mut_slice() {
-        *x = shrink_scalar(*x, lambda);
-    }
+    simd::shrink_inplace(Dispatch::active(), a.as_mut_slice(), lambda);
+}
+
+/// dst ← shrink_λ(src) over raw slices — the single elementwise-shrink
+/// call site the dispatch layer vectorizes (APGM's banded S-update goes
+/// through here; bitwise identical to a `shrink_scalar` loop).
+pub fn shrink_into(dst: &mut [f64], src: &[f64], lambda: f64) {
+    assert_eq!(dst.len(), src.len(), "shrink_into: length mismatch");
+    simd::shrink(Dispatch::active(), dst, src, lambda);
+}
+
+/// dst ← shrink_λ(a − b) over raw slices, fused (the Eq. 16 S-update
+/// shape shared by the tile sweep and `residual_shrink_into`).
+pub fn shrink_sub_into(dst: &mut [f64], a: &[f64], b: &[f64], lambda: f64) {
+    assert_eq!(dst.len(), a.len(), "shrink_sub_into: length mismatch");
+    assert_eq!(dst.len(), b.len(), "shrink_sub_into: length mismatch");
+    simd::shrink_sub(Dispatch::active(), dst, a, b, lambda);
+}
+
+/// dst ← shrink_λ(m − l + y·inv_mu) over raw slices — ALM's augmented-
+/// Lagrangian S-update, fused so the banded sweep makes one pass. The
+/// multiply and add round separately (no FMA), exactly like the open-
+/// coded scalar loop this replaced.
+pub fn shrink_dual_into(
+    dst: &mut [f64],
+    m: &[f64],
+    l: &[f64],
+    y: &[f64],
+    inv_mu: f64,
+    lambda: f64,
+) {
+    assert_eq!(dst.len(), m.len(), "shrink_dual_into: length mismatch");
+    assert_eq!(dst.len(), l.len(), "shrink_dual_into: length mismatch");
+    assert_eq!(dst.len(), y.len(), "shrink_dual_into: length mismatch");
+    simd::shrink_dual(Dispatch::active(), dst, m, l, y, inv_mu, lambda);
 }
 
 /// Fused S-update of the inner problem (Eq. 16): S = shrink_λ(M − U·Vᵀ)
@@ -34,12 +69,7 @@ pub fn shrink_inplace(a: &mut Mat, lambda: f64) {
 pub fn residual_shrink_into(s: &mut Mat, m: &Mat, uv: &Mat, lambda: f64) {
     assert_eq!(s.shape(), m.shape());
     assert_eq!(s.shape(), uv.shape());
-    let sd = s.as_mut_slice();
-    let md = m.as_slice();
-    let ud = uv.as_slice();
-    for i in 0..sd.len() {
-        sd[i] = shrink_scalar(md[i] - ud[i], lambda);
-    }
+    shrink_sub_into(s.as_mut_slice(), m.as_slice(), uv.as_slice(), lambda);
 }
 
 /// out ← a − b elementwise into a preallocated buffer (the `M − S`
@@ -47,12 +77,7 @@ pub fn residual_shrink_into(s: &mut Mat, m: &Mat, uv: &Mat, lambda: f64) {
 pub fn sub_into(out: &mut Mat, a: &Mat, b: &Mat) {
     assert_eq!(a.shape(), b.shape(), "sub_into: input shape mismatch");
     assert_eq!(out.shape(), a.shape(), "sub_into: output shape mismatch");
-    let od = out.as_mut_slice();
-    let ad = a.as_slice();
-    let bd = b.as_slice();
-    for i in 0..od.len() {
-        od[i] = ad[i] - bd[i];
-    }
+    simd::sub(Dispatch::active(), out.as_mut_slice(), a.as_slice(), b.as_slice());
 }
 
 /// Scalar Huber loss H_λ (paper Eq. 32).
@@ -122,6 +147,25 @@ mod tests {
         residual_shrink_into(&mut s, &m, &uv, 0.3);
         let expect = shrink(&(&m - &uv), 0.3);
         assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn shrink_dual_matches_open_coded_loop() {
+        // bitwise pin: the fused kernel must reproduce the exact
+        // rounding of the loop it replaced in alm.rs (mul, then add,
+        // then branch shrink)
+        let mut rng = Pcg64::new(65);
+        let m = Mat::gaussian(5, 7, &mut rng);
+        let l = Mat::gaussian(5, 7, &mut rng);
+        let y = Mat::gaussian(5, 7, &mut rng);
+        let (inv_mu, lam) = (0.37, 0.21);
+        let mut s = vec![f64::NAN; 35];
+        shrink_dual_into(&mut s, m.as_slice(), l.as_slice(), y.as_slice(), inv_mu, lam);
+        let (md, ld, yd) = (m.as_slice(), l.as_slice(), y.as_slice());
+        for (i, &sv) in s.iter().enumerate() {
+            let expect = shrink_scalar(md[i] - ld[i] + yd[i] * inv_mu, lam);
+            assert_eq!(sv.to_bits(), expect.to_bits());
+        }
     }
 
     #[test]

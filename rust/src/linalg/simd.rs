@@ -1,0 +1,1430 @@
+//! Runtime-dispatched SIMD microkernels for the linalg hot paths.
+//!
+//! Every compute-bound entry point in this crate (`gemm`, the fused
+//! tile pipeline, the elementwise shrink sweeps, the wire-compression
+//! scale loops) funnels through the slice primitives in this module.
+//! Each primitive exists twice:
+//!
+//! - **`scalar`** — safe portable Rust, loop-for-loop identical to the
+//!   code the callers inlined before this module existed. This is the
+//!   always-available fallback *and* the parity oracle.
+//! - **`avx2`** (x86-64 only) — register-blocked AVX2+FMA kernels via
+//!   `std::arch::x86_64`, compiled with `#[target_feature]` so the
+//!   binary stays runnable on any x86-64 and the wide code is only
+//!   entered after a runtime feature check.
+//!
+//! Dispatch is decided **once per process** at first use
+//! ([`Dispatch::active`]): `is_x86_feature_detected!("avx2"/"fma")`,
+//! overridable with the environment variable `DCF_PCA_FORCE_SCALAR`
+//! (any non-empty value other than `0`). The decision is cached in an
+//! atomic, so steady-state reads are one relaxed load — cheap enough to
+//! consult per banded closure, and allocation-free, which keeps the
+//! counting-allocator zero-allocation pins intact.
+//!
+//! Numerical contract, relied on by tests across the crate:
+//!
+//! - Kernels that only add/subtract/multiply-elementwise/divide/convert
+//!   (`sub`, `shrink*`, `div_inplace`, `abs_max_update`, `cvt_*`) are
+//!   **bitwise identical** to the scalar path for every input,
+//!   including ±0.0, denormals, NaN and ±∞ — the AVX2 shrink uses the
+//!   branch-free identity `shrink(x) = max(x−λ, 0) − max(−x−λ, 0)`,
+//!   whose `vmaxpd` NaN semantics (return the second operand when the
+//!   first is NaN) reproduce `shrink_scalar`'s NaN → +0.0 exactly.
+//! - Kernels that *reassociate a reduction or contract with FMA*
+//!   (`axpy`, `fma4`, `dot`, `dot4_acc`, `sum`, the gemm cores) agree
+//!   with scalar to 1e-12 relative and are individually deterministic:
+//!   within one dispatch choice, results are bitwise reproducible
+//!   run-to-run and across `--threads` (the slot/band decomposition
+//!   never changes, and the dispatch choice is process-global).
+//!
+//! The module also hosts the machine probes the roofline-tracked bench
+//! uses: an empirical peak-FMA throughput probe and a streaming-read
+//! bandwidth probe (see `benches/kernel_hotpath.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::ops::shrink_scalar;
+
+/// Which kernel family the process runs. Fixed per process after first
+/// use; every thread sees the same value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Portable scalar fallback (also the parity oracle).
+    Scalar,
+    /// AVX2 + FMA microkernels (x86-64 with both features detected).
+    Avx2,
+}
+
+/// 0 = undecided, 1 = scalar, 2 = avx2.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+impl Dispatch {
+    /// The process-wide dispatch choice (decided and cached on first
+    /// call — one relaxed atomic load afterwards, no allocation).
+    #[inline]
+    pub fn active() -> Dispatch {
+        match STATE.load(Ordering::Relaxed) {
+            1 => Dispatch::Scalar,
+            2 => Dispatch::Avx2,
+            _ => init_dispatch(),
+        }
+    }
+
+    /// What the CPU supports, ignoring the env override.
+    pub fn detected() -> Dispatch {
+        if avx2_supported() {
+            Dispatch::Avx2
+        } else {
+            Dispatch::Scalar
+        }
+    }
+
+    /// Short stable name for logs and the bench JSON header.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cold]
+fn init_dispatch() -> Dispatch {
+    let d = if forced_scalar() { Dispatch::Scalar } else { Dispatch::detected() };
+    STATE.store(code(d), Ordering::Relaxed);
+    d
+}
+
+fn code(d: Dispatch) -> u8 {
+    match d {
+        Dispatch::Scalar => 1,
+        Dispatch::Avx2 => 2,
+    }
+}
+
+/// Is the `DCF_PCA_FORCE_SCALAR` override set (non-empty, not `"0"`)?
+pub fn forced_scalar() -> bool {
+    match std::env::var_os("DCF_PCA_FORCE_SCALAR") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// Force the process-wide dispatch (diagnostics / single-threaded bench
+/// use only — flipping this while kernels run on other threads would
+/// break the fixed-dispatch determinism contract). Requests for
+/// [`Dispatch::Avx2`] on hosts without AVX2+FMA fall back to scalar.
+pub fn force(d: Dispatch) {
+    let d = match d {
+        Dispatch::Avx2 if !avx2_supported() => Dispatch::Scalar,
+        other => other,
+    };
+    STATE.store(code(d), Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+/// CPU features relevant to the kernel layer, as detected at runtime
+/// (recorded in the bench JSON header so cross-machine numbers are
+/// interpretable). Empty on non-x86-64 targets.
+#[cfg(target_arch = "x86_64")]
+pub fn detected_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    if std::arch::is_x86_feature_detected!("sse2") {
+        f.push("sse2");
+    }
+    if std::arch::is_x86_feature_detected!("sse4.2") {
+        f.push("sse4.2");
+    }
+    if std::arch::is_x86_feature_detected!("avx") {
+        f.push("avx");
+    }
+    if std::arch::is_x86_feature_detected!("avx2") {
+        f.push("avx2");
+    }
+    if std::arch::is_x86_feature_detected!("fma") {
+        f.push("fma");
+    }
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        f.push("avx512f");
+    }
+    f
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detected_features() -> Vec<&'static str> {
+    Vec::new()
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched slice primitives. `d` is threaded by callers that sit in a
+// hot loop (one `Dispatch::active()` per kernel invocation, not per row).
+// ---------------------------------------------------------------------------
+
+/// dst += a·x (FMA family, 1e-12 vs scalar).
+#[inline]
+pub fn axpy(d: Dispatch, dst: &mut [f64], a: f64, x: &[f64]) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::axpy(dst, a, x) },
+        _ => scalar::axpy(dst, a, x),
+    }
+}
+
+/// dst += c₀·x₀ + c₁·x₁ + c₂·x₂ + c₃·x₃ (FMA family).
+#[inline]
+pub fn fma4(
+    d: Dispatch,
+    dst: &mut [f64],
+    c: [f64; 4],
+    x0: &[f64],
+    x1: &[f64],
+    x2: &[f64],
+    x3: &[f64],
+) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::fma4(dst, c, x0, x1, x2, x3) },
+        _ => scalar::fma4(dst, c, x0, x1, x2, x3),
+    }
+}
+
+/// dst = a − b (bitwise family).
+#[inline]
+pub fn sub(d: Dispatch, dst: &mut [f64], a: &[f64], b: &[f64]) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::sub(dst, a, b) },
+        _ => scalar::sub(dst, a, b),
+    }
+}
+
+/// Σ xᵢ·yᵢ (FMA family).
+#[inline]
+pub fn dot(d: Dispatch, x: &[f64], y: &[f64]) -> f64 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::dot(x, y) },
+        _ => scalar::dot(x, y),
+    }
+}
+
+/// out[0..4] += (r·v₀, r·v₁, r·v₂, r·v₃) — four length-`r.len()` dot
+/// products sharing one pass over `r` (FMA family).
+#[inline]
+pub fn dot4_acc(
+    d: Dispatch,
+    out: &mut [f64],
+    r: &[f64],
+    v0: &[f64],
+    v1: &[f64],
+    v2: &[f64],
+    v3: &[f64],
+) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::dot4_acc(out, r, v0, v1, v2, v3) },
+        _ => scalar::dot4_acc(out, r, v0, v1, v2, v3),
+    }
+}
+
+/// Σ xᵢ (FMA family; used by the bandwidth probe).
+#[inline]
+pub fn sum(d: Dispatch, x: &[f64]) -> f64 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::sum(x) },
+        _ => scalar::sum(x),
+    }
+}
+
+/// dst = shrink_λ(src) (bitwise family).
+#[inline]
+pub fn shrink(d: Dispatch, dst: &mut [f64], src: &[f64], lambda: f64) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::shrink(dst, src, lambda) },
+        _ => scalar::shrink(dst, src, lambda),
+    }
+}
+
+/// dst = shrink_λ(dst) in place (bitwise family).
+#[inline]
+pub fn shrink_inplace(d: Dispatch, dst: &mut [f64], lambda: f64) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::shrink_inplace(dst, lambda) },
+        _ => scalar::shrink_inplace(dst, lambda),
+    }
+}
+
+/// dst = shrink_λ(a − b) (bitwise family — the fused Eq. 16 S-update).
+#[inline]
+pub fn shrink_sub(d: Dispatch, dst: &mut [f64], a: &[f64], b: &[f64], lambda: f64) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::shrink_sub(dst, a, b, lambda) },
+        _ => scalar::shrink_sub(dst, a, b, lambda),
+    }
+}
+
+/// dst = shrink_λ(m − l + y·inv_mu) (bitwise family — ALM's S-update;
+/// the multiply and add round separately, exactly like the scalar form).
+#[inline]
+pub fn shrink_dual(
+    d: Dispatch,
+    dst: &mut [f64],
+    m: &[f64],
+    l: &[f64],
+    y: &[f64],
+    inv_mu: f64,
+    lambda: f64,
+) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::shrink_dual(dst, m, l, y, inv_mu, lambda) },
+        _ => scalar::shrink_dual(dst, m, l, y, inv_mu, lambda),
+    }
+}
+
+/// dst /= divisor elementwise (bitwise family — `vdivpd` rounds like
+/// the scalar `/`).
+#[inline]
+pub fn div_inplace(d: Dispatch, dst: &mut [f64], divisor: f64) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::div_inplace(dst, divisor) },
+        _ => scalar::div_inplace(dst, divisor),
+    }
+}
+
+/// acc[j] = max(acc[j], |row[j]|) (bitwise family). NaNs in `row` are
+/// ignored exactly like `f64::max`; `acc` entries must not be NaN
+/// (upheld by the 0-initialized per-column scale accumulators).
+#[inline]
+pub fn abs_max_update(d: Dispatch, acc: &mut [f64], row: &[f64]) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::abs_max_update(acc, row) },
+        _ => scalar::abs_max_update(acc, row),
+    }
+}
+
+/// dst[i] = src[i] as f32 (bitwise family — `vcvtpd2ps` rounds to
+/// nearest-even like the `as` cast, saturating overflow to ±∞).
+#[inline]
+pub fn cvt_to_f32(d: Dispatch, dst: &mut [f32], src: &[f64]) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::cvt_to_f32(dst, src) },
+        _ => scalar::cvt_to_f32(dst, src),
+    }
+}
+
+/// dst[i] = src[i] as f64 (bitwise family — widening is exact).
+#[inline]
+pub fn cvt_to_f64(d: Dispatch, dst: &mut [f64], src: &[f32]) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::cvt_to_f64(dst, src) },
+        _ => scalar::cvt_to_f64(dst, src),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar fallback — loop-for-loop the code the call sites inlined before
+// this module existed (the parity oracle; keep it boring).
+// ---------------------------------------------------------------------------
+
+/// Portable scalar twins of every primitive (public so benches and the
+/// parity tests can pin the dispatched path against them directly).
+pub mod scalar {
+    use super::shrink_scalar;
+
+    #[inline]
+    pub fn axpy(dst: &mut [f64], a: f64, x: &[f64]) {
+        for (d, &v) in dst.iter_mut().zip(x) {
+            *d += a * v;
+        }
+    }
+
+    #[inline]
+    pub fn fma4(dst: &mut [f64], c: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64]) {
+        let n = dst.len();
+        debug_assert!(x0.len() >= n && x1.len() >= n && x2.len() >= n && x3.len() >= n);
+        for j in 0..n {
+            dst[j] += c[0] * x0[j] + c[1] * x1[j] + c[2] * x2[j] + c[3] * x3[j];
+        }
+    }
+
+    #[inline]
+    pub fn sub(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len();
+        debug_assert!(a.len() >= n && b.len() >= n);
+        for j in 0..n {
+            dst[j] = a[j] - b[j];
+        }
+    }
+
+    #[inline]
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (&a, &b) in x.iter().zip(y) {
+            s += a * b;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn dot4_acc(out: &mut [f64], r: &[f64], v0: &[f64], v1: &[f64], v2: &[f64], v3: &[f64]) {
+        let n = r.len();
+        debug_assert!(out.len() >= 4);
+        debug_assert!(v0.len() >= n && v1.len() >= n && v2.len() >= n && v3.len() >= n);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for jj in 0..n {
+            let rv = r[jj];
+            s0 += rv * v0[jj];
+            s1 += rv * v1[jj];
+            s2 += rv * v2[jj];
+            s3 += rv * v3[jj];
+        }
+        out[0] += s0;
+        out[1] += s1;
+        out[2] += s2;
+        out[3] += s3;
+    }
+
+    /// Four-chain sum (the `matvec_into` unroll applied to a plain sum).
+    #[inline]
+    pub fn sum(x: &[f64]) -> f64 {
+        let n = x.len();
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        let mut t = 0;
+        while t + 4 <= n {
+            s0 += x[t];
+            s1 += x[t + 1];
+            s2 += x[t + 2];
+            s3 += x[t + 3];
+            t += 4;
+        }
+        while t < n {
+            s0 += x[t];
+            t += 1;
+        }
+        (s0 + s1) + (s2 + s3)
+    }
+
+    #[inline]
+    pub fn shrink(dst: &mut [f64], src: &[f64], lambda: f64) {
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = shrink_scalar(x, lambda);
+        }
+    }
+
+    #[inline]
+    pub fn shrink_inplace(dst: &mut [f64], lambda: f64) {
+        for d in dst.iter_mut() {
+            *d = shrink_scalar(*d, lambda);
+        }
+    }
+
+    #[inline]
+    pub fn shrink_sub(dst: &mut [f64], a: &[f64], b: &[f64], lambda: f64) {
+        let n = dst.len();
+        debug_assert!(a.len() >= n && b.len() >= n);
+        for j in 0..n {
+            dst[j] = shrink_scalar(a[j] - b[j], lambda);
+        }
+    }
+
+    #[inline]
+    pub fn shrink_dual(dst: &mut [f64], m: &[f64], l: &[f64], y: &[f64], inv_mu: f64, lambda: f64) {
+        let n = dst.len();
+        debug_assert!(m.len() >= n && l.len() >= n && y.len() >= n);
+        for j in 0..n {
+            dst[j] = shrink_scalar(m[j] - l[j] + y[j] * inv_mu, lambda);
+        }
+    }
+
+    #[inline]
+    pub fn div_inplace(dst: &mut [f64], divisor: f64) {
+        for x in dst.iter_mut() {
+            *x /= divisor;
+        }
+    }
+
+    #[inline]
+    pub fn abs_max_update(acc: &mut [f64], row: &[f64]) {
+        for (s, &x) in acc.iter_mut().zip(row) {
+            *s = s.max(x.abs());
+        }
+    }
+
+    #[inline]
+    pub fn cvt_to_f32(dst: &mut [f32], src: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = x as f32;
+        }
+    }
+
+    #[inline]
+    pub fn cvt_to_f64(dst: &mut [f64], src: &[f32]) {
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = x as f64;
+        }
+    }
+
+    /// Eight independent scalar FMA-shaped chains (peak probe twin).
+    pub fn fma_chains(iters: u64) -> f64 {
+        let (x, y) = (0.999_999_9_f64, 1e-9_f64);
+        let mut a = [1.0, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.7];
+        for _ in 0..iters {
+            a[0] = a[0] * x + y;
+            a[1] = a[1] * x + y;
+            a[2] = a[2] * x + y;
+            a[3] = a[3] * x + y;
+            a[4] = a[4] * x + y;
+            a[5] = a[5] * x + y;
+            a[6] = a[6] * x + y;
+            a[7] = a[7] * x + y;
+        }
+        a.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels. Every fn is `unsafe` with
+// `#[target_feature(enable = "avx2", enable = "fma")]`: callers must
+// have verified support (the dispatch layer above is the only caller,
+// and it only selects Avx2 after `is_x86_feature_detected!`).
+// ---------------------------------------------------------------------------
+
+// Safety contract for every fn below is the module-level one (caller
+// must have verified avx2+fma), not per-fn `# Safety` sections.
+#[allow(clippy::missing_safety_doc)]
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::shrink_scalar;
+    use std::arch::x86_64::*;
+
+    const W: usize = 4; // f64 lanes per ymm register
+
+    /// Horizontal sum of one ymm register.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd(v, 1);
+        let s = _mm_add_pd(lo, hi);
+        let h = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, h))
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(dst: &mut [f64], a: f64, x: &[f64]) {
+        let n = dst.len();
+        debug_assert!(x.len() >= n);
+        let av = _mm256_set1_pd(a);
+        let dp = dst.as_mut_ptr();
+        let xp = x.as_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            let d = _mm256_loadu_pd(dp.add(j));
+            let v = _mm256_loadu_pd(xp.add(j));
+            _mm256_storeu_pd(dp.add(j), _mm256_fmadd_pd(av, v, d));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) += a * *xp.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fma4(
+        dst: &mut [f64],
+        c: [f64; 4],
+        x0: &[f64],
+        x1: &[f64],
+        x2: &[f64],
+        x3: &[f64],
+    ) {
+        let n = dst.len();
+        debug_assert!(x0.len() >= n && x1.len() >= n && x2.len() >= n && x3.len() >= n);
+        let c0 = _mm256_set1_pd(c[0]);
+        let c1 = _mm256_set1_pd(c[1]);
+        let c2 = _mm256_set1_pd(c[2]);
+        let c3 = _mm256_set1_pd(c[3]);
+        let dp = dst.as_mut_ptr();
+        let (p0, p1, p2, p3) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr());
+        let mut j = 0;
+        while j + W <= n {
+            let mut acc = _mm256_loadu_pd(dp.add(j));
+            acc = _mm256_fmadd_pd(c0, _mm256_loadu_pd(p0.add(j)), acc);
+            acc = _mm256_fmadd_pd(c1, _mm256_loadu_pd(p1.add(j)), acc);
+            acc = _mm256_fmadd_pd(c2, _mm256_loadu_pd(p2.add(j)), acc);
+            acc = _mm256_fmadd_pd(c3, _mm256_loadu_pd(p3.add(j)), acc);
+            _mm256_storeu_pd(dp.add(j), acc);
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) +=
+                c[0] * *p0.add(j) + c[1] * *p1.add(j) + c[2] * *p2.add(j) + c[3] * *p3.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sub(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len();
+        debug_assert!(a.len() >= n && b.len() >= n);
+        let dp = dst.as_mut_ptr();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut j = 0;
+        while j + W <= n {
+            let v = _mm256_sub_pd(_mm256_loadu_pd(ap.add(j)), _mm256_loadu_pd(bp.add(j)));
+            _mm256_storeu_pd(dp.add(j), v);
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = *ap.add(j) - *bp.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        debug_assert!(y.len() >= n);
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 * W <= n {
+            a0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(j)), _mm256_loadu_pd(yp.add(j)), a0);
+            a1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(xp.add(j + W)),
+                _mm256_loadu_pd(yp.add(j + W)),
+                a1,
+            );
+            a2 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(xp.add(j + 2 * W)),
+                _mm256_loadu_pd(yp.add(j + 2 * W)),
+                a2,
+            );
+            a3 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(xp.add(j + 3 * W)),
+                _mm256_loadu_pd(yp.add(j + 3 * W)),
+                a3,
+            );
+            j += 4 * W;
+        }
+        while j + W <= n {
+            a0 = _mm256_fmadd_pd(_mm256_loadu_pd(xp.add(j)), _mm256_loadu_pd(yp.add(j)), a0);
+            j += W;
+        }
+        let mut s = hsum(_mm256_add_pd(_mm256_add_pd(a0, a1), _mm256_add_pd(a2, a3)));
+        while j < n {
+            s += *xp.add(j) * *yp.add(j);
+            j += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot4_acc(
+        out: &mut [f64],
+        r: &[f64],
+        v0: &[f64],
+        v1: &[f64],
+        v2: &[f64],
+        v3: &[f64],
+    ) {
+        let n = r.len();
+        debug_assert!(out.len() >= 4);
+        debug_assert!(v0.len() >= n && v1.len() >= n && v2.len() >= n && v3.len() >= n);
+        let rp = r.as_ptr();
+        let (p0, p1, p2, p3) = (v0.as_ptr(), v1.as_ptr(), v2.as_ptr(), v3.as_ptr());
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + W <= n {
+            let rv = _mm256_loadu_pd(rp.add(j));
+            a0 = _mm256_fmadd_pd(rv, _mm256_loadu_pd(p0.add(j)), a0);
+            a1 = _mm256_fmadd_pd(rv, _mm256_loadu_pd(p1.add(j)), a1);
+            a2 = _mm256_fmadd_pd(rv, _mm256_loadu_pd(p2.add(j)), a2);
+            a3 = _mm256_fmadd_pd(rv, _mm256_loadu_pd(p3.add(j)), a3);
+            j += W;
+        }
+        // combine: hadd pairs, then cross the 128-bit lanes
+        let t0 = _mm256_hadd_pd(a0, a1); // [a0₀+a0₁, a1₀+a1₁, a0₂+a0₃, a1₂+a1₃]
+        let t1 = _mm256_hadd_pd(a2, a3);
+        let lo = _mm256_permute2f128_pd(t0, t1, 0x20);
+        let hi = _mm256_permute2f128_pd(t0, t1, 0x31);
+        let mut sums = [0.0f64; 4];
+        _mm256_storeu_pd(sums.as_mut_ptr(), _mm256_add_pd(lo, hi));
+        while j < n {
+            let rv = *rp.add(j);
+            sums[0] += rv * *p0.add(j);
+            sums[1] += rv * *p1.add(j);
+            sums[2] += rv * *p2.add(j);
+            sums[3] += rv * *p3.add(j);
+            j += 1;
+        }
+        out[0] += sums[0];
+        out[1] += sums[1];
+        out[2] += sums[2];
+        out[3] += sums[3];
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum(x: &[f64]) -> f64 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 * W <= n {
+            a0 = _mm256_add_pd(a0, _mm256_loadu_pd(xp.add(j)));
+            a1 = _mm256_add_pd(a1, _mm256_loadu_pd(xp.add(j + W)));
+            a2 = _mm256_add_pd(a2, _mm256_loadu_pd(xp.add(j + 2 * W)));
+            a3 = _mm256_add_pd(a3, _mm256_loadu_pd(xp.add(j + 3 * W)));
+            j += 4 * W;
+        }
+        while j + W <= n {
+            a0 = _mm256_add_pd(a0, _mm256_loadu_pd(xp.add(j)));
+            j += W;
+        }
+        let mut s = hsum(_mm256_add_pd(_mm256_add_pd(a0, a1), _mm256_add_pd(a2, a3)));
+        while j < n {
+            s += *xp.add(j);
+            j += 1;
+        }
+        s
+    }
+
+    /// Branch-free shrink of one vector: `max(x−λ, 0) − max(−x−λ, 0)`.
+    /// Bitwise identical to `shrink_scalar` for every input: the two
+    /// `vmaxpd` return the second operand (+0.0) when the first is NaN,
+    /// so NaN → +0.0 like the scalar's fall-through branch, and for
+    /// λ ≥ 0 at most one arm is nonzero, with `0 − ((−x) − λ) = x + λ`
+    /// exact by sign symmetry of round-to-nearest.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn shrink_v(x: __m256d, lam: __m256d, zero: __m256d) -> __m256d {
+        let pos = _mm256_max_pd(_mm256_sub_pd(x, lam), zero);
+        let neg = _mm256_max_pd(_mm256_sub_pd(_mm256_sub_pd(zero, x), lam), zero);
+        _mm256_sub_pd(pos, neg)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn shrink(dst: &mut [f64], src: &[f64], lambda: f64) {
+        let n = dst.len();
+        debug_assert!(src.len() >= n);
+        let lam = _mm256_set1_pd(lambda);
+        let zero = _mm256_setzero_pd();
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            _mm256_storeu_pd(dp.add(j), shrink_v(_mm256_loadu_pd(sp.add(j)), lam, zero));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = shrink_scalar(*sp.add(j), lambda);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn shrink_inplace(dst: &mut [f64], lambda: f64) {
+        let n = dst.len();
+        let lam = _mm256_set1_pd(lambda);
+        let zero = _mm256_setzero_pd();
+        let dp = dst.as_mut_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            _mm256_storeu_pd(dp.add(j), shrink_v(_mm256_loadu_pd(dp.add(j)), lam, zero));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = shrink_scalar(*dp.add(j), lambda);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn shrink_sub(dst: &mut [f64], a: &[f64], b: &[f64], lambda: f64) {
+        let n = dst.len();
+        debug_assert!(a.len() >= n && b.len() >= n);
+        let lam = _mm256_set1_pd(lambda);
+        let zero = _mm256_setzero_pd();
+        let dp = dst.as_mut_ptr();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut j = 0;
+        while j + W <= n {
+            let x = _mm256_sub_pd(_mm256_loadu_pd(ap.add(j)), _mm256_loadu_pd(bp.add(j)));
+            _mm256_storeu_pd(dp.add(j), shrink_v(x, lam, zero));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = shrink_scalar(*ap.add(j) - *bp.add(j), lambda);
+            j += 1;
+        }
+    }
+
+    /// NB: mul then add (no FMA) so the rounding matches the scalar
+    /// `m − l + y·inv_mu` exactly — this kernel is in the bitwise family.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn shrink_dual(
+        dst: &mut [f64],
+        m: &[f64],
+        l: &[f64],
+        y: &[f64],
+        inv_mu: f64,
+        lambda: f64,
+    ) {
+        let n = dst.len();
+        debug_assert!(m.len() >= n && l.len() >= n && y.len() >= n);
+        let lam = _mm256_set1_pd(lambda);
+        let zero = _mm256_setzero_pd();
+        let imu = _mm256_set1_pd(inv_mu);
+        let dp = dst.as_mut_ptr();
+        let (mp, lp, yp) = (m.as_ptr(), l.as_ptr(), y.as_ptr());
+        let mut j = 0;
+        while j + W <= n {
+            let ml = _mm256_sub_pd(_mm256_loadu_pd(mp.add(j)), _mm256_loadu_pd(lp.add(j)));
+            let yi = _mm256_mul_pd(_mm256_loadu_pd(yp.add(j)), imu);
+            _mm256_storeu_pd(dp.add(j), shrink_v(_mm256_add_pd(ml, yi), lam, zero));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = shrink_scalar(*mp.add(j) - *lp.add(j) + *yp.add(j) * inv_mu, lambda);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn div_inplace(dst: &mut [f64], divisor: f64) {
+        let n = dst.len();
+        let dv = _mm256_set1_pd(divisor);
+        let dp = dst.as_mut_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            _mm256_storeu_pd(dp.add(j), _mm256_div_pd(_mm256_loadu_pd(dp.add(j)), dv));
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) /= divisor;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn abs_max_update(acc: &mut [f64], row: &[f64]) {
+        let n = acc.len().min(row.len());
+        let sign = _mm256_set1_pd(-0.0);
+        let ap = acc.as_mut_ptr();
+        let rp = row.as_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            let x = _mm256_andnot_pd(sign, _mm256_loadu_pd(rp.add(j)));
+            // operand order matters: maxpd returns the second operand
+            // when the first is NaN, matching f64::max's NaN-ignoring
+            let m = _mm256_max_pd(x, _mm256_loadu_pd(ap.add(j)));
+            _mm256_storeu_pd(ap.add(j), m);
+            j += W;
+        }
+        while j < n {
+            let s = *ap.add(j);
+            *ap.add(j) = s.max((*rp.add(j)).abs());
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cvt_to_f32(dst: &mut [f32], src: &[f64]) {
+        let n = dst.len();
+        debug_assert!(src.len() >= n);
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            let v = _mm256_cvtpd_ps(_mm256_loadu_pd(sp.add(j)));
+            _mm_storeu_ps(dp.add(j), v);
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = *sp.add(j) as f32;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cvt_to_f64(dst: &mut [f64], src: &[f32]) {
+        let n = dst.len();
+        debug_assert!(src.len() >= n);
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut j = 0;
+        while j + W <= n {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(sp.add(j)));
+            _mm256_storeu_pd(dp.add(j), v);
+            j += W;
+        }
+        while j < n {
+            *dp.add(j) = *sp.add(j) as f64;
+            j += 1;
+        }
+    }
+
+    // -- whole-kernel gemm cores (slice + dims form of the gemm.rs
+    //    entry points; the wrappers there do the asserts / β prologue) --
+
+    /// C += α·A·B over row-major slices, MC×KC blocked exactly like the
+    /// scalar kernel, j vectorized 4-wide with 4 FMAs per C load/store.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_acc_core(
+        cd: &mut [f64],
+        ad: &[f64],
+        bd: &[f64],
+        m: usize,
+        k_dim: usize,
+        n: usize,
+        alpha: f64,
+    ) {
+        use crate::linalg::gemm::{KC, MC};
+        for ib in (0..m).step_by(MC) {
+            let iend = (ib + MC).min(m);
+            for kb in (0..k_dim).step_by(KC) {
+                let kend = (kb + KC).min(k_dim);
+                for i in ib..iend {
+                    let arow = &ad[i * k_dim..(i + 1) * k_dim];
+                    let crow = &mut cd[i * n..(i + 1) * n];
+                    let mut k = kb;
+                    while k + 4 <= kend {
+                        let c = [
+                            alpha * arow[k],
+                            alpha * arow[k + 1],
+                            alpha * arow[k + 2],
+                            alpha * arow[k + 3],
+                        ];
+                        fma4(
+                            crow,
+                            c,
+                            &bd[k * n..(k + 1) * n],
+                            &bd[(k + 1) * n..(k + 2) * n],
+                            &bd[(k + 2) * n..(k + 3) * n],
+                            &bd[(k + 3) * n..(k + 4) * n],
+                        );
+                        k += 4;
+                    }
+                    while k < kend {
+                        axpy(crow, alpha * arow[k], &bd[k * n..(k + 1) * n]);
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// C = AᵀB over slices: A is k_dim×m, B is k_dim×n, C is m×n
+    /// (overwritten). Shared by `matmul_tn_into` and — with A = B —
+    /// `gram_into` (the full p×p product is symmetric by construction).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_tn_core(
+        cd: &mut [f64],
+        ad: &[f64],
+        bd: &[f64],
+        k_dim: usize,
+        m: usize,
+        n: usize,
+    ) {
+        cd.fill(0.0);
+        let mut k = 0;
+        while k + 4 <= k_dim {
+            let a0 = &ad[k * m..(k + 1) * m];
+            let a1 = &ad[(k + 1) * m..(k + 2) * m];
+            let a2 = &ad[(k + 2) * m..(k + 3) * m];
+            let a3 = &ad[(k + 3) * m..(k + 4) * m];
+            let b0 = &bd[k * n..(k + 1) * n];
+            let b1 = &bd[(k + 1) * n..(k + 2) * n];
+            let b2 = &bd[(k + 2) * n..(k + 3) * n];
+            let b3 = &bd[(k + 3) * n..(k + 4) * n];
+            for i in 0..m {
+                let c = [a0[i], a1[i], a2[i], a3[i]];
+                fma4(&mut cd[i * n..(i + 1) * n], c, b0, b1, b2, b3);
+            }
+            k += 4;
+        }
+        while k < k_dim {
+            let ar = &ad[k * m..(k + 1) * m];
+            let br = &bd[k * n..(k + 1) * n];
+            for i in 0..m {
+                axpy(&mut cd[i * n..(i + 1) * n], ar[i], br);
+            }
+            k += 1;
+        }
+    }
+
+    /// Short-k (≤ NT_KMAX) C = A·Bᵀ panels: Bᵀ is staged 32 columns at a
+    /// time into a stack tile so the row kernel runs 8 broadcast-FMA
+    /// streams over contiguous memory — the U·Vᵀ shape (k = p small).
+    const NT_KMAX: usize = 64;
+    const NT_JB: usize = 32;
+
+    /// C = A·Bᵀ over slices: A m×k_dim, B n×k_dim, C m×n (overwritten).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_nt_core(
+        cd: &mut [f64],
+        ad: &[f64],
+        bd: &[f64],
+        m: usize,
+        k_dim: usize,
+        n: usize,
+    ) {
+        if k_dim == 0 {
+            cd.fill(0.0);
+            return;
+        }
+        if k_dim > NT_KMAX {
+            // long shared dim: vectorized dot per output element
+            for i in 0..m {
+                let ar = &ad[i * k_dim..(i + 1) * k_dim];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = dot(ar, &bd[j * k_dim..(j + 1) * k_dim]);
+                }
+            }
+            return;
+        }
+        let mut bt = [0.0f64; NT_KMAX * NT_JB];
+        let mut jb = 0;
+        while jb < n {
+            let jw = (n - jb).min(NT_JB);
+            if jw == NT_JB {
+                for jj in 0..NT_JB {
+                    let brow = &bd[(jb + jj) * k_dim..(jb + jj + 1) * k_dim];
+                    for (q, &x) in brow.iter().enumerate() {
+                        bt[q * NT_JB + jj] = x;
+                    }
+                }
+                for i in 0..m {
+                    let ar = &ad[i * k_dim..(i + 1) * k_dim];
+                    nt_row32(&mut cd[i * n + jb..i * n + jb + NT_JB], ar, &bt);
+                }
+            } else {
+                // ragged tail panel: vectorized dots
+                for i in 0..m {
+                    let ar = &ad[i * k_dim..(i + 1) * k_dim];
+                    let crow = &mut cd[i * n..(i + 1) * n];
+                    for jj in 0..jw {
+                        crow[jb + jj] = dot(ar, &bd[(jb + jj) * k_dim..(jb + jj + 1) * k_dim]);
+                    }
+                }
+            }
+            jb += jw;
+        }
+    }
+
+    /// One A-row against a staged 32-column Bᵀ tile: 8 named ymm
+    /// accumulators (32 outputs in flight), one broadcast-FMA sweep
+    /// over the shared dimension.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn nt_row32(dst: &mut [f64], ar: &[f64], bt: &[f64; NT_KMAX * NT_JB]) {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut acc2 = _mm256_setzero_pd();
+        let mut acc3 = _mm256_setzero_pd();
+        let mut acc4 = _mm256_setzero_pd();
+        let mut acc5 = _mm256_setzero_pd();
+        let mut acc6 = _mm256_setzero_pd();
+        let mut acc7 = _mm256_setzero_pd();
+        let bp = bt.as_ptr();
+        for (q, &a) in ar.iter().enumerate() {
+            let av = _mm256_set1_pd(a);
+            let base = bp.add(q * NT_JB);
+            acc0 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base), acc0);
+            acc1 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(4)), acc1);
+            acc2 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(8)), acc2);
+            acc3 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(12)), acc3);
+            acc4 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(16)), acc4);
+            acc5 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(20)), acc5);
+            acc6 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(24)), acc6);
+            acc7 = _mm256_fmadd_pd(av, _mm256_loadu_pd(base.add(28)), acc7);
+        }
+        let dp = dst.as_mut_ptr();
+        _mm256_storeu_pd(dp, acc0);
+        _mm256_storeu_pd(dp.add(4), acc1);
+        _mm256_storeu_pd(dp.add(8), acc2);
+        _mm256_storeu_pd(dp.add(12), acc3);
+        _mm256_storeu_pd(dp.add(16), acc4);
+        _mm256_storeu_pd(dp.add(20), acc5);
+        _mm256_storeu_pd(dp.add(24), acc6);
+        _mm256_storeu_pd(dp.add(28), acc7);
+    }
+
+    /// y = A·x over slices (A is y.len()×x.len(), row-major).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matvec_core(y: &mut [f64], ad: &[f64], x: &[f64]) {
+        let k_dim = x.len();
+        for (i, yv) in y.iter_mut().enumerate() {
+            *yv = dot(&ad[i * k_dim..(i + 1) * k_dim], x);
+        }
+    }
+
+    /// Eight independent 4-lane FMA chains (peak probe): 64 flops/iter.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fma_chains(iters: u64) -> f64 {
+        let x = _mm256_set1_pd(0.999_999_9);
+        let y = _mm256_set1_pd(1e-9);
+        let mut a0 = _mm256_set1_pd(1.0);
+        let mut a1 = _mm256_set1_pd(1.1);
+        let mut a2 = _mm256_set1_pd(1.2);
+        let mut a3 = _mm256_set1_pd(1.3);
+        let mut a4 = _mm256_set1_pd(1.4);
+        let mut a5 = _mm256_set1_pd(1.5);
+        let mut a6 = _mm256_set1_pd(1.6);
+        let mut a7 = _mm256_set1_pd(1.7);
+        for _ in 0..iters {
+            a0 = _mm256_fmadd_pd(a0, x, y);
+            a1 = _mm256_fmadd_pd(a1, x, y);
+            a2 = _mm256_fmadd_pd(a2, x, y);
+            a3 = _mm256_fmadd_pd(a3, x, y);
+            a4 = _mm256_fmadd_pd(a4, x, y);
+            a5 = _mm256_fmadd_pd(a5, x, y);
+            a6 = _mm256_fmadd_pd(a6, x, y);
+            a7 = _mm256_fmadd_pd(a7, x, y);
+        }
+        let s01 = _mm256_add_pd(a0, a1);
+        let s23 = _mm256_add_pd(a2, a3);
+        let s45 = _mm256_add_pd(a4, a5);
+        let s67 = _mm256_add_pd(a6, a7);
+        hsum(_mm256_add_pd(_mm256_add_pd(s01, s23), _mm256_add_pd(s45, s67)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Machine probes for the roofline-tracked bench.
+// ---------------------------------------------------------------------------
+
+/// Flops one `fma_chains` iteration performs under the active dispatch.
+fn fma_flops_per_iter(d: Dispatch) -> f64 {
+    match d {
+        Dispatch::Avx2 => 64.0, // 8 chains × 4 lanes × (mul+add)
+        Dispatch::Scalar => 16.0,
+    }
+}
+
+fn run_fma_chains(d: Dispatch, iters: u64) -> f64 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { avx2::fma_chains(iters) },
+        _ => scalar::fma_chains(iters),
+    }
+}
+
+/// Empirical peak FMA throughput (GFLOP/s, single core) of the *active*
+/// dispatch: register-only dependent-chain FMA loop, calibrated until
+/// it runs ≥ 80 ms. Under forced scalar this measures the scalar
+/// machine peak, so roofline fractions stay comparable within an arm.
+pub fn probe_peak_fma_gflops() -> f64 {
+    let d = Dispatch::active();
+    let target = std::time::Duration::from_millis(80);
+    let mut iters: u64 = 1 << 14;
+    loop {
+        let start = std::time::Instant::now();
+        let sink = run_fma_chains(d, iters);
+        let dt = start.elapsed();
+        std::hint::black_box(sink);
+        if dt >= target || iters >= 1 << 30 {
+            return iters as f64 * fma_flops_per_iter(d) / dt.as_secs_f64() / 1e9;
+        }
+        iters *= 4;
+    }
+}
+
+/// Streaming read bandwidth (GB/s, single core): best-of-4 sum over a
+/// 64 MiB buffer (far beyond L2, typically beyond L3 too). The first
+/// pass doubles as page-in warm-up.
+pub fn probe_stream_gb_per_s() -> f64 {
+    const LEN: usize = 8 << 20; // 8 Mi f64 = 64 MiB
+    let d = Dispatch::active();
+    let buf = vec![1.0e-3f64; LEN];
+    let mut best = 0.0f64;
+    let mut sink = 0.0f64;
+    for _ in 0..4 {
+        let start = std::time::Instant::now();
+        sink += sum(d, &buf);
+        let dt = start.elapsed().as_secs_f64().max(1e-9);
+        best = best.max((LEN * 8) as f64 / dt / 1e9);
+    }
+    std::hint::black_box(sink);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adversarial value pool: ±0, denormals, huge/tiny, NaN, ±∞.
+    const POOL: [f64; 16] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.5,
+        1e-300,
+        -1e-300,
+        5e-324,
+        -5e-324,
+        1e6,
+        -1e6,
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.1,
+        -0.7,
+        3.25,
+    ];
+
+    /// Finite-only pool (for FMA-family kernels, where a lone ∞ is fine
+    /// but mixed-sign ∞ sums would be association-dependent).
+    const FINITE: [f64; 12] = [
+        0.0, -0.0, 1.0, -1.5, 1e-300, -1e-300, 5e-324, -5e-324, 1e6, -1e6, 0.1, -0.7,
+    ];
+
+    fn adversarial(pool: &[f64], len: usize, salt: usize) -> Vec<f64> {
+        (0..len).map(|i| pool[(i * 7 + salt * 3 + 1) % pool.len()]).collect()
+    }
+
+    fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let same = x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan());
+            assert!(same, "{what}[{i}]: {x:e} ({:#x}) vs {y:e} ({:#x})", x.to_bits(), y.to_bits());
+        }
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.is_nan() && y.is_nan() {
+                continue;
+            }
+            if x == y {
+                continue; // covers equal infinities and ±0 cross-matches
+            }
+            let denom = x.abs().max(y.abs()).max(1.0);
+            assert!(
+                (x - y).abs() / denom < tol,
+                "{what}[{i}]: {x:e} vs {y:e} (rel {})",
+                (x - y).abs() / denom
+            );
+        }
+    }
+
+    const LENS: [usize; 13] = [1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 31, 32, 33];
+
+    #[test]
+    fn dispatch_is_cached_and_consistent() {
+        let d1 = Dispatch::active();
+        let d2 = Dispatch::active();
+        assert_eq!(d1, d2);
+        if forced_scalar() {
+            assert_eq!(d1, Dispatch::Scalar, "DCF_PCA_FORCE_SCALAR must win");
+        }
+        assert!(!d1.name().is_empty());
+    }
+
+    #[test]
+    fn scalar_shrink_matches_shrink_scalar() {
+        for len in LENS {
+            for salt in 0..3 {
+                let src = adversarial(&POOL, len, salt);
+                let mut dst = vec![f64::NAN; len];
+                scalar::shrink(&mut dst, &src, 0.3);
+                let expect: Vec<f64> = src.iter().map(|&x| shrink_scalar(x, 0.3)).collect();
+                assert_bits_eq(&dst, &expect, "scalar::shrink");
+            }
+        }
+    }
+
+    #[test]
+    fn probes_return_positive_rates() {
+        // smoke: the probes must return sane positive numbers (they are
+        // recorded in every bench JSON header)
+        assert!(probe_peak_fma_gflops() > 0.0);
+        assert!(probe_stream_gb_per_s() > 0.0);
+    }
+
+    // ---- direct scalar-vs-AVX2 pins (run only where AVX2+FMA exists;
+    //      the forced-scalar CI job exercises the other arm) ----
+    #[cfg(target_arch = "x86_64")]
+    mod avx2_parity {
+        use super::*;
+
+        fn supported() -> bool {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+
+        #[test]
+        fn bitwise_family_matches_scalar_on_adversarial_inputs() {
+            if !supported() {
+                return;
+            }
+            for len in LENS {
+                for salt in 0..4 {
+                    let a = adversarial(&POOL, len, salt);
+                    let b = adversarial(&POOL, len, salt + 5);
+                    let lambda = [0.0, 0.3, 1e-300, 1e300][salt % 4];
+
+                    let mut d_s = vec![f64::NAN; len];
+                    let mut d_v = vec![f64::NAN; len];
+
+                    scalar::shrink(&mut d_s, &a, lambda);
+                    unsafe { avx2::shrink(&mut d_v, &a, lambda) };
+                    assert_bits_eq(&d_v, &d_s, "shrink");
+
+                    let mut i_s = a.clone();
+                    let mut i_v = a.clone();
+                    scalar::shrink_inplace(&mut i_s, lambda);
+                    unsafe { avx2::shrink_inplace(&mut i_v, lambda) };
+                    assert_bits_eq(&i_v, &i_s, "shrink_inplace");
+
+                    scalar::shrink_sub(&mut d_s, &a, &b, lambda);
+                    unsafe { avx2::shrink_sub(&mut d_v, &a, &b, lambda) };
+                    assert_bits_eq(&d_v, &d_s, "shrink_sub");
+
+                    let y = adversarial(&POOL, len, salt + 9);
+                    scalar::shrink_dual(&mut d_s, &a, &b, &y, 0.37, lambda);
+                    unsafe { avx2::shrink_dual(&mut d_v, &a, &b, &y, 0.37, lambda) };
+                    assert_bits_eq(&d_v, &d_s, "shrink_dual");
+
+                    scalar::sub(&mut d_s, &a, &b);
+                    unsafe { avx2::sub(&mut d_v, &a, &b) };
+                    assert_bits_eq(&d_v, &d_s, "sub");
+
+                    let mut q_s = a.clone();
+                    let mut q_v = a.clone();
+                    scalar::div_inplace(&mut q_s, 3.7);
+                    unsafe { avx2::div_inplace(&mut q_v, 3.7) };
+                    assert_bits_eq(&q_v, &q_s, "div_inplace");
+
+                    // abs_max: NaN-free accumulator (contract), NaNs in rows
+                    let mut m_s = adversarial(&FINITE, len, salt)
+                        .iter()
+                        .map(|x| x.abs())
+                        .collect::<Vec<_>>();
+                    let mut m_v = m_s.clone();
+                    scalar::abs_max_update(&mut m_s, &a);
+                    unsafe { avx2::abs_max_update(&mut m_v, &a) };
+                    assert_bits_eq(&m_v, &m_s, "abs_max_update");
+
+                    // f64 → f32 → f64 conversions
+                    let mut f_s = vec![0.0f32; len];
+                    let mut f_v = vec![0.0f32; len];
+                    scalar::cvt_to_f32(&mut f_s, &a);
+                    unsafe { avx2::cvt_to_f32(&mut f_v, &a) };
+                    for (i, (x, y)) in f_s.iter().zip(&f_v).enumerate() {
+                        assert!(
+                            x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+                            "cvt_to_f32[{i}]: {x:e} vs {y:e}"
+                        );
+                    }
+                    let mut g_s = vec![0.0f64; len];
+                    let mut g_v = vec![0.0f64; len];
+                    scalar::cvt_to_f64(&mut g_s, &f_s);
+                    unsafe { avx2::cvt_to_f64(&mut g_v, &f_s) };
+                    assert_bits_eq(&g_v, &g_s, "cvt_to_f64");
+                }
+            }
+        }
+
+        #[test]
+        fn fma_family_matches_scalar_to_1e12() {
+            if !supported() {
+                return;
+            }
+            for len in LENS {
+                for salt in 0..4 {
+                    let a = adversarial(&FINITE, len, salt);
+                    let b = adversarial(&FINITE, len, salt + 5);
+                    let v0 = adversarial(&FINITE, len, salt + 1);
+                    let v1 = adversarial(&FINITE, len, salt + 2);
+                    let v2 = adversarial(&FINITE, len, salt + 3);
+                    let v3 = adversarial(&FINITE, len, salt + 4);
+
+                    let mut d_s = b.clone();
+                    let mut d_v = b.clone();
+                    scalar::axpy(&mut d_s, 1.75, &a);
+                    unsafe { avx2::axpy(&mut d_v, 1.75, &a) };
+                    assert_close(&d_v, &d_s, 1e-12, "axpy");
+
+                    let mut d_s = b.clone();
+                    let mut d_v = b.clone();
+                    let c = [0.5, -1.25, 2.0, 0.1];
+                    scalar::fma4(&mut d_s, c, &v0, &v1, &v2, &v3);
+                    unsafe { avx2::fma4(&mut d_v, c, &v0, &v1, &v2, &v3) };
+                    assert_close(&d_v, &d_s, 1e-12, "fma4");
+
+                    let s_s = scalar::dot(&a, &b);
+                    let s_v = unsafe { avx2::dot(&a, &b) };
+                    assert_close(&[s_v], &[s_s], 1e-12, "dot");
+
+                    let t_s = scalar::sum(&a);
+                    let t_v = unsafe { avx2::sum(&a) };
+                    assert_close(&[t_v], &[t_s], 1e-12, "sum");
+
+                    let mut o_s = [0.25, -0.5, 1.0, 2.0];
+                    let mut o_v = o_s;
+                    scalar::dot4_acc(&mut o_s, &a, &v0, &v1, &v2, &v3);
+                    unsafe { avx2::dot4_acc(&mut o_v, &a, &v0, &v1, &v2, &v3) };
+                    assert_close(&o_v, &o_s, 1e-12, "dot4_acc");
+                }
+            }
+        }
+
+        #[test]
+        fn single_nan_poisons_both_paths_identically() {
+            if !supported() {
+                return;
+            }
+            // a lone NaN (or ∞) in the stream must surface in the same
+            // outputs regardless of vector reassociation
+            for len in [5usize, 16, 33] {
+                for special in [f64::NAN, f64::INFINITY] {
+                    let mut a = adversarial(&FINITE, len, 1);
+                    a[len / 2] = special;
+                    let b = adversarial(&FINITE, len, 2);
+                    let s_s = scalar::dot(&a, &b);
+                    let s_v = unsafe { avx2::dot(&a, &b) };
+                    assert_eq!(
+                        s_s.is_nan(),
+                        s_v.is_nan(),
+                        "dot NaN-pattern: {s_s} vs {s_v} ({special})"
+                    );
+                    if !s_s.is_nan() {
+                        assert_close(&[s_v], &[s_s], 1e-12, "dot with special");
+                    }
+                }
+            }
+        }
+    }
+}

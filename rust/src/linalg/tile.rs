@@ -22,6 +22,10 @@
 //! per-slot accumulators are reduced in slot order, so every result is
 //! bitwise identical for `--threads 1`, `2`, `4`, … The multi-pass path
 //! survives only as the parity oracle (`algorithms::factor::oracle`).
+//! Inner loops run through the runtime-dispatched primitives of
+//! [`crate::linalg::simd`]; the dispatch choice is sampled once per
+//! context, so every panel of a sweep uses the same kernels and the
+//! cross-thread bitwise guarantee holds within a dispatch arm.
 //!
 //! Safety: [`PanelCtx`] carries raw pointers into V and S so that
 //! concurrently running panels can write disjoint regions of the same
@@ -31,7 +35,7 @@
 //! references to panel-local ranges.
 
 use super::matrix::Mat;
-use super::ops::shrink_scalar;
+use super::simd::{self, Dispatch};
 use super::workspace::PanelScratch;
 
 /// Fixed number of dispatch slots (and per-workspace scratch lanes) —
@@ -102,25 +106,23 @@ impl<'a> PanelView<'a> {
 /// sweep's shrink, the polish's residual, and the gradient's r-row all
 /// share this kernel, so a tuning change lands in every pass at once.
 #[inline]
-fn accum_uvt_row(dst: &mut [f64], urow: &[f64], vt: &[f64], w: usize, p: usize) {
+fn accum_uvt_row(d: Dispatch, dst: &mut [f64], urow: &[f64], vt: &[f64], w: usize, p: usize) {
     let mut q = 0;
     while q + 4 <= p {
-        let (a0, a1, a2, a3) = (urow[q], urow[q + 1], urow[q + 2], urow[q + 3]);
-        let v0 = &vt[q * w..(q + 1) * w];
-        let v1 = &vt[(q + 1) * w..(q + 2) * w];
-        let v2 = &vt[(q + 2) * w..(q + 3) * w];
-        let v3 = &vt[(q + 3) * w..(q + 4) * w];
-        for jj in 0..w {
-            dst[jj] += a0 * v0[jj] + a1 * v1[jj] + a2 * v2[jj] + a3 * v3[jj];
-        }
+        let c = [urow[q], urow[q + 1], urow[q + 2], urow[q + 3]];
+        simd::fma4(
+            d,
+            dst,
+            c,
+            &vt[q * w..(q + 1) * w],
+            &vt[(q + 1) * w..(q + 2) * w],
+            &vt[(q + 2) * w..(q + 3) * w],
+            &vt[(q + 3) * w..(q + 4) * w],
+        );
         q += 4;
     }
     while q < p {
-        let a = urow[q];
-        let vq = &vt[q * w..(q + 1) * w];
-        for jj in 0..w {
-            dst[jj] += a * vq[jj];
-        }
+        simd::axpy(d, dst, urow[q], &vt[q * w..(q + 1) * w]);
         q += 1;
     }
 }
@@ -141,6 +143,9 @@ pub struct PanelCtx<'a> {
     n_i: usize,
     p: usize,
     w: usize,
+    /// Kernel dispatch, sampled once at construction so every panel of a
+    /// sweep (on any thread) runs the same code path.
+    d: Dispatch,
 }
 
 // SAFETY: all &-fields are Sync; the raw pointers are only written
@@ -182,6 +187,7 @@ impl<'a> PanelCtx<'a> {
             n_i,
             p,
             w,
+            d: Dispatch::active(),
         }
     }
 
@@ -227,10 +233,7 @@ impl<'a> PanelCtx<'a> {
                 // concurrent writer touches them (panel-disjoint).
                 let srow =
                     unsafe { std::slice::from_raw_parts(self.s.add(row * n_i + j0), w) };
-                let dst = &mut t[r * w..(r + 1) * w];
-                for jj in 0..w {
-                    dst[jj] = mrow[jj] - srow[jj];
-                }
+                simd::sub(self.d, &mut t[r * w..(r + 1) * w], mrow, srow);
             }
             let (t0, rest) = t.split_at(w);
             let (t1, rest) = rest.split_at(w);
@@ -240,11 +243,8 @@ impl<'a> PanelCtx<'a> {
             let u2 = &ud[(i + 2) * p..(i + 3) * p];
             let u3 = &ud[(i + 3) * p..(i + 4) * p];
             for q in 0..p {
-                let (a0, a1, a2, a3) = (u0[q], u1[q], u2[q], u3[q]);
-                let dst = &mut rhs[q * w..(q + 1) * w];
-                for jj in 0..w {
-                    dst[jj] += a0 * t0[jj] + a1 * t1[jj] + a2 * t2[jj] + a3 * t3[jj];
-                }
+                let c = [u0[q], u1[q], u2[q], u3[q]];
+                simd::fma4(self.d, &mut rhs[q * w..(q + 1) * w], c, t0, t1, t2, t3);
             }
             i += 4;
         }
@@ -252,22 +252,16 @@ impl<'a> PanelCtx<'a> {
             let mrow = mp.row(i, w);
             let srow = unsafe { std::slice::from_raw_parts(self.s.add(i * n_i + j0), w) };
             let t = &mut scratch.rows[..w];
-            for jj in 0..w {
-                t[jj] = mrow[jj] - srow[jj];
-            }
+            simd::sub(self.d, t, mrow, srow);
             let urow = &ud[i * p..(i + 1) * p];
             for q in 0..p {
-                let a = urow[q];
-                let dst = &mut rhs[q * w..(q + 1) * w];
-                for jj in 0..w {
-                    dst[jj] += a * t[jj];
-                }
+                simd::axpy(self.d, &mut rhs[q * w..(q + 1) * w], urow[q], t);
             }
             i += 1;
         }
 
         // Ridge solve in place: rhs becomes the panel of Vᵀ.
-        solve_panel_in_place(self.chol, rhs, w);
+        solve_panel_in_place(self.chol, rhs, w, self.d);
 
         // Write the panel's V rows (disjoint across panels).
         // SAFETY: rows j0..j1 of V belong to this panel alone.
@@ -284,16 +278,14 @@ impl<'a> PanelCtx<'a> {
         let vt = &scratch.a[..p * w]; // now holds Vᵀ panel
         for i in 0..self.m {
             let urow = &ud[i * p..(i + 1) * p];
-            let d = &mut scratch.rows[..w];
-            d.fill(0.0);
-            accum_uvt_row(d, urow, vt, w, p);
+            let dbuf = &mut scratch.rows[..w];
+            dbuf.fill(0.0);
+            accum_uvt_row(self.d, dbuf, urow, vt, w, p);
             let mrow = mp.row(i, w);
             // SAFETY: this panel's S columns, written by this thread only.
             let srow =
                 unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
-            for jj in 0..w {
-                srow[jj] = shrink_scalar(mrow[jj] - d[jj], self.lambda);
-            }
+            simd::shrink_sub(self.d, srow, mrow, dbuf, self.lambda);
         }
     }
 
@@ -329,12 +321,13 @@ impl<'a> PanelCtx<'a> {
             // d ← (U·Vᵀ_old) row segment
             let d = &mut scratch.rows[..w];
             d.fill(0.0);
-            accum_uvt_row(d, urow, vt_old, w, p);
+            accum_uvt_row(self.d, d, urow, vt_old, w, p);
             let mrow = mp.row(i, w);
             // SAFETY: this panel's S columns, this thread only.
             let srow =
                 unsafe { std::slice::from_raw_parts_mut(self.s.add(i * n_i + j0), w) };
             // hard threshold + (M − S_new) staged for the RHS in one pass
+            // (data-dependent branches: deliberately left scalar)
             let t = d; // reuse: after this loop t holds M − S_new
             for jj in 0..w {
                 let r = mrow[jj] - t[jj];
@@ -348,15 +341,11 @@ impl<'a> PanelCtx<'a> {
             }
             let trow = &scratch.rows[..w];
             for q in 0..p {
-                let a = urow[q];
-                let dst = &mut rhs[q * w..(q + 1) * w];
-                for jj in 0..w {
-                    dst[jj] += a * trow[jj];
-                }
+                simd::axpy(self.d, &mut rhs[q * w..(q + 1) * w], urow[q], trow);
             }
         }
 
-        solve_panel_in_place(self.chol, rhs, w);
+        solve_panel_in_place(self.chol, rhs, w, self.d);
         // SAFETY: this panel's V rows, this thread only.
         let vpan =
             unsafe { std::slice::from_raw_parts_mut(self.v.add(j0 * p), w * p) };
@@ -380,6 +369,7 @@ pub struct GradCtx<'a> {
     n_i: usize,
     p: usize,
     w: usize,
+    d: Dispatch,
 }
 
 impl<'a> GradCtx<'a> {
@@ -392,7 +382,7 @@ impl<'a> GradCtx<'a> {
         assert_eq!(v.shape(), (n_i, p), "GradCtx: V shape mismatch");
         assert_eq!(s.shape(), (m, n_i), "GradCtx: S shape mismatch");
         assert!(w >= 1, "GradCtx: panel width must be positive");
-        GradCtx { u, v, s, m, n_i, p, w }
+        GradCtx { u, v, s, m, n_i, p, w, d: Dispatch::active() }
     }
 
     pub fn panels(&self) -> usize {
@@ -429,42 +419,28 @@ impl<'a> GradCtx<'a> {
             {
                 let mrow = mp.row(i, w);
                 let srow = &sd[i * n_i + j0..i * n_i + j1];
-                for jj in 0..w {
-                    r[jj] = srow[jj] - mrow[jj];
-                }
+                simd::sub(self.d, r, srow, mrow);
             }
-            accum_uvt_row(r, urow, vt, w, p);
+            accum_uvt_row(self.d, r, urow, vt, w, p);
             // grad_acc[i, :] += r · Vᵀ_panelᵀ — p dot products of length
-            // w, four independent accumulator chains at a time
+            // w, four at a time over one pass of r
             let r = &scratch.rows[..w];
             let arow = &mut acc[i * p..(i + 1) * p];
             let mut q = 0;
             while q + 4 <= p {
-                let v0 = &vt[q * w..(q + 1) * w];
-                let v1 = &vt[(q + 1) * w..(q + 2) * w];
-                let v2 = &vt[(q + 2) * w..(q + 3) * w];
-                let v3 = &vt[(q + 3) * w..(q + 4) * w];
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-                for jj in 0..w {
-                    let rv = r[jj];
-                    s0 += rv * v0[jj];
-                    s1 += rv * v1[jj];
-                    s2 += rv * v2[jj];
-                    s3 += rv * v3[jj];
-                }
-                arow[q] += s0;
-                arow[q + 1] += s1;
-                arow[q + 2] += s2;
-                arow[q + 3] += s3;
+                simd::dot4_acc(
+                    self.d,
+                    &mut arow[q..q + 4],
+                    r,
+                    &vt[q * w..(q + 1) * w],
+                    &vt[(q + 1) * w..(q + 2) * w],
+                    &vt[(q + 2) * w..(q + 3) * w],
+                    &vt[(q + 3) * w..(q + 4) * w],
+                );
                 q += 4;
             }
             while q < p {
-                let vq = &vt[q * w..(q + 1) * w];
-                let mut sacc = 0.0;
-                for jj in 0..w {
-                    sacc += r[jj] * vq[jj];
-                }
-                arow[q] += sacc;
+                arow[q] += simd::dot(self.d, r, &vt[q * w..(q + 1) * w]);
                 q += 1;
             }
         }
@@ -474,9 +450,13 @@ impl<'a> GradCtx<'a> {
 /// In-place triangular solve of `(L Lᵀ) X = B` for a p×w panel stored
 /// row-major with row stride `w` — the panel twin of
 /// `solve::cholesky_solve_in_place`, vectorized across the panel width.
-fn solve_panel_in_place(chol: &Mat, panel: &mut [f64], w: usize) {
+fn solve_panel_in_place(chol: &Mat, panel: &mut [f64], w: usize, d: Dispatch) {
     let p = chol.rows();
     debug_assert_eq!(panel.len(), p * w);
+    // the update rows run as axpy with a negated coefficient: (−l)·s is
+    // bitwise equal to −(l·s), so the scalar arm reproduces the original
+    // `dst -= l·src` loop exactly; the AVX2 arm single-rounds via FMA
+    // (1e-12 family, like every other contraction)
     // forward: L·Y = B
     for r in 0..p {
         let lrow = chol.row(r);
@@ -484,18 +464,13 @@ fn solve_panel_in_place(chol: &Mat, panel: &mut [f64], w: usize) {
             let l = lrow[k];
             let (head, tail) = panel.split_at_mut(r * w);
             let src = &head[k * w..(k + 1) * w];
-            let dst = &mut tail[..w];
-            for jj in 0..w {
-                dst[jj] -= l * src[jj];
-            }
+            simd::axpy(d, &mut tail[..w], -l, src);
         }
         // divide (not multiply-by-reciprocal): matches the rounding of
         // cholesky_solve_in_place, and p·w divisions per panel are noise
         // next to the 2·m·p·w FMA stages
         let diag = lrow[r];
-        for x in &mut panel[r * w..(r + 1) * w] {
-            *x /= diag;
-        }
+        simd::div_inplace(d, &mut panel[r * w..(r + 1) * w], diag);
     }
     // backward: Lᵀ·X = Y
     for r in (0..p).rev() {
@@ -503,15 +478,10 @@ fn solve_panel_in_place(chol: &Mat, panel: &mut [f64], w: usize) {
             let l = chol[(k, r)];
             let (head, tail) = panel.split_at_mut(k * w);
             let src = &tail[..w];
-            let dst = &mut head[r * w..(r + 1) * w];
-            for jj in 0..w {
-                dst[jj] -= l * src[jj];
-            }
+            simd::axpy(d, &mut head[r * w..(r + 1) * w], -l, src);
         }
         let diag = chol[(r, r)];
-        for x in &mut panel[r * w..(r + 1) * w] {
-            *x /= diag;
-        }
+        simd::div_inplace(d, &mut panel[r * w..(r + 1) * w], diag);
     }
 }
 
@@ -543,7 +513,7 @@ mod tests {
             assert!(cholesky_shifted_into(&mut chol, &g, 0.3));
             let rhs = Mat::gaussian(p, w, &mut rng);
             let mut panel: Vec<f64> = rhs.as_slice().to_vec();
-            solve_panel_in_place(&chol, &mut panel, w);
+            solve_panel_in_place(&chol, &mut panel, w, Dispatch::active());
             let expect = cholesky_solve(&chol, &rhs);
             for q in 0..p {
                 for jj in 0..w {

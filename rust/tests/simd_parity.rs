@@ -1,0 +1,341 @@
+//! SIMD-vs-scalar parity through the *public* API on adversarial inputs:
+//! denormals, ±0.0, NaN/Inf, lengths straddling the vector width, and
+//! strided panel views. The in-crate unit tests (`linalg::simd`,
+//! `linalg::gemm`) pin each primitive; this suite pins the wired-up entry
+//! points the solvers actually call, so a dispatch regression anywhere in
+//! the plumbing fails here. Under `DCF_PCA_FORCE_SCALAR=1` (the CI
+//! forced-scalar job) every comparison degenerates to scalar-vs-scalar
+//! and must still hold — the contract is arm-independent.
+
+use dcf_pca::algorithms::factor::{oracle, ClientState, FactorHyper};
+use dcf_pca::coordinator::compress::{put_mat_compressed, read_mat_compressed, Compression};
+use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
+use dcf_pca::coordinator::transport::framing::Reader;
+use dcf_pca::linalg::{
+    cholesky_shifted_into, gemm, gram_into, matmul_into, matmul_nt_into, matmul_tn_into,
+    matvec_into, residual_shrink_into, shrink_dual_into, shrink_into, shrink_sub_into, simd,
+    sub_into, GradCtx, Mat, PanelCtx, PanelScratch, PanelView, Workspace,
+};
+use dcf_pca::rng::Pcg64;
+
+/// Everything the elementwise kernels must agree on bitwise, including
+/// the values where branchy scalar code and branchless SIMD most easily
+/// diverge: signed zeros, subnormals at both extremes, NaN, ±Inf.
+const SPECIALS: [f64; 16] = [
+    0.0,
+    -0.0,
+    1.0,
+    -1.5,
+    1e-300,
+    -1e-300,
+    5e-324,
+    -5e-324,
+    1e6,
+    -1e6,
+    f64::NAN,
+    f64::INFINITY,
+    f64::NEG_INFINITY,
+    0.1,
+    -0.7,
+    3.25,
+];
+
+/// Finite subset for the accumulation kernels, where mixing ±Inf would
+/// make the result order-dependent (Inf − Inf) rather than expose bugs.
+const FINITE: [f64; 12] = [
+    0.0, -0.0, 1.0, -1.5, 1e-300, -1e-300, 5e-324, -5e-324, 1e6, -1e6, 0.1, -0.7,
+];
+
+/// Lengths straddling the 4-wide vector width and its unrolled multiples.
+const LENS: [usize; 13] = [1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 31, 32, 33];
+
+/// Deterministic pool sampling, decorrelated between operands by `salt`.
+fn adversarial(pool: &[f64], len: usize, salt: usize) -> Vec<f64> {
+    (0..len).map(|i| pool[(i * 7 + salt * 3 + 1) % pool.len()]).collect()
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let ok = g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan());
+        assert!(ok, "{what}[{i}]: {g:e} ({:#018x}) vs {w:e} ({:#018x})", g.to_bits(), w.to_bits());
+    }
+}
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.is_nan() && w.is_nan() {
+            continue;
+        }
+        let denom = g.abs().max(w.abs()).max(1.0);
+        assert!((g - w).abs() / denom < tol, "{what}[{i}]: {g:e} vs {w:e}");
+    }
+}
+
+#[test]
+fn elementwise_entry_points_bitwise_match_scalar_on_specials() {
+    for &len in &LENS {
+        for salt in 0..4 {
+            let a = adversarial(&SPECIALS, len, salt);
+            let b = adversarial(&SPECIALS, len, salt + 1);
+            let y = adversarial(&SPECIALS, len, salt + 2);
+            let mut got = vec![0.0; len];
+            let mut want = vec![0.0; len];
+
+            shrink_into(&mut got, &a, 0.3);
+            simd::scalar::shrink(&mut want, &a, 0.3);
+            assert_bits_eq(&got, &want, "shrink_into");
+
+            shrink_sub_into(&mut got, &a, &b, 0.3);
+            simd::scalar::shrink_sub(&mut want, &a, &b, 0.3);
+            assert_bits_eq(&got, &want, "shrink_sub_into");
+
+            shrink_dual_into(&mut got, &a, &b, &y, 0.25, 0.3);
+            simd::scalar::shrink_dual(&mut want, &a, &b, &y, 0.25, 0.3);
+            assert_bits_eq(&got, &want, "shrink_dual_into");
+        }
+    }
+}
+
+#[test]
+fn single_special_value_is_position_exact() {
+    // one NaN/Inf/subnormal dropped at the head, middle, or tail of an
+    // otherwise-finite buffer must affect exactly its own lane in both
+    // the vector body and the scalar tail
+    for &len in &LENS {
+        for pos in [0, len / 2, len - 1] {
+            for special in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -5e-324] {
+                let mut a = adversarial(&FINITE, len, 1);
+                a[pos] = special;
+                let mut got = vec![0.0; len];
+                let mut want = vec![0.0; len];
+                shrink_into(&mut got, &a, 0.4);
+                simd::scalar::shrink(&mut want, &a, 0.4);
+                assert_bits_eq(&got, &want, "shrink_into (planted special)");
+            }
+        }
+    }
+}
+
+#[test]
+fn mat_level_entry_points_bitwise_match_composed_scalar() {
+    for &(r, c) in &[(1usize, 1usize), (3, 5), (7, 9), (5, 33)] {
+        let len = r * c;
+        let m = Mat::from_vec(r, c, adversarial(&SPECIALS, len, 0));
+        let uv = Mat::from_vec(r, c, adversarial(&SPECIALS, len, 1));
+
+        let mut diff = vec![0.0; len];
+        simd::scalar::sub(&mut diff, m.as_slice(), uv.as_slice());
+        let mut out = Mat::zeros(r, c);
+        sub_into(&mut out, &m, &uv);
+        assert_bits_eq(out.as_slice(), &diff, "sub_into");
+
+        let mut s = Mat::zeros(r, c);
+        residual_shrink_into(&mut s, &m, &uv, 0.2);
+        let mut want = vec![0.0; len];
+        simd::scalar::shrink(&mut want, &diff, 0.2);
+        assert_bits_eq(s.as_slice(), &want, "residual_shrink_into");
+    }
+}
+
+#[test]
+fn matmul_family_matches_scalar_twins_on_denormal_inputs() {
+    // ragged shapes around the blocking and unroll boundaries; inputs
+    // drawn from the finite pool so subnormal×subnormal underflow and
+    // signed-zero products are exercised without order-dependent Inf
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (2, 3, 4), (5, 7, 9), (9, 33, 17), (33, 8, 31)] {
+        let a = Mat::from_vec(m, k, adversarial(&FINITE, m * k, 0));
+        let b = Mat::from_vec(k, n, adversarial(&FINITE, k * n, 1));
+        let mut got = Mat::zeros(m, n);
+        let mut want = Mat::zeros(m, n);
+        matmul_into(&mut got, &a, &b);
+        gemm::matmul_acc_scalar(&mut want, &a, &b, 1.0, 0.0);
+        assert_close(got.as_slice(), want.as_slice(), 1e-12, "matmul_into");
+
+        let x = Mat::from_vec(m, k, adversarial(&FINITE, m * k, 2));
+        let y = Mat::from_vec(m, n, adversarial(&FINITE, m * n, 3));
+        let mut got = Mat::zeros(k, n);
+        let mut want = Mat::zeros(k, n);
+        matmul_tn_into(&mut got, &x, &y);
+        gemm::matmul_tn_into_scalar(&mut want, &x, &y);
+        assert_close(got.as_slice(), want.as_slice(), 1e-12, "matmul_tn_into");
+
+        let u = Mat::from_vec(m, k, adversarial(&FINITE, m * k, 4));
+        let v = Mat::from_vec(n, k, adversarial(&FINITE, n * k, 5));
+        let mut got = Mat::zeros(m, n);
+        let mut want = Mat::zeros(m, n);
+        matmul_nt_into(&mut got, &u, &v);
+        gemm::matmul_nt_into_scalar(&mut want, &u, &v);
+        assert_close(got.as_slice(), want.as_slice(), 1e-12, "matmul_nt_into");
+
+        let mut gg = Mat::zeros(k, k);
+        let mut gw = Mat::zeros(k, k);
+        gram_into(&mut gg, &x);
+        gemm::gram_into_scalar(&mut gw, &x);
+        assert_close(gg.as_slice(), gw.as_slice(), 1e-12, "gram_into");
+
+        let xv = adversarial(&FINITE, k, 6);
+        let mut yg = vec![0.0; m];
+        let mut yw = vec![0.0; m];
+        matvec_into(&mut yg, &a, &xv);
+        gemm::matvec_into_scalar(&mut yw, &a, &xv);
+        assert_close(&yg, &yw, 1e-12, "matvec_into");
+    }
+}
+
+/// Runs the fused sweep + polish over every panel of a 9×13 block at
+/// panel width 5 — a ragged 4-row remainder (9 = 4+4+1) and a ragged
+/// last panel (13 = 5+5+3) — once with the resident strided view
+/// (`row_stride = n_i, col_offset = j0`) and once with each panel packed
+/// contiguous (`row_stride = w_k, col_offset = 0`, the streamed-shard
+/// layout). The two producers must be bitwise indistinguishable.
+#[test]
+fn panel_pipeline_is_bitwise_identical_for_strided_and_packed_views() {
+    let (m, n_i, p, w) = (9usize, 13usize, 3usize, 5usize);
+    let mut rng = Pcg64::new(0xC0FFEE);
+    let u = Mat::gaussian(m, p, &mut rng);
+    let mobs = Mat::from_vec(m, n_i, adversarial(&FINITE, m * n_i, 2));
+    let mut gram = Mat::zeros(p, p);
+    gram_into(&mut gram, &u);
+    let mut chol = Mat::zeros(p, p);
+    assert!(cholesky_shifted_into(&mut chol, &gram, 0.5), "ridge Gram must be SPD");
+
+    let run = |packed: bool| -> (Mat, Mat) {
+        let mut v = Mat::zeros(n_i, p);
+        let mut s = Mat::zeros(m, n_i);
+        {
+            let ctx = PanelCtx::new(&u, &chol, m, n_i, w, &mut v, &mut s, 0.07);
+            let mut scratch = PanelScratch::new(m, p, w);
+            let md = mobs.as_slice();
+            for k in 0..ctx.panels() {
+                let j0 = k * w;
+                let wk = (j0 + w).min(n_i) - j0;
+                if packed {
+                    let mut buf = vec![0.0; m * wk];
+                    for i in 0..m {
+                        let src = &md[i * n_i + j0..i * n_i + j0 + wk];
+                        buf[i * wk..(i + 1) * wk].copy_from_slice(src);
+                    }
+                    ctx.sweep_panel(k, PanelView::new(&buf, wk, 0), &mut scratch);
+                    ctx.polish_panel(k, PanelView::new(&buf, wk, 0), &mut scratch);
+                } else {
+                    ctx.sweep_panel(k, PanelView::new(md, n_i, j0), &mut scratch);
+                    ctx.polish_panel(k, PanelView::new(md, n_i, j0), &mut scratch);
+                }
+            }
+        }
+        (v, s)
+    };
+
+    let (v_strided, s_strided) = run(false);
+    let (v_packed, s_packed) = run(true);
+    assert_bits_eq(v_strided.as_slice(), v_packed.as_slice(), "V strided vs packed");
+    assert_bits_eq(s_strided.as_slice(), s_packed.as_slice(), "S strided vs packed");
+
+    // same check for the gradient accumulator
+    let grad = |packed: bool| -> Mat {
+        let ctx = GradCtx::new(&u, m, n_i, w, &v_strided, &s_strided);
+        let mut scratch = PanelScratch::new(m, p, w);
+        scratch.grad_acc.fill(0.0);
+        let md = mobs.as_slice();
+        for k in 0..ctx.panels() {
+            let j0 = k * w;
+            let wk = (j0 + w).min(n_i) - j0;
+            if packed {
+                let mut buf = vec![0.0; m * wk];
+                for i in 0..m {
+                    let src = &md[i * n_i + j0..i * n_i + j0 + wk];
+                    buf[i * wk..(i + 1) * wk].copy_from_slice(src);
+                }
+                ctx.grad_panel(k, PanelView::new(&buf, wk, 0), &mut scratch);
+            } else {
+                ctx.grad_panel(k, PanelView::new(md, n_i, j0), &mut scratch);
+            }
+        }
+        scratch.grad_acc
+    };
+    assert_bits_eq(grad(false).as_slice(), grad(true).as_slice(), "grad strided vs packed");
+}
+
+#[test]
+fn fused_epoch_agrees_with_multipass_oracle_at_edge_shapes() {
+    // edge shapes: ragged 4-row remainders, n_i < m, n_i > m
+    for &(m, n_i, p) in &[(9usize, 13usize, 3usize), (33, 17, 4), (21, 70, 5)] {
+        let mut rng = Pcg64::new((m * 1000 + n_i) as u64);
+        let u0 = Mat::gaussian(m, p, &mut rng);
+        let mobs = Mat::gaussian(m, n_i, &mut rng);
+        let hyper = FactorHyper::default_for(m, n_i, p);
+
+        let mut u_fused = u0.clone();
+        let mut st_fused = ClientState::zeros(m, n_i, p);
+        let mut ws = Workspace::new(m, n_i, p);
+        let kernel = NativeKernel::with_threads(1);
+        kernel
+            .local_epoch(&mut u_fused, &mobs, &mut st_fused, &hyper, 1.0, 1e-3, 2, &mut ws)
+            .unwrap();
+
+        let mut u_oracle = u0.clone();
+        let mut st_oracle = ClientState::zeros(m, n_i, p);
+        let mut ows = oracle::MultipassWorkspace::new(m, n_i, p);
+        oracle::local_epoch(&mut u_oracle, &mobs, &mut st_oracle, &hyper, 1.0, 1e-3, 2, &mut ows);
+
+        assert_close(u_fused.as_slice(), u_oracle.as_slice(), 1e-10, "U fused vs multipass");
+        assert_close(st_fused.v.as_slice(), st_oracle.v.as_slice(), 1e-10, "V fused vs multipass");
+        assert_close(st_fused.s.as_slice(), st_oracle.s.as_slice(), 1e-10, "S fused vs multipass");
+    }
+}
+
+#[test]
+fn epoch_is_bitwise_identical_across_thread_counts() {
+    // the dispatch invariant: within one dispatch arm, the slot
+    // decomposition fixes the arithmetic, so thread count must not
+    // change a single bit — including on blocks seeded with subnormals.
+    // m = 602 forces panel width 27 (three ragged panels over n_i = 70)
+    // plus a ragged 4-row remainder, so the panels genuinely land on
+    // different threads at t > 1
+    let (m, n_i, p) = (602usize, 70usize, 5usize);
+    let hyper = FactorHyper::default_for(m, n_i, p);
+    let mut rng = Pcg64::new(99);
+    let u0 = Mat::gaussian(m, p, &mut rng);
+    let mut mdata = Mat::gaussian(m, n_i, &mut rng);
+    for (i, x) in mdata.as_mut_slice().iter_mut().enumerate() {
+        if i % 17 == 0 {
+            *x = FINITE[(i / 17) % FINITE.len()];
+        }
+    }
+
+    let run = |threads: usize| -> (Mat, Mat, Mat) {
+        let mut u = u0.clone();
+        let mut st = ClientState::zeros(m, n_i, p);
+        let mut ws = Workspace::new(m, n_i, p);
+        let kernel = NativeKernel::with_threads(threads);
+        kernel.local_epoch(&mut u, &mdata, &mut st, &hyper, 1.0, 1e-3, 2, &mut ws).unwrap();
+        (u, st.v, st.s)
+    };
+    let (u1, v1, s1) = run(1);
+    for threads in [2usize, 4] {
+        let (ut, vt, st) = run(threads);
+        assert_bits_eq(u1.as_slice(), ut.as_slice(), "U across thread counts");
+        assert_bits_eq(v1.as_slice(), vt.as_slice(), "V across thread counts");
+        assert_bits_eq(s1.as_slice(), st.as_slice(), "S across thread counts");
+    }
+}
+
+#[test]
+fn f32_codec_matches_scalar_casts_bitwise() {
+    // the wire narrowing must be exactly `x as f32` / widening exactly
+    // `x as f64` under either dispatch arm, including on subnormals that
+    // flush to f32 zero and values straddling the chunked-conversion
+    // boundary (len > 512 exercises a full chunk plus a ragged one)
+    for &(r, c) in &[(1usize, 1usize), (5, 7), (9, 33), (3, 257)] {
+        let m = Mat::from_vec(r, c, adversarial(&FINITE, r * c, 3));
+        let mut buf = Vec::new();
+        put_mat_compressed(&mut buf, &m, Compression::F32);
+        let mut rd = Reader::new(&buf);
+        let out = read_mat_compressed(&mut rd).unwrap();
+        rd.expect_end().unwrap();
+        let want: Vec<f64> = m.as_slice().iter().map(|&x| (x as f32) as f64).collect();
+        assert_bits_eq(out.as_slice(), &want, "f32 codec roundtrip");
+    }
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Run the kernel hot-path bench and diff its per-kernel rates against the
+# checked-in baseline, so perf regressions show up as a review comment
+# instead of a silent drift.
+#
+# Usage: scripts/bench_trend.sh [extra cargo-bench args...]
+#
+#   - runs `cargo bench --bench kernel_hotpath`, which rewrites
+#     BENCH_kernel_hotpath.json ({host, records});
+#   - if BENCH_kernel_hotpath.baseline.json does not exist yet, seeds it
+#     from this run (commit it from the machine the trend should track —
+#     baselines are per-host, the header records which one);
+#   - otherwise prints a per-(op, shape) GFLOP/s delta table and exits
+#     non-zero if any kernel regressed more than $TREND_TOLERANCE
+#     (default 20%, generous because shared CI boxes are noisy).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CURRENT=BENCH_kernel_hotpath.json
+BASELINE=BENCH_kernel_hotpath.baseline.json
+TOLERANCE="${TREND_TOLERANCE:-0.20}"
+
+cargo bench --bench kernel_hotpath "$@"
+
+if [[ ! -f "$CURRENT" ]]; then
+    echo "error: bench did not produce $CURRENT" >&2
+    exit 1
+fi
+
+if [[ ! -f "$BASELINE" ]]; then
+    cp "$CURRENT" "$BASELINE"
+    echo
+    echo "No baseline found — seeded $BASELINE from this run."
+    echo "Commit it from the hardware the trend should track:"
+    echo "    git add $BASELINE"
+    exit 0
+fi
+
+python3 - "$BASELINE" "$CURRENT" "$TOLERANCE" <<'EOF'
+import json
+import sys
+
+base_path, cur_path, tol_s = sys.argv[1], sys.argv[2], sys.argv[3]
+tol = float(tol_s)
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    # pre-PR-6 files were a bare record array
+    records = doc["records"] if isinstance(doc, dict) else doc
+    host = doc.get("host", {}) if isinstance(doc, dict) else {}
+    return host, {
+        (r["op"], r["shape"]): r["gflops"]
+        for r in records
+        if r.get("gflops") is not None
+    }
+
+bhost, base = load(base_path)
+chost, cur = load(cur_path)
+
+if bhost.get("dispatch") != chost.get("dispatch"):
+    print(
+        f"note: dispatch changed {bhost.get('dispatch')} -> "
+        f"{chost.get('dispatch')} — deltas compare different code paths"
+    )
+
+rows, regressions = [], []
+for key in sorted(base):
+    if key not in cur:
+        continue
+    b, c = base[key], cur[key]
+    delta = (c - b) / b if b else 0.0
+    rows.append((key, b, c, delta))
+    if delta < -tol:
+        regressions.append((key, b, c, delta))
+
+w = max((len(f"{op} {shape}") for (op, shape), *_ in rows), default=20)
+print(f"\n{'kernel':<{w}}  {'base':>9}  {'now':>9}  {'delta':>8}")
+for (op, shape), b, c, delta in rows:
+    print(f"{op + ' ' + shape:<{w}}  {b:>9.2f}  {c:>9.2f}  {delta:>+7.1%}")
+
+new_keys = sorted(set(cur) - set(base))
+if new_keys:
+    print(f"\n{len(new_keys)} kernel(s) not in baseline (re-seed to track):")
+    for op, shape in new_keys:
+        print(f"  {op} {shape}")
+
+if regressions:
+    print(f"\nFAIL: {len(regressions)} kernel(s) regressed more than {tol:.0%}:")
+    for (op, shape), b, c, delta in regressions:
+        print(f"  {op} {shape}: {b:.2f} -> {c:.2f} GFLOP/s ({delta:+.1%})")
+    sys.exit(1)
+print(f"\nOK: no kernel regressed more than {tol:.0%}")
+EOF
