@@ -23,11 +23,13 @@ use crate::algorithms::factor::FactorHyper;
 use crate::cli::args::{
     apply_threads, parse_compression, parse_round_timeout, usage, OptSpec, ParsedArgs, THREADS_OPT,
 };
-use crate::coordinator::client::{run_client, ClientConfig, FaultPlan};
+use crate::coordinator::client::{run_client_resumable, ClientConfig, FaultPlan};
 use crate::coordinator::engine::RoundEngine;
 use crate::coordinator::kernel::NativeKernel;
 use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
+use crate::coordinator::transport::retry::BackoffPolicy;
 use crate::coordinator::transport::tcp::{TcpAcceptor, TcpChannel};
+use crate::coordinator::transport::Channel;
 use crate::coordinator::PrivacySpec;
 use crate::rpca::partition::ColumnPartition;
 use crate::rpca::problem::ProblemSpec;
@@ -61,6 +63,12 @@ const SERVE_SPECS: &[OptSpec] = &[
         name: "fault-policy",
         takes_value: true,
         help: "strict | skip — what a missed deadline/disconnect does (default strict)",
+    },
+    OptSpec {
+        name: "reconnect-grace",
+        takes_value: true,
+        help: "seconds a disconnected worker may take to resume its session under \
+               --fault-policy skip (0 = depart immediately; default: the round timeout)",
     },
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
@@ -114,6 +122,9 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
     cfg.fault_policy = fault_policy;
     if let Some(t) = parse_round_timeout(&args)? {
         cfg.round_timeout = t;
+    }
+    if let Some(secs) = args.get_u64("reconnect-grace")? {
+        cfg.reconnect_grace = Some(std::time::Duration::from_secs(secs));
     }
 
     let acceptor = TcpAcceptor::bind(listen)?;
@@ -190,6 +201,24 @@ const WORKER_SPECS: &[OptSpec] = &[
         name: "compression",
         takes_value: true,
         help: "wire codec: none | f32 | int8 — must match the server",
+    },
+    OptSpec {
+        name: "retry-budget",
+        takes_value: true,
+        help: "consecutive failed connects/reconnects tolerated before giving up \
+               (default 8; 0 = fail fast). The budget refills whenever the session \
+               makes progress, and covers the initial connect — start order vs the \
+               server no longer matters.",
+    },
+    OptSpec {
+        name: "backoff-base",
+        takes_value: true,
+        help: "first retry delay in ms; doubles each attempt with downward jitter (default 200)",
+    },
+    OptSpec {
+        name: "backoff-max",
+        takes_value: true,
+        help: "ceiling on any single retry delay in ms (default 10000)",
     },
     THREADS_OPT,
     OptSpec { name: "help", takes_value: false, help: "show this help" },
@@ -290,9 +319,25 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         }
     }
 
-    let mut ch = TcpChannel::connect(addr)?;
+    let mut policy = BackoffPolicy::default();
+    if let Some(b) = args.get_u64("retry-budget")? {
+        policy.retry_budget = b as u32;
+    }
+    if let Some(ms) = args.get_u64("backoff-base")? {
+        if ms == 0 {
+            bail!("--backoff-base must be positive");
+        }
+        policy.base = std::time::Duration::from_millis(ms);
+    }
+    if let Some(ms) = args.get_u64("backoff-max")? {
+        policy.max = std::time::Duration::from_millis(ms);
+    }
+    if policy.max < policy.base {
+        bail!("--backoff-max below --backoff-base");
+    }
+
     println!(
-        "worker {id} connected to {addr}, columns {}..{}{}",
+        "worker {id} dialing {addr}, columns {}..{}{}",
         span.0,
         span.1,
         if streaming { " (streaming from shard)" } else { "" }
@@ -309,7 +354,10 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         compression,
         dp_sigma: 0.0,
     };
-    let rounds = run_client(&mut ch, cfg, &NativeKernel::new())?;
+    // the resumable runner retries the initial connect too (jittered
+    // backoff), so the old "start the server first" footgun is gone
+    let connect = || TcpChannel::connect(addr).map(|c| Box::new(c) as Box<dyn Channel>);
+    let rounds = run_client_resumable(connect, cfg, &NativeKernel::new(), &policy)?;
     println!("worker {id} done after {rounds} rounds");
     Ok(())
 }

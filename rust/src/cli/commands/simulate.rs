@@ -46,6 +46,12 @@ const SPECS: &[OptSpec] = &[
         help: "error ceiling for under-budget schedules (default 5e-2)",
     },
     OptSpec {
+        name: "flaky",
+        takes_value: false,
+        help: "draw the flap-heavy fault distribution (link drops + reconnects) \
+               instead of the general one — hammers session resume",
+    },
+    OptSpec {
         name: "shrink",
         takes_value: false,
         help: "greedily minimize each failing schedule before printing it",
@@ -123,14 +129,16 @@ pub fn run(argv: &[String]) -> Result<()> {
         cfg.err_tolerance = tol;
     }
 
+    let flaky = args.flag("flaky");
     println!(
-        "simulate: E={} n={} rank={} T={} K={} timeout={}ms seeds {first}..{last}",
+        "simulate: E={} n={} rank={} T={} K={} timeout={}ms seeds {first}..{last}{}",
         cfg.clients,
         cfg.n,
         cfg.rank,
         cfg.rounds,
         cfg.k_local,
-        cfg.round_timeout.as_millis()
+        cfg.round_timeout.as_millis(),
+        if flaky { " (flaky distribution)" } else { "" }
     );
     let harness = SimHarness::new(cfg)?;
 
@@ -140,7 +148,9 @@ pub fn run(argv: &[String]) -> Result<()> {
     let mut failures = 0u64;
     let mut virtual_total = std::time::Duration::ZERO;
     for seed in first..last {
-        match harness.check_seed(seed) {
+        let checked =
+            if flaky { harness.check_seed_flaky(seed) } else { harness.check_seed(seed) };
+        match checked {
             Ok(report) => {
                 ok += 1;
                 virtual_total += report.virtual_elapsed;

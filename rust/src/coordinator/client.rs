@@ -10,6 +10,17 @@
 //! driver hands the worker a resident block, a TCP worker can point it
 //! at a `.dcfshard` file and stream panels from disk — the round loop is
 //! identical (and bitwise so) either way.
+//!
+//! The protocol state machine lives in the sans-I/O [`ClientSession`]
+//! (mirroring the server's `RoundEngine`): it consumes decoded frames
+//! and yields encoded replies, owning the session token, both sequence
+//! counters, and a cache of the last round/finish reply so a reconnect
+//! can re-send exactly the bytes the lost link swallowed — which is what
+//! keeps a resumed run bitwise identical to an uninterrupted one.
+//! [`run_client`] drives a session over one channel (old behavior);
+//! [`run_client_resumable`] adds the reconnect loop with capped jittered
+//! backoff, degrading to the old departure semantics when the retry
+//! budget runs dry.
 
 use crate::bail;
 use crate::error::{Context, Result};
@@ -17,10 +28,12 @@ use crate::error::{Context, Result};
 use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
 use crate::data::DataSource;
 use crate::linalg::{matmul_nt, Mat, Workspace};
+use crate::rng::Pcg64;
 
 use super::compress::Compression;
 use super::kernel::LocalUpdateKernel;
-use super::protocol::{ToClient, ToServer};
+use super::protocol::{restamp_seq, ToClient, ToServer};
+use super::transport::retry::BackoffPolicy;
 use super::transport::Channel;
 
 /// Failure/latency-injection hooks for tests (client "crashes" silently
@@ -34,6 +47,12 @@ pub struct FaultPlan {
     pub crash_at_finish: bool,
     /// sleep this long before every round reply (straggler injection)
     pub reply_delay: Option<std::time::Duration>,
+    /// sever the connection on receiving this round's broadcast, *after*
+    /// computing (and caching) the reply but before sending it — the
+    /// worst-case mid-round link loss a resumable runner must survive.
+    /// Fires once; after the session resumes the round is re-served from
+    /// the cache.
+    pub disconnect_at_round: Option<u32>,
 }
 
 /// Per-client configuration handed to the worker at spawn.
@@ -60,122 +79,388 @@ pub struct ClientConfig {
     pub dp_sigma: f64,
 }
 
-/// Run the worker loop until `Shutdown` (or a planned crash). Returns the
-/// number of rounds served.
+/// What a [`ClientSession`] wants its runner to do after one frame.
+#[derive(Debug, Default)]
+pub struct SessionStep {
+    /// encoded frames to write, in order
+    pub replies: Vec<Vec<u8>>,
+    /// the session is over (Shutdown received or a planned crash): stop
+    pub done: bool,
+    /// fault injection: sever the link *without* sending anything more,
+    /// then reconnect and resume (see `FaultPlan::disconnect_at_round`)
+    pub drop_connection: bool,
+}
+
+/// Sans-I/O client protocol state machine. Feed it received frames via
+/// [`handle`](Self::handle); write out the frames it returns. Survives
+/// its transport: after a reconnect, send [`hello`](Self::hello) again
+/// and keep feeding — the session token makes the coordinator re-deliver
+/// whatever round state was in flight, and the reply cache re-sends
+/// exactly the bytes the dead link swallowed (no recompute, so the
+/// resumed run stays bitwise identical to an uninterrupted one).
+pub struct ClientSession {
+    cfg: ClientConfig,
+    state: ClientState,
+    ws: Workspace,
+    m: usize,
+    n_i: usize,
+    /// coordinator-issued session token (0 until the first `Welcome`)
+    token: u64,
+    /// upstream envelope seq of the last frame handed to a runner
+    up_seq: u32,
+    /// highest stamped downstream envelope seq seen (replay guard)
+    last_down_seq: u32,
+    /// round of the last broadcast served, with its encoded reply
+    last_round: Option<u32>,
+    cached_reply: Option<Vec<u8>>,
+    /// encoded Reveal/Withhold, kept for idempotent Finish re-delivery
+    /// (recomputing would re-run the stateful polish sweeps)
+    cached_final: Option<Vec<u8>>,
+    rounds_served: usize,
+    disconnect_fired: bool,
+}
+
+impl ClientSession {
+    pub fn new(cfg: ClientConfig) -> Self {
+        let (m, n_i) = (cfg.data.rows(), cfg.data.cols());
+        let state = ClientState::zeros(m, n_i, cfg.hyper.rank);
+        // one workspace for the whole session lifetime: every round's
+        // local epoch (and the final polish sweeps) runs with zero heap
+        // allocations — sized from the source so streamed panels land in
+        // preallocated io lanes
+        let ws = Workspace::for_source(cfg.data.as_ref(), cfg.hyper.rank);
+        ClientSession {
+            cfg,
+            state,
+            ws,
+            m,
+            n_i,
+            token: 0,
+            up_seq: 0,
+            last_down_seq: 0,
+            last_round: None,
+            cached_reply: None,
+            cached_final: None,
+            rounds_served: 0,
+            disconnect_fired: false,
+        }
+    }
+
+    pub fn rounds_served(&self) -> usize {
+        self.rounds_served
+    }
+
+    /// Stamp the next upstream sequence number onto an encoded frame.
+    /// Re-sent cached replies go through here too, so every frame that
+    /// actually hits a wire carries a fresh seq while its payload stays
+    /// byte-identical.
+    fn stamp(&mut self, mut bytes: Vec<u8>) -> Vec<u8> {
+        self.up_seq += 1;
+        restamp_seq(&mut bytes, self.up_seq);
+        bytes
+    }
+
+    /// The (re)connect handshake frame. Carries the session token (0 on
+    /// the first connect), so the same call opens and resumes a session.
+    pub fn hello(&mut self) -> Vec<u8> {
+        let hello = ToServer::Hello {
+            client: self.cfg.id as u32,
+            cols: self.n_i as u64,
+            token: self.token,
+        }
+        .encode_with(self.cfg.job, Compression::None);
+        self.stamp(hello)
+    }
+
+    /// Consume one received frame; returns what to send / do next.
+    pub fn handle(&mut self, bytes: &[u8], kernel: &dyn LocalUpdateKernel) -> Result<SessionStep> {
+        let (job, seq, msg) = ToClient::decode_full(bytes)?;
+        if job != self.cfg.job {
+            bail!("client {}: message for job {job} on a job-{} connection", self.cfg.id, self.cfg.job);
+        }
+        // `Welcome` is exempt from the replay guard below: a rejoin after
+        // grace expiry starts a *new* session whose downstream counter
+        // restarts at 1, which the old session's high-water mark would
+        // otherwise shed — the token tells the two cases apart
+        if let ToClient::Welcome { token } = msg {
+            if token != self.token {
+                self.token = token;
+                self.last_down_seq = seq;
+            } else if seq > self.last_down_seq {
+                // duplicated Welcome for the current session must not
+                // roll the guard backwards
+                self.last_down_seq = seq;
+            }
+            return Ok(SessionStep::default());
+        }
+        // envelope replay guard, mirroring the engine's: a delayed or
+        // duplicated broadcast the network delivers out of order is shed
+        // before it can roll the session state backwards
+        if seq != 0 {
+            if seq <= self.last_down_seq {
+                crate::log_warn!(
+                    "client",
+                    "client {}: dropping replayed frame (seq {seq})",
+                    self.cfg.id
+                );
+                return Ok(SessionStep::default());
+            }
+            self.last_down_seq = seq;
+        }
+        match msg {
+            ToClient::Welcome { .. } => unreachable!("handled above"),
+            ToClient::Round { round, k_local, eta, u } => self.on_round(round, k_local, eta, u, kernel),
+            ToClient::Finish { reveal, final_u } => self.on_finish(reveal, final_u),
+            ToClient::Shutdown => Ok(SessionStep { done: true, ..Default::default() }),
+        }
+    }
+
+    fn on_round(
+        &mut self,
+        round: u32,
+        k_local: u32,
+        eta: f64,
+        u: Mat,
+        kernel: &dyn LocalUpdateKernel,
+    ) -> Result<SessionStep> {
+        if let Some(crash) = self.cfg.faults.crash_at_round {
+            if round >= crash {
+                // simulate a crash: stop participating entirely
+                return Ok(SessionStep { done: true, ..Default::default() });
+            }
+        }
+        if let Some(last) = self.last_round {
+            if round == last {
+                // re-delivered after a resume: serve the cached reply
+                // verbatim instead of advancing local state twice
+                let cached = self.cached_reply.clone().ok_or_else(|| {
+                    crate::anyhow!("client {}: round {round} re-delivered but no cached reply", self.cfg.id)
+                })?;
+                let reply = self.stamp(cached);
+                return Ok(SessionStep { replies: vec![reply], ..Default::default() });
+            }
+            if round < last {
+                crate::log_warn!(
+                    "client",
+                    "client {}: ignoring stale round-{round} broadcast (served {last})",
+                    self.cfg.id
+                );
+                return Ok(SessionStep::default());
+            }
+        }
+        if u.rows() != self.m || u.cols() != self.cfg.hyper.rank {
+            bail!(
+                "client {}: U shape {:?} does not match (m={}, rank={})",
+                self.cfg.id,
+                u.shape(),
+                self.m,
+                self.cfg.hyper.rank
+            );
+        }
+        // the decoded broadcast U becomes this client's working copy —
+        // the kernel advances it in place (no clone)
+        let mut u = u;
+        // per-thread CPU time: honest per-client cost even when E
+        // simulated clients share one core (see util::cputime)
+        let t0 = crate::util::cputime::thread_cpu_seconds();
+        let out = kernel.local_epoch(
+            &mut u,
+            self.cfg.data.as_ref(),
+            &mut self.state,
+            &self.cfg.hyper,
+            self.cfg.n_frac,
+            eta,
+            k_local as usize,
+            &mut self.ws,
+        )?;
+        let local_secs = crate::util::cputime::thread_cpu_seconds() - t0;
+        super::privacy::perturb_update(&mut u, self.cfg.dp_sigma, self.cfg.id, round);
+        // telemetry: partial error numerator against ground truth
+        let err_num = match &self.cfg.truth {
+            Some((l0, s0)) => {
+                let l_i = matmul_nt(&u, &self.state.v);
+                (&l_i - l0).frob_norm_sq() + (&self.state.s - s0).frob_norm_sq()
+            }
+            None => f64::NAN,
+        };
+        if let Some(delay) = self.cfg.faults.reply_delay {
+            // injected straggle: the reply exists but arrives late
+            std::thread::sleep(delay);
+        }
+        let encoded = ToServer::Update {
+            client: self.cfg.id as u32,
+            round,
+            u,
+            grad_norm: out.grad_norm,
+            lipschitz: out.lipschitz,
+            err_num,
+            local_secs,
+        }
+        .encode_with(self.cfg.job, self.cfg.compression);
+        self.last_round = Some(round);
+        self.cached_reply = Some(encoded.clone());
+        self.rounds_served += 1;
+        if self.cfg.faults.disconnect_at_round == Some(round) && !self.disconnect_fired {
+            // the reply is computed and cached, but the link dies before
+            // it leaves — the resume path must re-serve it from cache
+            self.disconnect_fired = true;
+            return Ok(SessionStep { drop_connection: true, ..Default::default() });
+        }
+        let reply = self.stamp(encoded);
+        Ok(SessionStep { replies: vec![reply], ..Default::default() })
+    }
+
+    fn on_finish(&mut self, reveal: bool, final_u: Mat) -> Result<SessionStep> {
+        if self.cfg.faults.crash_at_finish {
+            // lost between the last round and the reveal phase
+            return Ok(SessionStep { done: true, ..Default::default() });
+        }
+        if let Some(cached) = self.cached_final.clone() {
+            // Finish re-delivered after a resume: the polish already ran
+            let reply = self.stamp(cached);
+            return Ok(SessionStep { replies: vec![reply], ..Default::default() });
+        }
+        // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional debias
+        // polish of the local (V_i, S_i) with U fixed); the polish
+        // panels share the process-wide pool
+        for _ in 0..self.cfg.polish_sweeps {
+            polish_sweep(
+                &final_u,
+                self.cfg.data.as_ref(),
+                &mut self.state,
+                &self.cfg.hyper,
+                crate::runtime::pool::global(),
+                &mut self.ws,
+            )
+            .context("polish sweep")?;
+        }
+        let reply = if reveal {
+            let l_i = matmul_nt(&final_u, &self.state.v);
+            ToServer::Reveal { client: self.cfg.id as u32, l: l_i, s: self.state.s.clone() }
+        } else {
+            ToServer::Withhold { client: self.cfg.id as u32 }
+        };
+        let encoded = reply.encode_with(self.cfg.job, Compression::None);
+        self.cached_final = Some(encoded.clone());
+        let reply = self.stamp(encoded);
+        Ok(SessionStep { replies: vec![reply], ..Default::default() })
+    }
+}
+
+/// Run the worker loop over one established channel until `Shutdown` (or
+/// a planned crash). Returns the number of rounds served. No reconnect:
+/// a link error is fatal, as before sessions became resumable.
 pub fn run_client(
     ch: &mut dyn Channel,
     cfg: ClientConfig,
     kernel: &dyn LocalUpdateKernel,
 ) -> Result<usize> {
-    let (m, n_i) = (cfg.data.rows(), cfg.data.cols());
-    let mut state = ClientState::zeros(m, n_i, cfg.hyper.rank);
-    // one workspace for the whole worker lifetime: every round's local
-    // epoch (and the final polish sweeps) runs with zero heap
-    // allocations — sized from the source so streamed panels land in
-    // preallocated io lanes
-    let mut ws = Workspace::for_source(cfg.data.as_ref(), cfg.hyper.rank);
-    ch.send(
-        &ToServer::Hello { client: cfg.id as u32, cols: n_i as u64 }
-            .encode_with(cfg.job, Compression::None),
-    )
-    .context("send hello")?;
-
-    let mut rounds_served = 0usize;
+    let mut session = ClientSession::new(cfg);
+    ch.send(&session.hello()).context("send hello")?;
     loop {
-        let (job, msg) = ToClient::decode_job(&super::transport::recv(ch)?)?;
-        if job != cfg.job {
-            bail!("client {}: message for job {job} on a job-{} connection", cfg.id, cfg.job);
+        let step = session.handle(&super::transport::recv(ch)?, kernel)?;
+        for reply in &step.replies {
+            ch.send(reply).context("send reply")?;
         }
-        match msg {
-            ToClient::Round { round, k_local, eta, u } => {
-                if let Some(crash) = cfg.faults.crash_at_round {
-                    if round >= crash {
-                        // simulate a crash: stop participating entirely
-                        return Ok(rounds_served);
-                    }
-                }
-                if u.rows() != m || u.cols() != cfg.hyper.rank {
-                    bail!(
-                        "client {}: U shape {:?} does not match (m={m}, rank={})",
-                        cfg.id,
-                        u.shape(),
-                        cfg.hyper.rank
-                    );
-                }
-                // the decoded broadcast U becomes this client's working
-                // copy — the kernel advances it in place (no clone)
-                let mut u = u;
-                // per-thread CPU time: honest per-client cost even when E
-                // simulated clients share one core (see util::cputime)
-                let t0 = crate::util::cputime::thread_cpu_seconds();
-                let out = kernel.local_epoch(
-                    &mut u,
-                    cfg.data.as_ref(),
-                    &mut state,
-                    &cfg.hyper,
-                    cfg.n_frac,
-                    eta,
-                    k_local as usize,
-                    &mut ws,
-                )?;
-                let local_secs = crate::util::cputime::thread_cpu_seconds() - t0;
-                super::privacy::perturb_update(&mut u, cfg.dp_sigma, cfg.id, round);
-                // telemetry: partial error numerator against ground truth
-                let err_num = match &cfg.truth {
-                    Some((l0, s0)) => {
-                        let l_i = matmul_nt(&u, &state.v);
-                        (&l_i - l0).frob_norm_sq() + (&state.s - s0).frob_norm_sq()
-                    }
-                    None => f64::NAN,
-                };
-                if let Some(delay) = cfg.faults.reply_delay {
-                    // injected straggle: the reply exists but arrives late
-                    std::thread::sleep(delay);
-                }
-                ch.send(
-                    &ToServer::Update {
-                        client: cfg.id as u32,
-                        round,
-                        u,
-                        grad_norm: out.grad_norm,
-                        lipschitz: out.lipschitz,
-                        err_num,
-                        local_secs,
-                    }
-                    .encode_with(cfg.job, cfg.compression),
-                )
-                .context("send update")?;
-                rounds_served += 1;
+        if step.done || step.drop_connection {
+            // without a reconnect loop, an injected disconnect is a crash
+            return Ok(session.rounds_served());
+        }
+    }
+}
+
+/// Run a worker session across transport failures: connect (retrying
+/// with capped jittered exponential backoff), serve, and on link loss
+/// reconnect and resume the same session. The retry budget is per
+/// outage — it refills whenever the session makes progress — and
+/// exhausting it degrades to the old semantics: before the first
+/// successful connect that is a hard error (the old "start the server
+/// first" failure), afterwards the worker simply departs.
+pub fn run_client_resumable<F>(
+    mut connect: F,
+    cfg: ClientConfig,
+    kernel: &dyn LocalUpdateKernel,
+    policy: &BackoffPolicy,
+) -> Result<usize>
+where
+    F: FnMut() -> Result<Box<dyn Channel>>,
+{
+    let id = cfg.id;
+    let mut session = ClientSession::new(cfg);
+    let mut rng = Pcg64::new(policy.seed ^ id as u64);
+    let mut connected_once = false;
+    // consecutive failed attempts since the session last made progress
+    let mut attempts: u32 = 0;
+    'outer: loop {
+        if attempts > policy.retry_budget {
+            if connected_once {
+                crate::log_warn!(
+                    "client",
+                    "client {id}: retry budget ({}) exhausted — departing",
+                    policy.retry_budget
+                );
+                return Ok(session.rounds_served());
             }
-            ToClient::Finish { reveal, final_u } => {
-                if cfg.faults.crash_at_finish {
-                    // lost between the last round and the reveal phase
-                    return Ok(rounds_served);
-                }
-                // Algorithm 1's output: L_i = U^(T) V_iᵀ (after optional
-                // debias polish of the local (V_i, S_i) with U fixed);
-                // the polish panels share the process-wide pool
-                for _ in 0..cfg.polish_sweeps {
-                    polish_sweep(
-                        &final_u,
-                        cfg.data.as_ref(),
-                        &mut state,
-                        &cfg.hyper,
-                        crate::runtime::pool::global(),
-                        &mut ws,
-                    )
-                    .context("polish sweep")?;
-                }
-                let reply = if reveal {
-                    let l_i = matmul_nt(&final_u, &state.v);
-                    ToServer::Reveal { client: cfg.id as u32, l: l_i, s: state.s.clone() }
-                } else {
-                    ToServer::Withhold { client: cfg.id as u32 }
-                };
-                ch.send(&reply.encode_with(cfg.job, Compression::None))
-                    .context("send final")?;
+            bail!(
+                "client {id}: could not connect after {} retries",
+                policy.retry_budget
+            );
+        }
+        if attempts > 0 {
+            std::thread::sleep(policy.delay(attempts - 1, &mut rng));
+        }
+        let mut ch = match connect() {
+            Ok(ch) => ch,
+            Err(err) => {
+                crate::log_warn!(
+                    "client",
+                    "client {id}: connect failed ({err}); retry {attempts}/{}",
+                    policy.retry_budget
+                );
+                attempts += 1;
+                continue 'outer;
             }
-            ToClient::Shutdown => return Ok(rounds_served),
+        };
+        if ch.send(&session.hello()).is_err() {
+            attempts += 1;
+            continue 'outer;
+        }
+        loop {
+            let bytes = match super::transport::recv(ch.as_mut()) {
+                Ok(bytes) => bytes,
+                Err(err) => {
+                    if connected_once {
+                        crate::log_warn!("client", "client {id}: link lost ({err}); resuming");
+                    }
+                    attempts += 1;
+                    continue 'outer;
+                }
+            };
+            connected_once = true;
+            attempts = 0;
+            // a session error (bad shape, job mismatch) is a protocol
+            // bug, not weather — reconnecting cannot fix it
+            let step = session.handle(&bytes, kernel)?;
+            let mut link_lost = false;
+            for reply in &step.replies {
+                if let Err(err) = ch.send(reply) {
+                    crate::log_warn!("client", "client {id}: send failed ({err})");
+                    link_lost = true;
+                    break;
+                }
+            }
+            if step.done {
+                return Ok(session.rounds_served());
+            }
+            if step.drop_connection {
+                // injected flap: sever and resume on a fresh connection
+                drop(ch);
+                continue 'outer;
+            }
+            if link_lost {
+                attempts += 1;
+                continue 'outer;
+            }
         }
     }
 }
@@ -216,7 +501,7 @@ mod tests {
         let (mut server, handle) = spawn_client(cfg);
         // hello
         let hello = ToServer::decode(&server.recv_timeout(Duration::from_secs(5)).unwrap()).unwrap();
-        assert_eq!(hello, ToServer::Hello { client: 0, cols: 20 });
+        assert_eq!(hello, ToServer::Hello { client: 0, cols: 20, token: 0 });
         // one round
         let mut rng = Pcg64::new(2);
         let u = Mat::gaussian(20, 2, &mut rng);

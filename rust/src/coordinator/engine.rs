@@ -31,6 +31,20 @@
 //! - **Job multiplexing.** Every protocol message carries a job id in
 //!   its envelope; one engine (hence one reactor, one port) can run any
 //!   number of independent solves concurrently.
+//! - **Resumable sessions.** Every accepted `Hello` is answered with a
+//!   `Welcome { token }`; a client that loses its link reconnects and
+//!   echoes the token, and the engine rebinds the member to the new
+//!   endpoint, re-delivers the in-flight `Round`/`Finish` state, and
+//!   relies on envelope sequence numbers to drop anything the network
+//!   (or the resuming client) replays. A disconnect under
+//!   [`FaultPolicy::SkipMissing`] therefore opens a *grace window*
+//!   (`ServerConfig::reconnect_grace`, defaulting to the round timeout)
+//!   instead of departing the member outright; only grace expiry, a
+//!   deadline cut on a still-down link, or a token-less fresh `Hello`
+//!   reproduce the old departure semantics. Because an in-grace member
+//!   stays in the round's pending set, a client that resumes before the
+//!   round deadline is *not* cut and the slot-ordered reduction —
+//!   hence the final U — is bitwise identical to an uninterrupted run.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::mem;
@@ -72,9 +86,30 @@ struct Member {
     ep: EndpointId,
     cols: usize,
     alive: bool,
+    /// link currently up — a member can be `alive` with its link down
+    /// while its reconnect grace window is open
+    connected: bool,
+    /// coordinator-issued session token a resuming client must echo
+    token: u64,
+    /// when a disconnected member departs unless it resumes first
+    grace_until: Option<Duration>,
+    /// highest stamped upstream envelope seq accepted this session
+    /// (0 = none yet; unstamped frames bypass the replay guard)
+    last_up_seq: u32,
+    /// downstream envelope seq of the last message sent this session
+    down_seq: u32,
     /// first round this member participates in (0 for founding members,
     /// `current + 1` for elastic joiners)
     active_from: usize,
+}
+
+/// Outcome of a `Hello`, telling the engine how to adjust its
+/// endpoint→client bindings.
+enum HelloOutcome {
+    /// Bind the new endpoint; `unbind` names a stale endpoint whose
+    /// binding a resume superseded (half-open old connection).
+    Accept { unbind: Option<EndpointId> },
+    Reject,
 }
 
 /// Telemetry scalars riding along with an update.
@@ -122,6 +157,7 @@ struct Job {
     members: BTreeMap<usize, Member>,
     u: Mat,
     sample_rng: Pcg64,
+    session_rng: Pcg64,
     lipschitz_max: f64,
     /// index of the round currently collecting (or about to start)
     round: usize,
@@ -141,6 +177,7 @@ impl Job {
         let mut rng = Pcg64::new(cfg.seed);
         let u = Mat::gaussian(cfg.m, cfg.rank, &mut rng);
         let sample_rng = rng.fork(0x5A);
+        let session_rng = rng.fork(0x5E55);
         Job {
             id,
             cfg,
@@ -148,6 +185,7 @@ impl Job {
             members: BTreeMap::new(),
             u,
             sample_rng,
+            session_rng,
             lipschitz_max: 1.0,
             round: 0,
             rounds: Vec::new(),
@@ -165,7 +203,7 @@ impl Job {
     }
 
     fn fail(&mut self, reason: String, actions: &mut Vec<Action>) {
-        for m in self.members.values().filter(|m| m.alive) {
+        for m in self.members.values().filter(|m| m.alive && m.connected) {
             actions.push(Action::Close { ep: m.ep });
         }
         self.result = Some(Err(anyhow!("job {}: {reason}", self.id)));
@@ -173,10 +211,44 @@ impl Job {
         actions.push(Action::JobDone { job: self.id });
     }
 
-    /// Queue one message to a member, metering the downstream bytes.
-    fn send(&mut self, ep: EndpointId, bytes: Vec<u8>, actions: &mut Vec<Action>) {
+    /// Nonzero session token for a freshly accepted `Hello`.
+    fn issue_token(&mut self) -> u64 {
+        self.session_rng.next_u64() | 1
+    }
+
+    /// Grace window a disconnected member gets to resume its session.
+    fn grace(&self) -> Duration {
+        self.cfg.reconnect_grace.unwrap_or(self.cfg.round_timeout)
+    }
+
+    /// Queue one message to a member, stamping the session's downstream
+    /// sequence number and metering the bytes.
+    fn send_to(&mut self, client: usize, mut bytes: Vec<u8>, actions: &mut Vec<Action>) {
+        let m = self.members.get_mut(&client).expect("send_to: unknown member");
+        m.down_seq += 1;
+        super::protocol::restamp_seq(&mut bytes, m.down_seq);
+        let ep = m.ep;
         self.bytes_down += bytes.len() as u64;
         actions.push(Action::Send { ep, bytes });
+    }
+
+    /// Envelope-level replay guard: reject any stamped frame whose seq
+    /// was already accepted this session (a reconnect re-send the engine
+    /// processed before the link dropped, or a network duplicate).
+    /// Unstamped frames (seq 0, from transports that never resume)
+    /// bypass the check.
+    fn accept_up_seq(&mut self, client: usize, seq: u32) -> bool {
+        if seq == 0 {
+            return true;
+        }
+        match self.members.get_mut(&client) {
+            Some(m) if seq <= m.last_up_seq => false,
+            Some(m) => {
+                m.last_up_seq = seq;
+                true
+            }
+            None => true,
+        }
     }
 
     fn start_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
@@ -219,8 +291,12 @@ impl Job {
         let encoded = msg.encode_with(self.id, self.cfg.compression);
         let mut pending = BTreeSet::new();
         for &c in &selected {
-            let ep = self.members[&c].ep;
-            self.send(ep, encoded.clone(), actions);
+            // a member inside its grace window stays selected (and
+            // pending) so a resume mid-round rejoins this round, but
+            // there is no link to write to until it comes back
+            if self.members[&c].connected {
+                self.send_to(c, encoded.clone(), actions);
+            }
             pending.insert(c);
         }
         self.phase = Phase::Collecting(RoundAccum {
@@ -308,17 +384,22 @@ impl Job {
 
     fn start_finish(&mut self, now: Duration, actions: &mut Vec<Action>) {
         let mut pending = BTreeMap::new();
-        let alive: Vec<(usize, EndpointId)> = self
+        let alive: Vec<(usize, bool)> = self
             .members
             .iter()
             .filter(|(_, m)| m.alive)
-            .map(|(&id, m)| (id, m.ep))
+            .map(|(&id, m)| (id, m.connected))
             .collect();
-        for (id, ep) in alive {
+        for (id, connected) in alive {
             let reveal = self.cfg.privacy.is_public(id);
-            let msg = ToClient::Finish { reveal, final_u: self.u.clone() };
-            let encoded = msg.encode_with(self.id, super::compress::Compression::None);
-            self.send(ep, encoded, actions);
+            // an in-grace member still gets a pending slot: if it
+            // resumes before the finish deadline the Finish broadcast
+            // is re-delivered and its reveal still counts
+            if connected {
+                let msg = ToClient::Finish { reveal, final_u: self.u.clone() };
+                let encoded = msg.encode_with(self.id, super::compress::Compression::None);
+                self.send_to(id, encoded, actions);
+            }
             pending.insert(id, reveal);
         }
         for (&id, m) in &self.members {
@@ -366,9 +447,21 @@ impl Job {
         ep: EndpointId,
         client: usize,
         cols: usize,
+        token: u64,
+        seq: u32,
         now: Duration,
         actions: &mut Vec<Action>,
-    ) -> bool {
+    ) -> HelloOutcome {
+        if token != 0 {
+            return self.on_resume(ep, client, token, seq, now, actions);
+        }
+        // a token-less fresh Hello while an old session is still inside
+        // its grace window means the client restarted and cannot resume:
+        // the old session departs first, then the rejoin rules apply —
+        // exactly the pre-resume departure semantics
+        if self.members.get(&client).is_some_and(|m| m.alive && !m.connected) {
+            self.depart(client, now, actions);
+        }
         let active_from = match &self.phase {
             Phase::Handshake { .. } => 0,
             // elastic join: becomes eligible at the next round boundary
@@ -380,27 +473,29 @@ impl Job {
                     self.id
                 );
                 actions.push(Action::Close { ep });
-                return false;
+                return HelloOutcome::Reject;
             }
         };
-        if let Some(m) = self.members.get_mut(&client) {
-            if m.alive || self.cfg.fault_policy == FaultPolicy::Strict {
-                // a live duplicate is a protocol violation: fatal for a
-                // strict simulation, shed (endpoint only) otherwise
-                if self.cfg.fault_policy == FaultPolicy::Strict {
-                    self.fail(format!("duplicate Hello for client {client}"), actions);
-                } else {
-                    crate::log_warn!(
-                        "engine",
-                        "job {}: refusing duplicate Hello for client {client}",
-                        self.id
-                    );
-                    actions.push(Action::Close { ep });
-                }
-                return false;
+        if self.members.get(&client).is_some_and(|m| m.alive) {
+            // a live duplicate is a protocol violation: fatal for a
+            // strict simulation, shed (endpoint only) otherwise
+            if self.cfg.fault_policy == FaultPolicy::Strict {
+                self.fail(format!("duplicate Hello for client {client}"), actions);
+            } else {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: refusing duplicate Hello for client {client}",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
             }
+            return HelloOutcome::Reject;
+        }
+        let token = self.issue_token();
+        if let Some(m) = self.members.get_mut(&client) {
             // SkipMissing re-join: a departed member comes back on a
-            // fresh connection and re-enters at the next round boundary
+            // fresh connection (and a fresh session) and re-enters at
+            // the next round boundary
             crate::log_warn!(
                 "engine",
                 "job {}: client {client} rejoined, active from round {active_from}",
@@ -409,21 +504,169 @@ impl Job {
             m.ep = ep;
             m.cols = cols;
             m.alive = true;
+            m.connected = true;
+            m.token = token;
+            m.grace_until = None;
+            m.last_up_seq = seq;
+            m.down_seq = 0;
             m.active_from = active_from;
-            return true;
-        }
-        if active_from > 0 {
-            crate::log_warn!(
-                "engine",
-                "job {}: client {client} joined late, active from round {active_from}",
-                self.id
+        } else {
+            if active_from > 0 {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: client {client} joined late, active from round {active_from}",
+                    self.id
+                );
+            }
+            self.members.insert(
+                client,
+                Member {
+                    ep,
+                    cols,
+                    alive: true,
+                    connected: true,
+                    token,
+                    grace_until: None,
+                    last_up_seq: seq,
+                    down_seq: 0,
+                    active_from,
+                },
             );
         }
-        self.members.insert(client, Member { ep, cols, alive: true, active_from });
+        let welcome =
+            ToClient::Welcome { token }.encode_with(self.id, super::compress::Compression::None);
+        self.send_to(client, welcome, actions);
         if matches!(self.phase, Phase::Handshake { .. }) && self.members.len() >= self.expected {
             self.start_round(now, actions);
         }
-        true
+        HelloOutcome::Accept { unbind: None }
+    }
+
+    /// A `Hello` echoing a session token: rebind the member to its new
+    /// endpoint and re-deliver the in-flight downstream state.
+    fn on_resume(
+        &mut self,
+        ep: EndpointId,
+        client: usize,
+        token: u64,
+        seq: u32,
+        now: Duration,
+        actions: &mut Vec<Action>,
+    ) -> HelloOutcome {
+        let Some(m) = self.members.get(&client) else {
+            crate::log_warn!(
+                "engine",
+                "job {}: refusing resume for unknown client {client}",
+                self.id
+            );
+            actions.push(Action::Close { ep });
+            return HelloOutcome::Reject;
+        };
+        if m.token != token {
+            if self.cfg.fault_policy == FaultPolicy::Strict {
+                self.fail(format!("client {client} resumed with a stale session token"), actions);
+            } else {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: refusing resume for client {client}: stale session token",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
+            }
+            return HelloOutcome::Reject;
+        }
+        if !m.alive {
+            // grace expired before the client came back: its round
+            // state is gone, so this is the old departure-then-rejoin
+            // path — a fresh session re-entering at the next boundary
+            let active_from = match &self.phase {
+                Phase::Handshake { .. } => 0,
+                Phase::Collecting(_) => self.round + 1,
+                Phase::Finishing { .. } | Phase::Done => {
+                    crate::log_warn!(
+                        "engine",
+                        "job {}: client {client} resumed after training finished",
+                        self.id
+                    );
+                    actions.push(Action::Close { ep });
+                    return HelloOutcome::Reject;
+                }
+            };
+            let new_token = self.issue_token();
+            let m = self.members.get_mut(&client).expect("member vanished");
+            crate::log_warn!(
+                "engine",
+                "job {}: client {client} resumed an expired session — rejoining at round {active_from}",
+                self.id
+            );
+            m.ep = ep;
+            m.alive = true;
+            m.connected = true;
+            m.token = new_token;
+            m.grace_until = None;
+            m.last_up_seq = seq;
+            m.down_seq = 0;
+            m.active_from = active_from;
+            let welcome = ToClient::Welcome { token: new_token }
+                .encode_with(self.id, super::compress::Compression::None);
+            self.send_to(client, welcome, actions);
+            return HelloOutcome::Accept { unbind: None };
+        }
+        // live resume: supersede whatever endpoint the session was on
+        // (the old link may look open to the reactor — half-open TCP)
+        let m = self.members.get_mut(&client).expect("member vanished");
+        let unbind = if m.connected { Some(m.ep) } else { None };
+        if let Some(old) = unbind {
+            actions.push(Action::Close { ep: old });
+        }
+        m.ep = ep;
+        m.connected = true;
+        m.grace_until = None;
+        if seq > m.last_up_seq {
+            m.last_up_seq = seq;
+        }
+        crate::log_warn!("engine", "job {}: client {client} resumed its session", self.id);
+        let welcome =
+            ToClient::Welcome { token }.encode_with(self.id, super::compress::Compression::None);
+        self.send_to(client, welcome, actions);
+        // idempotent re-delivery: whatever this member still owes us is
+        // re-sent; duplicates of anything it already answered are shed
+        // by the seq guard, so the reduction stays bitwise identical
+        enum Redeliver {
+            Nothing,
+            Frame(Vec<u8>),
+            Bye,
+        }
+        let redeliver = match &self.phase {
+            Phase::Collecting(acc) if acc.pending.contains(&client) => {
+                let msg = ToClient::Round {
+                    round: self.round as u32,
+                    k_local: self.cfg.k_local as u32,
+                    eta: acc.eta,
+                    u: self.u.clone(),
+                };
+                Redeliver::Frame(msg.encode_with(self.id, self.cfg.compression))
+            }
+            Phase::Finishing { pending, .. } if pending.contains_key(&client) => {
+                let msg = ToClient::Finish { reveal: pending[&client], final_u: self.u.clone() };
+                Redeliver::Frame(msg.encode_with(self.id, super::compress::Compression::None))
+            }
+            Phase::Handshake { .. } | Phase::Collecting(_) => Redeliver::Nothing,
+            // the session already answered its Finish (or the job is
+            // over): nothing left to serve — orderly goodbye
+            Phase::Finishing { .. } | Phase::Done => Redeliver::Bye,
+        };
+        match redeliver {
+            Redeliver::Nothing => {}
+            Redeliver::Frame(bytes) => self.send_to(client, bytes, actions),
+            Redeliver::Bye => {
+                let bye = ToClient::Shutdown
+                    .encode_with(self.id, super::compress::Compression::None);
+                self.send_to(client, bye, actions);
+                actions.push(Action::Close { ep });
+            }
+        }
+        HelloOutcome::Accept { unbind }
     }
 
     fn on_update(
@@ -537,10 +780,9 @@ impl Job {
             ToServer::Withhold { .. } => self.withheld.push(client),
             _ => unreachable!("on_final only receives Reveal/Withhold"),
         }
-        let ep = self.members[&client].ep;
         let shutdown = ToClient::Shutdown.encode_with(self.id, super::compress::Compression::None);
-        self.send(ep, shutdown, actions);
-        actions.push(Action::Close { ep });
+        self.send_to(client, shutdown, actions);
+        actions.push(Action::Close { ep: self.members[&client].ep });
         if matches!(&self.phase, Phase::Finishing { pending, .. } if pending.is_empty()) {
             self.finish(actions);
         }
@@ -550,15 +792,42 @@ impl Job {
         if self.done() {
             return;
         }
+        let grace = self.grace();
+        {
+            let Some(m) = self.members.get_mut(&client) else { return };
+            if !m.alive || !m.connected {
+                return;
+            }
+            m.connected = false;
+            m.grace_until = Some(now + grace);
+        }
+        if self.cfg.fault_policy == FaultPolicy::Strict {
+            self.fail(format!("client {client} disconnected"), actions);
+            return;
+        }
+        if grace.is_zero() {
+            self.depart(client, now, actions);
+            return;
+        }
+        crate::log_warn!(
+            "engine",
+            "job {}: link to client {client} lost — session resumable for {:?}",
+            self.id,
+            grace
+        );
+    }
+
+    /// Remove a member from play: the pre-resume departure semantics,
+    /// reached via grace expiry, a deadline cut on a still-down link,
+    /// or a token-less fresh `Hello` superseding an in-grace session.
+    fn depart(&mut self, client: usize, now: Duration, actions: &mut Vec<Action>) {
         let Some(m) = self.members.get_mut(&client) else { return };
         if !m.alive {
             return;
         }
         m.alive = false;
-        if self.cfg.fault_policy == FaultPolicy::Strict {
-            self.fail(format!("client {client} disconnected"), actions);
-            return;
-        }
+        m.connected = false;
+        m.grace_until = None;
         crate::log_warn!("engine", "job {}: client {client} departed", self.id);
         match &mut self.phase {
             Phase::Handshake { .. } => {
@@ -582,7 +851,32 @@ impl Job {
         }
     }
 
+    /// Depart every disconnected member whose grace window has closed.
+    fn expire_grace(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        if self.done() {
+            return;
+        }
+        let expired: Vec<usize> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.alive && !m.connected && m.grace_until.is_some_and(|g| now >= g))
+            .map(|(&id, _)| id)
+            .collect();
+        for client in expired {
+            crate::log_warn!(
+                "engine",
+                "job {}: client {client} did not resume within its grace window",
+                self.id
+            );
+            self.depart(client, now, actions);
+        }
+    }
+
     fn poll_deadline(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        self.expire_grace(now, actions);
+        if self.done() {
+            return;
+        }
         match &mut self.phase {
             Phase::Handshake { deadline } => {
                 let d = *deadline.get_or_insert(now + self.cfg.round_timeout);
@@ -629,7 +923,21 @@ impl Job {
                             self.round
                         );
                         acc.pending.clear();
+                        // a straggler whose link is also down had its
+                        // chance to resume within the round — the cut
+                        // adjudicates its departure now rather than
+                        // letting the grace window stall another round
+                        let gone: Vec<usize> = stragglers
+                            .iter()
+                            .copied()
+                            .filter(|c| {
+                                self.members.get(c).is_some_and(|m| m.alive && !m.connected)
+                            })
+                            .collect();
                         self.close_round(now, actions);
+                        for client in gone {
+                            self.depart(client, now, actions);
+                        }
                     }
                 }
             }
@@ -649,11 +957,12 @@ impl Job {
                         pending.clear();
                         for id in missing {
                             self.withheld.push(id);
-                            let ep = self.members[&id].ep;
-                            let bye = ToClient::Shutdown
-                                .encode_with(self.id, super::compress::Compression::None);
-                            self.send(ep, bye, actions);
-                            actions.push(Action::Close { ep });
+                            if self.members.get(&id).is_some_and(|m| m.connected) {
+                                let bye = ToClient::Shutdown
+                                    .encode_with(self.id, super::compress::Compression::None);
+                                self.send_to(id, bye, actions);
+                                actions.push(Action::Close { ep: self.members[&id].ep });
+                            }
                         }
                         self.finish(actions);
                     }
@@ -664,11 +973,24 @@ impl Job {
     }
 
     fn next_deadline(&self) -> Option<Duration> {
-        match &self.phase {
+        let phase = match &self.phase {
             Phase::Handshake { deadline } => *deadline,
             Phase::Collecting(acc) => Some(acc.deadline),
             Phase::Finishing { deadline, .. } => Some(*deadline),
-            Phase::Done => None,
+            Phase::Done => return None,
+        };
+        // grace expiries are deadlines too: a driver sleeping until the
+        // round deadline would otherwise let departed-in-grace members
+        // linger past their window
+        let grace = self
+            .members
+            .values()
+            .filter(|m| m.alive && !m.connected)
+            .filter_map(|m| m.grace_until)
+            .min();
+        match (phase, grace) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
         }
     }
 }
@@ -713,7 +1035,7 @@ impl RoundEngine {
     /// Feed one received message. `now` is the caller's monotonic clock.
     pub fn handle_message(&mut self, ep: EndpointId, bytes: &[u8], now: Duration) -> Vec<Action> {
         let mut actions = Vec::new();
-        let (job_id, msg) = match ToServer::decode_job(bytes) {
+        let (job_id, seq, msg) = match ToServer::decode_full(bytes) {
             Ok(v) => v,
             Err(err) => {
                 // a corrupt stream makes the endpoint unusable: treat it
@@ -726,11 +1048,21 @@ impl RoundEngine {
             }
         };
 
-        if let ToServer::Hello { client, cols } = msg {
+        if let ToServer::Hello { client, cols, token } = msg {
             let client = client as usize;
-            if self.bindings.contains_key(&ep) {
-                // a bound endpoint re-introducing itself is as broken as
-                // a corrupt stream — same departure treatment
+            if let Some(&(bound_job, bound_client)) = self.bindings.get(&ep) {
+                if bound_job == job_id && bound_client == client {
+                    // the network duplicated this session's Hello frame:
+                    // the binding already exists, so the repeat is shed
+                    // rather than treated as a broken stream
+                    crate::log_warn!(
+                        "engine",
+                        "dropping duplicate Hello from endpoint {ep} (client {client})"
+                    );
+                    return actions;
+                }
+                // a bound endpoint re-introducing itself as someone else
+                // is as broken as a corrupt stream — departure treatment
                 crate::log_warn!("engine", "endpoint {ep} sent a second Hello");
                 actions.push(Action::Close { ep });
                 actions.extend(self.on_disconnect(ep, now));
@@ -741,9 +1073,20 @@ impl RoundEngine {
                 actions.push(Action::Close { ep });
                 return actions;
             };
+            if job.done() {
+                // job already reported JobDone: nothing left to resume
+                actions.push(Action::Close { ep });
+                return actions;
+            }
             job.bytes_up += bytes.len() as u64;
-            if job.on_hello(ep, client, cols as usize, now, &mut actions) {
-                self.bindings.insert(ep, (job_id, client));
+            match job.on_hello(ep, client, cols as usize, token, seq, now, &mut actions) {
+                HelloOutcome::Accept { unbind } => {
+                    if let Some(old) = unbind {
+                        self.bindings.remove(&old);
+                    }
+                    self.bindings.insert(ep, (job_id, client));
+                }
+                HelloOutcome::Reject => {}
             }
             return actions;
         }
@@ -758,6 +1101,13 @@ impl RoundEngine {
             return actions;
         }
         job.bytes_up += bytes.len() as u64;
+        if !job.accept_up_seq(bound_client, seq) {
+            crate::log_warn!(
+                "engine",
+                "job {bound_job}: dropping replayed frame (seq {seq}) from client {bound_client}"
+            );
+            return actions;
+        }
         if bound_job != job_id {
             job.fail(
                 format!("endpoint {ep} switched jobs mid-stream ({bound_job} → {job_id})"),
@@ -878,9 +1228,9 @@ mod tests {
         let mut engine = RoundEngine::new();
         engine.add_job(0, cfg, 2);
         let t = Duration::from_millis(1);
-        engine.handle_message(0, &ToServer::Hello { client: 0, cols: 4 }.encode(), t);
+        engine.handle_message(0, &ToServer::Hello { client: 0, cols: 4, token: 0 }.encode(), t);
         // second Hello completes the handshake and broadcasts round 0
-        engine.handle_message(1, &ToServer::Hello { client: 1, cols: 4 }.encode(), t);
+        engine.handle_message(1, &ToServer::Hello { client: 1, cols: 4, token: 0 }.encode(), t);
         let msg = update_msg(0, 0, m, rank);
         let (actions, update_allocs) =
             alloc_counter::measure(|| engine.handle_message(0, &msg, Duration::from_millis(2)));

@@ -7,11 +7,22 @@
 //! very end. Privacy (§2.2) is therefore structural, and the byte
 //! counters verify Eq. 28 exactly.
 //!
-//! Every message starts with a 5-byte versioned envelope: `[version u8]
-//! [job u32]`. The job id lets one coordinator process multiplex several
-//! concurrent solves over a single reactor — the engine routes each
-//! message to the job named in its envelope. Single-job setups (the
-//! driver, the CLI) use job 0 throughout.
+//! Every message starts with a 9-byte versioned envelope: `[version u8]
+//! [job u32][seq u32]`. The job id lets one coordinator process
+//! multiplex several concurrent solves over a single reactor — the
+//! engine routes each message to the job named in its envelope. The
+//! sequence number is per direction and per session: each side stamps
+//! its sends with a monotonically increasing counter so that after a
+//! reconnect the receiver can recognise (and drop) re-sent duplicates
+//! without inspecting payloads. Single-job setups (the driver, the CLI)
+//! use job 0 throughout; transports that never resume may leave seq 0.
+//!
+//! Session identity rides on the handshake: a fresh client sends
+//! `Hello { token: 0 }` and the coordinator replies `Welcome { token }`
+//! with a nonzero session token. A client that reconnects echoes that
+//! token in its next `Hello`, which is what lets the engine distinguish
+//! "new member" from "member resuming" and re-deliver the in-flight
+//! round instead of cutting the client.
 
 use crate::bail;
 use crate::error::Result;
@@ -21,23 +32,31 @@ use super::compress::{put_mat_compressed, read_mat_compressed, Compression};
 use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
 
 /// Wire protocol version (bumped when the envelope or a message layout
-/// changes incompatibly). Version 2 introduced the job-id envelope.
-pub const WIRE_VERSION: u8 = 2;
+/// changes incompatibly). Version 2 introduced the job-id envelope;
+/// version 3 added the per-direction sequence number to the envelope
+/// and session tokens (`Hello.token` / `Welcome`) for reconnect.
+pub const WIRE_VERSION: u8 = 3;
 
-/// Size of the `[version u8][job u32]` envelope on every message.
-pub const ENVELOPE_BYTES: usize = 5;
+/// Size of the `[version u8][job u32][seq u32]` envelope on every message.
+pub const ENVELOPE_BYTES: usize = 9;
 
-fn put_envelope(buf: &mut Vec<u8>, job: u32) {
+fn put_envelope(buf: &mut Vec<u8>, job: u32, seq: u32) {
     buf.push(WIRE_VERSION);
     put_u32(buf, job);
+    put_u32(buf, seq);
 }
 
-fn read_envelope(r: &mut Reader<'_>) -> Result<u32> {
+fn read_envelope(r: &mut Reader<'_>) -> Result<(u32, u32)> {
     let version = r.u8()?;
     if version != WIRE_VERSION {
-        bail!("unsupported wire version {version} (expected {WIRE_VERSION})");
+        bail!(
+            "unsupported wire version {version}: this build speaks wire version {WIRE_VERSION} \
+             (v{version} peers must upgrade; the envelope gained a sequence number in v3)"
+        );
     }
-    r.u32()
+    let job = r.u32()?;
+    let seq = r.u32()?;
+    Ok((job, seq))
 }
 
 /// Downstream: server → client.
@@ -50,14 +69,19 @@ pub enum ToClient {
     Finish { reveal: bool, final_u: Mat },
     /// Orderly shutdown (no reply expected).
     Shutdown,
+    /// Handshake accepted: here is your session token. A client echoes
+    /// it in `Hello` when reconnecting to resume its session.
+    Welcome { token: u64 },
 }
 
 /// Upstream: client → server.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ToServer {
     /// Hello: client id + number of columns held (for weighted
-    /// aggregation and n_i/n bookkeeping).
-    Hello { client: u32, cols: u64 },
+    /// aggregation and n_i/n bookkeeping). `token` is 0 on a fresh
+    /// connect; a reconnecting client echoes the `Welcome` token of the
+    /// session it is resuming.
+    Hello { client: u32, cols: u64, token: u64 },
     /// End-of-round update: the locally advanced U_i plus telemetry
     /// scalars (gradient norm, curvature estimate, err contribution).
     Update {
@@ -81,23 +105,30 @@ pub enum ToServer {
 const TAG_ROUND: u8 = 1;
 const TAG_FINISH: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
+const TAG_WELCOME: u8 = 4;
 const TAG_HELLO: u8 = 16;
 const TAG_UPDATE: u8 = 17;
 const TAG_REVEAL: u8 = 18;
 const TAG_WITHHOLD: u8 = 19;
 
 impl ToClient {
-    /// Encode for job 0 with the default (lossless) codec.
+    /// Encode for job 0, seq 0, with the default (lossless) codec.
     pub fn encode(&self) -> Vec<u8> {
-        self.encode_with(0, Compression::None)
+        self.encode_seq(0, 0, Compression::None)
     }
 
-    /// Encode for `job`; `codec` applies to the consensus factor in
-    /// `Round` (the per-round payload — Eq. 28). `Finish.final_u` stays
-    /// lossless: it is sent once and defines the revealed L_i.
+    /// Encode for `job` with seq 0 (transports that never resume).
     pub fn encode_with(&self, job: u32, codec: Compression) -> Vec<u8> {
+        self.encode_seq(job, 0, codec)
+    }
+
+    /// Encode for `job` stamping sequence number `seq`; `codec` applies
+    /// to the consensus factor in `Round` (the per-round payload —
+    /// Eq. 28). `Finish.final_u` stays lossless: it is sent once and
+    /// defines the revealed L_i.
+    pub fn encode_seq(&self, job: u32, seq: u32, codec: Compression) -> Vec<u8> {
         let mut buf = Vec::new();
-        put_envelope(&mut buf, job);
+        put_envelope(&mut buf, job, seq);
         match self {
             ToClient::Round { round, k_local, eta, u } => {
                 buf.push(TAG_ROUND);
@@ -112,19 +143,29 @@ impl ToClient {
                 put_mat(&mut buf, final_u);
             }
             ToClient::Shutdown => buf.push(TAG_SHUTDOWN),
+            ToClient::Welcome { token } => {
+                buf.push(TAG_WELCOME);
+                put_u64(&mut buf, *token);
+            }
         }
         buf
     }
 
-    /// Decode, discarding the job id (single-job clients and tests).
+    /// Decode, discarding the envelope (single-job clients and tests).
     pub fn decode(bytes: &[u8]) -> Result<ToClient> {
-        Ok(Self::decode_job(bytes)?.1)
+        Ok(Self::decode_full(bytes)?.2)
     }
 
-    /// Decode the envelope and message: `(job, msg)`.
+    /// Decode, discarding the sequence number: `(job, msg)`.
     pub fn decode_job(bytes: &[u8]) -> Result<(u32, ToClient)> {
+        let (job, _, msg) = Self::decode_full(bytes)?;
+        Ok((job, msg))
+    }
+
+    /// Decode the full envelope and message: `(job, seq, msg)`.
+    pub fn decode_full(bytes: &[u8]) -> Result<(u32, u32, ToClient)> {
         let mut r = Reader::new(bytes);
-        let job = read_envelope(&mut r)?;
+        let (job, seq) = read_envelope(&mut r)?;
         let msg = match r.u8()? {
             TAG_ROUND => ToClient::Round {
                 round: r.u32()?,
@@ -134,29 +175,37 @@ impl ToClient {
             },
             TAG_FINISH => ToClient::Finish { reveal: r.u8()? != 0, final_u: r.mat()? },
             TAG_SHUTDOWN => ToClient::Shutdown,
+            TAG_WELCOME => ToClient::Welcome { token: r.u64()? },
             t => bail!("unknown ToClient tag {t}"),
         };
         r.expect_end()?;
-        Ok((job, msg))
+        Ok((job, seq, msg))
     }
 }
 
 impl ToServer {
-    /// Encode for job 0 with the default (lossless) codec.
+    /// Encode for job 0, seq 0, with the default (lossless) codec.
     pub fn encode(&self) -> Vec<u8> {
-        self.encode_with(0, Compression::None)
+        self.encode_seq(0, 0, Compression::None)
     }
 
-    /// Encode for `job`; `codec` applies to the consensus factor in
-    /// `Update`. `Reveal` blocks stay lossless (they ARE the output).
+    /// Encode for `job` with seq 0 (transports that never resume).
     pub fn encode_with(&self, job: u32, codec: Compression) -> Vec<u8> {
+        self.encode_seq(job, 0, codec)
+    }
+
+    /// Encode for `job` stamping sequence number `seq`; `codec` applies
+    /// to the consensus factor in `Update`. `Reveal` blocks stay
+    /// lossless (they ARE the output).
+    pub fn encode_seq(&self, job: u32, seq: u32, codec: Compression) -> Vec<u8> {
         let mut buf = Vec::new();
-        put_envelope(&mut buf, job);
+        put_envelope(&mut buf, job, seq);
         match self {
-            ToServer::Hello { client, cols } => {
+            ToServer::Hello { client, cols, token } => {
                 buf.push(TAG_HELLO);
                 put_u32(&mut buf, *client);
                 put_u64(&mut buf, *cols);
+                put_u64(&mut buf, *token);
             }
             ToServer::Update { client, round, u, grad_norm, lipschitz, err_num, local_secs } => {
                 buf.push(TAG_UPDATE);
@@ -182,17 +231,25 @@ impl ToServer {
         buf
     }
 
-    /// Decode, discarding the job id (single-job tests).
+    /// Decode, discarding the envelope (single-job tests).
     pub fn decode(bytes: &[u8]) -> Result<ToServer> {
-        Ok(Self::decode_job(bytes)?.1)
+        Ok(Self::decode_full(bytes)?.2)
     }
 
-    /// Decode the envelope and message: `(job, msg)`.
+    /// Decode, discarding the sequence number: `(job, msg)`.
     pub fn decode_job(bytes: &[u8]) -> Result<(u32, ToServer)> {
+        let (job, _, msg) = Self::decode_full(bytes)?;
+        Ok((job, msg))
+    }
+
+    /// Decode the full envelope and message: `(job, seq, msg)`.
+    pub fn decode_full(bytes: &[u8]) -> Result<(u32, u32, ToServer)> {
         let mut r = Reader::new(bytes);
-        let job = read_envelope(&mut r)?;
+        let (job, seq) = read_envelope(&mut r)?;
         let msg = match r.u8()? {
-            TAG_HELLO => ToServer::Hello { client: r.u32()?, cols: r.u64()? },
+            TAG_HELLO => {
+                ToServer::Hello { client: r.u32()?, cols: r.u64()?, token: r.u64()? }
+            }
             TAG_UPDATE => ToServer::Update {
                 client: r.u32()?,
                 round: r.u32()?,
@@ -207,8 +264,16 @@ impl ToServer {
             t => bail!("unknown ToServer tag {t}"),
         };
         r.expect_end()?;
-        Ok((job, msg))
+        Ok((job, seq, msg))
     }
+}
+
+/// Overwrite the sequence-number field of an already-encoded frame.
+/// The engine encodes a broadcast once, then stamps each member's
+/// per-session downstream counter into that member's copy.
+pub fn restamp_seq(frame: &mut [u8], seq: u32) {
+    debug_assert!(frame.len() >= ENVELOPE_BYTES);
+    frame[5..9].copy_from_slice(&seq.to_le_bytes());
 }
 
 /// Bytes of a compressed-matrix field (tag + dims header + payload).
@@ -249,6 +314,7 @@ mod tests {
             ToClient::Finish { reveal: true, final_u: u.clone() },
             ToClient::Finish { reveal: false, final_u: u },
             ToClient::Shutdown,
+            ToClient::Welcome { token: 0xFEED_F00D_CAFE_0001 },
         ] {
             let bytes = msg.encode();
             assert_eq!(ToClient::decode(&bytes).unwrap(), msg);
@@ -262,7 +328,8 @@ mod tests {
         let l = Mat::gaussian(6, 4, &mut rng);
         let s = Mat::gaussian(6, 4, &mut rng);
         for msg in [
-            ToServer::Hello { client: 3, cols: 44 },
+            ToServer::Hello { client: 3, cols: 44, token: 0 },
+            ToServer::Hello { client: 3, cols: 44, token: 0x1234_5678_9ABC_DEF1 },
             ToServer::Update {
                 client: 1,
                 round: 9,
@@ -302,23 +369,64 @@ mod tests {
     fn decode_rejects_unknown_tag() {
         let mut bad = vec![WIRE_VERSION];
         put_u32(&mut bad, 0);
+        put_u32(&mut bad, 0);
         bad.push(99);
         assert!(ToClient::decode(&bad).is_err());
         assert!(ToServer::decode(&bad).is_err());
     }
 
     #[test]
-    fn envelope_carries_job_and_rejects_bad_version() {
+    fn envelope_carries_job_seq_and_rejects_bad_version() {
         let msg = ToClient::Shutdown;
-        let bytes = msg.encode_with(7, Compression::None);
+        let bytes = msg.encode_seq(7, 41, Compression::None);
         assert_eq!(bytes.len(), ENVELOPE_BYTES + 1);
+        assert_eq!(ToClient::decode_full(&bytes).unwrap(), (7, 41, ToClient::Shutdown));
         assert_eq!(ToClient::decode_job(&bytes).unwrap(), (7, ToClient::Shutdown));
-        let up = ToServer::Withhold { client: 3 }.encode_with(9, Compression::None);
-        assert_eq!(ToServer::decode_job(&up).unwrap(), (9, ToServer::Withhold { client: 3 }));
+        let up = ToServer::Withhold { client: 3 }.encode_seq(9, 5, Compression::None);
+        assert_eq!(
+            ToServer::decode_full(&up).unwrap(),
+            (9, 5, ToServer::Withhold { client: 3 })
+        );
         // wrong version byte is refused outright
         let mut stale = bytes.clone();
         stale[0] = WIRE_VERSION + 1;
         assert!(ToClient::decode(&stale).is_err());
+    }
+
+    #[test]
+    fn v2_frames_rejected_with_typed_error_naming_both_versions() {
+        // A well-formed *version 2* frame: `[2u8][job u32]` envelope (no
+        // seq field) followed by a Shutdown tag. A v3 decoder must reject
+        // it with the versioned error — not panic, and not misparse the
+        // tag byte as part of a seq field and return Ok.
+        let mut v2 = vec![2u8];
+        put_u32(&mut v2, 0);
+        v2.push(3); // TAG_SHUTDOWN in both versions
+        let err = ToClient::decode(&v2).expect_err("v2 frame must not decode");
+        let text = err.to_string();
+        assert!(text.contains("wire version 2"), "names the peer's version: {text}");
+        assert!(
+            text.contains(&format!("wire version {WIRE_VERSION}")),
+            "names this build's version: {text}"
+        );
+        // the upstream direction takes the same gate
+        let mut v2_up = vec![2u8];
+        put_u32(&mut v2_up, 0);
+        v2_up.push(16); // TAG_HELLO
+        put_u32(&mut v2_up, 0);
+        put_u64(&mut v2_up, 10);
+        let err = ToServer::decode(&v2_up).expect_err("v2 Hello must not decode");
+        assert!(err.to_string().contains("wire version 2"));
+    }
+
+    #[test]
+    fn restamp_rewrites_only_the_seq_field() {
+        let msg = ToClient::Welcome { token: 77 };
+        let mut a = msg.encode_seq(3, 1, Compression::None);
+        let b = msg.encode_seq(3, 9, Compression::None);
+        restamp_seq(&mut a, 9);
+        assert_eq!(a, b);
+        assert_eq!(ToClient::decode_full(&a).unwrap(), (3, 9, msg));
     }
 
     #[test]
@@ -327,7 +435,7 @@ mod tests {
         // Reveal carries matrices, and it is sent exclusively when the
         // server granted reveal=true (see client.rs); Update carries just
         // the m×r consensus factor.
-        let bytes = ToServer::Hello { client: 0, cols: 10 }.encode();
+        let bytes = ToServer::Hello { client: 0, cols: 10, token: u64::MAX }.encode();
         assert!(bytes.len() < 32, "Hello is scalar-only");
         let bytes = ToServer::Withhold { client: 0 }.encode();
         assert!(bytes.len() < 16, "Withhold is scalar-only");

@@ -37,8 +37,9 @@ pub enum FaultPolicy {
     Strict,
     /// straggler cut: aggregate over the clients that did reply before
     /// the deadline (FedAvg partial participation); disconnected clients
-    /// leave the membership, slow ones just miss the round. A round with
-    /// zero replies still aborts.
+    /// get a grace window ([`ServerConfig::reconnect_grace`]) to resume
+    /// their session before they leave the membership, slow ones just
+    /// miss the round. A round with zero replies still aborts.
     SkipMissing,
 }
 
@@ -71,6 +72,12 @@ pub struct ServerConfig {
     /// fraction of clients sampled per round (FedAvg partial
     /// participation; 1.0 = everyone, the paper's Algorithm 1)
     pub participation: f64,
+    /// how long a disconnected member may take to resume its session
+    /// before it departs for good (`None` = the round timeout). Only
+    /// meaningful under [`FaultPolicy::SkipMissing`]; `Strict` treats
+    /// every disconnect as fatal. `Some(Duration::ZERO)` restores the
+    /// pre-resume immediate-departure semantics.
+    pub reconnect_grace: Option<Duration>,
 }
 
 impl ServerConfig {
@@ -90,6 +97,7 @@ impl ServerConfig {
             err_stop: None,
             compression: Compression::None,
             participation: 1.0,
+            reconnect_grace: None,
         }
     }
 }

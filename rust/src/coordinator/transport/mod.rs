@@ -22,6 +22,7 @@
 pub mod framing;
 pub mod inproc;
 pub mod reactor;
+pub mod retry;
 pub mod tcp;
 
 use std::time::Duration;

@@ -1,0 +1,97 @@
+//! Reconnect policy: capped jittered exponential backoff.
+//!
+//! One policy object parameterises both retry loops a worker runs —
+//! the initial connect (so `worker` no longer races `serve` at startup)
+//! and mid-session reconnects after a link drop. Delays grow as
+//! `base · 2^attempt`, saturate at `max`, and are jittered down by a
+//! uniform factor in `[0.5, 1.0)` so a fleet of workers severed by the
+//! same network event does not reconnect in lockstep (the classic
+//! thundering-herd failure of un-jittered backoff).
+
+use std::time::Duration;
+
+use crate::rng::Pcg64;
+
+/// Backoff and budget knobs for a resumable client transport
+/// (see `coordinator::client::run_client_resumable`).
+#[derive(Clone, Debug)]
+pub struct BackoffPolicy {
+    /// first retry delay (before jitter)
+    pub base: Duration,
+    /// ceiling on any single delay (before jitter)
+    pub max: Duration,
+    /// consecutive failed attempts tolerated before giving up. The
+    /// budget is per outage — it refills when the session makes
+    /// progress. `0` means a single attempt, i.e. the pre-resume
+    /// fail-fast behavior.
+    pub retry_budget: u32,
+    /// jitter stream seed (mixed with the client id by the caller so
+    /// workers sharing a policy still spread out)
+    pub seed: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy {
+            base: Duration::from_millis(200),
+            max: Duration::from_secs(10),
+            retry_budget: 8,
+            seed: 0xB0FF,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// Delay before retry number `attempt` (0-based), jittered.
+    pub fn delay(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        // cap the shift first: 2^attempt overflows fast and every
+        // realistic budget saturates at `max` long before that anyway
+        let exp = attempt.min(20);
+        let raw = self
+            .base
+            .checked_mul(1u32 << exp)
+            .map_or(self.max, |d| d.min(self.max));
+        let jitter = 0.5 + 0.5 * rng.next_f64();
+        raw.mul_f64(jitter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_saturate_and_jitter_downward() {
+        let policy = BackoffPolicy {
+            base: Duration::from_millis(100),
+            max: Duration::from_secs(2),
+            retry_budget: 8,
+            seed: 7,
+        };
+        let mut rng = Pcg64::new(policy.seed);
+        let mut prev_raw = Duration::ZERO;
+        for attempt in 0..16 {
+            let d = policy.delay(attempt, &mut rng);
+            let raw = policy
+                .base
+                .checked_mul(1u32 << attempt.min(20))
+                .map_or(policy.max, |d| d.min(policy.max));
+            // jitter keeps the delay in [raw/2, raw)
+            assert!(d >= raw.mul_f64(0.5), "attempt {attempt}: {d:?} < half of {raw:?}");
+            assert!(d < raw, "attempt {attempt}: {d:?} not below {raw:?}");
+            assert!(raw >= prev_raw, "raw schedule must be monotone");
+            assert!(raw <= policy.max);
+            prev_raw = raw;
+        }
+        // the tail of the schedule sits at the cap
+        assert_eq!(prev_raw, policy.max);
+    }
+
+    #[test]
+    fn huge_attempt_counts_do_not_overflow() {
+        let policy = BackoffPolicy::default();
+        let mut rng = Pcg64::new(1);
+        let d = policy.delay(u32::MAX, &mut rng);
+        assert!(d <= policy.max);
+    }
+}

@@ -20,6 +20,11 @@
 //! 5. **Recovery under budget** — when the schedule stays inside
 //!    [`FaultSchedule::under_budget`], every client reveals and the
 //!    assembled Eq. 30 error stays within the §4 tolerance.
+//! 6. **Invisible resumes** — when every fault is a link flap whose
+//!    outage fits the round deadline, the session-resume path must make
+//!    the run indistinguishable from the uninterrupted one: no abort, no
+//!    round cut, and `U` plus the per-round telemetry bitwise equal to
+//!    the fault-free reference.
 //!
 //! A failing seed reproduces exactly (`dcf-pca simulate --seeds S..S+1`)
 //! and [`SimHarness::shrink`] greedily deletes fault events while the
@@ -33,20 +38,20 @@ use std::time::{Duration, Instant};
 use crate::bail;
 use crate::error::Result;
 
-use crate::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
+use crate::algorithms::factor::FactorHyper;
+use crate::coordinator::client::{ClientConfig, ClientSession, FaultPlan};
 use crate::coordinator::compress::Compression;
 use crate::coordinator::engine::{Action, RoundEngine};
-use crate::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
-use crate::coordinator::protocol::{ToClient, ToServer};
+use crate::coordinator::kernel::NativeKernel;
+use crate::coordinator::protocol::ToClient;
 use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use crate::coordinator::transport::reactor::{drive, IoEvent, Reactor};
-use crate::linalg::{matmul_nt, Mat, Workspace};
+use crate::linalg::Mat;
 use crate::rpca::partition::ColumnPartition;
 use crate::rpca::problem::{ProblemSpec, RpcaProblem};
-use crate::runtime::pool;
 
 use super::net::{SimNet, SimPeer};
-use super::schedule::FaultSchedule;
+use super::schedule::{Fault, FaultSchedule};
 
 /// Shape and tolerances of the simulated federation.
 #[derive(Clone, Debug)]
@@ -140,113 +145,36 @@ pub struct FuzzSummary {
 }
 
 // ---------------------------------------------------------------------------
-// sans-I/O client (mirrors coordinator::client::run_client exactly)
+// sans-I/O client: the REAL session state machine behind the sim-peer
+// interface (the same ClientSession the worker binary runs, so resume,
+// seq guards and reply caching are exercised verbatim)
 // ---------------------------------------------------------------------------
 
 struct SimClientPeer {
-    id: u32,
-    job: u32,
-    m_block: Mat,
-    hyper: FactorHyper,
-    n_frac: f64,
-    polish_sweeps: usize,
-    truth: Option<(Mat, Mat)>,
-    state: ClientState,
-    ws: Workspace,
+    session: ClientSession,
     kernel: NativeKernel,
 }
 
 impl SimClientPeer {
-    fn new(
-        id: usize,
-        m_block: Mat,
-        hyper: FactorHyper,
-        n_frac: f64,
-        polish_sweeps: usize,
-        truth: Option<(Mat, Mat)>,
-    ) -> Self {
-        let (m, n_i) = m_block.shape();
-        SimClientPeer {
-            id: id as u32,
-            job: 0,
-            m_block,
-            hyper,
-            n_frac,
-            polish_sweeps,
-            truth,
-            state: ClientState::zeros(m, n_i, hyper.rank),
-            ws: Workspace::new(m, n_i, hyper.rank),
-            kernel: NativeKernel::new(),
-        }
+    fn new(cfg: ClientConfig) -> Self {
+        SimClientPeer { session: ClientSession::new(cfg), kernel: NativeKernel::new() }
     }
 }
 
 impl SimPeer for SimClientPeer {
+    /// First connect *and* every redial: `ClientSession::hello` carries
+    /// the session token once a `Welcome` landed, so a post-flap restart
+    /// resumes instead of re-introducing itself.
     fn on_start(&mut self) -> Vec<Vec<u8>> {
-        vec![ToServer::Hello { client: self.id, cols: self.m_block.cols() as u64 }
-            .encode_with(self.job, Compression::None)]
+        vec![self.session.hello()]
     }
 
     fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>> {
-        let (job, msg) =
-            ToClient::decode_job(bytes).expect("client received undecodable bytes from engine");
-        assert_eq!(job, self.job, "client {} got a message for job {job}", self.id);
-        match msg {
-            ToClient::Round { round, k_local, eta, u } => {
-                let mut u = u;
-                let out = self
-                    .kernel
-                    .local_epoch(
-                        &mut u,
-                        &self.m_block,
-                        &mut self.state,
-                        &self.hyper,
-                        self.n_frac,
-                        eta,
-                        k_local as usize,
-                        &mut self.ws,
-                    )
-                    .expect("local epoch failed");
-                let err_num = match &self.truth {
-                    Some((l0, s0)) => {
-                        let l_i = matmul_nt(&u, &self.state.v);
-                        (&l_i - l0).frob_norm_sq() + (&self.state.s - s0).frob_norm_sq()
-                    }
-                    None => f64::NAN,
-                };
-                vec![ToServer::Update {
-                    client: self.id,
-                    round,
-                    u,
-                    grad_norm: out.grad_norm,
-                    lipschitz: out.lipschitz,
-                    err_num,
-                    local_secs: 0.0,
-                }
-                .encode_with(self.job, Compression::None)]
-            }
-            ToClient::Finish { reveal, final_u } => {
-                for _ in 0..self.polish_sweeps {
-                    polish_sweep(
-                        &final_u,
-                        &self.m_block,
-                        &mut self.state,
-                        &self.hyper,
-                        pool::global(),
-                        &mut self.ws,
-                    )
-                    .expect("polish sweep failed");
-                }
-                let reply = if reveal {
-                    let l_i = matmul_nt(&final_u, &self.state.v);
-                    ToServer::Reveal { client: self.id, l: l_i, s: self.state.s.clone() }
-                } else {
-                    ToServer::Withhold { client: self.id }
-                };
-                vec![reply.encode_with(self.job, Compression::None)]
-            }
-            ToClient::Shutdown => Vec::new(),
-        }
+        // a session-level error (undecodable frame, wrong job, bad
+        // shape) is an engine bug — panic so the harness reports it as
+        // an invariant violation with its replay seed
+        let step = self.session.handle(bytes, &self.kernel).expect("client session failed");
+        step.replies
     }
 }
 
@@ -258,6 +186,9 @@ impl SimPeer for SimClientPeer {
 #[derive(Default)]
 struct RunTrace {
     last_round: Option<usize>,
+    /// endpoints the world announced via `Connected` and has not since
+    /// `Disconnected` (redials open fresh endpoint ids)
+    open: BTreeSet<usize>,
     closed: BTreeSet<usize>,
     job_done: bool,
     disconnects: usize,
@@ -369,17 +300,22 @@ impl SimHarness {
         (0..self.cfg.clients)
             .map(|i| {
                 let (a, b) = self.partition.range(i);
-                Box::new(SimClientPeer::new(
-                    i,
-                    self.problem.observed.cols_range(a, b),
-                    self.hyper,
-                    (b - a) as f64 / self.cfg.n as f64,
-                    self.cfg.polish_sweeps,
-                    Some((
+                let cfg = ClientConfig {
+                    id: i,
+                    job: 0,
+                    data: Box::new(self.problem.observed.cols_range(a, b)),
+                    hyper: self.hyper,
+                    n_frac: (b - a) as f64 / self.cfg.n as f64,
+                    polish_sweeps: self.cfg.polish_sweeps,
+                    truth: Some((
                         self.problem.l0.cols_range(a, b),
                         self.problem.s0.cols_range(a, b),
                     )),
-                )) as Box<dyn SimPeer>
+                    faults: FaultPlan::default(),
+                    compression: Compression::None,
+                    dp_sigma: 0.0,
+                };
+                Box::new(SimClientPeer::new(cfg)) as Box<dyn SimPeer>
             })
             .collect()
     }
@@ -416,7 +352,7 @@ impl SimHarness {
         if trace.closed.contains(&ep) {
             return Err(format!("engine sent to endpoint {ep} after closing it"));
         }
-        if ep >= self.cfg.clients {
+        if !trace.open.contains(&ep) {
             return Err(format!("engine sent to unknown endpoint {ep}"));
         }
         let (job, msg) = ToClient::decode_job(bytes)
@@ -481,11 +417,15 @@ impl SimHarness {
             let now = net.now();
             let mut actions: VecDeque<Action> = VecDeque::new();
             match event {
-                IoEvent::Connected(ep) => engine.on_connect(ep),
+                IoEvent::Connected(ep) => {
+                    trace.open.insert(ep);
+                    engine.on_connect(ep);
+                }
                 IoEvent::Message(ep, bytes) => {
                     actions.extend(engine.handle_message(ep, &bytes, now))
                 }
                 IoEvent::Disconnected(ep) => {
+                    trace.open.remove(&ep);
                     trace.disconnects += 1;
                     actions.extend(engine.on_disconnect(ep, now));
                 }
@@ -547,6 +487,13 @@ impl SimHarness {
         self.check_schedule(&FaultSchedule::draw(seed, self.cfg.clients, self.cfg.rounds))
     }
 
+    /// Like [`check_seed`](Self::check_seed) but under the flap-heavy
+    /// `--flaky` distribution ([`FaultSchedule::draw_flaky`]), which
+    /// hammers the session-resume path specifically.
+    pub fn check_seed_flaky(&self, seed: u64) -> std::result::Result<SimReport, Violation> {
+        self.check_schedule(&FaultSchedule::draw_flaky(seed, self.cfg.clients, self.cfg.rounds))
+    }
+
     /// The exact CLI invocation reproducing `seed` under this config:
     /// every `SimConfig` field has a `simulate` flag, and all of them
     /// are emitted here.
@@ -582,8 +529,12 @@ impl SimHarness {
             // check_schedule verbatim, and the handle must say so
             let derived =
                 FaultSchedule::draw(schedule.seed, schedule.clients, schedule.rounds);
+            let flaky =
+                FaultSchedule::draw_flaky(schedule.seed, schedule.clients, schedule.rounds);
             let replay = if *schedule == derived {
                 self.replay_command(schedule.seed)
+            } else if *schedule == flaky {
+                format!("{} --flaky", self.replay_command(schedule.seed))
             } else {
                 format!(
                     "SimHarness::check_schedule with the fault list above (hand-built or \
@@ -618,8 +569,19 @@ impl SimHarness {
             bitwise_clean: false,
         };
 
+        // flap worlds whose every outage resumes inside the deadline must
+        // be *invisible*: no abort, no round cut, bitwise-identical output
+        let recoverable_flaps_only = !schedule.faults.is_empty()
+            && schedule.faults.iter().all(|f| matches!(f, Fault::Disconnect { .. }))
+            && schedule.under_budget(self.cfg.round_timeout);
+
         let out = match outcome {
             Err(err) => {
+                if recoverable_flaps_only {
+                    return Err(viol(format!(
+                        "job aborted under recoverable link flaps: {err}"
+                    )));
+                }
                 // SkipMissing may only abort when faults starved the job
                 if schedule.has_healthy_client() {
                     return Err(viol(format!(
@@ -699,6 +661,36 @@ impl SimHarness {
                     return Err(viol(format!(
                         "round {} telemetry diverged from the fault-free run \
                          (slot-ordered reduction broken)",
+                        a.round
+                    )));
+                }
+            }
+            report.bitwise_clean = true;
+        }
+
+        // invariant 6 (the reconnect tentpole): a session that resumes
+        // within the round deadline is never cut — the run must look
+        // exactly like the uninterrupted one, bit for bit
+        if recoverable_flaps_only {
+            if !full_participation {
+                return Err(viol(format!(
+                    "a recoverable flap cut a client: {} rounds run, min participants {}",
+                    out.rounds.len(),
+                    report.min_participants
+                )));
+            }
+            if out.u != self.reference.u {
+                return Err(viol(
+                    "recoverable flaps changed U bitwise vs the fault-free run".to_string(),
+                ));
+            }
+            for (a, b) in out.rounds.iter().zip(&self.reference.rounds) {
+                if a.err != b.err
+                    || a.mean_grad_norm != b.mean_grad_norm
+                    || a.dispersion != b.dispersion
+                {
+                    return Err(viol(format!(
+                        "round {} telemetry diverged under recoverable flaps",
                         a.round
                     )));
                 }

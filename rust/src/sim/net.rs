@@ -12,13 +12,18 @@
 //! Every message's fate — deliver after latency, drop, duplicate,
 //! delay, partition-block — comes from the [`FaultSchedule`]; client
 //! compute happens inline (virtual-instant) when a delivery event pops,
-//! via the [`SimPeer`] registered for the endpoint. Crashes and late
-//! joins are schedule events too: a crash surfaces to the engine as the
-//! `Disconnected` it would see from a TCP reset, a join as a fresh
-//! `Connected` + `Hello`.
+//! via the [`SimPeer`] registered for the client. Crashes, late joins
+//! and link flaps are schedule events too: a crash or flap surfaces to
+//! the engine as the `Disconnected` it would see from a TCP reset, a
+//! join or redial as a fresh `Connected` + `Hello`.
 //!
-//! Endpoint ids equal client ids (the sim never reconnects an endpoint),
-//! which keeps fault-schedule lookups and engine bindings aligned.
+//! Endpoints are connections, not clients: a founding member's first
+//! connection gets endpoint id == client id (so flap-free worlds are
+//! bitwise identical to the pre-reconnect sim), and every redial after
+//! a [`Fault::Disconnect`] allocates a fresh endpoint id. Messages
+//! in flight on either leg when the link drops are lost — a delivery
+//! whose endpoint is stale (or whose link is down) by pop time never
+//! arrives, exactly like bytes buffered in a reset TCP connection.
 
 use std::collections::VecDeque;
 use std::time::Duration;
@@ -30,7 +35,7 @@ use crate::coordinator::engine::EndpointId;
 use crate::coordinator::transport::reactor::{IoEvent, Reactor};
 
 use super::clock::{EventQueue, SimClock};
-use super::schedule::{Dir, FaultSchedule};
+use super::schedule::{Dir, Fault, FaultSchedule};
 
 /// A sans-I/O client: consumes protocol bytes, produces protocol bytes.
 /// Implementations must mirror the real worker loop so a simulated run
@@ -41,13 +46,24 @@ pub trait SimPeer {
 
     /// Deliver one server→client message; returns the replies.
     fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>>;
+
+    /// Messages the peer emits when it redials after a link flap. The
+    /// default re-runs `on_start`; a session-aware peer emits a
+    /// token-bearing resume `Hello` instead.
+    fn on_reconnect(&mut self) -> Vec<Vec<u8>> {
+        self.on_start()
+    }
 }
 
 enum NetEvent {
-    DeliverToEngine { ep: EndpointId, bytes: Vec<u8> },
-    DeliverToPeer { ep: EndpointId, bytes: Vec<u8> },
-    Crash { ep: EndpointId },
-    Join { ep: EndpointId },
+    /// client→server payload; `ep` is the connection it was written to
+    DeliverToEngine { client: usize, ep: EndpointId, bytes: Vec<u8> },
+    /// server→client payload; `ep` is the connection it was written to
+    DeliverToPeer { client: usize, ep: EndpointId, bytes: Vec<u8> },
+    Crash { client: usize },
+    Join { client: usize },
+    LinkDown { client: usize },
+    Reconnect { client: usize },
 }
 
 /// Virtual-time reactor over a fleet of [`SimPeer`]s and one
@@ -56,11 +72,19 @@ pub struct SimNet {
     clock: SimClock,
     queue: EventQueue<NetEvent>,
     schedule: FaultSchedule,
+    /// indexed by client id
     peers: Vec<Option<Box<dyn SimPeer>>>,
     /// false once the client process died (crash fault)
     alive: Vec<bool>,
-    /// true once the engine closed its side of the endpoint
+    /// the client's current connection (stale eps identify lost traffic)
+    ep_of: Vec<EndpointId>,
+    /// false while the client's link is flapped down
+    link_up: Vec<bool>,
+    /// endpoint → owning client (grows as redials allocate endpoints)
+    client_of: Vec<usize>,
+    /// true once the engine closed its side of the endpoint (by ep)
     engine_closed: Vec<bool>,
+    /// true once the engine saw the client's process death (by client)
     crash_notified: Vec<bool>,
     /// per-(dir, client) message counters — the `nth` of fate lookups
     sent_down: Vec<usize>,
@@ -84,6 +108,9 @@ impl SimNet {
             schedule,
             peers: peers.into_iter().map(Some).collect(),
             alive: vec![true; n],
+            ep_of: (0..n).collect(),
+            link_up: vec![true; n],
+            client_of: (0..n).collect(),
             engine_closed: vec![false; n],
             crash_notified: vec![false; n],
             sent_down: vec![0; n],
@@ -92,13 +119,22 @@ impl SimNet {
             materialized: Vec::new(),
             delayed: 0,
         };
-        for ep in 0..n {
-            if let Some(at) = net.schedule.crash_time(ep) {
-                net.queue.push_at(at, NetEvent::Crash { ep });
+        for f in &net.schedule.faults {
+            if let Fault::Disconnect { client, at_ms, reconnect_after_ms } = *f {
+                net.queue.push_at(Duration::from_millis(at_ms), NetEvent::LinkDown { client });
+                net.queue.push_at(
+                    Duration::from_millis(at_ms + reconnect_after_ms),
+                    NetEvent::Reconnect { client },
+                );
             }
-            match net.schedule.join_time(ep) {
-                Some(at) => net.queue.push_at(at, NetEvent::Join { ep }),
-                None => net.start_peer(ep),
+        }
+        for client in 0..n {
+            if let Some(at) = net.schedule.crash_time(client) {
+                net.queue.push_at(at, NetEvent::Crash { client });
+            }
+            match net.schedule.join_time(client) {
+                Some(at) => net.queue.push_at(at, NetEvent::Join { client }),
+                None => net.start_peer(client),
             }
         }
         net
@@ -115,92 +151,148 @@ impl SimNet {
     }
 
     /// Announce the peer to the engine and put its Hello on the wire.
-    fn start_peer(&mut self, ep: EndpointId) {
-        if !self.alive[ep] {
+    fn start_peer(&mut self, client: usize) {
+        if !self.alive[client] {
             return;
         }
-        self.pending.push_back(IoEvent::Connected(ep));
-        let msgs = match self.peers[ep].as_mut() {
+        self.pending.push_back(IoEvent::Connected(self.ep_of[client]));
+        let msgs = match self.peers[client].as_mut() {
             Some(peer) => peer.on_start(),
             None => return,
         };
         for m in msgs {
-            self.send_up(ep, m);
+            self.send_up(client, m);
         }
     }
 
     /// One client→server message enters the world.
-    fn send_up(&mut self, ep: EndpointId, bytes: Vec<u8>) {
-        if !self.alive[ep] {
+    fn send_up(&mut self, client: usize, bytes: Vec<u8>) {
+        if !self.alive[client] || !self.link_up[client] {
             return;
         }
-        let nth = self.sent_up[ep];
-        self.sent_up[ep] += 1;
+        let ep = self.ep_of[client];
+        let nth = self.sent_up[client];
+        self.sent_up[client] += 1;
         let now = self.clock.now();
-        if self.schedule.crash_before_send(ep, nth) {
+        if self.schedule.crash_before_send(client, nth) {
             // the client dies instead of replying; the engine notices
             // one link-latency later, like a TCP reset would surface
-            self.alive[ep] = false;
+            self.alive[client] = false;
             self.materialized
-                .push(format!("client {ep} crashed before sending msg {nth} at {now:?}"));
-            let notice = now + self.schedule.base_latency(Dir::Up, ep, nth);
-            self.queue.push_at(notice, NetEvent::Crash { ep });
+                .push(format!("client {client} crashed before sending msg {nth} at {now:?}"));
+            let notice = now + self.schedule.base_latency(Dir::Up, client, nth);
+            self.queue.push_at(notice, NetEvent::Crash { client });
             return;
         }
-        if self.schedule.partitioned(ep, now) {
-            self.materialized.push(format!("partition ate up msg {nth} of client {ep} at {now:?}"));
+        if self.schedule.partitioned(client, now) {
+            self.materialized
+                .push(format!("partition ate up msg {nth} of client {client} at {now:?}"));
             return;
         }
-        if self.schedule.is_delayed(Dir::Up, ep, nth) {
+        if self.schedule.is_delayed(Dir::Up, client, nth) {
             self.delayed += 1;
         }
-        let fates = self.schedule.deliveries(Dir::Up, ep, nth);
+        let fates = self.schedule.deliveries(Dir::Up, client, nth);
         if fates.is_empty() {
-            self.materialized.push(format!("dropped up msg {nth} of client {ep} at {now:?}"));
+            self.materialized.push(format!("dropped up msg {nth} of client {client} at {now:?}"));
         } else if fates.len() > 1 {
-            self.materialized.push(format!("duplicated up msg {nth} of client {ep} at {now:?}"));
+            self.materialized
+                .push(format!("duplicated up msg {nth} of client {client} at {now:?}"));
         }
         for latency in fates {
-            self.queue
-                .push_at(now + latency, NetEvent::DeliverToEngine { ep, bytes: bytes.clone() });
+            self.queue.push_at(
+                now + latency,
+                NetEvent::DeliverToEngine { client, ep, bytes: bytes.clone() },
+            );
         }
+    }
+
+    /// Is this delivery's connection still the client's live one?
+    fn link_current(&self, client: usize, ep: EndpointId) -> bool {
+        self.link_up[client] && self.ep_of[client] == ep
     }
 
     fn process(&mut self, event: NetEvent) {
         match event {
-            NetEvent::DeliverToEngine { ep, bytes } => {
-                // drop if the engine stopped reading (Close) or already
-                // saw the endpoint's reset: TCP never delivers stream
-                // data after the disconnect surfaced
-                if !self.engine_closed[ep] && !self.crash_notified[ep] {
+            NetEvent::DeliverToEngine { client, ep, bytes } => {
+                // drop if the engine stopped reading (Close), already saw
+                // the endpoint's reset, or the connection the bytes were
+                // in flight on is gone: TCP never delivers stream data
+                // after the disconnect surfaced
+                if !self.engine_closed[ep]
+                    && !self.crash_notified[client]
+                    && self.link_current(client, ep)
+                {
                     self.pending.push_back(IoEvent::Message(ep, bytes));
                 }
             }
-            NetEvent::DeliverToPeer { ep, bytes } => {
-                if !self.alive[ep] {
+            NetEvent::DeliverToPeer { client, ep, bytes } => {
+                if !self.alive[client] || !self.link_current(client, ep) {
                     return;
                 }
                 // take the peer out so replies can re-borrow the net
-                let Some(mut peer) = self.peers[ep].take() else { return };
+                let Some(mut peer) = self.peers[client].take() else { return };
                 let replies = peer.on_message(&bytes);
-                self.peers[ep] = Some(peer);
+                self.peers[client] = Some(peer);
                 for r in replies {
-                    self.send_up(ep, r);
+                    self.send_up(client, r);
                 }
             }
-            NetEvent::Crash { ep } => {
-                self.alive[ep] = false;
-                if !self.crash_notified[ep] {
-                    self.crash_notified[ep] = true;
-                    self.materialized.push(format!("client {ep} dead at {:?}", self.clock.now()));
-                    if !self.engine_closed[ep] {
+            NetEvent::Crash { client } => {
+                self.alive[client] = false;
+                if !self.crash_notified[client] {
+                    self.crash_notified[client] = true;
+                    self.materialized
+                        .push(format!("client {client} dead at {:?}", self.clock.now()));
+                    // the engine gets at most one Disconnected per lost
+                    // connection: if the link already flapped down, the
+                    // reset was surfaced then and the grace window is
+                    // already running (it expires into departure)
+                    let ep = self.ep_of[client];
+                    if self.link_up[client] && !self.engine_closed[ep] {
                         self.pending.push_back(IoEvent::Disconnected(ep));
                     }
                 }
             }
-            NetEvent::Join { ep } => {
-                self.materialized.push(format!("client {ep} joined at {:?}", self.clock.now()));
-                self.start_peer(ep);
+            NetEvent::Join { client } => {
+                self.materialized.push(format!("client {client} joined at {:?}", self.clock.now()));
+                self.start_peer(client);
+            }
+            NetEvent::LinkDown { client } => {
+                if !self.alive[client] || !self.link_up[client] {
+                    return;
+                }
+                self.link_up[client] = false;
+                self.materialized
+                    .push(format!("link of client {client} dropped at {:?}", self.clock.now()));
+                let ep = self.ep_of[client];
+                if !self.engine_closed[ep] {
+                    self.pending.push_back(IoEvent::Disconnected(ep));
+                }
+            }
+            NetEvent::Reconnect { client } => {
+                if !self.alive[client] || self.link_up[client] {
+                    return;
+                }
+                // redial: a fresh connection, so a fresh endpoint id —
+                // anything still in flight on the old one is lost
+                let ep = self.client_of.len();
+                self.client_of.push(client);
+                self.engine_closed.push(false);
+                self.ep_of[client] = ep;
+                self.link_up[client] = true;
+                self.materialized.push(format!(
+                    "client {client} redialed as endpoint {ep} at {:?}",
+                    self.clock.now()
+                ));
+                self.pending.push_back(IoEvent::Connected(ep));
+                let msgs = match self.peers[client].as_mut() {
+                    Some(peer) => peer.on_reconnect(),
+                    None => return,
+                };
+                for m in msgs {
+                    self.send_up(client, m);
+                }
             }
         }
     }
@@ -236,41 +328,48 @@ impl Reactor for SimNet {
 
     /// One server→client message enters the world.
     fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()> {
-        if ep >= self.peers.len() || self.engine_closed[ep] {
+        let Some(&client) = self.client_of.get(ep) else {
+            bail!("endpoint {ep} does not exist");
+        };
+        if self.engine_closed[ep] {
             bail!("endpoint {ep} is closed");
         }
-        let nth = self.sent_down[ep];
-        self.sent_down[ep] += 1;
+        let nth = self.sent_down[client];
+        self.sent_down[client] += 1;
         let now = self.clock.now();
-        if !self.alive[ep] {
-            // written into the void between the crash and the engine
+        if !self.alive[client] || !self.link_current(client, ep) {
+            // written into the void between the reset and the engine
             // noticing — in-flight loss, not an error
             return Ok(());
         }
-        if self.schedule.partitioned(ep, now) {
+        if self.schedule.partitioned(client, now) {
             self.materialized
-                .push(format!("partition ate down msg {nth} to client {ep} at {now:?}"));
+                .push(format!("partition ate down msg {nth} to client {client} at {now:?}"));
             return Ok(());
         }
-        if self.schedule.is_delayed(Dir::Down, ep, nth) {
+        if self.schedule.is_delayed(Dir::Down, client, nth) {
             self.delayed += 1;
         }
-        let fates = self.schedule.deliveries(Dir::Down, ep, nth);
+        let fates = self.schedule.deliveries(Dir::Down, client, nth);
         if fates.is_empty() {
-            self.materialized.push(format!("dropped down msg {nth} to client {ep} at {now:?}"));
+            self.materialized
+                .push(format!("dropped down msg {nth} to client {client} at {now:?}"));
         } else if fates.len() > 1 {
-            self.materialized.push(format!("duplicated down msg {nth} to client {ep} at {now:?}"));
+            self.materialized
+                .push(format!("duplicated down msg {nth} to client {client} at {now:?}"));
         }
         for latency in fates {
-            self.queue
-                .push_at(now + latency, NetEvent::DeliverToPeer { ep, bytes: msg.to_vec() });
+            self.queue.push_at(
+                now + latency,
+                NetEvent::DeliverToPeer { client, ep, bytes: msg.to_vec() },
+            );
         }
         Ok(())
     }
 
     fn close(&mut self, ep: EndpointId) {
-        if ep < self.engine_closed.len() {
-            self.engine_closed[ep] = true;
+        if let Some(slot) = self.engine_closed.get_mut(ep) {
+            *slot = true;
         }
     }
 
@@ -384,6 +483,50 @@ mod tests {
         }
         assert!(echoed);
         assert!(!net.materialized().is_empty());
+    }
+
+    #[test]
+    fn flap_rebinds_the_client_to_a_fresh_endpoint() {
+        let mut schedule = FaultSchedule::fault_free(11, 2, 4);
+        schedule
+            .faults
+            .push(Fault::Disconnect { client: 0, at_ms: 20, reconnect_after_ms: 5 });
+        let mut net = SimNet::new(schedule, echo_fleet(2));
+        // drain startup traffic
+        while !matches!(net.poll(Some(Duration::from_millis(15))).unwrap(), IoEvent::Tick) {}
+        let mut saw_disconnect = false;
+        let mut new_ep = None;
+        let mut rehello = None;
+        for _ in 0..16 {
+            match net.poll(Some(Duration::from_millis(100))).unwrap() {
+                IoEvent::Disconnected(0) => saw_disconnect = true,
+                IoEvent::Connected(ep) => new_ep = Some(ep),
+                IoEvent::Message(ep, m) => rehello = Some((ep, m)),
+                IoEvent::Tick => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(saw_disconnect, "flap surfaces as a TCP reset");
+        // the redial shows up on a brand-new endpoint with a Hello
+        assert_eq!(new_ep, Some(2), "redial allocates the next endpoint id");
+        assert_eq!(rehello, Some((2, vec![0u8])), "peer re-announced on the new endpoint");
+        // the old endpoint is stale: sends to it vanish, not error
+        net.send(0, b"stale").unwrap();
+        // the new endpoint round-trips
+        net.send(2, b"ping").unwrap();
+        let mut echoed = false;
+        for _ in 0..8 {
+            match net.poll(Some(Duration::from_millis(100))).unwrap() {
+                IoEvent::Message(2, m) => {
+                    assert_eq!(m, vec![100]);
+                    echoed = true;
+                    break;
+                }
+                IoEvent::Tick => break,
+                _ => {}
+            }
+        }
+        assert!(echoed);
     }
 
     #[test]

@@ -8,11 +8,11 @@
 //!   is weather, not weapons: latency jitter alone must never change
 //!   the converged factor (the slot-ordered-reduction invariant).
 //! - **Faults** — an explicit `Vec<Fault>` of discrete events (drops,
-//!   duplicates, delays, crashes, partitions, late joins). Keeping them
-//!   as a list (rather than inline RNG draws at delivery time) is what
-//!   makes `--shrink` possible: the minimizer deletes one event at a
-//!   time and re-runs, and the remaining events keep their exact
-//!   meaning.
+//!   duplicates, delays, crashes, partitions, late joins, link flaps).
+//!   Keeping them as a list (rather than inline RNG draws at delivery
+//!   time) is what makes `--shrink` possible: the minimizer deletes one
+//!   event at a time and re-runs, and the remaining events keep their
+//!   exact meaning.
 //!
 //! The distribution drawn by [`FaultSchedule::draw`] is documented in
 //! EXPERIMENTS.md §Sim; anything outside [`FaultSchedule::under_budget`]
@@ -64,6 +64,11 @@ pub enum Fault {
     Partition { client: usize, from_ms: u64, until_ms: u64 },
     /// the client is not a founding member; its Hello enters at `at_ms`
     LateJoin { client: usize, at_ms: u64 },
+    /// link flap: the connection drops at `at_ms` (in-flight messages on
+    /// both legs are lost) but the process survives and redials on a
+    /// fresh endpoint `reconnect_after_ms` later, resuming its session
+    /// with the token from its `Welcome`
+    Disconnect { client: usize, at_ms: u64, reconnect_after_ms: u64 },
 }
 
 impl Fault {
@@ -76,7 +81,8 @@ impl Fault {
             | Fault::CrashAt { client, .. }
             | Fault::CrashBeforeSend { client, .. }
             | Fault::Partition { client, .. }
-            | Fault::LateJoin { client, .. } => client,
+            | Fault::LateJoin { client, .. }
+            | Fault::Disconnect { client, .. } => client,
         }
     }
 }
@@ -102,6 +108,9 @@ impl fmt::Display for Fault {
             }
             Fault::LateJoin { client, at_ms } => {
                 write!(f, "late join client {client} at {at_ms}ms")
+            }
+            Fault::Disconnect { client, at_ms, reconnect_after_ms } => {
+                write!(f, "flap client {client} at {at_ms}ms for {reconnect_after_ms}ms")
             }
         }
     }
@@ -139,8 +148,10 @@ impl FaultSchedule {
     /// §Sim): ⅕ of worlds are calm (latency jitter only — these assert
     /// the bitwise-identical invariant); otherwise per client ⅛ crash
     /// (half time-based, half message-based), ⅛ partition, ⅒ late join
-    /// (client 0 always founds); globally up to 3 drops, 2 duplicates,
-    /// and 5 delays of 1–80 ms on uniformly chosen messages.
+    /// (client 0 always founds), ⅒ link flap (half short enough to
+    /// resume within the round, half long enough to force departure);
+    /// globally up to 3 drops, 2 duplicates, and 5 delays of 1–80 ms on
+    /// uniformly chosen messages.
     pub fn draw(seed: u64, clients: usize, rounds: usize) -> Self {
         let mut s = FaultSchedule::fault_free(seed, clients, rounds);
         let horizon = s.horizon_ms();
@@ -206,6 +217,51 @@ impl FaultSchedule {
             let (dir, client, nth) = pick(&mut delay, clients, rounds);
             let extra_ms = 1 + delay.next_below(80);
             s.faults.push(Fault::Delay { dir, client, nth, extra_ms });
+        }
+
+        // link flaps: the process survives but its connection drops and
+        // it redials — exercises the reconnect/session-resume path
+        let mut flap = root.fork(0xF1A9);
+        for c in 0..clients {
+            if flap.next_f64() < 0.1 {
+                let at_ms = flap.next_below(horizon);
+                let reconnect_after_ms = if flap.next_u64() & 1 == 0 {
+                    1 + flap.next_below(8) // short: resumes within the round
+                } else {
+                    40 + flap.next_below(160) // long: grace expires, departure
+                };
+                s.faults.push(Fault::Disconnect { client: c, at_ms, reconnect_after_ms });
+            }
+        }
+        s
+    }
+
+    /// Flap-heavy distribution for `--flaky` fuzzing: ~⅒ of worlds are
+    /// calm; otherwise each client flaps with probability ½ — 70% short
+    /// flaps (which must resume cut-free, bitwise identical) and 30%
+    /// long ones (which must degrade to the pre-resume departure
+    /// semantics). Only [`Fault::Disconnect`] events are drawn, so the
+    /// harness can classify every world cleanly against the reconnect
+    /// invariants.
+    pub fn draw_flaky(seed: u64, clients: usize, rounds: usize) -> Self {
+        let mut s = FaultSchedule::fault_free(seed, clients, rounds);
+        let horizon = s.horizon_ms();
+        let root = Pcg64::new(seed ^ 0xF1A9_F1A9);
+        let mut calm = root.fork(0xCA1F);
+        if calm.next_f64() < 0.1 {
+            return s;
+        }
+        let mut flap = root.fork(0xF1A9);
+        for c in 0..clients {
+            if flap.next_f64() < 0.5 {
+                let at_ms = flap.next_below(horizon);
+                let reconnect_after_ms = if flap.next_f64() < 0.7 {
+                    1 + flap.next_below(8)
+                } else {
+                    40 + flap.next_below(160)
+                };
+                s.faults.push(Fault::Disconnect { client: c, at_ms, reconnect_after_ms });
+            }
         }
         s
     }
@@ -313,11 +369,13 @@ impl FaultSchedule {
 
     /// The FaultPolicy budget (ISSUE invariant: final error must stay
     /// within tolerance when the schedule stays inside it): only faults
-    /// that cost at most a per-round update — dropped/duplicated round
-    /// updates and sub-deadline delays. Membership faults (crash,
-    /// partition, join), lost Hellos/reveals, and deadline-crossing
-    /// delays are over budget: the run must still terminate cleanly,
-    /// but its error is unconstrained.
+    /// that cost at most a per-round update — dropped round updates,
+    /// duplicates (shed idempotently by the seq guards on both sides),
+    /// sub-deadline delays, and short link flaps whose session resumes
+    /// inside the round deadline. Membership faults (crash, partition,
+    /// join), lost Hellos/reveals, deadline-crossing delays, and long
+    /// flaps are over budget: the run must still terminate cleanly, but
+    /// its error is unconstrained.
     ///
     /// Delays are judged by the *per-client total* of extras, because
     /// several small delays can stack on one round trip (broadcast leg
@@ -325,6 +383,15 @@ impl FaultSchedule {
     /// reply — past the deadline. The bound is conservative: any round
     /// trip of client `c` carries at most `total(c)` extra delay plus
     /// two base latencies plus duplicate offsets (≤ 2 ms).
+    ///
+    /// Flaps are in budget when (a) they strike after the session is
+    /// established — the `Welcome` has landed (≤ 2 base latencies plus
+    /// any delay extras), so the redial resumes by token instead of
+    /// re-introducing itself — and (b) the downtime plus the resume
+    /// round trip fits the deadline. The worst case is a flap right
+    /// after the reply left: the next round opens on the downed link,
+    /// and the resume Hello → re-delivered broadcast → recomputed reply
+    /// chain costs up to 8 base latencies on top of the downtime.
     pub fn under_budget(&self, round_timeout: Duration) -> bool {
         let timeout_ms = round_timeout.as_millis() as u64;
         let delay_total = |client: usize| -> u64 {
@@ -338,9 +405,14 @@ impl FaultSchedule {
         };
         self.faults.iter().all(|f| match *f {
             Fault::Drop { dir: Dir::Up, nth, .. } => nth >= 1 && nth <= self.rounds,
-            Fault::Duplicate { dir, nth, .. } => !(dir == Dir::Up && nth == 0),
+            Fault::Duplicate { .. } => true,
             Fault::Delay { client, .. } => {
                 delay_total(client) + 2 * self.base_latency_ms + 2 < timeout_ms
+            }
+            Fault::Disconnect { client, at_ms, reconnect_after_ms } => {
+                at_ms > 2 * self.base_latency_ms + 2 + delay_total(client)
+                    && reconnect_after_ms + delay_total(client) + 8 * self.base_latency_ms + 4
+                        < timeout_ms
             }
             _ => false,
         })
@@ -435,6 +507,21 @@ mod tests {
         assert!(s.under_budget(timeout));
         s.faults = vec![Fault::CrashAt { client: 0, at_ms: 5 }];
         assert!(!s.under_budget(timeout));
+        // duplicates are shed idempotently by the seq guards on both
+        // sides now — even a duplicated Hello stays in budget
+        s.faults = vec![Fault::Duplicate { dir: Dir::Up, client: 2, nth: 0 }];
+        assert!(s.under_budget(timeout));
+        s.faults = vec![Fault::Duplicate { dir: Dir::Down, client: 2, nth: 1 }];
+        assert!(s.under_budget(timeout));
+        // a short flap resumes within the deadline: in budget
+        s.faults = vec![Fault::Disconnect { client: 1, at_ms: 20, reconnect_after_ms: 5 }];
+        assert!(s.under_budget(timeout));
+        // a long outage crosses the deadline: the member departs
+        s.faults = vec![Fault::Disconnect { client: 1, at_ms: 20, reconnect_after_ms: 60 }];
+        assert!(!s.under_budget(timeout));
+        // a flap before the Welcome lands has no session to resume
+        s.faults = vec![Fault::Disconnect { client: 1, at_ms: 5, reconnect_after_ms: 5 }];
+        assert!(!s.under_budget(timeout));
     }
 
     #[test]
@@ -455,7 +542,7 @@ mod tests {
     fn seeds_cover_the_fault_space() {
         // over a seed range, every fault kind must appear somewhere, and
         // a healthy fraction of worlds must stay fault-free
-        let mut kinds = [0usize; 7];
+        let mut kinds = [0usize; 8];
         let mut fault_free = 0usize;
         for seed in 0..256 {
             let s = FaultSchedule::draw(seed, 4, 16);
@@ -471,6 +558,7 @@ mod tests {
                     Fault::CrashBeforeSend { .. } => 4,
                     Fault::Partition { .. } => 5,
                     Fault::LateJoin { .. } => 6,
+                    Fault::Disconnect { .. } => 7,
                 };
                 kinds[k] += 1;
             }
@@ -482,5 +570,35 @@ mod tests {
             (25..=135).contains(&fault_free),
             "benign fraction off: {fault_free}/256"
         );
+    }
+
+    #[test]
+    fn flaky_distribution_is_flaps_only() {
+        let mut calm = 0usize;
+        let mut short = 0usize;
+        let mut long = 0usize;
+        for seed in 0..256 {
+            let s = FaultSchedule::draw_flaky(seed, 4, 16);
+            assert_eq!(s, FaultSchedule::draw_flaky(seed, 4, 16), "deterministic");
+            if s.is_fault_free() {
+                calm += 1;
+                continue;
+            }
+            for f in &s.faults {
+                match *f {
+                    Fault::Disconnect { reconnect_after_ms, .. } => {
+                        if reconnect_after_ms < 40 {
+                            short += 1;
+                        } else {
+                            long += 1;
+                        }
+                    }
+                    ref other => panic!("non-flap fault in flaky world: {other}"),
+                }
+            }
+        }
+        assert!(calm > 5, "some calm worlds: {calm}");
+        assert!(short > 50, "short flaps dominate: {short}");
+        assert!(long > 20, "long flaps present: {long}");
     }
 }

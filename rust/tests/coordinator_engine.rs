@@ -2,7 +2,7 @@
 //! from in-memory events (no sockets, no channels, no clock), plus the
 //! straggler/elasticity behavior of the reactor-driven paths.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Duration;
 
 use dcf_pca::algorithms::factor::{polish_sweep, ClientState, FactorHyper};
@@ -51,7 +51,7 @@ impl SimClient {
         let (m, n_i) = m_block.shape();
         let mut outbox = VecDeque::new();
         outbox.push_back(
-            ToServer::Hello { client: id as u32, cols: n_i as u64 }
+            ToServer::Hello { client: id as u32, cols: n_i as u64, token: 0 }
                 .encode_with(job, Compression::None),
         );
         SimClient {
@@ -129,6 +129,9 @@ impl SimClient {
                 self.outbox
                     .push_back(reply.encode_with(self.job, Compression::None));
             }
+            // this in-memory client never reconnects, so the session
+            // token is irrelevant to it
+            ToClient::Welcome { .. } => {}
             ToClient::Shutdown => {}
         }
     }
@@ -324,6 +327,310 @@ fn engine_elastic_join_enters_at_next_round_boundary() {
     let partition = ColumnPartition::even(spec.n, 5);
     let err = assembled_error(&problem, &partition, &outcome.revealed);
     assert!(err < 5e-3, "elastic-join recovery err {err}");
+}
+
+// ---------------------------------------------------------------------------
+// session hardening: duplicate / replayed / stale frames, mid-round resume
+// ---------------------------------------------------------------------------
+
+const HARD_M: usize = 6;
+const HARD_RANK: usize = 2;
+
+/// Protocol-level federation for hardening tests: every frame is crafted
+/// (and replayable) by hand with an explicit envelope sequence number,
+/// and updates carry a deterministic per-(client, round) U so bitwise
+/// comparisons across runs are meaningful with no numerics in the loop.
+fn hardening_engine(policy: FaultPolicy, rounds: usize, clients: usize) -> RoundEngine {
+    let mut cfg = ServerConfig::new(HARD_M, HARD_RANK, rounds, 1);
+    cfg.fault_policy = policy;
+    cfg.round_timeout = Duration::from_secs(3600);
+    let mut engine = RoundEngine::new();
+    engine.add_job(0, cfg, clients);
+    for ep in 0..clients {
+        engine.on_connect(ep);
+    }
+    engine
+}
+
+fn hello_frame(client: u32, token: u64, seq: u32) -> Vec<u8> {
+    ToServer::Hello { client, cols: 3, token }.encode_seq(0, seq, Compression::None)
+}
+
+fn update_frame(client: u32, round: u32, seq: u32) -> Vec<u8> {
+    let u = Mat::from_fn(HARD_M, HARD_RANK, |i, j| {
+        (client as f64 + 1.0) * 0.25 + round as f64 * 0.125 + (i * HARD_RANK + j) as f64 * 1e-3
+    });
+    ToServer::Update {
+        client,
+        round,
+        u,
+        grad_norm: 1.0,
+        lipschitz: 1.0,
+        err_num: f64::NAN,
+        local_secs: 0.0,
+    }
+    .encode_seq(0, seq, Compression::None)
+}
+
+fn withhold_frame(client: u32, seq: u32) -> Vec<u8> {
+    ToServer::Withhold { client }.encode_seq(0, seq, Compression::None)
+}
+
+/// Raw `Send` payloads queued for `ep`.
+fn raw_sends_to(actions: &[Action], ep: usize) -> Vec<Vec<u8>> {
+    actions
+        .iter()
+        .filter_map(|a| match a {
+            Action::Send { ep: e, bytes } if *e == ep => Some(bytes.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+fn sends_to(actions: &[Action], ep: usize) -> Vec<ToClient> {
+    raw_sends_to(actions, ep)
+        .iter()
+        .map(|b| ToClient::decode_job(b).unwrap().1)
+        .collect()
+}
+
+fn welcome_token(actions: &[Action], ep: usize) -> u64 {
+    sends_to(actions, ep)
+        .into_iter()
+        .find_map(|m| match m {
+            ToClient::Welcome { token } => Some(token),
+            _ => None,
+        })
+        .expect("no Welcome queued for the endpoint")
+}
+
+/// Mechanically answer every outstanding engine send (deterministic
+/// updates, Withhold finishes) until the job completes. `eps` maps each
+/// live endpoint to its client id and last-used upstream seq.
+fn run_to_outcome(
+    engine: &mut RoundEngine,
+    eps: &mut BTreeMap<usize, (u32, u32)>,
+    mut inbox: Vec<Action>,
+) -> ServerOutcome {
+    let mut now = Duration::from_millis(100);
+    let mut guard = 0usize;
+    while !engine.all_done() {
+        guard += 1;
+        assert!(guard < 10_000, "hardening federation made no progress");
+        let mut next = Vec::new();
+        for a in inbox.drain(..) {
+            let Action::Send { ep, bytes } = a else { continue };
+            let (_, msg) = ToClient::decode_job(&bytes).unwrap();
+            now += Duration::from_millis(1);
+            match msg {
+                ToClient::Round { round, .. } => {
+                    let e = eps.get_mut(&ep).expect("send to unknown endpoint");
+                    e.1 += 1;
+                    next.extend(engine.handle_message(ep, &update_frame(e.0, round, e.1), now));
+                }
+                ToClient::Finish { .. } => {
+                    let e = eps.get_mut(&ep).expect("send to unknown endpoint");
+                    e.1 += 1;
+                    next.extend(engine.handle_message(ep, &withhold_frame(e.0, e.1), now));
+                }
+                ToClient::Welcome { .. } | ToClient::Shutdown => {}
+            }
+        }
+        inbox = next;
+    }
+    engine.take_result(0).unwrap().unwrap()
+}
+
+#[test]
+fn duplicate_hello_frame_is_shed_under_both_policies() {
+    for policy in [FaultPolicy::Strict, FaultPolicy::SkipMissing] {
+        let mut engine = hardening_engine(policy, 1, 2);
+        let now = Duration::from_millis(1);
+        let h0 = hello_frame(0, 0, 1);
+        let first = engine.handle_message(0, &h0, now);
+        assert_ne!(welcome_token(&first, 0), 0, "Welcome carries a nonzero token");
+        // the network replays the session's own Hello on the same
+        // connection: the binding already exists, so the repeat is shed
+        // without side effects — even under Strict
+        let dup = engine.handle_message(0, &h0, now);
+        assert!(dup.is_empty(), "{policy:?}: duplicate Hello answered with {dup:?}");
+        let opened = engine.handle_message(1, &hello_frame(1, 0, 1), now);
+        assert!(
+            sends_to(&opened, 0).iter().any(|m| matches!(m, ToClient::Round { round: 0, .. })),
+            "{policy:?}: round 0 did not open for the duplicated member"
+        );
+        let mut eps = BTreeMap::from([(0usize, (0u32, 1u32)), (1usize, (1u32, 1u32))]);
+        let outcome = run_to_outcome(&mut engine, &mut eps, opened);
+        assert_eq!(outcome.rounds.len(), 1);
+        assert_eq!(outcome.rounds[0].participants, 2, "{policy:?}");
+    }
+}
+
+#[test]
+fn replayed_update_is_dropped_under_both_policies() {
+    for policy in [FaultPolicy::Strict, FaultPolicy::SkipMissing] {
+        let mut engine = hardening_engine(policy, 2, 2);
+        let now = Duration::from_millis(1);
+        let mut opened = engine.handle_message(0, &hello_frame(0, 0, 1), now);
+        opened.extend(engine.handle_message(1, &hello_frame(1, 0, 1), now));
+        assert_eq!(engine.round_of(0), Some(0));
+
+        let up = update_frame(0, 0, 2);
+        assert!(engine.handle_message(0, &up, now).is_empty());
+        // a reconnect re-send the engine already processed: the envelope
+        // seq was accepted once, so the replay is shed — it must not
+        // double-count client 0 or fail the job under Strict
+        let replay = engine.handle_message(0, &up, now);
+        assert!(replay.is_empty(), "{policy:?}: replayed update answered with {replay:?}");
+        assert_eq!(engine.round_of(0), Some(0), "{policy:?}: replay advanced the round");
+
+        let closed = engine.handle_message(1, &update_frame(1, 0, 2), now);
+        assert_eq!(engine.round_of(0), Some(1), "{policy:?}: round 0 did not close");
+        let mut eps = BTreeMap::from([(0usize, (0u32, 2u32)), (1usize, (1u32, 2u32))]);
+        let outcome = run_to_outcome(&mut engine, &mut eps, closed);
+        assert_eq!(outcome.rounds.len(), 2);
+        assert!(outcome.rounds.iter().all(|r| r.participants == 2), "{policy:?}");
+    }
+}
+
+#[test]
+fn stale_round_frames_are_ignored_under_both_policies() {
+    for policy in [FaultPolicy::Strict, FaultPolicy::SkipMissing] {
+        let mut engine = hardening_engine(policy, 2, 2);
+        let now = Duration::from_millis(1);
+        let mut opened = engine.handle_message(0, &hello_frame(0, 0, 1), now);
+        opened.extend(engine.handle_message(1, &hello_frame(1, 0, 1), now));
+        drop(opened);
+        assert!(engine.handle_message(0, &update_frame(0, 0, 2), now).is_empty());
+        let _round1 = engine.handle_message(1, &update_frame(1, 0, 2), now);
+        assert_eq!(engine.round_of(0), Some(1));
+
+        // a client-side retransmit of its round-0 answer arriving after
+        // the cutover, re-enveloped with a fresh seq: stale, ignored
+        let stale = engine.handle_message(0, &update_frame(0, 0, 3), now);
+        assert!(stale.is_empty(), "{policy:?}: stale update answered with {stale:?}");
+        assert_eq!(engine.round_of(0), Some(1), "{policy:?}: stale update moved the round");
+
+        // close round 1 normally — client 0's seq continues past the
+        // burned retransmit seq
+        assert!(engine.handle_message(0, &update_frame(0, 1, 4), now).is_empty());
+        let finish = engine.handle_message(1, &update_frame(1, 1, 3), now);
+        assert!(
+            sends_to(&finish, 0).iter().any(|m| matches!(m, ToClient::Finish { .. })),
+            "{policy:?}: finish phase did not open"
+        );
+        // an update landing during the finish phase is out-of-phase:
+        // equally ignored rather than adjudicated by FaultPolicy
+        let late = engine.handle_message(0, &update_frame(0, 1, 5), now);
+        assert!(late.is_empty(), "{policy:?}: out-of-phase update answered with {late:?}");
+
+        let mut eps = BTreeMap::from([(0usize, (0u32, 5u32)), (1usize, (1u32, 3u32))]);
+        let outcome = run_to_outcome(&mut engine, &mut eps, finish);
+        assert_eq!(outcome.rounds.len(), 2);
+        assert!(outcome.rounds.iter().all(|r| r.participants == 2), "{policy:?}");
+        assert_eq!(outcome.withheld, vec![0, 1]);
+    }
+}
+
+#[test]
+fn mid_round_resume_rejoins_without_a_cut_and_stays_bitwise_identical() {
+    let run = |flap: bool| -> ServerOutcome {
+        let mut engine = hardening_engine(FaultPolicy::SkipMissing, 3, 2);
+        let mut now = Duration::from_millis(1);
+        let mut opened = engine.handle_message(0, &hello_frame(0, 0, 1), now);
+        opened.extend(engine.handle_message(1, &hello_frame(1, 0, 1), now));
+        let token = welcome_token(&opened, 1);
+        let round0_to_1 = raw_sends_to(&opened, 1)
+            .into_iter()
+            .find(|b| matches!(ToClient::decode_job(b).unwrap().1, ToClient::Round { .. }))
+            .expect("no round 0 broadcast for client 1");
+
+        // client 0 answers round 0 either way
+        assert!(engine.handle_message(0, &update_frame(0, 0, 2), now).is_empty());
+
+        let (ep1, seq1, closed) = if flap {
+            // client 1's link drops before its reply: grace window opens
+            now += Duration::from_millis(5);
+            let dropped = engine.on_disconnect(1, now);
+            assert!(dropped.is_empty(), "disconnect inside grace is silent: {dropped:?}");
+            assert_eq!(engine.round_of(0), Some(0), "grace keeps the round open");
+            // ...and the client redials as a fresh endpoint, echoing its
+            // session token
+            let ep = 7;
+            engine.on_connect(ep);
+            now += Duration::from_millis(5);
+            let resumed = engine.handle_message(ep, &hello_frame(1, token, 2), now);
+            assert_eq!(welcome_token(&resumed, ep), token, "live resume keeps the token");
+            let redelivered = raw_sends_to(&resumed, ep)
+                .into_iter()
+                .find(|b| matches!(ToClient::decode_job(b).unwrap().1, ToClient::Round { .. }))
+                .expect("resume did not re-deliver the in-flight round");
+            use dcf_pca::coordinator::protocol::ENVELOPE_BYTES;
+            assert_eq!(
+                &redelivered[ENVELOPE_BYTES..],
+                &round0_to_1[ENVELOPE_BYTES..],
+                "re-delivered Round payload differs from the original broadcast"
+            );
+            let closed = engine.handle_message(ep, &update_frame(1, 0, 3), now);
+            (ep, 3u32, closed)
+        } else {
+            let closed = engine.handle_message(1, &update_frame(1, 0, 2), now);
+            (1usize, 2u32, closed)
+        };
+        assert_eq!(engine.round_of(0), Some(1), "round 0 closed with both updates");
+
+        let mut eps = BTreeMap::from([(0usize, (0u32, 2u32)), (ep1, (1u32, seq1))]);
+        run_to_outcome(&mut engine, &mut eps, closed)
+    };
+
+    let reference = run(false);
+    let flapped = run(true);
+    assert_eq!(flapped.u, reference.u, "resume changed U bitwise");
+    assert_eq!(flapped.rounds.len(), reference.rounds.len());
+    for (a, b) in reference.rounds.iter().zip(&flapped.rounds) {
+        assert_eq!(b.participants, 2, "a recoverable flap cut a client");
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.err, b.err);
+        assert_eq!(a.mean_grad_norm, b.mean_grad_norm);
+        assert_eq!(a.dispersion, b.dispersion);
+    }
+}
+
+#[test]
+fn stale_session_token_resume_is_refused() {
+    // SkipMissing: the impostor endpoint is closed, the member's session
+    // is untouched, and the federation completes at full strength
+    let mut engine = hardening_engine(FaultPolicy::SkipMissing, 1, 2);
+    let now = Duration::from_millis(1);
+    let mut opened = engine.handle_message(0, &hello_frame(0, 0, 1), now);
+    opened.extend(engine.handle_message(1, &hello_frame(1, 0, 1), now));
+    let token = welcome_token(&opened, 1);
+
+    engine.on_connect(9);
+    let refused = engine.handle_message(9, &hello_frame(1, token ^ 2, 1), now);
+    assert!(
+        refused.iter().any(|a| matches!(a, Action::Close { ep: 9 })),
+        "stale-token resume not closed: {refused:?}"
+    );
+    assert!(raw_sends_to(&refused, 9).is_empty(), "impostor got a payload: {refused:?}");
+    assert_eq!(engine.round_of(0), Some(0), "refusal must not disturb the job");
+
+    let mut eps = BTreeMap::from([(0usize, (0u32, 1u32)), (1usize, (1u32, 1u32))]);
+    let outcome = run_to_outcome(&mut engine, &mut eps, opened);
+    assert_eq!(outcome.rounds[0].participants, 2);
+
+    // Strict: the same impostor is a protocol violation that fails the job
+    let mut engine = hardening_engine(FaultPolicy::Strict, 1, 2);
+    let mut opened = engine.handle_message(0, &hello_frame(0, 0, 1), now);
+    opened.extend(engine.handle_message(1, &hello_frame(1, 0, 1), now));
+    let token = welcome_token(&opened, 1);
+    engine.on_connect(9);
+    let failed = engine.handle_message(9, &hello_frame(1, token ^ 2, 1), now);
+    assert!(
+        failed.iter().any(|a| matches!(a, Action::JobDone { job: 0 })),
+        "Strict did not fail the job: {failed:?}"
+    );
+    assert!(engine.take_result(0).unwrap().is_err(), "Strict accepted a stale token");
 }
 
 #[test]
@@ -651,5 +958,97 @@ mod epoll_e2e {
         assert_eq!(*participants.last().unwrap(), blocks, "{participants:?}");
         let err = assembled_error(&problem, &partition, &outcome.revealed);
         assert!(err < 5e-3, "elastic TCP recovery err {err}");
+    }
+
+    fn spawn_resumable_worker(
+        addr: String,
+        problem: &RpcaProblem,
+        partition: &ColumnPartition,
+        id: usize,
+        faults: FaultPlan,
+    ) -> std::thread::JoinHandle<dcf_pca::anyhow::Result<usize>> {
+        use dcf_pca::coordinator::client::run_client_resumable;
+        use dcf_pca::coordinator::transport::retry::BackoffPolicy;
+        use dcf_pca::coordinator::transport::Channel;
+
+        let spec = problem.spec;
+        let (a, b) = partition.range(id);
+        let m_block = problem.observed.cols_range(a, b);
+        let truth = (problem.l0.cols_range(a, b), problem.s0.cols_range(a, b));
+        std::thread::spawn(move || {
+            let cfg = ClientConfig {
+                id,
+                job: 0,
+                n_frac: (b - a) as f64 / spec.n as f64,
+                data: Box::new(m_block),
+                hyper: FactorHyper::default_for(spec.m, spec.n, spec.rank),
+                polish_sweeps: 3,
+                truth: Some(truth),
+                faults,
+                compression: Compression::None,
+                dp_sigma: 0.0,
+            };
+            let connect = || TcpChannel::connect(&addr).map(|c| Box::new(c) as Box<dyn Channel>);
+            let policy = BackoffPolicy {
+                base: Duration::from_millis(20),
+                max: Duration::from_millis(200),
+                ..Default::default()
+            };
+            run_client_resumable(connect, cfg, &NativeKernel::new(), &policy)
+        })
+    }
+
+    /// The reconnect tentpole over real sockets: a live worker severs its
+    /// TCP connection mid-round — after computing its reply, before
+    /// sending it — and the resumable transport redials within the round
+    /// deadline. The straggler cut must never fire, every round reduces
+    /// all E updates, and U matches a fault-free run bitwise.
+    #[test]
+    fn tcp_worker_killed_and_restarted_mid_round_completes_without_a_cut() {
+        let spec = ProblemSpec::square(60, 3, 0.05);
+        let problem = spec.generate(7);
+        let e = 4;
+        let rounds = 30;
+        let partition = ColumnPartition::even(spec.n, e);
+        let mut dcf = DcfPcaConfig::default_for(&spec).with_clients(e).with_rounds(rounds);
+        // the grace window defaults to the round deadline: redials with a
+        // 20 ms backoff land far inside 30 s
+        dcf.round_timeout = Duration::from_secs(30);
+        dcf.fault_policy = FaultPolicy::SkipMissing;
+
+        let run = |flapped_worker: Option<usize>| -> ServerOutcome {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let server = run_epoll_server(listener, server_cfg_for(&problem, &dcf), e);
+            let workers: Vec<_> = (0..e)
+                .map(|id| {
+                    let faults = if flapped_worker == Some(id) {
+                        FaultPlan { disconnect_at_round: Some(6), ..Default::default() }
+                    } else {
+                        FaultPlan::default()
+                    };
+                    spawn_resumable_worker(addr.clone(), &problem, &partition, id, faults)
+                })
+                .collect();
+            let outcome = server.join().unwrap();
+            for w in workers {
+                let served = w.join().unwrap().unwrap();
+                assert_eq!(served, rounds, "every worker serves every round exactly once");
+            }
+            outcome
+        };
+
+        let reference = run(None);
+        let flapped = run(Some(2));
+
+        assert_eq!(flapped.u, reference.u, "mid-round reconnect changed U bitwise");
+        let participants: Vec<usize> = flapped.rounds.iter().map(|r| r.participants).collect();
+        assert!(participants.iter().all(|&p| p == e), "a reconnect cut a worker: {participants:?}");
+        assert_eq!(flapped.revealed.len(), e);
+        for (a, b) in reference.rounds.iter().zip(&flapped.rounds) {
+            assert_eq!(a.err, b.err, "round {} err diverged", a.round);
+            assert_eq!(a.mean_grad_norm, b.mean_grad_norm);
+            assert_eq!(a.dispersion, b.dispersion);
+        }
     }
 }

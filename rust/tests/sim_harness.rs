@@ -1,7 +1,8 @@
 //! Simulation-harness integration: the `sim_smoke` subset runs inside
-//! the tier-1 `cargo test -q` budget; the exhaustive fuzz sweep is
-//! `#[ignore]`d (CI's `sim-fuzz` job runs `dcf-pca simulate --seeds
-//! 0..256` on the release binary instead — same code path, faster).
+//! the tier-1 `cargo test -q` budget; the exhaustive fuzz sweeps are
+//! `#[ignore]`d (CI's `sim-fuzz` and `reconnect-fuzz` jobs run
+//! `dcf-pca simulate --seeds 0..256` — plain and `--flaky` — on the
+//! release binary instead: same code path, faster).
 
 use std::time::{Duration, Instant};
 
@@ -139,6 +140,69 @@ fn sim_smoke_late_join_and_partition_terminate() {
     let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
     assert!(report.completed_ok, "healthy clients remained — the job must finish");
     assert!(report.materialized > 0, "the join (at least) must have materialized");
+}
+
+/// A recoverable link flap — down and redialed within the round
+/// deadline — must be invisible: no straggler cut, full participation,
+/// and U bitwise-identical to the fault-free run (invariant 6).
+#[test]
+fn sim_smoke_recoverable_flap_is_bitwise_invisible() {
+    let h = harness();
+    let mut schedule = default_schedule();
+    schedule.faults.push(Fault::Disconnect { client: 1, at_ms: 25, reconnect_after_ms: 5 });
+    assert!(schedule.under_budget(h.config().round_timeout), "flap must be recoverable");
+    let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok);
+    assert_eq!(report.rounds_run, h.config().rounds);
+    assert_eq!(report.min_participants, h.config().clients, "the flap cut a round");
+    assert!(report.bitwise_clean, "resume changed the reduction");
+    assert!(report.materialized > 0, "the link drop must have materialized");
+}
+
+/// A flap that outlives the grace window degrades to the pre-resume
+/// departure semantics: the straggler cut adjudicates the loss, the
+/// survivors finish, and the returning client rejoins at a boundary.
+#[test]
+fn sim_smoke_grace_expired_flap_departs_then_rejoins() {
+    let h = harness();
+    let mut schedule = default_schedule();
+    schedule.faults.push(Fault::Disconnect { client: 1, at_ms: 25, reconnect_after_ms: 60 });
+    assert!(
+        !schedule.under_budget(h.config().round_timeout),
+        "a flap longer than the deadline is not recoverable"
+    );
+    let report = h.check_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok, "healthy clients remained — the job must finish");
+    assert_eq!(report.rounds_run, h.config().rounds);
+    assert_eq!(report.min_participants, h.config().clients - 1, "exactly one client was cut");
+    assert!(!report.bitwise_clean, "a departure is not bitwise-invisible");
+}
+
+/// The flap-heavy distribution (`--flaky`) holds every invariant over a
+/// small sweep, and a recoverable-flaps-only world from it verifies
+/// bitwise end to end.
+#[test]
+fn sim_smoke_flaky_distribution_sweep_holds_invariants() {
+    let h = harness();
+    let cfg = h.config().clone();
+    let mut faulty_worlds = 0usize;
+    for seed in 0..12 {
+        let report = h.check_seed_flaky(seed).unwrap_or_else(|v| panic!("{v}"));
+        if report.faults > 0 {
+            faulty_worlds += 1;
+        }
+    }
+    assert!(faulty_worlds > 0, "no flaps drawn in 12 flaky seeds");
+
+    let flap_seed = (0u64..)
+        .find(|&s| {
+            let sched = FaultSchedule::draw_flaky(s, cfg.clients, cfg.rounds);
+            !sched.faults.is_empty() && sched.under_budget(cfg.round_timeout)
+        })
+        .expect("most flaky worlds draw short, recoverable flaps");
+    let report = h.check_seed_flaky(flap_seed).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.bitwise_clean, "recoverable flap world {flap_seed} did not verify bitwise");
+    assert_eq!(report.min_participants, cfg.clients);
 }
 
 /// Shrink mechanics: a passing schedule yields no shrink; a failing one
