@@ -1,32 +1,181 @@
 //! Bench: §3.4 — measured communication per round vs Eq. 28 (2·E·m·r),
-//! per-client compute vs E (Eq. 26), and the coordinator's straggler
-//! cut: with E=32 and one client slower than the round deadline, round
-//! latency pins to the deadline (max), never the straggler or the sum.
+//! per-client compute vs E (Eq. 26), the coordinator's straggler cut,
+//! and the hierarchical-aggregation tier: with relay RoundEngines
+//! between the leaves and the root, the root's per-round ingest is
+//! bounded by the tree's fan-in — it grows with the arity, not with E —
+//! while the final factor stays bitwise identical to the flat star.
 //!
-//! Writes machine-readable results to `BENCH_comm_scaling.json`.
+//! The tree scenarios run in virtual time over the deterministic sim
+//! (`TreeSim`), so the ingest bytes and the per-round latency
+//! percentiles are exactly reproducible; the star scaling and straggler
+//! sections measure real wall-clock over the in-process transport.
+//!
+//! Writes machine-readable results to `BENCH_comm_scaling.json` as
+//! `{host, records}`: every record is `{op, shape, value, unit,
+//! better}`, where `better` ("lower" | "higher") tells
+//! `scripts/bench_trend.sh` which direction is a regression.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use dcf_pca::experiments::{comm, Effort};
+use dcf_pca::linalg::simd;
+use dcf_pca::sim::{FaultSchedule, TreeSim, TreeSimConfig};
 use dcf_pca::util::json::Json;
 
-fn num(v: f64) -> Json {
-    Json::Num(v)
+/// One machine-readable bench record.
+struct Record {
+    op: String,
+    shape: String,
+    value: f64,
+    unit: &'static str,
+    /// which direction is an improvement — the trend script flags a
+    /// regression when `value` moves the other way past tolerance
+    better: &'static str,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str(self.op.clone()));
+        obj.insert("shape".to_string(), Json::Str(self.shape.clone()));
+        obj.insert("value".to_string(), Json::Num(self.value));
+        obj.insert("unit".to_string(), Json::Str(self.unit.to_string()));
+        obj.insert("better".to_string(), Json::Str(self.better.to_string()));
+        Json::Obj(obj)
+    }
+}
+
+/// Host fingerprint for the JSON header (no perf probes here — the comm
+/// numbers are bytes and virtual time, which don't depend on them).
+fn host_header() -> Json {
+    let features: Vec<Json> =
+        simd::detected_features().into_iter().map(|f| Json::Str(f.to_string())).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut obj = BTreeMap::new();
+    obj.insert("dispatch".to_string(), Json::Str(simd::Dispatch::active().name().to_string()));
+    obj.insert("forced_scalar".to_string(), Json::Bool(simd::forced_scalar()));
+    obj.insert("features".to_string(), Json::Arr(features));
+    obj.insert("cores".to_string(), Json::Num(cores as f64));
+    Json::Obj(obj)
+}
+
+fn push(
+    records: &mut Vec<Record>,
+    op: &str,
+    shape: &str,
+    value: f64,
+    unit: &'static str,
+    better: &'static str,
+) {
+    records.push(Record { op: op.to_string(), shape: shape.to_string(), value, unit, better });
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// What one fault-free tree world measured at the root.
+struct TreeRow {
+    /// mean upstream bytes the root ingested per round
+    ingest_mean: f64,
+    fan_in_max: usize,
+}
+
+/// Run one fault-free tree federation in virtual time, assert the
+/// fan-in/participation invariants, and emit its root-side records.
+/// With `bitwise_vs_star` the same fleet also runs as a flat star and
+/// the tree's final factor must match it bit for bit (`record_star`
+/// additionally emits the star's ingest row for comparison).
+fn run_tree_world(
+    cfg: TreeSimConfig,
+    bitwise_vs_star: bool,
+    record_star: bool,
+    records: &mut Vec<Record>,
+) -> TreeRow {
+    let (leaves, arity, rounds) = (cfg.leaves, cfg.arity, cfg.rounds);
+    let sim = TreeSim::new(cfg).expect("tree sim config");
+    let topo = *sim.topology();
+    let schedule = FaultSchedule::fault_free(7, topo.top_count(), rounds);
+    let out = sim.run_tree(&schedule).expect("fault-free tree run");
+    assert_eq!(out.rounds.len(), rounds, "fault-free tree must complete every round");
+    for r in &out.rounds {
+        // every complete round folds exactly the top relay tier, and a
+        // relay's count telemetry restores the full leaf participation
+        assert_eq!(
+            r.fan_in,
+            topo.top_count(),
+            "round {}: root fan-in {} with {} top-level relays",
+            r.round,
+            r.fan_in,
+            topo.top_count()
+        );
+        assert_eq!(r.participants, leaves, "round {}: leaf participation", r.round);
+    }
+    let fan_in_max = out.rounds.iter().map(|r| r.fan_in).max().unwrap_or(0);
+    assert!(fan_in_max <= arity, "root ingest must be bounded by the arity");
+    let ingest_mean =
+        out.rounds.iter().map(|r| r.bytes_up as f64).sum::<f64>() / rounds as f64;
+    let mut secs: Vec<f64> = out.rounds.iter().map(|r| r.round_secs).collect();
+    secs.sort_by(f64::total_cmp);
+    let (p50_ms, p99_ms) = (1e3 * percentile(&secs, 0.5), 1e3 * percentile(&secs, 0.99));
+
+    if bitwise_vs_star {
+        let reference = sim.reference();
+        assert!(
+            out.u == reference.u,
+            "tree U diverged bitwise from the star run (E={leaves}, arity={arity})"
+        );
+        if record_star {
+            let star_ingest = reference.rounds.iter().map(|r| r.bytes_up as f64).sum::<f64>()
+                / reference.rounds.len() as f64;
+            push(
+                records,
+                "root_ingest_bytes_per_round",
+                &format!("E={leaves} star"),
+                star_ingest,
+                "bytes",
+                "lower",
+            );
+        }
+    }
+
+    let shape = format!("E={leaves} arity={arity}");
+    println!(
+        "tree {shape}: {} level(s), root fan-in {}, ingest {ingest_mean:.0} B/round, \
+         virtual p50 {p50_ms:.1} ms p99 {p99_ms:.1} ms{}",
+        topo.levels,
+        topo.top_count(),
+        if bitwise_vs_star { ", U bitwise == star" } else { "" }
+    );
+    push(records, "root_ingest_bytes_per_round", &shape, ingest_mean, "bytes", "lower");
+    push(records, "root_fan_in_max", &shape, fan_in_max as f64, "updates", "lower");
+    push(records, "round_p50_ms_virtual", &shape, p50_ms, "ms", "lower");
+    push(records, "round_p99_ms_virtual", &shape, p99_ms, "ms", "lower");
+    TreeRow { ingest_mean, fan_in_max }
 }
 
 fn main() {
     let effort = Effort::from_env();
     println!("comm/compute scaling bench (mode: {effort:?})");
+    let mut records: Vec<Record> = Vec::new();
+
     let rows = comm::run(effort);
     for r in &rows {
         // Eq. 28: payload is exactly 2·E·m·r floats; framing (incl. the
-        // 5-byte job envelope) stays <5%
+        // 9-byte version/job/seq envelope) stays <5%
         assert!(
             r.overhead_frac < 0.05,
             "E={}: framing overhead {:.2}%",
             r.clients,
             100.0 * r.overhead_frac
         );
+        let shape = format!("E={}", r.clients);
+        let bpr = r.bytes_per_round;
+        push(&mut records, "star_wire_bytes_per_round", &shape, bpr, "bytes", "lower");
+        push(&mut records, "star_client_secs_per_round", &shape, r.client_secs, "s", "lower");
     }
     // per-client critical path falls as E grows (the paper's scalability
     // claim); allow slack for tiny-block constant costs
@@ -73,38 +222,72 @@ fn main() {
         s.round_p50_secs,
         s.delay_secs
     );
+    let shape = format!("E={} slow={}", s.clients, s.slow_clients);
+    push(&mut records, "straggler_round_p50", &shape, s.round_p50_secs, "s", "lower");
+    push(&mut records, "straggler_round_p99", &shape, s.round_p99_secs, "s", "lower");
+
+    // hierarchical aggregation: the root's ingest follows the tree's
+    // fan-in. All tree worlds share the skinny per-leaf instance (m=8,
+    // one column per leaf) so even the 10k-leaf federation is cheap.
+    println!("\nhierarchical aggregation tier (virtual time):");
+    let base = |leaves: usize, arity: usize, rounds: usize| TreeSimConfig {
+        leaves,
+        arity,
+        m: 8,
+        cols_per_leaf: 1,
+        rank: 2,
+        sparsity: 0.05,
+        rounds,
+        k_local: 1,
+        problem_seed: 7,
+        server_seed: 0xDCF,
+        round_timeout: Duration::from_millis(50),
+        threads: 0,
+        mute: None,
+    };
+
+    // arity sweep at fixed E=64: the top tier is exactly {2, 4, 8} wide,
+    // so ingest must grow strictly with arity — and only with arity
+    let sweep: Vec<TreeRow> = [2usize, 4, 8]
+        .iter()
+        .map(|&arity| run_tree_world(base(64, arity, 4), true, arity == 4, &mut records))
+        .collect();
+    assert!(
+        sweep[0].ingest_mean < sweep[1].ingest_mean && sweep[1].ingest_mean < sweep[2].ingest_mean,
+        "root ingest should grow with arity: {:?}",
+        sweep.iter().map(|r| r.ingest_mean).collect::<Vec<_>>()
+    );
+
+    // E sweep at fixed arity 4: 64 and 1024 leaves both top out at a
+    // 4-wide tier, so the root's ingest bytes must be *identical* —
+    // coordinator load is set by the arity, not the federation size
+    let big = run_tree_world(base(1024, 4, 4), true, true, &mut records);
+    assert_eq!(
+        sweep[1].ingest_mean, big.ingest_mean,
+        "root ingest must not grow with E at fixed arity"
+    );
+    // while the equivalent star root ingests E updates per round
+    let star_1024 = records
+        .iter()
+        .find(|r| r.op == "root_ingest_bytes_per_round" && r.shape == "E=1024 star")
+        .expect("star baseline row")
+        .value;
+    assert!(
+        star_1024 > 100.0 * big.ingest_mean,
+        "a 1024-leaf star should ingest ≫ the 4-wide tree ({star_1024:.0} vs {:.0})",
+        big.ingest_mean
+    );
+
+    // the headline scale point: a 10 000-leaf federation whose root
+    // never serves more than the arity (3 top relays under arity 8)
+    let huge = run_tree_world(base(10_000, 8, 2), false, false, &mut records);
+    assert!(huge.fan_in_max <= 8);
 
     // machine-readable dump
-    let mut straggler = BTreeMap::new();
-    straggler.insert("clients".to_string(), num(s.clients as f64));
-    straggler.insert("slow_clients".to_string(), num(s.slow_clients as f64));
-    straggler.insert("delay_secs".to_string(), num(s.delay_secs));
-    straggler.insert("deadline_secs".to_string(), num(s.deadline_secs));
-    straggler.insert("round_p50_secs".to_string(), num(s.round_p50_secs));
-    straggler.insert("round_p99_secs".to_string(), num(s.round_p99_secs));
-    straggler.insert("baseline_p50_secs".to_string(), num(s.baseline_p50_secs));
-    straggler.insert("participants_min".to_string(), num(s.participants_min as f64));
-    straggler.insert("participants_max".to_string(), num(s.participants_max as f64));
-
-    let scaling = Json::Arr(
-        rows.iter()
-            .map(|r| {
-                let mut o = BTreeMap::new();
-                o.insert("clients".to_string(), num(r.clients as f64));
-                o.insert("bytes_per_round".to_string(), num(r.bytes_per_round));
-                o.insert("eq28_payload".to_string(), num(r.eq28_payload as f64));
-                o.insert("overhead_frac".to_string(), num(r.overhead_frac));
-                o.insert("client_secs".to_string(), num(r.client_secs));
-                o.insert("total_secs".to_string(), num(r.total_secs));
-                o.insert("final_err".to_string(), num(r.final_err));
-                Json::Obj(o)
-            })
-            .collect(),
-    );
-    let mut root = BTreeMap::new();
-    root.insert("scaling".to_string(), scaling);
-    root.insert("straggler".to_string(), Json::Obj(straggler));
-    let json = Json::Obj(root);
+    let mut top = BTreeMap::new();
+    top.insert("host".to_string(), host_header());
+    top.insert("records".to_string(), Json::Arr(records.iter().map(Record::to_json).collect()));
+    let json = Json::Obj(top);
     let out_path = "BENCH_comm_scaling.json";
     match std::fs::write(out_path, format!("{json}\n")) {
         Ok(()) => println!("machine-readable results written to {out_path}"),

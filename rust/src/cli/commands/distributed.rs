@@ -1,6 +1,7 @@
-//! `dcf-pca serve` / `dcf-pca worker` — genuinely distributed DCF-PCA
-//! over TCP: the server and each client run as separate processes
-//! (possibly on separate hosts).
+//! `dcf-pca serve` / `dcf-pca worker` / `dcf-pca relay` — genuinely
+//! distributed DCF-PCA over TCP: the server, each client, and each
+//! aggregation relay run as separate processes (possibly on separate
+//! hosts).
 //!
 //! The server is a single-threaded event loop: on Linux it runs the
 //! epoll reactor over non-blocking sockets (no thread per connection, no
@@ -26,6 +27,7 @@ use crate::cli::args::{
 use crate::coordinator::client::{run_client_resumable, ClientConfig, FaultPlan};
 use crate::coordinator::engine::RoundEngine;
 use crate::coordinator::kernel::NativeKernel;
+use crate::coordinator::relay::run_relay;
 use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use crate::coordinator::transport::retry::BackoffPolicy;
 use crate::coordinator::transport::tcp::{TcpAcceptor, TcpChannel};
@@ -33,6 +35,7 @@ use crate::coordinator::transport::Channel;
 use crate::coordinator::PrivacySpec;
 use crate::rpca::partition::ColumnPartition;
 use crate::rpca::problem::ProblemSpec;
+use crate::sim::TreeTopology;
 
 const SERVE_SPECS: &[OptSpec] = &[
     OptSpec { name: "listen", takes_value: true, help: "bind address (default 127.0.0.1:7070)" },
@@ -69,6 +72,13 @@ const SERVE_SPECS: &[OptSpec] = &[
         takes_value: true,
         help: "seconds a disconnected worker may take to resume its session under \
                --fault-policy skip (0 = depart immediately; default: the round timeout)",
+    },
+    OptSpec {
+        name: "tree-arity",
+        takes_value: true,
+        help: "front the fleet with a relay tier of this fan-in (power of two ≥ 2): the \
+               root then serves only the top-level relays and prints the launch plan \
+               (see `dcf-pca relay`)",
     },
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
@@ -127,9 +137,46 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
         cfg.reconnect_grace = Some(std::time::Duration::from_secs(secs));
     }
 
+    // with a relay tier the root serves only the top-level relays; the
+    // tree groups slots by aligned power-of-two blocks, so the final
+    // factor stays bitwise identical to the flat star deployment
+    let tree = match args.get_usize("tree-arity")? {
+        Some(arity) => Some(TreeTopology::new(clients, arity)?),
+        None => None,
+    };
+    let members = tree.as_ref().map_or(clients, |t| t.top_count());
+    if let Some(t) = &tree {
+        println!(
+            "hierarchical tier: {} leaves at arity {} → {} relay level(s), {} relay(s); \
+             the root ingests {} partial(s) per round",
+            t.leaves,
+            t.arity,
+            t.levels,
+            t.relay_count(),
+            t.top_count()
+        );
+        for (i, count) in t.relays_per_level().iter().enumerate() {
+            let level = i + 1;
+            println!(
+                "  level {level}: {count} relay(s), span {} slot(s), --round-timeout {:.3}",
+                t.span_at(level),
+                t.level_timeout(cfg.round_timeout, level).as_secs_f64()
+            );
+        }
+        println!(
+            "  top level: dcf-pca relay --connect {listen} --span-len {span} \
+             --span-lo <block·{span}> …",
+            span = t.top_span()
+        );
+    }
+
     let acceptor = TcpAcceptor::bind(listen)?;
-    println!("server listening on {} for {clients} workers…", acceptor.local_addr()?);
-    let outcome = serve_event_loop(acceptor, cfg, clients)?;
+    println!(
+        "server listening on {} for {members} {}…",
+        acceptor.local_addr()?,
+        if tree.is_some() { "relays" } else { "workers" }
+    );
+    let outcome = serve_event_loop(acceptor, cfg, members)?;
 
     println!("run complete: {} rounds", outcome.rounds.len());
     if let Some(last) = outcome.rounds.last() {
@@ -183,6 +230,48 @@ fn serve_event_loop(
     engine.take_result(0).expect("job 0 completed")
 }
 
+/// The reconnect knobs `worker` and `relay` share (both sides run the
+/// same resumable-session backoff; see [`parse_backoff`]).
+const RETRY_BUDGET_OPT: OptSpec = OptSpec {
+    name: "retry-budget",
+    takes_value: true,
+    help: "consecutive failed connects/reconnects tolerated before giving up \
+           (default 8; 0 = fail fast). The budget refills whenever the session \
+           makes progress, and covers the initial connect — start order vs the \
+           server no longer matters.",
+};
+const BACKOFF_BASE_OPT: OptSpec = OptSpec {
+    name: "backoff-base",
+    takes_value: true,
+    help: "first retry delay in ms; doubles each attempt with downward jitter (default 200)",
+};
+const BACKOFF_MAX_OPT: OptSpec = OptSpec {
+    name: "backoff-max",
+    takes_value: true,
+    help: "ceiling on any single retry delay in ms (default 10000)",
+};
+
+/// Fold the shared reconnect flags into a [`BackoffPolicy`].
+fn parse_backoff(args: &ParsedArgs) -> Result<BackoffPolicy> {
+    let mut policy = BackoffPolicy::default();
+    if let Some(b) = args.get_u64("retry-budget")? {
+        policy.retry_budget = b as u32;
+    }
+    if let Some(ms) = args.get_u64("backoff-base")? {
+        if ms == 0 {
+            bail!("--backoff-base must be positive");
+        }
+        policy.base = std::time::Duration::from_millis(ms);
+    }
+    if let Some(ms) = args.get_u64("backoff-max")? {
+        policy.max = std::time::Duration::from_millis(ms);
+    }
+    if policy.max < policy.base {
+        bail!("--backoff-max below --backoff-base");
+    }
+    Ok(policy)
+}
+
 const WORKER_SPECS: &[OptSpec] = &[
     OptSpec { name: "connect", takes_value: true, help: "server address (default 127.0.0.1:7070)" },
     OptSpec { name: "id", takes_value: true, help: "client id 0..E-1 (required; any order)" },
@@ -202,24 +291,9 @@ const WORKER_SPECS: &[OptSpec] = &[
         takes_value: true,
         help: "wire codec: none | f32 | int8 — must match the server",
     },
-    OptSpec {
-        name: "retry-budget",
-        takes_value: true,
-        help: "consecutive failed connects/reconnects tolerated before giving up \
-               (default 8; 0 = fail fast). The budget refills whenever the session \
-               makes progress, and covers the initial connect — start order vs the \
-               server no longer matters.",
-    },
-    OptSpec {
-        name: "backoff-base",
-        takes_value: true,
-        help: "first retry delay in ms; doubles each attempt with downward jitter (default 200)",
-    },
-    OptSpec {
-        name: "backoff-max",
-        takes_value: true,
-        help: "ceiling on any single retry delay in ms (default 10000)",
-    },
+    RETRY_BUDGET_OPT,
+    BACKOFF_BASE_OPT,
+    BACKOFF_MAX_OPT,
     THREADS_OPT,
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
@@ -319,22 +393,7 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
         }
     }
 
-    let mut policy = BackoffPolicy::default();
-    if let Some(b) = args.get_u64("retry-budget")? {
-        policy.retry_budget = b as u32;
-    }
-    if let Some(ms) = args.get_u64("backoff-base")? {
-        if ms == 0 {
-            bail!("--backoff-base must be positive");
-        }
-        policy.base = std::time::Duration::from_millis(ms);
-    }
-    if let Some(ms) = args.get_u64("backoff-max")? {
-        policy.max = std::time::Duration::from_millis(ms);
-    }
-    if policy.max < policy.base {
-        bail!("--backoff-max below --backoff-base");
-    }
+    let policy = parse_backoff(&args)?;
 
     println!(
         "worker {id} dialing {addr}, columns {}..{}{}",
@@ -360,4 +419,159 @@ pub fn run_worker(argv: &[String]) -> Result<()> {
     let rounds = run_client_resumable(connect, cfg, &NativeKernel::new(), &policy)?;
     println!("worker {id} done after {rounds} rounds");
     Ok(())
+}
+
+const RELAY_SPECS: &[OptSpec] = &[
+    OptSpec {
+        name: "listen",
+        takes_value: true,
+        help: "downstream bind address (default 127.0.0.1:7071)",
+    },
+    OptSpec {
+        name: "connect",
+        takes_value: true,
+        help: "parent address — the root server or a higher relay (default 127.0.0.1:7070)",
+    },
+    OptSpec {
+        name: "span-lo",
+        takes_value: true,
+        help: "first leaf slot of this relay's block — a multiple of --span-len (required)",
+    },
+    OptSpec {
+        name: "span-len",
+        takes_value: true,
+        help: "leaf slots this relay fronts — a power of two (required)",
+    },
+    OptSpec {
+        name: "children",
+        takes_value: true,
+        help: "direct downstream connections expected — workers at the bottom level, \
+               child relays above it (default: span-len)",
+    },
+    OptSpec { name: "n", takes_value: true, help: "problem size — must match the server" },
+    OptSpec { name: "rank", takes_value: true, help: "rank — must match the server" },
+    OptSpec { name: "rounds", takes_value: true, help: "rounds T — must match the server" },
+    OptSpec {
+        name: "k-local",
+        takes_value: true,
+        help: "local iterations K — must match the server (default 2)",
+    },
+    OptSpec {
+        name: "compression",
+        takes_value: true,
+        help: "downstream wire codec: none | f32 | int8 — must match the workers \
+               (the forwarded partial always travels uncompressed upstream)",
+    },
+    OptSpec {
+        name: "round-timeout",
+        takes_value: true,
+        help: "this level's straggler deadline in seconds — keep it strictly below the \
+               parent's minus two hop latencies so a child-level cut resolves first \
+               (default 300; `serve --tree-arity` prints nested values)",
+    },
+    RETRY_BUDGET_OPT,
+    BACKOFF_BASE_OPT,
+    BACKOFF_MAX_OPT,
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+/// `dcf-pca relay` — one node of the hierarchical-aggregation tier: a
+/// coordinator to its span downstream, a worker to its parent upstream,
+/// forwarding exactly one canonical partial sum per round.
+pub fn run_relay_cmd(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, RELAY_SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("relay", RELAY_SPECS));
+        return Ok(());
+    }
+    // (a relay only sums Updates — no kernel work, no --threads knob)
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7071");
+    let upstream = args.get("connect").unwrap_or("127.0.0.1:7070").to_string();
+    let span_lo = match args.get_usize("span-lo")? {
+        Some(v) => v,
+        None => bail!("--span-lo is required"),
+    };
+    let span_len = match args.get_usize("span-len")? {
+        Some(v) => v,
+        None => bail!("--span-len is required"),
+    };
+    if span_len == 0 || !span_len.is_power_of_two() {
+        bail!("--span-len must be a power of two, got {span_len}");
+    }
+    if span_lo % span_len != 0 {
+        // only aligned blocks are canonical nodes of the engine's span
+        // reduction — a misaligned relay could never merge bitwise
+        bail!("--span-lo {span_lo} is not a multiple of --span-len {span_len}");
+    }
+    let children = args.get_usize("children")?.unwrap_or(span_len);
+    if children == 0 || children > span_len {
+        bail!("--children must be in 1..=span-len, got {children}");
+    }
+    let n = args.get_usize("n")?.unwrap_or(200);
+    let rank = args
+        .get_usize("rank")?
+        .unwrap_or_else(|| ((n as f64) * 0.05).round().max(1.0) as usize);
+    let rounds = args.get_usize("rounds")?.unwrap_or(40);
+    let k_local = args.get_usize("k-local")?.unwrap_or(2);
+    let mut root = ServerConfig::new(n, rank, rounds, k_local);
+    root.compression = parse_compression(&args)?;
+    let timeout = parse_round_timeout(&args)?.unwrap_or(std::time::Duration::from_secs(300));
+    let cfg = root.relay(span_lo, span_len, timeout);
+    let policy = parse_backoff(&args)?;
+
+    let acceptor = TcpAcceptor::bind(listen)?;
+    println!(
+        "relay [{span_lo}..{}) listening on {} for {children} member(s), parent {upstream}…",
+        span_lo + span_len,
+        acceptor.local_addr()?
+    );
+    let connect =
+        || TcpChannel::connect(upstream.as_str()).map(|c| Box::new(c) as Box<dyn Channel>);
+    let outcome = relay_event_loop(acceptor, &cfg, children, connect, &policy)?;
+
+    println!(
+        "relay [{span_lo}..{}) done: {} round(s) forwarded",
+        span_lo + span_len,
+        outcome.rounds.len()
+    );
+    println!(
+        "communication: {} B down, {} B up over {} rounds ({} B/round)",
+        outcome.comm.total_down,
+        outcome.comm.total_up,
+        outcome.comm.rounds,
+        outcome.comm.per_round() as u64,
+    );
+    Ok(())
+}
+
+/// Drive one relay job on the best reactor for the platform (the same
+/// split as [`serve_event_loop`]).
+fn relay_event_loop<F>(
+    acceptor: TcpAcceptor,
+    cfg: &ServerConfig,
+    children: usize,
+    connect: F,
+    policy: &BackoffPolicy,
+) -> Result<ServerOutcome>
+where
+    F: FnMut() -> Result<Box<dyn Channel>>,
+{
+    #[cfg(target_os = "linux")]
+    {
+        use crate::coordinator::transport::reactor::EpollReactor;
+        let mut reactor = EpollReactor::new(acceptor.into_listener())?;
+        return run_relay(&mut reactor, connect, cfg, 0, children, policy);
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        // portable fallback: fixed membership, channel readiness polling
+        use crate::coordinator::transport::reactor::ChannelReactor;
+        let mut channels: Vec<Box<dyn Channel>> = acceptor
+            .accept_n(children)?
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Channel>)
+            .collect();
+        let mut reactor = ChannelReactor::new(&mut channels);
+        run_relay(&mut reactor, connect, cfg, 0, children, policy)
+    }
 }

@@ -4,12 +4,20 @@
 //! Thousands of multi-round federations run per wall-minute; every
 //! failure prints the seed that reproduces it (`--seeds S..S+1`) and,
 //! with `--shrink`, the greedily minimized fault schedule.
+//!
+//! Two world shapes: `--topology star` (the default — every client
+//! directly under the root, faults drawn against clients) and
+//! `--topology tree` (leaves behind relay `RoundEngine`s, faults drawn
+//! against the relays; calm and recoverable-flap worlds must reproduce
+//! the star run bit for bit).
 
 use crate::bail;
 use crate::error::Result;
 
 use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
-use crate::sim::{SimConfig, SimHarness};
+use crate::sim::{
+    FaultSchedule, SimConfig, SimHarness, SimReport, TreeSim, TreeSimConfig, Violation,
+};
 use crate::telemetry;
 
 const SPECS: &[OptSpec] = &[
@@ -18,16 +26,37 @@ const SPECS: &[OptSpec] = &[
         takes_value: true,
         help: "seed range A..B (half-open) or a single seed; default 0..64",
     },
+    OptSpec {
+        name: "topology",
+        takes_value: true,
+        help: "star (default) — every client under the root — or tree: leaves behind \
+               relay RoundEngines, faults drawn against the relays",
+    },
     OptSpec { name: "clients", takes_value: true, help: "federation size E (default 4)" },
-    OptSpec { name: "n", takes_value: true, help: "problem size (default 48)" },
+    OptSpec {
+        name: "tree-arity",
+        takes_value: true,
+        help: "tree topology: relay fan-in, a power of two (default 4)",
+    },
+    OptSpec { name: "n", takes_value: true, help: "star topology: problem size (default 48)" },
+    OptSpec {
+        name: "m",
+        takes_value: true,
+        help: "tree topology: data rows (default 8; the star sizes via --n)",
+    },
+    OptSpec {
+        name: "cols-per-leaf",
+        takes_value: true,
+        help: "tree topology: columns per leaf, n = E·cols (default 3)",
+    },
     OptSpec { name: "rank", takes_value: true, help: "rank (default 2)" },
     OptSpec { name: "sparsity", takes_value: true, help: "corruption fraction (default 0.05)" },
-    OptSpec { name: "rounds", takes_value: true, help: "rounds T (default 16)" },
+    OptSpec { name: "rounds", takes_value: true, help: "rounds T (default 16; tree 6)" },
     OptSpec { name: "k-local", takes_value: true, help: "local iterations K (default 2)" },
     OptSpec {
         name: "polish-sweeps",
         takes_value: true,
-        help: "pre-reveal polish sweeps (default 3)",
+        help: "star topology: pre-reveal polish sweeps (default 3)",
     },
     OptSpec { name: "problem-seed", takes_value: true, help: "synthetic-instance seed (default 7)" },
     OptSpec {
@@ -43,13 +72,13 @@ const SPECS: &[OptSpec] = &[
     OptSpec {
         name: "tolerance",
         takes_value: true,
-        help: "error ceiling for under-budget schedules (default 5e-2)",
+        help: "star topology: error ceiling for under-budget schedules (default 5e-2)",
     },
     OptSpec {
         name: "flaky",
         takes_value: false,
-        help: "draw the flap-heavy fault distribution (link drops + reconnects) \
-               instead of the general one — hammers session resume",
+        help: "star topology: draw the flap-heavy fault distribution (link drops + \
+               reconnects) instead of the general one — hammers session resume",
     },
     OptSpec {
         name: "shrink",
@@ -90,7 +119,14 @@ pub fn run(argv: &[String]) -> Result<()> {
         telemetry::set_level(telemetry::Level::Off);
     }
     let (first, last) = parse_seed_range(args.get("seeds").unwrap_or("0..64"))?;
+    match args.get("topology") {
+        None | Some("star") => run_star(&args, first, last, verbose),
+        Some("tree") => run_tree(&args, first, last, verbose),
+        Some(other) => bail!("--topology must be star or tree, got {other}"),
+    }
+}
 
+fn run_star(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<()> {
     let mut cfg = SimConfig::default();
     if let Some(e) = args.get_usize("clients")? {
         cfg.clients = e;
@@ -119,11 +155,8 @@ pub fn run(argv: &[String]) -> Result<()> {
     if let Some(s) = args.get_u64("server-seed")? {
         cfg.server_seed = s;
     }
-    if let Some(ms) = args.get_u64("timeout-ms")? {
-        if ms == 0 {
-            bail!("--timeout-ms must be positive");
-        }
-        cfg.round_timeout = std::time::Duration::from_millis(ms);
+    if let Some(t) = parse_timeout_ms(args)? {
+        cfg.round_timeout = t;
     }
     if let Some(tol) = args.get_f64("tolerance")? {
         cfg.err_tolerance = tol;
@@ -141,16 +174,111 @@ pub fn run(argv: &[String]) -> Result<()> {
         if flaky { " (flaky distribution)" } else { "" }
     );
     let harness = SimHarness::new(cfg)?;
+    fuzz_loop(
+        first,
+        last,
+        verbose,
+        args.flag("shrink"),
+        |seed| {
+            if flaky {
+                harness.check_seed_flaky(seed)
+            } else {
+                harness.check_seed(seed)
+            }
+        },
+        |schedule| harness.shrink(schedule),
+    )
+}
 
+fn run_tree(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<()> {
+    if args.get("n").is_some() {
+        bail!("--topology tree sizes its problem via --m and --cols-per-leaf, not --n");
+    }
+    if args.get("polish-sweeps").is_some() || args.get("tolerance").is_some() {
+        bail!("--polish-sweeps/--tolerance apply to the star harness only");
+    }
+    if args.flag("flaky") {
+        bail!("--flaky is a star distribution; tree worlds always draw relay faults");
+    }
+    let mut cfg = TreeSimConfig::default();
+    if let Some(e) = args.get_usize("clients")? {
+        cfg.leaves = e;
+    }
+    if let Some(a) = args.get_usize("tree-arity")? {
+        cfg.arity = a;
+    }
+    if let Some(m) = args.get_usize("m")? {
+        cfg.m = m;
+    }
+    if let Some(c) = args.get_usize("cols-per-leaf")? {
+        cfg.cols_per_leaf = c;
+    }
+    if let Some(r) = args.get_usize("rank")? {
+        cfg.rank = r;
+    }
+    if let Some(s) = args.get_f64("sparsity")? {
+        cfg.sparsity = s;
+    }
+    if let Some(t) = args.get_usize("rounds")? {
+        cfg.rounds = t;
+    }
+    if let Some(k) = args.get_usize("k-local")? {
+        cfg.k_local = k;
+    }
+    if let Some(s) = args.get_u64("problem-seed")? {
+        cfg.problem_seed = s;
+    }
+    if let Some(s) = args.get_u64("server-seed")? {
+        cfg.server_seed = s;
+    }
+    if let Some(t) = parse_timeout_ms(args)? {
+        cfg.round_timeout = t;
+    }
+
+    let sim = TreeSim::new(cfg)?;
+    let t = sim.topology();
+    let cfg = sim.config();
+    println!(
+        "simulate tree: E={} arity={} levels={} root fan-in {} m={} rank={} T={} K={} \
+         timeout={}ms seeds {first}..{last}",
+        t.leaves,
+        t.arity,
+        t.levels,
+        t.top_count(),
+        cfg.m,
+        cfg.rank,
+        cfg.rounds,
+        cfg.k_local,
+        cfg.round_timeout.as_millis(),
+    );
+    fuzz_loop(
+        first,
+        last,
+        verbose,
+        args.flag("shrink"),
+        |seed| sim.check_tree_seed(seed),
+        |schedule| sim.shrink_tree(schedule),
+    )
+}
+
+/// Shared seed-sweep driver: check every seed, narrate failures (with
+/// optional shrinking), and fail the command when any seed violated an
+/// invariant. Both topologies speak the same report/violation types.
+fn fuzz_loop(
+    first: u64,
+    last: u64,
+    verbose: bool,
+    shrink: bool,
+    check: impl Fn(u64) -> std::result::Result<SimReport, Violation>,
+    minimize: impl Fn(&FaultSchedule) -> Option<(FaultSchedule, Violation)>,
+) -> Result<()> {
     let wall = std::time::Instant::now();
     let total = last - first;
     let mut ok = 0u64;
     let mut failures = 0u64;
     let mut virtual_total = std::time::Duration::ZERO;
     for seed in first..last {
-        let checked =
-            if flaky { harness.check_seed_flaky(seed) } else { harness.check_seed(seed) };
-        match checked {
+        match check(seed) {
             Ok(report) => {
                 ok += 1;
                 virtual_total += report.virtual_elapsed;
@@ -175,8 +303,8 @@ pub fn run(argv: &[String]) -> Result<()> {
                 failures += 1;
                 println!("seed {seed}: FAIL");
                 println!("{violation}");
-                if args.flag("shrink") {
-                    match harness.shrink(&violation.schedule) {
+                if shrink {
+                    match minimize(&violation.schedule) {
                         Some((minimal, min_violation)) => {
                             println!(
                                 "shrunk to {} fault(s):\n{}\nstill fails with: {}",
@@ -208,6 +336,14 @@ pub fn run(argv: &[String]) -> Result<()> {
         bail!("{failures} of {total} seeds violated protocol invariants");
     }
     Ok(())
+}
+
+fn parse_timeout_ms(args: &ParsedArgs) -> Result<Option<std::time::Duration>> {
+    match args.get_u64("timeout-ms")? {
+        Some(0) => bail!("--timeout-ms must be positive"),
+        Some(ms) => Ok(Some(std::time::Duration::from_millis(ms))),
+        None => Ok(None),
+    }
 }
 
 #[cfg(test)]

@@ -6,9 +6,10 @@
 //!                     [--data fed.manifest.json]  # stream shards out-of-core
 //! dcf-pca generate    --n 500 [--rank 25 --sparsity 0.05 --seed 42] --out m.csv
 //!                     [--format shard --shards 8]  # per-client .dcfshard + manifest
-//! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [...]
+//! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [--tree-arity 8]
 //! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [--data fed.shard0.dcfshard]
-//! dcf-pca simulate    --seeds 0..512 [--shrink]
+//! dcf-pca relay       --listen :7071 --connect 127.0.0.1:7070 --span-lo 0 --span-len 8
+//! dcf-pca simulate    --seeds 0..512 [--shrink] [--topology tree --tree-arity 8]
 //! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm|sim> [--quick]
 //! dcf-pca artifacts-check [--dir artifacts]
 //! ```
@@ -29,6 +30,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "generate" => commands::generate::run(rest),
         "serve" => commands::distributed::run_serve(rest),
         "worker" => commands::distributed::run_worker(rest),
+        "relay" => commands::distributed::run_relay_cmd(rest),
         "simulate" => commands::simulate::run(rest),
         "experiment" => commands::experiment::run(rest),
         "artifacts-check" => commands::artifacts_check::run(rest),
@@ -52,6 +54,7 @@ commands:
   generate         emit a synthetic RPCA instance as CSV
   serve            run the DCF-PCA server over TCP
   worker           run one DCF-PCA client over TCP
+  relay            run one aggregation relay over TCP (server to its span, client upstream)
   simulate         fuzz the full protocol under seeded fault schedules (virtual time)
   experiment       regenerate a paper table/figure
                    (fig1 fig2 fig3 table1 fig4 comm ablations theory sim)

@@ -1,4 +1,17 @@
 //! Server-side aggregation of client consensus factors (paper Eq. 9).
+//!
+//! Since the hierarchical-aggregation tier, reduction is expressed as a
+//! *canonical binary tree over slot ids*: every contribution covers an
+//! aligned power-of-two span `[span_lo, span_lo + span_len)` of slots,
+//! and `combine` folds a set of disjoint spans by recursively splitting
+//! the id space at power-of-two midpoints, skipping absent halves
+//! entirely. Because aligned power-of-two blocks ARE the internal nodes
+//! of that canonical tree, a relay that covers `[k·s, (k+1)·s)` computes
+//! bitwise the same partial sum the root would have computed over those
+//! slots — so a tree federation's final factor is bitwise identical to
+//! the equivalent star run, for any arity, depth, arrival order or cut
+//! pattern. Scaling happens only at the leaves (per-slot deterministic
+//! factors) and once at the root (`finalize`), never mid-tree.
 
 use crate::linalg::Mat;
 
@@ -12,31 +25,174 @@ pub enum Aggregation {
     WeightedByCols,
 }
 
+/// A partially reduced contribution covering the aligned power-of-two
+/// slot span `[span_lo, span_lo + span_len)`. A leaf client's update is
+/// a span of length 1; a relay forwards the combined partial for its
+/// whole subtree. `sum` carries leaf factors already scaled by their
+/// per-slot weight (1 for `Uniform`, n_i for `WeightedByCols`); the
+/// single global division happens in [`finalize`] at the root.
+#[derive(Clone, Debug)]
+pub struct Partial {
+    pub span_lo: usize,
+    pub span_len: usize,
+    /// number of participating leaves inside the span
+    pub count: usize,
+    /// their total column count (drives `WeightedByCols`)
+    pub cols: usize,
+    pub sum: Mat,
+    /// Σ per-leaf gradient norms (for mean-gradient telemetry)
+    pub grad_sum: f64,
+    /// max per-leaf curvature estimate
+    pub lip_max: f64,
+    /// Σ per-leaf err numerators; NaN/∞ poisons the sum, which is how
+    /// "some contributor had no ground truth" propagates through relays
+    pub err_num_sum: f64,
+    /// max per-leaf local compute seconds (critical path)
+    pub secs_max: f64,
+    /// Σ per-leaf local compute seconds (total work)
+    pub secs_sum: f64,
+}
+
+impl Partial {
+    /// Wrap one leaf's raw update as a span-1 partial, applying the
+    /// per-slot scaling for `kind`. This is the only place a leaf
+    /// factor is scaled; relays and the root only ever add.
+    pub fn leaf(
+        kind: Aggregation,
+        slot: usize,
+        mut u: Mat,
+        cols: usize,
+        grad_norm: f64,
+        lipschitz: f64,
+        err_num: f64,
+        local_secs: f64,
+    ) -> Partial {
+        if kind == Aggregation::WeightedByCols {
+            u.scale_inplace(cols as f64);
+        }
+        Partial {
+            span_lo: slot,
+            span_len: 1,
+            count: 1,
+            cols,
+            sum: u,
+            grad_sum: grad_norm,
+            lip_max: lipschitz,
+            err_num_sum: err_num,
+            secs_max: local_secs,
+            secs_sum: local_secs,
+        }
+    }
+
+    /// The span mean this partial contributes — used for consensus
+    /// dispersion telemetry over the root's direct inputs.
+    pub fn mean(&self, kind: Aggregation) -> Mat {
+        match kind {
+            Aggregation::Uniform => self.sum.scale(1.0 / self.count as f64),
+            Aggregation::WeightedByCols => self.sum.scale(1.0 / self.cols as f64),
+        }
+    }
+}
+
+/// Fold disjoint span partials into one, in canonical binary-tree order
+/// over the slot id space. The recursion splits `[lo, lo+len)` at its
+/// power-of-two midpoint and *skips* absent halves (never adds a zero
+/// matrix), so the result depends only on WHICH spans are present —
+/// not on how they were grouped into subtrees or in what order they
+/// arrived. Panics on empty input, overlapping or unaligned spans, or
+/// shape mismatch.
+pub fn combine(mut parts: Vec<Partial>) -> Partial {
+    assert!(!parts.is_empty(), "combine: no partials");
+    let shape = parts[0].sum.shape();
+    for p in &parts {
+        assert_eq!(p.sum.shape(), shape, "combine: shape mismatch");
+        assert!(
+            p.span_len.is_power_of_two() && p.span_lo % p.span_len == 0,
+            "combine: span [{}, +{}) is not an aligned power-of-two block",
+            p.span_lo,
+            p.span_len
+        );
+    }
+    parts.sort_by_key(|p| p.span_lo);
+    for w in parts.windows(2) {
+        assert!(
+            w[0].span_lo + w[0].span_len <= w[1].span_lo,
+            "combine: spans [{}, +{}) and [{}, +{}) overlap",
+            w[0].span_lo,
+            w[0].span_len,
+            w[1].span_lo,
+            w[1].span_len
+        );
+    }
+    let hi = parts.last().map(|p| p.span_lo + p.span_len).unwrap();
+    reduce(parts, 0, hi.next_power_of_two())
+}
+
+fn reduce(mut parts: Vec<Partial>, lo: usize, len: usize) -> Partial {
+    if parts.len() == 1 {
+        // A lone span is unchanged by every skip level above it.
+        return parts.pop().unwrap();
+    }
+    debug_assert!(len > 1, "multiple partials cannot fit a span of 1");
+    let mid = lo + len / 2;
+    let split = parts.partition_point(|p| p.span_lo < mid);
+    if split == 0 {
+        return reduce(parts, mid, len / 2);
+    }
+    if split == parts.len() {
+        return reduce(parts, lo, len / 2);
+    }
+    let right = parts.split_off(split);
+    let l = reduce(parts, lo, len / 2);
+    let r = reduce(right, mid, len / 2);
+    merge(l, r, lo, len)
+}
+
+/// left + right, in that fixed order — the only floating-point adds in
+/// the whole reduction. `axpy(1.0, ·)` is an exact elementwise add.
+fn merge(mut l: Partial, r: Partial, lo: usize, len: usize) -> Partial {
+    l.sum.axpy(1.0, &r.sum);
+    l.span_lo = lo;
+    l.span_len = len;
+    l.count += r.count;
+    l.cols += r.cols;
+    l.grad_sum += r.grad_sum;
+    l.lip_max = l.lip_max.max(r.lip_max);
+    l.err_num_sum += r.err_num_sum;
+    l.secs_max = l.secs_max.max(r.secs_max);
+    l.secs_sum += r.secs_sum;
+    l
+}
+
+/// The single root division turning the canonical sum into U^(t+1).
+pub fn finalize(kind: Aggregation, p: &Partial) -> Mat {
+    match kind {
+        Aggregation::Uniform => {
+            assert!(p.count > 0, "finalize: no participants");
+            p.sum.scale(1.0 / p.count as f64)
+        }
+        Aggregation::WeightedByCols => {
+            assert!(p.cols > 0, "finalize: zero total columns");
+            p.sum.scale(1.0 / p.cols as f64)
+        }
+    }
+}
+
 /// Aggregate updates. `weights[i]` is client i's column count n_i (used
 /// only by `WeightedByCols`). All matrices must share one shape.
+/// Implemented on the canonical span reduction with positional slots,
+/// so a flat call agrees bitwise with a tree of [`combine`] calls over
+/// the same slots.
 pub fn aggregate(kind: Aggregation, us: &[Mat], weights: &[usize]) -> Mat {
     assert!(!us.is_empty(), "aggregate: no updates");
     assert_eq!(us.len(), weights.len());
-    let shape = us[0].shape();
-    let mut acc = Mat::zeros(shape.0, shape.1);
-    match kind {
-        Aggregation::Uniform => {
-            let w = 1.0 / us.len() as f64;
-            for u in us {
-                assert_eq!(u.shape(), shape, "aggregate: shape mismatch");
-                acc.axpy(w, u);
-            }
-        }
-        Aggregation::WeightedByCols => {
-            let total: usize = weights.iter().sum();
-            assert!(total > 0);
-            for (u, &w) in us.iter().zip(weights) {
-                assert_eq!(u.shape(), shape, "aggregate: shape mismatch");
-                acc.axpy(w as f64 / total as f64, u);
-            }
-        }
-    }
-    acc
+    let parts: Vec<Partial> = us
+        .iter()
+        .zip(weights)
+        .enumerate()
+        .map(|(slot, (u, &w))| Partial::leaf(kind, slot, u.clone(), w, 0.0, 0.0, 0.0, 0.0))
+        .collect();
+    finalize(kind, &combine(parts))
 }
 
 /// Consensus dispersion: max_i ‖U_i − Ū‖_F / ‖Ū‖_F. Telemetry for how far
@@ -53,6 +209,10 @@ pub fn consensus_dispersion(us: &[Mat], mean: &Mat) -> f64 {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+
+    fn leaf(slot: usize, u: &Mat, cols: usize) -> Partial {
+        Partial::leaf(Aggregation::Uniform, slot, u.clone(), cols, 1.0, 2.0, 0.5, 0.01)
+    }
 
     #[test]
     fn uniform_is_mean() {
@@ -80,6 +240,102 @@ mod tests {
         let wrev: Vec<usize> = w.iter().rev().copied().collect();
         let m2 = aggregate(Aggregation::Uniform, &rev, &wrev);
         assert!((&m1 - &m2).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn combine_is_arrival_order_invariant_bitwise() {
+        let mut rng = Pcg64::new(11);
+        let us: Vec<Mat> = (0..8).map(|_| Mat::gaussian(4, 3, &mut rng)).collect();
+        let flat: Vec<Partial> = us.iter().enumerate().map(|(i, u)| leaf(i, u, i + 1)).collect();
+        let base = combine(flat);
+        // any permutation of the same spans combines to the same bits
+        let perm = [5usize, 0, 7, 2, 6, 1, 4, 3];
+        let shuffled: Vec<Partial> =
+            perm.iter().map(|&i| leaf(i, &us[i], i + 1)).collect();
+        let got = combine(shuffled);
+        assert_eq!(base.sum.as_slice(), got.sum.as_slice());
+        assert_eq!(base.grad_sum.to_bits(), got.grad_sum.to_bits());
+        assert_eq!(base.err_num_sum.to_bits(), got.err_num_sum.to_bits());
+    }
+
+    #[test]
+    fn combine_is_grouping_invariant_bitwise() {
+        // relay grouping: combine aligned sub-spans first, then the
+        // partials — must equal the flat combine bit for bit, for every
+        // power-of-two arity and with leaves missing.
+        let mut rng = Pcg64::new(12);
+        let us: Vec<Mat> = (0..16).map(|_| Mat::gaussian(5, 2, &mut rng)).collect();
+        for arity in [2usize, 4, 8] {
+            for cut in [None, Some(3usize), Some(12)] {
+                let present: Vec<usize> =
+                    (0..16).filter(|i| Some(*i) != cut).collect();
+                let flat: Vec<Partial> =
+                    present.iter().map(|&i| leaf(i, &us[i], 1)).collect();
+                let star = combine(flat);
+                let width = 16 / arity;
+                let mut relayed = Vec::new();
+                for k in 0..arity {
+                    let span: Vec<Partial> = present
+                        .iter()
+                        .filter(|&&i| i / width == k)
+                        .map(|&i| leaf(i, &us[i], 1))
+                        .collect();
+                    if !span.is_empty() {
+                        relayed.push(combine(span));
+                    }
+                }
+                let tree = combine(relayed);
+                assert_eq!(
+                    star.sum.as_slice(),
+                    tree.sum.as_slice(),
+                    "arity {arity} cut {cut:?}"
+                );
+                assert_eq!(star.count, tree.count);
+                assert_eq!(star.grad_sum.to_bits(), tree.grad_sum.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_err_poisons_the_sum() {
+        let u = Mat::from_vec(1, 1, vec![1.0]);
+        let mut a = leaf(0, &u, 1);
+        a.err_num_sum = f64::NAN;
+        let b = leaf(1, &u, 1);
+        let c = combine(vec![a, b]);
+        assert!(!c.err_num_sum.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn combine_rejects_overlapping_spans() {
+        let u = Mat::from_vec(1, 1, vec![1.0]);
+        let mut wide = leaf(0, &u, 1);
+        wide.span_len = 4;
+        let inner = leaf(2, &u, 1);
+        combine(vec![wide, inner]);
+    }
+
+    #[test]
+    #[should_panic(expected = "aligned")]
+    fn combine_rejects_unaligned_spans() {
+        let u = Mat::from_vec(1, 1, vec![1.0]);
+        let mut bad = leaf(2, &u, 1);
+        bad.span_len = 4; // [2, 6) is not aligned
+        combine(vec![bad]);
+    }
+
+    #[test]
+    fn finalize_divides_once_at_the_root() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![3.0, 6.0]);
+        let parts = vec![
+            Partial::leaf(Aggregation::WeightedByCols, 0, a, 3, 0.0, 0.0, 0.0, 0.0),
+            Partial::leaf(Aggregation::WeightedByCols, 1, b, 1, 0.0, 0.0, 0.0, 0.0),
+        ];
+        let m = finalize(Aggregation::WeightedByCols, &combine(parts));
+        // (3·[1,2] + 1·[3,6]) / 4 = [1.5, 3.0]
+        assert_eq!(m.as_slice(), &[1.5, 3.0]);
     }
 
     #[test]

@@ -167,6 +167,7 @@ impl ClientSession {
             client: self.cfg.id as u32,
             cols: self.n_i as u64,
             token: self.token,
+            span: 1,
         }
         .encode_with(self.cfg.job, Compression::None);
         self.stamp(hello)
@@ -291,10 +292,13 @@ impl ClientSession {
             client: self.cfg.id as u32,
             round,
             u,
-            grad_norm: out.grad_norm,
-            lipschitz: out.lipschitz,
-            err_num,
-            local_secs,
+            count: 1,
+            cols: self.n_i as u64,
+            grad_sum: out.grad_norm,
+            lip_max: out.lipschitz,
+            err_num_sum: err_num,
+            secs_max: local_secs,
+            secs_sum: local_secs,
         }
         .encode_with(self.cfg.job, self.cfg.compression);
         self.last_round = Some(round);
@@ -501,7 +505,7 @@ mod tests {
         let (mut server, handle) = spawn_client(cfg);
         // hello
         let hello = ToServer::decode(&server.recv_timeout(Duration::from_secs(5)).unwrap()).unwrap();
-        assert_eq!(hello, ToServer::Hello { client: 0, cols: 20, token: 0 });
+        assert_eq!(hello, ToServer::Hello { client: 0, cols: 20, token: 0, span: 1 });
         // one round
         let mut rng = Pcg64::new(2);
         let u = Mat::gaussian(20, 2, &mut rng);
@@ -510,8 +514,9 @@ mod tests {
             .unwrap();
         let up = ToServer::decode(&server.recv_timeout(Duration::from_secs(10)).unwrap()).unwrap();
         let u_next = match up {
-            ToServer::Update { client: 0, round: 0, u, err_num, .. } => {
-                assert!(err_num.is_finite());
+            ToServer::Update { client: 0, round: 0, u, err_num_sum, count, .. } => {
+                assert!(err_num_sum.is_finite());
+                assert_eq!(count, 1);
                 u
             }
             other => panic!("unexpected {other:?}"),

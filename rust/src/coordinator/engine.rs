@@ -45,6 +45,18 @@
 //!   stays in the round's pending set, a client that resumes before the
 //!   round deadline is *not* cut and the slot-ordered reduction —
 //!   hence the final U — is bitwise identical to an uninterrupted run.
+//! - **Hierarchical aggregation.** A job can run in
+//!   [`JobMode::Relay`]: it serves a subtree of downstream members
+//!   exactly like a root (handshake, per-round straggler cuts, grace
+//!   windows, session resume), but its rounds are *mirrored from
+//!   upstream* ([`RoundEngine::upstream_round`] /
+//!   [`RoundEngine::upstream_finish`], fed by a `RelaySession`) and at
+//!   each round close it emits one [`Action::Upstream`] carrying the
+//!   canonical partial sum over its span instead of finalizing.
+//!   Members declare a slot *span* in `Hello` (1 for leaves, the
+//!   subtree width for relays); reduction is the canonical
+//!   power-of-two span fold of `aggregate::combine`, so the root's
+//!   final factor is bitwise identical to the equivalent star run.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::mem;
@@ -56,10 +68,11 @@ use crate::error::Result;
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
-use super::aggregate::{aggregate, consensus_dispersion};
+use super::aggregate::{combine, consensus_dispersion, finalize, Partial};
+use super::compress::Compression;
 use super::metrics::{CommStats, RoundRecord};
 use super::protocol::{ToClient, ToServer};
-use super::server::{FaultPolicy, ServerConfig, ServerOutcome};
+use super::server::{FaultPolicy, JobMode, ServerConfig, ServerOutcome};
 
 /// Reactor-assigned connection identity (not a client id — clients name
 /// themselves in `Hello`, which is what binds an endpoint to a member).
@@ -79,12 +92,19 @@ pub enum Action {
     /// A job reached a terminal state — collect it with
     /// [`RoundEngine::take_result`].
     JobDone { job: JobId },
+    /// A relay job produced one combined frame for its upstream
+    /// coordinator (the relay driver's `RelaySession` stamps and sends
+    /// it). Never emitted by root jobs.
+    Upstream { job: JobId, bytes: Vec<u8> },
 }
 
 #[derive(Clone, Debug)]
 struct Member {
     ep: EndpointId,
     cols: usize,
+    /// consecutive slots this member fronts, starting at its id:
+    /// 1 for a leaf client, the subtree width for a relay
+    span: usize,
     alive: bool,
     /// link currently up — a member can be `alive` with its link down
     /// while its reconnect grace window is open
@@ -112,30 +132,14 @@ enum HelloOutcome {
     Reject,
 }
 
-/// Telemetry scalars riding along with an update.
-struct UpdateScalars {
-    grad_norm: f64,
-    lipschitz: f64,
-    err_num: f64,
-    local_secs: f64,
-}
-
-/// One client's round contribution, parked in its slot until the round
-/// closes and everything reduces in id order.
-struct UpdateSlot {
-    u: Mat,
-    cols: usize,
-    scalars: UpdateScalars,
-}
-
 struct RoundAccum {
     started: Duration,
     deadline: Duration,
     eta: f64,
     /// selected clients that have not replied yet
     pending: BTreeSet<usize>,
-    /// arrived updates, keyed (hence ordered) by client id
-    slots: BTreeMap<usize, UpdateSlot>,
+    /// arrived span partials, keyed (hence ordered) by member id
+    slots: BTreeMap<usize, Partial>,
     bytes_down0: u64,
     bytes_up0: u64,
 }
@@ -144,10 +148,40 @@ enum Phase {
     /// collecting `Hello`s until `expected` members are present
     Handshake { deadline: Option<Duration> },
     Collecting(RoundAccum),
+    /// relay only: between rounds, waiting for the next upstream
+    /// `Round`/`Finish` (no phase deadline — the upstream session's
+    /// retry budget bounds the wait)
+    RelayIdle,
     /// `Finish` broadcast sent; waiting on Reveal/Withhold replies.
     /// `pending` maps client id → whether reveal was granted.
     Finishing { deadline: Duration, pending: BTreeMap<usize, bool> },
     Done,
+}
+
+/// A round/finish command mirrored from upstream, parked while a relay
+/// is still in its downstream handshake.
+enum RelayCmd {
+    Round { round: u32, k_local: u32, eta: f64, u: Mat },
+    Finish { final_u: Mat },
+}
+
+/// Relay-mode state: the upstream half of "a client that is itself a
+/// server". Mirrors `ClientSession`'s cached-reply discipline so a
+/// resumed upstream session can re-deliver the in-flight round and get
+/// the identical partial back.
+struct RelayState {
+    span_lo: usize,
+    span_len: usize,
+    /// last upstream round answered (closed), for duplicate detection
+    last_round: Option<u32>,
+    /// encoded upstream reply for `last_round` (or the final Withhold),
+    /// re-emitted verbatim when upstream re-delivers after a resume
+    cached_up: Option<Vec<u8>>,
+    /// newest upstream command that arrived before the downstream
+    /// handshake completed
+    inbox: Option<RelayCmd>,
+    /// upstream said Finish; only re-sends remain
+    finished: bool,
 }
 
 struct Job {
@@ -168,6 +202,8 @@ struct Job {
     bytes_up: u64,
     result: Option<Result<ServerOutcome>>,
     phase: Phase,
+    /// `Some` iff `cfg.mode` is [`JobMode::Relay`]
+    relay: Option<RelayState>,
 }
 
 impl Job {
@@ -175,9 +211,31 @@ impl Job {
         // same init sequence as the historical server loop, so a given
         // seed reproduces the exact same U⁰ and participation draws
         let mut rng = Pcg64::new(cfg.seed);
-        let u = Mat::gaussian(cfg.m, cfg.rank, &mut rng);
+        let u = match cfg.mode {
+            // a relay never generates U⁰: every factor it broadcasts
+            // comes verbatim from upstream
+            JobMode::Relay { .. } => Mat::zeros(cfg.m, cfg.rank),
+            JobMode::Root => Mat::gaussian(cfg.m, cfg.rank, &mut rng),
+        };
         let sample_rng = rng.fork(0x5A);
         let session_rng = rng.fork(0x5E55);
+        let relay = match cfg.mode {
+            JobMode::Relay { span_lo, span_len } => {
+                assert!(
+                    span_len.is_power_of_two() && span_lo % span_len == 0,
+                    "relay span [{span_lo}, +{span_len}) is not an aligned power-of-two block"
+                );
+                Some(RelayState {
+                    span_lo,
+                    span_len,
+                    last_round: None,
+                    cached_up: None,
+                    inbox: None,
+                    finished: false,
+                })
+            }
+            JobMode::Root => None,
+        };
         Job {
             id,
             cfg,
@@ -195,11 +253,34 @@ impl Job {
             bytes_up: 0,
             result: None,
             phase: Phase::Handshake { deadline: None },
+            relay,
         }
     }
 
     fn done(&self) -> bool {
         matches!(self.phase, Phase::Done)
+    }
+
+    fn is_relay(&self) -> bool {
+        self.relay.is_some()
+    }
+
+    /// Downstream handshake is complete: a root starts round 0, a relay
+    /// goes idle and replays whatever upstream already asked for.
+    fn handshake_done(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        if self.is_relay() {
+            self.phase = Phase::RelayIdle;
+            if let Some(cmd) = self.relay.as_mut().and_then(|r| r.inbox.take()) {
+                match cmd {
+                    RelayCmd::Round { round, k_local, eta, u } => {
+                        self.relay_start_round(round, k_local, eta, u, now, actions);
+                    }
+                    RelayCmd::Finish { final_u } => self.relay_finish(final_u, now, actions),
+                }
+            }
+        } else {
+            self.start_round(now, actions);
+        }
     }
 
     fn fail(&mut self, reason: String, actions: &mut Vec<Action>) {
@@ -252,6 +333,7 @@ impl Job {
     }
 
     fn start_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
+        debug_assert!(!self.is_relay(), "relay rounds are mirrored from upstream");
         let t = self.round;
         if t >= self.cfg.rounds {
             self.start_finish(now, actions);
@@ -310,7 +392,9 @@ impl Job {
         });
     }
 
-    /// Reduce the round's slots in client-id order and advance.
+    /// Reduce the round's slots in canonical span order and advance: a
+    /// root finalizes U^(t+1) and starts the next round, a relay
+    /// forwards the combined partial upstream and goes idle.
     fn close_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
         let t = self.round;
         let acc = match mem::replace(&mut self.phase, Phase::Done) {
@@ -321,56 +405,79 @@ impl Job {
             }
         };
         if acc.slots.is_empty() {
+            if let Some(rs) = self.relay.as_mut() {
+                // whole subtree missed the deadline: nothing to forward;
+                // upstream's own cut adjudicates us as a straggler
+                crate::log_warn!(
+                    "engine",
+                    "relay job {}: round {t} closed with an empty subtree",
+                    self.id
+                );
+                rs.last_round = Some(t as u32);
+                rs.cached_up = None;
+                self.phase = Phase::RelayIdle;
+                return;
+            }
             self.fail(format!("round {t}: all clients missing"), actions);
             return;
         }
 
-        // slot-ordered reduction: BTreeMap iteration is id order, so all
-        // f64 folds below are independent of arrival order
-        let mut updates = Vec::with_capacity(acc.slots.len());
-        let mut weights = Vec::with_capacity(acc.slots.len());
-        let mut grad_sum = 0.0;
-        let mut err_num_sum = 0.0;
-        let mut err_all_finite = true;
-        let mut max_client_secs: f64 = 0.0;
-        let mut sum_client_secs = 0.0;
-        let mut round_lip: f64 = 0.0;
-        for slot in acc.slots.into_values() {
-            grad_sum += slot.scalars.grad_norm;
-            round_lip = round_lip.max(slot.scalars.lipschitz);
-            if slot.scalars.err_num.is_finite() {
-                err_num_sum += slot.scalars.err_num;
-            } else {
-                err_all_finite = false;
-            }
-            max_client_secs = max_client_secs.max(slot.scalars.local_secs);
-            sum_client_secs += slot.scalars.local_secs;
-            weights.push(slot.cols);
-            updates.push(slot.u);
-        }
-        self.lipschitz_max = round_lip.max(1e-12);
-
-        let u_next = aggregate(self.cfg.aggregation, &updates, &weights);
-        let dispersion = consensus_dispersion(&updates, &u_next);
-        self.u = u_next;
-
-        let err = match (self.cfg.err_denominator, err_all_finite) {
-            (Some(den), true) => Some(err_num_sum / den),
+        // canonical span reduction: sums associate over power-of-two id
+        // blocks, so the result is bitwise independent of arrival order
+        // AND of how members were grouped under relays
+        let fan_in = acc.slots.len();
+        let parts: Vec<Partial> = acc.slots.into_values().collect();
+        let means: Vec<Mat> =
+            parts.iter().map(|p| p.mean(self.cfg.aggregation)).collect();
+        let combined = combine(parts);
+        self.lipschitz_max = combined.lip_max.max(1e-12);
+        let err = match (self.cfg.err_denominator, combined.err_num_sum.is_finite()) {
+            (Some(den), true) => Some(combined.err_num_sum / den),
             _ => None,
         };
-        self.rounds.push(RoundRecord {
+        let record = RoundRecord {
             round: t,
             err,
-            mean_grad_norm: grad_sum / updates.len() as f64,
-            dispersion,
+            mean_grad_norm: combined.grad_sum / combined.count as f64,
+            dispersion: 0.0, // filled below once the mean exists
             eta: acc.eta,
             round_secs: now.saturating_sub(acc.started).as_secs_f64(),
-            max_client_secs,
-            sum_client_secs,
+            max_client_secs: combined.secs_max,
+            sum_client_secs: combined.secs_sum,
             bytes_down: self.bytes_down - acc.bytes_down0,
             bytes_up: self.bytes_up - acc.bytes_up0,
-            participants: updates.len(),
-        });
+            participants: combined.count,
+            fan_in,
+        };
+
+        if let Some(rs) = self.relay.as_mut() {
+            // forward the partial verbatim (lossless codec: quantizing a
+            // partial sum would break the bitwise tree ≡ star identity)
+            let msg = ToServer::Update {
+                client: rs.span_lo as u32,
+                round: t as u32,
+                count: combined.count as u32,
+                cols: combined.cols as u64,
+                grad_sum: combined.grad_sum,
+                lip_max: combined.lip_max,
+                err_num_sum: combined.err_num_sum,
+                secs_max: combined.secs_max,
+                secs_sum: combined.secs_sum,
+                u: combined.sum,
+            };
+            let bytes = msg.encode_with(self.id, Compression::None);
+            rs.last_round = Some(t as u32);
+            rs.cached_up = Some(bytes.clone());
+            self.rounds.push(record);
+            self.phase = Phase::RelayIdle;
+            actions.push(Action::Upstream { job: self.id, bytes });
+            return;
+        }
+
+        let u_next = finalize(self.cfg.aggregation, &combined);
+        let dispersion = consensus_dispersion(&means, &u_next);
+        self.u = u_next;
+        self.rounds.push(RoundRecord { dispersion, ..record });
 
         if let (Some(stop), Some(e_now)) = (self.cfg.err_stop, err) {
             if e_now < stop {
@@ -382,6 +489,137 @@ impl Job {
         self.start_round(now, actions);
     }
 
+    /// Upstream delivered `Round` to this relay job (possibly again,
+    /// after a session resume).
+    fn relay_round(
+        &mut self,
+        round: u32,
+        k_local: u32,
+        eta: f64,
+        u: Mat,
+        now: Duration,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.done() {
+            return;
+        }
+        let rs = self.relay.as_mut().expect("relay_round on a root job");
+        if rs.last_round == Some(round) {
+            // re-delivery of a round we already answered: serve the
+            // cached partial so the resumed upstream session converges
+            if let Some(bytes) = rs.cached_up.clone() {
+                actions.push(Action::Upstream { job: self.id, bytes });
+            }
+            return;
+        }
+        match &self.phase {
+            Phase::Handshake { .. } => {
+                rs.inbox = Some(RelayCmd::Round { round, k_local, eta, u });
+            }
+            Phase::RelayIdle => self.relay_start_round(round, k_local, eta, u, now, actions),
+            Phase::Collecting(_) => {
+                let cur = self.round as u32;
+                if round < cur {
+                    return; // stale replay
+                }
+                if round == cur {
+                    return; // duplicate of the in-flight round
+                }
+                // upstream moved on without our partial (we were cut):
+                // abandon the stale collection and serve the new round
+                crate::log_warn!(
+                    "engine",
+                    "relay job {}: upstream advanced to round {round} — abandoning round {cur}",
+                    self.id
+                );
+                self.phase = Phase::RelayIdle;
+                self.relay_start_round(round, k_local, eta, u, now, actions);
+            }
+            Phase::Finishing { .. } | Phase::Done => {}
+        }
+    }
+
+    /// Mirror one upstream round into the subtree: broadcast the
+    /// consensus factor downstream and collect against this level's own
+    /// (shorter) deadline.
+    fn relay_start_round(
+        &mut self,
+        round: u32,
+        k_local: u32,
+        eta: f64,
+        u: Mat,
+        now: Duration,
+        actions: &mut Vec<Action>,
+    ) {
+        self.round = round as usize;
+        // the redelivery path reads these from cfg/self, same as a root
+        self.cfg.k_local = k_local as usize;
+        self.u = u;
+        let t = self.round;
+        let active: Vec<usize> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.alive && m.active_from <= t)
+            .map(|(&id, _)| id)
+            .collect();
+        if active.is_empty() {
+            crate::log_warn!(
+                "engine",
+                "relay job {}: round {t} with no live subtree members",
+                self.id
+            );
+            self.phase = Phase::RelayIdle;
+            return;
+        }
+        let bytes_down0 = self.bytes_down;
+        let bytes_up0 = self.bytes_up;
+        let msg = ToClient::Round { round, k_local, eta, u: self.u.clone() };
+        let encoded = msg.encode_with(self.id, self.cfg.compression);
+        let mut pending = BTreeSet::new();
+        for &c in &active {
+            if self.members[&c].connected {
+                self.send_to(c, encoded.clone(), actions);
+            }
+            pending.insert(c);
+        }
+        self.phase = Phase::Collecting(RoundAccum {
+            started: now,
+            deadline: now + self.cfg.round_timeout,
+            eta,
+            pending,
+            slots: BTreeMap::new(),
+            bytes_down0,
+            bytes_up0,
+        });
+    }
+
+    /// Upstream delivered `Finish`: fan it out (reveal always denied —
+    /// data blocks never travel past a relay), reply `Withhold`
+    /// upstream, and drain the downstream goodbyes.
+    fn relay_finish(&mut self, final_u: Mat, now: Duration, actions: &mut Vec<Action>) {
+        if self.done() {
+            return;
+        }
+        let rs = self.relay.as_mut().expect("relay_finish on a root job");
+        if rs.finished {
+            if let Some(bytes) = rs.cached_up.clone() {
+                actions.push(Action::Upstream { job: self.id, bytes });
+            }
+            return;
+        }
+        if matches!(self.phase, Phase::Handshake { .. }) {
+            rs.inbox = Some(RelayCmd::Finish { final_u });
+            return;
+        }
+        let up = ToServer::Withhold { client: rs.span_lo as u32 }
+            .encode_with(self.id, Compression::None);
+        rs.finished = true;
+        rs.cached_up = Some(up.clone());
+        actions.push(Action::Upstream { job: self.id, bytes: up });
+        self.u = final_u;
+        self.start_finish(now, actions);
+    }
+
     fn start_finish(&mut self, now: Duration, actions: &mut Vec<Action>) {
         let mut pending = BTreeMap::new();
         let alive: Vec<(usize, bool)> = self
@@ -391,7 +629,9 @@ impl Job {
             .map(|(&id, m)| (id, m.connected))
             .collect();
         for (id, connected) in alive {
-            let reveal = self.cfg.privacy.is_public(id);
+            // reveal grants terminate at relays: a subtree member's data
+            // blocks may only ever travel one hop, to the root itself
+            let reveal = !self.is_relay() && self.cfg.privacy.is_public(id);
             // an in-grace member still gets a pending slot: if it
             // resumes before the finish deadline the Finish broadcast
             // is re-delivered and its reveal still counts
@@ -442,18 +682,62 @@ impl Job {
         actions.push(Action::JobDone { job: self.id });
     }
 
+    /// Another registered member whose slot span intersects
+    /// `[client, client + span)`, if any. Overlapping spans would
+    /// double-count leaves in the canonical reduction.
+    fn span_conflict(&self, client: usize, span: usize) -> Option<usize> {
+        self.members
+            .iter()
+            .find(|&(&id, m)| id != client && id < client + span && client < id + m.span)
+            .map(|(&id, _)| id)
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn on_hello(
         &mut self,
         ep: EndpointId,
         client: usize,
         cols: usize,
         token: u64,
+        span: usize,
         seq: u32,
         now: Duration,
         actions: &mut Vec<Action>,
     ) -> HelloOutcome {
         if token != 0 {
             return self.on_resume(ep, client, token, seq, now, actions);
+        }
+        if span == 0 || !span.is_power_of_two() || client % span != 0 {
+            if self.cfg.fault_policy == FaultPolicy::Strict {
+                self.fail(
+                    format!("client {client} declared unaligned span {span}"),
+                    actions,
+                );
+            } else {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: refusing client {client}: span {span} is not an aligned power of two",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
+            }
+            return HelloOutcome::Reject;
+        }
+        if let Some(other) = self.span_conflict(client, span) {
+            if self.cfg.fault_policy == FaultPolicy::Strict {
+                self.fail(
+                    format!("client {client} span {span} overlaps member {other}"),
+                    actions,
+                );
+            } else {
+                crate::log_warn!(
+                    "engine",
+                    "job {}: refusing client {client}: span {span} overlaps member {other}",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
+            }
+            return HelloOutcome::Reject;
         }
         // a token-less fresh Hello while an old session is still inside
         // its grace window means the client restarted and cannot resume:
@@ -465,7 +749,7 @@ impl Job {
         let active_from = match &self.phase {
             Phase::Handshake { .. } => 0,
             // elastic join: becomes eligible at the next round boundary
-            Phase::Collecting(_) => self.round + 1,
+            Phase::Collecting(_) | Phase::RelayIdle => self.round + 1,
             Phase::Finishing { .. } | Phase::Done => {
                 crate::log_warn!(
                     "engine",
@@ -503,6 +787,7 @@ impl Job {
             );
             m.ep = ep;
             m.cols = cols;
+            m.span = span;
             m.alive = true;
             m.connected = true;
             m.token = token;
@@ -523,6 +808,7 @@ impl Job {
                 Member {
                     ep,
                     cols,
+                    span,
                     alive: true,
                     connected: true,
                     token,
@@ -537,7 +823,7 @@ impl Job {
             ToClient::Welcome { token }.encode_with(self.id, super::compress::Compression::None);
         self.send_to(client, welcome, actions);
         if matches!(self.phase, Phase::Handshake { .. }) && self.members.len() >= self.expected {
-            self.start_round(now, actions);
+            self.handshake_done(now, actions);
         }
         HelloOutcome::Accept { unbind: None }
     }
@@ -581,7 +867,7 @@ impl Job {
             // path — a fresh session re-entering at the next boundary
             let active_from = match &self.phase {
                 Phase::Handshake { .. } => 0,
-                Phase::Collecting(_) => self.round + 1,
+                Phase::Collecting(_) | Phase::RelayIdle => self.round + 1,
                 Phase::Finishing { .. } | Phase::Done => {
                     crate::log_warn!(
                         "engine",
@@ -651,7 +937,9 @@ impl Job {
                 let msg = ToClient::Finish { reveal: pending[&client], final_u: self.u.clone() };
                 Redeliver::Frame(msg.encode_with(self.id, super::compress::Compression::None))
             }
-            Phase::Handshake { .. } | Phase::Collecting(_) => Redeliver::Nothing,
+            Phase::Handshake { .. } | Phase::Collecting(_) | Phase::RelayIdle => {
+                Redeliver::Nothing
+            }
             // the session already answered its Finish (or the job is
             // over): nothing left to serve — orderly goodbye
             Phase::Finishing { .. } | Phase::Done => Redeliver::Bye,
@@ -669,12 +957,15 @@ impl Job {
         HelloOutcome::Accept { unbind }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_update(
         &mut self,
         client: usize,
         round: usize,
         u: Mat,
-        scalars: UpdateScalars,
+        count: usize,
+        msg_cols: usize,
+        scalars: [f64; 5],
         now: Duration,
         actions: &mut Vec<Action>,
     ) {
@@ -737,8 +1028,50 @@ impl Job {
             }
             return;
         }
-        let cols = self.members[&client].cols;
-        acc.slots.insert(client, UpdateSlot { u, cols, scalars });
+        let [grad_sum, lip_max, err_num_sum, secs_max, secs_sum] = scalars;
+        let (m_span, m_cols) = {
+            let member = &self.members[&client];
+            (member.span, member.cols)
+        };
+        let part = if m_span == 1 {
+            // leaves send raw factors (they don't know the aggregation
+            // kind); the per-slot scaling happens here, at first ingest,
+            // with the Hello-registered column count
+            Partial::leaf(
+                self.cfg.aggregation,
+                client,
+                u,
+                m_cols,
+                grad_sum,
+                lip_max,
+                err_num_sum,
+                secs_max,
+            )
+        } else {
+            // relays send pre-scaled canonical partials over their span
+            if count == 0 || count > m_span {
+                self.fail(
+                    format!(
+                        "round {current}: member {client} (span {m_span}) claimed {count} participants"
+                    ),
+                    actions,
+                );
+                return;
+            }
+            Partial {
+                span_lo: client,
+                span_len: m_span,
+                count,
+                cols: msg_cols,
+                sum: u,
+                grad_sum,
+                lip_max,
+                err_num_sum,
+                secs_max,
+                secs_sum,
+            }
+        };
+        acc.slots.insert(client, part);
         if acc.pending.is_empty() {
             self.close_round(now, actions);
         }
@@ -847,7 +1180,7 @@ impl Job {
                     self.finish(actions);
                 }
             }
-            Phase::Done => {}
+            Phase::RelayIdle | Phase::Done => {}
         }
     }
 
@@ -892,7 +1225,7 @@ impl Job {
                             self.id,
                             self.expected
                         );
-                        self.start_round(now, actions);
+                        self.handshake_done(now, actions);
                     }
                     _ => self.fail(
                         format!("handshake timeout: {have}/{} clients", self.expected),
@@ -968,7 +1301,7 @@ impl Job {
                     }
                 }
             }
-            Phase::Done => {}
+            Phase::RelayIdle | Phase::Done => {}
         }
     }
 
@@ -977,6 +1310,9 @@ impl Job {
             Phase::Handshake { deadline } => *deadline,
             Phase::Collecting(acc) => Some(acc.deadline),
             Phase::Finishing { deadline, .. } => Some(*deadline),
+            // no deadline of its own: the next upstream command (or a
+            // member grace expiry below) is what wakes a relay
+            Phase::RelayIdle => None,
             Phase::Done => return None,
         };
         // grace expiries are deadlines too: a driver sleeping until the
@@ -1048,7 +1384,7 @@ impl RoundEngine {
             }
         };
 
-        if let ToServer::Hello { client, cols, token } = msg {
+        if let ToServer::Hello { client, cols, token, span } = msg {
             let client = client as usize;
             if let Some(&(bound_job, bound_client)) = self.bindings.get(&ep) {
                 if bound_job == job_id && bound_client == client {
@@ -1079,7 +1415,8 @@ impl RoundEngine {
                 return actions;
             }
             job.bytes_up += bytes.len() as u64;
-            match job.on_hello(ep, client, cols as usize, token, seq, now, &mut actions) {
+            match job.on_hello(ep, client, cols as usize, token, span as usize, seq, now, &mut actions)
+            {
                 HelloOutcome::Accept { unbind } => {
                     if let Some(old) = unbind {
                         self.bindings.remove(&old);
@@ -1118,7 +1455,18 @@ impl RoundEngine {
 
         match msg {
             ToServer::Hello { .. } => unreachable!("handled above"),
-            ToServer::Update { client, round, u, grad_norm, lipschitz, err_num, local_secs } => {
+            ToServer::Update {
+                client,
+                round,
+                u,
+                count,
+                cols,
+                grad_sum,
+                lip_max,
+                err_num_sum,
+                secs_max,
+                secs_sum,
+            } => {
                 let client = client as usize;
                 if client != bound_client {
                     job.fail(
@@ -1127,8 +1475,16 @@ impl RoundEngine {
                     );
                     return actions;
                 }
-                let scalars = UpdateScalars { grad_norm, lipschitz, err_num, local_secs };
-                job.on_update(client, round as usize, u, scalars, now, &mut actions);
+                job.on_update(
+                    client,
+                    round as usize,
+                    u,
+                    count as usize,
+                    cols as usize,
+                    [grad_sum, lip_max, err_num_sum, secs_max, secs_sum],
+                    now,
+                    &mut actions,
+                );
             }
             reply @ (ToServer::Reveal { .. } | ToServer::Withhold { .. }) => {
                 let client = match &reply {
@@ -1187,6 +1543,7 @@ impl RoundEngine {
         self.jobs.get(&job).map(|j| match &j.phase {
             Phase::Handshake { .. } => "handshake",
             Phase::Collecting(_) => "collecting",
+            Phase::RelayIdle => "relay-idle",
             Phase::Finishing { .. } => "finishing",
             Phase::Done => "done",
         })
@@ -1195,6 +1552,34 @@ impl RoundEngine {
     /// Collect a finished job's outcome (once).
     pub fn take_result(&mut self, job: JobId) -> Option<Result<ServerOutcome>> {
         self.jobs.get_mut(&job).and_then(|j| j.result.take())
+    }
+
+    /// Relay input: upstream delivered `Round` for `job` (which must be
+    /// in [`JobMode::Relay`]). Idempotent under upstream re-delivery —
+    /// an already-answered round re-emits the cached partial.
+    pub fn upstream_round(
+        &mut self,
+        job: JobId,
+        round: u32,
+        k_local: u32,
+        eta: f64,
+        u: Mat,
+        now: Duration,
+    ) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if let Some(j) = self.jobs.get_mut(&job) {
+            j.relay_round(round, k_local, eta, u, now, &mut actions);
+        }
+        actions
+    }
+
+    /// Relay input: upstream delivered `Finish` for `job`.
+    pub fn upstream_finish(&mut self, job: JobId, final_u: Mat, now: Duration) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if let Some(j) = self.jobs.get_mut(&job) {
+            j.relay_finish(final_u, now, &mut actions);
+        }
+        actions
     }
 }
 
@@ -1212,10 +1597,13 @@ mod tests {
             client,
             round,
             u: Mat::gaussian(m, rank, &mut rng),
-            grad_norm: 1.0,
-            lipschitz: 1.0,
-            err_num: f64::NAN,
-            local_secs: 0.0,
+            count: 1,
+            cols: 4,
+            grad_sum: 1.0,
+            lip_max: 1.0,
+            err_num_sum: f64::NAN,
+            secs_max: 0.0,
+            secs_sum: 0.0,
         }
         .encode_with(0, Compression::None)
     }
@@ -1228,9 +1616,17 @@ mod tests {
         let mut engine = RoundEngine::new();
         engine.add_job(0, cfg, 2);
         let t = Duration::from_millis(1);
-        engine.handle_message(0, &ToServer::Hello { client: 0, cols: 4, token: 0 }.encode(), t);
+        engine.handle_message(
+            0,
+            &ToServer::Hello { client: 0, cols: 4, token: 0, span: 1 }.encode(),
+            t,
+        );
         // second Hello completes the handshake and broadcasts round 0
-        engine.handle_message(1, &ToServer::Hello { client: 1, cols: 4, token: 0 }.encode(), t);
+        engine.handle_message(
+            1,
+            &ToServer::Hello { client: 1, cols: 4, token: 0, span: 1 }.encode(),
+            t,
+        );
         let msg = update_msg(0, 0, m, rank);
         let (actions, update_allocs) =
             alloc_counter::measure(|| engine.handle_message(0, &msg, Duration::from_millis(2)));

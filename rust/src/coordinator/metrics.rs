@@ -24,8 +24,13 @@ pub struct RoundRecord {
     pub bytes_down: u64,
     /// bytes clients → server this round
     pub bytes_up: u64,
-    /// clients that contributed an update this round
+    /// leaves that contributed an update this round (through any number
+    /// of relay hops)
     pub participants: usize,
+    /// direct updates the coordinator ingested this round: equals
+    /// `participants` in a star, and is bounded by the tree arity under
+    /// hierarchical aggregation
+    pub fan_in: usize,
 }
 
 /// Whole-run communication statistics.

@@ -5,6 +5,9 @@
 //!   with arrival-order aggregation and straggler deadlines, elastic
 //!   membership, reveal, multiplexed over job ids
 //! - [`server`]: config/outcome types + the single-job `run_server`
+//! - [`relay`]: hierarchical-aggregation tier — a relay serves a
+//!   subtree downstream like a root while speaking the client protocol
+//!   upstream, forwarding one canonical partial sum per round
 //! - [`client`]: worker owning (M_i, V_i, S_i), runs K local iterations
 //! - [`kernel`]: compute backend (native rust or the PJRT artifact)
 //! - [`transport`]: byte-counted channels (in-proc mpsc, TCP) and the
@@ -23,6 +26,7 @@ pub mod kernel;
 pub mod metrics;
 pub mod privacy;
 pub mod protocol;
+pub mod relay;
 pub mod server;
 pub mod transport;
 
@@ -32,4 +36,5 @@ pub use driver::{run_dcf_pca, run_dcf_pca_raw, DcfPcaConfig, DcfPcaResult, Kerne
 pub use engine::RoundEngine;
 pub use kernel::{LocalUpdateKernel, NativeKernel};
 pub use privacy::PrivacySpec;
-pub use server::{FaultPolicy, ServerConfig};
+pub use relay::{run_relay, RelaySession};
+pub use server::{FaultPolicy, JobMode, ServerConfig};

@@ -34,8 +34,11 @@ use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
 /// Wire protocol version (bumped when the envelope or a message layout
 /// changes incompatibly). Version 2 introduced the job-id envelope;
 /// version 3 added the per-direction sequence number to the envelope
-/// and session tokens (`Hello.token` / `Welcome`) for reconnect.
-pub const WIRE_VERSION: u8 = 3;
+/// and session tokens (`Hello.token` / `Welcome`) for reconnect;
+/// version 4 added the hierarchical-aggregation fields (`Hello.span`,
+/// and `Update` carrying a span partial: participant count, column
+/// total, and summed telemetry instead of one leaf's scalars).
+pub const WIRE_VERSION: u8 = 4;
 
 /// Size of the `[version u8][job u32][seq u32]` envelope on every message.
 pub const ENVELOPE_BYTES: usize = 9;
@@ -80,21 +83,33 @@ pub enum ToServer {
     /// Hello: client id + number of columns held (for weighted
     /// aggregation and n_i/n bookkeeping). `token` is 0 on a fresh
     /// connect; a reconnecting client echoes the `Welcome` token of the
-    /// session it is resuming.
-    Hello { client: u32, cols: u64, token: u64 },
-    /// End-of-round update: the locally advanced U_i plus telemetry
-    /// scalars (gradient norm, curvature estimate, err contribution).
+    /// session it is resuming. `span` is the number of consecutive
+    /// slots this member represents, starting at `client`: 1 for a
+    /// leaf, a larger power of two for a relay fronting a subtree.
+    Hello { client: u32, cols: u64, token: u64, span: u32 },
+    /// End-of-round update: a span partial — one leaf's locally
+    /// advanced U_i (`count == 1`, raw) or a relay's canonical partial
+    /// sum over its subtree (`count > 1`, pre-scaled; see
+    /// `aggregate::Partial`) — plus summed/maxed telemetry scalars.
     Update {
         client: u32,
         round: u32,
         u: Mat,
-        grad_norm: f64,
-        lipschitz: f64,
-        /// telemetry-only: ‖L_i−L₀ᵢ‖² + ‖S_i−S₀ᵢ‖² if ground truth was
-        /// provisioned for evaluation, else NaN
-        err_num: f64,
-        /// wall seconds spent in local compute this round
-        local_secs: f64,
+        /// participating leaves behind this update (1 for a leaf)
+        count: u32,
+        /// their total column count (drives weighted aggregation)
+        cols: u64,
+        /// Σ per-leaf gradient norms
+        grad_sum: f64,
+        /// max per-leaf curvature estimate
+        lip_max: f64,
+        /// Σ per-leaf err numerators: ‖L_i−L₀ᵢ‖² + ‖S_i−S₀ᵢ‖² when
+        /// ground truth was provisioned, else NaN (poisons the sum)
+        err_num_sum: f64,
+        /// max per-leaf wall seconds of local compute this round
+        secs_max: f64,
+        /// Σ per-leaf wall seconds of local compute this round
+        secs_sum: f64,
     },
     /// Public client's final blocks (L_i, S_i).
     Reveal { client: u32, l: Mat, s: Mat },
@@ -201,20 +216,35 @@ impl ToServer {
         let mut buf = Vec::new();
         put_envelope(&mut buf, job, seq);
         match self {
-            ToServer::Hello { client, cols, token } => {
+            ToServer::Hello { client, cols, token, span } => {
                 buf.push(TAG_HELLO);
                 put_u32(&mut buf, *client);
                 put_u64(&mut buf, *cols);
                 put_u64(&mut buf, *token);
+                put_u32(&mut buf, *span);
             }
-            ToServer::Update { client, round, u, grad_norm, lipschitz, err_num, local_secs } => {
+            ToServer::Update {
+                client,
+                round,
+                u,
+                count,
+                cols,
+                grad_sum,
+                lip_max,
+                err_num_sum,
+                secs_max,
+                secs_sum,
+            } => {
                 buf.push(TAG_UPDATE);
                 put_u32(&mut buf, *client);
                 put_u32(&mut buf, *round);
-                put_f64(&mut buf, *grad_norm);
-                put_f64(&mut buf, *lipschitz);
-                put_f64(&mut buf, *err_num);
-                put_f64(&mut buf, *local_secs);
+                put_u32(&mut buf, *count);
+                put_u64(&mut buf, *cols);
+                put_f64(&mut buf, *grad_sum);
+                put_f64(&mut buf, *lip_max);
+                put_f64(&mut buf, *err_num_sum);
+                put_f64(&mut buf, *secs_max);
+                put_f64(&mut buf, *secs_sum);
                 put_mat_compressed(&mut buf, u, codec);
             }
             ToServer::Reveal { client, l, s } => {
@@ -247,16 +277,22 @@ impl ToServer {
         let mut r = Reader::new(bytes);
         let (job, seq) = read_envelope(&mut r)?;
         let msg = match r.u8()? {
-            TAG_HELLO => {
-                ToServer::Hello { client: r.u32()?, cols: r.u64()?, token: r.u64()? }
-            }
+            TAG_HELLO => ToServer::Hello {
+                client: r.u32()?,
+                cols: r.u64()?,
+                token: r.u64()?,
+                span: r.u32()?,
+            },
             TAG_UPDATE => ToServer::Update {
                 client: r.u32()?,
                 round: r.u32()?,
-                grad_norm: r.f64()?,
-                lipschitz: r.f64()?,
-                err_num: r.f64()?,
-                local_secs: r.f64()?,
+                count: r.u32()?,
+                cols: r.u64()?,
+                grad_sum: r.f64()?,
+                lip_max: r.f64()?,
+                err_num_sum: r.f64()?,
+                secs_max: r.f64()?,
+                secs_sum: r.f64()?,
                 u: read_mat_compressed(&mut r)?,
             },
             TAG_REVEAL => ToServer::Reveal { client: r.u32()?, l: r.mat()?, s: r.mat()? },
@@ -297,7 +333,8 @@ pub fn update_wire_size(m: usize, r: usize) -> usize {
 }
 
 pub fn update_wire_size_with(m: usize, r: usize, codec: Compression) -> usize {
-    ENVELOPE_BYTES + 1 + 4 + 4 + 8 * 4 + compressed_mat_size(m, r, codec)
+    // tag + client + round + count + cols + 5 telemetry f64s + factor
+    ENVELOPE_BYTES + 1 + 4 + 4 + 4 + 8 + 8 * 5 + compressed_mat_size(m, r, codec)
 }
 
 #[cfg(test)]
@@ -328,16 +365,19 @@ mod tests {
         let l = Mat::gaussian(6, 4, &mut rng);
         let s = Mat::gaussian(6, 4, &mut rng);
         for msg in [
-            ToServer::Hello { client: 3, cols: 44, token: 0 },
-            ToServer::Hello { client: 3, cols: 44, token: 0x1234_5678_9ABC_DEF1 },
+            ToServer::Hello { client: 3, cols: 44, token: 0, span: 1 },
+            ToServer::Hello { client: 8, cols: 0, token: 0x1234_5678_9ABC_DEF1, span: 8 },
             ToServer::Update {
                 client: 1,
                 round: 9,
                 u,
-                grad_norm: 1.5,
-                lipschitz: 10.0,
-                err_num: 0.25,
-                local_secs: 0.01,
+                count: 4,
+                cols: 44,
+                grad_sum: 1.5,
+                lip_max: 10.0,
+                err_num_sum: 0.25,
+                secs_max: 0.01,
+                secs_sum: 0.03,
             },
             ToServer::Reveal { client: 0, l, s },
             ToServer::Withhold { client: 2 },
@@ -357,10 +397,13 @@ mod tests {
             client: 0,
             round: 0,
             u,
-            grad_norm: 0.0,
-            lipschitz: 1.0,
-            err_num: f64::NAN,
-            local_secs: 0.0,
+            count: 1,
+            cols: 5,
+            grad_sum: 0.0,
+            lip_max: 1.0,
+            err_num_sum: f64::NAN,
+            secs_max: 0.0,
+            secs_sum: 0.0,
         };
         assert_eq!(update.encode().len(), update_wire_size(50, 5));
     }
@@ -435,8 +478,9 @@ mod tests {
         // Reveal carries matrices, and it is sent exclusively when the
         // server granted reveal=true (see client.rs); Update carries just
         // the m×r consensus factor.
-        let bytes = ToServer::Hello { client: 0, cols: 10, token: u64::MAX }.encode();
-        assert!(bytes.len() < 32, "Hello is scalar-only");
+        let bytes =
+            ToServer::Hello { client: 0, cols: 10, token: u64::MAX, span: 1 }.encode();
+        assert!(bytes.len() < 40, "Hello is scalar-only");
         let bytes = ToServer::Withhold { client: 0 }.encode();
         assert!(bytes.len() < 16, "Withhold is scalar-only");
     }

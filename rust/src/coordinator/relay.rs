@@ -1,0 +1,323 @@
+//! Relay tier for hierarchical aggregation: a `RoundEngine` client that
+//! is itself a `RoundEngine` server.
+//!
+//! A relay fronts an aligned power-of-two block of leaf slots
+//! `[span_lo, span_lo + span_len)`. Downstream it is indistinguishable
+//! from a root coordinator — same handshake, per-round straggler cuts,
+//! grace windows and session resume, driven by any [`Reactor`]. Upstream
+//! it is indistinguishable from a client: it opens a resumable session
+//! (`Hello { span }`), mirrors every `Round`/`Finish` broadcast into its
+//! subtree, and answers each round with exactly **one** `Update`
+//! carrying the canonical partial sum over its span. The root therefore
+//! ingests at most *arity* updates per round instead of E, and because
+//! the engine's reduction associates over power-of-two slot blocks
+//! (see [`super::aggregate::combine`]), the root's final factor is
+//! bitwise identical to the equivalent star run.
+//!
+//! The split mirrors the client: [`RelaySession`] is the sans-I/O
+//! upstream half (token, sequence counters, replay guard — the engine's
+//! relay job caches the encoded upstream reply, so re-delivery after a
+//! resume re-sends byte-identical frames), and [`run_relay`] is the
+//! process loop that serves the downstream reactor while draining the
+//! upstream channel, reconnecting with the same capped jittered backoff
+//! a worker uses.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::bail;
+use crate::error::{Context, Result};
+
+use crate::rng::Pcg64;
+
+use super::compress::Compression;
+use super::engine::{Action, JobId, RoundEngine};
+use super::protocol::{restamp_seq, ToClient, ToServer};
+use super::server::{JobMode, ServerConfig, ServerOutcome};
+use super::transport::reactor::{IoEvent, Reactor};
+use super::transport::retry::BackoffPolicy;
+use super::transport::Channel;
+
+/// What [`RelaySession::handle`] wants the runner to do after one
+/// upstream frame.
+#[derive(Debug, Default)]
+pub struct RelayStep {
+    /// engine actions to execute (downstream sends, upstream replies)
+    pub actions: Vec<Action>,
+    /// upstream said `Shutdown`: stop reconnecting once the job drains
+    pub done: bool,
+}
+
+/// Sans-I/O upstream half of a relay. Owns the session token and both
+/// envelope sequence counters; decodes upstream broadcasts and feeds
+/// them to the engine's relay job via [`RoundEngine::upstream_round`] /
+/// [`RoundEngine::upstream_finish`]. Mirrors `ClientSession`'s replay
+/// discipline exactly — the cached-reply half lives inside the engine's
+/// relay job, so a resumed upstream session re-delivering an
+/// already-answered round gets the identical bytes back.
+pub struct RelaySession {
+    job: JobId,
+    span_lo: usize,
+    span_len: usize,
+    /// upstream-coordinator-issued session token (0 until `Welcome`)
+    token: u64,
+    /// upstream envelope seq of the last frame handed to the runner
+    up_seq: u32,
+    /// highest stamped downstream envelope seq seen (replay guard)
+    last_down_seq: u32,
+}
+
+impl RelaySession {
+    /// `cfg` must be the relay job's config ([`JobMode::Relay`]); the
+    /// span doubles as the upstream client identity.
+    pub fn new(job: JobId, cfg: &ServerConfig) -> Result<Self> {
+        let JobMode::Relay { span_lo, span_len } = cfg.mode else {
+            bail!("RelaySession requires a JobMode::Relay config");
+        };
+        Ok(RelaySession { job, span_lo, span_len, token: 0, up_seq: 0, last_down_seq: 0 })
+    }
+
+    /// Stamp the next upstream sequence number onto an encoded frame
+    /// (fresh seq per wire write; payload stays byte-identical).
+    pub fn stamp(&mut self, mut bytes: Vec<u8>) -> Vec<u8> {
+        self.up_seq += 1;
+        restamp_seq(&mut bytes, self.up_seq);
+        bytes
+    }
+
+    /// The (re)connect handshake frame: a relay introduces itself as
+    /// the member for slot `span_lo` with a `span_len`-wide span. It
+    /// owns no columns of its own (`cols: 0`) — per-round column totals
+    /// travel inside each `Update`.
+    pub fn hello(&mut self) -> Vec<u8> {
+        let hello = ToServer::Hello {
+            client: self.span_lo as u32,
+            cols: 0,
+            token: self.token,
+            span: self.span_len as u32,
+        }
+        .encode_with(self.job, Compression::None);
+        self.stamp(hello)
+    }
+
+    /// Consume one upstream frame, feeding round/finish commands into
+    /// the engine's relay job.
+    pub fn handle(
+        &mut self,
+        bytes: &[u8],
+        engine: &mut RoundEngine,
+        now: Duration,
+    ) -> Result<RelayStep> {
+        let (job, seq, msg) = ToClient::decode_full(bytes)?;
+        if job != self.job {
+            bail!("relay {}: upstream message for job {job}", self.span_lo);
+        }
+        // `Welcome` is exempt from the replay guard: a rejoin after
+        // grace expiry starts a new session whose downstream counter
+        // restarts at 1 (same rule as ClientSession)
+        if let ToClient::Welcome { token } = msg {
+            if token != self.token {
+                self.token = token;
+                self.last_down_seq = seq;
+            } else if seq > self.last_down_seq {
+                self.last_down_seq = seq;
+            }
+            return Ok(RelayStep::default());
+        }
+        if seq != 0 {
+            if seq <= self.last_down_seq {
+                crate::log_warn!(
+                    "relay",
+                    "relay {}: dropping replayed upstream frame (seq {seq})",
+                    self.span_lo
+                );
+                return Ok(RelayStep::default());
+            }
+            self.last_down_seq = seq;
+        }
+        match msg {
+            ToClient::Welcome { .. } => unreachable!("handled above"),
+            ToClient::Round { round, k_local, eta, u } => Ok(RelayStep {
+                actions: engine.upstream_round(self.job, round, k_local, eta, u, now),
+                done: false,
+            }),
+            ToClient::Finish { final_u, .. } => Ok(RelayStep {
+                // reveal grants terminate here: the engine's relay job
+                // answers Withhold upstream and denies reveal downstream
+                actions: engine.upstream_finish(self.job, final_u, now),
+                done: false,
+            }),
+            ToClient::Shutdown => Ok(RelayStep { done: true, ..Default::default() }),
+        }
+    }
+}
+
+/// Ceiling on one downstream poll while an upstream link is live: the
+/// loop must come back often enough to drain upstream broadcasts (which
+/// arrive on a separate channel the reactor cannot wake on), so a relay
+/// adds at most ~this much latency per hop to a round start.
+const UP_POLL: Duration = Duration::from_millis(2);
+
+/// Serve one relay job: downstream members over `reactor`, the upstream
+/// session over channels from `connect_up` (reconnecting with capped
+/// jittered backoff on link loss, resuming the same session). Returns
+/// the relay job's outcome — its `rounds` telemetry records the
+/// subtree's fan-in and byte counts; `u` is the last upstream factor.
+///
+/// The retry budget is per outage (it refills whenever an upstream
+/// frame arrives). Exhausting it before the first successful exchange
+/// is a hard error ("start the parent first"); afterwards the relay
+/// departs upstream and fails the job — its subtree is then one big
+/// straggler the parent's deadline adjudicates.
+pub fn run_relay<F>(
+    reactor: &mut dyn Reactor,
+    mut connect_up: F,
+    cfg: &ServerConfig,
+    job: JobId,
+    expected_downstream: usize,
+    policy: &BackoffPolicy,
+) -> Result<ServerOutcome>
+where
+    F: FnMut() -> Result<Box<dyn Channel>>,
+{
+    let JobMode::Relay { span_lo, .. } = cfg.mode else {
+        bail!("run_relay requires a JobMode::Relay config (see ServerConfig::relay)");
+    };
+    let mut engine = RoundEngine::new();
+    engine.add_job(job, cfg.clone(), expected_downstream);
+    let mut session = RelaySession::new(job, cfg)?;
+    let mut rng = Pcg64::new(policy.seed ^ span_lo as u64);
+    let mut up: Option<Box<dyn Channel>> = None;
+    let mut up_finished = false;
+    let mut connected_once = false;
+    let mut attempts: u32 = 0;
+
+    while !engine.all_done() {
+        // (re)establish the upstream session
+        if up.is_none() && !up_finished {
+            if attempts > policy.retry_budget {
+                if !connected_once {
+                    bail!(
+                        "relay {span_lo}: could not reach upstream after {} retries",
+                        policy.retry_budget
+                    );
+                }
+                crate::log_warn!(
+                    "relay",
+                    "relay {span_lo}: upstream retry budget ({}) exhausted — departing",
+                    policy.retry_budget
+                );
+                // the subtree cannot make progress without a parent;
+                // surface the outage instead of idling forever
+                bail!("relay {span_lo}: lost its upstream session for good");
+            }
+            if attempts > 0 {
+                std::thread::sleep(policy.delay(attempts - 1, &mut rng));
+            }
+            match connect_up() {
+                Ok(mut ch) => {
+                    if ch.send(&session.hello()).is_ok() {
+                        up = Some(ch);
+                    } else {
+                        attempts += 1;
+                        continue;
+                    }
+                }
+                Err(err) => {
+                    crate::log_warn!(
+                        "relay",
+                        "relay {span_lo}: upstream connect failed ({err}); retry {attempts}/{}",
+                        policy.retry_budget
+                    );
+                    attempts += 1;
+                    continue;
+                }
+            }
+        }
+
+        // downstream: one bounded poll, then fold the event in
+        let timeout = engine
+            .next_deadline()
+            .map(|d| d.saturating_sub(reactor.now()))
+            .map_or(UP_POLL, |t| t.min(UP_POLL));
+        let event = reactor.poll(Some(timeout))?;
+        let now = reactor.now();
+        let mut actions: VecDeque<Action> = VecDeque::new();
+        match event {
+            IoEvent::Connected(ep) => engine.on_connect(ep),
+            IoEvent::Message(ep, bytes) => {
+                actions.extend(engine.handle_message(ep, &bytes, now));
+            }
+            IoEvent::Disconnected(ep) => actions.extend(engine.on_disconnect(ep, now)),
+            IoEvent::Tick => {}
+        }
+        actions.extend(engine.poll_deadline(reactor.now()));
+
+        // upstream: drain everything that arrived since the last pass
+        let mut up_dead = false;
+        if let Some(ch) = up.as_mut() {
+            loop {
+                match ch.try_recv() {
+                    Ok(Some(bytes)) => {
+                        // an upstream frame is progress: refill the budget
+                        connected_once = true;
+                        attempts = 0;
+                        let step = session.handle(&bytes, &mut engine, reactor.now())?;
+                        actions.extend(step.actions);
+                        if step.done {
+                            up_finished = true;
+                            break;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(err) => {
+                        crate::log_warn!(
+                            "relay",
+                            "relay {span_lo}: upstream link lost ({err}); resuming"
+                        );
+                        up_dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        while let Some(action) = actions.pop_front() {
+            match action {
+                Action::Send { ep, bytes } => {
+                    if reactor.send(ep, &bytes).is_err() {
+                        actions.extend(engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
+                Action::Close { ep } => reactor.close(ep),
+                Action::JobDone { .. } => {}
+                Action::Upstream { bytes, .. } => match up.as_mut() {
+                    Some(ch) => {
+                        let framed = session.stamp(bytes);
+                        if ch.send(&framed).is_err() {
+                            up_dead = true;
+                        }
+                    }
+                    // link down mid-round: drop the frame — the engine
+                    // cached it, and the post-resume re-delivery of the
+                    // round re-emits the identical bytes
+                    None => {}
+                },
+            }
+        }
+
+        if up_dead || up_finished {
+            // either the link died (resume on the next pass) or upstream
+            // said goodbye (nothing left to resume — serve out the
+            // downstream finish phase and return)
+            up = None;
+            if up_dead && !up_finished {
+                attempts += 1;
+            }
+        }
+    }
+
+    engine
+        .take_result(job)
+        .context("relay job finished without a result")?
+}

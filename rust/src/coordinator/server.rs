@@ -43,6 +43,21 @@ pub enum FaultPolicy {
     SkipMissing,
 }
 
+/// Whether a job is the federation root or a relay fronting a subtree
+/// of the hierarchical-aggregation tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobMode {
+    /// terminal reduction: finalize U^(t+1) and drive the round schedule
+    Root,
+    /// partial reduction over the aligned slot span
+    /// `[span_lo, span_lo + span_len)`: rounds are mirrored from
+    /// upstream, and exactly one combined update goes upstream per
+    /// round. `span_len` must be a power of two and `span_lo` a
+    /// multiple of it, so the relay's partial sum is a canonical
+    /// subtree node (see `aggregate::combine`).
+    Relay { span_lo: usize, span_len: usize },
+}
+
 /// Server-side configuration (one job's worth — the engine can run many).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -78,6 +93,8 @@ pub struct ServerConfig {
     /// every disconnect as fatal. `Some(Duration::ZERO)` restores the
     /// pre-resume immediate-departure semantics.
     pub reconnect_grace: Option<Duration>,
+    /// root job or relay tier member (hierarchical aggregation)
+    pub mode: JobMode,
 }
 
 impl ServerConfig {
@@ -98,7 +115,22 @@ impl ServerConfig {
             compression: Compression::None,
             participation: 1.0,
             reconnect_grace: None,
+            mode: JobMode::Root,
         }
+    }
+
+    /// Derive a relay-tier config from the root's: same shape, codec and
+    /// aggregation kind (the relay must scale leaf updates exactly as
+    /// the root would), with its own subtree span and per-level round
+    /// timeout (strictly below the parent's — see EXPERIMENTS.md).
+    pub fn relay(&self, span_lo: usize, span_len: usize, round_timeout: Duration) -> Self {
+        let mut cfg = self.clone();
+        cfg.mode = JobMode::Relay { span_lo, span_len };
+        cfg.round_timeout = round_timeout;
+        cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.participation = 1.0;
+        cfg.err_stop = None;
+        cfg
     }
 }
 

@@ -93,6 +93,10 @@ pub fn drive(reactor: &mut dyn Reactor, engine: &mut RoundEngine) -> Result<()> 
                 }
                 Action::Close { ep } => reactor.close(ep),
                 Action::JobDone { .. } => {}
+                // Relay jobs (which are the only emitters of Upstream)
+                // run under `relay::run_relay`'s own loop, which owns the
+                // upstream channel; a root job driven here never emits it.
+                Action::Upstream { .. } => {}
             }
         }
     }

@@ -453,6 +453,11 @@ impl SimHarness {
                         }
                         trace.job_done = true;
                     }
+                    Action::Upstream { job, .. } => {
+                        return Err(format!(
+                            "root job {job} emitted an Upstream action (relay-only output)"
+                        ));
+                    }
                 }
             }
         }

@@ -18,17 +18,27 @@
 //!   (E clients, elastic joins, crashes at any phase) with protocol
 //!   invariants checked after every event, plus greedy schedule
 //!   shrinking for failing seeds.
+//! - [`topology`] — [`topology::TreeTopology`] and
+//!   [`topology::TreeSim`]: the hierarchical-aggregation tier in
+//!   virtual time — relay nodes serving whole subtrees inline, star ≡
+//!   tree bitwise checks, and relay crash/flap fuzzing via
+//!   [`schedule::FaultSchedule::draw_tree`].
 //!
-//! Entry points: `dcf-pca simulate --seeds A..B [--shrink]` (CLI),
-//! `dcf-pca experiment sim` (CSV sweep), and the `sim_smoke` /
-//! `sim_fuzz` tests in `rust/tests/sim_harness.rs`.
+//! Entry points: `dcf-pca simulate --seeds A..B [--shrink]` (CLI, with
+//! `--topology tree` for the relay tier), `dcf-pca experiment sim`
+//! (CSV sweep), and the `sim_smoke` / `sim_fuzz` / `tree_sim` tests in
+//! `rust/tests/`.
 
 pub mod clock;
 pub mod harness;
 pub mod net;
 pub mod schedule;
+pub mod topology;
 
 pub use clock::{EventQueue, SimClock};
 pub use harness::{FuzzSummary, SimConfig, SimHarness, SimReport, Violation};
 pub use net::{SimNet, SimPeer};
 pub use schedule::{Dir, Fault, FaultSchedule};
+pub use topology::{
+    build_tree_peers, LeafPeer, MuteAtRound, RelayNode, TreeSim, TreeSimConfig, TreeTopology,
+};

@@ -266,6 +266,47 @@ impl FaultSchedule {
         s
     }
 
+    /// Aggregator-fault distribution for tree topologies: every fault
+    /// targets a *relay* slot (the schedule is sized for the root's
+    /// top-level fan-in, not the leaf fleet), so a crash takes a whole
+    /// subtree down at once and a flap exercises the relay's upstream
+    /// session resume. ~⅕ of worlds are calm; otherwise each relay
+    /// flaps with probability ¼ (70% short — those worlds must stay
+    /// cut-free and bitwise identical to the star run — and 30% long,
+    /// which force a grace-expiry departure and re-entry) and crashes
+    /// with probability ⅛ (subtree straggler: the root's deadline must
+    /// cut the whole span and the run must still terminate). Only
+    /// [`Fault::Disconnect`] and [`Fault::CrashAt`] are drawn, so every
+    /// world classifies cleanly against the tree invariants.
+    pub fn draw_tree(seed: u64, relays: usize, rounds: usize) -> Self {
+        let mut s = FaultSchedule::fault_free(seed, relays, rounds);
+        let horizon = s.horizon_ms();
+        let root = Pcg64::new(seed ^ 0x7EE5_7EE5);
+        let mut calm = root.fork(0xCA1F);
+        if calm.next_f64() < 0.2 {
+            return s;
+        }
+        let mut flap = root.fork(0xF1A9);
+        for c in 0..relays {
+            if flap.next_f64() < 0.25 {
+                let at_ms = flap.next_below(horizon);
+                let reconnect_after_ms = if flap.next_f64() < 0.7 {
+                    1 + flap.next_below(8)
+                } else {
+                    40 + flap.next_below(160)
+                };
+                s.faults.push(Fault::Disconnect { client: c, at_ms, reconnect_after_ms });
+            }
+        }
+        let mut crash = root.fork(0xC4A5);
+        for c in 0..relays {
+            if crash.next_f64() < 0.125 {
+                s.faults.push(Fault::CrashAt { client: c, at_ms: crash.next_below(horizon) });
+            }
+        }
+        s
+    }
+
     /// Deterministic base latency of one message, independent of the
     /// order messages are processed in.
     pub fn base_latency(&self, dir: Dir, client: usize, nth: usize) -> Duration {

@@ -1,0 +1,915 @@
+//! Tree topologies for the hierarchical aggregation tier, and the
+//! simulated worlds that check them against the star baseline.
+//!
+//! Three layers live here:
+//!
+//! - [`TreeTopology`] — pure shape math: given a leaf fleet E and a
+//!   power-of-two arity, the relay spans per level, the root's fan-in,
+//!   and the per-level straggler deadlines (each strictly below its
+//!   parent's, so a child level's cut always fires first). Shared by
+//!   the `simulate --topology tree` CLI, the `comm_scaling` bench and
+//!   the tree fuzz tests, so all three agree on what "arity 8 over
+//!   10 000 leaves" means.
+//! - [`RelayNode`] — a full relay (relay-mode [`RoundEngine`] plus
+//!   [`RelaySession`]) behind the [`SimPeer`] interface. Its subtree is
+//!   pumped *inline* (virtual-instant) on a private monotone clock:
+//!   when the subtree quiesces while the engine is still collecting, a
+//!   child has gone silent and the clock jumps past the level deadline
+//!   to fire the subtree's own straggler cut deterministically. Nodes
+//!   nest, so multi-level trees are just relays whose children are
+//!   relays.
+//! - [`TreeSim`] — one problem, one leaf fleet, two worlds: `run_star`
+//!   drives all E leaves directly under the root, `run_tree` groups the
+//!   same leaves under relays per the topology. Because the engine's
+//!   reduction associates over power-of-two slot spans, the two runs
+//!   must agree on the final factor *bit for bit*; `check_tree_seed`
+//!   fuzzes that identity under relay crash/flap schedules from
+//!   [`FaultSchedule::draw_tree`], with the same greedy shrink the star
+//!   harness uses.
+
+use std::cell::OnceCell;
+use std::collections::VecDeque;
+use std::mem;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::error::Result;
+
+use crate::algorithms::factor::FactorHyper;
+use crate::coordinator::client::{ClientConfig, ClientSession, FaultPlan};
+use crate::coordinator::compress::Compression;
+use crate::coordinator::engine::{Action, RoundEngine};
+use crate::coordinator::kernel::NativeKernel;
+use crate::coordinator::protocol::ToClient;
+use crate::coordinator::relay::RelaySession;
+use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
+use crate::coordinator::transport::reactor::{IoEvent, Reactor};
+use crate::rpca::partition::ColumnPartition;
+use crate::rpca::problem::{ProblemSpec, RpcaProblem};
+use crate::runtime::pool::ThreadPool;
+
+use super::harness::{FuzzSummary, SimReport, Violation};
+use super::net::{SimNet, SimPeer};
+use super::schedule::{Fault, FaultSchedule};
+
+/// Largest idle poll while deadlines are pending (virtual, free).
+const MAX_IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Terminate-or-fail budget for one simulated world.
+const MAX_EVENTS: u64 = 1_000_000;
+
+/// Ceiling on consecutive forced deadline jumps inside one relay pump —
+/// each jump transitions the engine's phase, so a legal run needs at
+/// most a handful; hitting the cap means the engine livelocked.
+const MAX_FORCED_CUTS: usize = 64;
+
+// ---------------------------------------------------------------------------
+// shape math
+// ---------------------------------------------------------------------------
+
+/// Shape of one aggregation tree: `leaves` slots fanned under relays of
+/// `arity` children each, `levels` relay tiers deep (0 = plain star).
+///
+/// Slots are grouped by aligned power-of-two blocks: the level-`l` relay
+/// over slot block `b` spans `[b·arity^l, (b+1)·arity^l)`, which is
+/// exactly a canonical node of the engine's span reduction — any
+/// grouping the topology produces therefore reduces bitwise identically
+/// to the ungrouped star fold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeTopology {
+    /// leaf fleet size E
+    pub leaves: usize,
+    /// children per relay (power of two ≥ 2)
+    pub arity: usize,
+    /// relay tiers between the leaves and the root (0 = star)
+    pub levels: usize,
+}
+
+impl TreeTopology {
+    /// Smallest tree of `arity`-wide relays whose root ingests at most
+    /// `arity` connections for `leaves` slots.
+    pub fn new(leaves: usize, arity: usize) -> Result<Self> {
+        if leaves == 0 {
+            bail!("tree topology needs at least one leaf");
+        }
+        if arity < 2 || !arity.is_power_of_two() {
+            bail!("tree arity must be a power of two >= 2, got {arity}");
+        }
+        let mut levels = 0usize;
+        let mut top = leaves;
+        while top > arity {
+            top = top.div_ceil(arity);
+            levels += 1;
+        }
+        Ok(TreeTopology { leaves, arity, levels })
+    }
+
+    /// Slot span of a level-`level` relay (level 1 fronts leaves).
+    pub fn span_at(&self, level: usize) -> usize {
+        self.arity.pow(level as u32)
+    }
+
+    /// Slot span of the relays directly under the root.
+    pub fn top_span(&self) -> usize {
+        self.span_at(self.levels)
+    }
+
+    /// Connections the root actually serves (≤ arity by construction).
+    pub fn top_count(&self) -> usize {
+        self.leaves.div_ceil(self.top_span())
+    }
+
+    /// Relays at each level, bottom-up (empty for a star).
+    pub fn relays_per_level(&self) -> Vec<usize> {
+        (1..=self.levels).map(|l| self.leaves.div_ceil(self.span_at(l))).collect()
+    }
+
+    /// Total relay processes the tree needs.
+    pub fn relay_count(&self) -> usize {
+        self.relays_per_level().iter().sum()
+    }
+
+    /// Straggler deadline of a level-`level` relay, scaled down from the
+    /// root's so the windows nest: a parent at level `l+1` always waits
+    /// strictly longer than its children at level `l`, leaving one
+    /// level-hop of slack for the forwarded partial to travel (see
+    /// EXPERIMENTS.md — T_parent > T_child + 2·hop-latency must hold for
+    /// a child-level cut to resolve before the parent's own deadline).
+    pub fn level_timeout(&self, root_timeout: Duration, level: usize) -> Duration {
+        let denom = (self.levels + 1) as u64;
+        let micros = root_timeout.as_micros() as u64;
+        Duration::from_micros((micros * level as u64 / denom).max(1_000))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// peers: leaves, a mute wrapper, and the relay node
+// ---------------------------------------------------------------------------
+
+/// A worker leaf behind the [`SimPeer`] interface: the production
+/// [`ClientSession`] over a [`NativeKernel`] (optionally on a shared
+/// fixed-width pool, for the `--threads 1/2/4` determinism sweeps).
+pub struct LeafPeer {
+    session: ClientSession,
+    kernel: NativeKernel,
+}
+
+impl LeafPeer {
+    pub fn new(cfg: ClientConfig, pool: Option<Arc<ThreadPool>>) -> Self {
+        let kernel = match pool {
+            Some(p) => NativeKernel::with_pool(p),
+            None => NativeKernel::new(),
+        };
+        LeafPeer { session: ClientSession::new(cfg), kernel }
+    }
+}
+
+impl SimPeer for LeafPeer {
+    fn on_start(&mut self) -> Vec<Vec<u8>> {
+        vec![self.session.hello()]
+    }
+
+    fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>> {
+        let step = self.session.handle(bytes, &self.kernel).expect("leaf session failed");
+        step.replies
+    }
+}
+
+/// Wrapper that swallows a peer's replies to exactly one round's
+/// broadcast — the deterministic "one leaf misses the deadline" world.
+/// The inner session still computes (like a reply lost on the wire), so
+/// wrapping the same leaf in both the star and the tree run keeps the
+/// two worlds comparable: both reductions see the identical slot set.
+pub struct MuteAtRound {
+    inner: Box<dyn SimPeer>,
+    round: u32,
+}
+
+impl MuteAtRound {
+    pub fn new(inner: Box<dyn SimPeer>, round: u32) -> Self {
+        MuteAtRound { inner, round }
+    }
+}
+
+impl SimPeer for MuteAtRound {
+    fn on_start(&mut self) -> Vec<Vec<u8>> {
+        self.inner.on_start()
+    }
+
+    fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>> {
+        let replies = self.inner.on_message(bytes);
+        if let Ok((_, ToClient::Round { round, .. })) = ToClient::decode_job(bytes) {
+            if round == self.round {
+                return Vec::new();
+            }
+        }
+        replies
+    }
+
+    fn on_reconnect(&mut self) -> Vec<Vec<u8>> {
+        self.inner.on_reconnect()
+    }
+}
+
+/// A relay behind the [`SimPeer`] interface: downstream it owns a
+/// relay-mode [`RoundEngine`] serving its children *inline* (child
+/// compute is virtual-instant, like every [`SimPeer`]); upstream it is
+/// one peer of the enclosing network, introduced by its
+/// [`RelaySession`]'s span-stamped `Hello`.
+///
+/// The private clock only moves when the subtree stalls: if the pump
+/// quiesces while the engine still waits on a child (a muted leaf, or a
+/// nested relay whose own subtree was cut empty), the clock jumps past
+/// the engine's next deadline and fires it — the same straggler cut the
+/// process-world relay applies in real time, made deterministic.
+pub struct RelayNode {
+    engine: RoundEngine,
+    session: RelaySession,
+    children: Vec<Option<Box<dyn SimPeer>>>,
+    /// engine closed its side of the child connection
+    closed: Vec<bool>,
+    /// private monotone clock (jumps only to fire deadlines)
+    clock: Duration,
+    started: bool,
+}
+
+impl RelayNode {
+    /// `cfg` must be a [`crate::coordinator::server::JobMode::Relay`]
+    /// config (see [`ServerConfig::relay`]); one child per subtree slot.
+    pub fn new(cfg: ServerConfig, children: Vec<Box<dyn SimPeer>>) -> Self {
+        assert!(!children.is_empty(), "a relay needs at least one child");
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, cfg.clone(), children.len());
+        let session = RelaySession::new(0, &cfg).expect("RelayNode requires a relay-mode config");
+        let closed = vec![false; children.len()];
+        RelayNode {
+            engine,
+            session,
+            children: children.into_iter().map(Some).collect(),
+            closed,
+            clock: Duration::ZERO,
+            started: false,
+        }
+    }
+
+    /// Drain engine actions through the subtree until nothing moves,
+    /// forcing the level deadline when a child went silent. Returns the
+    /// upstream payloads produced (unstamped).
+    fn pump(&mut self, pending: Vec<Action>) -> Vec<Vec<u8>> {
+        let mut queue: VecDeque<Action> = pending.into();
+        let mut ups = Vec::new();
+        let mut forced = 0usize;
+        loop {
+            while let Some(action) = queue.pop_front() {
+                match action {
+                    Action::Send { ep, bytes } => {
+                        if self.closed.get(ep).copied().unwrap_or(true) {
+                            continue;
+                        }
+                        let Some(mut child) = self.children[ep].take() else { continue };
+                        let replies = child.on_message(&bytes);
+                        self.children[ep] = Some(child);
+                        for reply in replies {
+                            queue.extend(self.engine.handle_message(ep, &reply, self.clock));
+                        }
+                    }
+                    Action::Close { ep } => {
+                        if let Some(slot) = self.closed.get_mut(ep) {
+                            *slot = true;
+                        }
+                    }
+                    Action::JobDone { .. } => {}
+                    Action::Upstream { bytes, .. } => ups.push(bytes),
+                }
+            }
+            // quiescent: if the engine still waits on a silent child,
+            // jump the clock past the level deadline and fire the
+            // subtree's own straggler cut
+            let waiting =
+                matches!(self.engine.phase_of(0), Some("collecting") | Some("finishing"));
+            match self.engine.next_deadline() {
+                Some(d) if waiting && forced < MAX_FORCED_CUTS => {
+                    forced += 1;
+                    self.clock = self.clock.max(d + Duration::from_millis(1));
+                    queue.extend(self.engine.poll_deadline(self.clock));
+                }
+                _ => break,
+            }
+        }
+        ups
+    }
+}
+
+impl SimPeer for RelayNode {
+    /// First start: run the downstream handshake to completion (every
+    /// child's `Hello`, pumped inline), then introduce the whole span
+    /// upstream. Redials reuse this path — `RelaySession::hello`
+    /// carries the token once a `Welcome` landed, so the default
+    /// `on_reconnect` resumes instead of re-introducing.
+    fn on_start(&mut self) -> Vec<Vec<u8>> {
+        if !self.started {
+            self.started = true;
+            let mut pending = Vec::new();
+            for ep in 0..self.children.len() {
+                self.engine.on_connect(ep);
+                let Some(mut child) = self.children[ep].take() else { continue };
+                let hellos = child.on_start();
+                self.children[ep] = Some(child);
+                for hello in hellos {
+                    pending.extend(self.engine.handle_message(ep, &hello, self.clock));
+                }
+            }
+            let ups = self.pump(pending);
+            debug_assert!(ups.is_empty(), "relay emitted upstream traffic during its handshake");
+        }
+        vec![self.session.hello()]
+    }
+
+    fn on_message(&mut self, bytes: &[u8]) -> Vec<Vec<u8>> {
+        let step = self
+            .session
+            .handle(bytes, &mut self.engine, self.clock)
+            .expect("relay upstream session failed");
+        if step.done {
+            return Vec::new();
+        }
+        let ups = self.pump(step.actions);
+        ups.into_iter().map(|b| self.session.stamp(b)).collect()
+    }
+}
+
+/// Group a slot-ordered leaf fleet under relays per the topology: one
+/// relay per aligned `arity^level` slot block, level by level, until
+/// only the root-facing tier remains. Returned peers are the root's
+/// direct members, in slot order (their network slots for a tree-sized
+/// [`FaultSchedule`] are their positions in this vector).
+pub fn build_tree_peers(
+    topo: &TreeTopology,
+    root_cfg: &ServerConfig,
+    leaves: Vec<Box<dyn SimPeer>>,
+) -> Vec<Box<dyn SimPeer>> {
+    assert_eq!(leaves.len(), topo.leaves, "leaf fleet sized for a different topology");
+    let mut nodes: Vec<(usize, Box<dyn SimPeer>)> = leaves.into_iter().enumerate().collect();
+    for level in 1..=topo.levels {
+        let span = topo.span_at(level);
+        let timeout = topo.level_timeout(root_cfg.round_timeout, level);
+        let mut grouped: Vec<(usize, Box<dyn SimPeer>)> = Vec::new();
+        let mut bucket: Vec<Box<dyn SimPeer>> = Vec::new();
+        let mut block = 0usize;
+        for (lo, node) in nodes {
+            if !bucket.is_empty() && lo / span != block {
+                let cfg = root_cfg.relay(block * span, span, timeout);
+                grouped.push((block * span, Box::new(RelayNode::new(cfg, mem::take(&mut bucket)))));
+            }
+            block = lo / span;
+            bucket.push(node);
+        }
+        if !bucket.is_empty() {
+            let cfg = root_cfg.relay(block * span, span, timeout);
+            grouped.push((block * span, Box::new(RelayNode::new(cfg, bucket))));
+        }
+        nodes = grouped;
+    }
+    nodes.into_iter().map(|(_, p)| p).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the tree harness
+// ---------------------------------------------------------------------------
+
+/// Shape of one tree-vs-star simulated federation. Unlike
+/// [`super::harness::SimConfig`] the instance is deliberately skinny
+/// (`m` rows, a column or three per leaf), so fleets of thousands of
+/// leaves stay cheap enough to fuzz.
+#[derive(Clone, Debug)]
+pub struct TreeSimConfig {
+    /// leaf fleet size E
+    pub leaves: usize,
+    /// relay fan-in (power of two ≥ 2)
+    pub arity: usize,
+    /// data dimension (rows of M) — small by design
+    pub m: usize,
+    /// columns per leaf (n = leaves · cols_per_leaf)
+    pub cols_per_leaf: usize,
+    pub rank: usize,
+    pub sparsity: f64,
+    pub rounds: usize,
+    pub k_local: usize,
+    pub problem_seed: u64,
+    pub server_seed: u64,
+    /// the ROOT's straggler deadline; relay levels step down from it
+    pub round_timeout: Duration,
+    /// kernel lanes shared by every leaf (0 = the process-wide pool)
+    pub threads: usize,
+    /// silence one leaf's reply for exactly one round: `(leaf, round)`
+    pub mute: Option<(usize, u32)>,
+}
+
+impl Default for TreeSimConfig {
+    fn default() -> Self {
+        TreeSimConfig {
+            leaves: 16,
+            arity: 4,
+            m: 8,
+            cols_per_leaf: 3,
+            rank: 2,
+            sparsity: 0.05,
+            rounds: 6,
+            k_local: 2,
+            problem_seed: 7,
+            server_seed: 0xDCF,
+            round_timeout: Duration::from_millis(50),
+            threads: 0,
+            mute: None,
+        }
+    }
+}
+
+/// What one tree world produced, with everything classification needs.
+struct WorldOutcome {
+    outcome: Result<ServerOutcome>,
+    materialized: Vec<String>,
+    delayed: usize,
+    virtual_elapsed: Duration,
+}
+
+/// One problem + one leaf fleet, runnable as a star or as a tree.
+pub struct TreeSim {
+    cfg: TreeSimConfig,
+    topo: TreeTopology,
+    hyper: FactorHyper,
+    problem: RpcaProblem,
+    partition: ColumnPartition,
+    /// star fault-free outcome, computed on first use (huge fleets that
+    /// only assert fan-in bounds never pay for it)
+    reference: OnceCell<ServerOutcome>,
+}
+
+impl TreeSim {
+    pub fn new(cfg: TreeSimConfig) -> Result<Self> {
+        if cfg.rounds == 0 || cfg.k_local == 0 || cfg.cols_per_leaf == 0 {
+            bail!("tree sim rounds, k_local and cols_per_leaf must be positive");
+        }
+        if let Some((leaf, round)) = cfg.mute {
+            if leaf >= cfg.leaves || round as usize >= cfg.rounds {
+                bail!("mute target ({leaf}, {round}) outside the fleet/horizon");
+            }
+        }
+        let topo = TreeTopology::new(cfg.leaves, cfg.arity)?;
+        let n = cfg.leaves * cfg.cols_per_leaf;
+        let spec = ProblemSpec { m: cfg.m, n, rank: cfg.rank, sparsity: cfg.sparsity };
+        spec.validate().map_err(|e| crate::anyhow!("invalid tree sim problem: {e}"))?;
+        let problem = spec.generate(cfg.problem_seed);
+        let partition = ColumnPartition::even(n, cfg.leaves);
+        let hyper = FactorHyper::default_for(cfg.m, n, cfg.rank);
+        Ok(TreeSim { cfg, topo, hyper, problem, partition, reference: OnceCell::new() })
+    }
+
+    pub fn config(&self) -> &TreeSimConfig {
+        &self.cfg
+    }
+
+    pub fn topology(&self) -> &TreeTopology {
+        &self.topo
+    }
+
+    fn server_cfg(&self) -> ServerConfig {
+        let mut cfg =
+            ServerConfig::new(self.cfg.m, self.cfg.rank, self.cfg.rounds, self.cfg.k_local);
+        cfg.seed = self.cfg.server_seed;
+        cfg.round_timeout = self.cfg.round_timeout;
+        cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.err_denominator =
+            Some(self.problem.l0.frob_norm_sq() + self.problem.s0.frob_norm_sq());
+        cfg
+    }
+
+    /// The leaf fleet, slot-ordered. Both worlds call this, so the star
+    /// and the tree run byte-identical workers (including the mute
+    /// wrapper and the shared kernel pool).
+    fn leaf_peers(&self) -> Vec<Box<dyn SimPeer>> {
+        let pool =
+            (self.cfg.threads > 0).then(|| Arc::new(ThreadPool::new(self.cfg.threads)));
+        let n = self.cfg.leaves * self.cfg.cols_per_leaf;
+        (0..self.cfg.leaves)
+            .map(|i| {
+                let (a, b) = self.partition.range(i);
+                let cfg = ClientConfig {
+                    id: i,
+                    job: 0,
+                    data: Box::new(self.problem.observed.cols_range(a, b)),
+                    hyper: self.hyper,
+                    n_frac: (b - a) as f64 / n as f64,
+                    polish_sweeps: 1,
+                    truth: Some((
+                        self.problem.l0.cols_range(a, b),
+                        self.problem.s0.cols_range(a, b),
+                    )),
+                    faults: FaultPlan::default(),
+                    compression: Compression::None,
+                    dp_sigma: 0.0,
+                };
+                let leaf: Box<dyn SimPeer> = Box::new(LeafPeer::new(cfg, pool.clone()));
+                match self.cfg.mute {
+                    Some((target, round)) if target == i => {
+                        Box::new(MuteAtRound::new(leaf, round)) as Box<dyn SimPeer>
+                    }
+                    _ => leaf,
+                }
+            })
+            .collect()
+    }
+
+    /// Drive one world (star or tree — whatever `peers` are) under the
+    /// given schedule. `Err` is a run-level failure (livelock, illegal
+    /// action); a job abort comes back as `Ok` with an `Err` outcome so
+    /// the caller can classify it against the schedule.
+    fn run_world(
+        &self,
+        peers: Vec<Box<dyn SimPeer>>,
+        schedule: &FaultSchedule,
+    ) -> std::result::Result<WorldOutcome, String> {
+        if schedule.clients != peers.len() {
+            return Err(format!(
+                "schedule sized for {} peers, world has {}",
+                schedule.clients,
+                peers.len()
+            ));
+        }
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, self.server_cfg(), schedule.founders());
+        let mut net = SimNet::new(schedule.clone(), peers);
+        let mut events = 0u64;
+        let mut job_done = false;
+        while !engine.all_done() {
+            events += 1;
+            if events > MAX_EVENTS {
+                return Err(format!("livelock: no completion within {MAX_EVENTS} events"));
+            }
+            let timeout = engine
+                .next_deadline()
+                .map(|d| d.saturating_sub(net.now()))
+                .map_or(MAX_IDLE_POLL, |t| t.min(MAX_IDLE_POLL));
+            let event =
+                net.poll(Some(timeout)).map_err(|e| format!("sim reactor poll failed: {e}"))?;
+            let now = net.now();
+            let mut actions: VecDeque<Action> = VecDeque::new();
+            match event {
+                IoEvent::Connected(ep) => engine.on_connect(ep),
+                IoEvent::Message(ep, bytes) => {
+                    actions.extend(engine.handle_message(ep, &bytes, now));
+                }
+                IoEvent::Disconnected(ep) => actions.extend(engine.on_disconnect(ep, now)),
+                IoEvent::Tick => {}
+            }
+            actions.extend(engine.poll_deadline(net.now()));
+            while let Some(action) = actions.pop_front() {
+                match action {
+                    Action::Send { ep, bytes } => {
+                        if let Err(e) = net.send(ep, &bytes) {
+                            return Err(format!("send to endpoint {ep} failed: {e}"));
+                        }
+                    }
+                    Action::Close { ep } => net.close(ep),
+                    Action::JobDone { .. } => job_done = true,
+                    Action::Upstream { job, .. } => {
+                        return Err(format!(
+                            "root job {job} emitted an Upstream action (relay-only output)"
+                        ));
+                    }
+                }
+            }
+        }
+        if !job_done {
+            return Err("engine terminated without emitting JobDone".to_string());
+        }
+        let outcome = engine
+            .take_result(0)
+            .ok_or_else(|| "engine terminated without a job result".to_string())?;
+        Ok(WorldOutcome {
+            outcome,
+            materialized: net.materialized().to_vec(),
+            delayed: net.delayed(),
+            virtual_elapsed: net.now(),
+        })
+    }
+
+    /// All E leaves directly under the root (the baseline world). The
+    /// schedule must be sized for `leaves` network slots.
+    pub fn run_star(&self, schedule: &FaultSchedule) -> Result<ServerOutcome> {
+        self.run_world(self.leaf_peers(), schedule).map_err(|d| crate::anyhow!("{d}"))?.outcome
+    }
+
+    /// The same leaves grouped under relays per the topology. The
+    /// schedule must be sized for [`TreeTopology::top_count`] network
+    /// slots — faults target *relays*, and a relay fault hits its whole
+    /// subtree at once.
+    pub fn run_tree(&self, schedule: &FaultSchedule) -> Result<ServerOutcome> {
+        let peers = build_tree_peers(&self.topo, &self.server_cfg(), self.leaf_peers());
+        self.run_world(peers, schedule).map_err(|d| crate::anyhow!("{d}"))?.outcome
+    }
+
+    /// The star fault-free outcome every clean tree run must match
+    /// bitwise. Computed once, on first use.
+    pub fn reference(&self) -> &ServerOutcome {
+        self.reference.get_or_init(|| {
+            let schedule = FaultSchedule::fault_free(
+                self.cfg.problem_seed,
+                self.cfg.leaves,
+                self.cfg.rounds,
+            );
+            self.run_star(&schedule).expect("fault-free star reference failed")
+        })
+    }
+
+    /// Per-round leaf participation the world is expected to reach when
+    /// nothing was cut (a configured mute costs its one leaf-round).
+    fn expected_participants(&self, round: usize) -> usize {
+        match self.cfg.mute {
+            Some((_, r)) if r as usize == round => self.cfg.leaves - 1,
+            _ => self.cfg.leaves,
+        }
+    }
+
+    /// The exact CLI invocation reproducing `seed` under this shape.
+    pub fn replay_command(&self, seed: u64) -> String {
+        format!(
+            "dcf-pca simulate --topology tree --seeds {}..{} --clients {} --tree-arity {} \
+             --m {} --cols-per-leaf {} --rank {} --sparsity {} --rounds {} --k-local {} \
+             --problem-seed {} --server-seed {} --timeout-ms {}",
+            seed,
+            seed + 1,
+            self.cfg.leaves,
+            self.cfg.arity,
+            self.cfg.m,
+            self.cfg.cols_per_leaf,
+            self.cfg.rank,
+            self.cfg.sparsity,
+            self.cfg.rounds,
+            self.cfg.k_local,
+            self.cfg.problem_seed,
+            self.cfg.server_seed,
+            self.cfg.round_timeout.as_millis(),
+        )
+    }
+
+    /// Run the relay-fault schedule drawn from `seed` and check the
+    /// tree invariants (see [`Self::check_tree_schedule`]).
+    pub fn check_tree_seed(&self, seed: u64) -> std::result::Result<SimReport, Violation> {
+        self.check_tree_schedule(&FaultSchedule::draw_tree(
+            seed,
+            self.topo.top_count(),
+            self.cfg.rounds,
+        ))
+    }
+
+    /// Run one relay-fault schedule against the tree world and check:
+    ///
+    /// - the run terminates (no panic, no livelock), and only aborts
+    ///   when every relay was faulted;
+    /// - per round, the root ingests at most `top_count` partials and
+    ///   never more leaf updates than the fleet holds;
+    /// - calm worlds and recoverable-flap worlds (every fault a
+    ///   [`Fault::Disconnect`] inside [`FaultSchedule::under_budget`])
+    ///   suffer **zero subtree-wide cuts** and reproduce the star
+    ///   reference bit for bit — `U` and the canonical per-round
+    ///   telemetry sums exactly equal.
+    pub fn check_tree_schedule(
+        &self,
+        schedule: &FaultSchedule,
+    ) -> std::result::Result<SimReport, Violation> {
+        let viol = |detail: String| {
+            let derived =
+                FaultSchedule::draw_tree(schedule.seed, schedule.clients, schedule.rounds);
+            let replay = if *schedule == derived {
+                self.replay_command(schedule.seed)
+            } else {
+                format!(
+                    "TreeSim::check_tree_schedule with the fault list above (hand-built or \
+                     shrunk schedule — not derivable from seed {})",
+                    schedule.seed
+                )
+            };
+            Violation { seed: schedule.seed, detail, schedule: schedule.clone(), replay }
+        };
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            let peers = build_tree_peers(&self.topo, &self.server_cfg(), self.leaf_peers());
+            self.run_world(peers, schedule)
+        }));
+        let world = match ran {
+            Ok(Ok(world)) => world,
+            Ok(Err(detail)) => return Err(viol(detail)),
+            Err(panic) => {
+                let msg = crate::testing::panic_message(panic.as_ref());
+                return Err(viol(format!("panic during run: {msg}")));
+            }
+        };
+        let mut report = SimReport {
+            seed: schedule.seed,
+            faults: schedule.faults.len(),
+            materialized: world.materialized.len(),
+            delayed: world.delayed,
+            rounds_run: 0,
+            min_participants: 0,
+            final_err: None,
+            virtual_elapsed: world.virtual_elapsed,
+            completed_ok: false,
+            bitwise_clean: false,
+        };
+
+        let recoverable_flaps_only = !schedule.faults.is_empty()
+            && schedule.faults.iter().all(|f| matches!(f, Fault::Disconnect { .. }))
+            && schedule.under_budget(self.cfg.round_timeout);
+
+        let out = match world.outcome {
+            Err(err) => {
+                if recoverable_flaps_only {
+                    return Err(viol(format!(
+                        "tree job aborted under recoverable relay flaps: {err}"
+                    )));
+                }
+                if schedule.has_healthy_client() {
+                    return Err(viol(format!(
+                        "tree job aborted despite a fault-free relay: {err}"
+                    )));
+                }
+                return Ok(report);
+            }
+            Ok(out) => out,
+        };
+        report.completed_ok = true;
+        report.rounds_run = out.rounds.len();
+        report.min_participants = out.rounds.iter().map(|r| r.participants).min().unwrap_or(0);
+
+        let top = self.topo.top_count();
+        for r in &out.rounds {
+            if r.fan_in > top {
+                return Err(viol(format!(
+                    "round {} ingested {} partials with only {top} top-level relays",
+                    r.round, r.fan_in
+                )));
+            }
+            if r.participants > self.cfg.leaves {
+                return Err(viol(format!(
+                    "round {} counted {} participants in a {}-leaf fleet",
+                    r.round, r.participants, self.cfg.leaves
+                )));
+            }
+        }
+
+        // bitwise identity against the star baseline: calm worlds, and
+        // flap worlds whose every outage resumes inside the deadline
+        let calm = schedule.faults.is_empty() && world.materialized.is_empty();
+        if calm || recoverable_flaps_only {
+            if out.rounds.len() != self.cfg.rounds {
+                return Err(viol(format!(
+                    "a recoverable relay fault shortened the run: {} of {} rounds",
+                    out.rounds.len(),
+                    self.cfg.rounds
+                )));
+            }
+            for r in &out.rounds {
+                if r.fan_in != top || r.participants != self.expected_participants(r.round) {
+                    return Err(viol(format!(
+                        "a recoverable relay fault cut a subtree: round {} fan-in {}/{top}, \
+                         participants {}/{}",
+                        r.round,
+                        r.fan_in,
+                        r.participants,
+                        self.expected_participants(r.round)
+                    )));
+                }
+            }
+            let reference = self.reference();
+            if out.u != reference.u {
+                return Err(viol(
+                    "tree U diverged bitwise from the star run".to_string(),
+                ));
+            }
+            for (a, b) in out.rounds.iter().zip(&reference.rounds) {
+                if a.err != b.err || a.mean_grad_norm != b.mean_grad_norm {
+                    return Err(viol(format!(
+                        "round {} telemetry diverged between tree and star \
+                         (canonical span reduction broken)",
+                        a.round
+                    )));
+                }
+            }
+            report.bitwise_clean = true;
+        }
+        Ok(report)
+    }
+
+    /// Greedy schedule minimization for a failing tree world (same
+    /// discipline as [`super::harness::SimHarness::shrink`]).
+    pub fn shrink_tree(&self, schedule: &FaultSchedule) -> Option<(FaultSchedule, Violation)> {
+        let mut current = schedule.clone();
+        let mut violation = match self.check_tree_schedule(&current) {
+            Err(v) => v,
+            Ok(_) => return None,
+        };
+        loop {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < current.faults.len() {
+                let mut candidate = current.clone();
+                candidate.faults.remove(i);
+                match self.check_tree_schedule(&candidate) {
+                    Err(v) => {
+                        current = candidate;
+                        violation = v;
+                        progressed = true;
+                    }
+                    Ok(_) => i += 1,
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        Some((current, violation))
+    }
+
+    /// Sweep a seed range of relay-fault worlds.
+    pub fn fuzz_tree(&self, seeds: Range<u64>) -> FuzzSummary {
+        let wall = Instant::now();
+        let mut summary = FuzzSummary::default();
+        for seed in seeds {
+            summary.seeds_run += 1;
+            match self.check_tree_seed(seed) {
+                Ok(report) => {
+                    summary.virtual_total += report.virtual_elapsed;
+                    summary.reports.push(report);
+                }
+                Err(violation) => summary.failures.push(violation),
+            }
+        }
+        summary.wall = wall.elapsed();
+        summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_shape_math() {
+        // 16 leaves, arity 4: one relay level of 4, root serves 4
+        let t = TreeTopology::new(16, 4).unwrap();
+        assert_eq!((t.levels, t.top_span(), t.top_count()), (1, 4, 4));
+        assert_eq!(t.relays_per_level(), vec![4]);
+
+        // star when the fleet already fits under the root
+        let t = TreeTopology::new(4, 8).unwrap();
+        assert_eq!((t.levels, t.top_count()), (0, 4));
+        assert_eq!(t.relay_count(), 0);
+
+        // 10k leaves, arity 8: spans 8/64/512/4096, root serves 3
+        let t = TreeTopology::new(10_000, 8).unwrap();
+        assert_eq!(t.levels, 4);
+        assert_eq!(t.top_span(), 4096);
+        assert_eq!(t.top_count(), 3);
+        assert!(t.top_count() <= t.arity);
+        assert_eq!(t.relays_per_level(), vec![1250, 157, 20, 3]);
+
+        // non-power-of-two arity rejected
+        assert!(TreeTopology::new(16, 3).is_err());
+        assert!(TreeTopology::new(0, 4).is_err());
+    }
+
+    #[test]
+    fn level_timeouts_nest_strictly() {
+        let t = TreeTopology::new(10_000, 8).unwrap();
+        let root = Duration::from_millis(50);
+        let mut prev = Duration::ZERO;
+        for level in 1..=t.levels {
+            let w = t.level_timeout(root, level);
+            assert!(w > prev, "level {level} window {w:?} not above {prev:?}");
+            prev = w;
+        }
+        assert!(root > prev, "root window must exceed the top relay level's");
+    }
+
+    #[test]
+    fn tree_schedule_targets_relays_only() {
+        let mut crash_seen = false;
+        let mut flap_seen = false;
+        for seed in 0..64 {
+            let s = FaultSchedule::draw_tree(seed, 4, 6);
+            assert_eq!(s.clients, 4);
+            for f in &s.faults {
+                assert!(f.client() < 4, "fault outside the relay slots: {f}");
+                match f {
+                    Fault::Disconnect { .. } => flap_seen = true,
+                    Fault::CrashAt { .. } => crash_seen = true,
+                    other => panic!("unexpected tree fault kind: {other}"),
+                }
+            }
+        }
+        assert!(crash_seen && flap_seen, "distribution never drew both fault kinds");
+    }
+}

@@ -51,7 +51,7 @@ impl SimClient {
         let (m, n_i) = m_block.shape();
         let mut outbox = VecDeque::new();
         outbox.push_back(
-            ToServer::Hello { client: id as u32, cols: n_i as u64, token: 0 }
+            ToServer::Hello { client: id as u32, cols: n_i as u64, token: 0, span: 1 }
                 .encode_with(job, Compression::None),
         );
         SimClient {
@@ -100,10 +100,13 @@ impl SimClient {
                         client: self.id,
                         round,
                         u,
-                        grad_norm: out.grad_norm,
-                        lipschitz: out.lipschitz,
-                        err_num,
-                        local_secs: 0.0,
+                        count: 1,
+                        cols: self.m_block.cols() as u64,
+                        grad_sum: out.grad_norm,
+                        lip_max: out.lipschitz,
+                        err_num_sum: err_num,
+                        secs_max: 0.0,
+                        secs_sum: 0.0,
                     }
                     .encode_with(self.job, Compression::None),
                 );
@@ -353,7 +356,7 @@ fn hardening_engine(policy: FaultPolicy, rounds: usize, clients: usize) -> Round
 }
 
 fn hello_frame(client: u32, token: u64, seq: u32) -> Vec<u8> {
-    ToServer::Hello { client, cols: 3, token }.encode_seq(0, seq, Compression::None)
+    ToServer::Hello { client, cols: 3, token, span: 1 }.encode_seq(0, seq, Compression::None)
 }
 
 fn update_frame(client: u32, round: u32, seq: u32) -> Vec<u8> {
@@ -364,10 +367,13 @@ fn update_frame(client: u32, round: u32, seq: u32) -> Vec<u8> {
         client,
         round,
         u,
-        grad_norm: 1.0,
-        lipschitz: 1.0,
-        err_num: f64::NAN,
-        local_secs: 0.0,
+        count: 1,
+        cols: 3,
+        grad_sum: 1.0,
+        lip_max: 1.0,
+        err_num_sum: f64::NAN,
+        secs_max: 0.0,
+        secs_sum: 0.0,
     }
     .encode_seq(0, seq, Compression::None)
 }

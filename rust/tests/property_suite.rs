@@ -68,10 +68,13 @@ fn prop_protocol_roundtrip_fuzzed() {
             client: g.usize_in(0, 64) as u32,
             round: g.usize_in(0, 1000) as u32,
             u,
-            grad_norm: g.f64_in(0.0, 1e6),
-            lipschitz: g.f64_in(0.0, 1e6),
-            err_num: g.f64_in(0.0, 1e6),
-            local_secs: g.f64_in(0.0, 100.0),
+            count: g.usize_in(1, 256) as u32,
+            cols: g.usize_in(1, 4096) as u64,
+            grad_sum: g.f64_in(0.0, 1e6),
+            lip_max: g.f64_in(0.0, 1e6),
+            err_num_sum: g.f64_in(0.0, 1e6),
+            secs_max: g.f64_in(0.0, 100.0),
+            secs_sum: g.f64_in(0.0, 100.0),
         };
         assert_eq!(ToServer::decode(&up.encode()).unwrap(), up);
     });

@@ -1,0 +1,194 @@
+//! Integration tests for the hierarchical aggregation tier (PR 8).
+//!
+//! The engine's reduction associates over aligned power-of-two slot
+//! spans, so grouping any leaf fleet under relay RoundEngines must not
+//! change a single bit of the result: every test here runs the same
+//! fleet as a flat star and as a tree and compares the final factor
+//! bitwise. The exception is the 10 000-leaf test — the whole point of
+//! the tier is that the root only ever serves `top_count() ≤ arity`
+//! connections, so that world asserts the fan-in bound and never pays
+//! for the star baseline.
+
+use dcf_pca::sim::{Fault, FaultSchedule, TreeSim, TreeSimConfig};
+
+fn tree_sim(cfg: TreeSimConfig) -> TreeSim {
+    TreeSim::new(cfg).expect("tree sim config must validate")
+}
+
+/// A latency-jitter-only schedule sized for the root's relay tier.
+fn calm_tree_schedule(sim: &TreeSim, seed: u64) -> FaultSchedule {
+    FaultSchedule::fault_free(seed, sim.topology().top_count(), sim.config().rounds)
+}
+
+#[test]
+fn tree_reduction_is_bitwise_identical_to_star_across_arities() {
+    for arity in [2usize, 4, 8] {
+        let sim = tree_sim(TreeSimConfig { arity, ..TreeSimConfig::default() });
+        let top = sim.topology().top_count();
+        // different schedule seeds draw different per-message latency
+        // jitter, so partials reach every relay in different orders —
+        // the canonical span reduction must not care
+        for schedule_seed in [1u64, 42, 1337] {
+            let out = sim
+                .run_tree(&calm_tree_schedule(&sim, schedule_seed))
+                .expect("fault-free tree run must complete");
+            let reference = sim.reference();
+            assert_eq!(
+                out.u,
+                reference.u,
+                "arity {arity}, schedule seed {schedule_seed}: tree U diverged from star"
+            );
+            assert_eq!(out.rounds.len(), reference.rounds.len());
+            for (a, b) in out.rounds.iter().zip(&reference.rounds) {
+                assert_eq!(a.err, b.err, "arity {arity} round {}: err diverged", a.round);
+                assert_eq!(
+                    a.mean_grad_norm,
+                    b.mean_grad_norm,
+                    "arity {arity} round {}: gradient telemetry diverged",
+                    a.round
+                );
+                assert_eq!(a.fan_in, top, "root must ingest exactly the top relay tier");
+                assert_eq!(a.participants, sim.config().leaves);
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_pool_width_never_changes_the_factor() {
+    let mut factors = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let sim = tree_sim(TreeSimConfig { threads, ..TreeSimConfig::default() });
+        let out = sim
+            .run_tree(&calm_tree_schedule(&sim, 5))
+            .expect("fault-free tree run must complete");
+        assert_eq!(out.u, sim.reference().u, "threads {threads}: tree diverged from star");
+        factors.push(out.u);
+    }
+    assert!(
+        factors.windows(2).all(|w| w[0] == w[1]),
+        "final factor depends on the kernel lane count"
+    );
+}
+
+#[test]
+fn cut_leaf_round_stays_bitwise_equal_to_star() {
+    // leaf 5's reply to round 2 is swallowed in BOTH worlds (the mute
+    // wrapper rides inside the shared leaf fleet), so the relay's
+    // subtree cut must resolve to exactly the skip the star coordinator
+    // applies: same slot set aggregated, same factor, one leaf-round of
+    // participation gone in each
+    let sim = tree_sim(TreeSimConfig { mute: Some((5, 2)), ..TreeSimConfig::default() });
+    let out = sim
+        .run_tree(&calm_tree_schedule(&sim, 9))
+        .expect("tree run with one muted leaf must complete");
+    let reference = sim.reference();
+    assert_eq!(out.u, reference.u, "cut-leaf tree U diverged from the cut-leaf star");
+    for (a, b) in out.rounds.iter().zip(&reference.rounds) {
+        assert_eq!(a.err, b.err, "round {}: err diverged", a.round);
+        let expected = if a.round == 2 { sim.config().leaves - 1 } else { sim.config().leaves };
+        assert_eq!(a.participants, expected, "round {}", a.round);
+        assert_eq!(b.participants, expected, "star round {}", b.round);
+    }
+}
+
+#[test]
+fn ten_thousand_leaves_arity_eight_keeps_root_fan_in_bounded() {
+    let sim = tree_sim(TreeSimConfig {
+        leaves: 10_000,
+        arity: 8,
+        cols_per_leaf: 1,
+        rounds: 2,
+        k_local: 1,
+        ..TreeSimConfig::default()
+    });
+    let topo = *sim.topology();
+    assert_eq!((topo.levels, topo.top_span(), topo.top_count()), (4, 4096, 3));
+    // never touch sim.reference() here: the 10k-leaf star baseline is
+    // exactly the world the tier exists to avoid, and the lazy
+    // reference cell means we never pay for it
+    let out = sim
+        .run_tree(&FaultSchedule::fault_free(7, topo.top_count(), 2))
+        .expect("10k-leaf tree run must complete");
+    assert_eq!(out.rounds.len(), 2);
+    for r in &out.rounds {
+        assert!(
+            r.fan_in <= topo.arity,
+            "round {}: root ingested {} partials with arity {}",
+            r.round,
+            r.fan_in,
+            topo.arity
+        );
+        assert_eq!(r.fan_in, topo.top_count());
+        assert_eq!(r.participants, 10_000, "round {}: a subtree went missing", r.round);
+    }
+}
+
+#[test]
+fn recoverable_relay_flap_is_bitwise_invisible() {
+    let sim = tree_sim(TreeSimConfig::default());
+    let mut schedule = calm_tree_schedule(&sim, 0);
+    // relay 1 drops its upstream link mid-run and redials 5 ms later —
+    // inside the resume budget, so its session token must splice the
+    // whole subtree back in with nothing cut
+    schedule.faults.push(Fault::Disconnect { client: 1, at_ms: 20, reconnect_after_ms: 5 });
+    assert!(
+        schedule.under_budget(sim.config().round_timeout),
+        "test premise broken: this flap should be inside the resume budget"
+    );
+    let report = sim.check_tree_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok);
+    assert!(report.bitwise_clean, "a recoverable relay flap left a trace in the reduction");
+}
+
+#[test]
+fn long_relay_outage_degrades_to_a_subtree_cut() {
+    let sim = tree_sim(TreeSimConfig::default());
+    let mut schedule = calm_tree_schedule(&sim, 0);
+    // the outage outlives the round deadline: the relay departs and its
+    // subtree is skipped, but the remaining relays carry the job
+    schedule.faults.push(Fault::Disconnect { client: 1, at_ms: 20, reconnect_after_ms: 200 });
+    assert!(!schedule.under_budget(sim.config().round_timeout));
+    let report = sim.check_tree_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok, "three healthy relays must carry the job to completion");
+    assert!(!report.bitwise_clean, "an over-budget outage cannot be bitwise clean");
+}
+
+#[test]
+fn relay_crash_takes_its_subtree_as_one_straggler() {
+    let sim = tree_sim(TreeSimConfig::default());
+    let mut schedule = calm_tree_schedule(&sim, 0);
+    // killing one relay removes its whole 4-leaf subtree at once; the
+    // root must treat that as a single straggler cut, not an abort
+    schedule.faults.push(Fault::CrashAt { client: 2, at_ms: 10 });
+    let report = sim.check_tree_schedule(&schedule).unwrap_or_else(|v| panic!("{v}"));
+    assert!(report.completed_ok, "a relay crash must degrade, not abort");
+    assert!(!report.bitwise_clean);
+    let span = sim.topology().top_span();
+    assert!(
+        report.min_participants <= sim.config().leaves - span,
+        "no round lost the crashed relay's {span}-leaf subtree (min participants {})",
+        report.min_participants
+    );
+}
+
+#[test]
+fn tree_fuzz_sweep_holds_across_drawn_schedules() {
+    let sim = tree_sim(TreeSimConfig::default());
+    let summary = sim.fuzz_tree(0..32);
+    assert_eq!(summary.seeds_run, 32);
+    for v in &summary.failures {
+        eprintln!("{v}");
+    }
+    assert!(
+        summary.failures.is_empty(),
+        "{} tree worlds violated invariants (replay lines above)",
+        summary.failures.len()
+    );
+    // the sweep must actually exercise the fault space and the bitwise
+    // check, not just terminate
+    assert!(summary.reports.iter().any(|r| r.faults > 0), "sweep never drew a relay fault");
+    assert!(summary.reports.iter().any(|r| r.bitwise_clean), "sweep never verified a calm world");
+    // a passing schedule has nothing to shrink
+    assert!(sim.shrink_tree(&calm_tree_schedule(&sim, 3)).is_none());
+}

@@ -1,48 +1,57 @@
 #!/usr/bin/env bash
-# Run the kernel hot-path bench and diff its per-kernel rates against the
-# checked-in baseline, so perf regressions show up as a review comment
-# instead of a silent drift.
+# Run the perf benches and diff their records against the checked-in
+# baselines, so perf regressions show up as a review comment instead of
+# a silent drift.
 #
 # Usage: scripts/bench_trend.sh [extra cargo-bench args...]
 #
-#   - runs `cargo bench --bench kernel_hotpath`, which rewrites
-#     BENCH_kernel_hotpath.json ({host, records});
-#   - if BENCH_kernel_hotpath.baseline.json does not exist yet, seeds it
-#     from this run (commit it from the machine the trend should track —
-#     baselines are per-host, the header records which one);
-#   - otherwise prints a per-(op, shape) GFLOP/s delta table and exits
-#     non-zero if any kernel regressed more than $TREND_TOLERANCE
-#     (default 20%, generous because shared CI boxes are noisy).
+#   - runs `cargo bench --bench kernel_hotpath` (rewrites
+#     BENCH_kernel_hotpath.json) and `cargo bench --bench comm_scaling`
+#     (rewrites BENCH_comm_scaling.json), both `{host, records}`;
+#   - for each file: if its `.baseline.json` twin does not exist yet,
+#     seeds it from this run (commit it from the machine the trend
+#     should track — baselines are per-host, the header records which);
+#   - otherwise prints a per-(op, shape) delta table and exits non-zero
+#     if any record regressed more than $TREND_TOLERANCE (default 20%,
+#     generous because shared CI boxes are noisy). Kernel records are
+#     GFLOP/s rates (higher is better); comm records carry an explicit
+#     `better` direction (ingest bytes and latencies regress upward).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-CURRENT=BENCH_kernel_hotpath.json
-BASELINE=BENCH_kernel_hotpath.baseline.json
 TOLERANCE="${TREND_TOLERANCE:-0.20}"
+STATUS=0
 
 cargo bench --bench kernel_hotpath "$@"
+cargo bench --bench comm_scaling "$@"
 
-if [[ ! -f "$CURRENT" ]]; then
-    echo "error: bench did not produce $CURRENT" >&2
-    exit 1
-fi
+for CURRENT in BENCH_kernel_hotpath.json BENCH_comm_scaling.json; do
+    BASELINE="${CURRENT%.json}.baseline.json"
 
-if [[ ! -f "$BASELINE" ]]; then
-    cp "$CURRENT" "$BASELINE"
+    if [[ ! -f "$CURRENT" ]]; then
+        echo "error: bench did not produce $CURRENT" >&2
+        exit 1
+    fi
+
+    if [[ ! -f "$BASELINE" ]]; then
+        cp "$CURRENT" "$BASELINE"
+        echo
+        echo "No baseline found — seeded $BASELINE from this run."
+        echo "Commit it from the hardware the trend should track:"
+        echo "    git add $BASELINE"
+        continue
+    fi
+
     echo
-    echo "No baseline found — seeded $BASELINE from this run."
-    echo "Commit it from the hardware the trend should track:"
-    echo "    git add $BASELINE"
-    exit 0
-fi
-
-python3 - "$BASELINE" "$CURRENT" "$TOLERANCE" <<'EOF'
+    echo "== trend: $CURRENT vs $BASELINE =="
+    python3 - "$BASELINE" "$CURRENT" "$TOLERANCE" <<'EOF' || STATUS=1
 import json
 import sys
 
 base_path, cur_path, tol_s = sys.argv[1], sys.argv[2], sys.argv[3]
 tol = float(tol_s)
+
 
 def load(path):
     with open(path) as f:
@@ -50,11 +59,16 @@ def load(path):
     # pre-PR-6 files were a bare record array
     records = doc["records"] if isinstance(doc, dict) else doc
     host = doc.get("host", {}) if isinstance(doc, dict) else {}
-    return host, {
-        (r["op"], r["shape"]): r["gflops"]
-        for r in records
-        if r.get("gflops") is not None
-    }
+    out = {}
+    for r in records:
+        # kernel rows rate in GFLOP/s (higher is better); comm rows
+        # carry an explicit value + direction
+        if r.get("gflops") is not None:
+            out[(r["op"], r["shape"])] = (r["gflops"], "higher")
+        elif r.get("value") is not None:
+            out[(r["op"], r["shape"])] = (r["value"], r.get("better", "lower"))
+    return host, out
+
 
 bhost, base = load(base_path)
 chost, cur = load(cur_path)
@@ -69,27 +83,31 @@ rows, regressions = [], []
 for key in sorted(base):
     if key not in cur:
         continue
-    b, c = base[key], cur[key]
+    (b, better), (c, _) = base[key], cur[key]
     delta = (c - b) / b if b else 0.0
     rows.append((key, b, c, delta))
-    if delta < -tol:
+    regressed = delta < -tol if better == "higher" else delta > tol
+    if regressed:
         regressions.append((key, b, c, delta))
 
 w = max((len(f"{op} {shape}") for (op, shape), *_ in rows), default=20)
-print(f"\n{'kernel':<{w}}  {'base':>9}  {'now':>9}  {'delta':>8}")
+print(f"\n{'record':<{w}}  {'base':>12}  {'now':>12}  {'delta':>8}")
 for (op, shape), b, c, delta in rows:
-    print(f"{op + ' ' + shape:<{w}}  {b:>9.2f}  {c:>9.2f}  {delta:>+7.1%}")
+    print(f"{op + ' ' + shape:<{w}}  {b:>12.2f}  {c:>12.2f}  {delta:>+7.1%}")
 
 new_keys = sorted(set(cur) - set(base))
 if new_keys:
-    print(f"\n{len(new_keys)} kernel(s) not in baseline (re-seed to track):")
+    print(f"\n{len(new_keys)} record(s) not in baseline (re-seed to track):")
     for op, shape in new_keys:
         print(f"  {op} {shape}")
 
 if regressions:
-    print(f"\nFAIL: {len(regressions)} kernel(s) regressed more than {tol:.0%}:")
+    print(f"\nFAIL: {len(regressions)} record(s) regressed more than {tol:.0%}:")
     for (op, shape), b, c, delta in regressions:
-        print(f"  {op} {shape}: {b:.2f} -> {c:.2f} GFLOP/s ({delta:+.1%})")
+        print(f"  {op} {shape}: {b:.2f} -> {c:.2f} ({delta:+.1%})")
     sys.exit(1)
-print(f"\nOK: no kernel regressed more than {tol:.0%}")
+print(f"\nOK: no record regressed more than {tol:.0%}")
 EOF
+done
+
+exit "$STATUS"
