@@ -80,6 +80,43 @@ const SERVE_SPECS: &[OptSpec] = &[
                root then serves only the top-level relays and prints the launch plan \
                (see `dcf-pca relay`)",
     },
+    OptSpec {
+        name: "service",
+        takes_value: false,
+        help: "multi-tenant job service: accept wire `Submit`s instead of one fixed job \
+               (Linux only; --clients/--n/--rank/--rounds become per-job parameters)",
+    },
+    OptSpec {
+        name: "metrics",
+        takes_value: true,
+        help: "service mode: bind a plaintext metrics/health endpoint on this address",
+    },
+    OptSpec {
+        name: "max-jobs",
+        takes_value: true,
+        help: "service mode: concurrent jobs across all tenants (default 64)",
+    },
+    OptSpec {
+        name: "max-jobs-per-tenant",
+        takes_value: true,
+        help: "service mode: concurrent jobs per tenant (default 4)",
+    },
+    OptSpec {
+        name: "max-fleet",
+        takes_value: true,
+        help: "service mode: workers per submitted job (default 256)",
+    },
+    OptSpec {
+        name: "max-footprint",
+        takes_value: true,
+        help: "service mode: per-job m·rank footprint ceiling in elements (default 2^24)",
+    },
+    OptSpec {
+        name: "outbuf-cap",
+        takes_value: true,
+        help: "per-connection write-queue cap in bytes before a slow peer is shed \
+               (default 64 MiB)",
+    },
     OptSpec { name: "help", takes_value: false, help: "show this help" },
 ];
 
@@ -118,6 +155,21 @@ pub fn run_serve(argv: &[String]) -> Result<()> {
         Some("skip") => FaultPolicy::SkipMissing,
         Some(other) => bail!("--fault-policy must be strict or skip, got {other}"),
     };
+
+    if args.flag("service") {
+        let mut template = ServerConfig::new(n, rank, rounds, k_local);
+        template.seed = seed;
+        template.compression = compression;
+        template.fault_policy = fault_policy;
+        template.participation = participation;
+        if let Some(t) = parse_round_timeout(&args)? {
+            template.round_timeout = t;
+        }
+        if let Some(secs) = args.get_u64("reconnect-grace")? {
+            template.reconnect_grace = Some(std::time::Duration::from_secs(secs));
+        }
+        return run_service_mode(&args, listen, template);
+    }
 
     let spec = ProblemSpec::square(n, rank, sparsity);
     spec.validate().map_err(Error::msg)?;
@@ -228,6 +280,82 @@ fn serve_event_loop(
         drive(&mut reactor, &mut engine)?;
     }
     engine.take_result(0).expect("job 0 completed")
+}
+
+/// `serve --service`: the long-running multi-tenant job service —
+/// admission-controlled wire `Submit`s, bounded write queues, graceful
+/// drain on SIGTERM/SIGINT or a wire `Drain`, optional plaintext
+/// metrics endpoint. The single-threaded epoll loop is the whole
+/// service: every tenant's every job multiplexes over one engine.
+#[cfg(target_os = "linux")]
+fn run_service_mode(args: &ParsedArgs, listen: &str, template: ServerConfig) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use crate::coordinator::service::{install_drain_signal_handler, spawn_metrics_endpoint};
+    use crate::coordinator::transport::reactor::EpollReactor;
+    use crate::coordinator::{JobService, Quotas};
+
+    let mut quotas = Quotas::default();
+    if let Some(v) = args.get_usize("max-jobs")? {
+        quotas.server_jobs = v;
+    }
+    if let Some(v) = args.get_usize("max-jobs-per-tenant")? {
+        quotas.tenant_jobs = v;
+    }
+    if let Some(v) = args.get_usize("max-fleet")? {
+        quotas.fleet_size = v;
+    }
+    if let Some(v) = args.get_u64("max-footprint")? {
+        quotas.footprint = v;
+    }
+
+    let acceptor = TcpAcceptor::bind(listen)?;
+    let bound = acceptor.local_addr()?;
+    let mut reactor = EpollReactor::new(acceptor.into_listener())?;
+    if let Some(cap) = args.get_u64("outbuf-cap")? {
+        reactor.set_outbuf_cap(cap as usize);
+    }
+
+    let mut service = JobService::new(template, quotas);
+    install_drain_signal_handler();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let endpoint = match args.get("metrics") {
+        Some(addr) => {
+            let (maddr, handle) =
+                spawn_metrics_endpoint(addr, service.metrics(), Arc::clone(&stop))?;
+            println!("metrics endpoint on http://{maddr}/ (plaintext; `dcf_up 1` = healthy)");
+            Some(handle)
+        }
+        None => None,
+    };
+    println!(
+        "job service listening on {bound}: ≤{} jobs ({} per tenant), fleets ≤{}, \
+         footprint ≤{} elems — SIGTERM or a wire `Drain` drains gracefully",
+        quotas.server_jobs, quotas.tenant_jobs, quotas.fleet_size, quotas.footprint
+    );
+
+    let result = service.run(&mut reactor);
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some(handle) = endpoint {
+        let _ = handle.join();
+    }
+    result?;
+    let metrics = service.metrics();
+    let m = metrics.lock().expect("metrics lock");
+    println!(
+        "drained: {} completed, {} failed, {} refused over {} round(s)",
+        m.jobs_completed, m.jobs_failed, m.jobs_refused, m.rounds_total
+    );
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn run_service_mode(_args: &ParsedArgs, _listen: &str, _template: ServerConfig) -> Result<()> {
+    bail!("serve --service needs the Linux epoll reactor (no portable fallback serves \
+           an unbounded, elastic connection set)")
 }
 
 /// The reconnect knobs `worker` and `relay` share (both sides run the

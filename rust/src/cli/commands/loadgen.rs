@@ -1,0 +1,460 @@
+//! `dcf-pca loadgen` — drive a service-mode coordinator with many
+//! concurrent short jobs and measure what a tenant experiences:
+//!
+//! - **cold start**: `Submit` → `Accepted` (admission latency),
+//! - **scale-up**: `Accepted` → the job's round 0 broadcast reaching
+//!   its last worker (handshake + fleet assembly),
+//! - **end-to-end**: `Submit` → every worker served its `Shutdown`.
+//!
+//! Arrivals are closed-loop by default (a fixed concurrency of
+//! generators, each submitting its next job as soon as the previous one
+//! finishes) or open-loop (`--rate` jobs/s regardless of completions —
+//! the harsher model: a backlog cannot slow the arrival process down).
+//!
+//! Results go to `BENCH_service.json` as `{host, records}` — the same
+//! shape the perf benches emit — so `scripts/bench_trend.sh` diffs the
+//! service latencies against their checked-in baseline like any other
+//! perf number. Refusals below quota are a record of their own: the
+//! expected value is zero, and any positive count is a regression.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::error::Result;
+
+use crate::algorithms::factor::FactorHyper;
+use crate::cli::args::{usage, OptSpec, ParsedArgs};
+use crate::coordinator::client::{ClientConfig, ClientSession, FaultPlan};
+use crate::coordinator::compress::Compression;
+use crate::coordinator::kernel::NativeKernel;
+use crate::coordinator::protocol::{RefuseReason, ToClient, ToServer};
+use crate::coordinator::transport::tcp::TcpChannel;
+use crate::coordinator::transport::Channel;
+use crate::linalg::simd;
+use crate::rpca::partition::ColumnPartition;
+use crate::rpca::problem::ProblemSpec;
+use crate::util::json::Json;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec {
+        name: "connect",
+        takes_value: true,
+        help: "service address (default 127.0.0.1:7070)",
+    },
+    OptSpec { name: "jobs", takes_value: true, help: "total jobs to submit (default 200)" },
+    OptSpec {
+        name: "concurrency",
+        takes_value: true,
+        help: "closed-loop generators / open-loop in-flight cap (default 100)",
+    },
+    OptSpec {
+        name: "rate",
+        takes_value: true,
+        help: "open-loop arrival rate in jobs/s (default: closed loop)",
+    },
+    OptSpec {
+        name: "tenants",
+        takes_value: true,
+        help: "distinct tenant ids to cycle (default 8)",
+    },
+    OptSpec { name: "clients", takes_value: true, help: "workers per job (default 2)" },
+    OptSpec { name: "rounds", takes_value: true, help: "rounds per job (default 2)" },
+    OptSpec { name: "n", takes_value: true, help: "per-job problem size (default 32)" },
+    OptSpec { name: "rank", takes_value: true, help: "per-job rank (default 2)" },
+    OptSpec {
+        name: "out",
+        takes_value: true,
+        help: "machine-readable results path (default BENCH_service.json)",
+    },
+    OptSpec { name: "help", takes_value: false, help: "show this help" },
+];
+
+/// What one submitted job experienced, all relative to its own submit.
+struct JobTiming {
+    cold_start: f64,
+    /// None when any worker never saw round 0 (job failed early)
+    scale_up: Option<f64>,
+    e2e: f64,
+    outcome: JobOutcome,
+}
+
+enum JobOutcome {
+    Completed,
+    Refused(RefuseReason),
+    Failed(String),
+}
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = ParsedArgs::parse(argv, SPECS)?;
+    if args.flag("help") {
+        print!("{}", usage("loadgen", SPECS));
+        return Ok(());
+    }
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070").to_string();
+    let jobs = args.get_usize("jobs")?.unwrap_or(200);
+    let concurrency = args.get_usize("concurrency")?.unwrap_or(100).max(1);
+    let rate = args.get_f64("rate")?;
+    if let Some(r) = rate {
+        if r <= 0.0 {
+            bail!("--rate must be positive, got {r}");
+        }
+    }
+    let tenants = args.get_usize("tenants")?.unwrap_or(8).max(1) as u32;
+    let clients = args.get_usize("clients")?.unwrap_or(2).max(1);
+    let rounds = args.get_usize("rounds")?.unwrap_or(2).max(1);
+    let n = args.get_usize("n")?.unwrap_or(32);
+    let rank = args.get_usize("rank")?.unwrap_or(2);
+    let out_path = args.get("out").unwrap_or("BENCH_service.json").to_string();
+
+    let shape = JobShape { clients, rounds, n, rank };
+    let mode = match rate {
+        Some(r) => format!("open {r} jobs/s"),
+        None => format!("closed, {concurrency} generators"),
+    };
+    println!(
+        "loadgen: {jobs} jobs against {addr} ({mode}); each {clients} worker(s) × \
+         {rounds} round(s) on a {n}×{n} rank-{rank} instance"
+    );
+
+    let started = Instant::now();
+    let timings = match rate {
+        None => run_closed_loop(&addr, jobs, concurrency, tenants, shape),
+        Some(r) => run_open_loop(&addr, jobs, concurrency, tenants, shape, r),
+    };
+    let wall = started.elapsed().as_secs_f64();
+
+    summarize(&timings, wall, jobs, concurrency, &mode, &out_path)
+}
+
+#[derive(Clone, Copy)]
+struct JobShape {
+    clients: usize,
+    rounds: usize,
+    n: usize,
+    rank: usize,
+}
+
+/// Closed loop: `concurrency` generator threads, each drawing the next
+/// job index as soon as its previous job resolves.
+fn run_closed_loop(
+    addr: &str,
+    jobs: usize,
+    concurrency: usize,
+    tenants: u32,
+    shape: JobShape,
+) -> Vec<JobTiming> {
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<JobTiming>();
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency.min(jobs) {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= jobs {
+                    break;
+                }
+                let _ = tx.send(run_one_job(addr, k as u32 % tenants, shape));
+            });
+        }
+        drop(tx);
+    });
+    rx.into_iter().collect()
+}
+
+/// Open loop: arrivals at a fixed rate on the submitter's clock. The
+/// in-flight cap only guards the thread count — a saturated service
+/// sees arrivals keep coming, which is the point of the model.
+fn run_open_loop(
+    addr: &str,
+    jobs: usize,
+    concurrency: usize,
+    tenants: u32,
+    shape: JobShape,
+    rate: f64,
+) -> Vec<JobTiming> {
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<JobTiming>();
+    std::thread::scope(|scope| {
+        let start = Instant::now();
+        for k in 0..jobs {
+            let due = start + interval.mul_f64(k as f64);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            while inflight.load(Ordering::Relaxed) >= concurrency {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            inflight.fetch_add(1, Ordering::Relaxed);
+            let inflight = Arc::clone(&inflight);
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let timing = run_one_job(addr, k as u32 % tenants, shape);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = tx.send(timing);
+            });
+        }
+        drop(tx);
+    });
+    rx.into_iter().collect()
+}
+
+/// Submit one job and, if accepted, field its whole worker fleet from
+/// this process.
+fn run_one_job(addr: &str, tenant: u32, shape: JobShape) -> JobTiming {
+    let t0 = Instant::now();
+    let job = match submit(addr, tenant, shape) {
+        Ok(Ok(job)) => job,
+        Ok(Err(reason)) => {
+            return JobTiming {
+                cold_start: t0.elapsed().as_secs_f64(),
+                scale_up: None,
+                e2e: t0.elapsed().as_secs_f64(),
+                outcome: JobOutcome::Refused(reason),
+            };
+        }
+        Err(err) => {
+            return JobTiming {
+                cold_start: t0.elapsed().as_secs_f64(),
+                scale_up: None,
+                e2e: t0.elapsed().as_secs_f64(),
+                outcome: JobOutcome::Failed(format!("submit: {err:#}")),
+            };
+        }
+    };
+    let cold_start = t0.elapsed().as_secs_f64();
+
+    // the fleet: every worker runs the real client session over TCP
+    let results: Vec<Result<Option<Duration>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..shape.clients)
+            .map(|id| scope.spawn(move || lean_worker(addr, job, id, shape)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
+    });
+    let e2e = t0.elapsed().as_secs_f64();
+
+    let mut scale_up = Some(0.0f64);
+    let mut outcome = JobOutcome::Completed;
+    for r in results {
+        match r {
+            Ok(Some(first_round)) => {
+                // the job is "scaled up" once its *last* worker has seen
+                // the round 0 broadcast
+                scale_up = scale_up.map(|s| s.max(first_round.as_secs_f64()));
+            }
+            Ok(None) => scale_up = None,
+            Err(err) => {
+                scale_up = None;
+                outcome = JobOutcome::Failed(format!("worker: {err:#}"));
+            }
+        }
+    }
+    JobTiming { cold_start, scale_up, e2e, outcome }
+}
+
+/// One `Submit` round-trip on its own control connection.
+fn submit(
+    addr: &str,
+    tenant: u32,
+    shape: JobShape,
+) -> Result<std::result::Result<u32, RefuseReason>> {
+    let mut ctl = TcpChannel::connect(addr)?;
+    let frame = ToServer::Submit {
+        tenant,
+        clients: shape.clients as u32,
+        rounds: shape.rounds as u32,
+        m: shape.n as u64,
+        rank: shape.rank as u32,
+    }
+    .encode();
+    ctl.send(&frame)?;
+    let reply = ctl.recv_timeout(Duration::from_secs(30))?;
+    match ToClient::decode(&reply)? {
+        ToClient::Accepted { job } => Ok(Ok(job)),
+        ToClient::Refused { reason } => Ok(Err(reason)),
+        other => bail!("unexpected submit reply: {other:?}"),
+    }
+}
+
+/// One worker of one short job: the standard resumable-session state
+/// machine over a fresh TCP connection, with a timestamp on the first
+/// `Round` broadcast (the scale-up marker). Returns that timestamp
+/// (relative to worker start), or `None` if the job ended before
+/// round 0 reached this worker.
+fn lean_worker(addr: &str, job: u32, id: usize, shape: JobShape) -> Result<Option<Duration>> {
+    let spec = ProblemSpec::square(shape.n, shape.rank, 0.05);
+    let problem = spec.generate(0xBEEF ^ job as u64);
+    let partition = ColumnPartition::even(shape.n, shape.clients);
+    let (a, b) = partition.range(id);
+    let cfg = ClientConfig {
+        id,
+        job,
+        n_frac: (b - a) as f64 / shape.n as f64,
+        data: Box::new(problem.observed.cols_range(a, b)),
+        hyper: FactorHyper::default_for(shape.n, shape.n, shape.rank),
+        polish_sweeps: 0,
+        truth: None,
+        faults: FaultPlan::default(),
+        compression: Compression::None,
+        dp_sigma: 0.0,
+    };
+    let mut session = ClientSession::new(cfg);
+    let kernel = NativeKernel::new();
+    let mut ch = TcpChannel::connect(addr)?;
+    ch.send(&session.hello())?;
+    let started = Instant::now();
+    let mut first_round = None;
+    loop {
+        let bytes = ch.recv_timeout(Duration::from_secs(120))?;
+        if first_round.is_none() {
+            if let Ok(ToClient::Round { .. }) = ToClient::decode(&bytes) {
+                first_round = Some(started.elapsed());
+            }
+        }
+        let step = session.handle(&bytes, &kernel)?;
+        for reply in step.replies {
+            ch.send(&reply)?;
+        }
+        if step.done {
+            return Ok(first_round);
+        }
+        if step.drop_connection {
+            bail!("worker {id} of job {job}: session asked to drop without faults configured");
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn sorted(mut xs: Vec<f64>) -> Vec<f64> {
+    xs.sort_by(|x, y| x.total_cmp(y));
+    xs
+}
+
+/// Print the human summary and write `{host, records}` for the trend
+/// script.
+fn summarize(
+    timings: &[JobTiming],
+    wall: f64,
+    jobs: usize,
+    concurrency: usize,
+    mode: &str,
+    out_path: &str,
+) -> Result<()> {
+    let completed = timings
+        .iter()
+        .filter(|t| matches!(t.outcome, JobOutcome::Completed))
+        .count();
+    let mut refusals: BTreeMap<String, usize> = BTreeMap::new();
+    for t in timings {
+        if let JobOutcome::Refused(reason) = &t.outcome {
+            *refusals.entry(reason.to_string()).or_insert(0) += 1;
+        }
+    }
+    let refused: usize = refusals.values().sum();
+    for (reason, count) in &refusals {
+        println!("loadgen: {count} job(s) refused: {reason}");
+    }
+    let failed: Vec<&JobTiming> = timings
+        .iter()
+        .filter(|t| matches!(t.outcome, JobOutcome::Failed(_)))
+        .collect();
+    for t in failed.iter().take(5) {
+        if let JobOutcome::Failed(why) = &t.outcome {
+            eprintln!("loadgen: job failed: {why}");
+        }
+    }
+    let cold = sorted(
+        timings
+            .iter()
+            .filter(|t| !matches!(t.outcome, JobOutcome::Failed(_)))
+            .map(|t| t.cold_start)
+            .collect(),
+    );
+    let scale = sorted(timings.iter().filter_map(|t| t.scale_up).collect());
+    let e2e = sorted(
+        timings
+            .iter()
+            .filter(|t| matches!(t.outcome, JobOutcome::Completed))
+            .map(|t| t.e2e)
+            .collect(),
+    );
+    let throughput = if wall > 0.0 { completed as f64 / wall } else { 0.0 };
+
+    println!(
+        "loadgen done in {wall:.2}s: {completed} completed, {refused} refused, {} failed \
+         ({throughput:.1} jobs/s)",
+        failed.len()
+    );
+    println!(
+        "  cold start  p50 {:.4}s  p99 {:.4}s",
+        percentile(&cold, 0.50),
+        percentile(&cold, 0.99)
+    );
+    println!(
+        "  scale-up    p50 {:.4}s  p99 {:.4}s",
+        percentile(&scale, 0.50),
+        percentile(&scale, 0.99)
+    );
+    println!(
+        "  end-to-end  p50 {:.4}s  p99 {:.4}s",
+        percentile(&e2e, 0.50),
+        percentile(&e2e, 0.99)
+    );
+
+    let shape = format!("jobs={jobs} conc={concurrency} mode={mode}");
+    let mut records: Vec<Json> = Vec::new();
+    let mut rec = |op: &str, value: f64, unit: &str, better: &str| {
+        let mut obj = BTreeMap::new();
+        obj.insert("op".to_string(), Json::Str(op.to_string()));
+        obj.insert("shape".to_string(), Json::Str(shape.clone()));
+        obj.insert("value".to_string(), Json::Num(value));
+        obj.insert("unit".to_string(), Json::Str(unit.to_string()));
+        obj.insert("better".to_string(), Json::Str(better.to_string()));
+        records.push(Json::Obj(obj));
+    };
+    rec("service_cold_start_p50", percentile(&cold, 0.50), "s", "lower");
+    rec("service_cold_start_p99", percentile(&cold, 0.99), "s", "lower");
+    rec("service_scale_up_p50", percentile(&scale, 0.50), "s", "lower");
+    rec("service_scale_up_p99", percentile(&scale, 0.99), "s", "lower");
+    rec("service_e2e_p50", percentile(&e2e, 0.50), "s", "lower");
+    rec("service_e2e_p99", percentile(&e2e, 0.99), "s", "lower");
+    rec("service_throughput_jobs_per_sec", throughput, "jobs/s", "higher");
+    rec("service_failed_jobs", failed.len() as f64, "jobs", "lower");
+    // quota refusals are the service's to decide; a *well-provisioned*
+    // soak run configures quotas above the offered load, so any refusal
+    // there is an admission bug — the record pins it at zero
+    rec("service_refused_jobs", refused as f64, "jobs", "lower");
+
+    let features: Vec<Json> =
+        simd::detected_features().into_iter().map(|f| Json::Str(f.to_string())).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut host = BTreeMap::new();
+    host.insert("dispatch".to_string(), Json::Str(simd::Dispatch::active().name().to_string()));
+    host.insert("forced_scalar".to_string(), Json::Bool(simd::forced_scalar()));
+    host.insert("features".to_string(), Json::Arr(features));
+    host.insert("cores".to_string(), Json::Num(cores as f64));
+
+    let mut top = BTreeMap::new();
+    top.insert("host".to_string(), Json::Obj(host));
+    top.insert("records".to_string(), Json::Arr(records));
+    let json = Json::Obj(top);
+    std::fs::write(out_path, format!("{json}\n"))
+        .map_err(|e| crate::anyhow!("could not write {out_path}: {e}"))?;
+    println!("machine-readable results written to {out_path}");
+
+    if completed == 0 {
+        bail!("loadgen completed zero jobs — the service is not serving");
+    }
+    Ok(())
+}

@@ -4,5 +4,6 @@ pub mod artifacts_check;
 pub mod distributed;
 pub mod experiment;
 pub mod generate;
+pub mod loadgen;
 pub mod simulate;
 pub mod solve;

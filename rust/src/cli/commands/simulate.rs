@@ -16,7 +16,8 @@ use crate::error::Result;
 
 use crate::cli::args::{apply_threads, usage, OptSpec, ParsedArgs, THREADS_OPT};
 use crate::sim::{
-    FaultSchedule, SimConfig, SimHarness, SimReport, TreeSim, TreeSimConfig, Violation,
+    FaultSchedule, HostileSim, HostileSimConfig, SimConfig, SimHarness, SimReport, TreeSim,
+    TreeSimConfig, Violation,
 };
 use crate::telemetry;
 
@@ -81,6 +82,18 @@ const SPECS: &[OptSpec] = &[
                reconnects) instead of the general one — hammers session resume",
     },
     OptSpec {
+        name: "hostile",
+        takes_value: false,
+        help: "fuzz the multi-tenant job service with adversarial byte streams (garbage, \
+               truncations, dimension lies, quota-busting Submits) — asserts the server \
+               never panics and always drains; --clients sets adversary connections",
+    },
+    OptSpec {
+        name: "frames",
+        takes_value: true,
+        help: "hostile arm: adversarial events injected per seed (default 160)",
+    },
+    OptSpec {
         name: "shrink",
         takes_value: false,
         help: "greedily minimize each failing schedule before printing it",
@@ -119,11 +132,49 @@ pub fn run(argv: &[String]) -> Result<()> {
         telemetry::set_level(telemetry::Level::Off);
     }
     let (first, last) = parse_seed_range(args.get("seeds").unwrap_or("0..64"))?;
+    if args.flag("hostile") {
+        if args.get("topology").is_some() {
+            bail!("--hostile is its own world; it takes no --topology");
+        }
+        if args.flag("shrink") {
+            bail!("--shrink minimizes fault schedules; the hostile arm replays by seed only");
+        }
+        return run_hostile(&args, first, last, verbose);
+    }
     match args.get("topology") {
         None | Some("star") => run_star(&args, first, last, verbose),
         Some("tree") => run_tree(&args, first, last, verbose),
         Some(other) => bail!("--topology must be star or tree, got {other}"),
     }
+}
+
+/// `simulate --hostile` — seeded adversarial byte streams against a
+/// live multi-tenant [`crate::coordinator::JobService`]. Panic-freedom
+/// and drain termination are the invariants; every failure replays
+/// from its seed.
+fn run_hostile(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<()> {
+    let mut cfg = HostileSimConfig::default();
+    if let Some(e) = args.get_usize("clients")? {
+        if e == 0 {
+            bail!("--clients must be positive");
+        }
+        cfg.connections = e;
+    }
+    if let Some(f) = args.get_usize("frames")? {
+        cfg.frames = f;
+    }
+    if let Some(t) = parse_timeout_ms(args)? {
+        cfg.round_timeout = t;
+    }
+    println!(
+        "simulate hostile: {} adversary connection(s), {} event(s)/seed, timeout {}ms, \
+         seeds {first}..{last}",
+        cfg.connections,
+        cfg.frames,
+        cfg.round_timeout.as_millis()
+    );
+    let sim = HostileSim::new(cfg);
+    fuzz_loop(first, last, verbose, false, |seed| sim.check_seed(seed), |_schedule| None)
 }
 
 fn run_star(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<()> {

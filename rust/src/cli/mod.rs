@@ -7,7 +7,9 @@
 //! dcf-pca generate    --n 500 [--rank 25 --sparsity 0.05 --seed 42] --out m.csv
 //!                     [--format shard --shards 8]  # per-client .dcfshard + manifest
 //! dcf-pca serve       --listen 127.0.0.1:7070 --clients 4 [--tree-arity 8]
+//!                     [--service --metrics 127.0.0.1:9090 --max-jobs 64]  # multi-tenant mode
 //! dcf-pca worker      --connect 127.0.0.1:7070 --id 0 [--data fed.shard0.dcfshard]
+//! dcf-pca loadgen     --connect 127.0.0.1:7070 --jobs 200 --concurrency 100 [--rate 50]
 //! dcf-pca relay       --listen :7071 --connect 127.0.0.1:7070 --span-lo 0 --span-len 8
 //! dcf-pca simulate    --seeds 0..512 [--shrink] [--topology tree --tree-arity 8]
 //! dcf-pca experiment  <fig1|fig2|fig3|table1|fig4|comm|sim> [--quick]
@@ -31,6 +33,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "serve" => commands::distributed::run_serve(rest),
         "worker" => commands::distributed::run_worker(rest),
         "relay" => commands::distributed::run_relay_cmd(rest),
+        "loadgen" => commands::loadgen::run(rest),
         "simulate" => commands::simulate::run(rest),
         "experiment" => commands::experiment::run(rest),
         "artifacts-check" => commands::artifacts_check::run(rest),
@@ -52,9 +55,10 @@ dcf-pca — Distributed Robust PCA via consensus factorization
 commands:
   solve            run one RPCA solve (dcf-pca | cf-pca | apgm | alm)
   generate         emit a synthetic RPCA instance as CSV
-  serve            run the DCF-PCA server over TCP
+  serve            run the DCF-PCA server over TCP (--service: multi-tenant job service)
   worker           run one DCF-PCA client over TCP
   relay            run one aggregation relay over TCP (server to its span, client upstream)
+  loadgen          drive a service-mode server with concurrent short jobs, emit BENCH_service.json
   simulate         fuzz the full protocol under seeded fault schedules (virtual time)
   experiment       regenerate a paper table/figure
                    (fig1 fig2 fig3 table1 fig4 comm ablations theory sim)

@@ -1,0 +1,318 @@
+//! Admission control for the multi-tenant job service.
+//!
+//! The service layer consults [`Admission`] before registering a
+//! wire-submitted job with the [`RoundEngine`](super::engine::RoundEngine):
+//! a `Submit` either yields a server-assigned [`JobId`] or a typed
+//! [`RefuseReason`] the submitter can act on (`retryable()` separates
+//! transient pressure from permanent rejection). Quotas bound the three
+//! resources a hostile or buggy tenant could otherwise exhaust —
+//! concurrent jobs (scheduler state), fleet size E (endpoint fan-in) and
+//! the m·p factor footprint (bytes per broadcast) — plus a global
+//! concurrent-job ceiling shared by all tenants.
+//!
+//! `Admission` is deliberately engine-agnostic bookkeeping: it never
+//! touches sockets or jobs itself, so its state machine is exhaustively
+//! property-testable (see the module tests — refusals must leave zero
+//! residue, draining admits nothing, accepted counts never exceed any
+//! quota).
+
+use std::collections::BTreeMap;
+
+use super::engine::JobId;
+use super::protocol::RefuseReason;
+
+/// Resource ceilings for admission. All quotas are inclusive upper
+/// bounds ("at most this many").
+#[derive(Clone, Copy, Debug)]
+pub struct Quotas {
+    /// concurrent jobs a single tenant may hold
+    pub tenant_jobs: usize,
+    /// clients (E) a single job may request
+    pub fleet_size: usize,
+    /// m·p entries of one job's factor U (bounds every per-round
+    /// broadcast and the engine's resident state for the job)
+    pub footprint: u64,
+    /// concurrent jobs across all tenants
+    pub server_jobs: usize,
+}
+
+impl Default for Quotas {
+    fn default() -> Self {
+        Quotas {
+            tenant_jobs: 4,
+            fleet_size: 256,
+            footprint: 1 << 24,
+            server_jobs: 64,
+        }
+    }
+}
+
+/// Shape of one submitted job, straight off the `Submit` wire message.
+#[derive(Clone, Copy, Debug)]
+pub struct JobSpec {
+    pub tenant: u32,
+    pub clients: u32,
+    pub rounds: u32,
+    pub m: u64,
+    pub rank: u32,
+}
+
+/// The admission state machine: who holds which job, against which
+/// quota. Refusals mutate nothing.
+#[derive(Debug, Default)]
+pub struct Admission {
+    quotas: Quotas,
+    draining: bool,
+    /// tenant → number of admitted-and-not-yet-released jobs
+    tenants: BTreeMap<u32, usize>,
+    /// admitted job → owning tenant (for release and accounting)
+    jobs: BTreeMap<JobId, u32>,
+    /// next server-assigned job id (skips ids still in flight)
+    next_job: JobId,
+    /// lifetime counters for the metrics endpoint
+    pub admitted_total: u64,
+    pub refused_total: u64,
+}
+
+impl Admission {
+    pub fn new(quotas: Quotas) -> Self {
+        Admission {
+            quotas,
+            draining: false,
+            tenants: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            next_job: 1,
+            admitted_total: 0,
+            refused_total: 0,
+        }
+    }
+
+    pub fn quotas(&self) -> &Quotas {
+        &self.quotas
+    }
+
+    /// Stop admitting; running jobs are unaffected (the engine drains
+    /// them at their next round boundary).
+    pub fn drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Jobs admitted and not yet released.
+    pub fn active_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs `tenant` currently holds.
+    pub fn tenant_jobs(&self, tenant: u32) -> usize {
+        self.tenants.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Owning tenant of an admitted job.
+    pub fn tenant_of(&self, job: JobId) -> Option<u32> {
+        self.jobs.get(&job).copied()
+    }
+
+    /// Admit `spec` or say exactly why not. On success the returned
+    /// [`JobId`] is server-assigned (submitters never pick ids — the id
+    /// space is the service's, and collisions across tenants must be
+    /// impossible). A refusal leaves every counter untouched.
+    pub fn try_admit(&mut self, spec: JobSpec) -> Result<JobId, RefuseReason> {
+        let verdict = self.check(spec);
+        match verdict {
+            Ok(()) => {
+                // skip ids still held by running (or done-but-unretired)
+                // jobs; u32 wraparound after 4 billion submissions is
+                // handled by the same probe
+                while self.jobs.contains_key(&self.next_job) || self.next_job == 0 {
+                    self.next_job = self.next_job.wrapping_add(1);
+                }
+                let id = self.next_job;
+                self.next_job = self.next_job.wrapping_add(1);
+                self.jobs.insert(id, spec.tenant);
+                *self.tenants.entry(spec.tenant).or_insert(0) += 1;
+                self.admitted_total += 1;
+                Ok(id)
+            }
+            Err(reason) => {
+                self.refused_total += 1;
+                Err(reason)
+            }
+        }
+    }
+
+    /// Pure quota check, no mutation.
+    fn check(&self, spec: JobSpec) -> Result<(), RefuseReason> {
+        if self.draining {
+            return Err(RefuseReason::Draining);
+        }
+        if spec.clients == 0 || spec.rounds == 0 || spec.m == 0 || spec.rank == 0 {
+            return Err(RefuseReason::BadParams);
+        }
+        if spec.clients as usize > self.quotas.fleet_size {
+            return Err(RefuseReason::FleetSize { limit: self.quotas.fleet_size as u64 });
+        }
+        match spec.m.checked_mul(spec.rank as u64) {
+            Some(fp) if fp <= self.quotas.footprint => {}
+            _ => return Err(RefuseReason::Footprint { limit: self.quotas.footprint }),
+        }
+        if self.jobs.len() >= self.quotas.server_jobs {
+            return Err(RefuseReason::ServerFull { limit: self.quotas.server_jobs as u64 });
+        }
+        if self.tenant_jobs(spec.tenant) >= self.quotas.tenant_jobs {
+            return Err(RefuseReason::TenantJobs { limit: self.quotas.tenant_jobs as u64 });
+        }
+        Ok(())
+    }
+
+    /// Return a finished (or failed) job's slot to its tenant. Idempotent:
+    /// releasing an unknown id is a no-op returning `None`.
+    pub fn release(&mut self, job: JobId) -> Option<u32> {
+        let tenant = self.jobs.remove(&job)?;
+        match self.tenants.get_mut(&tenant) {
+            Some(n) if *n > 1 => *n -= 1,
+            _ => {
+                self.tenants.remove(&tenant);
+            }
+        }
+        Some(tenant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn spec(tenant: u32) -> JobSpec {
+        JobSpec { tenant, clients: 2, rounds: 4, m: 64, rank: 4 }
+    }
+
+    #[test]
+    fn admits_up_to_the_tenant_quota_then_refuses_with_the_limit() {
+        let quotas = Quotas { tenant_jobs: 3, ..Quotas::default() };
+        let mut adm = Admission::new(quotas);
+        let ids: Vec<JobId> =
+            (0..3).map(|_| adm.try_admit(spec(7)).expect("under quota")).collect();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.windows(2).all(|w| w[0] != w[1]), "server-assigned ids are distinct");
+        match adm.try_admit(spec(7)) {
+            Err(RefuseReason::TenantJobs { limit: 3 }) => {}
+            other => panic!("expected TenantJobs refusal, got {other:?}"),
+        }
+        // another tenant is unaffected by tenant 7's saturation
+        assert!(adm.try_admit(spec(8)).is_ok());
+        // releasing one slot re-opens the quota
+        assert_eq!(adm.release(ids[0]), Some(7));
+        assert!(adm.try_admit(spec(7)).is_ok());
+    }
+
+    #[test]
+    fn refusals_leave_no_residue() {
+        let quotas = Quotas { tenant_jobs: 1, server_jobs: 2, ..Quotas::default() };
+        let mut adm = Admission::new(quotas);
+        let id = adm.try_admit(spec(1)).expect("first slot");
+        let (active, t1, admitted) = (adm.active_jobs(), adm.tenant_jobs(1), adm.admitted_total);
+        for bad in [
+            spec(1),                                         // tenant quota
+            JobSpec { clients: 0, ..spec(2) },               // bad params
+            JobSpec { clients: 100_000, ..spec(2) },         // fleet size
+            JobSpec { m: u64::MAX, rank: 2, ..spec(2) },     // footprint overflow
+        ] {
+            assert!(adm.try_admit(bad).is_err());
+            assert_eq!(adm.active_jobs(), active, "a refusal must not leak a job slot");
+            assert_eq!(adm.tenant_jobs(1), t1);
+            assert_eq!(adm.tenant_jobs(2), 0, "the refused tenant holds nothing");
+            assert_eq!(adm.admitted_total, admitted);
+        }
+        assert_eq!(adm.refused_total, 4);
+        assert_eq!(adm.tenant_of(id), Some(1));
+    }
+
+    #[test]
+    fn draining_admits_nothing_and_is_not_retryable() {
+        let mut adm = Admission::new(Quotas::default());
+        assert!(adm.try_admit(spec(1)).is_ok());
+        adm.drain();
+        let reason = adm.try_admit(spec(2)).expect_err("draining refuses everything");
+        assert!(matches!(reason, RefuseReason::Draining));
+        assert!(!reason.retryable(), "a draining server will not come back");
+        // release still works so in-flight jobs can complete the drain
+        assert_eq!(adm.active_jobs(), 1);
+    }
+
+    #[test]
+    fn oversized_footprint_and_fleet_are_refused_with_their_limits() {
+        let quotas = Quotas { fleet_size: 8, footprint: 1 << 10, ..Quotas::default() };
+        let mut adm = Admission::new(quotas);
+        match adm.try_admit(JobSpec { clients: 9, ..spec(1) }) {
+            Err(RefuseReason::FleetSize { limit: 8 }) => {}
+            other => panic!("expected FleetSize refusal, got {other:?}"),
+        }
+        match adm.try_admit(JobSpec { m: 1 << 9, rank: 4, ..spec(1) }) {
+            Err(RefuseReason::Footprint { limit }) => assert_eq!(limit, 1 << 10),
+            other => panic!("expected Footprint refusal, got {other:?}"),
+        }
+        assert!(adm.try_admit(JobSpec { m: 1 << 8, rank: 4, ..spec(1) }).is_ok());
+    }
+
+    /// Randomized state-machine run against a reference model: after any
+    /// interleaving of admits and releases, the quota invariants hold
+    /// and the bookkeeping matches the model exactly.
+    #[test]
+    fn randomized_admit_release_never_violates_quotas() {
+        let quotas =
+            Quotas { tenant_jobs: 3, server_jobs: 8, fleet_size: 16, footprint: 1 << 12 };
+        for seed in 0..64u64 {
+            let mut rng = Pcg64::new(0xAD31_5510 ^ seed);
+            let mut adm = Admission::new(quotas);
+            let mut model: Vec<(JobId, u32)> = Vec::new(); // live (job, tenant)
+            for _ in 0..256 {
+                let tenant = (rng.next_u64() % 5) as u32;
+                if rng.next_u64() % 3 == 0 && !model.is_empty() {
+                    let idx = (rng.next_u64() as usize) % model.len();
+                    let (job, owner) = model.swap_remove(idx);
+                    assert_eq!(adm.release(job), Some(owner));
+                } else {
+                    let held = model.iter().filter(|&&(_, t)| t == tenant).count();
+                    let res = adm.try_admit(spec(tenant));
+                    if model.len() >= quotas.server_jobs {
+                        assert!(
+                            matches!(res, Err(RefuseReason::ServerFull { .. })),
+                            "seed {seed}: full server must refuse"
+                        );
+                    } else if held >= quotas.tenant_jobs {
+                        assert!(
+                            matches!(res, Err(RefuseReason::TenantJobs { .. })),
+                            "seed {seed}: saturated tenant must be refused"
+                        );
+                    } else {
+                        let id = res.expect("under both quotas the admit must succeed");
+                        assert!(
+                            model.iter().all(|&(j, _)| j != id),
+                            "seed {seed}: id {id} is already live"
+                        );
+                        model.push((id, tenant));
+                    }
+                }
+                // global invariants, every step
+                assert!(adm.active_jobs() <= quotas.server_jobs);
+                assert_eq!(adm.active_jobs(), model.len());
+                for t in 0..5u32 {
+                    let held = model.iter().filter(|&&(_, mt)| mt == t).count();
+                    assert_eq!(adm.tenant_jobs(t), held);
+                    assert!(held <= quotas.tenant_jobs);
+                }
+            }
+            // releasing everything returns the machine to empty
+            for (job, owner) in model.drain(..) {
+                assert_eq!(adm.release(job), Some(owner));
+            }
+            assert_eq!(adm.active_jobs(), 0);
+            assert_eq!(adm.release(12345), None, "double release is a no-op");
+        }
+    }
+}

@@ -213,6 +213,12 @@ impl ClientSession {
             ToClient::Round { round, k_local, eta, u } => self.on_round(round, k_local, eta, u, kernel),
             ToClient::Finish { reveal, final_u } => self.on_finish(reveal, final_u),
             ToClient::Shutdown => Ok(SessionStep { done: true, ..Default::default() }),
+            ToClient::Accepted { .. } | ToClient::Refused { .. } => {
+                // admission replies belong on submit connections; a
+                // worker session receiving one is talking to a confused
+                // (or hostile) coordinator
+                bail!("client {}: control-plane reply on a worker connection", self.cfg.id)
+            }
         }
     }
 

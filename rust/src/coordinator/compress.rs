@@ -14,12 +14,49 @@
 //! Both directions (broadcast and update) use the same codec; it is part
 //! of the run configuration, not negotiated.
 
+use std::fmt;
+
 use crate::bail;
 use crate::error::Result;
 use crate::linalg::simd::{self, Dispatch};
 use crate::linalg::Mat;
 
-use super::transport::framing::{put_f64, put_u32, put_u64, Reader};
+use super::transport::framing::{put_f64, put_u32, put_u64, Reader, MAX_FRAME};
+
+/// Why a compressed-matrix header was rejected. Every variant fires
+/// *before* any allocation sized from the header: a hostile frame can
+/// name whatever dims it likes, but it cannot make the decoder reserve
+/// memory it has not paid for in actual payload bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// tag byte names no known codec
+    UnknownTag(u8),
+    /// `rows·cols` overflows or disagrees with the `len` guard field
+    DimsMismatch { rows: u32, cols: u32, len: u64 },
+    /// payload would exceed the element cap or [`MAX_FRAME`]
+    TooLarge { len: u64 },
+    /// header promises more payload bytes than the frame holds
+    Truncated { need: u64, have: u64 },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::UnknownTag(t) => write!(f, "unknown compression tag {t}"),
+            DecodeError::DimsMismatch { rows, cols, len } => {
+                write!(f, "compressed matrix frame corrupt: {rows}x{cols} but payload {len}")
+            }
+            DecodeError::TooLarge { len } => {
+                write!(f, "compressed matrix frame too large: {len} elements")
+            }
+            DecodeError::Truncated { need, have } => {
+                write!(f, "compressed matrix frame truncated: need {need} bytes, have {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Stack-buffer size for the chunked f64↔f32 conversions (4 KiB of f64 —
 /// big enough to amortize dispatch, small enough to stay L1-resident).
@@ -117,26 +154,55 @@ pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
 }
 
 /// Decode a matrix written by [`put_mat_compressed`].
+///
+/// The header is fully validated — codec tag known, `rows·cols`
+/// consistent with `len` under checked arithmetic, payload bounded by
+/// the element cap / [`MAX_FRAME`], and every promised payload byte
+/// actually present in the frame — before the `rows×cols` buffer (or
+/// the per-column scale table) is allocated. Violations come back as
+/// [`DecodeError`]s.
 pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
     let tag = r.u8()?;
-    let rows = r.u32()? as usize;
-    let cols = r.u32()? as usize;
-    let len = r.u64()? as usize;
-    if len != rows * cols {
-        bail!("compressed matrix frame corrupt: {rows}x{cols} but payload {len}");
+    let codec = match tag {
+        TAG_NONE => Compression::None,
+        TAG_F32 => Compression::F32,
+        TAG_INT8 => Compression::Int8,
+        t => return Err(DecodeError::UnknownTag(t).into()),
+    };
+    let rows32 = r.u32()?;
+    let cols32 = r.u32()?;
+    let len64 = r.u64()?;
+    let mismatch = DecodeError::DimsMismatch { rows: rows32, cols: cols32, len: len64 };
+    match (rows32 as u64).checked_mul(cols32 as u64) {
+        Some(prod) if prod == len64 => {}
+        _ => return Err(mismatch.into()),
     }
-    if len > (1usize << 27) {
-        bail!("compressed matrix frame too large: {len}");
+    // same element cap as `Reader::mat` (1 GiB of f64s)
+    if len64 > (1u64 << 27) {
+        return Err(DecodeError::TooLarge { len: len64 }.into());
+    }
+    let (rows, cols, len) = (rows32 as usize, cols32 as usize, len64 as usize);
+    // payload in u64: len ≤ 2^27 and cols < 2^32, so neither term wraps
+    let payload = match codec {
+        Compression::None => 8 * len64,
+        Compression::F32 => 4 * len64,
+        Compression::Int8 => len64 + 8 * cols32 as u64,
+    };
+    if payload > MAX_FRAME as u64 {
+        return Err(DecodeError::TooLarge { len: len64 }.into());
+    }
+    if (r.remaining() as u64) < payload {
+        return Err(DecodeError::Truncated { need: payload, have: r.remaining() as u64 }.into());
     }
     let mut m = Mat::zeros(rows, cols);
-    match tag {
-        TAG_NONE => {
+    match codec {
+        Compression::None => {
             for i in 0..len {
                 let v = r.f64()?;
                 m.as_mut_slice()[i] = v;
             }
         }
-        TAG_F32 => {
+        Compression::F32 => {
             // bulk-borrow the payload, widen in chunks through the SIMD
             // layer (exact: every f32 is representable as f64)
             let raw = r.bytes(len * 4)?;
@@ -152,7 +218,7 @@ pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
                 simd::cvt_to_f64(d, out, t);
             }
         }
-        TAG_INT8 => {
+        Compression::Int8 => {
             let mut scales = Vec::with_capacity(cols);
             for _ in 0..cols {
                 scales.push(r.f64()?);
@@ -164,7 +230,6 @@ pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
                 }
             }
         }
-        t => bail!("unknown compression tag {t}"),
     }
     Ok(m)
 }
@@ -249,6 +314,87 @@ mod tests {
             buf.truncate(buf.len() - 2);
             let mut r = Reader::new(&buf);
             assert!(read_mat_compressed(&mut r).is_err(), "{codec:?}");
+        }
+    }
+
+    /// Hand-build a header (tag, rows, cols, len) + payload bytes.
+    fn frame(tag: u8, rows: u32, cols: u32, len: u64, payload: &[u8]) -> Vec<u8> {
+        let mut buf = vec![tag];
+        put_u32(&mut buf, rows);
+        put_u32(&mut buf, cols);
+        put_u64(&mut buf, len);
+        buf.extend_from_slice(payload);
+        buf
+    }
+
+    fn decode_err(buf: &[u8]) -> String {
+        let mut r = Reader::new(buf);
+        format!("{}", read_mat_compressed(&mut r).unwrap_err())
+    }
+
+    #[test]
+    fn unknown_tag_rejected_before_dims() {
+        // dims are absurd, but the tag check fires first — no allocation
+        let buf = frame(9, u32::MAX, u32::MAX, u64::MAX, &[]);
+        assert!(decode_err(&buf).contains("unknown compression tag 9"));
+    }
+
+    #[test]
+    fn dims_len_mismatch_rejected() {
+        let buf = frame(TAG_NONE, 2, 2, 5, &[0u8; 40]);
+        assert!(decode_err(&buf).contains("corrupt"));
+        // rows·cols overflowing u64 is a mismatch, not a wrapped match
+        let buf = frame(TAG_NONE, u32::MAX, u32::MAX, (u32::MAX as u64).wrapping_mul(2), &[]);
+        assert!(decode_err(&buf).contains("corrupt"));
+    }
+
+    #[test]
+    fn huge_claim_rejected_without_allocation() {
+        // a consistent header demanding 2^31 elements: caught by the
+        // element cap before `Mat::zeros` ever runs
+        let buf = frame(TAG_NONE, 1 << 16, 1 << 15, 1u64 << 31, &[]);
+        assert!(decode_err(&buf).contains("too large"));
+    }
+
+    #[test]
+    fn zero_rows_huge_cols_rejected() {
+        // rows=0 makes any cols satisfy rows·cols == len == 0, but the
+        // Int8 scale table is sized by cols alone — the payload check
+        // must refuse before reserving 8·cols bytes
+        let buf = frame(TAG_INT8, 0, u32::MAX, 0, &[]);
+        assert!(decode_err(&buf).contains("truncated"));
+    }
+
+    #[test]
+    fn promised_payload_must_be_present() {
+        for (tag, codec) in
+            [(TAG_NONE, Compression::None), (TAG_F32, Compression::F32), (TAG_INT8, Compression::Int8)]
+        {
+            let need = codec.payload_bytes(4, 3);
+            let buf = frame(tag, 4, 3, 12, &vec![0u8; need - 1]);
+            assert!(decode_err(&buf).contains("truncated"), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_headers_never_panic() {
+        // property: arbitrary headers with small payloads either decode
+        // or return a typed error — never panic, never allocate from
+        // unvalidated dims (a runaway reserve would abort the test run)
+        let mut rng = Pcg64::new(0xC0FFEE);
+        for _ in 0..20_000 {
+            let tag = (rng.next_u64() % 5) as u8;
+            let rows = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            let cols = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            let len = match rng.next_u64() % 3 {
+                0 => rng.next_u64(),
+                1 => (rows as u64).wrapping_mul(cols as u64),
+                _ => (rng.next_u64() % 64) * (rng.next_u64() % 64),
+            };
+            let payload = vec![0xA5u8; (rng.next_u64() % 256) as usize];
+            let buf = frame(tag, rows, cols, len, &payload);
+            let mut r = Reader::new(&buf);
+            let _ = read_mat_compressed(&mut r);
         }
     }
 

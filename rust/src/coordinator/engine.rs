@@ -98,6 +98,19 @@ pub enum Action {
     Upstream { job: JobId, bytes: Vec<u8> },
 }
 
+/// Live counters for one registered job, snapshotted by
+/// [`RoundEngine::progress_of`] for the service metrics endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobProgress {
+    /// round currently collecting (or about to start)
+    pub round: usize,
+    /// rounds already closed
+    pub rounds_closed: usize,
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+    pub members_alive: usize,
+}
+
 #[derive(Clone, Debug)]
 struct Member {
     ep: EndpointId,
@@ -204,6 +217,9 @@ struct Job {
     phase: Phase,
     /// `Some` iff `cfg.mode` is [`JobMode::Relay`]
     relay: Option<RelayState>,
+    /// graceful drain: finish at the next round boundary instead of
+    /// running to the configured horizon
+    draining: bool,
 }
 
 impl Job {
@@ -254,6 +270,7 @@ impl Job {
             result: None,
             phase: Phase::Handshake { deadline: None },
             relay,
+            draining: false,
         }
     }
 
@@ -305,7 +322,17 @@ impl Job {
     /// Queue one message to a member, stamping the session's downstream
     /// sequence number and metering the bytes.
     fn send_to(&mut self, client: usize, mut bytes: Vec<u8>, actions: &mut Vec<Action>) {
-        let m = self.members.get_mut(&client).expect("send_to: unknown member");
+        let Some(m) = self.members.get_mut(&client) else {
+            // an unknown recipient is a state desync on THIS job; in a
+            // multi-tenant engine it must never take the process (and
+            // every other tenant) down — drop the send and carry on
+            crate::log_warn!(
+                "engine",
+                "job {}: dropping send to unknown member {client}",
+                self.id
+            );
+            return;
+        };
         m.down_seq += 1;
         super::protocol::restamp_seq(&mut bytes, m.down_seq);
         let ep = m.ep;
@@ -335,7 +362,9 @@ impl Job {
     fn start_round(&mut self, now: Duration, actions: &mut Vec<Action>) {
         debug_assert!(!self.is_relay(), "relay rounds are mirrored from upstream");
         let t = self.round;
-        if t >= self.cfg.rounds {
+        if self.draining || t >= self.cfg.rounds {
+            // a draining job takes the normal finish/reveal exit at the
+            // first round boundary after the drain order
             self.start_finish(now, actions);
             return;
         }
@@ -376,7 +405,7 @@ impl Job {
             // a member inside its grace window stays selected (and
             // pending) so a resume mid-round rejoins this round, but
             // there is no link to write to until it comes back
-            if self.members[&c].connected {
+            if self.members.get(&c).is_some_and(|m| m.connected) {
                 self.send_to(c, encoded.clone(), actions);
             }
             pending.insert(c);
@@ -577,7 +606,7 @@ impl Job {
         let encoded = msg.encode_with(self.id, self.cfg.compression);
         let mut pending = BTreeSet::new();
         for &c in &active {
-            if self.members[&c].connected {
+            if self.members.get(&c).is_some_and(|m| m.connected) {
                 self.send_to(c, encoded.clone(), actions);
             }
             pending.insert(c);
@@ -879,7 +908,18 @@ impl Job {
                 }
             };
             let new_token = self.issue_token();
-            let m = self.members.get_mut(&client).expect("member vanished");
+            let Some(m) = self.members.get_mut(&client) else {
+                // the member table lost this entry between the probe
+                // above and here: a desync this job absorbs by refusing
+                // the endpoint instead of panicking the whole service
+                crate::log_warn!(
+                    "engine",
+                    "job {}: member {client} vanished during resume; refusing endpoint {ep}",
+                    self.id
+                );
+                actions.push(Action::Close { ep });
+                return HelloOutcome::Reject;
+            };
             crate::log_warn!(
                 "engine",
                 "job {}: client {client} resumed an expired session — rejoining at round {active_from}",
@@ -900,7 +940,15 @@ impl Job {
         }
         // live resume: supersede whatever endpoint the session was on
         // (the old link may look open to the reactor — half-open TCP)
-        let m = self.members.get_mut(&client).expect("member vanished");
+        let Some(m) = self.members.get_mut(&client) else {
+            crate::log_warn!(
+                "engine",
+                "job {}: member {client} vanished during resume; refusing endpoint {ep}",
+                self.id
+            );
+            actions.push(Action::Close { ep });
+            return HelloOutcome::Reject;
+        };
         let unbind = if m.connected { Some(m.ep) } else { None };
         if let Some(old) = unbind {
             actions.push(Action::Close { ep: old });
@@ -1029,9 +1077,14 @@ impl Job {
             return;
         }
         let [grad_sum, lip_max, err_num_sum, secs_max, secs_sum] = scalars;
-        let (m_span, m_cols) = {
-            let member = &self.members[&client];
-            (member.span, member.cols)
+        let Some((m_span, m_cols)) = self.members.get(&client).map(|m| (m.span, m.cols)) else {
+            // pending named a client the member table no longer holds —
+            // a desync that fails this job, never the whole engine
+            self.fail(
+                format!("round {current}: update from unregistered client {client}"),
+                actions,
+            );
+            return;
         };
         let part = if m_span == 1 {
             // leaves send raw factors (they don't know the aggregation
@@ -1113,9 +1166,14 @@ impl Job {
             ToServer::Withhold { .. } => self.withheld.push(client),
             _ => unreachable!("on_final only receives Reveal/Withhold"),
         }
+        // the member can be gone if its finish reply raced a departure;
+        // the goodbye is then moot (send_to tolerates the gap too)
+        let ep = self.members.get(&client).map(|m| m.ep);
         let shutdown = ToClient::Shutdown.encode_with(self.id, super::compress::Compression::None);
         self.send_to(client, shutdown, actions);
-        actions.push(Action::Close { ep: self.members[&client].ep });
+        if let Some(ep) = ep {
+            actions.push(Action::Close { ep });
+        }
         if matches!(&self.phase, Phase::Finishing { pending, .. } if pending.is_empty()) {
             self.finish(actions);
         }
@@ -1290,11 +1348,16 @@ impl Job {
                         pending.clear();
                         for id in missing {
                             self.withheld.push(id);
-                            if self.members.get(&id).is_some_and(|m| m.connected) {
+                            let ep = self
+                                .members
+                                .get(&id)
+                                .filter(|m| m.connected)
+                                .map(|m| m.ep);
+                            if let Some(ep) = ep {
                                 let bye = ToClient::Shutdown
                                     .encode_with(self.id, super::compress::Compression::None);
                                 self.send_to(id, bye, actions);
-                                actions.push(Action::Close { ep: self.members[&id].ep });
+                                actions.push(Action::Close { ep });
                             }
                         }
                         self.finish(actions);
@@ -1346,12 +1409,80 @@ impl RoundEngine {
 
     /// Register a solve job. `expected_clients` founding members must
     /// `Hello` before round 0 starts; later Hellos join elastically.
+    /// Panics on bad input — pre-configured single-job drivers only;
+    /// anything wire-driven must use [`try_add_job`](Self::try_add_job).
     pub fn add_job(&mut self, id: JobId, cfg: ServerConfig, expected_clients: usize) {
-        assert!(expected_clients > 0, "a job needs at least one client");
-        assert!(
-            self.jobs.insert(id, Job::new(id, cfg, expected_clients)).is_none(),
-            "job {id} already registered"
-        );
+        self.try_add_job(id, cfg, expected_clients).expect("add_job");
+    }
+
+    /// Non-panicking job registration for wire-driven submission: a
+    /// zero-client fleet or a duplicate id is the submitter's error,
+    /// never grounds to abort a process other tenants share.
+    pub fn try_add_job(
+        &mut self,
+        id: JobId,
+        cfg: ServerConfig,
+        expected_clients: usize,
+    ) -> Result<()> {
+        if expected_clients == 0 {
+            crate::bail!("job {id}: needs at least one client");
+        }
+        if self.jobs.contains_key(&id) {
+            crate::bail!("job {id} already registered");
+        }
+        self.jobs.insert(id, Job::new(id, cfg, expected_clients));
+        Ok(())
+    }
+
+    /// Forget a finished job, releasing its state and endpoint bindings.
+    /// Returns false (and does nothing) while the job is still running —
+    /// a long-running service retires jobs after collecting their
+    /// results so the jobs map stays bounded by *concurrent* jobs, not
+    /// by every job ever served.
+    pub fn retire_job(&mut self, id: JobId) -> bool {
+        if !self.jobs.get(&id).is_some_and(Job::done) {
+            return false;
+        }
+        self.jobs.remove(&id);
+        self.bindings.retain(|_, &mut (job, _)| job != id);
+        true
+    }
+
+    /// Order one job to stop at its next round boundary: the in-flight
+    /// round completes, then the normal finish/reveal phase runs as if
+    /// the horizon had been reached. A job still gathering founders has
+    /// no round to complete and fails immediately.
+    pub fn drain_job(&mut self, id: JobId) -> Vec<Action> {
+        let mut actions = Vec::new();
+        if let Some(job) = self.jobs.get_mut(&id) {
+            job.draining = true;
+            if !job.done() && matches!(job.phase, Phase::Handshake { .. }) {
+                job.fail("drained before handshake completed".to_string(), &mut actions);
+            }
+        }
+        actions
+    }
+
+    /// Drain every registered job (SIGTERM / `Drain` command path).
+    pub fn drain_all(&mut self) -> Vec<Action> {
+        let ids: Vec<JobId> = self.jobs.keys().copied().collect();
+        ids.into_iter().flat_map(|id| self.drain_job(id)).collect()
+    }
+
+    /// Registered jobs (running or finished-but-not-retired).
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Live per-job counters for the metrics endpoint.
+    pub fn progress_of(&self, job: JobId) -> Option<JobProgress> {
+        self.jobs.get(&job).map(|j| JobProgress {
+            round: j.round,
+            rounds_closed: j.rounds.len(),
+            bytes_down: j.bytes_down,
+            bytes_up: j.bytes_up,
+            members_alive: j.members.values().filter(|m| m.alive).count(),
+        })
     }
 
     /// A new endpoint appeared. Nothing happens until it says `Hello`.
@@ -1502,6 +1633,18 @@ impl RoundEngine {
                 }
                 job.on_final(client, reply, &mut actions);
             }
+            ToServer::Submit { .. } | ToServer::Drain => {
+                // control-plane frames are the service layer's to
+                // intercept before the engine; one arriving on a bound
+                // data connection is a protocol violation — shed that
+                // endpoint, never the whole job
+                crate::log_warn!(
+                    "engine",
+                    "control frame on data connection (endpoint {ep}); closing it"
+                );
+                actions.push(Action::Close { ep });
+                actions.extend(self.on_disconnect(ep, now));
+            }
         }
         actions
     }
@@ -1581,6 +1724,17 @@ impl RoundEngine {
         }
         actions
     }
+
+    /// Test-only desync injection: delete a member record while leaving
+    /// its endpoint binding and any pending-round slot in place — the
+    /// exact inconsistency the defensive member lookups must absorb
+    /// without taking the process down.
+    #[cfg(test)]
+    pub(crate) fn test_remove_member(&mut self, job: JobId, client: usize) {
+        if let Some(j) = self.jobs.get_mut(&job) {
+            j.members.remove(&client);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1591,7 +1745,7 @@ mod tests {
     use crate::coordinator::protocol::ToServer;
     use crate::rng::Pcg64;
 
-    fn update_msg(client: u32, round: u32, m: usize, rank: usize) -> Vec<u8> {
+    fn update_for(job: JobId, client: u32, round: u32, m: usize, rank: usize) -> Vec<u8> {
         let mut rng = Pcg64::new(client as u64 + 1);
         ToServer::Update {
             client,
@@ -1605,7 +1759,26 @@ mod tests {
             secs_max: 0.0,
             secs_sum: 0.0,
         }
-        .encode_with(0, Compression::None)
+        .encode_with(job, Compression::None)
+    }
+
+    fn update_msg(client: u32, round: u32, m: usize, rank: usize) -> Vec<u8> {
+        update_for(0, client, round, m, rank)
+    }
+
+    fn hello(job: JobId, client: u32) -> Vec<u8> {
+        ToServer::Hello { client, cols: 4, token: 0, span: 1 }
+            .encode_with(job, Compression::None)
+    }
+
+    /// Register two founding members for `job` on the given endpoints;
+    /// the second Hello completes the handshake and starts round 0.
+    fn handshake(engine: &mut RoundEngine, job: JobId, eps: [EndpointId; 2]) {
+        let t = Duration::from_millis(1);
+        for (i, &ep) in eps.iter().enumerate() {
+            engine.handle_message(ep, &hello(job, i as u32), t);
+        }
+        assert_eq!(engine.phase_of(job), Some("collecting"));
     }
 
     /// Allocation counts for one steady-state (post-handshake,
@@ -1653,5 +1826,156 @@ mod tests {
             "handle_message allocation count must not scale with the matrix"
         );
         assert!(update_small <= 8, "steady-state update made {update_small} allocations");
+    }
+
+    /// The historical `expect("send_to: unknown member")` /
+    /// `expect("member vanished")` aborts: a member record disappearing
+    /// while the round still lists it as pending must fail *that job*
+    /// (typed error, JobDone) and leave every other tenant running.
+    #[test]
+    fn desynced_update_fails_one_job_and_spares_the_rest() {
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, ServerConfig::new(8, 2, 4, 1), 2);
+        engine.add_job(1, ServerConfig::new(8, 2, 4, 1), 2);
+        handshake(&mut engine, 0, [0, 1]);
+        handshake(&mut engine, 1, [2, 3]);
+
+        engine.test_remove_member(0, 0);
+        let actions = engine.handle_message(0, &update_for(0, 0, 0, 8, 2), Duration::from_millis(2));
+        assert!(
+            actions.iter().any(|a| matches!(a, Action::JobDone { job: 0 })),
+            "the desynced job must terminate, not panic"
+        );
+        let result = engine.take_result(0).expect("job 0 reported done");
+        assert!(result.is_err(), "a state desync is an error, not a silent success");
+
+        // job 1 is untouched: its round 0 closes and round 1 starts
+        engine.handle_message(2, &update_for(1, 0, 0, 8, 2), Duration::from_millis(3));
+        let actions = engine.handle_message(3, &update_for(1, 1, 0, 8, 2), Duration::from_millis(3));
+        assert_eq!(engine.round_of(1), Some(1), "the healthy tenant keeps making progress");
+        for a in &actions {
+            if let Action::Send { bytes, .. } = a {
+                let (job, _, msg) = ToClient::decode_full(bytes).expect("valid broadcast");
+                assert_eq!(job, 1);
+                assert!(matches!(msg, ToClient::Round { round: 1, .. }));
+            }
+        }
+    }
+
+    /// A drain ordered mid-round lets the in-flight round complete, then
+    /// routes the next boundary into the normal finish/reveal exit: the
+    /// outcome is `Ok` with only the rounds that actually ran.
+    #[test]
+    fn drain_finishes_at_the_next_round_boundary() {
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, ServerConfig::new(8, 2, 4, 1), 2);
+        handshake(&mut engine, 0, [0, 1]);
+
+        assert!(engine.drain_job(0).is_empty(), "a mid-round drain acts at the boundary");
+        assert_eq!(engine.phase_of(0), Some("collecting"), "the in-flight round keeps going");
+
+        let t = Duration::from_millis(2);
+        engine.handle_message(0, &update_for(0, 0, 0, 8, 2), t);
+        let actions = engine.handle_message(1, &update_for(0, 1, 0, 8, 2), t);
+        assert_eq!(engine.phase_of(0), Some("finishing"));
+        let mut finish_frames = 0;
+        for a in &actions {
+            if let Action::Send { bytes, .. } = a {
+                let (_, _, msg) = ToClient::decode_full(bytes).expect("valid broadcast");
+                assert!(
+                    matches!(msg, ToClient::Finish { .. }),
+                    "a draining job broadcasts Finish at the boundary, never another Round"
+                );
+                finish_frames += 1;
+            }
+        }
+        assert_eq!(finish_frames, 2);
+
+        let t = Duration::from_millis(3);
+        engine.handle_message(0, &ToServer::Withhold { client: 0 }.encode(), t);
+        let actions = engine.handle_message(1, &ToServer::Withhold { client: 1 }.encode(), t);
+        assert!(actions.iter().any(|a| matches!(a, Action::JobDone { job: 0 })));
+        let outcome = engine.take_result(0).expect("done").expect("drain is a graceful exit");
+        assert_eq!(outcome.rounds.len(), 1, "only round 0 ran before the drain");
+    }
+
+    /// A job still gathering founders has no round boundary to drain to:
+    /// it fails immediately so the service can refuse its submitter.
+    #[test]
+    fn drain_during_handshake_fails_the_job() {
+        let mut engine = RoundEngine::new();
+        engine.add_job(7, ServerConfig::new(8, 2, 4, 1), 2);
+        engine.handle_message(0, &hello(7, 0), Duration::from_millis(1));
+        let actions = engine.drain_job(7);
+        assert!(actions.iter().any(|a| matches!(a, Action::JobDone { job: 7 })));
+        assert!(engine.take_result(7).expect("done").is_err());
+    }
+
+    /// `retire_job` refuses running jobs, then releases state and
+    /// endpoint bindings once the job is done — the jobs map stays
+    /// bounded by concurrent jobs and ids become reusable.
+    #[test]
+    fn retire_job_releases_state_and_bindings_once_done() {
+        let mut engine = RoundEngine::new();
+        engine.add_job(0, ServerConfig::new(8, 2, 1, 1), 2);
+        handshake(&mut engine, 0, [0, 1]);
+        assert!(!engine.retire_job(0), "running jobs cannot be retired");
+
+        let t = Duration::from_millis(2);
+        engine.handle_message(0, &update_for(0, 0, 0, 8, 2), t);
+        engine.handle_message(1, &update_for(0, 1, 0, 8, 2), t);
+        assert_eq!(engine.phase_of(0), Some("finishing"), "rounds=1 finishes after round 0");
+        engine.handle_message(0, &ToServer::Withhold { client: 0 }.encode(), t);
+        engine.handle_message(1, &ToServer::Withhold { client: 1 }.encode(), t);
+        assert!(engine.take_result(0).expect("done").is_ok());
+
+        assert_eq!(engine.job_count(), 1);
+        assert!(engine.retire_job(0));
+        assert_eq!(engine.job_count(), 0);
+
+        // the old endpoints are unbound now: traffic on them is shed
+        let actions = engine.handle_message(0, &update_for(0, 0, 0, 8, 2), t);
+        assert!(actions.iter().any(|a| matches!(a, Action::Close { ep: 0 })));
+        // and the id is free for the next submission
+        assert!(engine.try_add_job(0, ServerConfig::new(8, 2, 1, 1), 2).is_ok());
+    }
+
+    /// Wire-driven registration must reject bad submissions with a typed
+    /// error — `add_job`'s panic is for pre-configured drivers only.
+    #[test]
+    fn try_add_job_rejects_zero_clients_and_duplicates() {
+        let mut engine = RoundEngine::new();
+        let cfg = ServerConfig::new(8, 2, 1, 1);
+        assert!(engine.try_add_job(0, cfg.clone(), 0).is_err(), "a zero-client fleet");
+        assert_eq!(engine.job_count(), 0);
+        assert!(engine.try_add_job(0, cfg.clone(), 2).is_ok());
+        assert!(engine.try_add_job(0, cfg, 2).is_err(), "a duplicate id");
+        assert_eq!(engine.job_count(), 1);
+    }
+
+    /// A control-plane frame (`Submit`/`Drain`) on a bound data
+    /// connection sheds that endpoint only; under `SkipMissing` the job
+    /// carries on with the remaining members.
+    #[test]
+    fn control_frame_on_data_connection_sheds_only_that_endpoint() {
+        let mut engine = RoundEngine::new();
+        let mut cfg = ServerConfig::new(8, 2, 4, 1);
+        cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.reconnect_grace = Some(Duration::ZERO);
+        engine.add_job(0, cfg, 2);
+        handshake(&mut engine, 0, [0, 1]);
+
+        let submit =
+            ToServer::Submit { tenant: 1, clients: 2, rounds: 1, m: 8, rank: 2 }.encode();
+        let actions = engine.handle_message(0, &submit, Duration::from_millis(2));
+        assert!(actions.iter().any(|a| matches!(a, Action::Close { ep: 0 })));
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::JobDone { .. })),
+            "shedding one endpoint must not terminate the job"
+        );
+
+        // the departed member left round 0 pending on client 1 alone
+        engine.handle_message(1, &update_for(0, 1, 0, 8, 2), Duration::from_millis(3));
+        assert_eq!(engine.round_of(0), Some(1), "the job survives minus the bad endpoint");
     }
 }

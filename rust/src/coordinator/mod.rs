@@ -5,6 +5,8 @@
 //!   with arrival-order aggregation and straggler deadlines, elastic
 //!   membership, reveal, multiplexed over job ids
 //! - [`server`]: config/outcome types + the single-job `run_server`
+//! - [`admission`], [`service`]: the multi-tenant job service — wire
+//!   `Submit` with per-tenant quotas, graceful drain, metrics endpoint
 //! - [`relay`]: hierarchical-aggregation tier — a relay serves a
 //!   subtree downstream like a root while speaking the client protocol
 //!   upstream, forwarding one canonical partial sum per round
@@ -17,6 +19,7 @@
 //!   privacy sets, round telemetry
 //! - [`driver`]: the one-call entry point gluing all of it together
 
+pub mod admission;
 pub mod aggregate;
 pub mod client;
 pub mod compress;
@@ -28,8 +31,10 @@ pub mod privacy;
 pub mod protocol;
 pub mod relay;
 pub mod server;
+pub mod service;
 pub mod transport;
 
+pub use admission::{Admission, JobSpec, Quotas};
 pub use aggregate::Aggregation;
 pub use compress::Compression;
 pub use driver::{run_dcf_pca, run_dcf_pca_raw, DcfPcaConfig, DcfPcaResult, KernelSpec, PartitionSpec};
@@ -38,3 +43,4 @@ pub use kernel::{LocalUpdateKernel, NativeKernel};
 pub use privacy::PrivacySpec;
 pub use relay::{run_relay, RelaySession};
 pub use server::{FaultPolicy, JobMode, ServerConfig};
+pub use service::{JobService, ServiceMetrics};

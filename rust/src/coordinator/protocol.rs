@@ -37,8 +37,12 @@ use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
 /// and session tokens (`Hello.token` / `Welcome`) for reconnect;
 /// version 4 added the hierarchical-aggregation fields (`Hello.span`,
 /// and `Update` carrying a span partial: participant count, column
-/// total, and summed telemetry instead of one leaf's scalars).
-pub const WIRE_VERSION: u8 = 4;
+/// total, and summed telemetry instead of one leaf's scalars);
+/// version 5 added the job-service control plane: `Submit`/`Drain`
+/// upstream and `Accepted`/`Refused { reason }` downstream, so a
+/// long-running coordinator admits (or refuses) jobs over the wire
+/// instead of being pre-configured with exactly one.
+pub const WIRE_VERSION: u8 = 5;
 
 /// Size of the `[version u8][job u32][seq u32]` envelope on every message.
 pub const ENVELOPE_BYTES: usize = 9;
@@ -62,6 +66,77 @@ fn read_envelope(r: &mut Reader<'_>) -> Result<(u32, u32)> {
     Ok((job, seq))
 }
 
+/// Why the service turned a `Submit` away. Carried verbatim inside
+/// [`ToClient::Refused`] so the submitter can distinguish "over quota,
+/// retry later" from "malformed, don't bother". The `limit` is the
+/// quota value that was exceeded (0 where no single number applies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefuseReason {
+    /// tenant already runs its maximum number of concurrent jobs
+    TenantJobs { limit: u64 },
+    /// requested fleet exceeds the per-job client cap
+    FleetSize { limit: u64 },
+    /// tenant's summed m·rank footprint would exceed its budget
+    Footprint { limit: u64 },
+    /// service-wide concurrent-job ceiling reached
+    ServerFull { limit: u64 },
+    /// service is draining: no new jobs, in-flight ones finish
+    Draining,
+    /// zero clients/rounds/dims or otherwise unserviceable parameters
+    BadParams,
+}
+
+impl RefuseReason {
+    fn wire_code(&self) -> (u8, u64) {
+        match *self {
+            RefuseReason::TenantJobs { limit } => (0, limit),
+            RefuseReason::FleetSize { limit } => (1, limit),
+            RefuseReason::Footprint { limit } => (2, limit),
+            RefuseReason::ServerFull { limit } => (3, limit),
+            RefuseReason::Draining => (4, 0),
+            RefuseReason::BadParams => (5, 0),
+        }
+    }
+
+    fn from_wire(code: u8, limit: u64) -> Result<RefuseReason> {
+        Ok(match code {
+            0 => RefuseReason::TenantJobs { limit },
+            1 => RefuseReason::FleetSize { limit },
+            2 => RefuseReason::Footprint { limit },
+            3 => RefuseReason::ServerFull { limit },
+            4 => RefuseReason::Draining,
+            5 => RefuseReason::BadParams,
+            c => bail!("unknown refuse-reason code {c}"),
+        })
+    }
+
+    /// Whether waiting and resubmitting the same job can succeed.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, RefuseReason::Draining | RefuseReason::BadParams)
+    }
+}
+
+impl std::fmt::Display for RefuseReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RefuseReason::TenantJobs { limit } => {
+                write!(f, "tenant concurrent-job quota ({limit}) reached")
+            }
+            RefuseReason::FleetSize { limit } => {
+                write!(f, "requested fleet exceeds per-job client cap ({limit})")
+            }
+            RefuseReason::Footprint { limit } => {
+                write!(f, "tenant m x rank footprint budget ({limit}) exceeded")
+            }
+            RefuseReason::ServerFull { limit } => {
+                write!(f, "service concurrent-job ceiling ({limit}) reached")
+            }
+            RefuseReason::Draining => write!(f, "service is draining"),
+            RefuseReason::BadParams => write!(f, "unserviceable job parameters"),
+        }
+    }
+}
+
 /// Downstream: server → client.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ToClient {
@@ -75,6 +150,11 @@ pub enum ToClient {
     /// Handshake accepted: here is your session token. A client echoes
     /// it in `Hello` when reconnecting to resume its session.
     Welcome { token: u64 },
+    /// `Submit` admitted: the service registered the job under this id;
+    /// workers may now `Hello` on it.
+    Accepted { job: u32 },
+    /// `Submit` turned away with a typed reason (quota, drain, params).
+    Refused { reason: RefuseReason },
 }
 
 /// Upstream: client → server.
@@ -115,16 +195,41 @@ pub enum ToServer {
     Reveal { client: u32, l: Mat, s: Mat },
     /// Private client's refusal (paper §2.2: M_i stays secret).
     Withhold { client: u32 },
+    /// Service mode: ask the coordinator to open a new job. The
+    /// envelope's job field is ignored (the service assigns the id and
+    /// returns it in `Accepted`); `tenant` is the quota-accounting
+    /// identity; the remaining fields size the job.
+    Submit { tenant: u32, clients: u32, rounds: u32, m: u64, rank: u32 },
+    /// Operator command: stop admitting, finish in-flight jobs, then
+    /// shut down (same semantics as SIGTERM on the serve process).
+    Drain,
 }
 
 const TAG_ROUND: u8 = 1;
 const TAG_FINISH: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
 const TAG_WELCOME: u8 = 4;
+const TAG_ACCEPTED: u8 = 5;
+const TAG_REFUSED: u8 = 6;
 const TAG_HELLO: u8 = 16;
 const TAG_UPDATE: u8 = 17;
 const TAG_REVEAL: u8 = 18;
 const TAG_WITHHOLD: u8 = 19;
+/// Control-plane tags (service mode). Kept in their own range so
+/// [`control_tag`] can classify a frame without a full decode.
+pub const TAG_SUBMIT: u8 = 24;
+pub const TAG_DRAIN: u8 = 25;
+
+/// The message tag of an encoded frame, if it is a service control
+/// message (`Submit`/`Drain`). The service peeks this before handing a
+/// frame to the engine, so the control plane never costs a matrix
+/// decode and the engine never sees messages it has no job for.
+pub fn control_tag(frame: &[u8]) -> Option<u8> {
+    match frame.get(ENVELOPE_BYTES).copied() {
+        Some(t @ (TAG_SUBMIT | TAG_DRAIN)) => Some(t),
+        _ => None,
+    }
+}
 
 impl ToClient {
     /// Encode for job 0, seq 0, with the default (lossless) codec.
@@ -162,6 +267,16 @@ impl ToClient {
                 buf.push(TAG_WELCOME);
                 put_u64(&mut buf, *token);
             }
+            ToClient::Accepted { job } => {
+                buf.push(TAG_ACCEPTED);
+                put_u32(&mut buf, *job);
+            }
+            ToClient::Refused { reason } => {
+                let (code, limit) = reason.wire_code();
+                buf.push(TAG_REFUSED);
+                buf.push(code);
+                put_u64(&mut buf, limit);
+            }
         }
         buf
     }
@@ -191,6 +306,12 @@ impl ToClient {
             TAG_FINISH => ToClient::Finish { reveal: r.u8()? != 0, final_u: r.mat()? },
             TAG_SHUTDOWN => ToClient::Shutdown,
             TAG_WELCOME => ToClient::Welcome { token: r.u64()? },
+            TAG_ACCEPTED => ToClient::Accepted { job: r.u32()? },
+            TAG_REFUSED => {
+                let code = r.u8()?;
+                let limit = r.u64()?;
+                ToClient::Refused { reason: RefuseReason::from_wire(code, limit)? }
+            }
             t => bail!("unknown ToClient tag {t}"),
         };
         r.expect_end()?;
@@ -257,6 +378,15 @@ impl ToServer {
                 buf.push(TAG_WITHHOLD);
                 put_u32(&mut buf, *client);
             }
+            ToServer::Submit { tenant, clients, rounds, m, rank } => {
+                buf.push(TAG_SUBMIT);
+                put_u32(&mut buf, *tenant);
+                put_u32(&mut buf, *clients);
+                put_u32(&mut buf, *rounds);
+                put_u64(&mut buf, *m);
+                put_u32(&mut buf, *rank);
+            }
+            ToServer::Drain => buf.push(TAG_DRAIN),
         }
         buf
     }
@@ -297,6 +427,14 @@ impl ToServer {
             },
             TAG_REVEAL => ToServer::Reveal { client: r.u32()?, l: r.mat()?, s: r.mat()? },
             TAG_WITHHOLD => ToServer::Withhold { client: r.u32()? },
+            TAG_SUBMIT => ToServer::Submit {
+                tenant: r.u32()?,
+                clients: r.u32()?,
+                rounds: r.u32()?,
+                m: r.u64()?,
+                rank: r.u32()?,
+            },
+            TAG_DRAIN => ToServer::Drain,
             t => bail!("unknown ToServer tag {t}"),
         };
         r.expect_end()?;
@@ -381,10 +519,48 @@ mod tests {
             },
             ToServer::Reveal { client: 0, l, s },
             ToServer::Withhold { client: 2 },
+            ToServer::Submit { tenant: 7, clients: 32, rounds: 12, m: 4096, rank: 8 },
+            ToServer::Drain,
         ] {
             let bytes = msg.encode();
             assert_eq!(ToServer::decode(&bytes).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn control_plane_roundtrip_and_tag_peek() {
+        for reason in [
+            RefuseReason::TenantJobs { limit: 4 },
+            RefuseReason::FleetSize { limit: 256 },
+            RefuseReason::Footprint { limit: 1 << 20 },
+            RefuseReason::ServerFull { limit: 64 },
+            RefuseReason::Draining,
+            RefuseReason::BadParams,
+        ] {
+            let msg = ToClient::Refused { reason };
+            assert_eq!(ToClient::decode(&msg.encode()).unwrap(), msg);
+        }
+        let msg = ToClient::Accepted { job: 41 };
+        assert_eq!(ToClient::decode(&msg.encode()).unwrap(), msg);
+
+        // the service's cheap classifier: control frames peek as their
+        // tag, data-plane frames (and runts) as None
+        let submit =
+            ToServer::Submit { tenant: 1, clients: 2, rounds: 3, m: 16, rank: 2 }.encode();
+        assert_eq!(control_tag(&submit), Some(TAG_SUBMIT));
+        assert_eq!(control_tag(&ToServer::Drain.encode()), Some(TAG_DRAIN));
+        let hello = ToServer::Hello { client: 0, cols: 4, token: 0, span: 1 }.encode();
+        assert_eq!(control_tag(&hello), None);
+        assert_eq!(control_tag(&[]), None);
+        assert_eq!(control_tag(&submit[..ENVELOPE_BYTES]), None);
+    }
+
+    #[test]
+    fn refuse_reasons_classify_retryability() {
+        assert!(RefuseReason::TenantJobs { limit: 1 }.retryable());
+        assert!(RefuseReason::ServerFull { limit: 1 }.retryable());
+        assert!(!RefuseReason::Draining.retryable());
+        assert!(!RefuseReason::BadParams.retryable());
     }
 
     #[test]
@@ -460,6 +636,23 @@ mod tests {
         put_u64(&mut v2_up, 10);
         let err = ToServer::decode(&v2_up).expect_err("v2 Hello must not decode");
         assert!(err.to_string().contains("wire version 2"));
+    }
+
+    #[test]
+    fn v4_frames_rejected_now_that_v5_owns_the_wire() {
+        // a well-formed v4 Shutdown: same envelope layout as v5, older
+        // version byte — the gate must name both versions, not misparse
+        let mut v4 = vec![4u8];
+        put_u32(&mut v4, 0);
+        put_u32(&mut v4, 0);
+        v4.push(3); // TAG_SHUTDOWN
+        let err = ToClient::decode(&v4).expect_err("v4 frame must not decode");
+        let text = err.to_string();
+        assert!(text.contains("wire version 4"), "names the peer's version: {text}");
+        assert!(
+            text.contains(&format!("wire version {WIRE_VERSION}")),
+            "names this build's version: {text}"
+        );
     }
 
     #[test]

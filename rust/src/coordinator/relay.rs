@@ -148,6 +148,11 @@ impl RelaySession {
                 done: false,
             }),
             ToClient::Shutdown => Ok(RelayStep { done: true, ..Default::default() }),
+            ToClient::Accepted { .. } | ToClient::Refused { .. } => {
+                // relays never submit jobs; an admission reply upstream
+                // means the parent is not speaking the relay protocol
+                bail!("relay {}: control-plane reply on the upstream link", self.span_lo)
+            }
         }
     }
 }

@@ -1,0 +1,680 @@
+//! The long-running multi-tenant job service: `dcf-pca serve --service`.
+//!
+//! [`JobService`] wraps a [`RoundEngine`] with the control plane a
+//! shared deployment needs:
+//!
+//! - **Submission**: a `Submit` frame (wire v5) asks for a job of a
+//!   given shape; [`Admission`] either assigns a server-side [`JobId`]
+//!   (`Accepted`) or refuses with a typed [`RefuseReason`] the
+//!   submitter can branch on. Submitters never pick ids — the id space
+//!   belongs to the service, so tenants cannot collide or squat.
+//! - **Isolation**: every engine-level failure (desync, protocol
+//!   violation, straggler collapse) terminates one job; the loop keeps
+//!   serving every other tenant.
+//! - **Metrics**: the service folds per-job outcomes into a shared
+//!   [`ServiceMetrics`] which [`spawn_metrics_endpoint`] serves as
+//!   plaintext over HTTP/1.0 from a side thread — jobs
+//!   active/completed/failed/refused, rounds/s, p50/p99 round latency,
+//!   cut rate, bytes per job.
+//! - **Graceful drain**: SIGTERM (see [`install_drain_signal_handler`]),
+//!   a wire `Drain` command, or the programmatic [`JobService::drain_flag`]
+//!   stop admission and let every in-flight job finish at its next
+//!   round boundary; the loop exits once the last job reports done.
+//!
+//! Backpressure below this layer: the epoll reactor caps each
+//! connection's write queue and sheds peers that stop reading
+//! (`set_outbuf_cap`), and the engine treats a shed endpoint like any
+//! other departure — so one stuck client costs one membership slot,
+//! never unbounded memory.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Context, Result};
+
+use super::admission::{Admission, JobSpec, Quotas};
+use super::compress::Compression;
+use super::engine::{Action, EndpointId, JobId, JobProgress, RoundEngine};
+use super::metrics::{CommStats, RoundRecord};
+use super::protocol::{control_tag, RefuseReason, ToClient, ToServer};
+use super::server::ServerConfig;
+use super::transport::reactor::{IoEvent, Reactor};
+
+/// Largest idle sleep while deadlines are pending (same bound as the
+/// single-job `drive` loop).
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// How often the loop refreshes the shared metrics snapshot.
+const SNAPSHOT_EVERY: Duration = Duration::from_millis(50);
+
+/// Round-latency samples retained for the percentile estimates.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Counters behind the metrics/health endpoint. The service loop owns
+/// the writes; the endpoint thread renders read-only snapshots.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub rounds_total: u64,
+    /// rounds closed with fewer participants than the job's peak — the
+    /// straggler cut (or a departure) trimmed them
+    pub cut_rounds: u64,
+    pub bytes_down_total: u64,
+    pub bytes_up_total: u64,
+    /// recent per-round wall-clock seconds (bounded window)
+    latencies: VecDeque<f64>,
+    // -- snapshot fields, refreshed by the service loop --
+    pub jobs_active: usize,
+    pub jobs_admitted: u64,
+    pub jobs_refused: u64,
+    pub draining: bool,
+    pub uptime_secs: f64,
+    per_job: Vec<(JobId, JobProgress)>,
+}
+
+impl ServiceMetrics {
+    fn record_completed(&mut self, rounds: &[RoundRecord], comm: &CommStats) {
+        self.jobs_completed += 1;
+        let peak = rounds.iter().map(|r| r.participants).max().unwrap_or(0);
+        for r in rounds {
+            self.rounds_total += 1;
+            if r.participants < peak {
+                self.cut_rounds += 1;
+            }
+            if self.latencies.len() == LATENCY_WINDOW {
+                self.latencies.pop_front();
+            }
+            self.latencies.push_back(r.round_secs);
+        }
+        self.bytes_down_total += comm.total_down;
+        self.bytes_up_total += comm.total_up;
+    }
+
+    fn record_failed(&mut self) {
+        self.jobs_failed += 1;
+    }
+
+    /// Percentile over the retained latency window (0.0 ..= 1.0).
+    fn latency_percentile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut sorted: Vec<f64> = self.latencies.iter().copied().collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// The plaintext exposition body: one `name value` per line, the
+    /// flat format every scraper (and `curl`) can read.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(512);
+        let mut line = |k: &str, v: String| {
+            out.push_str(k);
+            out.push(' ');
+            out.push_str(&v);
+            out.push('\n');
+        };
+        line("dcf_up", "1".to_string());
+        line("dcf_draining", u8::from(self.draining).to_string());
+        line("dcf_uptime_secs", format!("{:.3}", self.uptime_secs));
+        line("dcf_jobs_active", self.jobs_active.to_string());
+        line("dcf_jobs_admitted_total", self.jobs_admitted.to_string());
+        line("dcf_jobs_completed_total", self.jobs_completed.to_string());
+        line("dcf_jobs_failed_total", self.jobs_failed.to_string());
+        line("dcf_jobs_refused_total", self.jobs_refused.to_string());
+        line("dcf_rounds_total", self.rounds_total.to_string());
+        let rps = if self.uptime_secs > 0.0 {
+            self.rounds_total as f64 / self.uptime_secs
+        } else {
+            0.0
+        };
+        line("dcf_rounds_per_sec", format!("{rps:.3}"));
+        let cut_rate = if self.rounds_total > 0 {
+            self.cut_rounds as f64 / self.rounds_total as f64
+        } else {
+            0.0
+        };
+        line("dcf_round_cut_rate", format!("{cut_rate:.4}"));
+        line(
+            "dcf_round_latency_p50_secs",
+            format!("{:.6}", self.latency_percentile(0.50)),
+        );
+        line(
+            "dcf_round_latency_p99_secs",
+            format!("{:.6}", self.latency_percentile(0.99)),
+        );
+        line("dcf_bytes_down_total", self.bytes_down_total.to_string());
+        line("dcf_bytes_up_total", self.bytes_up_total.to_string());
+        for (id, p) in &self.per_job {
+            line(&format!("dcf_job_round{{job=\"{id}\"}}"), p.round.to_string());
+            line(
+                &format!("dcf_job_members_alive{{job=\"{id}\"}}"),
+                p.members_alive.to_string(),
+            );
+            line(&format!("dcf_job_bytes_down{{job=\"{id}\"}}"), p.bytes_down.to_string());
+            line(&format!("dcf_job_bytes_up{{job=\"{id}\"}}"), p.bytes_up.to_string());
+        }
+        out
+    }
+}
+
+/// SIGTERM lands here (see [`install_drain_signal_handler`]); the
+/// service loop folds it into the same path as a wire `Drain`.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_drain_signal(_sig: i32) {
+    SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT into a graceful drain: stop admitting,
+/// finish in-flight jobs at their next round boundary, then exit. Uses
+/// the C library's `signal` directly (the crate's zero-dependency FFI
+/// style — see the epoll binding).
+#[cfg(unix)]
+pub fn install_drain_signal_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_drain_signal as extern "C" fn(i32) as usize;
+    unsafe {
+        signal(SIGTERM, handler);
+        signal(SIGINT, handler);
+    }
+}
+
+/// The multi-tenant service loop: a [`RoundEngine`] fronted by
+/// [`Admission`], publishing [`ServiceMetrics`].
+pub struct JobService {
+    engine: RoundEngine,
+    admission: Admission,
+    /// per-service defaults every submitted job inherits (schedule,
+    /// timeouts, fault policy, codec); `Submit` supplies the shape
+    template: ServerConfig,
+    metrics: Arc<Mutex<ServiceMetrics>>,
+    drain: Arc<AtomicBool>,
+    /// service-admitted jobs → admission wall-clock (reactor time)
+    started: BTreeMap<JobId, Duration>,
+    last_snapshot: Duration,
+}
+
+impl JobService {
+    /// `template` carries the policy knobs (round timeout, fault
+    /// policy, compression, schedule); its shape fields (`m`, `rank`,
+    /// `rounds`) are overridden per submission.
+    pub fn new(template: ServerConfig, quotas: Quotas) -> Self {
+        JobService {
+            engine: RoundEngine::new(),
+            admission: Admission::new(quotas),
+            template,
+            metrics: Arc::new(Mutex::new(ServiceMetrics::default())),
+            drain: Arc::new(AtomicBool::new(false)),
+            started: BTreeMap::new(),
+            last_snapshot: Duration::ZERO,
+        }
+    }
+
+    /// Shared handle for the metrics endpoint thread.
+    pub fn metrics(&self) -> Arc<Mutex<ServiceMetrics>> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Setting this to `true` triggers the same graceful drain as
+    /// SIGTERM or the wire `Drain` command.
+    pub fn drain_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.drain)
+    }
+
+    /// Serve until a drain request has been honoured and every admitted
+    /// job reached a terminal state. Reactor-level I/O faults are the
+    /// only `Err` exits; per-job failures are metered and absorbed.
+    pub fn run(&mut self, reactor: &mut dyn Reactor) -> Result<()> {
+        loop {
+            let drain_wanted = self.drain.load(Ordering::Relaxed)
+                || SIGNAL_DRAIN.load(Ordering::Relaxed);
+            if drain_wanted && !self.admission.is_draining() {
+                crate::log_warn!(
+                    "service",
+                    "drain requested — refusing new work, finishing {} job(s)",
+                    self.admission.active_jobs()
+                );
+                self.admission.drain();
+                let actions: VecDeque<Action> = self.engine.drain_all().into();
+                self.execute(reactor, actions)?;
+            }
+            if self.admission.is_draining() && self.engine.all_done() {
+                self.refresh_snapshot(reactor.now(), true);
+                return Ok(());
+            }
+
+            let timeout = self
+                .engine
+                .next_deadline()
+                .map(|d| d.saturating_sub(reactor.now()))
+                .map_or(IDLE_POLL, |t| t.min(IDLE_POLL));
+            let event = reactor.poll(Some(timeout))?;
+            let now = reactor.now();
+            let mut actions: VecDeque<Action> = VecDeque::new();
+            match event {
+                IoEvent::Connected(ep) => self.engine.on_connect(ep),
+                IoEvent::Message(ep, bytes) => {
+                    if control_tag(&bytes).is_some() {
+                        self.handle_control(ep, &bytes, now, reactor)?;
+                    } else {
+                        actions.extend(self.engine.handle_message(ep, &bytes, now));
+                    }
+                }
+                IoEvent::Disconnected(ep) => {
+                    actions.extend(self.engine.on_disconnect(ep, now));
+                }
+                IoEvent::Tick => {}
+            }
+            actions.extend(self.engine.poll_deadline(reactor.now()));
+            self.execute(reactor, actions)?;
+            self.refresh_snapshot(reactor.now(), false);
+        }
+    }
+
+    /// One control-plane frame (`Submit`/`Drain`). The connection is
+    /// not a data connection: it never binds to a member, and a frame
+    /// that fails to decode sheds it like any hostile stream.
+    fn handle_control(
+        &mut self,
+        ep: EndpointId,
+        bytes: &[u8],
+        now: Duration,
+        reactor: &mut dyn Reactor,
+    ) -> Result<()> {
+        let (reply, admitted) = match ToServer::decode_full(bytes) {
+            Ok((_, _, ToServer::Submit { tenant, clients, rounds, m, rank })) => {
+                let spec = JobSpec { tenant, clients, rounds, m, rank };
+                match self.try_launch(spec, now) {
+                    Ok(id) => (ToClient::Accepted { job: id }, Some(id)),
+                    Err(reason) => {
+                        crate::log_warn!(
+                            "service",
+                            "refused tenant {tenant} ({clients} clients, {m}x{rank}): {reason}"
+                        );
+                        (ToClient::Refused { reason }, None)
+                    }
+                }
+            }
+            Ok((_, _, ToServer::Drain)) => {
+                self.drain.store(true, Ordering::Relaxed);
+                // job 0 is never assigned to a tenant: Accepted{0} is
+                // the drain acknowledgement
+                (ToClient::Accepted { job: 0 }, None)
+            }
+            _ => {
+                crate::log_warn!("service", "undecodable control frame from endpoint {ep}");
+                reactor.close(ep);
+                return Ok(());
+            }
+        };
+        let encoded = reply.encode_with(0, Compression::None);
+        if reactor.send(ep, &encoded).is_err() {
+            // the submitter is gone before learning its job id: nobody
+            // will ever populate the job, so reclaim the slot now
+            if let Some(id) = admitted {
+                let actions: VecDeque<Action> = self.engine.drain_job(id).into();
+                self.execute(reactor, actions)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission + engine registration for one submission.
+    fn try_launch(&mut self, spec: JobSpec, now: Duration) -> Result<JobId, RefuseReason> {
+        let id = self.admission.try_admit(spec)?;
+        let mut cfg = self.template.clone();
+        cfg.m = spec.m as usize;
+        cfg.rank = spec.rank as usize;
+        cfg.rounds = spec.rounds as usize;
+        // per-job init seed: deterministic for a given service seed and
+        // job id, distinct across jobs
+        cfg.seed = self.template.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(u64::from(id));
+        cfg.err_denominator = None;
+        cfg.err_stop = None;
+        if self.engine.try_add_job(id, cfg, spec.clients as usize).is_err() {
+            // ids are service-assigned, so this is unreachable unless
+            // the admission/engine books diverge — refuse, don't panic
+            self.admission.release(id);
+            return Err(RefuseReason::BadParams);
+        }
+        self.started.insert(id, now);
+        Ok(id)
+    }
+
+    /// Execute engine actions, folding failed writes back in as
+    /// disconnects and collecting finished jobs.
+    fn execute(&mut self, reactor: &mut dyn Reactor, mut actions: VecDeque<Action>) -> Result<()> {
+        while let Some(action) = actions.pop_front() {
+            match action {
+                Action::Send { ep, bytes } => {
+                    if reactor.send(ep, &bytes).is_err() {
+                        actions.extend(self.engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
+                Action::Close { ep } => reactor.close(ep),
+                Action::JobDone { job } => self.complete_job(job),
+                // root jobs never emit Upstream
+                Action::Upstream { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect one finished job: meter it, retire its engine state, and
+    /// return its quota slot to the tenant.
+    fn complete_job(&mut self, job: JobId) {
+        let result = self.engine.take_result(job);
+        self.engine.retire_job(job);
+        self.admission.release(job);
+        self.started.remove(&job);
+        let Some(result) = result else { return };
+        if let Ok(mut m) = self.metrics.lock() {
+            match result {
+                Ok(outcome) => m.record_completed(&outcome.rounds, &outcome.comm),
+                Err(err) => {
+                    crate::log_warn!("service", "job {job} failed: {err:#}");
+                    m.record_failed();
+                }
+            }
+        }
+    }
+
+    /// Refresh the shared snapshot the endpoint thread renders.
+    fn refresh_snapshot(&mut self, now: Duration, force: bool) {
+        if !force && now.saturating_sub(self.last_snapshot) < SNAPSHOT_EVERY {
+            return;
+        }
+        self.last_snapshot = now;
+        if let Ok(mut m) = self.metrics.lock() {
+            m.jobs_active = self.admission.active_jobs();
+            m.jobs_admitted = self.admission.admitted_total;
+            m.jobs_refused = self.admission.refused_total;
+            m.draining = self.admission.is_draining();
+            m.uptime_secs = now.as_secs_f64();
+            m.per_job.clear();
+            for &id in self.started.keys() {
+                if let Some(p) = self.engine.progress_of(id) {
+                    m.per_job.push((id, p));
+                }
+            }
+        }
+    }
+}
+
+/// Serve `metrics.render()` as plaintext HTTP/1.0 from a side thread.
+/// Any request path gets the same body (health and metrics are one
+/// endpoint — `dcf_up 1` is the liveness line). Returns the bound
+/// address and the thread handle; the thread exits once `stop` is set
+/// (checked between accepts, ~25 ms granularity).
+pub fn spawn_metrics_endpoint(
+    addr: &str,
+    metrics: Arc<Mutex<ServiceMetrics>>,
+    stop: Arc<AtomicBool>,
+) -> Result<(String, std::thread::JoinHandle<()>)> {
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("metrics endpoint bind {addr}"))?;
+    listener.set_nonblocking(true).context("metrics endpoint nonblocking")?;
+    let bound = listener.local_addr().context("metrics endpoint addr")?.to_string();
+    let handle = std::thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((mut sock, _)) => {
+                    let _ = sock.set_read_timeout(Some(Duration::from_millis(200)));
+                    let mut req = [0u8; 1024];
+                    let _ = sock.read(&mut req); // request line ignored
+                    let body = match metrics.lock() {
+                        Ok(m) => m.render(),
+                        Err(_) => String::from("dcf_up 0\n"),
+                    };
+                    let _ = write!(
+                        sock,
+                        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\n\
+                         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                        body.len()
+                    );
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    });
+    Ok((bound, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::FaultPolicy;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    /// A scripted reactor: hands the service a fixed event sequence and
+    /// records every send/close. Running past the script is a test bug
+    /// and errors out of `run`.
+    struct ScriptReactor {
+        events: VecDeque<IoEvent>,
+        sent: Vec<(EndpointId, Vec<u8>)>,
+        closed: Vec<EndpointId>,
+        now: Duration,
+    }
+
+    impl ScriptReactor {
+        fn new(events: Vec<IoEvent>) -> Self {
+            ScriptReactor {
+                events: events.into(),
+                sent: Vec::new(),
+                closed: Vec::new(),
+                now: Duration::ZERO,
+            }
+        }
+
+        /// Replies sent to `ep`, decoded.
+        fn replies_to(&self, ep: EndpointId) -> Vec<ToClient> {
+            self.sent
+                .iter()
+                .filter(|(e, _)| *e == ep)
+                .map(|(_, b)| ToClient::decode(b).expect("service sent a valid frame"))
+                .collect()
+        }
+    }
+
+    impl Reactor for ScriptReactor {
+        fn poll(&mut self, _timeout: Option<Duration>) -> Result<IoEvent> {
+            self.now += Duration::from_millis(1);
+            self.events.pop_front().ok_or_else(|| crate::anyhow!("script exhausted"))
+        }
+
+        fn send(&mut self, ep: EndpointId, msg: &[u8]) -> Result<()> {
+            self.sent.push((ep, msg.to_vec()));
+            Ok(())
+        }
+
+        fn close(&mut self, ep: EndpointId) {
+            self.closed.push(ep);
+        }
+
+        fn now(&self) -> Duration {
+            self.now
+        }
+    }
+
+    fn submit(tenant: u32) -> IoEvent {
+        let frame =
+            ToServer::Submit { tenant, clients: 2, rounds: 1, m: 8, rank: 2 }.encode();
+        IoEvent::Message(100 + tenant as EndpointId, frame)
+    }
+
+    fn hello(job: JobId, client: u32, ep: EndpointId) -> IoEvent {
+        let frame = ToServer::Hello { client, cols: 4, token: 0, span: 1 }
+            .encode_with(job, Compression::None);
+        IoEvent::Message(ep, frame)
+    }
+
+    fn update(job: JobId, client: u32, ep: EndpointId) -> IoEvent {
+        let mut rng = Pcg64::new(client as u64 + 1);
+        let frame = ToServer::Update {
+            client,
+            round: 0,
+            u: Mat::gaussian(8, 2, &mut rng),
+            count: 1,
+            cols: 4,
+            grad_sum: 1.0,
+            lip_max: 1.0,
+            err_num_sum: f64::NAN,
+            secs_max: 0.0,
+            secs_sum: 0.0,
+        }
+        .encode_with(job, Compression::None);
+        IoEvent::Message(ep, frame)
+    }
+
+    fn withhold(job: JobId, client: u32, ep: EndpointId) -> IoEvent {
+        let frame = ToServer::Withhold { client }.encode_with(job, Compression::None);
+        IoEvent::Message(ep, frame)
+    }
+
+    fn service(quotas: Quotas) -> JobService {
+        let mut template = ServerConfig::new(1, 1, 1, 1);
+        template.fault_policy = FaultPolicy::SkipMissing;
+        JobService::new(template, quotas)
+    }
+
+    /// Full service lifecycle on a scripted wire: admit within quota,
+    /// refuse over it with the typed reason, run the admitted job to a
+    /// clean finish, re-admit the freed slot, then drain — with every
+    /// counter accounted for at exit.
+    #[test]
+    fn submit_quota_run_and_drain_lifecycle() {
+        let quotas = Quotas { tenant_jobs: 1, ..Quotas::default() };
+        let mut svc = service(quotas);
+        let mut reactor = ScriptReactor::new(vec![
+            submit(1), // → Accepted { job: 1 }
+            submit(1), // same tenant over quota → Refused(TenantJobs)
+            hello(1, 0, 0),
+            hello(1, 1, 1),
+            update(1, 0, 0),
+            update(1, 1, 1), // round 0 (of 1) closes → Finish
+            withhold(1, 0, 0),
+            withhold(1, 1, 1), // job 1 done → slot released
+            submit(1),         // freed slot → Accepted { job: 2 }
+            IoEvent::Message(200, ToServer::Drain.encode()), // → ack + drain
+        ]);
+        svc.run(&mut reactor).expect("drain exits the loop cleanly");
+
+        assert_eq!(reactor.replies_to(101), vec![
+            ToClient::Accepted { job: 1 },
+            ToClient::Refused { reason: RefuseReason::TenantJobs { limit: 1 } },
+            ToClient::Accepted { job: 2 },
+        ]);
+        assert_eq!(reactor.replies_to(200), vec![ToClient::Accepted { job: 0 }]);
+
+        let m = svc.metrics();
+        let m = m.lock().unwrap();
+        assert_eq!(m.jobs_completed, 1, "job 1 finished its round horizon");
+        assert_eq!(m.jobs_failed, 1, "job 2 was drained before its handshake");
+        assert_eq!(m.jobs_refused, 1);
+        assert_eq!(m.jobs_admitted, 2);
+        assert_eq!(m.jobs_active, 0, "drain leaves nothing running");
+        assert!(m.draining);
+        assert_eq!(m.rounds_total, 1);
+        assert!(m.bytes_down_total > 0 && m.bytes_up_total > 0);
+    }
+
+    /// A frame whose control tag lies about its payload is shed like
+    /// any hostile stream — no reply, no panic, no admission residue.
+    #[test]
+    fn truncated_control_frame_sheds_the_connection() {
+        let mut svc = service(Quotas::default());
+        let mut frame = ToServer::Submit { tenant: 1, clients: 2, rounds: 1, m: 8, rank: 2 }
+            .encode();
+        frame.truncate(10); // envelope + tag byte, payload gone
+        let mut reactor = ScriptReactor::new(vec![
+            IoEvent::Message(5, frame),
+            IoEvent::Message(200, ToServer::Drain.encode()),
+        ]);
+        svc.run(&mut reactor).expect("hostile control frame must not break the loop");
+        assert_eq!(reactor.closed, vec![5]);
+        assert!(reactor.replies_to(5).is_empty());
+        let m = svc.metrics();
+        assert_eq!(m.lock().unwrap().jobs_admitted, 0);
+    }
+
+    /// An idle service drains immediately: nothing admitted, nothing to
+    /// wait for.
+    #[test]
+    fn drain_on_an_idle_service_exits_at_once() {
+        let mut svc = service(Quotas::default());
+        svc.drain_flag().store(true, Ordering::Relaxed);
+        let mut reactor = ScriptReactor::new(vec![]);
+        svc.run(&mut reactor).expect("no events needed");
+        assert!(reactor.sent.is_empty());
+    }
+
+    #[test]
+    fn metrics_render_includes_the_contracted_lines() {
+        let mut m = ServiceMetrics::default();
+        m.record_completed(
+            &[RoundRecord {
+                round: 0,
+                err: None,
+                mean_grad_norm: 0.0,
+                dispersion: 0.0,
+                eta: 0.1,
+                round_secs: 0.02,
+                max_client_secs: 0.0,
+                sum_client_secs: 0.0,
+                bytes_down: 10,
+                bytes_up: 20,
+                participants: 2,
+                fan_in: 2,
+            }],
+            &CommStats { total_down: 30, total_up: 40, rounds: 1 },
+        );
+        m.jobs_active = 1;
+        m.per_job.push((7, JobProgress { round: 3, ..JobProgress::default() }));
+        let body = m.render();
+        for needle in [
+            "dcf_up 1",
+            "dcf_jobs_active 1",
+            "dcf_jobs_completed_total 1",
+            "dcf_rounds_total 1",
+            "dcf_round_latency_p50_secs 0.020000",
+            "dcf_round_latency_p99_secs 0.020000",
+            "dcf_round_cut_rate 0.0000",
+            "dcf_bytes_down_total 30",
+            "dcf_job_round{job=\"7\"} 3",
+        ] {
+            assert!(body.contains(needle), "missing `{needle}` in:\n{body}");
+        }
+    }
+
+    /// The endpoint speaks enough HTTP for `curl`: status line, headers,
+    /// then the plaintext body.
+    #[test]
+    fn metrics_endpoint_serves_plaintext_http() {
+        let metrics = Arc::new(Mutex::new(ServiceMetrics::default()));
+        metrics.lock().unwrap().jobs_active = 3;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (addr, handle) =
+            spawn_metrics_endpoint("127.0.0.1:0", Arc::clone(&metrics), Arc::clone(&stop))
+                .expect("bind");
+        let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+        sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "got: {resp}");
+        assert!(resp.contains("dcf_jobs_active 3"), "got: {resp}");
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

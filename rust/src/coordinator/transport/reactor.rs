@@ -267,6 +267,15 @@ mod epoll {
     /// `data` value that marks the listener in epoll events.
     const LISTENER_TOKEN: u64 = u64::MAX;
 
+    /// Default ceiling on one connection's queued-but-unwritten bytes.
+    /// A peer that stops reading while the coordinator keeps
+    /// broadcasting would otherwise grow its `outbuf` without bound —
+    /// in a long-running multi-tenant service that is a memory leak any
+    /// single hostile client can trigger. Overflow is treated exactly
+    /// like a failed write: the slow peer is shed and the engine's
+    /// FaultPolicy adjudicates the departure.
+    const DEFAULT_OUTBUF_CAP: usize = 64 << 20;
+
     struct Conn {
         stream: TcpStream,
         decoder: FrameDecoder,
@@ -290,6 +299,9 @@ mod epoll {
         conns: Vec<Option<Conn>>,
         pending: VecDeque<IoEvent>,
         start: Instant,
+        /// per-connection cap on queued unwritten bytes (see
+        /// [`DEFAULT_OUTBUF_CAP`])
+        outbuf_cap: usize,
     }
 
     impl EpollReactor {
@@ -305,6 +317,7 @@ mod epoll {
                 conns: Vec::new(),
                 pending: VecDeque::new(),
                 start: Instant::now(),
+                outbuf_cap: DEFAULT_OUTBUF_CAP,
             };
             reactor.ctl(
                 sys::EPOLL_CTL_ADD,
@@ -313,6 +326,14 @@ mod epoll {
                 LISTENER_TOKEN,
             )?;
             Ok(reactor)
+        }
+
+        /// Override the per-connection write-queue cap (bytes). A single
+        /// frame to an idle connection is always accepted — the cap
+        /// bounds *backlog*, so it cannot deadlock a legitimate
+        /// broadcast larger than itself.
+        pub fn set_outbuf_cap(&mut self, bytes: usize) {
+            self.outbuf_cap = bytes.max(1);
         }
 
         fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> Result<()> {
@@ -498,15 +519,34 @@ mod epoll {
             if msg.len() as u64 > MAX_FRAME as u64 {
                 bail!("frame too large: {}", msg.len());
             }
-            let Some(conn) = self.conns.get_mut(ep).and_then(Option::as_mut) else {
-                bail!("endpoint {ep} is closed");
+            let cap = self.outbuf_cap;
+            let overflow = {
+                let Some(conn) = self.conns.get_mut(ep).and_then(Option::as_mut) else {
+                    bail!("endpoint {ep} is closed");
+                };
+                if conn.closing {
+                    bail!("endpoint {ep} is closing");
+                }
+                let mut framed = Vec::with_capacity(4 + msg.len());
+                frame_into(&mut framed, msg);
+                // backlog cap: a frame may always enter an empty queue
+                // (no deadlock on frames larger than the cap), but a
+                // peer that is not draining its socket cannot stack
+                // frames past `cap`
+                if !conn.outbuf.is_empty() && conn.outbuf.len() + framed.len() > cap {
+                    Some(conn.outbuf.len())
+                } else {
+                    conn.outbuf.extend(framed);
+                    None
+                }
             };
-            if conn.closing {
-                bail!("endpoint {ep} is closing");
+            if let Some(queued) = overflow {
+                self.drop_conn(ep);
+                bail!(
+                    "endpoint {ep}: write queue overflow ({queued} bytes backlogged, cap {cap}) \
+                     — shedding slow peer"
+                );
             }
-            let mut framed = Vec::with_capacity(4 + msg.len());
-            frame_into(&mut framed, msg);
-            conn.outbuf.extend(framed);
             if !self.write_ready(ep) {
                 self.drop_conn(ep);
                 bail!("endpoint {ep} write failed");
@@ -600,5 +640,40 @@ mod tests {
             }
         }
         assert_eq!(h.join().unwrap(), b"ok");
+    }
+
+    /// A peer that never reads must not grow the coordinator's write
+    /// queue without bound: once the backlog passes the cap, the send
+    /// errors (which `drive` folds into a disconnect) and the endpoint
+    /// is gone.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reactor_sheds_a_slow_peer_when_its_write_queue_overflows() {
+        use crate::coordinator::transport::tcp::TcpChannel;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut r = EpollReactor::new(listener).unwrap();
+        r.set_outbuf_cap(1 << 20);
+        // connect and then go silent: the channel never reads, so the
+        // kernel buffers fill and writes start backlogging in `outbuf`
+        let _mute = TcpChannel::connect(&addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let ep = loop {
+            assert!(Instant::now() < deadline, "accept timed out");
+            if let IoEvent::Connected(ep) = r.poll(Some(Duration::from_millis(20))).unwrap() {
+                break ep;
+            }
+        };
+        let frame = vec![0u8; 256 * 1024];
+        let mut refused = false;
+        for _ in 0..512 {
+            if r.send(ep, &frame).is_err() {
+                refused = true;
+                break;
+            }
+        }
+        assert!(refused, "an unread peer must eventually overflow the capped queue");
+        // the overflow shed the connection entirely
+        assert!(r.send(ep, b"x").is_err());
     }
 }

@@ -23,6 +23,10 @@
 //!   virtual time — relay nodes serving whole subtrees inline, star ≡
 //!   tree bitwise checks, and relay crash/flap fuzzing via
 //!   [`schedule::FaultSchedule::draw_tree`].
+//! - [`hostile`] — [`hostile::HostileSim`]: hostile-stream fuzzing of
+//!   the multi-tenant job service (`simulate --hostile`) — seeded
+//!   adversarial bytes against a live [`crate::coordinator::JobService`],
+//!   asserting it never panics and always drains.
 //!
 //! Entry points: `dcf-pca simulate --seeds A..B [--shrink]` (CLI, with
 //! `--topology tree` for the relay tier), `dcf-pca experiment sim`
@@ -31,12 +35,14 @@
 
 pub mod clock;
 pub mod harness;
+pub mod hostile;
 pub mod net;
 pub mod schedule;
 pub mod topology;
 
 pub use clock::{EventQueue, SimClock};
 pub use harness::{FuzzSummary, SimConfig, SimHarness, SimReport, Violation};
+pub use hostile::{HostileSim, HostileSimConfig};
 pub use net::{SimNet, SimPeer};
 pub use schedule::{Dir, Fault, FaultSchedule};
 pub use topology::{

@@ -26,7 +26,13 @@ STATUS=0
 cargo bench --bench kernel_hotpath "$@"
 cargo bench --bench comm_scaling "$@"
 
-for CURRENT in BENCH_kernel_hotpath.json BENCH_comm_scaling.json; do
+# BENCH_service.json is produced by `dcf-pca loadgen` against a live
+# `serve --service` (the CI service-soak job, or a manual run) — trend
+# it when present rather than re-running a whole service here.
+FILES=(BENCH_kernel_hotpath.json BENCH_comm_scaling.json)
+[[ -f BENCH_service.json ]] && FILES+=(BENCH_service.json)
+
+for CURRENT in "${FILES[@]}"; do
     BASELINE="${CURRENT%.json}.baseline.json"
 
     if [[ ! -f "$CURRENT" ]]; then
