@@ -4,6 +4,9 @@
 //! between the leaves and the root, the root's per-round ingest is
 //! bounded by the tree's fan-in — it grows with the arity, not with E —
 //! while the final factor stays bitwise identical to the flat star.
+//! A codec section compares the wire codecs at fixed E=64 and gates the
+//! bandwidth-roofline policy: top-k must cut ≥4× vs dense f64 with the
+//! reveal error within 5e-2, and delta must stay bitwise lossless.
 //!
 //! The tree scenarios run in virtual time over the deterministic sim
 //! (`TreeSim`), so the ingest bytes and the per-round latency
@@ -18,6 +21,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use dcf_pca::coordinator::Compression;
 use dcf_pca::experiments::{comm, Effort};
 use dcf_pca::linalg::simd;
 use dcf_pca::sim::{FaultSchedule, TreeSim, TreeSimConfig};
@@ -226,6 +230,42 @@ fn main() {
     push(&mut records, "straggler_round_p50", &shape, s.round_p50_secs, "s", "lower");
     push(&mut records, "straggler_round_p99", &shape, s.round_p99_secs, "s", "lower");
 
+    // wire codecs at fixed E=64: the policy gate lives here as runtime
+    // asserts against the *measured* dense baseline of the same run —
+    // never against a hand-written byte count
+    let codecs = comm::codec_run(effort);
+    let dense = &codecs[0];
+    assert_eq!(dense.codec, Compression::None, "codec_run leads with the dense baseline");
+    for c in &codecs {
+        let shape = format!("E={} codec={}", c.clients, c.codec.cli_name());
+        push(&mut records, "codec_wire_bytes_per_round", &shape, c.bytes_per_round, "bytes", "lower");
+        push(&mut records, "codec_compression_ratio", &shape, c.ratio, "x", "higher");
+        push(&mut records, "codec_final_err", &shape, c.final_err, "err", "lower");
+    }
+    let delta = codecs.iter().find(|c| c.codec == Compression::Delta).expect("delta row");
+    assert!(
+        delta.bitwise_vs_dense,
+        "a delta-coded run must reproduce the dense factor bit for bit"
+    );
+    let topk = codecs.iter().find(|c| c.codec == Compression::TopK).expect("topk row");
+    assert!(
+        dense.bytes_per_round >= 4.0 * topk.bytes_per_round,
+        "top-k must cut wire bytes ≥4× vs dense f64: {:.0} B/round vs {:.0} B/round",
+        dense.bytes_per_round,
+        topk.bytes_per_round
+    );
+    assert!(
+        topk.ratio >= 4.0,
+        "the engine's compression meter disagrees with the ≥4× cut: {:.2}×",
+        topk.ratio
+    );
+    assert!(
+        (topk.final_err - dense.final_err).abs() <= 5e-2,
+        "top-k reveal error drifted more than 5e-2 from dense: {:.3e} vs {:.3e}",
+        topk.final_err,
+        dense.final_err
+    );
+
     // hierarchical aggregation: the root's ingest follows the tree's
     // fan-in. All tree worlds share the skinny per-leaf instance (m=8,
     // one column per leaf) so even the 10k-leaf federation is cheap.
@@ -244,6 +284,7 @@ fn main() {
         round_timeout: Duration::from_millis(50),
         threads: 0,
         mute: None,
+        compression: Compression::None,
     };
 
     // arity sweep at fixed E=64: the top tier is exactly {2, 4, 8} wide,

@@ -55,7 +55,9 @@ const SERVE_SPECS: &[OptSpec] = &[
     OptSpec {
         name: "compression",
         takes_value: true,
-        help: "wire codec for consensus factors: none | f32 | int8 (workers must match)",
+        help: "wire codec for consensus factors: none | f32 | int8 | delta | topk \
+               (workers must match; delta is lossless, topk sparsifies with error \
+               feedback)",
     },
     OptSpec {
         name: "round-timeout",
@@ -417,7 +419,7 @@ const WORKER_SPECS: &[OptSpec] = &[
     OptSpec {
         name: "compression",
         takes_value: true,
-        help: "wire codec: none | f32 | int8 — must match the server",
+        help: "wire codec: none | f32 | int8 | delta | topk — must match the server",
     },
     RETRY_BUDGET_OPT,
     BACKOFF_BASE_OPT,
@@ -587,8 +589,9 @@ const RELAY_SPECS: &[OptSpec] = &[
     OptSpec {
         name: "compression",
         takes_value: true,
-        help: "downstream wire codec: none | f32 | int8 — must match the workers \
-               (the forwarded partial always travels uncompressed upstream)",
+        help: "downstream wire codec: none | f32 | int8 | delta | topk — must match \
+               the workers (delta re-deltas the forwarded partial upstream \
+               losslessly, topk re-sparsifies it; quantizing codecs forward dense)",
     },
     OptSpec {
         name: "round-timeout",

@@ -76,6 +76,13 @@ const SPECS: &[OptSpec] = &[
         help: "star topology: error ceiling for under-budget schedules (default 5e-2)",
     },
     OptSpec {
+        name: "codec",
+        takes_value: true,
+        help: "wire codec under test: none | f32 | int8 | delta | topk (default none; \
+               the reference run stays uncompressed, so delta is held to bitwise \
+               identity with dense f64; tree worlds accept lossless codecs only)",
+    },
+    OptSpec {
         name: "flaky",
         takes_value: false,
         help: "star topology: draw the flap-heavy fault distribution (link drops + \
@@ -212,16 +219,20 @@ fn run_star(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<(
     if let Some(tol) = args.get_f64("tolerance")? {
         cfg.err_tolerance = tol;
     }
+    if let Some(c) = args.get("codec") {
+        cfg.compression = crate::coordinator::Compression::parse(c)?;
+    }
 
     let flaky = args.flag("flaky");
     println!(
-        "simulate: E={} n={} rank={} T={} K={} timeout={}ms seeds {first}..{last}{}",
+        "simulate: E={} n={} rank={} T={} K={} timeout={}ms codec={} seeds {first}..{last}{}",
         cfg.clients,
         cfg.n,
         cfg.rank,
         cfg.rounds,
         cfg.k_local,
         cfg.round_timeout.as_millis(),
+        cfg.compression.cli_name(),
         if flaky { " (flaky distribution)" } else { "" }
     );
     let harness = SimHarness::new(cfg)?;
@@ -285,13 +296,23 @@ fn run_tree(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<(
     if let Some(t) = parse_timeout_ms(args)? {
         cfg.round_timeout = t;
     }
+    if let Some(c) = args.get("codec") {
+        let codec = crate::coordinator::Compression::parse(c)?;
+        if !codec.is_lossless() {
+            bail!(
+                "--topology tree takes a lossless --codec only (none|delta): its \
+                 invariants are bitwise star ≡ tree identities"
+            );
+        }
+        cfg.compression = codec;
+    }
 
     let sim = TreeSim::new(cfg)?;
     let t = sim.topology();
     let cfg = sim.config();
     println!(
         "simulate tree: E={} arity={} levels={} root fan-in {} m={} rank={} T={} K={} \
-         timeout={}ms seeds {first}..{last}",
+         timeout={}ms codec={} seeds {first}..{last}",
         t.leaves,
         t.arity,
         t.levels,
@@ -301,6 +322,7 @@ fn run_tree(args: &ParsedArgs, first: u64, last: u64, verbose: bool) -> Result<(
         cfg.rounds,
         cfg.k_local,
         cfg.round_timeout.as_millis(),
+        cfg.compression.cli_name(),
     );
     fuzz_loop(
         first,

@@ -44,7 +44,7 @@ const SPECS: &[OptSpec] = &[
     OptSpec {
         name: "compression",
         takes_value: true,
-        help: "DCF-PCA: wire codec for consensus factors: none | f32 | int8",
+        help: "DCF-PCA: wire codec for consensus factors: none | f32 | int8 | delta | topk",
     },
     OptSpec {
         name: "round-timeout",

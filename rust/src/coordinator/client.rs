@@ -30,7 +30,7 @@ use crate::data::DataSource;
 use crate::linalg::{matmul_nt, Mat, Workspace};
 use crate::rng::Pcg64;
 
-use super::compress::Compression;
+use super::compress::{CodecState, Compression};
 use super::kernel::LocalUpdateKernel;
 use super::protocol::{restamp_seq, ToClient, ToServer};
 use super::transport::retry::BackoffPolicy;
@@ -118,6 +118,11 @@ pub struct ClientSession {
     cached_final: Option<Vec<u8>>,
     rounds_served: usize,
     disconnect_fired: bool,
+    /// decoder state for the downstream `Round` broadcast stream
+    /// (stateful codecs only; idle otherwise)
+    down_codec: CodecState,
+    /// encoder state for this client's upstream update stream
+    up_codec: CodecState,
 }
 
 impl ClientSession {
@@ -143,6 +148,8 @@ impl ClientSession {
             cached_final: None,
             rounds_served: 0,
             disconnect_fired: false,
+            down_codec: CodecState::new(),
+            up_codec: CodecState::new(),
         }
     }
 
@@ -175,7 +182,18 @@ impl ClientSession {
 
     /// Consume one received frame; returns what to send / do next.
     pub fn handle(&mut self, bytes: &[u8], kernel: &dyn LocalUpdateKernel) -> Result<SessionStep> {
-        let (job, seq, msg) = ToClient::decode_full(bytes)?;
+        // the downstream codec state decodes delta-coded `Round` frames;
+        // a `None` is the clean stale discard — a re-delivered broadcast
+        // this decoder already applied (the stream itself is intact)
+        let Some((job, seq, msg)) = ToClient::decode_full_stateful(bytes, &mut self.down_codec)?
+        else {
+            crate::log_warn!(
+                "client",
+                "client {}: dropping stale delta broadcast",
+                self.cfg.id
+            );
+            return Ok(SessionStep::default());
+        };
         if job != self.cfg.job {
             bail!("client {}: message for job {job} on a job-{} connection", self.cfg.id, self.cfg.job);
         }
@@ -187,6 +205,10 @@ impl ClientSession {
             if token != self.token {
                 self.token = token;
                 self.last_down_seq = seq;
+                // a new session means the coordinator rebuilt its side of
+                // both codec streams: restart ours at keyframes too
+                self.down_codec.reset();
+                self.up_codec.reset();
             } else if seq > self.last_down_seq {
                 // duplicated Welcome for the current session must not
                 // roll the guard backwards
@@ -306,7 +328,7 @@ impl ClientSession {
             secs_max: local_secs,
             secs_sum: local_secs,
         }
-        .encode_with(self.cfg.job, self.cfg.compression);
+        .encode_stateful(self.cfg.job, 0, self.cfg.compression, &mut self.up_codec);
         self.last_round = Some(round);
         self.cached_reply = Some(encoded.clone());
         self.rounds_served += 1;

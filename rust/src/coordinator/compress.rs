@@ -10,6 +10,27 @@
 //!   1 B/entry + 8 B/column. ~8×; adds bounded noise ≤ scale/2 per
 //!   entry, which FedAvg averaging further attenuates — the ablation
 //!   bench quantifies the error-floor cost.
+//! - `Delta` — **stateful** (wire v6): transmit U_t against the
+//!   previous round's factor. Each f64 lane is XORed with the
+//!   reference lane's bit pattern and the high zero bytes are stripped
+//!   (slowly-moving factors share sign/exponent/leading mantissa, so
+//!   most lanes need only their low bytes). Losslessly bit-exact after
+//!   reconstruction.
+//! - `TopK`  — **stateful**, sparsified delta: only the k = ⌈n/16⌉
+//!   largest-magnitude entries of (U_t − ref + errfb) travel, as
+//!   (u32 index, f64 value) pairs; the untransmitted residual folds
+//!   into a per-session error-feedback accumulator so the energy is
+//!   delivered over later rounds and convergence is preserved.
+//!
+//! Stateful frames carry a `[kind u8][gen u64]` header after the dims:
+//! kind 0 is a *keyframe* (dense payload, unconditionally accepted,
+//! `gen` is the decoder generation after applying), kind 1 is a *delta*
+//! (`gen` is the required base generation; a mismatch is reported as a
+//! clean [`DecodeError::StaleReference`] discard, never a desync).
+//! Encoder and decoder references track the message *stream*, so cached
+//! byte-identical re-sends after a reconnect either apply (the original
+//! was lost) or are discarded as stale (the original already applied) —
+//! both sides stay in sync either way.
 //!
 //! Both directions (broadcast and update) use the same codec; it is part
 //! of the run configuration, not negotiated.
@@ -37,6 +58,13 @@ pub enum DecodeError {
     TooLarge { len: u64 },
     /// header promises more payload bytes than the frame holds
     Truncated { need: u64, have: u64 },
+    /// a stateful delta frame arrived against a reference generation the
+    /// decoder does not hold (stateless decode, replayed duplicate, or a
+    /// frame the transport lost). A clean discard, not a stream error.
+    StaleReference { want: u64, have: u64 },
+    /// a sparse frame's index table is malformed (out of range, not
+    /// strictly increasing, or k exceeds the element count)
+    BadSparseIndex { index: u64, len: u64 },
 }
 
 impl fmt::Display for DecodeError {
@@ -51,6 +79,12 @@ impl fmt::Display for DecodeError {
             }
             DecodeError::Truncated { need, have } => {
                 write!(f, "compressed matrix frame truncated: need {need} bytes, have {have}")
+            }
+            DecodeError::StaleReference { want, have } => {
+                write!(f, "delta frame against stale codec reference: base gen {want}, decoder at {have}")
+            }
+            DecodeError::BadSparseIndex { index, len } => {
+                write!(f, "sparse frame index {index} invalid for {len} elements")
             }
         }
     }
@@ -69,11 +103,27 @@ pub enum Compression {
     None,
     F32,
     Int8,
+    /// Stateful round-to-round XOR delta with zero-byte stripping
+    /// (lossless; needs a per-session [`CodecState`] on both sides).
+    Delta,
+    /// Stateful top-k sparsified delta with error feedback (lossy;
+    /// `delta+topk` on the CLI — the sparsification IS delta-coded).
+    TopK,
 }
 
 const TAG_NONE: u8 = 0;
 const TAG_F32: u8 = 1;
 const TAG_INT8: u8 = 2;
+const TAG_DELTA: u8 = 3;
+const TAG_TOPK: u8 = 4;
+
+/// Stateful-frame kind byte: dense sync point vs round-to-round delta.
+const KIND_KEYFRAME: u8 = 0;
+const KIND_DELTA: u8 = 1;
+
+/// Top-k keeps 1-in-16 entries (plus the EF accumulator catching the
+/// rest over later rounds): 12 B/entry · n/16 ≈ n·0.75 B vs 8n dense.
+const TOPK_DIVISOR: usize = 16;
 
 impl Compression {
     pub fn parse(s: &str) -> Result<Compression> {
@@ -81,36 +131,126 @@ impl Compression {
             "none" | "f64" => Compression::None,
             "f32" => Compression::F32,
             "int8" | "q8" => Compression::Int8,
-            other => bail!("unknown compression '{other}' (none|f32|int8)"),
+            "delta" => Compression::Delta,
+            "topk" | "delta+topk" => Compression::TopK,
+            other => bail!("unknown compression '{other}' (none|f32|int8|delta|topk)"),
         })
     }
 
+    /// The canonical CLI spelling — [`parse`](Self::parse) accepts it back.
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::F32 => "f32",
+            Compression::Int8 => "int8",
+            Compression::Delta => "delta",
+            Compression::TopK => "topk",
+        }
+    }
+
+    /// Whether this codec needs per-session [`CodecState`] on both ends.
+    pub fn is_stateful(&self) -> bool {
+        matches!(self, Compression::Delta | Compression::TopK)
+    }
+
+    /// Whether a decoded matrix is bit-identical to the encoded one.
+    /// `Delta` is exact (XOR against a lock-step reference); `TopK`,
+    /// `F32` and `Int8` trade precision for bytes.
+    pub fn is_lossless(&self) -> bool {
+        matches!(self, Compression::None | Compression::Delta)
+    }
+
     /// Payload bytes for an r×c matrix under this codec (excl. header).
+    /// Stateful codecs are variable-length; this returns their *keyframe*
+    /// (worst-case) payload — the dense sync frame plus the kind/gen
+    /// header. Steady-state delta frames are what the byte meters record.
     pub fn payload_bytes(&self, rows: usize, cols: usize) -> usize {
         match self {
             Compression::None => 8 * rows * cols,
             Compression::F32 => 4 * rows * cols,
             Compression::Int8 => rows * cols + 8 * cols,
+            Compression::Delta | Compression::TopK => 9 + 8 * rows * cols,
         }
     }
 }
 
-/// Encode a matrix under `codec` (self-describing: tag + dims first).
-pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
+/// Per-session, per-direction codec state for the stateful codecs: the
+/// reconstruction reference both ends keep in lock-step, the frame
+/// generation counter, and (encoder side of `TopK` only) the
+/// error-feedback accumulator holding the untransmitted residual.
+///
+/// One state instance serves exactly one ordered frame stream (one
+/// member, one direction). [`reset`](Self::reset) returns it to the
+/// fresh-session state — the next encoded frame is a keyframe.
+#[derive(Clone, Debug, Default)]
+pub struct CodecState {
+    /// frames applied so far on this stream (0 = fresh, next is keyframe)
+    gen: u64,
+    /// the reconstruction after the last applied frame
+    reference: Option<Mat>,
+    /// encoder-side untransmitted residual (`TopK` only)
+    errfb: Option<Mat>,
+}
+
+impl CodecState {
+    pub fn new() -> Self {
+        CodecState::default()
+    }
+
+    /// Forget the stream: next encode emits a keyframe, next decode
+    /// accepts only a keyframe. Called when a session is replaced (new
+    /// token), never on a plain reconnect (the stream resumes).
+    pub fn reset(&mut self) {
+        self.gen = 0;
+        self.reference = None;
+        self.errfb = None;
+    }
+
+    /// Current frame generation (frames applied on this stream).
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// The reconstruction the peer holds after the last frame (`None`
+    /// until the first keyframe).
+    pub fn reference(&self) -> Option<&Mat> {
+        self.reference.as_ref()
+    }
+}
+
+fn put_header(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
     buf.push(match codec {
         Compression::None => TAG_NONE,
         Compression::F32 => TAG_F32,
         Compression::Int8 => TAG_INT8,
+        Compression::Delta => TAG_DELTA,
+        Compression::TopK => TAG_TOPK,
     });
     put_u32(buf, m.rows() as u32);
     put_u32(buf, m.cols() as u32);
     put_u64(buf, (m.rows() * m.cols()) as u64);
+}
+
+fn put_dense(buf: &mut Vec<u8>, m: &Mat) {
+    for &x in m.as_slice() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a matrix under `codec` (self-describing: tag + dims first).
+/// For the stateful codecs this is the *stateless* degenerate form: an
+/// unconditional keyframe at generation 0, which any decoder (with or
+/// without state) accepts — existing single-shot call sites (`Finish`,
+/// handshake frames, tests) stay correct under every codec.
+pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
+    put_header(buf, m, codec);
     match codec {
-        Compression::None => {
-            for &x in m.as_slice() {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
+        Compression::Delta | Compression::TopK => {
+            buf.push(KIND_KEYFRAME);
+            put_u64(buf, 0);
+            put_dense(buf, m);
         }
+        Compression::None => put_dense(buf, m),
         Compression::F32 => {
             // narrow through the SIMD layer in L1-sized chunks (the cast
             // is bitwise identical to `as f32` under both dispatch arms),
@@ -153,7 +293,111 @@ pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
     }
 }
 
-/// Decode a matrix written by [`put_mat_compressed`].
+/// Significant low bytes of an XOR residual in LE order: 0 for an
+/// unchanged lane, up to 8 for a fully different one.
+#[inline]
+fn sig_bytes(d: u64) -> u32 {
+    8 - d.leading_zeros() / 8
+}
+
+/// Stateful encode: emit a keyframe on a fresh stream (or a shape
+/// change), a delta frame against `state`'s reference otherwise, and
+/// advance `state` to the post-frame generation. The decoder applying
+/// the frame with [`read_mat_stateful`] lands in the identical state.
+pub fn put_mat_stateful(buf: &mut Vec<u8>, m: &Mat, codec: Compression, state: &mut CodecState) {
+    if !codec.is_stateful() {
+        put_mat_compressed(buf, m, codec);
+        return;
+    }
+    let fresh = state.reference.as_ref().map(|r| r.shape()) != Some(m.shape());
+    put_header(buf, m, codec);
+    if fresh {
+        state.gen += 1;
+        buf.push(KIND_KEYFRAME);
+        put_u64(buf, state.gen);
+        put_dense(buf, m);
+        state.reference = Some(m.clone());
+        state.errfb = None;
+        return;
+    }
+    buf.push(KIND_DELTA);
+    put_u64(buf, state.gen);
+    let reference = state.reference.as_mut().expect("checked above");
+    match codec {
+        Compression::Delta => {
+            // XOR bit-pattern residuals, high zero bytes stripped: a
+            // nibble per lane records its significant-byte count, then
+            // the significant bytes follow packed LE
+            let md = m.as_slice();
+            let rd = reference.as_slice();
+            let n = md.len();
+            let table_at = buf.len();
+            buf.resize(table_at + n.div_ceil(2), 0);
+            for i in 0..n {
+                let d = md[i].to_bits() ^ rd[i].to_bits();
+                let sig = sig_bytes(d) as u8;
+                buf[table_at + i / 2] |= sig << (4 * (i % 2));
+                buf.extend_from_slice(&d.to_le_bytes()[..sig as usize]);
+            }
+            reference.as_mut_slice().copy_from_slice(md);
+        }
+        Compression::TopK => {
+            // d = (U − ref) + errfb; ship the k largest |d|, fold the
+            // rest back into errfb for later rounds (error feedback)
+            let md = m.as_slice();
+            let n = md.len();
+            let errfb = state
+                .errfb
+                .get_or_insert_with(|| Mat::zeros(m.rows(), m.cols()))
+                .as_mut_slice();
+            let rd = reference.as_mut_slice();
+            // fold this round's gap onto the carried residual: errfb now
+            // holds the full compensated delta d = (U − ref) + errfb
+            for i in 0..n {
+                errfb[i] += md[i] - rd[i];
+            }
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            // deterministic selection: magnitude desc, index asc on ties
+            order.sort_unstable_by(|&a, &b| {
+                errfb[b as usize]
+                    .abs()
+                    .total_cmp(&errfb[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+            let k = (n / TOPK_DIVISOR).max(1).min(n);
+            let mut picks = order[..k].to_vec();
+            picks.sort_unstable();
+            put_u32(buf, k as u32);
+            for &i in &picks {
+                let i = i as usize;
+                // transmit the compensated delta; its lane's residual is
+                // now fully delivered, the rest stays in errfb
+                put_u32(buf, i as u32);
+                put_f64(buf, errfb[i]);
+                rd[i] += errfb[i];
+                errfb[i] = 0.0;
+            }
+        }
+        _ => unreachable!("stateless codecs handled above"),
+    }
+    state.gen += 1;
+}
+
+/// Re-sync keyframe for a peer that missed frames: encodes `state`'s
+/// *current* reference at the current generation, without advancing the
+/// stream. A decoder applying it lands exactly where in-sync peers
+/// already are. Panics if no keyframe has been encoded yet (callers
+/// always encode the shared frame first). Stateless codecs have no
+/// stream to join; callers use the plain encode for them.
+pub fn put_mat_resync(buf: &mut Vec<u8>, codec: Compression, state: &CodecState) {
+    let reference = state.reference.as_ref().expect("resync before first keyframe");
+    put_header(buf, reference, codec);
+    buf.push(KIND_KEYFRAME);
+    put_u64(buf, state.gen);
+    put_dense(buf, reference);
+}
+
+/// Decode a compressed matrix (stateless view of the stream).
 ///
 /// The header is fully validated — codec tag known, `rows·cols`
 /// consistent with `len` under checked arithmetic, payload bounded by
@@ -162,11 +406,32 @@ pub fn put_mat_compressed(buf: &mut Vec<u8>, m: &Mat, codec: Compression) {
 /// the per-column scale table) is allocated. Violations come back as
 /// [`DecodeError`]s.
 pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
+    match read_mat_inner(r, None)? {
+        Some(m) => Ok(m),
+        // unreachable: without state the inner decoder reports delta
+        // frames as Err(StaleReference), never a soft discard
+        None => Err(DecodeError::StaleReference { want: 0, have: 0 }.into()),
+    }
+}
+
+/// Stateful decode: keyframes resynchronize `state` unconditionally;
+/// delta frames apply against its reference when the generation matches.
+/// `Ok(None)` is the *clean stale discard* — a replayed duplicate or a
+/// frame for a stream this state does not hold; the frame is fully
+/// parsed and validated, the state is untouched, and the caller drops
+/// the message (the peer's cached re-send self-heals the stream).
+pub fn read_mat_stateful(r: &mut Reader<'_>, state: &mut CodecState) -> Result<Option<Mat>> {
+    read_mat_inner(r, Some(state))
+}
+
+fn read_mat_inner(r: &mut Reader<'_>, mut state: Option<&mut CodecState>) -> Result<Option<Mat>> {
     let tag = r.u8()?;
     let codec = match tag {
         TAG_NONE => Compression::None,
         TAG_F32 => Compression::F32,
         TAG_INT8 => Compression::Int8,
+        TAG_DELTA => Compression::Delta,
+        TAG_TOPK => Compression::TopK,
         t => return Err(DecodeError::UnknownTag(t).into()),
     };
     let rows32 = r.u32()?;
@@ -182,11 +447,15 @@ pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
         return Err(DecodeError::TooLarge { len: len64 }.into());
     }
     let (rows, cols, len) = (rows32 as usize, cols32 as usize, len64 as usize);
+    if codec.is_stateful() {
+        return read_stateful_body(r, codec, rows, cols, len, state.as_deref_mut());
+    }
     // payload in u64: len ≤ 2^27 and cols < 2^32, so neither term wraps
     let payload = match codec {
         Compression::None => 8 * len64,
         Compression::F32 => 4 * len64,
         Compression::Int8 => len64 + 8 * cols32 as u64,
+        Compression::Delta | Compression::TopK => unreachable!("handled above"),
     };
     if payload > MAX_FRAME as u64 {
         return Err(DecodeError::TooLarge { len: len64 }.into());
@@ -230,8 +499,164 @@ pub fn read_mat_compressed(r: &mut Reader<'_>) -> Result<Mat> {
                 }
             }
         }
+        Compression::Delta | Compression::TopK => unreachable!("handled above"),
     }
-    Ok(m)
+    Ok(Some(m))
+}
+
+/// Shared decode path for the stateful codecs once the 17-byte header
+/// has validated. Reads the `[kind][gen]` header, then either
+/// resynchronizes on a keyframe or applies/discards a delta frame. Every
+/// promised byte is consumed even on a discard, so `expect_end` holds
+/// for stale frames too.
+fn read_stateful_body(
+    r: &mut Reader<'_>,
+    codec: Compression,
+    rows: usize,
+    cols: usize,
+    len: usize,
+    state: Option<&mut CodecState>,
+) -> Result<Option<Mat>> {
+    let kind = r.u8()?;
+    let gen = r.u64()?;
+    match kind {
+        KIND_KEYFRAME => {
+            // dense sync point: unconditional accept, state jumps to the
+            // frame's generation (len ≤ 2^27 keeps 8·len under MAX_FRAME)
+            let need = 8 * len as u64;
+            if (r.remaining() as u64) < need {
+                return Err(DecodeError::Truncated { need, have: r.remaining() as u64 }.into());
+            }
+            let mut m = Mat::zeros(rows, cols);
+            for i in 0..len {
+                m.as_mut_slice()[i] = r.f64()?;
+            }
+            if let Some(st) = state {
+                st.reference = Some(m.clone());
+                st.gen = gen;
+                st.errfb = None;
+            }
+            Ok(Some(m))
+        }
+        KIND_DELTA => match codec {
+            Compression::Delta => read_delta_body(r, rows, cols, len, gen, state),
+            Compression::TopK => read_topk_body(r, rows, cols, len, gen, state),
+            _ => unreachable!("only stateful codecs reach here"),
+        },
+        k => bail!("stateful compressed frame kind {k} unknown"),
+    }
+}
+
+/// Apply (or validated-skip) an XOR-delta frame. `base` is the encoder's
+/// pre-frame generation; a mismatch — or decoding without state at all —
+/// means this decoder does not hold the reference the frame was cut
+/// against.
+fn read_delta_body(
+    r: &mut Reader<'_>,
+    rows: usize,
+    cols: usize,
+    len: usize,
+    base: u64,
+    state: Option<&mut CodecState>,
+) -> Result<Option<Mat>> {
+    // nibble table first: its length depends only on the validated dims
+    let table_len = len.div_ceil(2);
+    if r.remaining() < table_len {
+        return Err(
+            DecodeError::Truncated { need: table_len as u64, have: r.remaining() as u64 }.into()
+        );
+    }
+    // copy out (bounded by bytes actually present) so the reader can be
+    // re-borrowed for the packed payload
+    let table = r.bytes(table_len)?.to_vec();
+    let mut need = 0usize;
+    for i in 0..len {
+        let sig = (table[i / 2] >> (4 * (i % 2))) & 0xF;
+        if sig > 8 {
+            bail!("delta frame corrupt: lane {i} claims {sig} significant bytes");
+        }
+        need += sig as usize;
+    }
+    if r.remaining() < need {
+        return Err(
+            DecodeError::Truncated { need: need as u64, have: r.remaining() as u64 }.into()
+        );
+    }
+    let packed = r.bytes(need)?;
+    // frame fully consumed — only now decide whether it applies
+    let st = match state {
+        None => return Err(DecodeError::StaleReference { want: base, have: 0 }.into()),
+        Some(st) => st,
+    };
+    if st.gen != base || st.reference.as_ref().map(|m| m.shape()) != Some((rows, cols)) {
+        return Ok(None);
+    }
+    let reference = st.reference.as_mut().expect("shape-checked above");
+    let rd = reference.as_mut_slice();
+    let mut at = 0usize;
+    for i in 0..len {
+        let sig = ((table[i / 2] >> (4 * (i % 2))) & 0xF) as usize;
+        let mut d = [0u8; 8];
+        d[..sig].copy_from_slice(&packed[at..at + sig]);
+        at += sig;
+        rd[i] = f64::from_bits(rd[i].to_bits() ^ u64::from_le_bytes(d));
+    }
+    st.gen = base + 1;
+    Ok(Some(reference.clone()))
+}
+
+/// Apply (or validated-skip) a sparse top-k frame. The index table is
+/// validated in full (strictly ascending, in range) before the first
+/// reference lane is touched, so a hostile frame can never leave the
+/// state half-applied.
+fn read_topk_body(
+    r: &mut Reader<'_>,
+    rows: usize,
+    cols: usize,
+    len: usize,
+    base: u64,
+    state: Option<&mut CodecState>,
+) -> Result<Option<Mat>> {
+    if r.remaining() < 4 {
+        return Err(DecodeError::Truncated { need: 4, have: r.remaining() as u64 }.into());
+    }
+    let k = r.u32()? as usize;
+    if k > len {
+        return Err(DecodeError::BadSparseIndex { index: k as u64, len: len as u64 }.into());
+    }
+    let need = 12 * k;
+    if r.remaining() < need {
+        return Err(
+            DecodeError::Truncated { need: need as u64, have: r.remaining() as u64 }.into()
+        );
+    }
+    let mut entries = Vec::with_capacity(k);
+    let mut last: i64 = -1;
+    for _ in 0..k {
+        let idx = r.u32()?;
+        let val = r.f64()?;
+        if i64::from(idx) <= last || idx as usize >= len {
+            return Err(
+                DecodeError::BadSparseIndex { index: idx as u64, len: len as u64 }.into()
+            );
+        }
+        last = i64::from(idx);
+        entries.push((idx as usize, val));
+    }
+    let st = match state {
+        None => return Err(DecodeError::StaleReference { want: base, have: 0 }.into()),
+        Some(st) => st,
+    };
+    if st.gen != base || st.reference.as_ref().map(|m| m.shape()) != Some((rows, cols)) {
+        return Ok(None);
+    }
+    let reference = st.reference.as_mut().expect("shape-checked above");
+    let rd = reference.as_mut_slice();
+    for &(idx, val) in &entries {
+        rd[idx] += val;
+    }
+    st.gen = base + 1;
+    Ok(Some(reference.clone()))
 }
 
 #[cfg(test)]
@@ -403,6 +828,311 @@ mod tests {
         assert_eq!(Compression::parse("int8").unwrap(), Compression::Int8);
         assert_eq!(Compression::parse("f32").unwrap(), Compression::F32);
         assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("delta").unwrap(), Compression::Delta);
+        assert_eq!(Compression::parse("topk").unwrap(), Compression::TopK);
+        assert_eq!(Compression::parse("delta+topk").unwrap(), Compression::TopK);
         assert!(Compression::parse("gzip").is_err());
+    }
+
+    const ALL: [Compression; 5] = [
+        Compression::None,
+        Compression::F32,
+        Compression::Int8,
+        Compression::Delta,
+        Compression::TopK,
+    ];
+
+    #[test]
+    fn stateless_roundtrip_all_codecs_edge_shapes() {
+        // empty, single-column, odd: every codec must survive the shapes
+        // the consensus factor actually takes (stateful codecs emit a
+        // gen-0 keyframe here, which is lossless for all of them)
+        let mut rng = Pcg64::new(7);
+        for (rows, cols) in [(0, 3), (1, 1), (7, 1), (5, 3), (1, 4)] {
+            let m = Mat::gaussian(rows, cols, &mut rng);
+            for codec in ALL {
+                let mut buf = Vec::new();
+                put_mat_compressed(&mut buf, &m, codec);
+                let mut r = Reader::new(&buf);
+                let out = read_mat_compressed(&mut r).unwrap();
+                r.expect_end().unwrap();
+                assert_eq!(out.shape(), m.shape(), "{codec:?} {rows}x{cols}");
+                if !matches!(codec, Compression::F32 | Compression::Int8) {
+                    assert_eq!(out, m, "{codec:?} {rows}x{cols}");
+                }
+            }
+        }
+    }
+
+    /// Drive a full encoder→decoder stream and return the decodes.
+    fn stream(frames: &[Mat], codec: Compression) -> Vec<Mat> {
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        frames
+            .iter()
+            .map(|m| {
+                let mut buf = Vec::new();
+                put_mat_stateful(&mut buf, m, codec, &mut enc);
+                let mut r = Reader::new(&buf);
+                let out = read_mat_stateful(&mut r, &mut dec).unwrap().expect("in-sync");
+                r.expect_end().unwrap();
+                assert_eq!(enc.gen(), dec.gen());
+                out
+            })
+            .collect()
+    }
+
+    #[test]
+    fn delta_stream_is_bit_exact_and_small() {
+        // slowly-moving factor: keyframe then deltas, every reconstruction
+        // bitwise equal, steady-state frames far below the dense 8n bytes
+        let mut rng = Pcg64::new(8);
+        let mut m = Mat::gaussian(32, 4, &mut rng);
+        let mut frames = vec![m.clone()];
+        for _ in 0..6 {
+            let step = Mat::gaussian(32, 4, &mut rng);
+            for (x, s) in m.as_mut_slice().iter_mut().zip(step.as_slice()) {
+                *x += 1e-6 * s;
+            }
+            frames.push(m.clone());
+        }
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        for (t, f) in frames.iter().enumerate() {
+            let mut buf = Vec::new();
+            put_mat_stateful(&mut buf, f, Compression::Delta, &mut enc);
+            if t > 0 {
+                // small perturbations keep sign/exponent/leading mantissa:
+                // the stripped frame must beat dense by a wide margin
+                assert!(buf.len() < 17 + 8 * 32 * 4 / 2, "round {t}: {} bytes", buf.len());
+            }
+            let mut r = Reader::new(&buf);
+            let out = read_mat_stateful(&mut r, &mut dec).unwrap().unwrap();
+            r.expect_end().unwrap();
+            assert_eq!(&out, f, "round {t} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn delta_stream_exact_under_arbitrary_jumps() {
+        // bit-exactness is unconditional — even when every lane changes
+        // completely the XOR residual reconstructs exactly
+        let mut rng = Pcg64::new(9);
+        let frames: Vec<Mat> = (0..5).map(|_| Mat::gaussian(9, 3, &mut rng)).collect();
+        let out = stream(&frames, Compression::Delta);
+        for (o, f) in out.iter().zip(&frames) {
+            assert_eq!(o, f);
+        }
+    }
+
+    #[test]
+    fn topk_error_feedback_converges() {
+        // hold the target fixed: each frame ships the k largest residuals,
+        // error feedback delivers the rest over later rounds, so the
+        // reconstruction converges to the target
+        let mut rng = Pcg64::new(10);
+        let target = Mat::gaussian(16, 4, &mut rng);
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        // keyframe from a different start, then repeated deltas at target
+        let start = Mat::gaussian(16, 4, &mut rng);
+        let mut buf = Vec::new();
+        put_mat_stateful(&mut buf, &start, Compression::TopK, &mut enc);
+        read_mat_stateful(&mut Reader::new(&buf), &mut dec).unwrap().unwrap();
+        let mut last_err = f64::INFINITY;
+        for round in 0..40 {
+            let mut buf = Vec::new();
+            put_mat_stateful(&mut buf, &target, Compression::TopK, &mut enc);
+            let out = read_mat_stateful(&mut Reader::new(&buf), &mut dec).unwrap().unwrap();
+            let err = (&out - &target).frob_norm() / target.frob_norm();
+            assert!(
+                err <= last_err + 1e-12,
+                "round {round}: err grew {last_err} -> {err}"
+            );
+            last_err = err;
+        }
+        // 40 rounds × k = n/16 is 2.5 full passes with exact values:
+        // residual must be tiny
+        assert!(last_err < 1e-9, "top-k EF did not converge: {last_err}");
+    }
+
+    #[test]
+    fn stale_delta_is_a_clean_discard() {
+        let mut rng = Pcg64::new(11);
+        let frames: Vec<Mat> = (0..3).map(|_| Mat::gaussian(6, 2, &mut rng)).collect();
+        for codec in [Compression::Delta, Compression::TopK] {
+            let mut enc = CodecState::new();
+            let mut dec = CodecState::new();
+            let mut encoded: Vec<Vec<u8>> = Vec::new();
+            for f in &frames {
+                let mut buf = Vec::new();
+                put_mat_stateful(&mut buf, f, codec, &mut enc);
+                encoded.push(buf);
+            }
+            // keyframe, then frame 1 applies
+            read_mat_stateful(&mut Reader::new(&encoded[0]), &mut dec).unwrap().unwrap();
+            read_mat_stateful(&mut Reader::new(&encoded[1]), &mut dec).unwrap().unwrap();
+            let gen_before = dec.gen();
+            let ref_before = dec.reference().unwrap().clone();
+            // a re-sent duplicate of frame 1: stale, fully consumed, state
+            // untouched
+            let mut r = Reader::new(&encoded[1]);
+            assert!(read_mat_stateful(&mut r, &mut dec).unwrap().is_none(), "{codec:?}");
+            r.expect_end().unwrap();
+            assert_eq!(dec.gen(), gen_before);
+            assert_eq!(dec.reference().unwrap(), &ref_before);
+            // the stream continues cleanly after the discard
+            let out =
+                read_mat_stateful(&mut Reader::new(&encoded[2]), &mut dec).unwrap().unwrap();
+            if codec == Compression::Delta {
+                assert_eq!(out, frames[2]);
+            }
+        }
+    }
+
+    #[test]
+    fn stateless_decode_of_delta_frame_is_stale_error() {
+        let mut rng = Pcg64::new(12);
+        let mut enc = CodecState::new();
+        let a = Mat::gaussian(4, 2, &mut rng);
+        let b = Mat::gaussian(4, 2, &mut rng);
+        let mut buf = Vec::new();
+        put_mat_stateful(&mut buf, &a, Compression::Delta, &mut enc);
+        buf.clear();
+        put_mat_stateful(&mut buf, &b, Compression::Delta, &mut enc);
+        let err = format!("{}", read_mat_compressed(&mut Reader::new(&buf)).unwrap_err());
+        assert!(err.contains("stale codec reference"), "{err}");
+    }
+
+    #[test]
+    fn resync_keyframe_rejoins_the_stream() {
+        let mut rng = Pcg64::new(13);
+        let frames: Vec<Mat> = (0..4).map(|_| Mat::gaussian(5, 3, &mut rng)).collect();
+        let mut enc = CodecState::new();
+        let mut in_sync = CodecState::new();
+        let mut behind = CodecState::new();
+        for (t, f) in frames.iter().enumerate() {
+            let mut buf = Vec::new();
+            put_mat_stateful(&mut buf, f, Compression::Delta, &mut enc);
+            read_mat_stateful(&mut Reader::new(&buf), &mut in_sync).unwrap().unwrap();
+            if t < 2 {
+                // `behind` misses frames 2..: later deltas are stale for it
+                read_mat_stateful(&mut Reader::new(&buf), &mut behind).unwrap().unwrap();
+            } else {
+                assert!(read_mat_stateful(&mut Reader::new(&buf), &mut behind)
+                    .unwrap()
+                    .is_none());
+            }
+        }
+        // an individual resync keyframe lands `behind` exactly where the
+        // in-sync peers are — without advancing the shared stream
+        let gen = enc.gen();
+        let mut buf = Vec::new();
+        put_mat_resync(&mut buf, Compression::Delta, &enc);
+        let out = read_mat_stateful(&mut Reader::new(&buf), &mut behind).unwrap().unwrap();
+        assert_eq!(enc.gen(), gen);
+        assert_eq!(behind.gen(), in_sync.gen());
+        assert_eq!(&out, &frames[3]);
+        // and the next shared delta applies to both identically
+        let mut rng2 = Pcg64::new(14);
+        let next = Mat::gaussian(5, 3, &mut rng2);
+        let mut buf = Vec::new();
+        put_mat_stateful(&mut buf, &next, Compression::Delta, &mut enc);
+        let a = read_mat_stateful(&mut Reader::new(&buf), &mut in_sync).unwrap().unwrap();
+        let b = read_mat_stateful(&mut Reader::new(&buf), &mut behind).unwrap().unwrap();
+        assert_eq!(a, next);
+        assert_eq!(b, next);
+    }
+
+    /// Hand-build a top-k delta frame with a chosen entry table.
+    fn topk_frame(rows: u32, cols: u32, base: u64, entries: &[(u32, f64)]) -> Vec<u8> {
+        let mut buf = vec![TAG_TOPK];
+        put_u32(&mut buf, rows);
+        put_u32(&mut buf, cols);
+        put_u64(&mut buf, rows as u64 * cols as u64);
+        buf.push(KIND_DELTA);
+        put_u64(&mut buf, base);
+        put_u32(&mut buf, entries.len() as u32);
+        for &(i, v) in entries {
+            put_u32(&mut buf, i);
+            put_f64(&mut buf, v);
+        }
+        buf
+    }
+
+    #[test]
+    fn hostile_sparse_frames_rejected_without_state_damage() {
+        // set up a live decoder at gen 1 over a 4x2 reference
+        let mut rng = Pcg64::new(15);
+        let m = Mat::gaussian(4, 2, &mut rng);
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        let mut buf = Vec::new();
+        put_mat_stateful(&mut buf, &m, Compression::TopK, &mut enc);
+        read_mat_stateful(&mut Reader::new(&buf), &mut dec).unwrap().unwrap();
+        let reference = dec.reference().unwrap().clone();
+        // lying index (out of range), non-ascending table, k > n: all
+        // typed errors, none may touch the reference or the generation
+        let bad = [
+            topk_frame(4, 2, 1, &[(8, 1.0)]),
+            topk_frame(4, 2, 1, &[(3, 1.0), (2, 1.0)]),
+            topk_frame(4, 2, 1, &[(1, 1.0), (1, 1.0)]),
+            {
+                let mut f = topk_frame(4, 2, 1, &[]);
+                let at = f.len() - 4;
+                f[at..].copy_from_slice(&9u32.to_le_bytes()); // k=9 > n=8
+                f
+            },
+            {
+                // truncated index table: k promises 2 entries, one present
+                let mut f = topk_frame(4, 2, 1, &[(0, 1.0), (5, 2.0)]);
+                f.truncate(f.len() - 12);
+                let at = 17 + 9;
+                f[at..at + 4].copy_from_slice(&2u32.to_le_bytes());
+                f
+            },
+        ];
+        for (i, f) in bad.iter().enumerate() {
+            assert!(
+                read_mat_stateful(&mut Reader::new(f), &mut dec).is_err(),
+                "hostile frame {i} accepted"
+            );
+            assert_eq!(dec.gen(), 1, "hostile frame {i} advanced gen");
+            assert_eq!(dec.reference().unwrap(), &reference, "hostile frame {i} mutated state");
+        }
+        // a valid frame still applies afterwards
+        let good = topk_frame(4, 2, 1, &[(0, 0.5), (3, -0.25)]);
+        assert!(read_mat_stateful(&mut Reader::new(&good), &mut dec).unwrap().is_some());
+        assert_eq!(dec.gen(), 2);
+    }
+
+    #[test]
+    fn stateful_hostile_headers_never_panic() {
+        // same property as `hostile_headers_never_panic`, but against a
+        // live decoder state: arbitrary stateful frames either decode
+        // (keyframes resync by design), discard cleanly, or fail typed
+        let mut rng = Pcg64::new(0xBEEF);
+        let mut dec = CodecState::new();
+        let m = Mat::zeros(4, 2);
+        let mut enc = CodecState::new();
+        let mut buf = Vec::new();
+        put_mat_stateful(&mut buf, &m, Compression::Delta, &mut enc);
+        read_mat_stateful(&mut Reader::new(&buf), &mut dec).unwrap().unwrap();
+        for _ in 0..20_000 {
+            let tag = if rng.next_u64() % 2 == 0 { TAG_DELTA } else { TAG_TOPK };
+            let rows = (rng.next_u64() % 6) as u32;
+            let cols = (rng.next_u64() % 4) as u32;
+            let mut f = vec![tag];
+            put_u32(&mut f, rows);
+            put_u32(&mut f, cols);
+            put_u64(&mut f, rows as u64 * cols as u64);
+            f.push((rng.next_u64() % 3) as u8);
+            put_u64(&mut f, rng.next_u64() % 4);
+            let extra = (rng.next_u64() % 128) as usize;
+            for _ in 0..extra {
+                f.push(rng.next_u64() as u8);
+            }
+            let _ = read_mat_stateful(&mut Reader::new(&f), &mut dec);
+        }
     }
 }

@@ -60,6 +60,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::mem;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::anyhow;
@@ -69,9 +70,9 @@ use crate::linalg::Mat;
 use crate::rng::Pcg64;
 
 use super::aggregate::{combine, consensus_dispersion, finalize, Partial};
-use super::compress::Compression;
+use super::compress::{CodecState, Compression};
 use super::metrics::{CommStats, RoundRecord};
-use super::protocol::{ToClient, ToServer};
+use super::protocol::{self, round_wire_size, update_wire_size, ToClient, ToServer};
 use super::server::{FaultPolicy, JobMode, ServerConfig, ServerOutcome};
 
 /// Reactor-assigned connection identity (not a client id — clients name
@@ -96,6 +97,13 @@ pub enum Action {
     /// coordinator (the relay driver's `RelaySession` stamps and sends
     /// it). Never emitted by root jobs.
     Upstream { job: JobId, bytes: Vec<u8> },
+    /// One shared encoded frame for many endpoints: the body was encoded
+    /// exactly once and each peer only needs its own envelope seq
+    /// restamped. Drivers with scatter support enqueue the shared buffer
+    /// per peer without copying the payload; others fall back to
+    /// `Reactor::send_shared`'s clone-per-peer default. The body's
+    /// envelope seq field is 0 (unstamped).
+    Broadcast { peers: Vec<(EndpointId, u32)>, body: Arc<Vec<u8>> },
 }
 
 /// Live counters for one registered job, snapshotted by
@@ -108,6 +116,10 @@ pub struct JobProgress {
     pub rounds_closed: usize,
     pub bytes_down: u64,
     pub bytes_up: u64,
+    /// what `bytes_down` would have been at `Compression::None`
+    pub dense_down: u64,
+    /// what `bytes_up` would have been at `Compression::None`
+    pub dense_up: u64,
     pub members_alive: usize,
 }
 
@@ -134,6 +146,14 @@ struct Member {
     /// first round this member participates in (0 for founding members,
     /// `current + 1` for elastic joiners)
     active_from: usize,
+    /// decoder state for this member's upstream update stream (stateful
+    /// codecs only; idle under dense/F32/Int8)
+    up_codec: CodecState,
+    /// generation of the shared downstream codec stream this member's
+    /// decoder has been brought up to. Behind the stream (grace window,
+    /// fresh rejoin, unselected rounds) ⇒ the next broadcast sends this
+    /// member an individual resync keyframe instead of the shared delta.
+    down_gen: u64,
 }
 
 /// Outcome of a `Hello`, telling the engine how to adjust its
@@ -155,6 +175,8 @@ struct RoundAccum {
     slots: BTreeMap<usize, Partial>,
     bytes_down0: u64,
     bytes_up0: u64,
+    dense_down0: u64,
+    dense_up0: u64,
 }
 
 enum Phase {
@@ -195,6 +217,10 @@ struct RelayState {
     inbox: Option<RelayCmd>,
     /// upstream said Finish; only re-sends remain
     finished: bool,
+    /// encoder state for the relay's upstream partial stream (`Delta`
+    /// re-deltas losslessly; `TopK` re-sparsifies with its own error
+    /// feedback; other codecs send partials dense)
+    up_codec: CodecState,
 }
 
 struct Job {
@@ -213,6 +239,14 @@ struct Job {
     withheld: Vec<usize>,
     bytes_down: u64,
     bytes_up: u64,
+    /// dense-equivalent byte counters: every frame priced at
+    /// `Compression::None`, so `dense / bytes` is the achieved wire
+    /// compression ratio
+    dense_down: u64,
+    dense_up: u64,
+    /// shared downstream encoder: each Round broadcast is encoded once
+    /// against this stream and fanned out to every in-sync member
+    down_codec: CodecState,
     result: Option<Result<ServerOutcome>>,
     phase: Phase,
     /// `Some` iff `cfg.mode` is [`JobMode::Relay`]
@@ -248,6 +282,7 @@ impl Job {
                     cached_up: None,
                     inbox: None,
                     finished: false,
+                    up_codec: CodecState::new(),
                 })
             }
             JobMode::Root => None,
@@ -267,6 +302,9 @@ impl Job {
             withheld: Vec::new(),
             bytes_down: 0,
             bytes_up: 0,
+            dense_down: 0,
+            dense_up: 0,
+            down_codec: CodecState::new(),
             result: None,
             phase: Phase::Handshake { deadline: None },
             relay,
@@ -337,7 +375,72 @@ impl Job {
         super::protocol::restamp_seq(&mut bytes, m.down_seq);
         let ep = m.ep;
         self.bytes_down += bytes.len() as u64;
+        // control frames and resync keyframes are their own dense
+        // equivalent; only the shared Round/Update paths price frames
+        // at `Compression::None` separately
+        self.dense_down += bytes.len() as u64;
         actions.push(Action::Send { ep, bytes });
+    }
+
+    /// Broadcast one `Round` message: encode the shared frame exactly
+    /// once (advancing the shared downstream codec stream) and fan the
+    /// same buffer out to every connected in-sync recipient; members
+    /// whose decoder is behind the stream (grace window, fresh rejoin,
+    /// unselected rounds) get an individual resync keyframe instead.
+    /// Disconnected recipients get nothing — the resume path
+    /// re-delivers.
+    fn broadcast_round(
+        &mut self,
+        round: u32,
+        k_local: u32,
+        eta: f64,
+        recipients: &[usize],
+        actions: &mut Vec<Action>,
+    ) {
+        let codec = self.cfg.compression;
+        let dense = round_wire_size(self.cfg.m, self.cfg.rank) as u64;
+        let pre_gen = self.down_codec.gen();
+        let msg = ToClient::Round { round, k_local, eta, u: self.u.clone() };
+        // the shared stream advances whether or not anyone is connected
+        // to hear this frame: decoder references track the message
+        // stream, so absent members fall behind and resync later
+        let body = Arc::new(msg.encode_stateful(self.id, 0, codec, &mut self.down_codec));
+        let new_gen = self.down_codec.gen();
+        let mut peers: Vec<(EndpointId, u32)> = Vec::new();
+        let mut resync: Vec<usize> = Vec::new();
+        for &c in recipients {
+            let Some(m) = self.members.get_mut(&c) else { continue };
+            if !m.connected {
+                continue;
+            }
+            if codec.is_stateful() && m.down_gen != pre_gen {
+                resync.push(c);
+                continue;
+            }
+            m.down_gen = new_gen;
+            m.down_seq += 1;
+            peers.push((m.ep, m.down_seq));
+            self.bytes_down += body.len() as u64;
+            self.dense_down += dense;
+        }
+        if !peers.is_empty() {
+            actions.push(Action::Broadcast { peers, body });
+        }
+        for c in resync {
+            let frame = protocol::encode_round_resync(
+                self.id,
+                0,
+                round,
+                k_local,
+                eta,
+                codec,
+                &self.down_codec,
+            );
+            if let Some(m) = self.members.get_mut(&c) {
+                m.down_gen = new_gen;
+            }
+            self.send_to(c, frame, actions);
+        }
     }
 
     /// Envelope-level replay guard: reject any stamped frame whose seq
@@ -393,23 +496,13 @@ impl Job {
 
         let bytes_down0 = self.bytes_down;
         let bytes_up0 = self.bytes_up;
-        let msg = ToClient::Round {
-            round: t as u32,
-            k_local: self.cfg.k_local as u32,
-            eta,
-            u: self.u.clone(),
-        };
-        let encoded = msg.encode_with(self.id, self.cfg.compression);
-        let mut pending = BTreeSet::new();
-        for &c in &selected {
-            // a member inside its grace window stays selected (and
-            // pending) so a resume mid-round rejoins this round, but
-            // there is no link to write to until it comes back
-            if self.members.get(&c).is_some_and(|m| m.connected) {
-                self.send_to(c, encoded.clone(), actions);
-            }
-            pending.insert(c);
-        }
+        let dense_down0 = self.dense_down;
+        let dense_up0 = self.dense_up;
+        // a member inside its grace window stays selected (and pending)
+        // so a resume mid-round rejoins this round, but there is no
+        // link to write to until it comes back
+        self.broadcast_round(t as u32, self.cfg.k_local as u32, eta, &selected, actions);
+        let pending: BTreeSet<usize> = selected.into_iter().collect();
         self.phase = Phase::Collecting(RoundAccum {
             started: now,
             deadline: now + self.cfg.round_timeout,
@@ -418,6 +511,8 @@ impl Job {
             slots: BTreeMap::new(),
             bytes_down0,
             bytes_up0,
+            dense_down0,
+            dense_up0,
         });
     }
 
@@ -464,6 +559,10 @@ impl Job {
             (Some(den), true) => Some(combined.err_num_sum / den),
             _ => None,
         };
+        let bytes_round =
+            (self.bytes_down - acc.bytes_down0) + (self.bytes_up - acc.bytes_up0);
+        let dense_round =
+            (self.dense_down - acc.dense_down0) + (self.dense_up - acc.dense_up0);
         let record = RoundRecord {
             round: t,
             err,
@@ -477,11 +576,25 @@ impl Job {
             bytes_up: self.bytes_up - acc.bytes_up0,
             participants: combined.count,
             fan_in,
+            compression_ratio: if bytes_round == 0 {
+                1.0
+            } else {
+                dense_round as f64 / bytes_round as f64
+            },
         };
 
         if let Some(rs) = self.relay.as_mut() {
-            // forward the partial verbatim (lossless codec: quantizing a
-            // partial sum would break the bitwise tree ≡ star identity)
+            // `Delta` re-deltas the combined partial against the relay's
+            // own upstream stream (still losslessly bit-exact, so the
+            // tree ≡ star identity holds); `TopK` re-sparsifies with the
+            // relay's own error feedback; quantizing codecs fall back to
+            // dense — Int8-quantizing a partial sum would break bitwise
+            // tree ≡ star
+            let up_codec = match self.cfg.compression {
+                Compression::Delta => Compression::Delta,
+                Compression::TopK => Compression::TopK,
+                _ => Compression::None,
+            };
             let msg = ToServer::Update {
                 client: rs.span_lo as u32,
                 round: t as u32,
@@ -494,7 +607,11 @@ impl Job {
                 secs_sum: combined.secs_sum,
                 u: combined.sum,
             };
-            let bytes = msg.encode_with(self.id, Compression::None);
+            let bytes = if up_codec.is_stateful() {
+                msg.encode_stateful(self.id, 0, up_codec, &mut rs.up_codec)
+            } else {
+                msg.encode_with(self.id, Compression::None)
+            };
             rs.last_round = Some(t as u32);
             rs.cached_up = Some(bytes.clone());
             self.rounds.push(record);
@@ -602,15 +719,10 @@ impl Job {
         }
         let bytes_down0 = self.bytes_down;
         let bytes_up0 = self.bytes_up;
-        let msg = ToClient::Round { round, k_local, eta, u: self.u.clone() };
-        let encoded = msg.encode_with(self.id, self.cfg.compression);
-        let mut pending = BTreeSet::new();
-        for &c in &active {
-            if self.members.get(&c).is_some_and(|m| m.connected) {
-                self.send_to(c, encoded.clone(), actions);
-            }
-            pending.insert(c);
-        }
+        let dense_down0 = self.dense_down;
+        let dense_up0 = self.dense_up;
+        self.broadcast_round(round, k_local, eta, &active, actions);
+        let pending: BTreeSet<usize> = active.into_iter().collect();
         self.phase = Phase::Collecting(RoundAccum {
             started: now,
             deadline: now + self.cfg.round_timeout,
@@ -619,6 +731,8 @@ impl Job {
             slots: BTreeMap::new(),
             bytes_down0,
             bytes_up0,
+            dense_down0,
+            dense_up0,
         });
     }
 
@@ -824,6 +938,11 @@ impl Job {
             m.last_up_seq = seq;
             m.down_seq = 0;
             m.active_from = active_from;
+            // fresh session ⇒ fresh codec streams: the client restarted
+            // and lost its references, so its first upload must be a
+            // keyframe and its first Round must be a resync keyframe
+            m.up_codec.reset();
+            m.down_gen = 0;
         } else {
             if active_from > 0 {
                 crate::log_warn!(
@@ -845,6 +964,8 @@ impl Job {
                     last_up_seq: seq,
                     down_seq: 0,
                     active_from,
+                    up_codec: CodecState::new(),
+                    down_gen: 0,
                 },
             );
         }
@@ -933,6 +1054,10 @@ impl Job {
             m.last_up_seq = seq;
             m.down_seq = 0;
             m.active_from = active_from;
+            // the expired session's codec streams died with it; the new
+            // token tells the client to reset its ends too
+            m.up_codec.reset();
+            m.down_gen = 0;
             let welcome = ToClient::Welcome { token: new_token }
                 .encode_with(self.id, super::compress::Compression::None);
             self.send_to(client, welcome, actions);
@@ -969,17 +1094,36 @@ impl Job {
         enum Redeliver {
             Nothing,
             Frame(Vec<u8>),
+            /// resync keyframe for a stateful stream: also declares the
+            /// member caught up to the shared encoder generation
+            Sync(Vec<u8>),
             Bye,
         }
         let redeliver = match &self.phase {
             Phase::Collecting(acc) if acc.pending.contains(&client) => {
-                let msg = ToClient::Round {
-                    round: self.round as u32,
-                    k_local: self.cfg.k_local as u32,
-                    eta: acc.eta,
-                    u: self.u.clone(),
-                };
-                Redeliver::Frame(msg.encode_with(self.id, self.cfg.compression))
+                if self.cfg.compression.is_stateful() {
+                    // the shared stream may have advanced while this
+                    // member was away: a resync keyframe carries the
+                    // shared reconstruction and lands the member exactly
+                    // in sync (without advancing the stream)
+                    Redeliver::Sync(protocol::encode_round_resync(
+                        self.id,
+                        0,
+                        self.round as u32,
+                        self.cfg.k_local as u32,
+                        acc.eta,
+                        self.cfg.compression,
+                        &self.down_codec,
+                    ))
+                } else {
+                    let msg = ToClient::Round {
+                        round: self.round as u32,
+                        k_local: self.cfg.k_local as u32,
+                        eta: acc.eta,
+                        u: self.u.clone(),
+                    };
+                    Redeliver::Frame(msg.encode_with(self.id, self.cfg.compression))
+                }
             }
             Phase::Finishing { pending, .. } if pending.contains_key(&client) => {
                 let msg = ToClient::Finish { reveal: pending[&client], final_u: self.u.clone() };
@@ -995,6 +1139,13 @@ impl Job {
         match redeliver {
             Redeliver::Nothing => {}
             Redeliver::Frame(bytes) => self.send_to(client, bytes, actions),
+            Redeliver::Sync(bytes) => {
+                let gen = self.down_codec.gen();
+                if let Some(m) = self.members.get_mut(&client) {
+                    m.down_gen = gen;
+                }
+                self.send_to(client, bytes, actions);
+            }
             Redeliver::Bye => {
                 let bye = ToClient::Shutdown
                     .encode_with(self.id, super::compress::Compression::None);
@@ -1481,8 +1632,22 @@ impl RoundEngine {
             rounds_closed: j.rounds.len(),
             bytes_down: j.bytes_down,
             bytes_up: j.bytes_up,
+            dense_down: j.dense_down,
+            dense_up: j.dense_up,
             members_alive: j.members.values().filter(|m| m.alive).count(),
         })
+    }
+
+    /// The upstream session a relay job feeds was replaced (its driver
+    /// saw a `Welcome` with a new token): upstream now holds a fresh
+    /// decoder, so the relay's upstream codec stream must restart at a
+    /// keyframe, and any cached reply from the dead session would only
+    /// be discarded as stale over there.
+    pub fn reset_upstream_codec(&mut self, job: JobId) {
+        if let Some(rs) = self.jobs.get_mut(&job).and_then(|j| j.relay.as_mut()) {
+            rs.up_codec.reset();
+            rs.cached_up = None;
+        }
     }
 
     /// A new endpoint appeared. Nothing happens until it says `Hello`.
@@ -1502,8 +1667,34 @@ impl RoundEngine {
     /// Feed one received message. `now` is the caller's monotonic clock.
     pub fn handle_message(&mut self, ep: EndpointId, bytes: &[u8], now: Duration) -> Vec<Action> {
         let mut actions = Vec::new();
-        let (job_id, seq, msg) = match ToServer::decode_full(bytes) {
-            Ok(v) => v,
+        // a bound endpoint decodes against its member's upstream codec
+        // state (a stateful stream advances the decoder reference even
+        // for frames later shed by protocol guards: references track the
+        // message stream, not protocol acceptance). Unbound endpoints
+        // can only legitimately say Hello, which carries no matrix.
+        let decoded = match self.bindings.get(&ep) {
+            Some(&(bj, bc)) => {
+                match self.jobs.get_mut(&bj).and_then(|j| j.members.get_mut(&bc)) {
+                    Some(m) => ToServer::decode_full_stateful(bytes, &mut m.up_codec),
+                    None => ToServer::decode_full(bytes).map(Some),
+                }
+            }
+            None => ToServer::decode_full(bytes).map(Some),
+        };
+        let (job_id, seq, msg) = match decoded {
+            Ok(Some(v)) => v,
+            Ok(None) => {
+                // a delta frame against a stale reference: a reconnect
+                // re-send of an update this decoder already applied.
+                // Clean discard — metered, never a protocol violation.
+                if let Some(&(bj, _)) = self.bindings.get(&ep) {
+                    if let Some(job) = self.jobs.get_mut(&bj) {
+                        job.bytes_up += bytes.len() as u64;
+                        job.dense_up += bytes.len() as u64;
+                    }
+                }
+                return actions;
+            }
             Err(err) => {
                 // a corrupt stream makes the endpoint unusable: treat it
                 // as a departure and let FaultPolicy adjudicate (Strict
@@ -1546,6 +1737,7 @@ impl RoundEngine {
                 return actions;
             }
             job.bytes_up += bytes.len() as u64;
+            job.dense_up += bytes.len() as u64;
             match job.on_hello(ep, client, cols as usize, token, span as usize, seq, now, &mut actions)
             {
                 HelloOutcome::Accept { unbind } => {
@@ -1569,6 +1761,12 @@ impl RoundEngine {
             return actions;
         }
         job.bytes_up += bytes.len() as u64;
+        job.dense_up += match &msg {
+            // updates are priced at their `Compression::None` size so
+            // `dense_up / bytes_up` reads as the achieved wire ratio
+            ToServer::Update { .. } => update_wire_size(job.cfg.m, job.cfg.rank) as u64,
+            _ => bytes.len() as u64,
+        };
         if !job.accept_up_seq(bound_client, seq) {
             crate::log_warn!(
                 "engine",
@@ -1853,13 +2051,16 @@ mod tests {
         engine.handle_message(2, &update_for(1, 0, 0, 8, 2), Duration::from_millis(3));
         let actions = engine.handle_message(3, &update_for(1, 1, 0, 8, 2), Duration::from_millis(3));
         assert_eq!(engine.round_of(1), Some(1), "the healthy tenant keeps making progress");
+        let mut recipients = 0;
         for a in &actions {
-            if let Action::Send { bytes, .. } = a {
-                let (job, _, msg) = ToClient::decode_full(bytes).expect("valid broadcast");
+            if let Action::Broadcast { peers, body } = a {
+                let (job, _, msg) = ToClient::decode_full(body).expect("valid broadcast");
                 assert_eq!(job, 1);
                 assert!(matches!(msg, ToClient::Round { round: 1, .. }));
+                recipients += peers.len();
             }
         }
+        assert_eq!(recipients, 2, "both members of job 1 get the round-1 broadcast");
     }
 
     /// A drain ordered mid-round lets the in-flight round complete, then
@@ -1878,6 +2079,10 @@ mod tests {
         engine.handle_message(0, &update_for(0, 0, 0, 8, 2), t);
         let actions = engine.handle_message(1, &update_for(0, 1, 0, 8, 2), t);
         assert_eq!(engine.phase_of(0), Some("finishing"));
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::Broadcast { .. })),
+            "a draining job must not broadcast another Round at the boundary"
+        );
         let mut finish_frames = 0;
         for a in &actions {
             if let Action::Send { bytes, .. } = a {

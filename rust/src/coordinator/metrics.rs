@@ -31,6 +31,11 @@ pub struct RoundRecord {
     /// `participants` in a star, and is bounded by the tree arity under
     /// hierarchical aggregation
     pub fan_in: usize,
+    /// achieved wire compression this round: dense-equivalent bytes
+    /// (every frame priced at `Compression::None`) over actual bytes in
+    /// both directions. 1.0 for uncompressed runs; > 1 when a codec is
+    /// saving wire (e.g. 4.0 = a quarter of the dense traffic).
+    pub compression_ratio: f64,
 }
 
 /// Whole-run communication statistics.

@@ -28,7 +28,10 @@ use crate::bail;
 use crate::error::Result;
 use crate::linalg::Mat;
 
-use super::compress::{put_mat_compressed, read_mat_compressed, Compression};
+use super::compress::{
+    put_mat_compressed, put_mat_resync, put_mat_stateful, read_mat_compressed, read_mat_stateful,
+    CodecState, Compression,
+};
 use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
 
 /// Wire protocol version (bumped when the envelope or a message layout
@@ -41,8 +44,11 @@ use super::transport::framing::{put_f64, put_mat, put_u32, put_u64, Reader};
 /// version 5 added the job-service control plane: `Submit`/`Drain`
 /// upstream and `Accepted`/`Refused { reason }` downstream, so a
 /// long-running coordinator admits (or refuses) jobs over the wire
-/// instead of being pre-configured with exactly one.
-pub const WIRE_VERSION: u8 = 5;
+/// instead of being pre-configured with exactly one;
+/// version 6 added the stateful update codecs (`Delta`/`TopK`):
+/// compressed matrices gained a `[kind][gen]` generation header, so a
+/// v5 peer would misparse a keyframe as a dense payload.
+pub const WIRE_VERSION: u8 = 6;
 
 /// Size of the `[version u8][job u32][seq u32]` envelope on every message.
 pub const ENVELOPE_BYTES: usize = 9;
@@ -281,6 +287,30 @@ impl ToClient {
         buf
     }
 
+    /// Encode stamping `seq`, with `Round.u` delta-coded against (and
+    /// advancing) the per-stream `state`. Identical to [`encode_seq`]
+    /// (Self::encode_seq) for every non-`Round` message and for the
+    /// stateless codecs.
+    pub fn encode_stateful(
+        &self,
+        job: u32,
+        seq: u32,
+        codec: Compression,
+        state: &mut CodecState,
+    ) -> Vec<u8> {
+        if let ToClient::Round { round, k_local, eta, u } = self {
+            let mut buf = Vec::new();
+            put_envelope(&mut buf, job, seq);
+            buf.push(TAG_ROUND);
+            put_u32(&mut buf, *round);
+            put_u32(&mut buf, *k_local);
+            put_f64(&mut buf, *eta);
+            put_mat_stateful(&mut buf, u, codec, state);
+            return buf;
+        }
+        self.encode_seq(job, seq, codec)
+    }
+
     /// Decode, discarding the envelope (single-job clients and tests).
     pub fn decode(bytes: &[u8]) -> Result<ToClient> {
         Ok(Self::decode_full(bytes)?.2)
@@ -294,15 +324,45 @@ impl ToClient {
 
     /// Decode the full envelope and message: `(job, seq, msg)`.
     pub fn decode_full(bytes: &[u8]) -> Result<(u32, u32, ToClient)> {
+        match Self::decode_inner(bytes, None)? {
+            Some(parts) => Ok(parts),
+            None => unreachable!("stateless decode never soft-discards"),
+        }
+    }
+
+    /// Decode with a live downstream codec state. `Ok(None)` is a clean
+    /// stale discard: a re-delivered `Round` whose delta frame this
+    /// state has already applied — drop it, the stream is intact.
+    pub fn decode_full_stateful(
+        bytes: &[u8],
+        state: &mut CodecState,
+    ) -> Result<Option<(u32, u32, ToClient)>> {
+        Self::decode_inner(bytes, Some(state))
+    }
+
+    fn decode_inner(
+        bytes: &[u8],
+        state: Option<&mut CodecState>,
+    ) -> Result<Option<(u32, u32, ToClient)>> {
         let mut r = Reader::new(bytes);
         let (job, seq) = read_envelope(&mut r)?;
         let msg = match r.u8()? {
-            TAG_ROUND => ToClient::Round {
-                round: r.u32()?,
-                k_local: r.u32()?,
-                eta: r.f64()?,
-                u: read_mat_compressed(&mut r)?,
-            },
+            TAG_ROUND => {
+                let round = r.u32()?;
+                let k_local = r.u32()?;
+                let eta = r.f64()?;
+                let u = match state {
+                    Some(st) => match read_mat_stateful(&mut r, st)? {
+                        Some(u) => u,
+                        None => {
+                            r.expect_end()?;
+                            return Ok(None);
+                        }
+                    },
+                    None => read_mat_compressed(&mut r)?,
+                };
+                ToClient::Round { round, k_local, eta, u }
+            }
             TAG_FINISH => ToClient::Finish { reveal: r.u8()? != 0, final_u: r.mat()? },
             TAG_SHUTDOWN => ToClient::Shutdown,
             TAG_WELCOME => ToClient::Welcome { token: r.u64()? },
@@ -315,8 +375,47 @@ impl ToClient {
             t => bail!("unknown ToClient tag {t}"),
         };
         r.expect_end()?;
-        Ok((job, seq, msg))
+        Ok(Some((job, seq, msg)))
     }
+}
+
+/// Encode a `Round` broadcast as a *resync keyframe*: the shared
+/// encoder `state`'s current reconstruction at its current generation,
+/// without advancing the stream. This is what a member that missed
+/// shared frames (grace window, unselected rounds, session resume)
+/// receives so its decoder lands exactly where in-sync peers already
+/// are — it deliberately carries the shared reconstruction rather than
+/// a fresh encode, so under a lossy codec every member still holds the
+/// identical reference.
+pub fn encode_round_resync(
+    job: u32,
+    seq: u32,
+    round: u32,
+    k_local: u32,
+    eta: f64,
+    codec: Compression,
+    state: &CodecState,
+) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_envelope(&mut buf, job, seq);
+    buf.push(TAG_ROUND);
+    put_u32(&mut buf, round);
+    put_u32(&mut buf, k_local);
+    put_f64(&mut buf, eta);
+    put_mat_resync(&mut buf, codec, state);
+    buf
+}
+
+/// The round number of an encoded `Round` frame, without decoding the
+/// matrix (which a stateless observer of a delta-coded stream cannot
+/// do). `None` for any other message.
+pub fn peek_round(frame: &[u8]) -> Option<u32> {
+    if frame.get(ENVELOPE_BYTES).copied() != Some(TAG_ROUND) {
+        return None;
+    }
+    let at = ENVELOPE_BYTES + 1;
+    let bytes = frame.get(at..at + 4)?;
+    Some(u32::from_le_bytes(bytes.try_into().expect("4-byte slice")))
 }
 
 impl ToServer {
@@ -391,6 +490,48 @@ impl ToServer {
         buf
     }
 
+    /// Encode stamping `seq`, with `Update.u` delta-coded against (and
+    /// advancing) the per-stream `state`. Identical to [`encode_seq`]
+    /// (Self::encode_seq) for every non-`Update` message and for the
+    /// stateless codecs.
+    pub fn encode_stateful(
+        &self,
+        job: u32,
+        seq: u32,
+        codec: Compression,
+        state: &mut CodecState,
+    ) -> Vec<u8> {
+        if let ToServer::Update {
+            client,
+            round,
+            u,
+            count,
+            cols,
+            grad_sum,
+            lip_max,
+            err_num_sum,
+            secs_max,
+            secs_sum,
+        } = self
+        {
+            let mut buf = Vec::new();
+            put_envelope(&mut buf, job, seq);
+            buf.push(TAG_UPDATE);
+            put_u32(&mut buf, *client);
+            put_u32(&mut buf, *round);
+            put_u32(&mut buf, *count);
+            put_u64(&mut buf, *cols);
+            put_f64(&mut buf, *grad_sum);
+            put_f64(&mut buf, *lip_max);
+            put_f64(&mut buf, *err_num_sum);
+            put_f64(&mut buf, *secs_max);
+            put_f64(&mut buf, *secs_sum);
+            put_mat_stateful(&mut buf, u, codec, state);
+            return buf;
+        }
+        self.encode_seq(job, seq, codec)
+    }
+
     /// Decode, discarding the envelope (single-job tests).
     pub fn decode(bytes: &[u8]) -> Result<ToServer> {
         Ok(Self::decode_full(bytes)?.2)
@@ -404,6 +545,26 @@ impl ToServer {
 
     /// Decode the full envelope and message: `(job, seq, msg)`.
     pub fn decode_full(bytes: &[u8]) -> Result<(u32, u32, ToServer)> {
+        match Self::decode_inner(bytes, None)? {
+            Some(parts) => Ok(parts),
+            None => unreachable!("stateless decode never soft-discards"),
+        }
+    }
+
+    /// Decode with a live upstream codec state (the engine holds one per
+    /// member). `Ok(None)` is a clean stale discard of a re-delivered
+    /// `Update` whose delta frame already applied.
+    pub fn decode_full_stateful(
+        bytes: &[u8],
+        state: &mut CodecState,
+    ) -> Result<Option<(u32, u32, ToServer)>> {
+        Self::decode_inner(bytes, Some(state))
+    }
+
+    fn decode_inner(
+        bytes: &[u8],
+        state: Option<&mut CodecState>,
+    ) -> Result<Option<(u32, u32, ToServer)>> {
         let mut r = Reader::new(bytes);
         let (job, seq) = read_envelope(&mut r)?;
         let msg = match r.u8()? {
@@ -413,18 +574,39 @@ impl ToServer {
                 token: r.u64()?,
                 span: r.u32()?,
             },
-            TAG_UPDATE => ToServer::Update {
-                client: r.u32()?,
-                round: r.u32()?,
-                count: r.u32()?,
-                cols: r.u64()?,
-                grad_sum: r.f64()?,
-                lip_max: r.f64()?,
-                err_num_sum: r.f64()?,
-                secs_max: r.f64()?,
-                secs_sum: r.f64()?,
-                u: read_mat_compressed(&mut r)?,
-            },
+            TAG_UPDATE => {
+                let client = r.u32()?;
+                let round = r.u32()?;
+                let count = r.u32()?;
+                let cols = r.u64()?;
+                let grad_sum = r.f64()?;
+                let lip_max = r.f64()?;
+                let err_num_sum = r.f64()?;
+                let secs_max = r.f64()?;
+                let secs_sum = r.f64()?;
+                let u = match state {
+                    Some(st) => match read_mat_stateful(&mut r, st)? {
+                        Some(u) => u,
+                        None => {
+                            r.expect_end()?;
+                            return Ok(None);
+                        }
+                    },
+                    None => read_mat_compressed(&mut r)?,
+                };
+                ToServer::Update {
+                    client,
+                    round,
+                    u,
+                    count,
+                    cols,
+                    grad_sum,
+                    lip_max,
+                    err_num_sum,
+                    secs_max,
+                    secs_sum,
+                }
+            }
             TAG_REVEAL => ToServer::Reveal { client: r.u32()?, l: r.mat()?, s: r.mat()? },
             TAG_WITHHOLD => ToServer::Withhold { client: r.u32()? },
             TAG_SUBMIT => ToServer::Submit {
@@ -438,7 +620,7 @@ impl ToServer {
             t => bail!("unknown ToServer tag {t}"),
         };
         r.expect_end()?;
-        Ok((job, seq, msg))
+        Ok(Some((job, seq, msg)))
     }
 }
 
@@ -653,6 +835,114 @@ mod tests {
             text.contains(&format!("wire version {WIRE_VERSION}")),
             "names this build's version: {text}"
         );
+    }
+
+    #[test]
+    fn v5_frames_rejected_now_that_v6_owns_the_wire() {
+        // same envelope layout as v6, older version byte: a v5 peer
+        // cannot parse the stateful codec frames, so the gate refuses it
+        // up front naming both versions
+        let mut v5 = vec![5u8];
+        put_u32(&mut v5, 0);
+        put_u32(&mut v5, 0);
+        v5.push(3); // TAG_SHUTDOWN
+        let err = ToClient::decode(&v5).expect_err("v5 frame must not decode");
+        let text = err.to_string();
+        assert!(text.contains("wire version 5"), "names the peer's version: {text}");
+        assert!(
+            text.contains(&format!("wire version {WIRE_VERSION}")),
+            "names this build's version: {text}"
+        );
+    }
+
+    #[test]
+    fn stateful_round_stream_roundtrips_and_discards_duplicates() {
+        let mut rng = Pcg64::new(21);
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        let mut frames = Vec::new();
+        for t in 0..3u32 {
+            let msg = ToClient::Round {
+                round: t,
+                k_local: 2,
+                eta: 0.05,
+                u: Mat::gaussian(6, 3, &mut rng),
+            };
+            frames.push((msg.clone(), msg.encode_stateful(4, t + 1, Compression::Delta, &mut enc)));
+        }
+        for (t, (msg, bytes)) in frames.iter().enumerate() {
+            assert_eq!(peek_round(bytes), Some(t as u32));
+            let (job, seq, out) =
+                ToClient::decode_full_stateful(bytes, &mut dec).unwrap().expect("in sync");
+            assert_eq!((job, seq), (4, t as u32 + 1));
+            assert_eq!(&out, msg);
+        }
+        // a re-delivered copy of the last frame: clean stale discard
+        assert!(ToClient::decode_full_stateful(&frames[2].1, &mut dec).unwrap().is_none());
+        // upstream direction takes the same machinery
+        let mut up_enc = CodecState::new();
+        let mut up_dec = CodecState::new();
+        for t in 0..2u32 {
+            let msg = ToServer::Update {
+                client: 1,
+                round: t,
+                u: Mat::gaussian(6, 3, &mut rng),
+                count: 1,
+                cols: 3,
+                grad_sum: 0.5,
+                lip_max: 1.0,
+                err_num_sum: f64::NAN,
+                secs_max: 0.0,
+                secs_sum: 0.0,
+            };
+            let bytes = msg.encode_stateful(4, t + 1, Compression::Delta, &mut up_enc);
+            let (_, _, out) =
+                ToServer::decode_full_stateful(&bytes, &mut up_dec).unwrap().expect("in sync");
+            assert_eq!(out, msg);
+            assert!(ToServer::decode_full_stateful(&bytes, &mut up_dec).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn resync_round_rejoins_a_behind_decoder() {
+        let mut rng = Pcg64::new(22);
+        let mut enc = CodecState::new();
+        let mut dec = CodecState::new();
+        let mut behind = CodecState::new();
+        let frames: Vec<ToClient> = (0..3)
+            .map(|t| ToClient::Round {
+                round: t,
+                k_local: 1,
+                eta: 0.1,
+                u: Mat::gaussian(5, 2, &mut rng),
+            })
+            .collect();
+        for (t, msg) in frames.iter().enumerate() {
+            let bytes = msg.encode_stateful(0, t as u32, Compression::Delta, &mut enc);
+            ToClient::decode_full_stateful(&bytes, &mut dec).unwrap().unwrap();
+            if t == 0 {
+                ToClient::decode_full_stateful(&bytes, &mut behind).unwrap().unwrap();
+            }
+        }
+        // behind missed frames 1..: the resync keyframe re-delivers the
+        // current round and lands it at the in-sync generation
+        let bytes = encode_round_resync(0, 9, 2, 1, 0.1, Compression::Delta, &enc);
+        assert_eq!(peek_round(&bytes), Some(2));
+        let (_, seq, msg) =
+            ToClient::decode_full_stateful(&bytes, &mut behind).unwrap().expect("resync applies");
+        assert_eq!(seq, 9);
+        assert_eq!(&msg, &frames[2]);
+        assert_eq!(behind.gen(), dec.gen());
+    }
+
+    #[test]
+    fn peek_round_classifies_frames() {
+        let round =
+            ToClient::Round { round: 41, k_local: 1, eta: 0.1, u: Mat::zeros(2, 2) }.encode();
+        assert_eq!(peek_round(&round), Some(41));
+        assert_eq!(peek_round(&ToClient::Shutdown.encode()), None);
+        assert_eq!(peek_round(&[]), None);
+        assert_eq!(peek_round(&round[..ENVELOPE_BYTES + 2]), None);
     }
 
     #[test]

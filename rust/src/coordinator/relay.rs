@@ -30,7 +30,7 @@ use crate::error::{Context, Result};
 
 use crate::rng::Pcg64;
 
-use super::compress::Compression;
+use super::compress::{CodecState, Compression};
 use super::engine::{Action, JobId, RoundEngine};
 use super::protocol::{restamp_seq, ToClient, ToServer};
 use super::server::{JobMode, ServerConfig, ServerOutcome};
@@ -65,6 +65,9 @@ pub struct RelaySession {
     up_seq: u32,
     /// highest stamped downstream envelope seq seen (replay guard)
     last_down_seq: u32,
+    /// decoder state for the upstream `Round` broadcast stream
+    /// (stateful codecs only; idle otherwise)
+    down_codec: CodecState,
 }
 
 impl RelaySession {
@@ -74,7 +77,15 @@ impl RelaySession {
         let JobMode::Relay { span_lo, span_len } = cfg.mode else {
             bail!("RelaySession requires a JobMode::Relay config");
         };
-        Ok(RelaySession { job, span_lo, span_len, token: 0, up_seq: 0, last_down_seq: 0 })
+        Ok(RelaySession {
+            job,
+            span_lo,
+            span_len,
+            token: 0,
+            up_seq: 0,
+            last_down_seq: 0,
+            down_codec: CodecState::new(),
+        })
     }
 
     /// Stamp the next upstream sequence number onto an encoded frame
@@ -108,7 +119,18 @@ impl RelaySession {
         engine: &mut RoundEngine,
         now: Duration,
     ) -> Result<RelayStep> {
-        let (job, seq, msg) = ToClient::decode_full(bytes)?;
+        // the downstream codec state decodes delta-coded `Round` frames;
+        // `None` is the clean stale discard (a re-delivered broadcast
+        // this decoder already applied)
+        let Some((job, seq, msg)) = ToClient::decode_full_stateful(bytes, &mut self.down_codec)?
+        else {
+            crate::log_warn!(
+                "relay",
+                "relay {}: dropping stale upstream delta broadcast",
+                self.span_lo
+            );
+            return Ok(RelayStep::default());
+        };
         if job != self.job {
             bail!("relay {}: upstream message for job {job}", self.span_lo);
         }
@@ -119,6 +141,11 @@ impl RelaySession {
             if token != self.token {
                 self.token = token;
                 self.last_down_seq = seq;
+                // new upstream session ⇒ both directions of the upstream
+                // codec stream restart at keyframes: our decoder here,
+                // and the engine's relay-job encoder for partials
+                self.down_codec.reset();
+                engine.reset_upstream_codec(self.job);
             } else if seq > self.last_down_seq {
                 self.last_down_seq = seq;
             }
@@ -308,6 +335,11 @@ where
                     // round re-emits the identical bytes
                     None => {}
                 },
+                Action::Broadcast { peers, body } => {
+                    for ep in reactor.send_shared(&peers, &body) {
+                        actions.extend(engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
             }
         }
 

@@ -158,6 +158,15 @@ impl ServiceMetrics {
             );
             line(&format!("dcf_job_bytes_down{{job=\"{id}\"}}"), p.bytes_down.to_string());
             line(&format!("dcf_job_bytes_up{{job=\"{id}\"}}"), p.bytes_up.to_string());
+            // achieved wire compression vs the dense-f64 equivalent of
+            // the same traffic (1.0 until the job moves any bytes)
+            let wire = p.bytes_down + p.bytes_up;
+            let dense = p.dense_down + p.dense_up;
+            let ratio = if wire == 0 { 1.0 } else { dense as f64 / wire as f64 };
+            line(
+                &format!("dcf_job_compression_ratio{{job=\"{id}\"}}"),
+                format!("{ratio:.3}"),
+            );
         }
         out
     }
@@ -359,6 +368,11 @@ impl JobService {
             match action {
                 Action::Send { ep, bytes } => {
                     if reactor.send(ep, &bytes).is_err() {
+                        actions.extend(self.engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
+                Action::Broadcast { peers, body } => {
+                    for ep in reactor.send_shared(&peers, &body) {
                         actions.extend(self.engine.on_disconnect(ep, reactor.now()));
                     }
                 }
@@ -637,6 +651,7 @@ mod tests {
                 bytes_up: 20,
                 participants: 2,
                 fan_in: 2,
+                compression_ratio: 1.0,
             }],
             &CommStats { total_down: 30, total_up: 40, rounds: 1 },
         );
@@ -653,6 +668,7 @@ mod tests {
             "dcf_round_cut_rate 0.0000",
             "dcf_bytes_down_total 30",
             "dcf_job_round{job=\"7\"} 3",
+            "dcf_job_compression_ratio{job=\"7\"} 1.000",
         ] {
             assert!(body.contains(needle), "missing `{needle}` in:\n{body}");
         }

@@ -18,11 +18,13 @@
 //! with failed writes folded back into the engine as disconnects.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
 
 use crate::coordinator::engine::{Action, EndpointId, RoundEngine};
+use crate::coordinator::protocol::restamp_seq;
 
 use super::Channel;
 
@@ -56,6 +58,27 @@ pub trait Reactor {
     /// Monotonic time since the reactor started — the `now` handed to
     /// the engine (which never reads a clock itself).
     fn now(&self) -> Duration;
+
+    /// Queue one shared broadcast frame ([`Action::Broadcast`]) to many
+    /// endpoints. `body` is a fully encoded message whose envelope seq
+    /// is unstamped (0); each peer entry carries the seq to restamp for
+    /// that endpoint. Returns the endpoints whose send failed so the
+    /// caller can fold them into the engine as disconnects.
+    ///
+    /// The default clones the body per peer — correct everywhere. The
+    /// epoll reactor overrides it with a scatter write queue that keeps
+    /// one copy of the payload no matter how many peers it goes to.
+    fn send_shared(&mut self, peers: &[(EndpointId, u32)], body: &Arc<Vec<u8>>) -> Vec<EndpointId> {
+        let mut dead = Vec::new();
+        for &(ep, seq) in peers {
+            let mut bytes = body.as_ref().clone();
+            restamp_seq(&mut bytes, seq);
+            if self.send(ep, &bytes).is_err() {
+                dead.push(ep);
+            }
+        }
+        dead
+    }
 }
 
 /// Largest idle sleep while deadlines are pending: keeps the loop
@@ -97,6 +120,11 @@ pub fn drive(reactor: &mut dyn Reactor, engine: &mut RoundEngine) -> Result<()> 
                 // run under `relay::run_relay`'s own loop, which owns the
                 // upstream channel; a root job driven here never emits it.
                 Action::Upstream { .. } => {}
+                Action::Broadcast { peers, body } => {
+                    for ep in reactor.send_shared(&peers, &body) {
+                        actions.extend(engine.on_disconnect(ep, reactor.now()));
+                    }
+                }
             }
         }
     }
@@ -218,12 +246,14 @@ mod epoll {
     use std::io::{ErrorKind, Read, Write};
     use std::net::{TcpListener, TcpStream};
     use std::os::fd::AsRawFd;
+    use std::sync::Arc;
     use std::time::{Duration, Instant};
 
     use crate::bail;
     use crate::error::{Context, Result};
 
     use crate::coordinator::engine::EndpointId;
+    use crate::coordinator::protocol::{restamp_seq, ENVELOPE_BYTES};
     use crate::coordinator::transport::framing::{frame_into, FrameDecoder, MAX_FRAME};
 
     use super::{IoEvent, Reactor};
@@ -276,11 +306,37 @@ mod epoll {
     /// FaultPolicy adjudicates the departure.
     const DEFAULT_OUTBUF_CAP: usize = 64 << 20;
 
+    /// One queued output unit. A shared broadcast body is referenced —
+    /// never copied — no matter how many connections it is queued to;
+    /// everything else (and each broadcast's per-peer framed head) is
+    /// owned bytes.
+    enum Segment {
+        Owned(Vec<u8>),
+        /// tail of a shared broadcast body starting at `off`; the
+        /// per-peer head (length prefix + restamped envelope) travels
+        /// as an `Owned` segment immediately before this one
+        Shared { body: Arc<Vec<u8>>, off: usize },
+    }
+
+    impl Segment {
+        fn len(&self) -> usize {
+            match self {
+                Segment::Owned(v) => v.len(),
+                Segment::Shared { body, off } => body.len() - off,
+            }
+        }
+    }
+
     struct Conn {
         stream: TcpStream,
         decoder: FrameDecoder,
-        /// bytes queued behind a short write, waiting for EPOLLOUT
-        outbuf: VecDeque<u8>,
+        /// output queued behind a short write, waiting for EPOLLOUT
+        outbuf: VecDeque<Segment>,
+        /// bytes of the head segment already written
+        head_off: usize,
+        /// total unwritten bytes across all segments (the backlog the
+        /// outbuf cap bounds)
+        queued: usize,
         /// EPOLLOUT currently armed
         want_write: bool,
         /// engine said Close — drop once `outbuf` drains
@@ -369,6 +425,8 @@ mod epoll {
                             stream,
                             decoder: FrameDecoder::new(),
                             outbuf: VecDeque::new(),
+                            head_off: 0,
+                            queued: 0,
                             want_write: false,
                             closing: false,
                         }));
@@ -421,14 +479,21 @@ mod epoll {
             let (drained, fd, closing, rearm) = {
                 let Some(conn) = self.conns[ep].as_mut() else { return true };
                 loop {
-                    if conn.outbuf.is_empty() {
-                        break;
+                    let Some(seg_len) = conn.outbuf.front().map(Segment::len) else { break };
+                    if conn.head_off >= seg_len {
+                        conn.outbuf.pop_front();
+                        conn.head_off = 0;
+                        continue;
                     }
-                    let (head, _) = conn.outbuf.as_slices();
-                    match conn.stream.write(head) {
+                    let slice = match conn.outbuf.front().expect("head checked above") {
+                        Segment::Owned(v) => &v[conn.head_off..],
+                        Segment::Shared { body, off } => &body[off + conn.head_off..],
+                    };
+                    match conn.stream.write(slice) {
                         Ok(0) => return false,
                         Ok(n) => {
-                            conn.outbuf.drain(..n);
+                            conn.head_off += n;
+                            conn.queued -= n;
                         }
                         Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                         Err(e) if e.kind() == ErrorKind::Interrupted => {}
@@ -533,10 +598,11 @@ mod epoll {
                 // (no deadlock on frames larger than the cap), but a
                 // peer that is not draining its socket cannot stack
                 // frames past `cap`
-                if !conn.outbuf.is_empty() && conn.outbuf.len() + framed.len() > cap {
-                    Some(conn.outbuf.len())
+                if conn.queued > 0 && conn.queued + framed.len() > cap {
+                    Some(conn.queued)
                 } else {
-                    conn.outbuf.extend(framed);
+                    conn.queued += framed.len();
+                    conn.outbuf.push_back(Segment::Owned(framed));
                     None
                 }
             };
@@ -552,6 +618,59 @@ mod epoll {
                 bail!("endpoint {ep} write failed");
             }
             Ok(())
+        }
+
+        /// Scatter enqueue: every peer gets a 13-byte owned head (frame
+        /// length prefix + envelope restamped with its seq) followed by
+        /// a reference to the one shared payload allocation. A 64-peer
+        /// broadcast of an 8 MB consensus factor queues 8 MB once, not
+        /// 512 MB.
+        fn send_shared(
+            &mut self,
+            peers: &[(EndpointId, u32)],
+            body: &Arc<Vec<u8>>,
+        ) -> Vec<EndpointId> {
+            let mut dead = Vec::new();
+            if body.len() as u64 > MAX_FRAME as u64 || body.len() < ENVELOPE_BYTES {
+                // unframeable broadcast: no peer can receive it
+                dead.extend(peers.iter().map(|&(ep, _)| ep));
+                return dead;
+            }
+            let cap = self.outbuf_cap;
+            for &(ep, seq) in peers {
+                let enqueued = {
+                    let Some(conn) = self.conns.get_mut(ep).and_then(Option::as_mut) else {
+                        dead.push(ep);
+                        continue;
+                    };
+                    if conn.closing {
+                        dead.push(ep);
+                        continue;
+                    }
+                    let total = 4 + body.len();
+                    // same backlog-cap semantics as `send`
+                    if conn.queued > 0 && conn.queued + total > cap {
+                        false
+                    } else {
+                        let mut head = Vec::with_capacity(4 + ENVELOPE_BYTES);
+                        head.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                        head.extend_from_slice(&body[..ENVELOPE_BYTES]);
+                        restamp_seq(&mut head[4..], seq);
+                        conn.queued += total;
+                        conn.outbuf.push_back(Segment::Owned(head));
+                        conn.outbuf.push_back(Segment::Shared {
+                            body: Arc::clone(body),
+                            off: ENVELOPE_BYTES,
+                        });
+                        true
+                    }
+                };
+                if !enqueued || !self.write_ready(ep) {
+                    self.drop_conn(ep);
+                    dead.push(ep);
+                }
+            }
+            dead
         }
 
         fn close(&mut self, ep: EndpointId) {
@@ -675,5 +794,41 @@ mod tests {
         assert!(refused, "an unread peer must eventually overflow the capped queue");
         // the overflow shed the connection entirely
         assert!(r.send(ep, b"x").is_err());
+    }
+
+    /// The scatter write queue must deliver one shared broadcast body to
+    /// every peer with only the 9-byte envelope differing (each peer's
+    /// own downstream seq), byte-identical payloads otherwise.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_send_shared_restamps_per_peer() {
+        use crate::coordinator::transport::tcp::TcpChannel;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut r = EpollReactor::new(listener).unwrap();
+        let mut c0 = TcpChannel::connect(&addr).unwrap();
+        let mut c1 = TcpChannel::connect(&addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut eps = Vec::new();
+        while eps.len() < 2 {
+            assert!(Instant::now() < deadline, "accept timed out");
+            if let IoEvent::Connected(ep) = r.poll(Some(Duration::from_millis(20))).unwrap() {
+                eps.push(ep);
+            }
+        }
+        // unstamped envelope (version, job, seq 0) + recognizable payload
+        let mut body = vec![6u8, 9, 0, 0, 0, 0, 0, 0, 0];
+        body.extend_from_slice(&[0xCD; 4096]);
+        let body = Arc::new(body);
+        let dead = r.send_shared(&[(eps[0], 41), (eps[1], 42)], &body);
+        assert!(dead.is_empty());
+        let f0 = c0.recv_timeout(Duration::from_secs(5)).unwrap();
+        let f1 = c1.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(f0.len(), body.len());
+        assert_eq!(&f0[..5], &body[..5]);
+        assert_eq!(u32::from_le_bytes(f0[5..9].try_into().unwrap()), 41);
+        assert_eq!(u32::from_le_bytes(f1[5..9].try_into().unwrap()), 42);
+        assert_eq!(&f0[9..], &body[9..]);
+        assert_eq!(&f1[9..], &f0[9..]);
     }
 }

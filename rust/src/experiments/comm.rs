@@ -13,6 +13,7 @@ use crate::coordinator::client::FaultPlan;
 use crate::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
 use crate::coordinator::protocol::{round_wire_size, update_wire_size};
 use crate::coordinator::server::FaultPolicy;
+use crate::coordinator::Compression;
 use crate::rpca::problem::ProblemSpec;
 use crate::util::csv::CsvWriter;
 
@@ -100,6 +101,99 @@ pub fn run(effort: Effort) -> Vec<CommRow> {
     let _ = csv.write_file(results_dir().join("comm_scaling.csv"));
 
     print_table(n, &rows);
+    rows
+}
+
+/// One codec's traffic/accuracy point at fixed E (the dense-f64
+/// baseline row always comes first).
+#[derive(Clone, Debug)]
+pub struct CodecRow {
+    pub codec: Compression,
+    pub clients: usize,
+    /// measured mean wire bytes per round (down + up)
+    pub bytes_per_round: f64,
+    /// dense-equivalent bytes / wire bytes, from the engine's meter
+    pub ratio: f64,
+    pub final_err: f64,
+    /// final factor bitwise identical to the dense baseline's
+    pub bitwise_vs_dense: bool,
+}
+
+/// Wire-codec comparison at fixed E = 64: every codec solves the same
+/// instance end to end; the dense run sets the byte and accuracy
+/// baseline. `Delta` must come back bitwise identical (XOR residuals
+/// are lossless), while `TopK` trades a bounded reveal-error gap for an
+/// order-of-magnitude byte cut via error feedback.
+pub fn codec_run(effort: Effort) -> Vec<CodecRow> {
+    let n = match effort {
+        Effort::Quick => 256,
+        Effort::Full => 512,
+    };
+    let spec = ProblemSpec::paper_default(n);
+    let problem = spec.generate(42);
+    let e = 64;
+    let rounds = 16;
+
+    let mut rows: Vec<CodecRow> = Vec::new();
+    let mut baseline_u = None;
+    for codec in [Compression::None, Compression::Delta, Compression::TopK] {
+        let mut cfg = DcfPcaConfig::default_for(&spec)
+            .with_clients(e)
+            .with_rounds(rounds)
+            .with_k_local(2)
+            .with_seed(5);
+        cfg.compression = codec;
+        let res = run_dcf_pca(&problem, &cfg).expect("codec run");
+        // overall ratio folds the meter's per-round dense equivalents,
+        // so keyframe rounds dilute it exactly as they do on the wire
+        let (mut wire, mut dense) = (0.0, 0.0);
+        for r in &res.rounds {
+            let b = (r.bytes_down + r.bytes_up) as f64;
+            wire += b;
+            dense += b * r.compression_ratio;
+        }
+        let bitwise = match &baseline_u {
+            None => {
+                baseline_u = Some(res.u.clone());
+                true
+            }
+            Some(u0) => &res.u == u0,
+        };
+        rows.push(CodecRow {
+            codec,
+            clients: e,
+            bytes_per_round: wire / res.rounds.len() as f64,
+            ratio: dense / wire,
+            final_err: res.final_error.unwrap_or(f64::NAN),
+            bitwise_vs_dense: bitwise,
+        });
+    }
+
+    let mut csv =
+        CsvWriter::new(&["codec", "bytes_per_round", "ratio", "final_err", "bitwise_vs_dense"]);
+    for r in &rows {
+        csv.row(&[
+            &r.codec.cli_name(),
+            &r.bytes_per_round,
+            &r.ratio,
+            &r.final_err,
+            &r.bitwise_vs_dense,
+        ]);
+    }
+    let _ = csv.write_file(results_dir().join("codec_comm.csv"));
+
+    println!("\n§3.4 — wire codecs at E={e}, n={n} (dense f64 baseline first)");
+    let mut t = Table::new(&["codec", "bytes/round", "ratio vs dense", "final err", "U vs dense"]);
+    for r in &rows {
+        t.row(&[
+            r.codec.cli_name().to_string(),
+            format!("{:.0}", r.bytes_per_round),
+            format!("{:.2}x", r.ratio),
+            format!("{:.2e}", r.final_err),
+            (if r.bitwise_vs_dense { "bitwise" } else { "lossy" }).to_string(),
+        ]);
+    }
+    t.print();
     rows
 }
 

@@ -43,7 +43,7 @@ use crate::coordinator::client::{ClientConfig, ClientSession, FaultPlan};
 use crate::coordinator::compress::Compression;
 use crate::coordinator::engine::{Action, RoundEngine};
 use crate::coordinator::kernel::NativeKernel;
-use crate::coordinator::protocol::ToClient;
+use crate::coordinator::protocol::{peek_round, restamp_seq, ToClient};
 use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use crate::coordinator::transport::reactor::{drive, IoEvent, Reactor};
 use crate::linalg::Mat;
@@ -72,6 +72,11 @@ pub struct SimConfig {
     pub round_timeout: Duration,
     /// assembled-error ceiling for under-budget schedules (§4 scale)
     pub err_tolerance: f64,
+    /// wire codec for the run under test. The fault-free reference is
+    /// ALWAYS computed at `Compression::None`, so a lossless codec
+    /// (`Delta`) is held to bitwise identity against the uncompressed
+    /// run; lossy codecs keep every invariant except the bitwise ones.
+    pub compression: Compression,
 }
 
 impl Default for SimConfig {
@@ -88,6 +93,7 @@ impl Default for SimConfig {
             server_seed: 0xDCF,
             round_timeout: Duration::from_millis(50),
             err_tolerance: 5e-2,
+            compression: Compression::None,
         }
     }
 }
@@ -252,9 +258,15 @@ impl SimHarness {
             harness.cfg.clients,
             harness.cfg.rounds,
         );
+        // the reference is ALWAYS the uncompressed run: a lossless codec
+        // under test is then proven end-to-end against dense f64, not
+        // merely against itself
+        let requested = harness.cfg.compression;
+        harness.cfg.compression = Compression::None;
         let exec = harness
             .execute(&fault_free)
             .map_err(|detail| crate::anyhow!("fault-free reference run failed: {detail}"))?;
+        harness.cfg.compression = requested;
         let outcome = exec.outcome?;
         let err = harness.assembled_error(&outcome.revealed);
         if !(err <= harness.cfg.err_tolerance / 4.0) {
@@ -291,6 +303,7 @@ impl SimHarness {
         cfg.seed = self.cfg.server_seed;
         cfg.round_timeout = self.cfg.round_timeout;
         cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.compression = self.cfg.compression;
         cfg.err_denominator =
             Some(self.problem.l0.frob_norm_sq() + self.problem.s0.frob_norm_sq());
         cfg
@@ -312,7 +325,7 @@ impl SimHarness {
                         self.problem.s0.cols_range(a, b),
                     )),
                     faults: FaultPlan::default(),
-                    compression: Compression::None,
+                    compression: self.cfg.compression,
                     dp_sigma: 0.0,
                 };
                 Box::new(SimClientPeer::new(cfg)) as Box<dyn SimPeer>
@@ -338,13 +351,11 @@ impl SimHarness {
         }
     }
 
-    /// Per-action legality checks (invariants 1 and 2).
-    fn check_send(
+    /// Endpoint legality shared by sends and broadcasts (invariant 1).
+    fn check_endpoint(
         &self,
-        engine: &RoundEngine,
-        trace: &mut RunTrace,
+        trace: &RunTrace,
         ep: usize,
-        bytes: &[u8],
     ) -> std::result::Result<(), String> {
         if trace.job_done {
             return Err(format!("engine sent to endpoint {ep} after JobDone"));
@@ -355,34 +366,85 @@ impl SimHarness {
         if !trace.open.contains(&ep) {
             return Err(format!("engine sent to unknown endpoint {ep}"));
         }
+        Ok(())
+    }
+
+    /// `Round` index legality (invariant 2).
+    fn check_round(
+        &self,
+        engine: &RoundEngine,
+        trace: &mut RunTrace,
+        round: usize,
+    ) -> std::result::Result<(), String> {
+        if round >= self.cfg.rounds {
+            return Err(format!(
+                "broadcast for round {round} beyond the {}-round horizon",
+                self.cfg.rounds
+            ));
+        }
+        if let Some(last) = trace.last_round {
+            if round < last {
+                return Err(format!("round counter went backwards: {last} → {round}"));
+            }
+        }
+        if engine.round_of(0) != Some(round) {
+            return Err(format!(
+                "round-{round} broadcast while engine is in phase {:?} (round {:?})",
+                engine.phase_of(0),
+                engine.round_of(0)
+            ));
+        }
+        trace.last_round = Some(round);
+        Ok(())
+    }
+
+    /// Per-action legality checks (invariants 1 and 2). Everything the
+    /// engine sends point-to-point is statelessly decodable even under a
+    /// stateful codec — the shared delta stream travels via `Broadcast`,
+    /// and the per-member `Round` frames on this path are resync
+    /// keyframes (self-contained dense sync points).
+    fn check_send(
+        &self,
+        engine: &RoundEngine,
+        trace: &mut RunTrace,
+        ep: usize,
+        bytes: &[u8],
+    ) -> std::result::Result<(), String> {
+        self.check_endpoint(trace, ep)?;
         let (job, msg) = ToClient::decode_job(bytes)
             .map_err(|e| format!("engine emitted an undecodable message: {e}"))?;
         if job != 0 {
             return Err(format!("engine emitted a message for unregistered job {job}"));
         }
         if let ToClient::Round { round, .. } = msg {
-            let round = round as usize;
-            if round >= self.cfg.rounds {
-                return Err(format!(
-                    "broadcast for round {round} beyond the {}-round horizon",
-                    self.cfg.rounds
-                ));
-            }
-            if let Some(last) = trace.last_round {
-                if round < last {
-                    return Err(format!("round counter went backwards: {last} → {round}"));
-                }
-            }
-            if engine.round_of(0) != Some(round) {
-                return Err(format!(
-                    "round-{round} broadcast while engine is in phase {:?} (round {:?})",
-                    engine.phase_of(0),
-                    engine.round_of(0)
-                ));
-            }
-            trace.last_round = Some(round);
+            self.check_round(engine, trace, round as usize)?;
         }
         Ok(())
+    }
+
+    /// Legality of one shared-broadcast recipient. The body may be a
+    /// delta frame no stateless observer can decode, so only the
+    /// envelope and the round index (readable without the matrix) are
+    /// checked here — end-to-end decode correctness is what the bitwise
+    /// invariants prove.
+    fn check_broadcast(
+        &self,
+        engine: &RoundEngine,
+        trace: &mut RunTrace,
+        ep: usize,
+        bytes: &[u8],
+    ) -> std::result::Result<(), String> {
+        self.check_endpoint(trace, ep)?;
+        let job = bytes
+            .get(1..5)
+            .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte slice")));
+        if job != Some(0) {
+            return Err(format!("broadcast for unregistered job {job:?}"));
+        }
+        let Some(round) = peek_round(bytes) else {
+            return Err("engine broadcast a non-Round frame".to_string());
+        };
+        self.check_round(engine, trace, round as usize)
     }
 
     /// Run one schedule to completion on the invariant-checking loop
@@ -438,6 +500,16 @@ impl SimHarness {
                         self.check_send(&engine, &mut trace, ep, &bytes)?;
                         if let Err(e) = net.send(ep, &bytes) {
                             return Err(format!("send to endpoint {ep} failed: {e}"));
+                        }
+                    }
+                    Action::Broadcast { peers, body } => {
+                        for (ep, seq) in peers {
+                            let mut bytes = body.as_ref().clone();
+                            restamp_seq(&mut bytes, seq);
+                            self.check_broadcast(&engine, &mut trace, ep, &bytes)?;
+                            if let Err(e) = net.send(ep, &bytes) {
+                                return Err(format!("broadcast to endpoint {ep} failed: {e}"));
+                            }
                         }
                     }
                     Action::Close { ep } => {
@@ -506,7 +578,7 @@ impl SimHarness {
         format!(
             "dcf-pca simulate --seeds {}..{} --clients {} --n {} --rank {} --sparsity {} \
              --rounds {} --k-local {} --polish-sweeps {} --problem-seed {} --server-seed {} \
-             --timeout-ms {} --tolerance {}",
+             --timeout-ms {} --tolerance {} --codec {}",
             seed,
             seed + 1,
             self.cfg.clients,
@@ -519,7 +591,8 @@ impl SimHarness {
             self.cfg.problem_seed,
             self.cfg.server_seed,
             self.cfg.round_timeout.as_millis(),
-            self.cfg.err_tolerance
+            self.cfg.err_tolerance,
+            self.cfg.compression.cli_name()
         )
     }
 
@@ -648,10 +721,16 @@ impl SimHarness {
         }
 
         // invariant 3: nothing materialized and nobody cut ⇒ the run is a
-        // pure reordering of the reference and must match it bitwise
+        // pure reordering of the reference and must match it bitwise.
+        // The reference is the UNCOMPRESSED run, so under `Delta` this is
+        // the end-to-end losslessness proof: delta-coding the whole
+        // session must not perturb a single bit. Lossy codecs (f32,
+        // int8, topk) trade exactness for bytes and skip the bitwise
+        // checks; the error-tolerance invariant below still binds them.
+        let lossless = self.cfg.compression.is_lossless();
         let full_participation = out.rounds.len() == self.cfg.rounds
             && out.rounds.iter().all(|r| r.participants == self.cfg.clients);
-        if materialized.is_empty() && disconnects == 0 && full_participation {
+        if lossless && materialized.is_empty() && disconnects == 0 && full_participation {
             if out.u != self.reference.u {
                 return Err(viol(
                     "no update was cut, yet U diverged bitwise from the fault-free run"
@@ -684,23 +763,28 @@ impl SimHarness {
                     report.min_participants
                 )));
             }
-            if out.u != self.reference.u {
-                return Err(viol(
-                    "recoverable flaps changed U bitwise vs the fault-free run".to_string(),
-                ));
-            }
-            for (a, b) in out.rounds.iter().zip(&self.reference.rounds) {
-                if a.err != b.err
-                    || a.mean_grad_norm != b.mean_grad_norm
-                    || a.dispersion != b.dispersion
-                {
-                    return Err(viol(format!(
-                        "round {} telemetry diverged under recoverable flaps",
-                        a.round
-                    )));
+            // reconnects reset no codec state (the stream resumes), so a
+            // lossless run must still land exactly on the reference —
+            // this is the reconnect × delta-reference desync probe
+            if lossless {
+                if out.u != self.reference.u {
+                    return Err(viol(
+                        "recoverable flaps changed U bitwise vs the fault-free run".to_string(),
+                    ));
                 }
+                for (a, b) in out.rounds.iter().zip(&self.reference.rounds) {
+                    if a.err != b.err
+                        || a.mean_grad_norm != b.mean_grad_norm
+                        || a.dispersion != b.dispersion
+                    {
+                        return Err(viol(format!(
+                            "round {} telemetry diverged under recoverable flaps",
+                            a.round
+                        )));
+                    }
+                }
+                report.bitwise_clean = true;
             }
-            report.bitwise_clean = true;
         }
 
         // invariant 5: under-budget schedules still recover

@@ -4,9 +4,12 @@
 //! [`JobService`] and throws every frame shape it can at them: random
 //! garbage, truncations, bit flips, 0xFF-stomped length/dimension
 //! fields, protocol messages out of phase or for jobs that do not
-//! exist, bogus and quota-busting `Submit`s, duplicate `Hello`s, and
-//! mid-stream disconnects — then requests a drain and walks virtual
-//! time forward so every straggler deadline fires.
+//! exist, bogus and quota-busting `Submit`s, duplicate `Hello`s,
+//! stateful-codec frames the server's stream state cannot hold (deltas
+//! against references it never saw, lying sparse indices, stomped `k`
+//! fields, truncated index tables), and mid-stream disconnects — then
+//! requests a drain and walks virtual time forward so every straggler
+//! deadline fires.
 //!
 //! The invariants are deliberately blunt, because this is the arm that
 //! guards a *long-running* server:
@@ -24,6 +27,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
+use crate::coordinator::compress::CodecState;
 use crate::coordinator::protocol::{ToClient, ToServer};
 use crate::coordinator::server::{FaultPolicy, ServerConfig};
 use crate::coordinator::transport::reactor::{IoEvent, Reactor};
@@ -211,7 +215,7 @@ fn build_script(cfg: &HostileSimConfig, rng: &mut Pcg64) -> VecDeque<IoEvent> {
     }
     for _ in 0..cfg.frames {
         let ep = (rng.next_u64() as usize) % cfg.connections;
-        match rng.next_u64() % 12 {
+        match rng.next_u64() % 15 {
             // plausible submissions — some land, some bust a quota
             0 | 1 => script.push_back(IoEvent::Message(ep, hostile_submit(rng))),
             // hello for a job id that may or may not exist
@@ -237,6 +241,10 @@ fn build_script(cfg: &HostileSimConfig, rng: &mut Pcg64) -> VecDeque<IoEvent> {
                 corrupt(&mut frame, rng);
                 script.push_back(IoEvent::Message(ep, frame));
             }
+            // stateful-codec frames the server's stream state cannot
+            // hold: deltas against a reference it never saw, lying
+            // sparse tables, stomped k, truncated index tables
+            11 | 12 | 13 => script.push_back(IoEvent::Message(ep, hostile_codec_update(rng))),
             // the peer just goes away (possibly mid-job)
             _ => script.push_back(IoEvent::Disconnected(ep)),
         }
@@ -306,6 +314,58 @@ fn hostile_update(rng: &mut Pcg64) -> Vec<u8> {
         secs_sum: 0.0,
     }
     .encode_with((rng.next_u64() % 5) as u32, Compression::None)
+}
+
+/// A delta-coded or sparsified `Update` whose stream state the service
+/// cannot hold, in four moods: (0) a clean delta frame against a
+/// keyframe the server never saw — the stale-reference discard path;
+/// (1) a top-k table whose single index lies far out of range; (2) a
+/// stomped `k` promising entries the frame does not carry; (3) a
+/// truncated index table. All must shed as typed errors or clean stale
+/// discards — never a panic, never an unbalanced admission book.
+fn hostile_codec_update(rng: &mut Pcg64) -> Vec<u8> {
+    let mood = rng.next_u64() % 4;
+    // moods 1-3 mutate the fixed-offset top-k tail; mood 0 exercises
+    // both stateful codecs
+    let codec = if mood == 0 && rng.next_u64() % 2 == 0 {
+        Compression::Delta
+    } else {
+        Compression::TopK
+    };
+    let m = 2 + (rng.next_u64() % 6) as usize;
+    let r = 1 + (rng.next_u64() % 3) as usize;
+    let job = (rng.next_u64() % 5) as u32;
+    let client = (rng.next_u64() % 8) as u32;
+    let round = (rng.next_u64() % 4) as u32;
+    let mut state = CodecState::new();
+    // prime a private stream so the *second* frame is a true delta —
+    // one whose reference the service never received
+    let mut frame = Vec::new();
+    for seq in 1..=2 {
+        frame = ToServer::Update {
+            client,
+            round,
+            u: Mat::gaussian(m, r, rng),
+            count: 1,
+            cols: rng.next_u64() % 16,
+            grad_sum: 1.0,
+            lip_max: 1.0,
+            err_num_sum: 0.0,
+            secs_max: 0.0,
+            secs_sum: 0.0,
+        }
+        .encode_stateful(job, seq, codec, &mut state);
+    }
+    // n = m·r ≤ 21 < 2·TOPK_DIVISOR, so a top-k delta frame carries
+    // exactly one entry and ends [.. | k:u32 | idx:u32 | val:f64]
+    let len = frame.len();
+    match mood {
+        0 => {}
+        1 => frame[len - 12..len - 8].copy_from_slice(&u32::MAX.to_le_bytes()),
+        2 => frame[len - 16..len - 12].copy_from_slice(&0xFFFF_u32.to_le_bytes()),
+        _ => frame.truncate(len - 1 - (rng.next_u64() as usize % 15)),
+    }
+    frame
 }
 
 /// Random bytes of random length — most fail the envelope check, short

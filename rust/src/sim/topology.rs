@@ -43,7 +43,7 @@ use crate::coordinator::client::{ClientConfig, ClientSession, FaultPlan};
 use crate::coordinator::compress::Compression;
 use crate::coordinator::engine::{Action, RoundEngine};
 use crate::coordinator::kernel::NativeKernel;
-use crate::coordinator::protocol::ToClient;
+use crate::coordinator::protocol::{restamp_seq, ToClient};
 use crate::coordinator::relay::RelaySession;
 use crate::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use crate::coordinator::transport::reactor::{IoEvent, Reactor};
@@ -276,6 +276,21 @@ impl RelayNode {
                             queue.extend(self.engine.handle_message(ep, &reply, self.clock));
                         }
                     }
+                    Action::Broadcast { peers, body } => {
+                        for (ep, seq) in peers {
+                            if self.closed.get(ep).copied().unwrap_or(true) {
+                                continue;
+                            }
+                            let mut bytes = body.as_ref().clone();
+                            restamp_seq(&mut bytes, seq);
+                            let Some(mut child) = self.children[ep].take() else { continue };
+                            let replies = child.on_message(&bytes);
+                            self.children[ep] = Some(child);
+                            for reply in replies {
+                                queue.extend(self.engine.handle_message(ep, &reply, self.clock));
+                            }
+                        }
+                    }
                     Action::Close { ep } => {
                         if let Some(slot) = self.closed.get_mut(ep) {
                             *slot = true;
@@ -406,6 +421,11 @@ pub struct TreeSimConfig {
     pub threads: usize,
     /// silence one leaf's reply for exactly one round: `(leaf, round)`
     pub mute: Option<(usize, u32)>,
+    /// wire codec on every hop (leaf↔relay and relay↔root). Must be
+    /// lossless — the tree invariants are bitwise star ≡ tree
+    /// identities, so `Delta` here proves the relay re-delta path
+    /// end-to-end against the dense star fold.
+    pub compression: Compression,
 }
 
 impl Default for TreeSimConfig {
@@ -424,6 +444,7 @@ impl Default for TreeSimConfig {
             round_timeout: Duration::from_millis(50),
             threads: 0,
             mute: None,
+            compression: Compression::None,
         }
     }
 }
@@ -452,6 +473,9 @@ impl TreeSim {
     pub fn new(cfg: TreeSimConfig) -> Result<Self> {
         if cfg.rounds == 0 || cfg.k_local == 0 || cfg.cols_per_leaf == 0 {
             bail!("tree sim rounds, k_local and cols_per_leaf must be positive");
+        }
+        if !cfg.compression.is_lossless() {
+            bail!("tree sim takes a lossless codec only (its invariants are bitwise)");
         }
         if let Some((leaf, round)) = cfg.mute {
             if leaf >= cfg.leaves || round as usize >= cfg.rounds {
@@ -482,6 +506,7 @@ impl TreeSim {
         cfg.seed = self.cfg.server_seed;
         cfg.round_timeout = self.cfg.round_timeout;
         cfg.fault_policy = FaultPolicy::SkipMissing;
+        cfg.compression = self.cfg.compression;
         cfg.err_denominator =
             Some(self.problem.l0.frob_norm_sq() + self.problem.s0.frob_norm_sq());
         cfg
@@ -509,7 +534,7 @@ impl TreeSim {
                         self.problem.s0.cols_range(a, b),
                     )),
                     faults: FaultPlan::default(),
-                    compression: Compression::None,
+                    compression: self.cfg.compression,
                     dp_sigma: 0.0,
                 };
                 let leaf: Box<dyn SimPeer> = Box::new(LeafPeer::new(cfg, pool.clone()));
@@ -571,6 +596,15 @@ impl TreeSim {
                     Action::Send { ep, bytes } => {
                         if let Err(e) = net.send(ep, &bytes) {
                             return Err(format!("send to endpoint {ep} failed: {e}"));
+                        }
+                    }
+                    Action::Broadcast { peers, body } => {
+                        for (ep, seq) in peers {
+                            let mut bytes = body.as_ref().clone();
+                            restamp_seq(&mut bytes, seq);
+                            if let Err(e) = net.send(ep, &bytes) {
+                                return Err(format!("broadcast to endpoint {ep} failed: {e}"));
+                            }
                         }
                     }
                     Action::Close { ep } => net.close(ep),
@@ -639,7 +673,7 @@ impl TreeSim {
         format!(
             "dcf-pca simulate --topology tree --seeds {}..{} --clients {} --tree-arity {} \
              --m {} --cols-per-leaf {} --rank {} --sparsity {} --rounds {} --k-local {} \
-             --problem-seed {} --server-seed {} --timeout-ms {}",
+             --problem-seed {} --server-seed {} --timeout-ms {} --codec {}",
             seed,
             seed + 1,
             self.cfg.leaves,
@@ -653,6 +687,7 @@ impl TreeSim {
             self.cfg.problem_seed,
             self.cfg.server_seed,
             self.cfg.round_timeout.as_millis(),
+            self.cfg.compression.cli_name(),
         )
     }
 

@@ -10,7 +10,7 @@ use dcf_pca::coordinator::client::FaultPlan;
 use dcf_pca::coordinator::driver::{run_dcf_pca, DcfPcaConfig};
 use dcf_pca::coordinator::engine::{Action, RoundEngine};
 use dcf_pca::coordinator::kernel::{LocalUpdateKernel, NativeKernel};
-use dcf_pca::coordinator::protocol::{ToClient, ToServer};
+use dcf_pca::coordinator::protocol::{restamp_seq, ToClient, ToServer};
 use dcf_pca::coordinator::server::{FaultPolicy, ServerConfig, ServerOutcome};
 use dcf_pca::coordinator::Compression;
 use dcf_pca::linalg::{matmul_nt, Mat, Workspace};
@@ -185,6 +185,14 @@ fn drive_in_memory(
         for a in actions {
             match a {
                 Action::Send { ep, bytes } => clients[ep].handle(&bytes),
+                Action::Broadcast { peers, body } => {
+                    for (ep, seq) in peers {
+                        let mut bytes = body.as_ref().clone();
+                        restamp_seq(&mut bytes, seq);
+                        clients[ep].handle(&bytes);
+                    }
+                }
+                Action::Upstream { .. } => unreachable!("root jobs never emit Upstream"),
                 Action::Close { .. } | Action::JobDone { .. } => {}
             }
         }
@@ -382,13 +390,23 @@ fn withhold_frame(client: u32, seq: u32) -> Vec<u8> {
     ToServer::Withhold { client }.encode_seq(0, seq, Compression::None)
 }
 
-/// Raw `Send` payloads queued for `ep`.
+/// Raw payloads queued for `ep` — direct `Send` frames plus the
+/// endpoint's share of any `Broadcast`, restamped with its seq.
 fn raw_sends_to(actions: &[Action], ep: usize) -> Vec<Vec<u8>> {
     actions
         .iter()
-        .filter_map(|a| match a {
-            Action::Send { ep: e, bytes } if *e == ep => Some(bytes.clone()),
-            _ => None,
+        .flat_map(|a| match a {
+            Action::Send { ep: e, bytes } if *e == ep => vec![bytes.clone()],
+            Action::Broadcast { peers, body } => peers
+                .iter()
+                .filter(|(e, _)| *e == ep)
+                .map(|&(_, seq)| {
+                    let mut bytes = body.as_ref().clone();
+                    restamp_seq(&mut bytes, seq);
+                    bytes
+                })
+                .collect(),
+            _ => vec![],
         })
         .collect()
 }
@@ -425,21 +443,34 @@ fn run_to_outcome(
         assert!(guard < 10_000, "hardening federation made no progress");
         let mut next = Vec::new();
         for a in inbox.drain(..) {
-            let Action::Send { ep, bytes } = a else { continue };
-            let (_, msg) = ToClient::decode_job(&bytes).unwrap();
-            now += Duration::from_millis(1);
-            match msg {
-                ToClient::Round { round, .. } => {
-                    let e = eps.get_mut(&ep).expect("send to unknown endpoint");
-                    e.1 += 1;
-                    next.extend(engine.handle_message(ep, &update_frame(e.0, round, e.1), now));
+            let frames: Vec<(usize, Vec<u8>)> = match a {
+                Action::Send { ep, bytes } => vec![(ep, bytes)],
+                Action::Broadcast { peers, body } => peers
+                    .into_iter()
+                    .map(|(ep, seq)| {
+                        let mut bytes = body.as_ref().clone();
+                        restamp_seq(&mut bytes, seq);
+                        (ep, bytes)
+                    })
+                    .collect(),
+                _ => continue,
+            };
+            for (ep, bytes) in frames {
+                let (_, msg) = ToClient::decode_job(&bytes).unwrap();
+                now += Duration::from_millis(1);
+                match msg {
+                    ToClient::Round { round, .. } => {
+                        let e = eps.get_mut(&ep).expect("send to unknown endpoint");
+                        e.1 += 1;
+                        next.extend(engine.handle_message(ep, &update_frame(e.0, round, e.1), now));
+                    }
+                    ToClient::Finish { .. } => {
+                        let e = eps.get_mut(&ep).expect("send to unknown endpoint");
+                        e.1 += 1;
+                        next.extend(engine.handle_message(ep, &withhold_frame(e.0, e.1), now));
+                    }
+                    ToClient::Welcome { .. } | ToClient::Shutdown => {}
                 }
-                ToClient::Finish { .. } => {
-                    let e = eps.get_mut(&ep).expect("send to unknown endpoint");
-                    e.1 += 1;
-                    next.extend(engine.handle_message(ep, &withhold_frame(e.0, e.1), now));
-                }
-                ToClient::Welcome { .. } | ToClient::Shutdown => {}
             }
         }
         inbox = next;

@@ -59,6 +59,27 @@ base_path, cur_path, tol_s = sys.argv[1], sys.argv[2], sys.argv[3]
 tol = float(tol_s)
 
 
+# measures this script knows how to trend, in pick order, with the
+# direction assumed when a record carries no explicit `better`. Records
+# gain fields across PRs (bytes_per_round, compression_ratio, ...);
+# unknown extras are ignored and unknown record shapes are skipped, so
+# schema growth never breaks the diff.
+VALUE_FIELDS = (
+    ("gflops", "higher"),
+    ("value", "lower"),
+    ("bytes_per_round", "lower"),
+    ("compression_ratio", "higher"),
+)
+
+
+def pick(r):
+    for field, default_better in VALUE_FIELDS:
+        v = r.get(field)
+        if isinstance(v, (int, float)):
+            return v, r.get("better", default_better)
+    return None
+
+
 def load(path):
     with open(path) as f:
         doc = json.load(f)
@@ -67,12 +88,10 @@ def load(path):
     host = doc.get("host", {}) if isinstance(doc, dict) else {}
     out = {}
     for r in records:
-        # kernel rows rate in GFLOP/s (higher is better); comm rows
-        # carry an explicit value + direction
-        if r.get("gflops") is not None:
-            out[(r["op"], r["shape"])] = (r["gflops"], "higher")
-        elif r.get("value") is not None:
-            out[(r["op"], r["shape"])] = (r["value"], r.get("better", "lower"))
+        op, shape, picked = r.get("op"), r.get("shape"), pick(r)
+        if op is None or shape is None or picked is None:
+            continue
+        out[(op, shape)] = picked
     return host, out
 
 
@@ -105,6 +124,12 @@ new_keys = sorted(set(cur) - set(base))
 if new_keys:
     print(f"\n{len(new_keys)} record(s) not in baseline (re-seed to track):")
     for op, shape in new_keys:
+        print(f"  {op} {shape}")
+
+gone = sorted(set(base) - set(cur))
+if gone:
+    print(f"\n{len(gone)} baseline record(s) absent from this run (renamed or removed — re-seed):")
+    for op, shape in gone:
         print(f"  {op} {shape}")
 
 if regressions:
